@@ -1,0 +1,92 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** artifacts for the Rust
+runtime.
+
+Run once at build time (``make artifacts``); Python never executes on the
+request path. Interchange is HLO text — NOT ``lowered.compile().serialize()``
+and NOT a serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser on the Rust side reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``--out-dir`` (default ``artifacts/``):
+
+* ``matmul_mod_{M}x{K}x{N}.hlo.txt`` — one per configured worker shape,
+* ``manifest.txt`` — the shape->artifact index ``runtime::manifest`` reads.
+
+Shapes default to the blocks used by the examples and integration tests;
+pass ``--shapes M,K,N[;M,K,N...]`` to override.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402  (needs x64 flag set first)
+
+# Shapes (M, K, N) of F_A(alpha) @ F_B(alpha) products the examples use:
+#   (m/t, m/s) @ (m/s, m/t)
+DEFAULT_SHAPES = [
+    (32, 32, 32),  # quickstart: m=64,  s=t=2
+    (64, 64, 64),  # tests:      m=128, s=t=2
+    (128, 128, 128),  # e2e:     m=256, s=t=2
+    (128, 64, 128),  # e2e:      m=256, s=4, t=2
+    (256, 256, 256),  # e2e:     m=512, s=t=2
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_matmul(m, k, n) -> str:
+    spec_a = jax.ShapeDtypeStruct((m, k), jnp.int64)
+    spec_b = jax.ShapeDtypeStruct((k, n), jnp.int64)
+    lowered = jax.jit(model.worker_phase2).lower(spec_a, spec_b)
+    return to_hlo_text(lowered)
+
+
+def parse_shapes(text):
+    shapes = []
+    for part in text.split(";"):
+        m, k, n = (int(v) for v in part.split(","))
+        shapes.append((m, k, n))
+    return shapes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--shapes", default=None, help="M,K,N[;M,K,N...]")
+    args = ap.parse_args(argv)
+
+    shapes = parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPES
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = ["# model M K N path"]
+    for m, k, n in shapes:
+        rel = f"matmul_mod_{m}x{k}x{n}.hlo.txt"
+        path = os.path.join(args.out_dir, rel)
+        text = lower_matmul(m, k, n)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"matmul_mod {m} {k} {n} {rel}")
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest} ({len(shapes)} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

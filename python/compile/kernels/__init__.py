@@ -1,0 +1,15 @@
+"""L1 — Pallas kernels for the CMPC worker hot path."""
+
+from .matmul_mod import BLOCK_K, BLOCK_M, BLOCK_N, P, matmul_mod, vmem_bytes
+from .ref import gn_eval_ref, matmul_mod_ref
+
+__all__ = [
+    "matmul_mod",
+    "matmul_mod_ref",
+    "gn_eval_ref",
+    "vmem_bytes",
+    "P",
+    "BLOCK_M",
+    "BLOCK_N",
+    "BLOCK_K",
+]

@@ -1,0 +1,94 @@
+"""L1 — Pallas blocked modular matmul kernel.
+
+The per-worker hot spot of CMPC Phase 2 is ``H(alpha_n) = F_A(alpha_n) @
+F_B(alpha_n) mod p`` over GF(p), p = 65537. This kernel expresses it as a
+TPU-shaped tiled matmul:
+
+* grid ``(M/bm, N/bn, K/bk)`` with the K axis innermost, so each output tile
+  stays resident while A/B tiles stream through VMEM (the ``BlockSpec``s
+  below are the HBM<->VMEM schedule a CUDA kernel would express with
+  threadblocks + shared memory);
+* exact integer arithmetic: inputs are reduced residues (< p < 2^17), the
+  dot accumulates in int64 (products < 2^34, a 256-wide K block keeps the
+  running tile < 2^43), and ``mod p`` is applied once per K step — not per
+  element — so the inner loop is pure multiply-add;
+* bf16/MXU is unusable for exact field arithmetic, so tiles target the
+  int path; on real TPU hardware the dot lowers to the 32x128 VPU lanes.
+
+``interpret=True`` is mandatory in this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. The AOT pipeline
+(``compile/aot.py``) therefore lowers the interpret-mode kernel to plain HLO,
+which runs bit-exactly on any backend; correctness versus the pure-jnp
+oracle (``ref.py``) is enforced by ``python/tests/test_kernel.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# GF(p), p = 2^16 + 1 — matches rust/src/ff/mod.rs.
+P = 65537
+
+# Default tile sizes: MXU/VPU-aligned on TPU, and small enough that one
+# X tile + one Y tile + the int64 output tile stay well under 1 MiB of VMEM:
+# 128*256*8 + 256*128*8 + 128*128*8 = 640 KiB.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 256
+
+
+def _matmul_mod_kernel(x_ref, y_ref, o_ref, *, k_steps, p):
+    """One (i, j, k) grid step: o[i,j] = (o[i,j] + x[i,k] @ y[k,j]) mod p."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = o_ref[...] + jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.int64
+    )
+    # One reduction per K block keeps the tile in range (< 2^43 + 2^17)
+    # while avoiding a per-element mod in the MAC loop.
+    o_ref[...] = acc % p
+    del k_steps  # grid-shape bookkeeping only
+
+
+def _pick_block(dim, preferred):
+    """Largest divisor of ``dim`` that is <= preferred (tiles must divide)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def matmul_mod(x, y, p=P):
+    """``(x @ y) mod p`` for int64 residue matrices, via the Pallas kernel."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {y.shape}"
+    bm = _pick_block(m, BLOCK_M)
+    bn = _pick_block(n, BLOCK_N)
+    bk = _pick_block(k, BLOCK_K)
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_matmul_mod_kernel, k_steps=grid[2], p=p)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int64),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x.astype(jnp.int64), y.astype(jnp.int64))
+
+
+def vmem_bytes(bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """Estimated VMEM residency per grid step (see DESIGN.md §Hardware)."""
+    return bm * bk * 8 + bk * bn * 8 + bm * bn * 8

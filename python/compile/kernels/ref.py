@@ -1,0 +1,34 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+These are the ground truth the Pallas kernels are tested against
+(``python/tests/test_kernel.py``) — deliberately the most obvious possible
+implementations.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+P = 65537
+
+
+def matmul_mod_ref(x, y, p=P):
+    """``(x @ y) mod p`` in one dense int64 contraction.
+
+    Exact for this library's sizes: residues < 2^17, products < 2^34, and
+    int64 accumulation overflows only beyond K ~ 2^29 rows — far above any
+    CMPC block (K = m/s).
+    """
+    return (x.astype(jnp.int64) @ y.astype(jnp.int64)) % p
+
+
+def gn_eval_ref(h, wvec, pows, rmats, p=P):
+    """Reference for the G_n evaluation graph (eq. 19):
+
+    ``out[n'] = (wvec[n'] * h + sum_w pows[n', w] * rmats[w]) mod p``.
+    """
+    h = h.astype(jnp.int64)
+    lin = wvec.astype(jnp.int64)[:, None, None] * h[None, :, :]
+    noise = jnp.tensordot(pows.astype(jnp.int64), rmats.astype(jnp.int64), axes=1)
+    return (lin + noise) % p

@@ -1,0 +1,50 @@
+"""L2 — the JAX compute graphs workers execute, built on the L1 kernel.
+
+Two graphs cover Phase 2 of the CMPC protocol:
+
+* ``worker_phase2(fa, fb)`` — the share product ``H(alpha_n) =
+  F_A(alpha_n) @ F_B(alpha_n) mod p`` (eq. 17). This is the hot spot and
+  the artifact the Rust runtime executes on its PJRT client.
+* ``gn_eval(h, wvec, pows, rmats)`` — the batched evaluation of
+  ``G_n(alpha_n')`` at all N peer points (eq. 19): a scalar-broadcast of H
+  plus the mask-noise contraction. Exposed for AOT as an optional artifact;
+  the Rust default keeps this memory-bound axpy native.
+
+Everything is exact int64 residue arithmetic over GF(65537); see
+``kernels/matmul_mod.py`` for the range analysis.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import P, matmul_mod
+
+jax.config.update("jax_enable_x64", True)
+
+
+def worker_phase2(fa, fb):
+    """H = (F_A(alpha) @ F_B(alpha)) mod p, as a 1-tuple (AOT convention)."""
+    return (matmul_mod(fa, fb),)
+
+
+def gn_eval(h, wvec, pows, rmats):
+    """G_n evaluated at all peer points.
+
+    Args:
+      h:     [bt, bt]    int64 — H(alpha_n), residues < p.
+      wvec:  [N]         int64 — sum_{i,l} r_n^{(i,l)} alpha_{n'}^{i+t*l},
+                          one per peer (precomputed scalars, < p).
+      pows:  [N, z]      int64 — alpha_{n'}^{t^2+w} mask powers (< p).
+      rmats: [z, bt, bt] int64 — the worker's uniform masks R_w (< p).
+
+    Returns:
+      ([N, bt, bt],) — G_n(alpha_{n'}) residues.
+    """
+    lin = wvec[:, None, None] * h[None, :, :]
+    noise = jnp.tensordot(pows, rmats, axes=1)
+    return ((lin + noise) % P,)
+
+
+def phase2_flops(m, s, t):
+    """Multiply–add count of the share product (for roofline accounting)."""
+    return 2 * (m // t) * (m // s) * (m // t)

@@ -1,0 +1,109 @@
+"""L1 correctness: the Pallas modular-matmul kernel versus the pure-jnp
+oracle — the CORE numeric signal of the build-time stack.
+
+Hypothesis sweeps shapes (including tile-misaligned primes that force the
+block-size fallback), value ranges (full residue range, boundary values),
+and dtypes. Everything is exact integer arithmetic, so comparisons are
+strict equality, not allclose.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import P, matmul_mod, matmul_mod_ref, vmem_bytes
+from compile.kernels.matmul_mod import _pick_block
+
+jax.config.update("jax_enable_x64", True)
+
+SETTINGS = dict(deadline=None, max_examples=25, derandomize=True)
+
+
+def random_residues(rng, shape):
+    return jnp.asarray(rng.integers(0, P, size=shape, dtype=np.int64))
+
+
+@hypothesis.given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31),
+)
+@hypothesis.settings(**SETTINGS)
+def test_kernel_matches_ref_random_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = random_residues(rng, (m, k))
+    y = random_residues(rng, (k, n))
+    got = matmul_mod(x, y)
+    want = matmul_mod_ref(x, y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@hypothesis.given(seed=st.integers(0, 2**31))
+@hypothesis.settings(deadline=None, max_examples=5, derandomize=True)
+def test_kernel_multi_k_block_path(seed):
+    # K > BLOCK_K would need K >= 256; use a shape whose chosen block
+    # divides it several times to exercise the K-loop accumulate+mod.
+    rng = np.random.default_rng(seed)
+    x = random_residues(rng, (8, 96))
+    y = random_residues(rng, (96, 8))
+    np.testing.assert_array_equal(
+        np.asarray(matmul_mod(x, y)), np.asarray(matmul_mod_ref(x, y))
+    )
+
+
+def test_boundary_values_max_residue():
+    # All entries p-1 = 65536: the worst-case accumulation magnitude.
+    k = 64
+    x = jnp.full((4, k), P - 1, dtype=jnp.int64)
+    y = jnp.full((k, 4), P - 1, dtype=jnp.int64)
+    got = np.asarray(matmul_mod(x, y))
+    # (p-1)^2 = 1 mod p, summed k times = k mod p.
+    np.testing.assert_array_equal(got, np.full((4, 4), k % P))
+
+
+def test_identity_matrix():
+    rng = np.random.default_rng(7)
+    x = random_residues(rng, (16, 16))
+    eye = jnp.eye(16, dtype=jnp.int64)
+    np.testing.assert_array_equal(np.asarray(matmul_mod(x, eye)), np.asarray(x))
+
+
+def test_int32_inputs_are_promoted():
+    rng = np.random.default_rng(9)
+    x32 = jnp.asarray(rng.integers(0, P, size=(8, 8), dtype=np.int32))
+    y32 = jnp.asarray(rng.integers(0, P, size=(8, 8), dtype=np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(matmul_mod(x32, y32)), np.asarray(matmul_mod_ref(x32, y32))
+    )
+
+
+def test_output_always_reduced():
+    rng = np.random.default_rng(11)
+    x = random_residues(rng, (32, 32))
+    y = random_residues(rng, (32, 32))
+    out = np.asarray(matmul_mod(x, y))
+    assert out.min() >= 0 and out.max() < P
+
+
+@pytest.mark.parametrize("dim,pref,expect", [(128, 128, 128), (96, 128, 96),
+                                             (100, 64, 50), (7, 8, 7), (1, 256, 1)])
+def test_pick_block_divides(dim, pref, expect):
+    b = _pick_block(dim, pref)
+    assert b == expect
+    assert dim % b == 0 and b <= max(pref, 1)
+
+
+def test_vmem_budget_within_design():
+    # DESIGN.md §Hardware-Adaptation: <= 1 MiB per grid step at default tiles.
+    assert vmem_bytes() <= 1 << 20
+
+
+def test_shape_mismatch_raises():
+    x = jnp.zeros((4, 5), dtype=jnp.int64)
+    y = jnp.zeros((6, 4), dtype=jnp.int64)
+    with pytest.raises(AssertionError):
+        matmul_mod(x, y)

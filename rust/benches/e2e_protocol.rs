@@ -1,0 +1,60 @@
+//! Bench E9 — end-to-end protocol wall time and serving throughput:
+//! AGE vs PolyDot vs Entangled at identical (m, s, t, z), native backend.
+//!
+//! The headline system effect: fewer workers ⇒ less O(N²) share exchange
+//! ⇒ lower job latency at equal privacy.
+
+use cmpc::benchkit::{bench, per_second};
+use cmpc::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc};
+use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
+use cmpc::matrix::FpMat;
+use cmpc::mpc::protocol::{prepare_setup, run_protocol_with_setup, ProtocolConfig};
+use cmpc::util::rng::ChaChaRng;
+
+fn main() {
+    let (s, t, z) = (2usize, 2usize, 2usize);
+    let m = 128;
+    let mut rng = ChaChaRng::seed_from_u64(1);
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    let cfg = ProtocolConfig {
+        verify: false,
+        ..ProtocolConfig::default()
+    };
+
+    let schemes: Vec<Box<dyn CmpcScheme>> = vec![
+        Box::new(AgeCmpc::with_optimal_lambda(s, t, z)),
+        Box::new(PolyDotCmpc::new(s, t, z)),
+        Box::new(EntangledCmpc::new(s, t, z)),
+    ];
+    for scheme in &schemes {
+        let setup = prepare_setup(scheme.as_ref());
+        let name = format!(
+            "e2e/{} m={m} N={}",
+            scheme.name(),
+            scheme.n_workers()
+        );
+        bench(&name, 1, 10, || {
+            run_protocol_with_setup(scheme.as_ref(), &setup, &a, &b, &cfg).unwrap();
+        });
+    }
+
+    // Coordinator throughput with setup caching (batch of 8 jobs).
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        policy: SchemePolicy::Adaptive,
+        verify: false,
+        ..CoordinatorConfig::default()
+    });
+    let jobs = 8;
+    let t0 = std::time::Instant::now();
+    for _ in 0..jobs {
+        coord.submit(a.clone(), b.clone(), s, t, z);
+    }
+    let reports = coord.run_all().unwrap();
+    let d = t0.elapsed();
+    let hits = reports.iter().filter(|r| r.setup_cache_hit).count();
+    println!(
+        "bench e2e/coordinator m={m} jobs={jobs}            throughput={:.2} jobs/s cache_hits={hits}/{jobs}",
+        per_second(jobs as u64, d)
+    );
+}

@@ -1,0 +1,44 @@
+//! Bench E1 — Fig. 2 regeneration: required workers vs number of colluding
+//! workers (s=4, t=15, z=1..300) for all five schemes.
+//!
+//! Times the exact-enumeration pipeline (the expensive part is AGE's λ* scan
+//! at every z) and prints the regime summary the paper reports.
+
+use cmpc::analysis::figures::fig2_workers;
+use cmpc::benchkit::bench;
+
+fn main() {
+    // Time a reduced and the full paper range.
+    bench("fig2/enumerate s=4 t=15 z<=60", 1, 5, || {
+        let rows = fig2_workers(4, 15, 60);
+        assert_eq!(rows.len(), 60);
+    });
+    let mut rows = Vec::new();
+    bench("fig2/enumerate s=4 t=15 z<=300 (paper range)", 0, 1, || {
+        rows = fig2_workers(4, 15, 300);
+    });
+
+    // Regime table (paper: SSMM best-of-rest ≲48, PolyDot 49..≈180,
+    // Entangled/GCSA ≳181; AGE minimal throughout).
+    let mut boundaries = Vec::new();
+    let mut prev = "";
+    for r in &rows {
+        let cands = [
+            ("PolyDot", r.polydot),
+            ("Entangled", r.entangled),
+            ("SSMM", r.ssmm),
+            ("GCSA-NA", r.gcsa_na),
+        ];
+        let best = cands.iter().min_by_key(|&&(_, v)| v).unwrap().0;
+        if best != prev {
+            boundaries.push((r.z, best));
+            prev = best;
+        }
+        assert!(r.age <= cands.iter().map(|&(_, v)| v).min().unwrap());
+    }
+    println!("fig2 second-best regime boundaries: {boundaries:?}");
+    println!(
+        "fig2 anchors: z=1 AGE={} | z=150 AGE={} | z=300 AGE={}",
+        rows[0].age, rows[149].age, rows[299].age
+    );
+}

@@ -1,0 +1,30 @@
+//! Bench E2 — Fig. 3 regeneration: required workers vs partition ratio s/t
+//! (st=36, z=42).
+
+use cmpc::analysis::figures::fig3_workers;
+use cmpc::benchkit::bench;
+
+fn main() {
+    let mut rows = Vec::new();
+    bench("fig3/enumerate st=36 z=42", 1, 10, || {
+        rows = fig3_workers(36, 42);
+    });
+    println!("\n(s,t)      AGE  PolyDot  Entangled  SSMM  GCSA-NA");
+    for r in &rows {
+        println!(
+            "({:>2},{:>2})  {:>5}  {:>7}  {:>9}  {:>4}  {:>7}",
+            r.s, r.t, r.age, r.polydot, r.entangled, r.ssmm, r.gcsa_na
+        );
+    }
+    // Paper claims at z=42, st=36: PolyDot < all baselines exactly for
+    // (2,18), (3,12), (4,9).
+    let winners: Vec<(usize, usize)> = rows
+        .iter()
+        .filter(|r| {
+            r.polydot < r.entangled && r.polydot < r.ssmm && r.polydot < r.gcsa_na
+        })
+        .map(|r| (r.s, r.t))
+        .collect();
+    println!("\nPolyDot beats all baselines at: {winners:?}");
+    assert_eq!(winners, vec![(2, 18), (3, 12), (4, 9)]);
+}

@@ -1,0 +1,45 @@
+//! Bench E3/E4/E5 — Fig. 4(a–c) regeneration: computation, storage and
+//! communication load per worker vs s/t (m=36000, st=36, z=42).
+
+use cmpc::analysis::figures::fig4_overheads;
+use cmpc::benchkit::bench;
+
+fn main() {
+    let mut rows = Vec::new();
+    bench("fig4/overheads m=36000 st=36 z=42", 1, 10, || {
+        rows = fig4_overheads(36000, 36, 42);
+    });
+    for (label, idx) in [("computation (mults)", 2usize), ("storage (B)", 3), ("communication (B)", 4)] {
+        println!("\nFig4 {label}:");
+        println!("(s,t)      AGE          PolyDot      Entangled    SSMM         GCSA-NA");
+        for r in &rows {
+            let v = |i: usize| -> f64 {
+                match idx {
+                    2 => r.per_scheme[i].2 as f64,
+                    3 => r.per_scheme[i].3 as f64,
+                    _ => r.per_scheme[i].4 as f64,
+                }
+            };
+            println!(
+                "({:>2},{:>2})  {:>11.4e}  {:>11.4e}  {:>11.4e}  {:>11.4e}  {:>11.4e}",
+                r.s, r.t, v(0), v(1), v(2), v(3), v(4)
+            );
+        }
+    }
+    // Shape assertions matching §VII's reading of the figure: AGE minimal in
+    // every column; computation non-monotonic with interior minimum.
+    for r in &rows {
+        for i in 1..r.per_scheme.len() {
+            assert!(r.per_scheme[0].2 <= r.per_scheme[i].2);
+            assert!(r.per_scheme[0].3 <= r.per_scheme[i].3);
+            assert!(r.per_scheme[0].4 <= r.per_scheme[i].4);
+        }
+    }
+    let comp: Vec<u128> = rows.iter().map(|r| r.per_scheme[0].2).collect();
+    let min_idx = comp.iter().enumerate().min_by_key(|&(_, v)| v).unwrap().0;
+    assert!(min_idx > 0 && min_idx + 1 < comp.len());
+    println!(
+        "\ncomputation minimum at (s,t)=({},{}) — interior, as in Fig. 4(a)",
+        rows[min_idx].s, rows[min_idx].t
+    );
+}

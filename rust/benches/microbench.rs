@@ -1,0 +1,78 @@
+//! Microbenchmarks of the L3 hot paths feeding the §Perf optimization loop:
+//! field reduction, the native modular matmul (per-worker Phase-2 kernel),
+//! share-polynomial evaluation, the generalized-Vandermonde setup solve,
+//! and the sumset enumeration kernel behind the figures.
+
+use cmpc::benchkit::bench;
+use cmpc::codes::{AgeCmpc, CmpcScheme};
+use cmpc::ff;
+use cmpc::matrix::FpMat;
+use cmpc::mpc::source;
+use cmpc::poly::interp::choose_alphas;
+use cmpc::poly::powers::sumset_size;
+use cmpc::util::rng::ChaChaRng;
+
+fn main() {
+    let mut rng = ChaChaRng::seed_from_u64(3);
+
+    // --- field reduction throughput ---
+    let xs: Vec<u64> = (0..1 << 16).map(|_| rng.next_u64()).collect();
+    let mut sink = 0u64;
+    let meas = bench("ff/reduce 65536 values", 3, 30, || {
+        let mut acc = 0u64;
+        for &x in &xs {
+            acc ^= ff::reduce(x);
+        }
+        sink ^= acc;
+    });
+    let ns_per = meas.median.as_nanos() as f64 / xs.len() as f64;
+    println!("  -> {ns_per:.2} ns/reduce (sink {sink})");
+
+    // --- native modular matmul (the worker hot spot) ---
+    for size in [64usize, 128, 256] {
+        let a = FpMat::random(&mut rng, size, size);
+        let b = FpMat::random(&mut rng, size, size);
+        let meas = bench(&format!("matmul/native {size}x{size}x{size}"), 2, 10, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        let mults = (size * size * size) as f64;
+        println!(
+            "  -> {:.1} M field-mults/s",
+            mults / meas.median.as_secs_f64() / 1e6
+        );
+    }
+
+    // --- share polynomial evaluation (Phase 1) ---
+    let scheme = AgeCmpc::with_optimal_lambda(4, 2, 3);
+    let m = 256;
+    let a = FpMat::random(&mut rng, m, m);
+    let fa = source::build_f_a(&scheme, &a, &mut rng);
+    bench("phase1/eval F_A(α) m=256 s=4 t=2", 2, 10, || {
+        std::hint::black_box(fa.eval(12345));
+    });
+
+    // --- generalized Vandermonde setup solve (coordinator, cached) ---
+    for (s, t, z) in [(2usize, 2usize, 2usize), (4, 2, 3), (3, 3, 4)] {
+        let sch = AgeCmpc::with_optimal_lambda(s, t, z);
+        let support = sch.reconstruction_support();
+        let n = sch.n_workers();
+        bench(
+            &format!("setup/vandermonde N={n} (s={s},t={t},z={z})"),
+            1,
+            10,
+            || {
+                std::hint::black_box(choose_alphas(n, &support));
+            },
+        );
+    }
+
+    // --- sumset enumeration kernel (figures / λ* scan) ---
+    let sch = AgeCmpc::new(4, 15, 150, 75);
+    let (pa, pb) = (sch.support_a(), sch.support_b());
+    bench("enum/sumset s=4 t=15 z=150", 3, 30, || {
+        std::hint::black_box(sumset_size(&pa, &pb));
+    });
+    bench("enum/AGE λ* scan s=4 t=15 z=60", 1, 5, || {
+        std::hint::black_box(AgeCmpc::with_optimal_lambda(4, 15, 60).n_workers());
+    });
+}

@@ -1,0 +1,373 @@
+//! Figure regeneration — the data series behind every figure in §VII.
+//!
+//! Each function returns the rows it writes, so the benches can time pure
+//! generation and tests can assert the paper's qualitative claims
+//! (crossovers, dominance, non-monotonicity) directly on the series.
+//!
+//! | Paper artifact | Generator | Output |
+//! |---|---|---|
+//! | Fig. 2 (N vs z; s=4, t=15) | [`fig2_workers`] | `fig2_workers.csv` |
+//! | Fig. 3 (N vs s/t; st=36, z=42) | [`fig3_workers`] | `fig3_workers.csv` |
+//! | Fig. 4a (computation/worker) | [`fig4_overheads`] | `fig4_overheads.csv` |
+//! | Fig. 4b (storage/worker) | [`fig4_overheads`] | same file |
+//! | Fig. 4c (communication) | [`fig4_overheads`] | same file |
+//! | λ-gap ablation (§V motivation) | [`lambda_ablation`] | `lambda_ablation.csv` |
+//! | Lemma 3/4/5 win regions | [`polydot_win_regions`] | `polydot_wins.csv` |
+//!
+//! AGE and PolyDot columns are *exact* (construction enumeration); the
+//! baselines use their published formulas, exactly as the paper's own
+//! simulation does.
+
+use std::path::Path;
+
+use crate::analysis::{
+    communication_overhead, computation_overhead, gamma_age_enum, n_age_enum, n_age_formula,
+    n_entangled, n_polydot_enum, n_polydot_formula, partition_pairs, storage_overhead,
+};
+use crate::codes::{n_gcsa_na, n_ssmm};
+use crate::csv_row;
+use crate::util::csv::CsvWriter;
+
+/// One Fig. 2 row: worker counts at a given number of colluding workers.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig2Row {
+    pub z: usize,
+    pub age: u64,
+    pub age_lambda: u64,
+    pub polydot: u64,
+    pub entangled: u64,
+    pub ssmm: u64,
+    pub gcsa_na: u64,
+    /// Paper-formula overlays (Theorems 2/8) for parity checking.
+    pub age_formula: u64,
+    pub polydot_formula: u64,
+}
+
+/// Fig. 2: required workers versus `z` for `s = 4`, `t = 15`,
+/// `1 ≤ z ≤ z_max` (paper: 300).
+pub fn fig2_workers(s: usize, t: usize, z_max: usize) -> Vec<Fig2Row> {
+    (1..=z_max)
+        .map(|z| {
+            let (age, age_lambda) = n_age_enum(s, t, z);
+            Fig2Row {
+                z,
+                age,
+                age_lambda,
+                polydot: n_polydot_enum(s, t, z),
+                entangled: n_entangled(s, t, z),
+                ssmm: n_ssmm(s, t, z),
+                gcsa_na: n_gcsa_na(s, t, z),
+                age_formula: n_age_formula(s, t, z).0,
+                polydot_formula: n_polydot_formula(s, t, z),
+            }
+        })
+        .collect()
+}
+
+pub fn write_fig2(dir: &Path, rows: &[Fig2Row]) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(
+        dir.join("fig2_workers.csv"),
+        &[
+            "z",
+            "age",
+            "age_lambda",
+            "polydot",
+            "entangled",
+            "ssmm",
+            "gcsa_na",
+            "age_formula",
+            "polydot_formula",
+        ],
+    )?;
+    for r in rows {
+        csv_row!(
+            w,
+            r.z,
+            r.age,
+            r.age_lambda,
+            r.polydot,
+            r.entangled,
+            r.ssmm,
+            r.gcsa_na,
+            r.age_formula,
+            r.polydot_formula
+        );
+    }
+    w.flush()
+}
+
+/// One Fig. 3 / Fig. 4 row: a partition pair and the per-scheme counts.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig3Row {
+    pub s: usize,
+    pub t: usize,
+    pub age: u64,
+    pub polydot: u64,
+    pub entangled: u64,
+    pub ssmm: u64,
+    pub gcsa_na: u64,
+}
+
+/// Fig. 3: required workers versus `s/t` with `s·t = st_total` (paper: 36)
+/// and fixed `z` (paper: 42).
+pub fn fig3_workers(st_total: usize, z: usize) -> Vec<Fig3Row> {
+    partition_pairs(st_total)
+        .into_iter()
+        .map(|(s, t)| Fig3Row {
+            s,
+            t,
+            age: n_age_enum(s, t, z).0,
+            polydot: n_polydot_enum(s, t, z),
+            entangled: n_entangled(s, t, z),
+            ssmm: n_ssmm(s, t, z),
+            gcsa_na: n_gcsa_na(s, t, z),
+        })
+        .collect()
+}
+
+pub fn write_fig3(dir: &Path, rows: &[Fig3Row]) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(
+        dir.join("fig3_workers.csv"),
+        &["s", "t", "s_over_t", "age", "polydot", "entangled", "ssmm", "gcsa_na"],
+    )?;
+    for r in rows {
+        csv_row!(
+            w,
+            r.s,
+            r.t,
+            format!("{:.4}", r.s as f64 / r.t as f64),
+            r.age,
+            r.polydot,
+            r.entangled,
+            r.ssmm,
+            r.gcsa_na
+        );
+    }
+    w.flush()
+}
+
+/// One Fig. 4 row: per-worker overheads (bytes at 1 B/scalar, following the
+/// paper's plots) for every scheme at one partition pair.
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub s: usize,
+    pub t: usize,
+    /// (scheme label, N, ξ, σ, ζ)
+    pub per_scheme: Vec<(&'static str, u64, u128, u128, u128)>,
+}
+
+/// Fig. 4(a–c): computation, storage and communication loads versus `s/t`
+/// for `m = 36000`, `st = 36`, `z = 42` (paper parameters).
+pub fn fig4_overheads(m: usize, st_total: usize, z: usize) -> Vec<Fig4Row> {
+    fig3_workers(st_total, z)
+        .into_iter()
+        .map(|r| {
+            let mk = |label: &'static str, n: u64| {
+                (
+                    label,
+                    n,
+                    computation_overhead(m, r.s, r.t, z, n),
+                    storage_overhead(m, r.s, r.t, z, n),
+                    communication_overhead(m, r.t, n),
+                )
+            };
+            Fig4Row {
+                s: r.s,
+                t: r.t,
+                per_scheme: vec![
+                    mk("AGE-CMPC", r.age),
+                    mk("PolyDot-CMPC", r.polydot),
+                    mk("Entangled-CMPC", r.entangled),
+                    mk("SSMM", r.ssmm),
+                    mk("GCSA-NA", r.gcsa_na),
+                ],
+            }
+        })
+        .collect()
+}
+
+pub fn write_fig4(dir: &Path, rows: &[Fig4Row]) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(
+        dir.join("fig4_overheads.csv"),
+        &[
+            "s",
+            "t",
+            "scheme",
+            "n_workers",
+            "computation_scalar_mults",
+            "storage_bytes",
+            "communication_bytes",
+        ],
+    )?;
+    for r in rows {
+        for (label, n, xi, sigma, zeta) in &r.per_scheme {
+            csv_row!(w, r.s, r.t, label, n, xi, sigma, zeta);
+        }
+    }
+    w.flush()
+}
+
+/// λ ablation: `Γ(λ)` across the full gap range for one `(s,t,z)` — the
+/// evidence behind §V's "wider gaps can shrink |P(H)|" insight.
+pub fn lambda_ablation(s: usize, t: usize, z: usize) -> Vec<(u64, u64)> {
+    (0..=z as u64)
+        .map(|l| (l, gamma_age_enum(s, t, z, l)))
+        .collect()
+}
+
+pub fn write_lambda_ablation(
+    dir: &Path,
+    cases: &[(usize, usize, usize)],
+) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(
+        dir.join("lambda_ablation.csv"),
+        &["s", "t", "z", "lambda", "n_workers"],
+    )?;
+    for &(s, t, z) in cases {
+        for (l, n) in lambda_ablation(s, t, z) {
+            csv_row!(w, s, t, z, l, n);
+        }
+    }
+    w.flush()
+}
+
+/// Lemma 3/4/5 reproduction: for each `(s,t,z)` in a grid, who PolyDot
+/// beats. Returns `(s, t, z, beats_entangled, beats_ssmm, beats_gcsa)`.
+pub fn polydot_win_regions(
+    max_s: usize,
+    max_t: usize,
+    max_z: usize,
+) -> Vec<(usize, usize, usize, bool, bool, bool)> {
+    let mut out = Vec::new();
+    for s in 1..=max_s {
+        for t in 1..=max_t {
+            for z in 1..=max_z {
+                let pd = n_polydot_enum(s, t, z);
+                out.push((
+                    s,
+                    t,
+                    z,
+                    pd < n_entangled(s, t, z),
+                    pd < n_ssmm(s, t, z),
+                    pd < n_gcsa_na(s, t, z),
+                ));
+            }
+        }
+    }
+    out
+}
+
+pub fn write_polydot_wins(
+    dir: &Path,
+    rows: &[(usize, usize, usize, bool, bool, bool)],
+) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(
+        dir.join("polydot_wins.csv"),
+        &["s", "t", "z", "beats_entangled", "beats_ssmm", "beats_gcsa_na"],
+    )?;
+    for &(s, t, z, be, bs, bg) in rows {
+        csv_row!(w, s, t, z, be, bs, bg);
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_crossover_structure_matches_paper() {
+        // §VII on Fig. 2 (s=4, t=15): AGE best everywhere; SSMM second-best
+        // for small z (1..≈48); PolyDot second-best mid-range (≈49..180);
+        // GCSA-NA/Entangled tie and win for large z (≈181..300).
+        let rows = fig2_workers(4, 15, 300);
+        for r in &rows {
+            let others = [r.polydot, r.entangled, r.ssmm, r.gcsa_na];
+            assert!(
+                others.iter().all(|&o| r.age <= o),
+                "AGE not minimal at z={}",
+                r.z
+            );
+            if r.z > 4 * 15 - 4 {
+                // Entangled's large-z branch coincides with GCSA-NA — the
+                // "similar performance" the paper notes in the 181..300 band.
+                assert_eq!(r.entangled, r.gcsa_na, "tie expected at z={}", r.z);
+            }
+        }
+        let second_best = |r: &Fig2Row| -> &'static str {
+            let cands = [
+                ("polydot", r.polydot),
+                ("entangled", r.entangled),
+                ("ssmm", r.ssmm),
+            ];
+            cands.iter().min_by_key(|&&(_, v)| v).unwrap().0
+        };
+        // Spot the three regimes at paper-stated sample points.
+        assert_eq!(second_best(&rows[10 - 1]), "ssmm");
+        assert_eq!(second_best(&rows[40 - 1]), "ssmm");
+        assert_eq!(second_best(&rows[100 - 1]), "polydot");
+        assert_eq!(second_best(&rows[150 - 1]), "polydot");
+        assert_eq!(second_best(&rows[250 - 1]), "entangled");
+        assert_eq!(second_best(&rows[300 - 1]), "entangled");
+    }
+
+    #[test]
+    fn fig3_age_minimal_and_polydot_pattern() {
+        let rows = fig3_workers(36, 42);
+        assert_eq!(rows.len(), 9);
+        for r in &rows {
+            for other in [r.polydot, r.entangled, r.ssmm, r.gcsa_na] {
+                assert!(r.age <= other, "(s,t)=({},{})", r.s, r.t);
+            }
+        }
+    }
+
+    #[test]
+    fn fig4_computation_nonmonotonic_with_minimum_interior() {
+        // §VII on Fig. 4(a): computation load per worker first falls then
+        // rises as s/t grows (N-effect vs 1/t-effect).
+        let rows = fig4_overheads(36000, 36, 42);
+        let age_comp: Vec<u128> = rows
+            .iter()
+            .map(|r| r.per_scheme[0].2)
+            .collect();
+        let min_idx = age_comp
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, v)| v)
+            .unwrap()
+            .0;
+        assert!(
+            min_idx > 0 && min_idx < age_comp.len() - 1,
+            "minimum must be interior, got index {min_idx} of {age_comp:?}"
+        );
+    }
+
+    #[test]
+    fn fig4_storage_and_comm_follow_worker_count() {
+        // Fig. 4(b,c): with (s,t,z,m) fixed, σ and ζ are increasing in N —
+        // so AGE (minimal N) is minimal per partition pair.
+        for r in fig4_overheads(36000, 36, 42) {
+            let (age_sigma, age_zeta) = (r.per_scheme[0].3, r.per_scheme[0].4);
+            for (_, _, _, sigma, zeta) in &r.per_scheme[1..] {
+                assert!(age_sigma <= *sigma && age_zeta <= *zeta);
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_ablation_optimum_matches_example1() {
+        let curve = lambda_ablation(2, 2, 2);
+        assert_eq!(curve, vec![(0, 18), (1, 18), (2, 17)]);
+    }
+
+    #[test]
+    fn win_regions_nonempty_both_ways() {
+        let rows = polydot_win_regions(4, 4, 20);
+        assert!(rows.iter().any(|r| r.3), "PolyDot beats Entangled somewhere");
+        assert!(
+            rows.iter().any(|r| !r.3),
+            "Entangled beats PolyDot somewhere"
+        );
+    }
+}

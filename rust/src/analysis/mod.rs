@@ -1,0 +1,392 @@
+//! Closed-form analysis: required worker counts (Theorems 2 and 8, plus
+//! baseline formulas) and per-worker overheads (Corollaries 10–12).
+//!
+//! Ground truth for our constructible schemes is *enumeration*: build the
+//! scheme and count `|P(H)|` via eq. (23) ([`CmpcScheme::n_workers`]). The
+//! closed forms below reproduce the paper's published expressions; the test
+//! suite cross-checks them against enumeration over parameter sweeps. Where
+//! the paper's piecewise formulas are conservative (they occasionally count a
+//! gap power that the actual support skips — e.g. `Υ₂(0)` inherits [15]'s
+//! degree-based count), the library keeps *both* numbers: `*_formula` for
+//! figure parity with the paper, enumeration for the protocol itself.
+
+pub mod figures;
+pub mod overheads;
+
+pub use overheads::{communication_overhead, computation_overhead, storage_overhead};
+
+use crate::codes::{n_gcsa_na, n_ssmm, AgeCmpc, CmpcScheme, PolyDotCmpc};
+
+/// Scheme selector used by figures, benches and the coordinator.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    Age,
+    PolyDot,
+    Entangled,
+    Ssmm,
+    GcsaNa,
+}
+
+impl SchemeKind {
+    pub const ALL: [SchemeKind; 5] = [
+        SchemeKind::Age,
+        SchemeKind::PolyDot,
+        SchemeKind::Entangled,
+        SchemeKind::Ssmm,
+        SchemeKind::GcsaNa,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchemeKind::Age => "AGE-CMPC",
+            SchemeKind::PolyDot => "PolyDot-CMPC",
+            SchemeKind::Entangled => "Entangled-CMPC",
+            SchemeKind::Ssmm => "SSMM",
+            SchemeKind::GcsaNa => "GCSA-NA",
+        }
+    }
+}
+
+/// Required workers for `kind` at `(s, t, z)` — the quantity plotted in
+/// Figs. 2–3. Constructible schemes (AGE, PolyDot) use exact enumeration;
+/// baselines use their published formulas, as the paper's evaluation does.
+pub fn n_workers(kind: SchemeKind, s: usize, t: usize, z: usize) -> u64 {
+    match kind {
+        SchemeKind::Age => AgeCmpc::with_optimal_lambda(s, t, z).n_workers() as u64,
+        SchemeKind::PolyDot => PolyDotCmpc::new(s, t, z).n_workers() as u64,
+        SchemeKind::Entangled => n_entangled(s, t, z),
+        SchemeKind::Ssmm => n_ssmm(s, t, z),
+        SchemeKind::GcsaNa => n_gcsa_na(s, t, z),
+    }
+}
+
+/// Entangled-CMPC worker count, eq. (194) = Theorem 1 of [15].
+pub fn n_entangled(s: usize, t: usize, z: usize) -> u64 {
+    let (su, tu, zu) = (s as u64, t as u64, z as u64);
+    if z > t * s - s {
+        2 * su * tu * tu + 2 * zu - 1
+    } else {
+        su * tu * tu + 3 * su * tu - 2 * su + tu * zu - tu + 1
+    }
+}
+
+/// PolyDot-CMPC worker count — Theorem 2 (ψ₁…ψ₆ with Lemmas 32/33 for the
+/// `s=1` / `t=1` degenerate partitions).
+pub fn n_polydot_formula(s: usize, t: usize, z: usize) -> u64 {
+    let (su, tu, zu) = (s as u64, t as u64, z as u64);
+    if t == 1 {
+        // Lemma 32 — reduces to polynomial-code sharing.
+        return 2 * su + 2 * zu - 1;
+    }
+    if s == 1 {
+        // Lemma 33.
+        return if z > t {
+            2 * tu * tu + 2 * zu - 1
+        } else {
+            tu * tu + 2 * tu + tu * zu - 1
+        };
+    }
+    let theta = tu * (2 * su - 1); // θ' = t(2s−1)
+    let ts = tu * su;
+    // p = min{⌊(z−1)/(θ'−ts)⌋, t−1}; θ'−ts = ts−t > 0 for s,t ≥ 2.
+    let p = ((zu - 1) / (theta - ts)).min(tu - 1);
+    if zu > ts {
+        // ψ₁
+        (p + 2) * ts + theta * (tu - 1) + 2 * zu - 1
+    } else if zu > ts - tu {
+        // ψ₂
+        2 * ts + theta * (tu - 1) + 3 * zu - 1
+    } else if zu + 2 * tu > ts {
+        // ψ₃ (ts−2t < z ≤ ts−t)
+        2 * ts + theta * (tu - 1) + 2 * zu - 1
+    } else {
+        // v' = max{ts−2t−s+2, (ts−2t+1)/2} — compare via 2z to avoid
+        // fractional arithmetic. z ≤ v' ⟺ (z ≤ ts−2t−s+2 or 2z ≤ ts−2t+1).
+        let above_first = zu + 2 * tu + su > ts + 2; // z > ts−2t−s+2
+        let above_half = 2 * zu > ts - 2 * tu + 1; // z > (ts−2t+1)/2
+        if above_first && above_half {
+            // ψ₄
+            (tu + 1) * ts + (tu - 1) * (zu + tu - 1) + 2 * zu - 1
+        } else {
+            // ψ₅
+            theta * tu + zu
+        }
+    }
+}
+
+/// `Γ(λ)` of Theorem 8 — AGE-CMPC worker count at a fixed gap `λ`, as
+/// published (Υ₁…Υ₉). `t = 1` returns `2s+2z−1` regardless of λ.
+pub fn gamma_age_formula(s: usize, t: usize, z: usize, lambda: u64) -> u64 {
+    let (su, tu, zu) = (s as u64, t as u64, z as u64);
+    assert!(lambda <= zu);
+    if t == 1 {
+        return 2 * su + 2 * zu - 1;
+    }
+    let ts = tu * su;
+    let theta = ts + lambda;
+    if lambda == 0 {
+        return if zu > ts - su {
+            2 * su * tu * tu + 2 * zu - 1 // Υ₁
+        } else {
+            su * tu * tu + 3 * su * tu - 2 * su + tu * (zu - 1) + 1 // Υ₂
+        };
+    }
+    if lambda == zu {
+        // Υ₃
+        return 2 * ts + (ts + zu) * (tu - 1) + 2 * zu - 1;
+    }
+    let q = ((zu - 1) / lambda).min(tu - 1);
+    if zu > ts {
+        // Υ₄
+        return (q + 2) * ts + theta * (tu - 1) + 2 * zu - 1;
+    }
+    if ts < lambda + su - 1 {
+        // Υ₅
+        return 3 * ts + theta * (tu - 1) + 2 * zu - 1;
+    }
+    let i = |x: i128| x;
+    let (si, ti, zi, li, qi, thi, tsi) = (
+        i(su as i128),
+        i(tu as i128),
+        i(zu as i128),
+        i(lambda as i128),
+        i(q as i128),
+        i(theta as i128),
+        i(ts as i128),
+    );
+    let val = if zu > lambda + su - 1 {
+        if q * lambda >= su as u64 {
+            // Υ₆
+            2 * tsi + thi * (ti - 1) + (qi + 2) * zi - qi - 1
+        } else {
+            // Υ₇
+            thi * (ti + qi + 1) + qi * (zi - 1) - 2 * li + zi + tsi
+                + 0.min(zi + si * (1 - ti) - li * qi - 1)
+        }
+    } else {
+        // z ≤ λ+s−1 ≤ ts
+        if q * lambda >= su as u64 {
+            // Υ₈
+            2 * tsi + thi * (ti - 1) + 3 * zi + (li + si - 1) * qi - li - si - 1
+        } else {
+            // Υ₉
+            thi * (ti + 1) + qi * (si - 1) - 3 * li + 3 * zi - 1
+                + 0.min(tsi - zi + 1 + li * qi - si)
+        }
+    };
+    val.max(1) as u64
+}
+
+/// Paper-formula AGE count: `min_λ Γ(λ)` (eq. 30). Returns `(N, λ*)`.
+pub fn n_age_formula(s: usize, t: usize, z: usize) -> (u64, u64) {
+    if t == 1 {
+        return (2 * s as u64 + 2 * z as u64 - 1, 0);
+    }
+    (0..=z as u64)
+        .map(|l| (gamma_age_formula(s, t, z, l), l))
+        .min()
+        .unwrap()
+}
+
+/// Exact AGE count via construction enumeration. Returns `(N, λ*)`.
+pub fn n_age_enum(s: usize, t: usize, z: usize) -> (u64, u64) {
+    let sch = AgeCmpc::with_optimal_lambda(s, t, z);
+    (sch.n_workers() as u64, sch.lambda)
+}
+
+/// Exact AGE count at a fixed λ via construction enumeration.
+pub fn gamma_age_enum(s: usize, t: usize, z: usize, lambda: u64) -> u64 {
+    AgeCmpc::new(s, t, z, lambda).n_workers() as u64
+}
+
+/// Exact PolyDot count via construction enumeration.
+pub fn n_polydot_enum(s: usize, t: usize, z: usize) -> u64 {
+    PolyDotCmpc::new(s, t, z).n_workers() as u64
+}
+
+/// The `(s, t)` factor pairs with `s·t = st_total` — the Fig. 3 / Fig. 4
+/// x-axis (plotted as the ratio `s/t`).
+pub fn partition_pairs(st_total: usize) -> Vec<(usize, usize)> {
+    let mut v: Vec<(usize, usize)> = (1..=st_total)
+        .filter(|s| st_total % s == 0)
+        .map(|s| (s, st_total / s))
+        .collect();
+    // ascending s/t
+    v.sort_by(|a, b| (a.0 * b.1).cmp(&(b.0 * a.1)));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::property;
+
+    #[test]
+    fn polydot_formula_matches_enumeration() {
+        // Theorem 2 against the exact support count of the construction.
+        //
+        // Exhaustive sweep result (documented in EXPERIMENTS.md): the only
+        // region where ψ disagrees with the exact |P(H)| is the degenerate
+        // corner s=1 ∧ z<t, where ψ₆ = t²+2t+tz−1 overcounts by exactly t−z
+        // (the true support is (t+1)(t+z)−1 — the top coded-secret cross
+        // band has a gap the lemma's dense count misses).
+        let mut checked = 0usize;
+        for s in 1..=6 {
+            for t in 1..=6 {
+                for z in 1..=(2 * s * t + 4) {
+                    let f = n_polydot_formula(s, t, z);
+                    let e = n_polydot_enum(s, t, z);
+                    if s == 1 && z < t {
+                        assert_eq!(
+                            f - e,
+                            (t - z) as u64,
+                            "s=1 corner gap changed at t={t} z={z}: formula {f}, enum {e}"
+                        );
+                        assert_eq!(e, ((t + 1) * (t + z) - 1) as u64);
+                    } else {
+                        assert_eq!(
+                            f, e,
+                            "Theorem 2 mismatch at s={s} t={t} z={z}: formula {f}, enum {e}"
+                        );
+                    }
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 500);
+    }
+
+    #[test]
+    fn age_gamma_matches_enumeration_on_clean_regions() {
+        // Υ₃ (λ=z) and Υ₄ (z>ts) have unambiguous derivations; assert exact.
+        for s in 1..=5 {
+            for t in 2..=5 {
+                for z in 1..=(2 * s * t + 3) {
+                    let l = z as u64;
+                    assert_eq!(
+                        gamma_age_formula(s, t, z, l),
+                        gamma_age_enum(s, t, z, l),
+                        "Υ₃ s={s} t={t} z={z}"
+                    );
+                    if z > s * t {
+                        for l in 1..z as u64 {
+                            assert_eq!(
+                                gamma_age_formula(s, t, z, l),
+                                gamma_age_enum(s, t, z, l),
+                                "Υ₄ s={s} t={t} z={z} λ={l}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn age_formula_min_matches_enumeration() {
+        // Individual Γ(λ) branches (Υ₆–Υ₉) are conservative in scattered
+        // interior regions (audited in EXPERIMENTS.md), but the *optimized*
+        // count min_λ Γ(λ) — the quantity Theorem 8 actually asserts and the
+        // figures plot — agrees exactly with enumeration across the sweep.
+        for s in 1..=5 {
+            for t in 2..=5 {
+                for z in 1..=(2 * s * t + 4) {
+                    let (fe, _) = n_age_formula(s, t, z);
+                    let (ee, _) = n_age_enum(s, t, z);
+                    assert_eq!(fe, ee, "Theorem 8 min mismatch at s={s} t={t} z={z}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn age_formula_min_upper_bounds_enumeration() {
+        // The paper's Γ may overcount individual λ (it inherits [15]'s
+        // degree-based Υ₁/Υ₂ at λ=0), but the enumerated optimum can never
+        // exceed the formula optimum: the construction realizes every λ.
+        property("enum N_AGE <= formula N_AGE", 250, |rng| {
+            let s = rng.gen_index(5) + 1;
+            let t = rng.gen_index(5) + 1;
+            let z = rng.gen_index(12) + 1;
+            let (fe, _) = n_age_formula(s, t, z);
+            let (ee, _) = n_age_enum(s, t, z);
+            if ee > fe {
+                return Err(format!("s={s} t={t} z={z}: enum {ee} > formula {fe}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn example1_counts() {
+        assert_eq!(n_age_enum(2, 2, 2), (17, 2));
+        assert_eq!(n_age_formula(2, 2, 2).0, 17);
+        assert_eq!(n_entangled(2, 2, 2), 19);
+    }
+
+    #[test]
+    fn lemma9_age_dominates_all_baselines() {
+        // Lemma 9: N_AGE ≤ every other scheme, everywhere.
+        property("Lemma 9 dominance", 120, |rng| {
+            let s = rng.gen_index(6) + 1;
+            let t = rng.gen_index(6) + 1;
+            let z = rng.gen_index(20) + 1;
+            let (age, _) = n_age_enum(s, t, z);
+            for kind in [
+                SchemeKind::PolyDot,
+                SchemeKind::Entangled,
+                SchemeKind::Ssmm,
+                SchemeKind::GcsaNa,
+            ] {
+                let other = n_workers(kind, s, t, z);
+                if age > other {
+                    return Err(format!(
+                        "s={s} t={t} z={z}: AGE {age} > {} {other}",
+                        kind.label()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fig3_polydot_win_pattern_at_z42() {
+        // §VII (Fig. 3): at st=36, z=42 PolyDot beats Entangled/SSMM/GCSA-NA
+        // for (s,t) ∈ {(2,18),(3,12),(4,9)} and not for the other pairs.
+        let winners = [(2usize, 18usize), (3, 12), (4, 9)];
+        for (s, t) in partition_pairs(36) {
+            let pd = n_polydot_formula(s, t, 42);
+            let others = [
+                n_entangled(s, t, 42),
+                n_ssmm(s, t, 42),
+                n_gcsa_na(s, t, 42),
+            ];
+            let beats_all = others.iter().all(|&o| pd < o);
+            assert_eq!(
+                beats_all,
+                winners.contains(&(s, t)),
+                "(s,t)=({s},{t}): PolyDot={pd} others={others:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn partition_pairs_cover_divisors() {
+        let pairs = partition_pairs(36);
+        assert_eq!(
+            pairs,
+            vec![
+                (1, 36),
+                (2, 18),
+                (3, 12),
+                (4, 9),
+                (6, 6),
+                (9, 4),
+                (12, 3),
+                (18, 2),
+                (36, 1)
+            ]
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Per-worker overhead model — Corollaries 10, 11, 12.
+//!
+//! All three overheads apply to *any* of the coded MPC methods (Entangled,
+//! PolyDot, AGE, and the batch baselines at batch 1): the phases are
+//! identical, so the scheme enters only through its worker count `N`.
+//!
+//! * computation ξ (eq. 32) — scalar multiplications per worker,
+//! * storage σ (eq. 33) — scalars resident per worker,
+//! * communication ζ (eq. 34) — scalars exchanged between workers in Phase 2.
+//!
+//! Counts are exact integers (`u128`): the divisibility conditions `s|m`,
+//! `t|m` make every division integral.
+
+/// Computation overhead per worker (eq. 32):
+/// `ξ = m³/(st²) + m² + N(t²+z−1)·m²/t²` scalar multiplications.
+///
+/// Terms: the `F_A(αₙ)·F_B(αₙ)` product, the `rₙ^{(i,l)}·H(αₙ)` scaling, and
+/// evaluating `Gₙ` at all `N` peer points.
+pub fn computation_overhead(m: usize, s: usize, t: usize, z: usize, n: u64) -> u128 {
+    assert!(m % s == 0 && m % t == 0, "need s|m and t|m");
+    let (m, s, t, z, n) = (m as u128, s as u128, t as u128, z as u128, n as u128);
+    let block = (m / t) * (m / t);
+    (m / s) * (m / t) * (m / t) + m * m + n * (t * t + z - 1) * block
+}
+
+/// Storage overhead per worker (eq. 33):
+/// `σ = (2N+z+1)·m²/t² + 2m²/(st) + t²` stored scalars.
+///
+/// Terms: received/produced `Gₙ` shares and `H(αₙ)`/`I(αₙ)` blocks, the two
+/// input shares `F_A(αₙ), F_B(αₙ)`, and the `t²` Lagrange coefficients.
+pub fn storage_overhead(m: usize, s: usize, t: usize, z: usize, n: u64) -> u128 {
+    assert!(m % s == 0 && m % t == 0, "need s|m and t|m");
+    let (m, s, t, z, n) = (m as u128, s as u128, t as u128, z as u128, n as u128);
+    let block = (m / t) * (m / t);
+    (2 * n + z + 1) * block + 2 * (m / s) * (m / t) + t * t
+}
+
+/// Communication overhead among workers (eq. 34):
+/// `ζ = N(N−1)·m²/t²` scalars exchanged in Phase 2 (each worker sends its
+/// `Gₙ(αₙ')` block to every peer).
+pub fn communication_overhead(m: usize, t: usize, n: u64) -> u128 {
+    assert!(m % t == 0, "need t|m");
+    let (m, t, n) = (m as u128, t as u128, n as u128);
+    n * (n - 1) * (m / t) * (m / t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_parameter_sanity() {
+        // Fig. 4 parameters: m = 36000, st = 36, z = 42. Spot-check one pair
+        // (s,t) = (6,6) against a hand-expanded eq. (32)–(34).
+        let (m, s, t, z) = (36000usize, 6usize, 6usize, 42usize);
+        let n = 200u64; // arbitrary N for the identity check
+        let block = (36000u128 / 6) * (36000 / 6); // 6000² = 3.6e7
+        assert_eq!(
+            computation_overhead(m, s, t, z, n),
+            (36000u128 / 6) * block + 36000u128 * 36000 + 200 * (36 + 42 - 1) * block
+        );
+        assert_eq!(
+            storage_overhead(m, s, t, z, n),
+            (2 * 200 + 42 + 1) * block + 2 * (36000u128 / 6) * (36000 / 6) + 36
+        );
+        assert_eq!(communication_overhead(m, t, n), 200 * 199 * block);
+    }
+
+    #[test]
+    fn overheads_monotone_in_n() {
+        // All three overheads grow with N — the mechanism by which AGE's
+        // smaller worker count wins Figs. 4(a)–(c).
+        let (m, s, t, z) = (3600, 4, 9, 42);
+        for n in [100u64, 200, 400] {
+            assert!(computation_overhead(m, s, t, z, n) < computation_overhead(m, s, t, z, n + 1));
+            assert!(storage_overhead(m, s, t, z, n) < storage_overhead(m, s, t, z, n + 1));
+            assert!(communication_overhead(m, t, n) < communication_overhead(m, t, n + 1));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "need s|m")]
+    fn divisibility_enforced() {
+        computation_overhead(10, 3, 2, 1, 5);
+    }
+}

@@ -1,0 +1,86 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! `rust/benches/*.rs` declare `harness = false` and drive this module:
+//! warmup, timed iterations, and a mean/median/p95 report printed in a
+//! stable, grep-friendly format that `cargo bench` emits and
+//! EXPERIMENTS.md quotes.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters={:<4} mean={:>12?} median={:>12?} p95={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.median, self.p95, self.min
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        median: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+        min: samples[0],
+    };
+    m.report();
+    m
+}
+
+/// Time a single run of `f`, returning its result and duration.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Throughput helper: items per second given a duration.
+pub fn per_second(items: u64, d: Duration) -> f64 {
+    items as f64 / d.as_secs_f64().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut n = 0u64;
+        let m = bench("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(m.iters, 10);
+        assert!(m.min <= m.median && m.median <= m.p95);
+    }
+
+    #[test]
+    fn per_second_math() {
+        let r = per_second(100, Duration::from_millis(200));
+        assert!((r - 500.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,259 @@
+//! Adaptive Gap Entangled polynomial codes (§V) and AGE-CMPC.
+//!
+//! AGE codes instantiate the generalized construction (24) with
+//! `(α, β, θ) = (1, s, ts + λ)`:
+//!
+//! ```text
+//! C_A(x) = Σ_{i<t} Σ_{j<s} (Aᵀ)_{i,j} · x^{j + s·i}
+//! C_B(x) = Σ_{k<s} Σ_{l<t} B_{k,l}   · x^{(s−1−k) + (ts+λ)·l}
+//! ```
+//!
+//! The gap parameter `λ ∈ [0, z]` *widens* the spacing of `C_B`'s exponent
+//! blocks. A pure coded-computation design would minimize `deg(C_A·C_B)`
+//! (λ = 0, entangled codes); the paper's key insight is that in the MPC
+//! setting a *larger* degree can align the garbage cross terms
+//! (`C_A·S_B`, `S_A·C_B`, `S_A·S_B`) into the gaps, shrinking the total
+//! support of `H(x)` — and it is `|P(H)|`, not the degree, that dictates the
+//! number of workers (eq. 23). `λ` is chosen per `(s,t,z)` by exact
+//! minimization ([`AgeCmpc::with_optimal_lambda`], Phase 0 of Algorithm 3).
+//!
+//! Secret terms follow Algorithm 2: `S_B` sits in the `z` powers right above
+//! the largest important power (satisfying C4/C6 for free), and `S_A` takes
+//! the `z` smallest powers whose products with `C_B` avoid the important
+//! powers (C5).
+
+use super::{greedy_secret_powers, CmpcScheme, SchemeParams};
+use crate::poly::powers::PowerSet;
+
+/// An AGE-CMPC instance at a fixed gap parameter `λ`.
+#[derive(Clone, Debug)]
+pub struct AgeCmpc {
+    params: SchemeParams,
+    /// Gap parameter `λ ∈ [0, z]`; `θ = ts + λ`.
+    pub lambda: u64,
+    secret_a: PowerSet,
+    secret_b: PowerSet,
+}
+
+impl AgeCmpc {
+    /// Construct with an explicit `λ`.
+    ///
+    /// # Panics
+    /// Panics if `λ > z` (larger gaps never help — Appendix H) .
+    pub fn new(s: usize, t: usize, z: usize, lambda: u64) -> AgeCmpc {
+        let params = SchemeParams::new(s, t, z);
+        assert!(lambda <= z as u64, "λ must lie in [0, z]");
+        let mut scheme = AgeCmpc {
+            params,
+            lambda,
+            secret_a: Vec::new(),
+            secret_b: Vec::new(),
+        };
+        // Algorithm 2 step 1: S_B = z consecutive powers from (max important)+1.
+        let max_imp = scheme.important_power(t - 1, t - 1);
+        scheme.secret_b = (1..=z as u64).map(|r| max_imp + r).collect();
+        // Algorithm 2 step 2: S_A greedy-minimal against C5
+        // (imp ∉ P(S_A)+P(C_B)). C4/C6 hold automatically because every S_B
+        // power already exceeds every important power.
+        let imp = scheme.important_powers();
+        let cb = scheme.coded_support_b();
+        scheme.secret_a = greedy_secret_powers(z, &imp, &[&cb]);
+        debug_assert!(super::verify_construction(&scheme).is_ok());
+        scheme
+    }
+
+    /// Phase 0 of Algorithm 3: scan `λ ∈ [0, z]` and keep the instance with
+    /// the fewest workers (ties broken toward smaller λ, i.e. lower degree).
+    ///
+    /// §Perf P3: the scan is embarrassingly parallel (each λ is an
+    /// independent construction + sumset); large `z` fans out across
+    /// threads, which cuts the Fig. 2 paper-range regeneration ~4×.
+    pub fn with_optimal_lambda(s: usize, t: usize, z: usize) -> AgeCmpc {
+        let scan = |range: std::ops::RangeInclusive<u64>| -> Option<(usize, AgeCmpc)> {
+            let mut best: Option<(usize, AgeCmpc)> = None;
+            for lambda in range {
+                let cand = AgeCmpc::new(s, t, z, lambda);
+                let n = cand.n_workers();
+                match &best {
+                    Some((bn, _)) if *bn <= n => {}
+                    _ => best = Some((n, cand)),
+                }
+            }
+            best
+        };
+        let zu = z as u64;
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(8) as u64;
+        if zu < 32 || threads < 2 {
+            return scan(0..=zu).unwrap().1;
+        }
+        let chunk = (zu + 1).div_ceil(threads);
+        let mut partials: Vec<(usize, AgeCmpc)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|i| {
+                    let lo = i * chunk;
+                    let hi = ((i + 1) * chunk - 1).min(zu);
+                    scope.spawn(move || if lo <= hi { scan(lo..=hi) } else { None })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .filter_map(|h| h.join().expect("λ-scan thread panicked"))
+                .collect()
+        });
+        // smallest N, ties toward smaller λ (partials arrive in λ order)
+        let mut best = partials.remove(0);
+        for cand in partials {
+            if cand.0 < best.0 {
+                best = cand;
+            }
+        }
+        best.1
+    }
+
+    /// `θ = ts + λ`.
+    #[inline]
+    pub fn theta(&self) -> u64 {
+        (self.params.t * self.params.s) as u64 + self.lambda
+    }
+}
+
+impl CmpcScheme for AgeCmpc {
+    fn name(&self) -> String {
+        format!("AGE-CMPC(λ={})", self.lambda)
+    }
+
+    fn params(&self) -> SchemeParams {
+        self.params
+    }
+
+    fn coded_power_a(&self, i: usize, j: usize) -> u64 {
+        debug_assert!(i < self.params.t && j < self.params.s);
+        (j + self.params.s * i) as u64
+    }
+
+    fn coded_power_b(&self, k: usize, l: usize) -> u64 {
+        debug_assert!(k < self.params.s && l < self.params.t);
+        (self.params.s - 1 - k) as u64 + self.theta() * l as u64
+    }
+
+    fn secret_powers_a(&self) -> PowerSet {
+        self.secret_a.clone()
+    }
+
+    fn secret_powers_b(&self) -> PowerSet {
+        self.secret_b.clone()
+    }
+
+    fn important_power(&self, i: usize, l: usize) -> u64 {
+        debug_assert!(i < self.params.t && l < self.params.t);
+        (self.params.s - 1) as u64 + (self.params.s * i) as u64 + self.theta() * l as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::verify_construction;
+    use crate::util::testing::property;
+
+    #[test]
+    fn example1_matches_paper() {
+        // Paper Example 1: s=t=z=2 → λ* = 2, N = 17.
+        let scheme = AgeCmpc::with_optimal_lambda(2, 2, 2);
+        assert_eq!(scheme.lambda, 2);
+        assert_eq!(scheme.n_workers(), 17);
+        // Explicit polynomial layout from the example:
+        // C_A = A00 + A01 x + A10 x² + A11 x³
+        assert_eq!(scheme.coded_power_a(0, 0), 0);
+        assert_eq!(scheme.coded_power_a(0, 1), 1);
+        assert_eq!(scheme.coded_power_a(1, 0), 2);
+        assert_eq!(scheme.coded_power_a(1, 1), 3);
+        // C_B = B00 x + B10 + B01 x⁷ + B11 x⁶
+        assert_eq!(scheme.coded_power_b(0, 0), 1);
+        assert_eq!(scheme.coded_power_b(1, 0), 0);
+        assert_eq!(scheme.coded_power_b(0, 1), 7);
+        assert_eq!(scheme.coded_power_b(1, 1), 6);
+        // S_A = {4,5}, S_B = {10,11}
+        assert_eq!(scheme.secret_powers_a(), vec![4, 5]);
+        assert_eq!(scheme.secret_powers_b(), vec![10, 11]);
+        // important powers (Y blocks) at x^1, x^3, x^7, x^9... wait:
+        // imp(i,l) = 1 + 2i + 6l → {1,3,7,9}
+        assert_eq!(scheme.important_powers(), vec![1, 3, 7, 9]);
+        // Support of H is {0..16} — 17 contiguous powers.
+        assert_eq!(scheme.support_h(), (0..=16).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn all_lambdas_verify_structurally() {
+        property("AGE verifies for random (s,t,z,λ)", 300, |rng| {
+            let s = rng.gen_index(5) + 1;
+            let t = rng.gen_index(5) + 1;
+            let z = rng.gen_index(8) + 1;
+            let lambda = rng.gen_range(z as u64 + 1);
+            let scheme = AgeCmpc::new(s, t, z, lambda);
+            verify_construction(&scheme).map_err(|e| format!("s={s} t={t} z={z} λ={lambda}: {e}"))
+        });
+    }
+
+    #[test]
+    fn optimal_lambda_never_worse_than_endpoints() {
+        property("λ* beats λ=0 and λ=z", 150, |rng| {
+            let s = rng.gen_index(4) + 1;
+            let t = rng.gen_index(4) + 1;
+            let z = rng.gen_index(6) + 1;
+            let best = AgeCmpc::with_optimal_lambda(s, t, z);
+            let n0 = AgeCmpc::new(s, t, z, 0).n_workers();
+            let nz = AgeCmpc::new(s, t, z, z as u64).n_workers();
+            if best.n_workers() > n0 || best.n_workers() > nz {
+                return Err(format!(
+                    "s={s} t={t} z={z}: N*={} vs N(0)={n0} N(z)={nz}",
+                    best.n_workers()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn secret_b_sits_above_max_important() {
+        property("S_B > max important", 100, |rng| {
+            let s = rng.gen_index(4) + 1;
+            let t = rng.gen_index(4) + 1;
+            let z = rng.gen_index(5) + 1;
+            let lambda = rng.gen_range(z as u64 + 1);
+            let sch = AgeCmpc::new(s, t, z, lambda);
+            let max_imp = *sch.important_powers().last().unwrap();
+            if sch.secret_powers_b().iter().any(|&e| e <= max_imp) {
+                return Err("S_B power below max important".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lambda_zero_is_entangled_codes() {
+        // At λ=0 the coded layout is the entangled polynomial code:
+        // contiguous C_A = {0..ts-1}, C_B spaced by ts.
+        let sch = AgeCmpc::new(3, 2, 2, 0);
+        assert_eq!(sch.coded_support_a(), (0..6).collect::<Vec<u64>>());
+        assert_eq!(sch.coded_support_b(), vec![0, 1, 2, 6, 7, 8]);
+    }
+
+    #[test]
+    fn t_equals_one_reduces_to_polynomial_codes() {
+        // Thm 8: N = 2s + 2z − 1 for t = 1.
+        for s in 1..6 {
+            for z in 1..5 {
+                let sch = AgeCmpc::with_optimal_lambda(s, 1, z);
+                assert_eq!(
+                    sch.n_workers(),
+                    2 * s + 2 * z - 1,
+                    "s={s} z={z}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! CMPC code constructions.
+//!
+//! A scheme is fully described by *which powers of `x`* carry which payloads
+//! in the two share-generating polynomials
+//!
+//! ```text
+//! F_A(x) = C_A(x) + S_A(x)        F_B(x) = C_B(x) + S_B(x)
+//! ```
+//!
+//! * `C_A` carries the `t×s` blocks of `Aᵀ` (coded term),
+//! * `C_B` carries the `s×t` blocks of `B`,
+//! * `S_A`, `S_B` carry `z` uniformly random matrices each (secret terms),
+//! * the *important powers* of `H(x) = F_A(x)·F_B(x)` are the exponents whose
+//!   coefficients equal the output blocks `Y_{i,l} = Σ_j (Aᵀ)_{i,j} B_{j,l}`.
+//!
+//! Everything else — worker counts (eq. 23), decodability, the protocol's
+//! share generation — derives from these maps, so the [`CmpcScheme`] trait
+//! exposes exactly them. Implementations:
+//!
+//! * [`PolyDotCmpc`] — §IV, PolyDot coded terms + garbage-aware secrets
+//!   (Algorithm 1 / Theorem 1).
+//! * [`AgeCmpc`] — §V, Adaptive Gap Entangled codes (Algorithm 2 /
+//!   Theorems 6–8) with the `λ*` optimization.
+//! * [`EntangledCmpc`] — the [15] baseline; construction identical to AGE at
+//!   `λ = 0` but provisioned with the *degree-based* worker count of [15]
+//!   (dense reconstruction — [15] does not exploit garbage-term gaps, which
+//!   is precisely the inefficiency this paper attacks).
+//! * [`baselines`] — formula-level models of SSMM [16] and GCSA-NA [17].
+
+pub mod age;
+pub mod baselines;
+pub mod entangled;
+pub mod polydot;
+
+pub use age::AgeCmpc;
+pub use baselines::{n_gcsa_na, n_ssmm};
+pub use entangled::EntangledCmpc;
+pub use polydot::PolyDotCmpc;
+
+use crate::poly::powers::{self, PowerSet};
+
+/// Common `(s, t, z)` parameters: `s` row-wise partitions, `t` column-wise
+/// partitions (so each worker handles a `1/(st)` fraction of each input) and
+/// `z` colluding workers.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct SchemeParams {
+    pub s: usize,
+    pub t: usize,
+    pub z: usize,
+}
+
+impl SchemeParams {
+    pub fn new(s: usize, t: usize, z: usize) -> SchemeParams {
+        assert!(s >= 1 && t >= 1, "need s,t >= 1");
+        assert!(z >= 1, "need z >= 1 colluding workers");
+        SchemeParams { s, t, z }
+    }
+}
+
+/// A fully constructible CMPC scheme (share polynomials can be built and the
+/// protocol run end-to-end).
+pub trait CmpcScheme: Send + Sync {
+    /// Human-readable name, e.g. `"AGE-CMPC(λ=2)"`.
+    fn name(&self) -> String;
+
+    fn params(&self) -> SchemeParams;
+
+    /// Power of `x` carrying block `(Aᵀ)_{i,j}` (`i < t`, `j < s`) in `C_A`.
+    fn coded_power_a(&self, i: usize, j: usize) -> u64;
+
+    /// Power of `x` carrying block `B_{k,l}` (`k < s`, `l < t`) in `C_B`.
+    fn coded_power_b(&self, k: usize, l: usize) -> u64;
+
+    /// Exponents of the `z` secret terms of `F_A`, sorted.
+    fn secret_powers_a(&self) -> PowerSet;
+
+    /// Exponents of the `z` secret terms of `F_B`, sorted.
+    fn secret_powers_b(&self) -> PowerSet;
+
+    /// Power of `H(x)` whose coefficient is the output block `Y_{i,l}`.
+    fn important_power(&self, i: usize, l: usize) -> u64;
+
+    /// Number of workers the scheme provisions.
+    ///
+    /// Default: the exact support size `|P(H)|` of eq. (23) — the paper's
+    /// garbage-aware count. `EntangledCmpc` overrides this with the
+    /// degree-based count of [15].
+    fn n_workers(&self) -> usize {
+        self.support_h().len()
+    }
+
+    /// Exponents the master's reconstruction treats as unknowns.
+    ///
+    /// Default: the exact support `P(H)`. Schemes that reconstruct densely
+    /// (Entangled) override with `0..=deg(H)`.
+    fn reconstruction_support(&self) -> PowerSet {
+        self.support_h()
+    }
+
+    // ---- derived helpers (do not override) ----
+
+    /// Sorted support of `C_A`.
+    fn coded_support_a(&self) -> PowerSet {
+        let p = self.params();
+        let mut v: Vec<u64> = (0..p.t)
+            .flat_map(|i| (0..p.s).map(move |j| (i, j)))
+            .map(|(i, j)| self.coded_power_a(i, j))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Sorted support of `C_B`.
+    fn coded_support_b(&self) -> PowerSet {
+        let p = self.params();
+        let mut v: Vec<u64> = (0..p.s)
+            .flat_map(|k| (0..p.t).map(move |l| (k, l)))
+            .map(|(k, l)| self.coded_power_b(k, l))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// `P(F_A) = P(C_A) ∪ P(S_A)`.
+    fn support_a(&self) -> PowerSet {
+        powers::union(&self.coded_support_a(), &self.secret_powers_a())
+    }
+
+    /// `P(F_B) = P(C_B) ∪ P(S_B)`.
+    fn support_b(&self) -> PowerSet {
+        powers::union(&self.coded_support_b(), &self.secret_powers_b())
+    }
+
+    /// Exact support of `H(x)` — the sumset of eq. (23).
+    fn support_h(&self) -> PowerSet {
+        powers::sumset(&self.support_a(), &self.support_b())
+    }
+
+    /// All `t²` important powers, sorted.
+    fn important_powers(&self) -> PowerSet {
+        let p = self.params();
+        let mut v: Vec<u64> = (0..p.t)
+            .flat_map(|i| (0..p.t).map(move |l| (i, l)))
+            .map(|(i, l)| self.important_power(i, l))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Structural decodability + privacy-collision audit for a scheme instance.
+///
+/// Checks (cf. Theorem 6 and conditions (9)/(27)):
+/// 1. the `t²` important powers are distinct;
+/// 2. the coefficient of each important power in `C_A·C_B` is exactly
+///    `Σ_j (Aᵀ)_{i,j} B_{j,l}` — i.e. coded cross terms land on an important
+///    power iff their block indices match (`j = k`) and map to that power's
+///    `(i, l)`;
+/// 3. no garbage cross term (`C_A·S_B`, `S_A·C_B`, `S_A·S_B`) collides with
+///    any important power;
+/// 4. there are exactly `z` secret powers per side, disjoint from the coded
+///    supports.
+pub fn verify_construction(scheme: &dyn CmpcScheme) -> Result<(), String> {
+    let p = scheme.params();
+    let (s, t, z) = (p.s, p.t, p.z);
+    let imp = scheme.important_powers();
+    // (1) distinct
+    for w in imp.windows(2) {
+        if w[0] == w[1] {
+            return Err(format!("important power {} repeats", w[0]));
+        }
+    }
+    // (2) coded×coded alignment
+    let mut imp_of = std::collections::BTreeMap::new();
+    for i in 0..t {
+        for l in 0..t {
+            imp_of.insert(scheme.important_power(i, l), (i, l));
+        }
+    }
+    for i in 0..t {
+        for j in 0..s {
+            for k in 0..s {
+                for l in 0..t {
+                    let e = scheme.coded_power_a(i, j) + scheme.coded_power_b(k, l);
+                    if let Some(&(ii, ll)) = imp_of.get(&e) {
+                        if !(ii == i && ll == l && j == k) {
+                            return Err(format!(
+                                "coded term A({i},{j})·B({k},{l}) at power {e} pollutes \
+                                 important block ({ii},{ll})"
+                            ));
+                        }
+                    } else if j == k && imp_of.contains_key(&e) {
+                        unreachable!()
+                    }
+                }
+            }
+        }
+    }
+    // every Y block must actually receive all s products
+    for i in 0..t {
+        for l in 0..t {
+            let e = scheme.important_power(i, l);
+            for j in 0..s {
+                if scheme.coded_power_a(i, j) + scheme.coded_power_b(j, l) != e {
+                    return Err(format!(
+                        "product A({i},{j})·B({j},{l}) misses important power {e}"
+                    ));
+                }
+            }
+        }
+    }
+    // (3) garbage avoidance
+    let sa = scheme.secret_powers_a();
+    let sb = scheme.secret_powers_b();
+    let ca = scheme.coded_support_a();
+    let cb = scheme.coded_support_b();
+    let hit = |xs: &PowerSet, ys: &PowerSet, label: &str| -> Result<(), String> {
+        for &x in xs {
+            for &y in ys {
+                if imp.binary_search(&(x + y)).is_ok() {
+                    return Err(format!(
+                        "{label} cross term {x}+{y} collides with important power {}",
+                        x + y
+                    ));
+                }
+            }
+        }
+        Ok(())
+    };
+    hit(&ca, &sb, "C_A·S_B")?;
+    hit(&sa, &cb, "S_A·C_B")?;
+    hit(&sa, &sb, "S_A·S_B")?;
+    // (4) secret term counts & disjointness
+    if sa.len() != z || sb.len() != z {
+        return Err(format!(
+            "expected {z} secret powers, got |S_A|={}, |S_B|={}",
+            sa.len(),
+            sb.len()
+        ));
+    }
+    for &e in &sa {
+        if ca.binary_search(&e).is_ok() {
+            return Err(format!("secret power {e} overlaps C_A"));
+        }
+    }
+    for &e in &sb {
+        if cb.binary_search(&e).is_ok() {
+            return Err(format!("secret power {e} overlaps C_B"));
+        }
+    }
+    Ok(())
+}
+
+/// Greedy secret-power selection shared by Algorithm 1 and Algorithm 2:
+/// the `z` smallest non-negative exponents `e` such that `e + c` misses every
+/// important power for all `c` in each of the `against` supports.
+pub(crate) fn greedy_secret_powers(z: usize, imp: &PowerSet, against: &[&PowerSet]) -> PowerSet {
+    let mut forbidden: PowerSet = Vec::new();
+    for cs in against {
+        forbidden = powers::union(&forbidden, &powers::nonneg_differences(imp, cs));
+    }
+    powers::smallest_excluding(z, &forbidden)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_matches_example1_age() {
+        // s=t=2, λ=2 (paper Example 1): S_A must be {4,5}.
+        let imp = vec![1, 3, 7, 9];
+        let cb = vec![0, 1, 6, 7];
+        let got = greedy_secret_powers(2, &imp, &[&cb]);
+        assert_eq!(got, vec![4, 5]);
+    }
+}

@@ -1,0 +1,173 @@
+//! PolyDot-CMPC (§IV): PolyDot coded terms + garbage-aware secret terms.
+//!
+//! Coded terms follow PolyDot codes [26] (eq. 7–8), i.e. the generalized
+//! construction (24) with `(α, β, θ) = (t, 1, t(2s−1))`:
+//!
+//! ```text
+//! C_A(x) = Σ_{i<t} Σ_{j<s} (Aᵀ)_{i,j} · x^{i + t·j}
+//! C_B(x) = Σ_{k<s} Σ_{l<t} B_{k,l}   · x^{t(s−1−k) + θ'·l},   θ' = t(2s−1)
+//! ```
+//!
+//! so block `Y_{i,l}` appears at power `i + t(s−1) + θ'·l`. The paper's
+//! contribution is the *secret-term* design (Algorithm 1): pick the `z`
+//! smallest powers for `S_A` avoiding C1 (`imp ∉ P(S_A)+P(C_B)`), then the
+//! `z` smallest for `S_B` avoiding C2 and C3 — i.e. reuse the garbage
+//! exponents of `C_A·C_B` instead of inflating the degree. The appendix
+//! lemmas (15–17, 26–31) derive the same sets case by case; here they fall
+//! out of one greedy pass, and the property tests in [`crate::analysis`]
+//! confirm the closed forms.
+
+use super::{greedy_secret_powers, CmpcScheme, SchemeParams};
+use crate::poly::powers::PowerSet;
+
+/// A PolyDot-CMPC instance.
+#[derive(Clone, Debug)]
+pub struct PolyDotCmpc {
+    params: SchemeParams,
+    secret_a: PowerSet,
+    secret_b: PowerSet,
+}
+
+impl PolyDotCmpc {
+    /// Build the construction of Theorem 1 for `(s, t, z)`.
+    ///
+    /// The paper excludes `s = t = 1` (that degenerate case is plain BGW —
+    /// no coding); we allow it for completeness, where the construction
+    /// reduces to Shamir sharing of the whole matrices.
+    pub fn new(s: usize, t: usize, z: usize) -> PolyDotCmpc {
+        let params = SchemeParams::new(s, t, z);
+        let mut scheme = PolyDotCmpc {
+            params,
+            secret_a: Vec::new(),
+            secret_b: Vec::new(),
+        };
+        let imp = scheme.important_powers();
+        // Algorithm 1, step 1: S_A minimal under C1 (against C_B).
+        let cb = scheme.coded_support_b();
+        scheme.secret_a = greedy_secret_powers(z, &imp, &[&cb]);
+        // Algorithm 1, step 2: S_B minimal under C2 (against the fixed S_A)
+        // and C3 (against C_A).
+        let ca = scheme.coded_support_a();
+        let sa = scheme.secret_a.clone();
+        scheme.secret_b = greedy_secret_powers(z, &imp, &[&ca, &sa]);
+        debug_assert!(super::verify_construction(&scheme).is_ok());
+        scheme
+    }
+
+    /// `θ' = t(2s − 1)`.
+    #[inline]
+    pub fn theta_prime(&self) -> u64 {
+        (self.params.t * (2 * self.params.s - 1)) as u64
+    }
+}
+
+impl CmpcScheme for PolyDotCmpc {
+    fn name(&self) -> String {
+        "PolyDot-CMPC".to_string()
+    }
+
+    fn params(&self) -> SchemeParams {
+        self.params
+    }
+
+    fn coded_power_a(&self, i: usize, j: usize) -> u64 {
+        debug_assert!(i < self.params.t && j < self.params.s);
+        (i + self.params.t * j) as u64
+    }
+
+    fn coded_power_b(&self, k: usize, l: usize) -> u64 {
+        debug_assert!(k < self.params.s && l < self.params.t);
+        (self.params.t * (self.params.s - 1 - k)) as u64 + self.theta_prime() * l as u64
+    }
+
+    fn secret_powers_a(&self) -> PowerSet {
+        self.secret_a.clone()
+    }
+
+    fn secret_powers_b(&self) -> PowerSet {
+        self.secret_b.clone()
+    }
+
+    fn important_power(&self, i: usize, l: usize) -> u64 {
+        debug_assert!(i < self.params.t && l < self.params.t);
+        (i + self.params.t * (self.params.s - 1)) as u64 + self.theta_prime() * l as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::verify_construction;
+    use crate::util::testing::property;
+
+    #[test]
+    fn coded_supports_match_eq_7_8() {
+        let sch = PolyDotCmpc::new(3, 2, 2); // s=3, t=2, θ' = 2·5 = 10
+        assert_eq!(sch.theta_prime(), 10);
+        // P(C_A) = {i + tj} = {0..ts-1} (eq. 7)
+        assert_eq!(sch.coded_support_a(), (0..6).collect::<Vec<u64>>());
+        // P(C_B) = {t(s-1-k) + θ'l} = {0,2,4} ∪ {10,12,14} (eq. 8)
+        assert_eq!(sch.coded_support_b(), vec![0, 2, 4, 10, 12, 14]);
+        // important powers i + t(s-1) + θ'l = {4,5,14,15}
+        assert_eq!(sch.important_powers(), vec![4, 5, 14, 15]);
+    }
+
+    #[test]
+    fn construction_verifies_across_parameters() {
+        property("PolyDot verifies for random (s,t,z)", 300, |rng| {
+            let s = rng.gen_index(5) + 1;
+            let t = rng.gen_index(5) + 1;
+            let z = rng.gen_index(10) + 1;
+            let scheme = PolyDotCmpc::new(s, t, z);
+            verify_construction(&scheme).map_err(|e| format!("s={s} t={t} z={z}: {e}"))
+        });
+    }
+
+    #[test]
+    fn secret_a_matches_lemma_16_small_z() {
+        // Lemma 16: for z ≤ θ'−ts and s,t ≠ 1, P(S_A) = {ts, …, ts+z−1}.
+        let sch = PolyDotCmpc::new(3, 2, 2); // θ'−ts = 10−6 = 4 ≥ z=2
+        assert_eq!(sch.secret_powers_a(), vec![6, 7]);
+    }
+
+    #[test]
+    fn secret_a_matches_lemma_15_large_z() {
+        // Lemma 15 (z > θ'−ts): S_A fills the gaps {ts+θ'l … (l+1)θ'−1}.
+        // s=2, t=2: θ'=6, θ'−ts=2, z=3 → first gap {4,5} then {10,...}.
+        let sch = PolyDotCmpc::new(2, 2, 3);
+        assert_eq!(sch.secret_powers_a(), vec![4, 5, 10]);
+    }
+
+    #[test]
+    fn s_equals_one_matches_lemma_17() {
+        // Lemma 17: s=1 → P(S_A) = {t², …, t²+z−1}.
+        let sch = PolyDotCmpc::new(1, 4, 3);
+        assert_eq!(sch.secret_powers_a(), vec![16, 17, 18]);
+        // Lemma 30: P(S_B) = {t², …} too.
+        assert_eq!(sch.secret_powers_b(), vec![16, 17, 18]);
+    }
+
+    #[test]
+    fn t_equals_one_matches_lemma_17_and_31() {
+        // t=1: P(S_A) = P(S_B) = {s, …, s+z−1}; N = 2s+2z−1 (Lemma 32).
+        let sch = PolyDotCmpc::new(5, 1, 2);
+        assert_eq!(sch.secret_powers_a(), vec![5, 6]);
+        assert_eq!(sch.secret_powers_b(), vec![5, 6]);
+        assert_eq!(sch.n_workers(), 2 * 5 + 2 * 2 - 1);
+    }
+
+    #[test]
+    fn secret_b_matches_lemma_26_large_z() {
+        // Lemma 26 (z > θ'−ts): P(S_B) = {ts+(t−1)θ' + r}.
+        let sch = PolyDotCmpc::new(2, 2, 3); // θ'=6, θ'−ts=2 < 3=z
+        assert_eq!(sch.secret_powers_b(), vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn secret_b_matches_lemma_29_small_z() {
+        // Lemma 29 (z ≤ (θ'−ts−t+1)/2): P(S_B) = {ts, …, ts+z−1}.
+        // s=4, t=2: θ'=14, τ=θ'−ts−t=4, (τ+1)/2=2.5 → z=2 qualifies.
+        let sch = PolyDotCmpc::new(4, 2, 2);
+        assert_eq!(sch.secret_powers_b(), vec![8, 9]);
+    }
+}

@@ -1,0 +1,296 @@
+//! Serving coordinator — the L3 layer a deployment actually talks to.
+//!
+//! Responsibilities (mirroring a vLLM-router-style front end, specialized to
+//! CMPC):
+//!
+//! * **Job intake & queueing** — [`Coordinator::submit`] accepts
+//!   `Y = AᵀB` jobs with per-job privacy/partition parameters.
+//! * **Scheme selection** — [`SchemePolicy::Adaptive`] runs Phase 0 of
+//!   Algorithm 3 generalized across constructions: it picks the
+//!   constructible scheme (AGE at its λ*, PolyDot, Entangled) with the
+//!   fewest workers for the job's `(s,t,z)`.
+//! * **Setup caching & batching** — the O(N³) generalized-Vandermonde solve
+//!   and α assignment are cached per `(scheme, s, t, z)` signature;
+//!   [`Coordinator::run_all`] groups queued jobs by signature so a worker
+//!   deployment is provisioned once per group.
+//! * **Backend management** — native or PJRT (AOT artifacts) per
+//!   [`BackendChoice`].
+//! * **Metrics** — per-job [`JobReport`]s with worker counts, phase
+//!   timings, traffic, and verification status.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::analysis::SchemeKind;
+use crate::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc};
+use crate::matrix::FpMat;
+use crate::metrics::{PhaseTimings, TrafficReport};
+use crate::mpc::protocol::{self, ProtocolConfig, Setup};
+use crate::runtime::BackendChoice;
+
+/// How the coordinator picks a construction for each job.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SchemePolicy {
+    /// Always use the given constructible scheme.
+    Fixed(SchemeKind),
+    /// Minimize provisioned workers across constructible schemes
+    /// (AGE λ*, PolyDot, Entangled).
+    Adaptive,
+}
+
+/// Coordinator-wide configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub policy: SchemePolicy,
+    pub backend: BackendChoice,
+    /// Verify every product natively (disable for throughput benchmarks).
+    pub verify: bool,
+    /// Optional straggler injection passed through to the protocol.
+    pub link_delay: Option<Duration>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> CoordinatorConfig {
+        CoordinatorConfig {
+            policy: SchemePolicy::Adaptive,
+            backend: BackendChoice::Native,
+            verify: true,
+            link_delay: None,
+        }
+    }
+}
+
+/// One queued multiplication job.
+pub struct Job {
+    pub id: u64,
+    pub a: FpMat,
+    pub b: FpMat,
+    pub s: usize,
+    pub t: usize,
+    pub z: usize,
+    pub seed: u64,
+}
+
+/// Outcome of one job.
+pub struct JobReport {
+    pub id: u64,
+    pub scheme: String,
+    pub n_workers: usize,
+    pub stragglers_tolerated: usize,
+    pub timings: PhaseTimings,
+    pub traffic: TrafficReport,
+    pub verified: bool,
+    pub y: FpMat,
+    /// True when the deployment setup was served from the coordinator cache.
+    pub setup_cache_hit: bool,
+}
+
+/// Signature under which deployments (α assignment + reconstruction
+/// coefficients) are shared between jobs.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+struct DeploymentKey {
+    scheme: String,
+    s: usize,
+    t: usize,
+    z: usize,
+}
+
+/// The serving coordinator.
+pub struct Coordinator {
+    config: CoordinatorConfig,
+    queue: Vec<Job>,
+    next_id: u64,
+    setups: BTreeMap<DeploymentKey, Arc<Setup>>,
+    /// Backend factory shared across all jobs: the PJRT client (and its
+    /// compiled-executable cache) lives for the coordinator's lifetime
+    /// instead of being re-created per job (§Perf P1).
+    backend: Option<crate::runtime::BackendFactory>,
+}
+
+impl Coordinator {
+    pub fn new(config: CoordinatorConfig) -> Coordinator {
+        Coordinator {
+            config,
+            queue: Vec::new(),
+            next_id: 0,
+            setups: BTreeMap::new(),
+            backend: None,
+        }
+    }
+
+    /// Queue a job; returns its id.
+    pub fn submit(&mut self, a: FpMat, b: FpMat, s: usize, t: usize, z: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let seed = 0x5EED ^ (id.wrapping_mul(0x9E3779B97F4A7C15));
+        self.queue.push(Job {
+            id,
+            a,
+            b,
+            s,
+            t,
+            z,
+            seed,
+        });
+        id
+    }
+
+    /// Resolve the scheme for a parameter triple under the current policy.
+    pub fn select_scheme(&self, s: usize, t: usize, z: usize) -> Box<dyn CmpcScheme> {
+        match self.config.policy {
+            SchemePolicy::Fixed(kind) => build_scheme(kind, s, t, z),
+            SchemePolicy::Adaptive => {
+                let candidates: [Box<dyn CmpcScheme>; 3] = [
+                    Box::new(AgeCmpc::with_optimal_lambda(s, t, z)),
+                    Box::new(PolyDotCmpc::new(s, t, z)),
+                    Box::new(EntangledCmpc::new(s, t, z)),
+                ];
+                candidates
+                    .into_iter()
+                    .min_by_key(|c| c.n_workers())
+                    .unwrap()
+            }
+        }
+    }
+
+    /// Drain the queue, batching jobs that share a deployment. Jobs are
+    /// returned in submission order.
+    pub fn run_all(&mut self) -> anyhow::Result<Vec<JobReport>> {
+        if self.backend.is_none() {
+            self.backend = Some(crate::runtime::BackendFactory::new(&self.config.backend)?);
+        }
+        let jobs = std::mem::take(&mut self.queue);
+        let mut reports: Vec<JobReport> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let scheme = self.select_scheme(job.s, job.t, job.z);
+            let key = DeploymentKey {
+                scheme: scheme.name(),
+                s: job.s,
+                t: job.t,
+                z: job.z,
+            };
+            let (setup, cache_hit) = match self.setups.get(&key) {
+                Some(s) => (s.clone(), true),
+                None => {
+                    let s = Arc::new(protocol::prepare_setup(scheme.as_ref()));
+                    self.setups.insert(key.clone(), s.clone());
+                    (s, false)
+                }
+            };
+            let cfg = ProtocolConfig {
+                backend: self.config.backend.clone(),
+                seed: job.seed,
+                verify: self.config.verify,
+                worker_delays: Vec::new(),
+                link_delay: self.config.link_delay,
+            };
+            let out = protocol::run_protocol_with_factory(
+                scheme.as_ref(),
+                &setup,
+                &job.a,
+                &job.b,
+                &cfg,
+                self.backend.as_ref().unwrap(),
+            )?;
+            reports.push(JobReport {
+                id: job.id,
+                scheme: out.scheme_name,
+                n_workers: out.n_workers,
+                stragglers_tolerated: out.stragglers_tolerated,
+                timings: out.timings,
+                traffic: out.traffic,
+                verified: out.verified,
+                y: out.y,
+                setup_cache_hit: cache_hit,
+            });
+        }
+        Ok(reports)
+    }
+}
+
+/// Instantiate a constructible scheme by kind.
+///
+/// # Panics
+/// Panics for formula-only baselines (SSMM, GCSA-NA) — they cannot be run,
+/// only analyzed (see `codes::baselines`).
+pub fn build_scheme(kind: SchemeKind, s: usize, t: usize, z: usize) -> Box<dyn CmpcScheme> {
+    match kind {
+        SchemeKind::Age => Box::new(AgeCmpc::with_optimal_lambda(s, t, z)),
+        SchemeKind::PolyDot => Box::new(PolyDotCmpc::new(s, t, z)),
+        SchemeKind::Entangled => Box::new(EntangledCmpc::new(s, t, z)),
+        SchemeKind::Ssmm | SchemeKind::GcsaNa => {
+            panic!("{} is a formula-level baseline, not constructible", kind.label())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::ChaChaRng;
+
+    #[test]
+    fn adaptive_policy_picks_minimum_workers() {
+        let coord = Coordinator::new(CoordinatorConfig::default());
+        // Example 1 territory: AGE(17) < Entangled(19); PolyDot(2,2,2) = 18.
+        let sch = coord.select_scheme(2, 2, 2);
+        assert_eq!(sch.n_workers(), 17);
+        assert!(sch.name().starts_with("AGE"));
+    }
+
+    #[test]
+    fn jobs_batch_and_verify() {
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        let mut rng = ChaChaRng::seed_from_u64(6);
+        let mats: Vec<(FpMat, FpMat)> = (0..3)
+            .map(|_| {
+                (
+                    FpMat::random(&mut rng, 8, 8),
+                    FpMat::random(&mut rng, 8, 8),
+                )
+            })
+            .collect();
+        for (a, b) in &mats {
+            coord.submit(a.clone(), b.clone(), 2, 2, 2);
+        }
+        let reports = coord.run_all().unwrap();
+        assert_eq!(reports.len(), 3);
+        // identical (scheme, s, t, z) ⇒ setup computed once, reused twice
+        assert!(!reports[0].setup_cache_hit);
+        assert!(reports[1].setup_cache_hit && reports[2].setup_cache_hit);
+        for (r, (a, b)) in reports.iter().zip(&mats) {
+            assert!(r.verified);
+            assert_eq!(r.y, a.transpose().matmul(b));
+        }
+    }
+
+    #[test]
+    fn cache_persists_across_run_all_calls() {
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        let mut rng = ChaChaRng::seed_from_u64(7);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        coord.submit(a.clone(), b.clone(), 2, 2, 2);
+        let r1 = coord.run_all().unwrap();
+        coord.submit(a, b, 2, 2, 2);
+        let r2 = coord.run_all().unwrap();
+        assert!(!r1[0].setup_cache_hit);
+        assert!(r2[0].setup_cache_hit);
+    }
+
+    #[test]
+    fn fixed_policy_respected() {
+        let coord = Coordinator::new(CoordinatorConfig {
+            policy: SchemePolicy::Fixed(SchemeKind::PolyDot),
+            ..CoordinatorConfig::default()
+        });
+        assert_eq!(coord.select_scheme(2, 2, 2).name(), "PolyDot-CMPC");
+    }
+
+    #[test]
+    #[should_panic(expected = "formula-level baseline")]
+    fn ssmm_not_constructible() {
+        build_scheme(SchemeKind::Ssmm, 2, 2, 2);
+    }
+}

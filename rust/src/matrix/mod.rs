@@ -1,0 +1,368 @@
+//! Dense matrices over `GF(p)` with the `(s, t)` block partitioning of eq. (4)
+//! and a cache-blocked modular matmul used as the native compute backend.
+//!
+//! Element storage is row-major `u32` (all values reduced `< p`). The matmul
+//! hot path accumulates unreduced `u64` partial sums: with `p² < 2^34` a row
+//! of up to `2^29` products fits without overflow, so reduction happens once
+//! per output element (or once per K-panel in the blocked path).
+
+use crate::ff::{self, P};
+use crate::util::rng::ChaChaRng;
+
+/// Row-major dense matrix over `GF(p)`.
+#[derive(Clone, PartialEq, Eq)]
+pub struct FpMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u32>,
+}
+
+impl std::fmt::Debug for FpMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "FpMat({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 64 {
+            writeln!(f)?;
+            for r in 0..self.rows {
+                writeln!(f, "  {:?}", &self.data[r * self.cols..(r + 1) * self.cols])?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FpMat {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> FpMat {
+        FpMat {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> FpMat {
+        let mut m = FpMat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1;
+        }
+        m
+    }
+
+    /// Matrix with uniformly random field entries.
+    pub fn random(rng: &mut ChaChaRng, rows: usize, cols: usize) -> FpMat {
+        let data = (0..rows * cols)
+            .map(|_| rng.field_element() as u32)
+            .collect();
+        FpMat { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn<F: FnMut(usize, usize) -> u64>(rows: usize, cols: usize, mut f: F) -> FpMat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push((f(r, c) % P) as u32);
+            }
+        }
+        FpMat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> u64 {
+        self.data[r * self.cols + c] as u64
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: u64) {
+        self.data[r * self.cols + c] = (v % P) as u32;
+    }
+
+    /// Number of scalar entries.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Serialized size in bytes (u32 per scalar) — used by the network fabric
+    /// for communication accounting.
+    pub fn nbytes(&self) -> u64 {
+        (self.len() * 4) as u64
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> FpMat {
+        let mut out = FpMat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Elementwise sum.
+    pub fn add(&self, other: &FpMat) -> FpMat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ff::add(a as u64, b as u64) as u32)
+            .collect();
+        FpMat {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    /// `self += c · other` in place (axpy).
+    pub fn axpy_inplace(&mut self, c: u64, other: &FpMat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        ff::axpy(&mut self.data, c % P, &other.data);
+    }
+
+    /// Scalar multiple.
+    pub fn scale(&self, c: u64) -> FpMat {
+        let mut out = FpMat::zeros(self.rows, self.cols);
+        ff::scale_into(&mut out.data, c % P, &self.data);
+        out
+    }
+
+    /// Modular matrix product, cache-blocked with delayed reduction.
+    ///
+    /// Layout: `ikj` loop order with a `u64` accumulator row so the inner loop
+    /// is a pure multiply–add over contiguous memory. Safe because
+    /// `p² · cols_inner < 2^34 · 2^29 < 2^63` for any realistic size; a guard
+    /// asserts the bound.
+    pub fn matmul(&self, other: &FpMat) -> FpMat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul shape mismatch: {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        assert!(
+            (self.cols as u64) < (1u64 << 29),
+            "inner dimension too large for delayed reduction"
+        );
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = FpMat::zeros(m, n);
+        let mut acc: Vec<u64> = vec![0; n];
+        for i in 0..m {
+            for a in acc.iter_mut() {
+                *a = 0;
+            }
+            let arow = &self.data[i * k..(i + 1) * k];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0 {
+                    continue;
+                }
+                let a64 = aik as u64;
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for (j, &bkj) in brow.iter().enumerate() {
+                    acc[j] += a64 * bkj as u64;
+                }
+            }
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                *o = ff::reduce(a) as u32;
+            }
+        }
+        out
+    }
+
+    /// Partition into `row_parts × col_parts` equal blocks (eq. 4).
+    ///
+    /// # Panics
+    /// Panics unless `row_parts | rows` and `col_parts | cols` (the paper's
+    /// `s|m`, `t|m` condition).
+    pub fn blocks(&self, row_parts: usize, col_parts: usize) -> Vec<Vec<FpMat>> {
+        assert!(
+            self.rows % row_parts == 0 && self.cols % col_parts == 0,
+            "partition {}x{} does not divide {}x{}",
+            row_parts,
+            col_parts,
+            self.rows,
+            self.cols
+        );
+        let br = self.rows / row_parts;
+        let bc = self.cols / col_parts;
+        let mut out = Vec::with_capacity(row_parts);
+        for pr in 0..row_parts {
+            let mut rowv = Vec::with_capacity(col_parts);
+            for pc in 0..col_parts {
+                let mut blk = FpMat::zeros(br, bc);
+                for r in 0..br {
+                    let src = (pr * br + r) * self.cols + pc * bc;
+                    let dst = r * bc;
+                    blk.data[dst..dst + bc].copy_from_slice(&self.data[src..src + bc]);
+                }
+                rowv.push(blk);
+            }
+            out.push(rowv);
+        }
+        out
+    }
+
+    /// Inverse of [`blocks`]: assemble a matrix from a block grid.
+    pub fn from_blocks(blocks: &[Vec<FpMat>]) -> FpMat {
+        let row_parts = blocks.len();
+        let col_parts = blocks[0].len();
+        let br = blocks[0][0].rows;
+        let bc = blocks[0][0].cols;
+        let mut out = FpMat::zeros(row_parts * br, col_parts * bc);
+        for (pr, rowv) in blocks.iter().enumerate() {
+            assert_eq!(rowv.len(), col_parts);
+            for (pc, blk) in rowv.iter().enumerate() {
+                assert_eq!((blk.rows, blk.cols), (br, bc));
+                for r in 0..br {
+                    let dst = (pr * br + r) * out.cols + pc * bc;
+                    let src = r * bc;
+                    out.data[dst..dst + bc].copy_from_slice(&blk.data[src..src + bc]);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::property;
+
+    fn small_random(rng: &mut ChaChaRng, max: usize) -> FpMat {
+        let r = rng.gen_index(max) + 1;
+        let c = rng.gen_index(max) + 1;
+        FpMat::random(rng, r, c)
+    }
+
+    /// Schoolbook reference matmul with per-element modulo.
+    fn matmul_ref(a: &FpMat, b: &FpMat) -> FpMat {
+        let mut out = FpMat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0u64;
+                for k in 0..a.cols {
+                    acc = (acc + a.at(i, k) * b.at(k, j)) % P;
+                }
+                out.set(i, j, acc);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_schoolbook() {
+        property("matmul == schoolbook", 200, |rng| {
+            let m = rng.gen_index(12) + 1;
+            let k = rng.gen_index(12) + 1;
+            let n = rng.gen_index(12) + 1;
+            let a = FpMat::random(rng, m, k);
+            let b = FpMat::random(rng, k, n);
+            if a.matmul(&b) != matmul_ref(&a, &b) {
+                return Err(format!("mismatch at {m}x{k}x{n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = ChaChaRng::seed_from_u64(2);
+        let a = FpMat::random(&mut rng, 9, 9);
+        assert_eq!(a.matmul(&FpMat::identity(9)), a);
+        assert_eq!(FpMat::identity(9).matmul(&a), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        property("transpose twice is id", 100, |rng| {
+            let a = small_random(rng, 10);
+            if a.transpose().transpose() != a {
+                return Err("transpose".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_transpose_identity() {
+        // (AB)^T = B^T A^T
+        property("(AB)^T == B^T A^T", 100, |rng| {
+            let m = rng.gen_index(8) + 1;
+            let k = rng.gen_index(8) + 1;
+            let n = rng.gen_index(8) + 1;
+            let a = FpMat::random(rng, m, k);
+            let b = FpMat::random(rng, k, n);
+            if a.matmul(&b).transpose() != b.transpose().matmul(&a.transpose()) {
+                return Err("identity".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blocks_roundtrip() {
+        property("blocks/from_blocks roundtrip", 100, |rng| {
+            let s = rng.gen_index(4) + 1;
+            let t = rng.gen_index(4) + 1;
+            let rows = s * (rng.gen_index(4) + 1);
+            let cols = t * (rng.gen_index(4) + 1);
+            let a = FpMat::random(rng, rows, cols);
+            if FpMat::from_blocks(&a.blocks(s, t)) != a {
+                return Err("roundtrip".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_matmul_identity() {
+        // Block (i,l) of A^T·B equals sum_j (A^T)_{i,j} · B_{j,l} — the
+        // identity the CMPC decoding relies on (eq. 18).
+        let mut rng = ChaChaRng::seed_from_u64(8);
+        let (s, t, mm) = (3, 2, 12);
+        let a = FpMat::random(&mut rng, mm, mm);
+        let b = FpMat::random(&mut rng, mm, mm);
+        let at = a.transpose();
+        let at_blocks = at.blocks(t, s); // t row-parts, s col-parts
+        let b_blocks = b.blocks(s, t);
+        let y = at.matmul(&b);
+        let y_blocks = y.blocks(t, t);
+        for i in 0..t {
+            for l in 0..t {
+                let mut acc = FpMat::zeros(mm / t, mm / t);
+                for j in 0..s {
+                    acc = acc.add(&at_blocks[i][j].matmul(&b_blocks[j][l]));
+                }
+                assert_eq!(acc, y_blocks[i][l], "block ({i},{l})");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_scale_add_consistent() {
+        property("axpy == add(scale)", 100, |rng| {
+            let a = small_random(rng, 8);
+            let b = FpMat::random(rng, a.rows, a.cols);
+            let c = rng.field_element();
+            let mut via_axpy = a.clone();
+            via_axpy.axpy_inplace(c, &b);
+            if via_axpy != a.add(&b.scale(c)) {
+                return Err("mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "partition")]
+    fn blocks_requires_divisibility() {
+        FpMat::zeros(10, 10).blocks(3, 2);
+    }
+}

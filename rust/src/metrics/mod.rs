@@ -1,0 +1,116 @@
+//! Overhead accounting — the *measured* counterparts of Corollaries 10–12.
+//!
+//! The protocol engine increments these counters at the exact points the
+//! paper's proofs enumerate (scalar multiplications performed, scalars
+//! stored, scalars exchanged), so integration tests can assert
+//! `measured == closed form` — validating both the implementation and the
+//! paper's accounting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Per-worker overhead counters (shared across the worker's phases).
+#[derive(Default, Debug)]
+pub struct WorkerCounters {
+    /// ξ contributions: scalar multiplications performed.
+    pub scalar_mults: AtomicU64,
+    /// σ contributions: scalars written to worker-resident storage
+    /// (never decremented — the paper's σ ignores deletion, see fn. 5).
+    pub stored_scalars: AtomicU64,
+}
+
+impl WorkerCounters {
+    pub fn add_mults(&self, n: u64) {
+        self.scalar_mults.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_stored(&self, n: u64) {
+        self.stored_scalars.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn mults(&self) -> u64 {
+        self.scalar_mults.load(Ordering::Relaxed)
+    }
+
+    pub fn stored(&self) -> u64 {
+        self.stored_scalars.load(Ordering::Relaxed)
+    }
+}
+
+/// Traffic totals collected by the network fabric, split by edge class.
+#[derive(Default, Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrafficReport {
+    /// Phase 1: source → worker scalars.
+    pub source_to_worker: u64,
+    /// Phase 2: worker ↔ worker scalars (the ζ of eq. 34).
+    pub worker_to_worker: u64,
+    /// Phase 3: worker → master scalars.
+    pub worker_to_master: u64,
+    /// Message count across all links.
+    pub messages: u64,
+}
+
+/// Shared atomic accumulator behind [`TrafficReport`].
+#[derive(Default, Debug)]
+pub struct TrafficCounters {
+    pub source_to_worker: AtomicU64,
+    pub worker_to_worker: AtomicU64,
+    pub worker_to_master: AtomicU64,
+    pub messages: AtomicU64,
+}
+
+impl TrafficCounters {
+    pub fn shared() -> Arc<TrafficCounters> {
+        Arc::new(TrafficCounters::default())
+    }
+
+    pub fn snapshot(&self) -> TrafficReport {
+        TrafficReport {
+            source_to_worker: self.source_to_worker.load(Ordering::Relaxed),
+            worker_to_worker: self.worker_to_worker.load(Ordering::Relaxed),
+            worker_to_master: self.worker_to_master.load(Ordering::Relaxed),
+            messages: self.messages.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Wall-clock phase breakdown of one protocol run.
+#[derive(Default, Debug, Clone, Copy)]
+pub struct PhaseTimings {
+    pub setup: std::time::Duration,
+    pub phase1_share: std::time::Duration,
+    pub phase2_compute: std::time::Duration,
+    pub phase3_reconstruct: std::time::Duration,
+}
+
+impl PhaseTimings {
+    pub fn total(&self) -> std::time::Duration {
+        self.setup + self.phase1_share + self.phase2_compute + self.phase3_reconstruct
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = WorkerCounters::default();
+        c.add_mults(10);
+        c.add_mults(5);
+        c.add_stored(7);
+        assert_eq!(c.mults(), 15);
+        assert_eq!(c.stored(), 7);
+    }
+
+    #[test]
+    fn traffic_snapshot() {
+        let t = TrafficCounters::shared();
+        t.worker_to_worker.fetch_add(42, Ordering::Relaxed);
+        t.messages.fetch_add(2, Ordering::Relaxed);
+        let snap = t.snapshot();
+        assert_eq!(snap.worker_to_worker, 42);
+        assert_eq!(snap.messages, 2);
+        assert_eq!(snap.source_to_worker, 0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Phase 3 — master reconstruction (eq. 21).
+//!
+//! `I(x)` is a *dense* polynomial of degree `t²+z−1` whose first `t²`
+//! coefficients are the output blocks `Y_{i,l}` (at power `i + t·l`) and
+//! whose top `z` coefficients are the summed masks. Any `t²+z` evaluations
+//! determine it, so the master reconstructs from the **first** `t²+z`
+//! `I(αₙ)` arrivals — the protocol tolerates `N − (t²+z)` stragglers.
+
+use std::sync::Arc;
+
+use crate::ff;
+use crate::matrix::FpMat;
+use crate::mpc::network::{Endpoint, Payload};
+use crate::poly::interp::vandermonde_inverse_rows;
+
+/// Result of the master phase.
+pub struct MasterOutput {
+    /// The reconstructed product `Y = Aᵀ·B` (m×m).
+    pub y: FpMat,
+    /// Worker ids whose `I(αₙ)` arrived in time to be used.
+    pub used_workers: Vec<usize>,
+    /// Worker ids whose shares arrived late or never (tolerated stragglers).
+    pub stragglers_tolerated: usize,
+}
+
+/// Collect `t²+z` I-shares and reconstruct `Y`.
+///
+/// `alphas[n]` is worker `n`'s evaluation point; `t`/`z` are scheme
+/// parameters; `n_workers` is the provisioned worker count.
+pub fn run_master(
+    endpoint: &Endpoint,
+    alphas: &Arc<Vec<u64>>,
+    n_workers: usize,
+    t: usize,
+    z: usize,
+) -> anyhow::Result<MasterOutput> {
+    let needed = t * t + z;
+    anyhow::ensure!(
+        needed <= n_workers,
+        "reconstruction needs t²+z = {needed} shares but only {n_workers} workers exist"
+    );
+    let mut arrived: Vec<(usize, FpMat)> = Vec::with_capacity(needed);
+    while arrived.len() < needed {
+        let env = endpoint
+            .recv()
+            .map_err(|_| anyhow::anyhow!("fabric closed before reconstruction"))?;
+        match env.payload {
+            Payload::IShare(m) => arrived.push((env.from, m)),
+            other => anyhow::bail!("master: unexpected {other:?}"),
+        }
+    }
+    let used_workers: Vec<usize> = arrived.iter().map(|&(id, _)| id).collect();
+
+    // Dense Vandermonde over the arrived points: coefficient c_e of I(x)
+    // satisfies c_e = Σₙ rows[e][n]·I(αₙ).
+    let pts: Vec<u64> = used_workers.iter().map(|&id| alphas[id]).collect();
+    let support: Vec<u64> = (0..needed as u64).collect();
+    let rows = vandermonde_inverse_rows(&pts, &support);
+
+    // Y blocks are coefficients 0..t² (power i + t·l).
+    let block = arrived[0].1.rows;
+    let mut y_blocks: Vec<Vec<FpMat>> = (0..t)
+        .map(|_| (0..t).map(|_| FpMat::zeros(block, block)).collect())
+        .collect();
+    for i in 0..t {
+        for l in 0..t {
+            let e = i + t * l;
+            let blk = &mut y_blocks[i][l];
+            for (n_idx, (_, share)) in arrived.iter().enumerate() {
+                let c = rows[e][n_idx];
+                if c != 0 {
+                    blk.axpy_inplace(c, share);
+                }
+            }
+        }
+    }
+    // Sanity: the top z coefficients are mask sums; reconstructing them is
+    // unnecessary, but verify the degree bound by checking one random
+    // linear identity would cost another pass — decodability is instead
+    // asserted end-to-end by the caller (Y == AᵀB in verify mode).
+    let _ = ff::P;
+    Ok(MasterOutput {
+        y: FpMat::from_blocks(&y_blocks),
+        stragglers_tolerated: n_workers - needed,
+        used_workers,
+    })
+}

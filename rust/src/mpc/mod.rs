@@ -1,0 +1,26 @@
+//! The three-phase CMPC protocol engine (§IV-A / Algorithm 3), run over a
+//! simulated edge-network fabric.
+//!
+//! * **Phase 1** ([`source`]) — each source partitions its matrix, builds the
+//!   share polynomial `F = C + S` prescribed by the scheme, and sends
+//!   `F(αₙ)` to every worker over D2D links.
+//! * **Phase 2** ([`worker`]) — worker `n` computes
+//!   `H(αₙ) = F_A(αₙ)·F_B(αₙ)` (via the configured [`crate::runtime`]
+//!   backend), forms `Gₙ(x)` (eq. 19) with `z` fresh random masks, exchanges
+//!   `Gₙ(αₙ')` with every peer, and sends `I(αₙ) = Σₙ' Gₙ'(αₙ)` to the
+//!   master.
+//! * **Phase 3** ([`master`]) — the master interpolates the dense degree
+//!   `t²+z−1` polynomial `I(x)` from the *first* `t²+z` arrivals (straggler
+//!   tolerance) and reads `Y_{i,l}` off the first `t²` coefficients
+//!   (eq. 21).
+//!
+//! Every node runs on its own thread; all traffic flows through
+//! [`network::Fabric`], which meters scalars per edge class so measured
+//! communication can be asserted against ζ (eq. 34).
+
+pub mod master;
+pub mod network;
+pub mod privacy;
+pub mod protocol;
+pub mod source;
+pub mod worker;

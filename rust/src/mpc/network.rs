@@ -1,0 +1,226 @@
+//! Simulated edge-network fabric.
+//!
+//! Models the paper's topology: every source connects to every worker, every
+//! worker to every other worker and to the master (D2D links). Nodes are
+//! threads; links are mpsc channels routed through a central [`Fabric`] that
+//! meters traffic per edge class and can inject link latency.
+//!
+//! Node-id layout for an `N`-worker deployment:
+//! `0..N` → workers, `N` → master, `N+1` → source A, `N+2` → source B.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::matrix::FpMat;
+use crate::metrics::TrafficCounters;
+
+pub type NodeId = usize;
+
+/// Role classification derived from a node id.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Role {
+    Worker(usize),
+    Master,
+    SourceA,
+    SourceB,
+}
+
+/// A protocol message payload.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Phase 1: a worker's evaluations of the two share polynomials.
+    Shares { fa: FpMat, fb: FpMat },
+    /// Phase 2: `G_{from}(α_to)`.
+    GShare(FpMat),
+    /// Phase 3: `I(α_from)`.
+    IShare(FpMat),
+}
+
+impl Payload {
+    /// Number of field scalars carried (the unit of eq. 32–34).
+    pub fn scalars(&self) -> u64 {
+        match self {
+            Payload::Shares { fa, fb } => (fa.len() + fb.len()) as u64,
+            Payload::GShare(m) | Payload::IShare(m) => m.len() as u64,
+        }
+    }
+}
+
+/// A routed message.
+#[derive(Debug)]
+pub struct Envelope {
+    pub from: NodeId,
+    pub payload: Payload,
+}
+
+/// Central switch: owns one sender per node plus the traffic meters.
+pub struct Fabric {
+    txs: Vec<Sender<Envelope>>,
+    traffic: Arc<TrafficCounters>,
+    n_workers: usize,
+    /// Optional per-hop latency injected on every send.
+    link_delay: Option<Duration>,
+}
+
+/// Receive side handed to a node thread.
+pub struct Endpoint {
+    pub id: NodeId,
+    rx: Receiver<Envelope>,
+}
+
+impl Fabric {
+    /// Build a fabric for `n_workers` workers (+ master + two sources).
+    /// Returns the fabric and one endpoint per node, indexed by node id.
+    pub fn new(n_workers: usize, link_delay: Option<Duration>) -> (Arc<Fabric>, Vec<Endpoint>) {
+        let n_nodes = n_workers + 3;
+        let mut txs = Vec::with_capacity(n_nodes);
+        let mut endpoints = Vec::with_capacity(n_nodes);
+        for id in 0..n_nodes {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            endpoints.push(Endpoint { id, rx });
+        }
+        let fabric = Arc::new(Fabric {
+            txs,
+            traffic: TrafficCounters::shared(),
+            n_workers,
+            link_delay,
+        });
+        (fabric, endpoints)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    pub fn master_id(&self) -> NodeId {
+        self.n_workers
+    }
+
+    pub fn source_a_id(&self) -> NodeId {
+        self.n_workers + 1
+    }
+
+    pub fn source_b_id(&self) -> NodeId {
+        self.n_workers + 2
+    }
+
+    pub fn role(&self, id: NodeId) -> Role {
+        if id < self.n_workers {
+            Role::Worker(id)
+        } else if id == self.master_id() {
+            Role::Master
+        } else if id == self.source_a_id() {
+            Role::SourceA
+        } else {
+            Role::SourceB
+        }
+    }
+
+    /// Send `payload` from `from` to `to`, metering by edge class.
+    ///
+    /// Returns an error when the destination endpoint has been dropped
+    /// (e.g. a straggler master that already finished Phase 3 — senders may
+    /// legitimately race with teardown, so callers usually ignore it).
+    pub fn send(&self, from: NodeId, to: NodeId, payload: Payload) -> Result<(), ()> {
+        use std::sync::atomic::Ordering::Relaxed;
+        if let Some(d) = self.link_delay {
+            std::thread::sleep(d);
+        }
+        let scalars = payload.scalars();
+        match (self.role(from), self.role(to)) {
+            (Role::SourceA | Role::SourceB, Role::Worker(_)) => {
+                self.traffic.source_to_worker.fetch_add(scalars, Relaxed);
+            }
+            (Role::Worker(_), Role::Worker(_)) => {
+                self.traffic.worker_to_worker.fetch_add(scalars, Relaxed);
+            }
+            (Role::Worker(_), Role::Master) => {
+                self.traffic.worker_to_master.fetch_add(scalars, Relaxed);
+            }
+            (f, t) => panic!("illegal link {f:?} -> {t:?} in CMPC topology"),
+        }
+        self.traffic.messages.fetch_add(1, Relaxed);
+        self.txs[to].send(Envelope { from, payload }).map_err(|_| ())
+    }
+
+    /// Traffic snapshot (scalars per edge class).
+    pub fn traffic(&self) -> crate::metrics::TrafficReport {
+        self.traffic.snapshot()
+    }
+}
+
+impl Endpoint {
+    /// Block for the next message.
+    pub fn recv(&self) -> Result<Envelope, ()> {
+        self.rx.recv().map_err(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_id_layout() {
+        let (fabric, endpoints) = Fabric::new(4, None);
+        assert_eq!(endpoints.len(), 7);
+        assert_eq!(fabric.role(0), Role::Worker(0));
+        assert_eq!(fabric.role(3), Role::Worker(3));
+        assert_eq!(fabric.role(4), Role::Master);
+        assert_eq!(fabric.role(5), Role::SourceA);
+        assert_eq!(fabric.role(6), Role::SourceB);
+    }
+
+    #[test]
+    fn traffic_metered_by_class() {
+        let (fabric, endpoints) = Fabric::new(2, None);
+        let m = FpMat::zeros(2, 3); // 6 scalars
+        fabric
+            .send(
+                fabric.source_a_id(),
+                0,
+                Payload::Shares {
+                    fa: m.clone(),
+                    fb: m.clone(),
+                },
+            )
+            .unwrap();
+        fabric.send(0, 1, Payload::GShare(m.clone())).unwrap();
+        fabric
+            .send(1, fabric.master_id(), Payload::IShare(m.clone()))
+            .unwrap();
+        let t = fabric.traffic();
+        assert_eq!(t.source_to_worker, 12);
+        assert_eq!(t.worker_to_worker, 6);
+        assert_eq!(t.worker_to_master, 6);
+        assert_eq!(t.messages, 3);
+        // endpoints received
+        assert!(endpoints[0].recv().is_ok());
+        assert!(endpoints[1].recv().is_ok());
+        assert!(endpoints[2].recv().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal link")]
+    fn master_cannot_message_workers() {
+        let (fabric, _eps) = Fabric::new(2, None);
+        let _ = fabric.send(fabric.master_id(), 0, Payload::GShare(FpMat::zeros(1, 1)));
+    }
+
+    #[test]
+    fn send_to_dropped_endpoint_errors() {
+        let (fabric, mut endpoints) = Fabric::new(1, None);
+        endpoints.remove(0); // drop worker 0's receiver
+        let r = fabric.send(
+            fabric.source_a_id(),
+            0,
+            Payload::Shares {
+                fa: FpMat::zeros(1, 1),
+                fb: FpMat::zeros(1, 1),
+            },
+        );
+        assert!(r.is_err());
+    }
+}

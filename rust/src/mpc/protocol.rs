@@ -1,0 +1,371 @@
+//! End-to-end orchestration of one CMPC job (Algorithm 3).
+//!
+//! [`run_protocol`] wires the whole thing together: setup (α assignment and
+//! the generalized-Vandermonde solve for the `rₙ^{(i,l)}` coefficients),
+//! Phase 1 source sharing, `N` Phase-2 worker threads over the network
+//! fabric, and Phase-3 master reconstruction — then verifies `Y = AᵀB`
+//! natively when asked.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::codes::CmpcScheme;
+use crate::matrix::FpMat;
+use crate::metrics::{PhaseTimings, TrafficReport, WorkerCounters};
+use crate::mpc::network::{Fabric, Payload};
+use crate::mpc::{master, source, worker};
+use crate::poly::interp::choose_alphas;
+use crate::runtime::{BackendChoice, BackendFactory};
+use crate::util::rng::ChaChaRng;
+
+/// Knobs for one protocol run.
+#[derive(Clone, Debug)]
+pub struct ProtocolConfig {
+    pub backend: BackendChoice,
+    /// Seed for all secret randomness (sources and worker masks derive
+    /// independent ChaCha streams from it).
+    pub seed: u64,
+    /// Check `Y == AᵀB` natively before returning.
+    pub verify: bool,
+    /// Per-worker injected compute delay (straggler model); empty = none.
+    pub worker_delays: Vec<Duration>,
+    /// Per-hop link latency.
+    pub link_delay: Option<Duration>,
+}
+
+impl Default for ProtocolConfig {
+    fn default() -> ProtocolConfig {
+        ProtocolConfig {
+            backend: BackendChoice::Native,
+            seed: 0xC0DE,
+            verify: true,
+            worker_delays: Vec::new(),
+            link_delay: None,
+        }
+    }
+}
+
+/// Everything a run reports back.
+pub struct ProtocolOutput {
+    pub y: FpMat,
+    pub scheme_name: String,
+    pub n_workers: usize,
+    pub stragglers_tolerated: usize,
+    pub timings: PhaseTimings,
+    pub traffic: TrafficReport,
+    /// Per-worker overhead counters (index = worker id).
+    pub worker_counters: Vec<Arc<WorkerCounters>>,
+    pub verified: bool,
+}
+
+/// Precomputed per-deployment state reusable across jobs with the same
+/// scheme and shape (the coordinator caches this — the O(N³) solve dominates
+/// setup).
+pub struct Setup {
+    pub alphas: Arc<Vec<u64>>,
+    /// `r_coeffs[n][i + t·l]` = worker n's combination coefficient for the
+    /// important power (i,l) — eq. (18).
+    pub r_coeffs: Arc<Vec<Vec<u64>>>,
+    pub n_workers: usize,
+}
+
+/// Build the α assignment and reconstruction coefficients for a scheme.
+pub fn prepare_setup(scheme: &dyn CmpcScheme) -> Setup {
+    let p = scheme.params();
+    let n = scheme.n_workers();
+    let support = scheme.reconstruction_support();
+    let (alphas, inv_rows) = choose_alphas(n, &support);
+    // Worker n needs r_n^{(i,l)} = inv_rows[row_of(imp(i,l))][n].
+    let mut r_coeffs = vec![vec![0u64; p.t * p.t]; n];
+    for i in 0..p.t {
+        for l in 0..p.t {
+            let e = scheme.important_power(i, l);
+            let row = support
+                .binary_search(&e)
+                .expect("important power missing from reconstruction support");
+            for (wn, coeffs) in r_coeffs.iter_mut().enumerate() {
+                coeffs[i + p.t * l] = inv_rows[row][wn];
+            }
+        }
+    }
+    Setup {
+        alphas: Arc::new(alphas),
+        r_coeffs: Arc::new(r_coeffs),
+        n_workers: n,
+    }
+}
+
+/// Run one full CMPC multiplication under `scheme`.
+pub fn run_protocol(
+    scheme: &dyn CmpcScheme,
+    a: &FpMat,
+    b: &FpMat,
+    config: &ProtocolConfig,
+) -> anyhow::Result<ProtocolOutput> {
+    let setup = prepare_setup(scheme);
+    run_protocol_with_setup(scheme, &setup, a, b, config)
+}
+
+/// Run one job against a prepared (possibly cached) [`Setup`], constructing
+/// a fresh backend factory. Callers issuing many jobs should build the
+/// factory once (PJRT client creation + artifact compilation are expensive)
+/// and use [`run_protocol_with_factory`].
+pub fn run_protocol_with_setup(
+    scheme: &dyn CmpcScheme,
+    setup: &Setup,
+    a: &FpMat,
+    b: &FpMat,
+    config: &ProtocolConfig,
+) -> anyhow::Result<ProtocolOutput> {
+    let factory = BackendFactory::new(&config.backend)?;
+    run_protocol_with_factory(scheme, setup, a, b, config, &factory)
+}
+
+/// Run one job with an existing backend factory (shared PJRT service and
+/// executable cache across jobs — the steady-state serving path).
+pub fn run_protocol_with_factory(
+    scheme: &dyn CmpcScheme,
+    setup: &Setup,
+    a: &FpMat,
+    b: &FpMat,
+    config: &ProtocolConfig,
+    backend_factory: &BackendFactory,
+) -> anyhow::Result<ProtocolOutput> {
+    let p = scheme.params();
+    let m = a.rows;
+    anyhow::ensure!(
+        a.rows == a.cols && b.rows == b.cols && a.rows == b.rows,
+        "inputs must be square matrices of equal size (got {}x{} and {}x{})",
+        a.rows,
+        a.cols,
+        b.rows,
+        b.cols
+    );
+    anyhow::ensure!(
+        m % p.s == 0 && m % p.t == 0,
+        "partition (s={}, t={}) must divide m={m}",
+        p.s,
+        p.t
+    );
+    let t_setup = Instant::now();
+    let n = setup.n_workers;
+    let mut job_rng = ChaChaRng::seed_from_u64(config.seed);
+    let mut rng_src_a = job_rng.fork();
+    let mut rng_src_b = job_rng.fork();
+    let worker_rngs: Vec<ChaChaRng> = (0..n).map(|_| job_rng.fork()).collect();
+
+    let (fabric, mut endpoints) = Fabric::new(n, config.link_delay);
+    let counters: Vec<Arc<WorkerCounters>> =
+        (0..n).map(|_| Arc::new(WorkerCounters::default())).collect();
+    let setup_time = t_setup.elapsed();
+
+    // --- spawn workers ---
+    let mut worker_endpoints: Vec<_> = endpoints.drain(0..n).collect();
+    let master_endpoint = endpoints.remove(0);
+    let mut handles = Vec::with_capacity(n);
+    for (wid, rng) in worker_rngs.into_iter().enumerate() {
+        let ctx = worker::WorkerCtx {
+            id: wid,
+            n_workers: n,
+            t: p.t,
+            z: p.z,
+            alphas: setup.alphas.clone(),
+            r_coeffs: setup.r_coeffs.clone(),
+            rng,
+            counters: counters[wid].clone(),
+            delay: config
+                .worker_delays
+                .get(wid)
+                .copied()
+                .unwrap_or(Duration::ZERO),
+        };
+        let endpoint = worker_endpoints.remove(0);
+        let fabric = fabric.clone();
+        let backend = backend_factory.make();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("cmpc-worker-{wid}"))
+                .spawn(move || worker::run_worker(ctx, endpoint, fabric, backend))
+                .expect("spawn worker"),
+        );
+    }
+
+    // --- Phase 1: sources share ---
+    let t1 = Instant::now();
+    let fa_poly = source::build_f_a(scheme, a, &mut rng_src_a);
+    let fb_poly = source::build_f_b(scheme, b, &mut rng_src_b);
+    for wid in 0..n {
+        let alpha = setup.alphas[wid];
+        let payload = Payload::Shares {
+            fa: fa_poly.eval(alpha),
+            fb: fb_poly.eval(alpha),
+        };
+        // Source A evaluates F_A, source B evaluates F_B; one combined
+        // envelope per worker keeps the fabric simple — traffic is metered
+        // identically (both legs are source→worker).
+        fabric
+            .send(fabric.source_a_id(), wid, payload)
+            .map_err(|_| anyhow::anyhow!("worker {wid} unreachable in phase 1"))?;
+    }
+    let phase1 = t1.elapsed();
+
+    // --- Phase 2/3 run concurrently; wait for the master ---
+    let t2 = Instant::now();
+    let m_out = master::run_master(&master_endpoint, &setup.alphas, n, p.t, p.z)?;
+    let reconstruct_done = t2.elapsed();
+    // Workers finish their sends after reconstruction; join them for clean
+    // counter totals. Their tail time counts toward phase 2.
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+    }
+    let all_done = t2.elapsed();
+
+    let verified = if config.verify {
+        m_out.y == a.transpose().matmul(b)
+    } else {
+        false
+    };
+    if config.verify {
+        anyhow::ensure!(
+            verified,
+            "reconstruction mismatch: Y != AᵀB under {}",
+            scheme.name()
+        );
+    }
+
+    Ok(ProtocolOutput {
+        y: m_out.y,
+        scheme_name: scheme.name(),
+        n_workers: n,
+        stragglers_tolerated: m_out.stragglers_tolerated,
+        timings: PhaseTimings {
+            setup: setup_time,
+            phase1_share: phase1,
+            phase2_compute: all_done,
+            phase3_reconstruct: all_done.saturating_sub(reconstruct_done),
+        },
+        traffic: fabric.traffic(),
+        worker_counters: counters,
+        verified,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc};
+    use crate::util::testing::property;
+
+    fn run_scheme(scheme: &dyn CmpcScheme, m: usize, seed: u64) {
+        let mut rng = ChaChaRng::seed_from_u64(seed);
+        let a = FpMat::random(&mut rng, m, m);
+        let b = FpMat::random(&mut rng, m, m);
+        let out = run_protocol(scheme, &a, &b, &ProtocolConfig::default()).unwrap();
+        assert!(out.verified);
+        assert_eq!(out.y, a.transpose().matmul(&b));
+    }
+
+    #[test]
+    fn age_example1_end_to_end() {
+        let scheme = AgeCmpc::with_optimal_lambda(2, 2, 2);
+        assert_eq!(scheme.n_workers(), 17);
+        run_scheme(&scheme, 8, 1);
+    }
+
+    #[test]
+    fn polydot_end_to_end() {
+        run_scheme(&PolyDotCmpc::new(2, 2, 2), 8, 2);
+        run_scheme(&PolyDotCmpc::new(3, 2, 4), 12, 3);
+    }
+
+    #[test]
+    fn entangled_end_to_end() {
+        run_scheme(&EntangledCmpc::new(2, 2, 2), 8, 4);
+    }
+
+    #[test]
+    fn random_schemes_and_shapes_decode() {
+        property("protocol decodes across (s,t,z,m)", 12, |rng| {
+            let s = rng.gen_index(3) + 1;
+            let t = rng.gen_index(3) + 1;
+            let z = rng.gen_index(3) + 1;
+            let m = (s * t) * (rng.gen_index(2) + 1) * 2;
+            let scheme = AgeCmpc::with_optimal_lambda(s, t, z);
+            let a = FpMat::random(rng, m, m);
+            let b = FpMat::random(rng, m, m);
+            let cfg = ProtocolConfig {
+                seed: rng.next_u64(),
+                ..ProtocolConfig::default()
+            };
+            let out = run_protocol(&scheme, &a, &b, &cfg)
+                .map_err(|e| format!("s={s} t={t} z={z} m={m}: {e}"))?;
+            if out.y != a.transpose().matmul(&b) {
+                return Err(format!("wrong product at s={s} t={t} z={z} m={m}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn straggler_tolerance_still_decodes() {
+        // Delay two workers far beyond the rest; the master reconstructs
+        // from the first t²+z arrivals regardless.
+        let scheme = AgeCmpc::with_optimal_lambda(2, 2, 2); // N=17, needs 6
+        let mut delays = vec![Duration::ZERO; 17];
+        delays[0] = Duration::from_millis(150);
+        delays[5] = Duration::from_millis(150);
+        let cfg = ProtocolConfig {
+            worker_delays: delays,
+            ..ProtocolConfig::default()
+        };
+        let mut rng = ChaChaRng::seed_from_u64(77);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        let out = run_protocol(&scheme, &a, &b, &cfg).unwrap();
+        assert!(out.verified);
+        assert_eq!(out.stragglers_tolerated, 17 - 6);
+    }
+
+    #[test]
+    fn traffic_matches_zeta_exactly() {
+        // Measured worker↔worker scalars == ζ = N(N−1)·m²/t² (eq. 34).
+        let scheme = AgeCmpc::with_optimal_lambda(2, 2, 2);
+        let (m, t) = (8usize, 2usize);
+        let mut rng = ChaChaRng::seed_from_u64(13);
+        let a = FpMat::random(&mut rng, m, m);
+        let b = FpMat::random(&mut rng, m, m);
+        let out = run_protocol(&scheme, &a, &b, &ProtocolConfig::default()).unwrap();
+        let n = out.n_workers as u64;
+        let zeta = crate::analysis::communication_overhead(m, t, n) as u64;
+        assert_eq!(out.traffic.worker_to_worker, zeta);
+    }
+
+    #[test]
+    fn worker_counters_match_xi_and_sigma() {
+        // Measured per-worker multiplications == ξ (eq. 32) and stored
+        // scalars == σ (eq. 33) — E10 in DESIGN.md.
+        let (s, t, z, m) = (2usize, 2usize, 2usize, 8usize);
+        let scheme = AgeCmpc::with_optimal_lambda(s, t, z);
+        let mut rng = ChaChaRng::seed_from_u64(21);
+        let a = FpMat::random(&mut rng, m, m);
+        let b = FpMat::random(&mut rng, m, m);
+        let out = run_protocol(&scheme, &a, &b, &ProtocolConfig::default()).unwrap();
+        let n = out.n_workers as u64;
+        let xi = crate::analysis::computation_overhead(m, s, t, z, n) as u64;
+        let sigma = crate::analysis::storage_overhead(m, s, t, z, n) as u64;
+        for (wid, c) in out.worker_counters.iter().enumerate() {
+            assert_eq!(c.mults(), xi, "ξ mismatch at worker {wid}");
+            assert_eq!(c.stored(), sigma, "σ mismatch at worker {wid}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_partition() {
+        let scheme = AgeCmpc::new(3, 2, 1, 0);
+        let mut rng = ChaChaRng::seed_from_u64(2);
+        let a = FpMat::random(&mut rng, 8, 8); // 3 ∤ 8
+        let b = FpMat::random(&mut rng, 8, 8);
+        assert!(run_protocol(&scheme, &a, &b, &ProtocolConfig::default()).is_err());
+    }
+}

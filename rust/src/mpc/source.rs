@@ -1,0 +1,129 @@
+//! Phase 1 — sources build share polynomials and distribute evaluations.
+//!
+//! Source 1 holds `A` and shares `F_A(x) = C_A(x) + S_A(x)`; source 2 holds
+//! `B` and shares `F_B(x)`. Coded coefficients are the `(s,t)`-partition
+//! blocks placed at the scheme's coded powers; secret coefficients are fresh
+//! uniform matrices at the scheme's secret powers. Each worker `n` receives
+//! the pair `(F_A(αₙ), F_B(αₙ))`.
+
+use crate::codes::CmpcScheme;
+use crate::matrix::FpMat;
+use crate::poly::MatPoly;
+use crate::util::rng::ChaChaRng;
+
+/// Build `F_A(x)` from `A` (the polynomial carries blocks of `Aᵀ`).
+///
+/// `A` must be `m×m` with `t|m` and `s|m`.
+pub fn build_f_a(scheme: &dyn CmpcScheme, a: &FpMat, rng: &mut ChaChaRng) -> MatPoly {
+    let p = scheme.params();
+    let at = a.transpose();
+    // (Aᵀ)_{i,j}: t row-parts, s col-parts → blocks of (m/t) × (m/s).
+    let blocks = at.blocks(p.t, p.s);
+    let (br, bc) = (blocks[0][0].rows, blocks[0][0].cols);
+    let mut poly = MatPoly::new(br, bc);
+    for (i, row) in blocks.into_iter().enumerate() {
+        for (j, blk) in row.into_iter().enumerate() {
+            poly.insert(scheme.coded_power_a(i, j), blk);
+        }
+    }
+    for e in scheme.secret_powers_a() {
+        poly.insert(e, FpMat::random(rng, br, bc));
+    }
+    poly
+}
+
+/// Build `F_B(x)` from `B`.
+pub fn build_f_b(scheme: &dyn CmpcScheme, b: &FpMat, rng: &mut ChaChaRng) -> MatPoly {
+    let p = scheme.params();
+    // B_{k,l}: s row-parts, t col-parts → blocks of (m/s) × (m/t).
+    let blocks = b.blocks(p.s, p.t);
+    let (br, bc) = (blocks[0][0].rows, blocks[0][0].cols);
+    let mut poly = MatPoly::new(br, bc);
+    for (k, row) in blocks.into_iter().enumerate() {
+        for (l, blk) in row.into_iter().enumerate() {
+            poly.insert(scheme.coded_power_b(k, l), blk);
+        }
+    }
+    for e in scheme.secret_powers_b() {
+        poly.insert(e, FpMat::random(rng, br, bc));
+    }
+    poly
+}
+
+/// Evaluate a share polynomial at every worker's α.
+pub fn shares(poly: &MatPoly, alphas: &[u64]) -> Vec<FpMat> {
+    alphas.iter().map(|&a| poly.eval(a)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::AgeCmpc;
+    use crate::ff;
+
+    #[test]
+    fn f_a_carries_blocks_at_coded_powers() {
+        let scheme = AgeCmpc::new(2, 2, 2, 2);
+        let mut rng = ChaChaRng::seed_from_u64(1);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let fa = build_f_a(&scheme, &a, &mut rng);
+        let at_blocks = a.transpose().blocks(2, 2);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(
+                    fa.coeff(scheme.coded_power_a(i, j)).unwrap(),
+                    &at_blocks[i][j]
+                );
+            }
+        }
+        assert_eq!(fa.num_terms(), 4 + 2); // st coded + z secret
+    }
+
+    #[test]
+    fn product_of_shares_carries_y_blocks() {
+        // The algebraic heart of the protocol: coefficient of H = F_A·F_B at
+        // the important power (i,l) equals block (i,l) of AᵀB.
+        let scheme = AgeCmpc::new(2, 3, 2, 1);
+        let mut rng = ChaChaRng::seed_from_u64(5);
+        let m = 6;
+        let a = FpMat::random(&mut rng, m, m);
+        let b = FpMat::random(&mut rng, m, m);
+        let fa = build_f_a(&scheme, &a, &mut rng);
+        let fb = build_f_b(&scheme, &b, &mut rng);
+        let h = fa.mul_poly(&fb);
+        let y = a.transpose().matmul(&b);
+        let y_blocks = y.blocks(3, 3);
+        for i in 0..3 {
+            for l in 0..3 {
+                assert_eq!(
+                    h.coeff(scheme.important_power(i, l)).unwrap(),
+                    &y_blocks[i][l],
+                    "block ({i},{l})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn share_evaluation_is_consistent() {
+        let scheme = AgeCmpc::new(2, 2, 1, 0);
+        let mut rng = ChaChaRng::seed_from_u64(9);
+        let a = FpMat::random(&mut rng, 4, 4);
+        let fa = build_f_a(&scheme, &a, &mut rng);
+        let alphas = vec![3, 7, 11];
+        let sh = shares(&fa, &alphas);
+        assert_eq!(sh.len(), 3);
+        // F(α) = Σ coeff·α^e — spot check one entry against direct sum.
+        let (r, c) = (0, 1);
+        for (&alpha, share) in alphas.iter().zip(&sh) {
+            let mut want = 0u64;
+            for e in fa.support() {
+                want = ff::add(
+                    want,
+                    ff::mul(fa.coeff(e).unwrap().at(r, c), ff::pow(alpha, e)),
+                );
+            }
+            assert_eq!(share.at(r, c), want);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Phase 2 — worker computation and inter-worker exchange (eq. 17–20).
+//!
+//! Worker `n`:
+//! 1. receives its shares `(F_A(αₙ), F_B(αₙ))`,
+//! 2. computes `H(αₙ) = F_A(αₙ)·F_B(αₙ)` on the configured backend,
+//! 3. forms `Gₙ(x) = Σ_{i,l} rₙ^{(i,l)} H(αₙ) x^{i+t·l} + Σ_w R_w x^{t²+w}`
+//!    with `z` fresh uniform mask matrices `R_w`,
+//! 4. sends `Gₙ(αₙ')` to every peer `n'` and accumulates received shares
+//!    into `I(αₙ) = Σₙ' Gₙ'(αₙ)`,
+//! 5. sends `I(αₙ)` to the master.
+//!
+//! Overhead counters are incremented exactly where the proofs of
+//! Corollaries 10–11 place them, so integration tests can assert
+//! `measured == ξ, σ` per worker.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::ff;
+use crate::matrix::FpMat;
+use crate::metrics::WorkerCounters;
+use crate::mpc::network::{Endpoint, Fabric, Payload};
+use crate::runtime::MatmulBackend;
+use crate::util::rng::ChaChaRng;
+
+/// Everything worker `n` needs before its thread starts.
+pub struct WorkerCtx {
+    pub id: usize,
+    pub n_workers: usize,
+    pub t: usize,
+    pub z: usize,
+    /// Public evaluation points α₁..α_N (index = worker id).
+    pub alphas: Arc<Vec<u64>>,
+    /// This worker's reconstruction coefficients `rₙ^{(i,l)}`, indexed
+    /// `i + t·l` (distributed by the coordinator; eq. 18).
+    pub r_coeffs: Arc<Vec<Vec<u64>>>,
+    /// Secret stream for the `R_w` masks.
+    pub rng: ChaChaRng,
+    pub counters: Arc<WorkerCounters>,
+    /// Injected compute delay (straggler model).
+    pub delay: Duration,
+}
+
+/// Run the Phase-2 worker loop to completion.
+pub fn run_worker(
+    mut ctx: WorkerCtx,
+    endpoint: Endpoint,
+    fabric: Arc<Fabric>,
+    mut backend: Box<dyn MatmulBackend>,
+) -> anyhow::Result<()> {
+    let n = ctx.n_workers;
+    let t2 = ctx.t * ctx.t;
+    // --- receive shares (Phase 1 tail) ---
+    // Peers that got their shares earlier may already be pushing GShares at
+    // us; buffer those until our own shares arrive.
+    let mut early_g: Vec<FpMat> = Vec::new();
+    let (fa, fb) = loop {
+        let env = endpoint
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker {} fabric closed", ctx.id))?;
+        match env.payload {
+            Payload::Shares { fa, fb } => break (fa, fb),
+            Payload::GShare(g) => early_g.push(g),
+            other => anyhow::bail!("worker {}: unexpected {other:?}", ctx.id),
+        }
+    };
+    ctx.counters.add_stored((fa.len() + fb.len()) as u64);
+
+    if !ctx.delay.is_zero() {
+        std::thread::sleep(ctx.delay);
+    }
+
+    // --- H(αₙ) = F_A(αₙ)·F_B(αₙ) ---
+    let h = backend.matmul_mod(&fa, &fb)?;
+    // m³/(st²) scalar multiplications (Corollary 10, term 1).
+    ctx.counters
+        .add_mults((fa.rows * fa.cols * fb.cols) as u64);
+    ctx.counters.add_stored(h.len() as u64);
+
+    // --- rₙ^{(i,l)}·H — t² scaled copies (m² multiplications, term 2) ---
+    let my_r = &ctx.r_coeffs[ctx.id];
+    debug_assert_eq!(my_r.len(), t2);
+    let scaled: Vec<FpMat> = my_r.iter().map(|&r| h.scale(r)).collect();
+    ctx.counters.add_mults((t2 * h.len()) as u64);
+    // the t² Lagrange coefficients are worker-resident state (σ term).
+    ctx.counters.add_stored(t2 as u64);
+
+    // --- z uniform masks R_w ---
+    let masks: Vec<FpMat> = (0..ctx.z)
+        .map(|_| FpMat::random(&mut ctx.rng, h.rows, h.cols))
+        .collect();
+    ctx.counters.add_stored((ctx.z * h.len()) as u64);
+
+    // --- evaluate Gₙ at every peer point and send ---
+    let mut own_g: Option<FpMat> = None;
+    for peer in 0..n {
+        let alpha = ctx.alphas[peer];
+        // G = scaled[0]·α⁰ + Σ_{il>0} scaled[il]·α^{il} + Σ_w R_w·α^{t²+w},
+        // combined in one delayed-reduction pass (§Perf P4).
+        let mut g = FpMat::zeros(h.rows, h.cols);
+        let mut terms: Vec<(u64, &[u32])> = Vec::with_capacity(t2 + ctx.z);
+        let mut ap = 1u64; // α^il incrementally
+        for sc in scaled.iter() {
+            terms.push((ap, &sc.data));
+            ap = ff::mul(ap, alpha);
+        }
+        for mask in masks.iter() {
+            terms.push((ap, &mask.data));
+            ap = ff::mul(ap, alpha);
+        }
+        ff::weighted_sum_into(&mut g.data, &terms);
+        // (t²−1+z)·m²/t² multiplications per peer (Corollary 10, term 3).
+        ctx.counters
+            .add_mults(((t2 - 1 + ctx.z) * h.len()) as u64);
+        // each computed evaluation is worker state before transmission (σ).
+        ctx.counters.add_stored(h.len() as u64);
+        if peer == ctx.id {
+            own_g = Some(g);
+        } else {
+            // Peer may already be done only in failure teardown; surface it.
+            fabric
+                .send(ctx.id, peer, Payload::GShare(g))
+                .map_err(|_| anyhow::anyhow!("worker {}: peer {peer} unreachable", ctx.id))?;
+        }
+    }
+
+    // --- accumulate I(αₙ) = Σ Gₙ'(αₙ) ---
+    let mut i_share = own_g.expect("own G computed");
+    let mut received = 0usize;
+    for g in early_g {
+        ctx.counters.add_stored(g.len() as u64);
+        i_share = i_share.add(&g);
+        received += 1;
+    }
+    while received < n - 1 {
+        let env = endpoint
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker {}: fabric closed mid-exchange", ctx.id))?;
+        match env.payload {
+            Payload::GShare(g) => {
+                ctx.counters.add_stored(g.len() as u64);
+                i_share = i_share.add(&g);
+                received += 1;
+            }
+            other => anyhow::bail!("worker {}: unexpected {other:?}", ctx.id),
+        }
+    }
+    ctx.counters.add_stored(i_share.len() as u64);
+
+    // --- Phase 3 hand-off; the master may already have reconstructed from
+    // t²+z faster peers and hung up, so a send error here is benign. ---
+    let _ = fabric.send(ctx.id, fabric.master_id(), Payload::IShare(i_share));
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! Reconstruction primitives over `GF(p)`.
+//!
+//! * [`lagrange_interpolate`] — dense interpolation used by the master in
+//!   Phase 3: `I(x)` has degree `t²+z−1` and full support, so any `t²+z`
+//!   evaluations reconstruct all coefficients (this is the straggler
+//!   tolerance: the master uses the *first* `t²+z` arrivals).
+//! * [`vandermonde_inverse_rows`] — the generalized-Vandermonde solve that
+//!   yields the `rₙ^{(i,l)}` combination coefficients of eq. (18): `H(x)` has
+//!   sparse support `{e₁..e_N}`, each worker holds `H(αₙ)`, and
+//!   `coeff_{e_j} = Σₙ rows[j][n] · H(αₙ)`.
+
+use crate::ff::{self, P};
+
+/// Interpolate the dense coefficient vector of the unique polynomial of
+/// degree `< points.len()` through `(x_i, y_i)`.
+///
+/// O(k²) Newton-style construction; `k = t²+z` stays small (≤ a few hundred).
+///
+/// # Panics
+/// Panics if evaluation points repeat.
+pub fn lagrange_interpolate(points: &[(u64, u64)]) -> Vec<u64> {
+    let k = points.len();
+    assert!(k > 0);
+    // coeffs of the running interpolant, and of the running nodal polynomial
+    // prod (x - x_i)
+    let mut coeffs = vec![0u64; k];
+    let mut nodal = vec![0u64; k + 1];
+    nodal[0] = 1;
+    let mut nodal_deg = 0usize;
+    for (i, &(xi, yi)) in points.iter().enumerate() {
+        // value of current interpolant at xi
+        let mut acc = 0u64;
+        let mut xp = 1u64;
+        for &c in coeffs.iter().take(i) {
+            acc = ff::add(acc, ff::mul(c, xp));
+            xp = ff::mul(xp, xi);
+        }
+        // value of nodal polynomial at xi
+        let mut nv = 0u64;
+        let mut xp = 1u64;
+        for &c in nodal.iter().take(nodal_deg + 1) {
+            nv = ff::add(nv, ff::mul(c, xp));
+            xp = ff::mul(xp, xi);
+        }
+        assert!(nv != 0, "repeated evaluation point {xi}");
+        let delta = ff::mul(ff::sub(yi, acc), ff::inv(nv));
+        // interpolant += delta * nodal
+        for j in 0..=nodal_deg {
+            coeffs[j] = ff::add(coeffs[j], ff::mul(delta, nodal[j]));
+        }
+        // nodal *= (x - xi)
+        if i + 1 < k {
+            let neg_xi = ff::neg(xi);
+            for j in (0..=nodal_deg).rev() {
+                let v = nodal[j];
+                nodal[j + 1] = ff::add(nodal[j + 1], v);
+                nodal[j] = ff::mul(v, neg_xi);
+            }
+            nodal_deg += 1;
+        }
+    }
+    coeffs
+}
+
+/// Rows of the inverse of the generalized Vandermonde matrix
+/// `M[n][j] = αₙ^{e_j}`.
+///
+/// Returns `rows` with `rows[j][n]` such that for any polynomial
+/// `H(x) = Σ_j c_j x^{e_j}`: `c_j = Σₙ rows[j][n] · H(αₙ)`.
+///
+/// Gaussian elimination over `GF(p)`, O(N³); the coordinator computes this
+/// once per (scheme, α-assignment) and caches it ("known by all workers",
+/// Algorithm 3 line 2).
+///
+/// Unlike the classic Vandermonde (support `0..n`), a *generalized*
+/// Vandermonde over `GF(p)` can be singular for specific α choices even with
+/// distinct nonzero αs (its determinant is a Schur polynomial that may vanish
+/// mod p). Returns `None` in that case — callers re-draw αs
+/// ([`choose_alphas`]).
+///
+/// # Panics
+/// Panics if `alphas.len() != support.len()`.
+pub fn try_vandermonde_inverse_rows(alphas: &[u64], support: &[u64]) -> Option<Vec<Vec<u64>>> {
+    let n = alphas.len();
+    assert_eq!(
+        n,
+        support.len(),
+        "need exactly |support| evaluation points"
+    );
+    // Build [M | I] and reduce. aug[r] has 2n entries.
+    let mut aug: Vec<Vec<u64>> = (0..n)
+        .map(|r| {
+            let mut row: Vec<u64> = support.iter().map(|&e| ff::pow(alphas[r], e)).collect();
+            row.extend((0..n).map(|c| u64::from(c == r)));
+            row
+        })
+        .collect();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n).find(|&r| aug[r][col] != 0)?;
+        aug.swap(col, piv);
+        let inv_p = ff::inv(aug[col][col]);
+        for v in aug[col].iter_mut() {
+            *v = ff::mul(*v, inv_p);
+        }
+        let pivot_row = aug[col].clone();
+        for (r, row) in aug.iter_mut().enumerate() {
+            if r != col && row[col] != 0 {
+                let f = row[col];
+                for (v, &pv) in row.iter_mut().zip(pivot_row.iter()) {
+                    *v = ff::sub(*v, ff::mul(f, pv));
+                }
+            }
+        }
+    }
+    // M^{-1} columns live in the right half; rows[j][n] = (M^{-1})[j][n].
+    Some(
+        (0..n)
+            .map(|j| (0..n).map(|r| aug[j][n + r]).collect())
+            .collect(),
+    )
+}
+
+/// Infallible wrapper for supports known to be safe (dense `0..n` classic
+/// Vandermonde with distinct points is always invertible).
+pub fn vandermonde_inverse_rows(alphas: &[u64], support: &[u64]) -> Vec<Vec<u64>> {
+    try_vandermonde_inverse_rows(alphas, support)
+        .expect("singular Vandermonde — repeated evaluation points?")
+}
+
+/// Choose `n` distinct nonzero evaluation points starting at `1 + offset`.
+/// The protocol only needs distinctness; small consecutive αs keep `αᵉ`
+/// computations cheap, and the offset lets callers re-draw when a sparse
+/// generalized Vandermonde comes out singular.
+pub fn evaluation_points(n: usize, offset: u64) -> Vec<u64> {
+    assert!(
+        (n as u64) + offset < P - 1,
+        "need n+offset < p-1 distinct nonzero points (n={n})"
+    );
+    (1 + offset..=n as u64 + offset).collect()
+}
+
+/// Pick evaluation points and the generalized-Vandermonde inverse for the
+/// given support, re-drawing αs until the matrix inverts. Returns
+/// `(alphas, inverse_rows)`.
+pub fn choose_alphas(n: usize, support: &[u64]) -> (Vec<u64>, Vec<Vec<u64>>) {
+    assert_eq!(n, support.len());
+    for offset in 0..1024u64 {
+        let alphas = evaluation_points(n, offset);
+        if let Some(rows) = try_vandermonde_inverse_rows(&alphas, support) {
+            return (alphas, rows);
+        }
+    }
+    panic!("no invertible α assignment found in 1024 draws (support len {n})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::property;
+
+    fn eval_dense(coeffs: &[u64], x: u64) -> u64 {
+        let mut acc = 0u64;
+        for &c in coeffs.iter().rev() {
+            acc = ff::add(ff::mul(acc, x), c);
+        }
+        acc
+    }
+
+    #[test]
+    fn interpolation_roundtrip() {
+        property("lagrange roundtrip", 200, |rng| {
+            let k = rng.gen_index(12) + 1;
+            let coeffs: Vec<u64> = (0..k).map(|_| rng.field_element()).collect();
+            // distinct points
+            let mut xs: Vec<u64> = (1..=k as u64).collect();
+            rng.shuffle(&mut xs);
+            let pts: Vec<(u64, u64)> = xs.iter().map(|&x| (x, eval_dense(&coeffs, x))).collect();
+            let got = lagrange_interpolate(&pts);
+            if got != coeffs {
+                return Err(format!("k={k}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "repeated evaluation point")]
+    fn repeated_points_rejected() {
+        lagrange_interpolate(&[(1, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn vandermonde_rows_reconstruct_sparse_coeffs() {
+        property("generalized vandermonde", 100, |rng| {
+            let n = rng.gen_index(10) + 1;
+            let mut support: Vec<u64> = Vec::new();
+            let mut next = 0u64;
+            for _ in 0..n {
+                next += rng.gen_range(5) + 1;
+                support.push(next);
+            }
+            let alphas: Vec<u64> = (1..=n as u64).collect();
+            let coeffs: Vec<u64> = (0..n).map(|_| rng.field_element()).collect();
+            let evals: Vec<u64> = alphas
+                .iter()
+                .map(|&a| {
+                    support
+                        .iter()
+                        .zip(&coeffs)
+                        .fold(0u64, |acc, (&e, &c)| ff::add(acc, ff::mul(c, ff::pow(a, e))))
+                })
+                .collect();
+            let rows = vandermonde_inverse_rows(&alphas, &support);
+            for (j, &cj) in coeffs.iter().enumerate() {
+                let got = rows[j]
+                    .iter()
+                    .zip(&evals)
+                    .fold(0u64, |acc, (&r, &h)| ff::add(acc, ff::mul(r, h)));
+                if got != cj {
+                    return Err(format!("coeff {j}: {got} != {cj}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn evaluation_points_distinct_nonzero() {
+        let pts = evaluation_points(100, 0);
+        assert_eq!(pts.len(), 100);
+        let mut sorted = pts.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100);
+        assert!(pts.iter().all(|&p| p != 0));
+    }
+}

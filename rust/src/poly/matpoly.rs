@@ -1,0 +1,172 @@
+//! Sparse polynomials with matrix coefficients — the share-generating
+//! polynomials `F_A(x) = C_A(x) + S_A(x)` of Phase 1.
+//!
+//! A `MatPoly` maps exponents to `FpMat` coefficients. Evaluation at a share
+//! point `αₙ` walks the support once, maintaining an incremental power of
+//! `αₙ` (supports are sorted, so each term costs one field multiplication for
+//! the exponent gap plus one matrix axpy).
+
+use std::collections::BTreeMap;
+
+use crate::ff;
+use crate::matrix::FpMat;
+
+/// Sparse matrix-coefficient polynomial over `GF(p)`.
+#[derive(Clone, Debug)]
+pub struct MatPoly {
+    pub rows: usize,
+    pub cols: usize,
+    terms: BTreeMap<u64, FpMat>,
+}
+
+impl MatPoly {
+    pub fn new(rows: usize, cols: usize) -> MatPoly {
+        MatPoly {
+            rows,
+            cols,
+            terms: BTreeMap::new(),
+        }
+    }
+
+    /// Insert a coefficient; panics on duplicate exponent or shape mismatch
+    /// (the constructions guarantee one block per power — a duplicate means a
+    /// construction bug, and silently adding would mask it).
+    pub fn insert(&mut self, power: u64, coeff: FpMat) {
+        assert_eq!(
+            (coeff.rows, coeff.cols),
+            (self.rows, self.cols),
+            "coefficient shape mismatch at power {power}"
+        );
+        let prev = self.terms.insert(power, coeff);
+        assert!(prev.is_none(), "duplicate coefficient at power {power}");
+    }
+
+    pub fn coeff(&self, power: u64) -> Option<&FpMat> {
+        self.terms.get(&power)
+    }
+
+    /// Sorted support `P(F)`.
+    pub fn support(&self) -> Vec<u64> {
+        self.terms.keys().copied().collect()
+    }
+
+    pub fn num_terms(&self) -> usize {
+        self.terms.len()
+    }
+
+    pub fn degree(&self) -> u64 {
+        self.terms.keys().next_back().copied().unwrap_or(0)
+    }
+
+    /// Evaluate at `x = alpha`: `Σ coeffₑ · αᵉ`.
+    ///
+    /// Scalar powers track the sorted support incrementally (one `pow` per
+    /// exponent gap); the matrix combination runs through the
+    /// delayed-reduction [`ff::weighted_sum_into`] kernel (§Perf P4).
+    pub fn eval(&self, alpha: u64) -> FpMat {
+        let mut out = FpMat::zeros(self.rows, self.cols);
+        let mut cur_pow = 0u64; // exponent tracked so far
+        let mut cur_val = 1u64; // alpha^cur_pow
+        let mut terms: Vec<(u64, &[u32])> = Vec::with_capacity(self.terms.len());
+        for (&e, coeff) in &self.terms {
+            cur_val = ff::mul(cur_val, ff::pow(alpha, e - cur_pow));
+            cur_pow = e;
+            terms.push((cur_val, &coeff.data));
+        }
+        ff::weighted_sum_into(&mut out.data, &terms);
+        out
+    }
+
+    /// Polynomial product (used only by tests/small analyses — the protocol
+    /// never multiplies matrix polynomials directly; workers multiply
+    /// *evaluations*).
+    pub fn mul_poly(&self, other: &MatPoly) -> MatPoly {
+        assert_eq!(self.cols, other.rows);
+        let mut out = MatPoly::new(self.rows, other.cols);
+        for (&ea, ca) in &self.terms {
+            for (&eb, cb) in &other.terms {
+                let prod = ca.matmul(cb);
+                let e = ea + eb;
+                match out.terms.get_mut(&e) {
+                    Some(acc) => *acc = acc.add(&prod),
+                    None => {
+                        out.terms.insert(e, prod);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::P;
+    use crate::util::rng::ChaChaRng;
+    use crate::util::testing::property;
+
+    #[test]
+    fn eval_matches_naive() {
+        property("matpoly eval == naive", 100, |rng| {
+            let rows = rng.gen_index(4) + 1;
+            let cols = rng.gen_index(4) + 1;
+            let mut poly = MatPoly::new(rows, cols);
+            let nterms = rng.gen_index(8) + 1;
+            let mut powers: Vec<u64> = (0..nterms).map(|_| rng.gen_range(50)).collect();
+            powers.sort_unstable();
+            powers.dedup();
+            for &e in &powers {
+                poly.insert(e, FpMat::random(rng, rows, cols));
+            }
+            let alpha = rng.gen_range(P - 1) + 1;
+            let fast = poly.eval(alpha);
+            // naive
+            let mut naive = FpMat::zeros(rows, cols);
+            for &e in &powers {
+                naive.axpy_inplace(ff::pow(alpha, e), poly.coeff(e).unwrap());
+            }
+            if fast != naive {
+                return Err(format!("powers={powers:?} alpha={alpha}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn eval_at_zero_is_constant_term() {
+        let mut rng = ChaChaRng::seed_from_u64(4);
+        let mut poly = MatPoly::new(2, 2);
+        let c0 = FpMat::random(&mut rng, 2, 2);
+        poly.insert(0, c0.clone());
+        poly.insert(3, FpMat::random(&mut rng, 2, 2));
+        assert_eq!(poly.eval(0), c0);
+    }
+
+    #[test]
+    fn product_evaluation_homomorphism() {
+        // (F · G)(α) == F(α) · G(α) — the identity Phase 2 relies on.
+        property("product evaluation homomorphism", 50, |rng| {
+            let (r, k, c) = (2usize, 3usize, 2usize);
+            let mut f = MatPoly::new(r, k);
+            let mut g = MatPoly::new(k, c);
+            for e in 0..3u64 {
+                f.insert(e * 2, FpMat::random(rng, r, k));
+                g.insert(e * 3, FpMat::random(rng, k, c));
+            }
+            let alpha = rng.gen_range(P - 1) + 1;
+            if f.mul_poly(&g).eval(alpha) != f.eval(alpha).matmul(&g.eval(alpha)) {
+                return Err(format!("alpha={alpha}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate coefficient")]
+    fn duplicate_power_rejected() {
+        let mut poly = MatPoly::new(1, 1);
+        poly.insert(2, FpMat::zeros(1, 1));
+        poly.insert(2, FpMat::zeros(1, 1));
+    }
+}

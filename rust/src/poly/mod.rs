@@ -1,0 +1,22 @@
+//! Polynomial machinery: power-set algebra, sparse matrix-coefficient
+//! polynomials, Lagrange interpolation and generalized-Vandermonde solves
+//! over `GF(p)`.
+//!
+//! The CMPC constructions are defined entirely by *which powers of `x`* carry
+//! coded blocks, secret blocks, and garbage cross terms; [`powers`] provides
+//! the set algebra of eq. (1)–(3) (`P(f)`, sumsets `A+B`). [`MatPoly`] is the
+//! share-generating polynomial `F(x) = C(x) + S(x)` with matrix coefficients,
+//! and [`interp`] provides the two reconstruction primitives:
+//!
+//! * dense Lagrange interpolation for Phase 3 (`I(x)` has full support
+//!   `0..t²+z`), and
+//! * the generalized Vandermonde solve producing the `rₙ^{(i,l)}`
+//!   coefficients of eq. (18) from the sparse support of `H(x)`.
+
+pub mod interp;
+pub mod matpoly;
+pub mod powers;
+
+pub use interp::{lagrange_interpolate, vandermonde_inverse_rows};
+pub use matpoly::MatPoly;
+pub use powers::{max_power, sumset, sumset_size, PowerSet};

@@ -1,0 +1,293 @@
+//! Power-set algebra for polynomial supports (eq. 1–3 of the paper).
+//!
+//! `P(f)` — the set of exponents with nonzero coefficients — is represented as
+//! a sorted `Vec<u64>`. Sumsets `A + B = {a + b}` are the workhorse of the
+//! worker-count analysis: eq. (23) says the required number of workers equals
+//! `|(P(C_A) ∪ P(S_A)) + (P(C_B) ∪ P(S_B))|`. For the sweep sizes in Fig. 2
+//! the bitset implementation below computes a sumset in ~|A|·(max/64) word
+//! operations.
+
+/// A polynomial support: strictly increasing exponents.
+pub type PowerSet = Vec<u64>;
+
+/// Largest element, or None for an empty set.
+pub fn max_power(a: &PowerSet) -> Option<u64> {
+    a.last().copied()
+}
+
+/// Sorted union of two supports.
+pub fn union(a: &PowerSet, b: &PowerSet) -> PowerSet {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+/// Fixed-capacity bitset over `0..len`.
+pub struct BitSet {
+    words: Vec<u64>,
+    len: u64,
+}
+
+impl BitSet {
+    pub fn new(len: u64) -> BitSet {
+        BitSet {
+            words: vec![0; (len as usize + 63) / 64],
+            len,
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: u64) {
+        debug_assert!(i < self.len);
+        self.words[(i / 64) as usize] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn contains(&self, i: u64) -> bool {
+        i < self.len && self.words[(i / 64) as usize] & (1u64 << (i % 64)) != 0
+    }
+
+    pub fn count(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// `self |= other << shift` — the inner step of the sumset kernel.
+    pub fn or_shifted(&mut self, other: &BitSet, shift: u64) {
+        let word_shift = (shift / 64) as usize;
+        let bit_shift = shift % 64;
+        let n = self.words.len();
+        if bit_shift == 0 {
+            for (i, &w) in other.words.iter().enumerate() {
+                let d = i + word_shift;
+                if d < n {
+                    self.words[d] |= w;
+                }
+            }
+        } else {
+            for (i, &w) in other.words.iter().enumerate() {
+                let d = i + word_shift;
+                if d < n {
+                    self.words[d] |= w << bit_shift;
+                }
+                if d + 1 < n {
+                    self.words[d + 1] |= w >> (64 - bit_shift);
+                }
+            }
+        }
+    }
+
+    /// Iterate set bits in increasing order.
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let b = bits.trailing_zeros() as u64;
+                    bits &= bits - 1;
+                    Some(wi as u64 * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+/// Sumset `A + B` as a sorted vector.
+pub fn sumset(a: &PowerSet, b: &PowerSet) -> PowerSet {
+    sumset_bits(a, b).iter().collect()
+}
+
+/// `|A + B|` — the worker-count kernel of eq. (23).
+pub fn sumset_size(a: &PowerSet, b: &PowerSet) -> u64 {
+    sumset_bits(a, b).count()
+}
+
+fn sumset_bits(a: &PowerSet, b: &PowerSet) -> BitSet {
+    let (amax, bmax) = match (max_power(a), max_power(b)) {
+        (Some(x), Some(y)) => (x, y),
+        _ => return BitSet::new(1),
+    };
+    let cap = amax + bmax + 1;
+    let mut bbits = BitSet::new(bmax + 1);
+    for &e in b {
+        bbits.insert(e);
+    }
+    let mut out = BitSet::new(cap);
+    for &e in a {
+        out.or_shifted(&bbits, e);
+    }
+    out
+}
+
+/// The `z` smallest non-negative integers not contained in `forbidden`
+/// (which must be sorted). This is the greedy secret-power selection shared
+/// by Algorithm 1 and Algorithm 2: pick minimal powers whose cross terms
+/// avoid the important powers.
+pub fn smallest_excluding(z: usize, forbidden: &PowerSet) -> PowerSet {
+    let mut out = Vec::with_capacity(z);
+    let mut fi = 0usize;
+    let mut x = 0u64;
+    while out.len() < z {
+        while fi < forbidden.len() && forbidden[fi] < x {
+            fi += 1;
+        }
+        if fi < forbidden.len() && forbidden[fi] == x {
+            fi += 1;
+        } else {
+            out.push(x);
+        }
+        x += 1;
+    }
+    out
+}
+
+/// All non-negative differences `{u - c : u ∈ us, c ∈ cs, u ≥ c}`, sorted and
+/// deduplicated — the "forbidden" set for greedy secret-power selection
+/// (a secret power `e` with `e + c = u` would collide garbage with an
+/// important term).
+pub fn nonneg_differences(us: &PowerSet, cs: &PowerSet) -> PowerSet {
+    let mut out: Vec<u64> = Vec::with_capacity(us.len() * cs.len());
+    for &u in us {
+        for &c in cs {
+            if u >= c {
+                out.push(u - c);
+            }
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::property;
+    use std::collections::BTreeSet;
+
+    fn naive_sumset(a: &PowerSet, b: &PowerSet) -> PowerSet {
+        let mut s = BTreeSet::new();
+        for &x in a {
+            for &y in b {
+                s.insert(x + y);
+            }
+        }
+        s.into_iter().collect()
+    }
+
+    #[test]
+    fn sumset_matches_naive() {
+        property("sumset == naive", 300, |rng| {
+            let na = rng.gen_index(20) + 1;
+            let nb = rng.gen_index(20) + 1;
+            let mut a: Vec<u64> = (0..na).map(|_| rng.gen_range(200)).collect();
+            let mut b: Vec<u64> = (0..nb).map(|_| rng.gen_range(200)).collect();
+            a.sort_unstable();
+            a.dedup();
+            b.sort_unstable();
+            b.dedup();
+            let fast = sumset(&a, &b);
+            let slow = naive_sumset(&a, &b);
+            if fast != slow {
+                return Err(format!("a={a:?} b={b:?}"));
+            }
+            if sumset_size(&a, &b) != slow.len() as u64 {
+                return Err("size mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn union_matches_btreeset() {
+        property("union == set union", 200, |rng| {
+            let mut a: Vec<u64> = (0..rng.gen_index(15)).map(|_| rng.gen_range(50)).collect();
+            let mut b: Vec<u64> = (0..rng.gen_index(15)).map(|_| rng.gen_range(50)).collect();
+            a.sort_unstable();
+            a.dedup();
+            b.sort_unstable();
+            b.dedup();
+            let expect: Vec<u64> = a
+                .iter()
+                .chain(b.iter())
+                .copied()
+                .collect::<BTreeSet<_>>()
+                .into_iter()
+                .collect();
+            if union(&a, &b) != expect {
+                return Err("union".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn smallest_excluding_greedy() {
+        assert_eq!(smallest_excluding(3, &vec![0, 1, 2]), vec![3, 4, 5]);
+        assert_eq!(smallest_excluding(3, &vec![1, 3]), vec![0, 2, 4]);
+        assert_eq!(smallest_excluding(2, &vec![]), vec![0, 1]);
+        property("smallest_excluding avoids forbidden", 200, |rng| {
+            let mut forbidden: Vec<u64> =
+                (0..rng.gen_index(30)).map(|_| rng.gen_range(40)).collect();
+            forbidden.sort_unstable();
+            forbidden.dedup();
+            let z = rng.gen_index(10) + 1;
+            let got = smallest_excluding(z, &forbidden);
+            if got.len() != z {
+                return Err("wrong count".into());
+            }
+            for &g in &got {
+                if forbidden.binary_search(&g).is_ok() {
+                    return Err(format!("{g} is forbidden"));
+                }
+            }
+            // minimality: everything below max(got) that is not forbidden is in got
+            let maxg = *got.last().unwrap();
+            for x in 0..maxg {
+                if forbidden.binary_search(&x).is_err() && got.binary_search(&x).is_err() {
+                    return Err(format!("{x} skipped"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nonneg_differences_basic() {
+        let us = vec![5, 7];
+        let cs = vec![1, 6];
+        // 5-1=4, 7-1=6, 7-6=1; 5-6 negative dropped
+        assert_eq!(nonneg_differences(&us, &cs), vec![1, 4, 6]);
+    }
+
+    #[test]
+    fn bitset_iter_roundtrip() {
+        let mut bs = BitSet::new(200);
+        for &v in &[0u64, 1, 63, 64, 65, 127, 128, 199] {
+            bs.insert(v);
+        }
+        let got: Vec<u64> = bs.iter().collect();
+        assert_eq!(got, vec![0, 1, 63, 64, 65, 127, 128, 199]);
+        assert_eq!(bs.count(), 8);
+    }
+}

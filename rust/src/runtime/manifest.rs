@@ -1,0 +1,113 @@
+//! Artifact manifest: maps compiled HLO graphs to the shapes they serve.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` with one record
+//! per lowered executable:
+//!
+//! ```text
+//! # model  M  K  N  path
+//! matmul_mod 128 128 128 matmul_mod_128x128x128.hlo.txt
+//! ```
+//!
+//! A plain line format is used instead of JSON because the offline build has
+//! no serde; the format is versioned by the header comment.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape key for a modular matmul artifact: `(M, K, N)`.
+pub type MatmulShape = (usize, usize, usize);
+
+/// Parsed artifact manifest.
+#[derive(Debug, Default, Clone)]
+pub struct Manifest {
+    /// matmul_mod artifacts by shape.
+    pub matmul: HashMap<MatmulShape, PathBuf>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`; missing file yields an empty manifest
+    /// (every shape falls back to native compute).
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let mut manifest = Manifest::default();
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(manifest),
+            Err(e) => return Err(anyhow::anyhow!("reading {}: {e}", path.display())),
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            match fields.as_slice() {
+                ["matmul_mod", m, k, n, rel] => {
+                    let shape: MatmulShape = (
+                        m.parse().map_err(|e| bad_line(lineno, e))?,
+                        k.parse().map_err(|e| bad_line(lineno, e))?,
+                        n.parse().map_err(|e| bad_line(lineno, e))?,
+                    );
+                    manifest.matmul.insert(shape, dir.join(rel));
+                }
+                _ => {
+                    return Err(anyhow::anyhow!(
+                        "manifest.txt line {}: unrecognized record {line:?}",
+                        lineno + 1
+                    ))
+                }
+            }
+        }
+        Ok(manifest)
+    }
+
+    pub fn matmul_artifact(&self, shape: MatmulShape) -> Option<&PathBuf> {
+        self.matmul.get(&shape)
+    }
+}
+
+fn bad_line(lineno: usize, e: std::num::ParseIntError) -> anyhow::Error {
+    anyhow::anyhow!("manifest.txt line {}: {e}", lineno + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_records_and_comments() {
+        let dir = std::env::temp_dir().join("cmpc_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# model M K N path\nmatmul_mod 128 64 128 a.hlo.txt\n\nmatmul_mod 256 256 256 b.hlo.txt\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.matmul.len(), 2);
+        assert_eq!(
+            m.matmul_artifact((128, 64, 128)).unwrap(),
+            &dir.join("a.hlo.txt")
+        );
+        assert!(m.matmul_artifact((1, 2, 3)).is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_empty() {
+        let dir = std::env::temp_dir().join("cmpc_manifest_none");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::remove_file(dir.join("manifest.txt")).ok();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.matmul.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage_lines() {
+        let dir = std::env::temp_dir().join("cmpc_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "bogus record here\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

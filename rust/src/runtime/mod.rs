@@ -1,0 +1,95 @@
+//! Compute backends for the worker hot path `H(αₙ) = F_A(αₙ)·F_B(αₙ) mod p`.
+//!
+//! Two implementations of [`MatmulBackend`]:
+//!
+//! * [`NativeBackend`] — the cache-blocked Rust matmul from
+//!   [`crate::matrix`]; always available.
+//! * [`pjrt::PjrtBackend`] — executes the AOT-compiled L2 graph
+//!   (`artifacts/*.hlo.txt`, produced once by `make artifacts` from the JAX
+//!   model that calls the L1 Pallas kernel) on the PJRT CPU client via the
+//!   `xla` crate. Artifacts are shape-specialized; requests for shapes
+//!   without an artifact fall back to native and are recorded.
+//!
+//! The PJRT client is not thread-safe to share, so [`pjrt::PjrtService`]
+//! runs it on a dedicated executor thread; workers hold cheap cloneable
+//! [`pjrt::PjrtBackend`] channel handles — the same "accelerator service"
+//! topology a real edge worker with one attached accelerator would use.
+
+pub mod manifest;
+pub mod pjrt;
+
+use crate::matrix::FpMat;
+
+/// A modular-matmul compute engine used by Phase 2 workers.
+pub trait MatmulBackend: Send {
+    fn name(&self) -> &'static str;
+
+    /// `(a · b) mod p`.
+    fn matmul_mod(&mut self, a: &FpMat, b: &FpMat) -> anyhow::Result<FpMat>;
+}
+
+/// Pure-Rust backend (delayed-reduction blocked matmul).
+#[derive(Default, Clone, Copy, Debug)]
+pub struct NativeBackend;
+
+impl MatmulBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn matmul_mod(&mut self, a: &FpMat, b: &FpMat) -> anyhow::Result<FpMat> {
+        Ok(a.matmul(b))
+    }
+}
+
+/// How the protocol should obtain per-worker backends.
+#[derive(Clone, Debug, Default)]
+pub enum BackendChoice {
+    /// Native Rust matmul in every worker.
+    #[default]
+    Native,
+    /// Shared PJRT executor service loaded from an artifact directory
+    /// (falls back to native per shape when no artifact matches).
+    Pjrt {
+        artifacts_dir: std::path::PathBuf,
+    },
+}
+
+/// Factory producing one backend handle per worker thread.
+pub enum BackendFactory {
+    Native,
+    Pjrt(pjrt::PjrtService),
+}
+
+impl BackendFactory {
+    pub fn new(choice: &BackendChoice) -> anyhow::Result<BackendFactory> {
+        Ok(match choice {
+            BackendChoice::Native => BackendFactory::Native,
+            BackendChoice::Pjrt { artifacts_dir } => {
+                BackendFactory::Pjrt(pjrt::PjrtService::start(artifacts_dir.clone())?)
+            }
+        })
+    }
+
+    pub fn make(&self) -> Box<dyn MatmulBackend> {
+        match self {
+            BackendFactory::Native => Box::new(NativeBackend),
+            BackendFactory::Pjrt(svc) => Box::new(svc.handle()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::ChaChaRng;
+
+    #[test]
+    fn native_backend_matches_matrix_matmul() {
+        let mut rng = ChaChaRng::seed_from_u64(1);
+        let a = FpMat::random(&mut rng, 7, 5);
+        let b = FpMat::random(&mut rng, 5, 9);
+        let mut be = NativeBackend;
+        assert_eq!(be.matmul_mod(&a, &b).unwrap(), a.matmul(&b));
+    }
+}

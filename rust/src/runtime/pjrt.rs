@@ -1,0 +1,247 @@
+//! PJRT executor service: loads the AOT-lowered L2 graphs and runs them on
+//! the XLA CPU client.
+//!
+//! Interchange is **HLO text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see `/opt/xla-example/README.md`). The graph was
+//! lowered with `return_tuple=True`, so results unwrap via `to_tuple1`.
+//!
+//! Threading: `xla::PjRtClient` lives entirely on one executor thread;
+//! worker threads talk to it through an mpsc request channel
+//! ([`PjrtBackend`]). Compiled executables are cached per shape for the
+//! lifetime of the service (100 % steady-state hit rate — compilation
+//! happens once per model variant, matching the AOT deployment story).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::ff::P;
+use crate::matrix::FpMat;
+use crate::runtime::manifest::{Manifest, MatmulShape};
+use crate::runtime::MatmulBackend;
+
+enum Request {
+    Matmul {
+        a: FpMat,
+        b: FpMat,
+        reply: Sender<anyhow::Result<FpMat>>,
+    },
+    Shutdown,
+}
+
+/// Execution statistics for the service (observable by tests/benches).
+#[derive(Default, Debug)]
+pub struct PjrtStats {
+    /// Requests served by a compiled PJRT executable.
+    pub pjrt_calls: AtomicU64,
+    /// Requests served by the native fallback (no artifact for the shape).
+    pub native_fallback_calls: AtomicU64,
+    /// Artifact compilations performed (should equal #distinct shapes used).
+    pub compilations: AtomicU64,
+}
+
+/// Handle to the executor pool; cheap to clone into worker threads.
+///
+/// §Perf P2: a single executor thread serializes every worker's Phase-2
+/// matmul (N per job). The service therefore runs a small pool of executor
+/// lanes — each with its own PJRT client and executable cache — and deals
+/// requests round-robin, modelling an edge site with a few shared
+/// accelerator queues.
+pub struct PjrtService {
+    lanes: Vec<Sender<Request>>,
+    next_lane: std::sync::atomic::AtomicUsize,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    stats: Arc<PjrtStats>,
+}
+
+/// Default executor lanes: enough to overlap compute without oversubscribing
+/// the CPU that also hosts the worker threads.
+fn default_lanes() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get() / 2)
+        .unwrap_or(2)
+        .clamp(1, 4)
+}
+
+impl PjrtService {
+    /// Start the executor pool over an artifact directory.
+    pub fn start(artifacts_dir: PathBuf) -> anyhow::Result<PjrtService> {
+        Self::start_with_lanes(artifacts_dir, default_lanes())
+    }
+
+    /// Start with an explicit number of executor lanes.
+    pub fn start_with_lanes(artifacts_dir: PathBuf, lanes: usize) -> anyhow::Result<PjrtService> {
+        assert!(lanes >= 1);
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let stats = Arc::new(PjrtStats::default());
+        let mut txs = Vec::with_capacity(lanes);
+        let mut joins = Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let (tx, rx) = channel::<Request>();
+            let stats2 = stats.clone();
+            let manifest2 = manifest.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-executor-{lane}"))
+                    .spawn(move || executor_main(rx, manifest2, stats2))
+                    .expect("spawn pjrt executor"),
+            );
+            txs.push(tx);
+        }
+        Ok(PjrtService {
+            lanes: txs,
+            next_lane: std::sync::atomic::AtomicUsize::new(0),
+            joins,
+            stats,
+        })
+    }
+
+    /// A backend handle for one worker (pinned to a lane round-robin, so a
+    /// worker's shapes compile in one lane's cache).
+    pub fn handle(&self) -> PjrtBackend {
+        let lane = self.next_lane.fetch_add(1, Ordering::Relaxed) % self.lanes.len();
+        PjrtBackend {
+            tx: self.lanes[lane].clone(),
+        }
+    }
+
+    pub fn stats(&self) -> &PjrtStats {
+        &self.stats
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        for tx in &self.lanes {
+            let _ = tx.send(Request::Shutdown);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Worker-side handle implementing [`MatmulBackend`] via the service.
+pub struct PjrtBackend {
+    tx: Sender<Request>,
+}
+
+impl MatmulBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn matmul_mod(&mut self, a: &FpMat, b: &FpMat) -> anyhow::Result<FpMat> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Matmul {
+                a: a.clone(),
+                b: b.clone(),
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("pjrt executor thread gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("pjrt executor dropped reply"))?
+    }
+}
+
+fn executor_main(rx: Receiver<Request>, manifest: Manifest, stats: Arc<PjrtStats>) {
+    // The client and executable cache never leave this thread.
+    let client = xla::PjRtClient::cpu().expect("create PJRT CPU client");
+    let mut cache: HashMap<MatmulShape, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Matmul { a, b, reply } => {
+                let shape: MatmulShape = (a.rows, a.cols, b.cols);
+                let result = match manifest.matmul_artifact(shape) {
+                    None => {
+                        stats.native_fallback_calls.fetch_add(1, Ordering::Relaxed);
+                        Ok(a.matmul(&b))
+                    }
+                    Some(path) => {
+                        let exe = match cache.entry(shape) {
+                            std::collections::hash_map::Entry::Occupied(e) => Ok(e.into_mut()),
+                            std::collections::hash_map::Entry::Vacant(v) => {
+                                compile_artifact(&client, path).map(|e| {
+                                    stats.compilations.fetch_add(1, Ordering::Relaxed);
+                                    v.insert(e)
+                                })
+                            }
+                        };
+                        exe.and_then(|exe| {
+                            stats.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+                            execute_matmul(exe, &a, &b)
+                        })
+                    }
+                };
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn compile_artifact(
+    client: &xla::PjRtClient,
+    path: &std::path::Path,
+) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+    )
+    .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))
+    }
+
+fn execute_matmul(
+    exe: &xla::PjRtLoadedExecutable,
+    a: &FpMat,
+    b: &FpMat,
+) -> anyhow::Result<FpMat> {
+    let lit_a = to_i64_literal(a)?;
+    let lit_b = to_i64_literal(b)?;
+    let result = exe
+        .execute::<xla::Literal>(&[lit_a, lit_b])
+        .map_err(|e| anyhow::anyhow!("pjrt execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("pjrt fetch: {e:?}"))?;
+    // The L2 graph is lowered with return_tuple=True → 1-tuple.
+    let out = result
+        .to_tuple1()
+        .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+    let values = out
+        .to_vec::<i64>()
+        .map_err(|e| anyhow::anyhow!("to_vec<i64>: {e:?}"))?;
+    anyhow::ensure!(
+        values.len() == a.rows * b.cols,
+        "artifact returned {} values, expected {}",
+        values.len(),
+        a.rows * b.cols
+    );
+    let mut m = FpMat::zeros(a.rows, b.cols);
+    for (dst, &v) in m.data.iter_mut().zip(values.iter()) {
+        anyhow::ensure!(
+            (0..P as i64).contains(&v),
+            "artifact returned out-of-field value {v}"
+        );
+        *dst = v as u32;
+    }
+    Ok(m)
+}
+
+fn to_i64_literal(m: &FpMat) -> anyhow::Result<xla::Literal> {
+    let vals: Vec<i64> = m.data.iter().map(|&v| v as i64).collect();
+    xla::Literal::vec1(&vals)
+        .reshape(&[m.rows as i64, m.cols as i64])
+        .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))
+}

@@ -1,0 +1,99 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the subset the `cmpc` binary and examples need:
+//! `prog subcommand --key value --flag positional`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, `--key value` options, bare `--flag`
+/// switches and positional arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv\[0\]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    /// Parse a raw argv vector. The first non-dashed token becomes the
+    /// subcommand; `--key value` pairs become options unless the value
+    /// starts with `--`, in which case `--key` is a bare flag.
+    pub fn parse(argv: Vec<String>) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default; exits with a usage error on parse failure.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{name} expects a {}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(sv(&["run", "--m", "256", "--verbose", "--s=2", "extra"]));
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("m"), Some("256"));
+        assert_eq!(a.get("s"), Some("2"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(sv(&["x", "--n", "7"]));
+        assert_eq!(a.get_parse("n", 0usize), 7);
+        assert_eq!(a.get_parse("missing", 3usize), 3);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(sv(&["x", "--check"]));
+        assert!(a.flag("check"));
+    }
+}

@@ -1,0 +1,79 @@
+//! Tiny CSV writer used by the figure-regeneration harness to dump the data
+//! series behind each paper figure (`results/fig*.csv`).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file (and parent directories) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            cols: header.len(),
+        })
+    }
+
+    /// Write one data row; panics if the column count mismatches the header.
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.cols,
+            "csv row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        writeln!(self.out, "{}", fields.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Format helper: shorthand to stringify heterogeneous row items.
+#[macro_export]
+macro_rules! csv_row {
+    ($w:expr, $($x:expr),+ $(,)?) => {
+        $w.row(&[$(format!("{}", $x)),+]).expect("csv write")
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("cmpc_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            csv_row!(w, 1, 2.5);
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row has")]
+    fn row_width_checked() {
+        let dir = std::env::temp_dir().join("cmpc_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into()]).unwrap();
+    }
+}

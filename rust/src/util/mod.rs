@@ -1,0 +1,18 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (rand, clap, serde, proptest, criterion) are
+//! unavailable. This module provides the small, well-tested subset the rest
+//! of the library needs:
+//!
+//! * [`rng`] — a ChaCha12-based deterministic CSPRNG (secret coefficients,
+//!   test-case generation).
+//! * [`cli`] — a minimal `--flag value` argv parser for the `cmpc` binary and
+//!   the examples.
+//! * [`testing`] — a seeded randomized property-test driver.
+//! * [`csv`] — tiny CSV/TSV writers for the figure regeneration harness.
+
+pub mod cli;
+pub mod csv;
+pub mod rng;
+pub mod testing;

@@ -1,0 +1,202 @@
+//! Cross-layer integration tests: the Rust protocol engine running over the
+//! AOT-compiled L2/L1 artifacts via PJRT, the coordinator serving path, and
+//! the measured-vs-closed-form overhead identities (E9/E10 in DESIGN.md).
+//!
+//! Tests that need `artifacts/` skip (with a note) when it is absent so
+//! `cargo test` stays green before `make artifacts`; CI and the Makefile
+//! always build artifacts first.
+
+use std::path::PathBuf;
+
+use cmpc::analysis;
+use cmpc::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc};
+use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
+use cmpc::matrix::FpMat;
+use cmpc::mpc::protocol::{run_protocol, ProtocolConfig};
+use cmpc::runtime::pjrt::PjrtService;
+use cmpc::runtime::{BackendChoice, MatmulBackend, NativeBackend};
+use cmpc::util::rng::ChaChaRng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first ({})", dir.display());
+        None
+    }
+}
+
+#[test]
+fn pjrt_matmul_matches_native_on_artifact_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = PjrtService::start(dir).unwrap();
+    let mut pjrt = svc.handle();
+    let mut native = NativeBackend;
+    let mut rng = ChaChaRng::seed_from_u64(42);
+    for (m, k, n) in [(32usize, 32usize, 32usize), (128, 64, 128), (128, 128, 128)] {
+        let a = FpMat::random(&mut rng, m, k);
+        let b = FpMat::random(&mut rng, k, n);
+        let via_pjrt = pjrt.matmul_mod(&a, &b).unwrap();
+        let via_native = native.matmul_mod(&a, &b).unwrap();
+        assert_eq!(via_pjrt, via_native, "shape {m}x{k}x{n}");
+    }
+    let stats = svc.stats();
+    assert_eq!(
+        stats.pjrt_calls.load(std::sync::atomic::Ordering::Relaxed),
+        3,
+        "all three shapes must be served by compiled artifacts"
+    );
+    assert_eq!(
+        stats
+            .native_fallback_calls
+            .load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+}
+
+#[test]
+fn pjrt_executable_cache_compiles_once_per_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = PjrtService::start_with_lanes(dir, 1).unwrap();
+    let mut pjrt = svc.handle();
+    let mut rng = ChaChaRng::seed_from_u64(7);
+    for _ in 0..5 {
+        let a = FpMat::random(&mut rng, 32, 32);
+        let b = FpMat::random(&mut rng, 32, 32);
+        pjrt.matmul_mod(&a, &b).unwrap();
+    }
+    assert_eq!(
+        svc.stats()
+            .compilations
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "steady-state executable cache must hit"
+    );
+}
+
+#[test]
+fn pjrt_unknown_shape_falls_back_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = PjrtService::start(dir).unwrap();
+    let mut pjrt = svc.handle();
+    let mut rng = ChaChaRng::seed_from_u64(9);
+    let a = FpMat::random(&mut rng, 5, 7);
+    let b = FpMat::random(&mut rng, 7, 3);
+    let out = pjrt.matmul_mod(&a, &b).unwrap();
+    assert_eq!(out, a.matmul(&b));
+    assert_eq!(
+        svc.stats()
+            .native_fallback_calls
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+}
+
+#[test]
+fn full_protocol_over_pjrt_backend() {
+    // E9: the three-layer composition — shares generated in Rust, worker
+    // products executed by the AOT HLO (Pallas kernel inside), masks and
+    // reconstruction in Rust — decodes AᵀB exactly.
+    let Some(dir) = artifacts_dir() else { return };
+    let scheme = AgeCmpc::with_optimal_lambda(2, 2, 2);
+    let m = 64; // blocks 32x32 → matmul_mod_32x32x32 artifact
+    let mut rng = ChaChaRng::seed_from_u64(123);
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    let cfg = ProtocolConfig {
+        backend: BackendChoice::Pjrt {
+            artifacts_dir: dir,
+        },
+        ..ProtocolConfig::default()
+    };
+    let out = run_protocol(&scheme, &a, &b, &cfg).unwrap();
+    assert!(out.verified);
+    assert_eq!(out.y, a.transpose().matmul(&b));
+    assert_eq!(out.n_workers, 17);
+}
+
+#[test]
+fn coordinator_serves_mixed_jobs_over_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut coord = Coordinator::new(CoordinatorConfig {
+        policy: SchemePolicy::Adaptive,
+        backend: BackendChoice::Pjrt {
+            artifacts_dir: dir,
+        },
+        ..CoordinatorConfig::default()
+    });
+    let mut rng = ChaChaRng::seed_from_u64(5);
+    let mut inputs = Vec::new();
+    for _ in 0..2 {
+        let a = FpMat::random(&mut rng, 64, 64);
+        let b = FpMat::random(&mut rng, 64, 64);
+        coord.submit(a.clone(), b.clone(), 2, 2, 2);
+        inputs.push((a, b));
+    }
+    // different partition → different deployment in the same batch
+    let a = FpMat::random(&mut rng, 64, 64);
+    let b = FpMat::random(&mut rng, 64, 64);
+    coord.submit(a.clone(), b.clone(), 2, 2, 1);
+    inputs.push((a, b));
+    let reports = coord.run_all().unwrap();
+    assert_eq!(reports.len(), 3);
+    for (r, (a, b)) in reports.iter().zip(&inputs) {
+        assert!(r.verified, "job {}", r.id);
+        assert_eq!(r.y, a.transpose().matmul(b));
+    }
+    assert!(reports[1].setup_cache_hit);
+    assert!(!reports[2].setup_cache_hit);
+}
+
+#[test]
+fn all_constructible_schemes_decode_same_product() {
+    let mut rng = ChaChaRng::seed_from_u64(31);
+    let m = 12;
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    let want = a.transpose().matmul(&b);
+    let schemes: Vec<Box<dyn CmpcScheme>> = vec![
+        Box::new(AgeCmpc::with_optimal_lambda(2, 2, 3)),
+        Box::new(AgeCmpc::new(2, 2, 3, 0)),
+        Box::new(PolyDotCmpc::new(2, 2, 3)),
+        Box::new(EntangledCmpc::new(2, 2, 3)),
+        Box::new(AgeCmpc::with_optimal_lambda(3, 2, 2)),
+        Box::new(PolyDotCmpc::new(3, 2, 2)),
+        Box::new(AgeCmpc::with_optimal_lambda(2, 3, 2)),
+        Box::new(PolyDotCmpc::new(2, 3, 2)),
+    ];
+    for scheme in schemes {
+        let out = run_protocol(scheme.as_ref(), &a, &b, &ProtocolConfig::default())
+            .unwrap_or_else(|e| panic!("{}: {e}", scheme.name()));
+        assert_eq!(out.y, want, "{}", scheme.name());
+    }
+}
+
+#[test]
+fn measured_overheads_track_formulas_across_schemes() {
+    // E10 across schemes and partitions: ξ, σ, ζ hold exactly for every
+    // constructible scheme (Corollaries 10–12 are scheme-independent).
+    let mut rng = ChaChaRng::seed_from_u64(17);
+    for (s, t, z, m) in [(2usize, 2usize, 2usize, 8usize), (3, 2, 1, 12), (2, 3, 2, 12)] {
+        let a = FpMat::random(&mut rng, m, m);
+        let b = FpMat::random(&mut rng, m, m);
+        let schemes: Vec<Box<dyn CmpcScheme>> = vec![
+            Box::new(AgeCmpc::with_optimal_lambda(s, t, z)),
+            Box::new(PolyDotCmpc::new(s, t, z)),
+            Box::new(EntangledCmpc::new(s, t, z)),
+        ];
+        for scheme in schemes {
+            let out = run_protocol(scheme.as_ref(), &a, &b, &ProtocolConfig::default()).unwrap();
+            let n = out.n_workers as u64;
+            let xi = analysis::computation_overhead(m, s, t, z, n) as u64;
+            let sigma = analysis::storage_overhead(m, s, t, z, n) as u64;
+            let zeta = analysis::communication_overhead(m, t, n) as u64;
+            for c in &out.worker_counters {
+                assert_eq!(c.mults(), xi, "{} ξ", scheme.name());
+                assert_eq!(c.stored(), sigma, "{} σ", scheme.name());
+            }
+            assert_eq!(out.traffic.worker_to_worker, zeta, "{} ζ", scheme.name());
+        }
+    }
+}
