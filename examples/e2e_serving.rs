@@ -1,106 +1,158 @@
-//! END-TO-END DRIVER (E9): the full three-layer system serving a stream of
-//! privacy-preserving multiplication jobs.
+//! END-TO-END SERVING DRIVER (E9): the session-based API streaming a batch
+//! of privacy-preserving multiplication jobs through provisioned
+//! deployments.
 //!
-//! * **L3** — Rust coordinator: adaptive scheme selection, cached
-//!   deployments, threaded worker fleet over the metered network fabric.
-//! * **L2/L1** — each worker's `H(αₙ) = F_A(αₙ)·F_B(αₙ) mod p` runs the
-//!   AOT-compiled JAX graph (Pallas modular-matmul kernel inside) on the
-//!   PJRT CPU client — Python is *not* running; artifacts were lowered once
-//!   by `make artifacts`.
+//! Demonstrates the three properties the 0.2 API redesign guarantees:
 //!
-//! Reports per-job latency, aggregate throughput, phase breakdown, measured
-//! vs closed-form communication (ζ), and verifies every product. Falls back
-//! to the native backend (with a warning) if artifacts are missing so the
-//! example always runs. Results are recorded in EXPERIMENTS.md §E9.
+//! 1. **Provision once, execute many** — a [`Deployment`] solves the O(N³)
+//!    generalized-Vandermonde setup exactly once and reuses it for every job
+//!    of the same `(scheme, s, t, z)` signature (confirmed below by the
+//!    deployment's job counter and the coordinator's cache-hit counter).
+//! 2. **Fallible intake** — a malformed job in the batch is rejected with a
+//!    typed [`cmpc::CmpcError`]; the process neither panics nor drops the
+//!    rest of the batch.
+//! 3. **Backend reuse** — the executor service (artifact cache included, when
+//!    `artifacts/` exists) lives for the coordinator's lifetime, not per job.
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_serving`
+//! Run: `cargo run --release --example e2e_serving`
 
 use std::path::PathBuf;
 use std::time::Instant;
 
 use cmpc::analysis::communication_overhead;
+use cmpc::codes::{CmpcScheme, SchemeParams};
 use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
 use cmpc::matrix::FpMat;
+use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::runtime::BackendChoice;
 use cmpc::util::rng::ChaChaRng;
+use cmpc::{Deployment, SchemeSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cmpc::Result<()> {
     let artifacts = PathBuf::from("artifacts");
     let backend = if artifacts.join("manifest.txt").exists() {
-        println!("backend: PJRT (AOT artifacts from {})", artifacts.display());
+        println!("backend: artifact executor (AOT artifacts from {})", artifacts.display());
         BackendChoice::Pjrt {
             artifacts_dir: artifacts,
         }
     } else {
-        eprintln!("WARNING: artifacts/ missing — run `make artifacts`; using native backend");
+        println!("backend: native (run `make artifacts` for the AOT path)");
         BackendChoice::Native
     };
-
-    let mut coord = Coordinator::new(CoordinatorConfig {
-        policy: SchemePolicy::Adaptive,
-        backend,
-        ..CoordinatorConfig::default()
-    });
-
-    // Workload: a burst of jobs at two shapes/privacy levels, mimicking a
-    // small edge site multiplexing tenants.
-    let m = 256;
-    let n_jobs = 8;
+    let m = 128;
     let mut rng = ChaChaRng::seed_from_u64(4242);
-    let mut inputs = Vec::new();
+
+    // ------------------------------------------------------------------
+    // Part 1 — one Deployment, many jobs of the same signature.
+    // ------------------------------------------------------------------
+    let params = SchemeParams::try_new(2, 2, 2)?;
+    let t0 = Instant::now();
+    let deployment = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::builder().backend(backend.clone()).build(),
+    )?;
+    let provision_time = t0.elapsed();
+    println!(
+        "\nprovisioned {} (N={} workers) in {provision_time:?} — Setup solved once",
+        deployment.scheme().name(),
+        deployment.n_workers()
+    );
+
+    let n_jobs = 3;
+    let mut per_job = Vec::new();
     for j in 0..n_jobs {
         let a = FpMat::random(&mut rng, m, m);
         let b = FpMat::random(&mut rng, m, m);
-        // alternate privacy levels: z=2 and z=1 at s=t=2 → 128³ worker blocks
-        let z = 1 + (j % 2);
-        coord.submit(a.clone(), b.clone(), 2, 2, z);
-        inputs.push((a, b));
+        let t1 = Instant::now();
+        let out = deployment.execute(&a, &b)?;
+        per_job.push(t1.elapsed());
+        assert!(out.verified);
+        assert_eq!(out.y, a.transpose().matmul(&b), "job {j}");
+        let zeta = communication_overhead(m, 2, out.n_workers as u64) as u64;
+        assert_eq!(out.traffic.worker_to_worker, zeta, "ζ mismatch job {j}");
     }
+    println!(
+        "executed {} jobs through the cached setup (job counter = {}): {per_job:?}",
+        n_jobs,
+        deployment.jobs_executed()
+    );
+    assert_eq!(deployment.jobs_executed(), n_jobs);
 
-    let t0 = Instant::now();
-    let reports = coord.run_all()?;
-    let wall = t0.elapsed();
+    // ------------------------------------------------------------------
+    // Part 2 — coordinator batch with a malformed job in the middle.
+    // ------------------------------------------------------------------
+    let mut coord = Coordinator::new(
+        CoordinatorConfig::builder()
+            .policy(SchemePolicy::Adaptive)
+            .backend(backend)
+            .build(),
+    );
+    let mut inputs = Vec::new();
+    let mut rejected = 0usize;
+    for j in 0..4 {
+        if j == 2 {
+            // malformed: operand sizes disagree — rejected at intake with a
+            // typed error, the batch keeps going.
+            let bad_a = FpMat::random(&mut rng, m, m);
+            let bad_b = FpMat::random(&mut rng, m / 2, m / 2);
+            match coord.submit(bad_a, bad_b, 2, 2, 2) {
+                Ok(_) => unreachable!("malformed job must be rejected"),
+                Err(e) => {
+                    rejected += 1;
+                    println!("\njob {j} rejected gracefully: {e}");
+                }
+            }
+            continue;
+        }
+        let a = FpMat::random(&mut rng, m, m);
+        let b = FpMat::random(&mut rng, m, m);
+        let handle = coord.submit(a.clone(), b.clone(), 2, 2, 2)?;
+        inputs.push((handle, a, b));
+    }
+    assert_eq!(rejected, 1);
+
+    let t2 = Instant::now();
+    let reports = coord.drain();
+    let wall = t2.elapsed();
 
     println!("\nper-job results (m={m}):");
     println!(
-        "{:>4} {:>18} {:>4} {:>7} {:>12} {:>12} {:>10}",
-        "job", "scheme", "N", "cache", "phase1", "phase2+3", "verified"
+        "{:>4} {:>18} {:>4} {:>7} {:>12} {:>10}",
+        "job", "scheme", "N", "cache", "phase2+3", "verified"
     );
+    let mut cache_hits = 0usize;
     for r in &reports {
+        let out = r.outcome.as_ref().expect("queued jobs all succeed");
+        cache_hits += r.setup_cache_hit as usize;
         println!(
-            "{:>4} {:>18} {:>4} {:>7} {:>12?} {:>12?} {:>10}",
+            "{:>4} {:>18} {:>4} {:>7} {:>12?} {:>10}",
             r.id,
             r.scheme,
             r.n_workers,
             if r.setup_cache_hit { "hit" } else { "miss" },
-            r.timings.phase1_share,
-            r.timings.phase2_compute,
-            r.verified
+            out.timings.phase2_compute,
+            out.verified
         );
     }
-
-    // Verify outputs against plaintext products and ζ against eq. (34).
-    let mut total_scalars = 0u64;
-    for (r, (a, b)) in reports.iter().zip(&inputs) {
-        assert!(r.verified);
-        assert_eq!(r.y, a.transpose().matmul(b), "job {}", r.id);
-        let zeta = communication_overhead(m, 2, r.n_workers as u64) as u64;
-        assert_eq!(r.traffic.worker_to_worker, zeta, "ζ mismatch job {}", r.id);
-        total_scalars += r.traffic.worker_to_worker;
+    for ((handle, a, b), r) in inputs.iter().zip(&reports) {
+        assert_eq!(handle.id(), r.id);
+        let out = r.outcome.as_ref().expect("verified above");
+        assert_eq!(out.y, a.transpose().matmul(b), "job {}", r.id);
     }
+    // 3 accepted jobs share one signature: first provisions, the rest hit.
+    assert_eq!(reports.len(), 3);
+    assert_eq!(cache_hits, 2, "setup cache must serve every repeat job");
+    assert_eq!(coord.provisioned_deployments(), 1);
 
-    let mean_latency = wall / reports.len() as u32;
     println!("\nsummary:");
-    println!("  jobs             : {}", reports.len());
-    println!("  wall time        : {wall:?}");
+    println!("  accepted jobs     : {}", reports.len());
+    println!("  rejected jobs     : {rejected} (typed error, batch unaffected)");
+    println!("  deployments       : {} (cache hits: {cache_hits})", coord.provisioned_deployments());
+    println!("  batch wall time   : {wall:?}");
     println!(
-        "  throughput       : {:.2} jobs/s ({:.1} M field-ops/s effective)",
-        reports.len() as f64 / wall.as_secs_f64(),
-        reports.len() as f64 * (m as f64).powi(3) / 2.0 / wall.as_secs_f64() / 1e6
-    );
-    println!("  mean job latency : {mean_latency:?}");
-    println!(
-        "  worker↔worker    : {total_scalars} scalars, every job exactly ζ = N(N−1)m²/t²"
+        "  throughput        : {:.2} jobs/s",
+        reports.len() as f64 / wall.as_secs_f64()
     );
     println!("  all products verified bit-exact against plaintext AᵀB");
     Ok(())

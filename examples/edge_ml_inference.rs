@@ -16,13 +16,14 @@
 //!
 //! Run: `cargo run --release --example edge_ml_inference`
 
-use cmpc::codes::{AgeCmpc, CmpcScheme};
+use cmpc::codes::{CmpcScheme, SchemeParams};
 use cmpc::ff::P;
 use cmpc::matrix::FpMat;
-use cmpc::mpc::protocol::{run_protocol, ProtocolConfig};
+use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::util::rng::ChaChaRng;
+use cmpc::{Deployment, SchemeSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cmpc::Result<()> {
     let m = 96; // feature dimension == classes == batch (square demo)
     let q = 16u64; // quantization levels
     assert!(m as u64 * (q - 1) * (q - 1) < P, "no field wraparound");
@@ -37,16 +38,22 @@ fn main() -> anyhow::Result<()> {
     let plain_scores = w.transpose().matmul(&x);
     let plain_classes = argmax_cols(&plain_scores);
 
-    // Privacy-preserving inference: Y = WᵀX under AGE-CMPC.
+    // Privacy-preserving inference: Y = WᵀX under AGE-CMPC. The vendor
+    // provisions one deployment and reuses it for every inference batch.
     let (s, t, z) = (4, 2, 3);
-    let scheme = AgeCmpc::with_optimal_lambda(s, t, z);
+    let params = SchemeParams::try_new(s, t, z)?;
+    let deployment = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::default(),
+    )?;
     println!(
-        "AGE-CMPC(λ*={}) inference: {} workers, tolerating {} colluders",
-        scheme.lambda,
-        scheme.n_workers(),
+        "{} inference: {} workers, tolerating {} colluders",
+        deployment.scheme().name(),
+        deployment.n_workers(),
         z
     );
-    let out = run_protocol(&scheme, &w, &x, &ProtocolConfig::default())?;
+    let out = deployment.execute(&w, &x)?;
     let mpc_classes = argmax_cols(&out.y);
 
     let agree = plain_classes

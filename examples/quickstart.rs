@@ -1,4 +1,4 @@
-//! Quickstart: the paper's Example 1 (§V-B), end to end.
+//! Quickstart: the paper's Example 1 (§V-B) through the session-based API.
 //!
 //! Two edge devices hold private 64×64 matrices `A` and `B` over GF(65537).
 //! With `s = t = 2` partitions and `z = 2` colluding workers, AGE-CMPC's
@@ -8,25 +8,44 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use cmpc::codes::{AgeCmpc, CmpcScheme, EntangledCmpc};
+use cmpc::codes::{CmpcScheme, EntangledCmpc, SchemeParams};
 use cmpc::matrix::FpMat;
-use cmpc::mpc::protocol::{run_protocol, ProtocolConfig};
+use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::util::rng::ChaChaRng;
+use cmpc::{Deployment, SchemeSpec};
 
-fn main() -> anyhow::Result<()> {
-    let (s, t, z) = (2, 2, 2);
+fn main() -> cmpc::Result<()> {
+    let params = SchemeParams::try_new(2, 2, 2)?;
     let m = 64;
 
-    // Phase 0 (Algorithm 3): pick the gap λ minimizing the worker count.
-    let scheme = AgeCmpc::with_optimal_lambda(s, t, z);
-    let entangled = EntangledCmpc::new(s, t, z);
+    // Phase 0 (Algorithm 3) happens at provisioning: the λ* scan picks the
+    // gap minimizing the worker count, then the α assignment and the O(N³)
+    // reconstruction solve are cached in the deployment.
+    let deployment = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::default(),
+    )?;
+    let scheme = deployment.scheme();
+    let entangled = EntangledCmpc::try_new(2, 2, 2)?;
     println!("scheme           : {}", scheme.name());
-    println!("workers (AGE)    : {}", scheme.n_workers());
+    println!("workers (AGE)    : {}", deployment.n_workers());
     println!("workers (Entangled baseline): {}", entangled.n_workers());
     println!("share polynomial supports:");
-    println!("  P(C_A) = {:?},  P(S_A) = {:?}", scheme.coded_support_a(), scheme.secret_powers_a());
-    println!("  P(C_B) = {:?},  P(S_B) = {:?}", scheme.coded_support_b(), scheme.secret_powers_b());
-    println!("  Y blocks live at powers {:?} of H(x)", scheme.important_powers());
+    println!(
+        "  P(C_A) = {:?},  P(S_A) = {:?}",
+        scheme.coded_support_a(),
+        scheme.secret_powers_a()
+    );
+    println!(
+        "  P(C_B) = {:?},  P(S_B) = {:?}",
+        scheme.coded_support_b(),
+        scheme.secret_powers_b()
+    );
+    println!(
+        "  Y blocks live at powers {:?} of H(x)",
+        scheme.important_powers()
+    );
 
     // Private inputs.
     let mut rng = ChaChaRng::seed_from_u64(2024);
@@ -34,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     let b = FpMat::random(&mut rng, m, m);
 
     // Full 3-phase protocol over the simulated edge fabric.
-    let out = run_protocol(&scheme, &a, &b, &ProtocolConfig::default())?;
+    let out = deployment.execute(&a, &b)?;
 
     println!("\nprotocol finished:");
     println!("  verified Y = AᵀB      : {}", out.verified);

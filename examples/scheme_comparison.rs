@@ -13,7 +13,7 @@ use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
 use cmpc::matrix::FpMat;
 use cmpc::util::rng::ChaChaRng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> cmpc::Result<()> {
     println!("required workers, s=4 t=15 (Fig. 2 slice)\n");
     println!(
         "{:>4} {:>8} {:>6} {:>9} {:>11} {:>7} {:>9}   second-best",
@@ -40,17 +40,19 @@ fn main() -> anyhow::Result<()> {
     println!("\nadaptive coordinator on three parameter points:");
     let mut rng = ChaChaRng::seed_from_u64(99);
     for (s, t, z, m) in [(2usize, 2usize, 2usize, 32usize), (3, 2, 4, 24), (2, 3, 1, 24)] {
-        let mut coord = Coordinator::new(CoordinatorConfig {
-            policy: SchemePolicy::Adaptive,
-            ..CoordinatorConfig::default()
-        });
+        let mut coord = Coordinator::new(
+            CoordinatorConfig::builder()
+                .policy(SchemePolicy::Adaptive)
+                .build(),
+        );
         let a = FpMat::random(&mut rng, m, m);
         let b = FpMat::random(&mut rng, m, m);
-        coord.submit(a, b, s, t, z);
-        let report = coord.run_all()?.remove(0);
+        coord.submit(a, b, s, t, z)?;
+        let report = coord.drain().remove(0);
+        let out = report.outcome?;
         println!(
             "  (s={s}, t={t}, z={z}) → {} with N={} workers, verified={}",
-            report.scheme, report.n_workers, report.verified
+            report.scheme, report.n_workers, out.verified
         );
     }
     Ok(())

@@ -17,10 +17,7 @@ fn main() {
     let mut rng = ChaChaRng::seed_from_u64(1);
     let a = FpMat::random(&mut rng, m, m);
     let b = FpMat::random(&mut rng, m, m);
-    let cfg = ProtocolConfig {
-        verify: false,
-        ..ProtocolConfig::default()
-    };
+    let cfg = ProtocolConfig::builder().verify(false).build();
 
     let schemes: Vec<Box<dyn CmpcScheme>> = vec![
         Box::new(AgeCmpc::with_optimal_lambda(s, t, z)),
@@ -28,7 +25,7 @@ fn main() {
         Box::new(EntangledCmpc::new(s, t, z)),
     ];
     for scheme in &schemes {
-        let setup = prepare_setup(scheme.as_ref());
+        let setup = prepare_setup(scheme.as_ref()).unwrap();
         let name = format!(
             "e2e/{} m={m} N={}",
             scheme.name(),
@@ -39,19 +36,21 @@ fn main() {
         });
     }
 
-    // Coordinator throughput with setup caching (batch of 8 jobs).
-    let mut coord = Coordinator::new(CoordinatorConfig {
-        policy: SchemePolicy::Adaptive,
-        verify: false,
-        ..CoordinatorConfig::default()
-    });
+    // Coordinator throughput with deployment caching (batch of 8 jobs).
+    let mut coord = Coordinator::new(
+        CoordinatorConfig::builder()
+            .policy(SchemePolicy::Adaptive)
+            .verify(false)
+            .build(),
+    );
     let jobs = 8;
     let t0 = std::time::Instant::now();
     for _ in 0..jobs {
-        coord.submit(a.clone(), b.clone(), s, t, z);
+        coord.submit(a.clone(), b.clone(), s, t, z).unwrap();
     }
-    let reports = coord.run_all().unwrap();
+    let reports = coord.drain();
     let d = t0.elapsed();
+    assert!(reports.iter().all(|r| r.outcome.is_ok()));
     let hits = reports.iter().filter(|r| r.setup_cache_hit).count();
     println!(
         "bench e2e/coordinator m={m} jobs={jobs}            throughput={:.2} jobs/s cache_hits={hits}/{jobs}",

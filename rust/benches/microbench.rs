@@ -61,7 +61,7 @@ fn main() {
             1,
             10,
             || {
-                std::hint::black_box(choose_alphas(n, &support));
+                std::hint::black_box(choose_alphas(n, &support).unwrap());
             },
         );
     }

@@ -23,6 +23,7 @@
 //! powers (C5).
 
 use super::{greedy_secret_powers, CmpcScheme, SchemeParams};
+use crate::error::{CmpcError, Result};
 use crate::poly::powers::PowerSet;
 
 /// An AGE-CMPC instance at a fixed gap parameter `λ`.
@@ -36,13 +37,33 @@ pub struct AgeCmpc {
 }
 
 impl AgeCmpc {
+    /// Fallible construction with an explicit `λ` — the serving path's entry
+    /// point. Rejects invalid `(s, t, z)` and `λ > z` (larger gaps never
+    /// help — Appendix H) with [`CmpcError::InvalidParams`].
+    pub fn try_new(s: usize, t: usize, z: usize, lambda: u64) -> Result<AgeCmpc> {
+        let params = SchemeParams::try_new(s, t, z)?;
+        if lambda > z as u64 {
+            return Err(CmpcError::InvalidParams(format!(
+                "AGE gap λ={lambda} must lie in [0, z={z}]"
+            )));
+        }
+        Ok(AgeCmpc::construct(params, lambda))
+    }
+
     /// Construct with an explicit `λ`.
     ///
     /// # Panics
-    /// Panics if `λ > z` (larger gaps never help — Appendix H) .
+    /// Panics when [`AgeCmpc::try_new`] would return an error.
     pub fn new(s: usize, t: usize, z: usize, lambda: u64) -> AgeCmpc {
-        let params = SchemeParams::new(s, t, z);
-        assert!(lambda <= z as u64, "λ must lie in [0, z]");
+        match AgeCmpc::try_new(s, t, z, lambda) {
+            Ok(scheme) => scheme,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Algorithm-2 construction over pre-validated parameters.
+    fn construct(params: SchemeParams, lambda: u64) -> AgeCmpc {
+        let (t, z) = (params.t, params.z);
         let mut scheme = AgeCmpc {
             params,
             lambda,
@@ -62,17 +83,36 @@ impl AgeCmpc {
         scheme
     }
 
+    /// Fallible Phase-0 construction: validate `(s, t, z)` once, then run
+    /// the `λ*` scan of [`AgeCmpc::with_optimal_lambda`].
+    pub fn try_with_optimal_lambda(s: usize, t: usize, z: usize) -> Result<AgeCmpc> {
+        let params = SchemeParams::try_new(s, t, z)?;
+        Ok(AgeCmpc::optimal_over_validated(params))
+    }
+
     /// Phase 0 of Algorithm 3: scan `λ ∈ [0, z]` and keep the instance with
     /// the fewest workers (ties broken toward smaller λ, i.e. lower degree).
     ///
     /// §Perf P3: the scan is embarrassingly parallel (each λ is an
     /// independent construction + sumset); large `z` fans out across
     /// threads, which cuts the Fig. 2 paper-range regeneration ~4×.
+    ///
+    /// # Panics
+    /// Panics on invalid `(s, t, z)`; use
+    /// [`AgeCmpc::try_with_optimal_lambda`] on untrusted input.
     pub fn with_optimal_lambda(s: usize, t: usize, z: usize) -> AgeCmpc {
+        match AgeCmpc::try_with_optimal_lambda(s, t, z) {
+            Ok(scheme) => scheme,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    fn optimal_over_validated(params: SchemeParams) -> AgeCmpc {
+        let z = params.z;
         let scan = |range: std::ops::RangeInclusive<u64>| -> Option<(usize, AgeCmpc)> {
             let mut best: Option<(usize, AgeCmpc)> = None;
             for lambda in range {
-                let cand = AgeCmpc::new(s, t, z, lambda);
+                let cand = AgeCmpc::construct(params, lambda);
                 let n = cand.n_workers();
                 match &best {
                     Some((bn, _)) if *bn <= n => {}

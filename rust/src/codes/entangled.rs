@@ -17,6 +17,7 @@
 //! `|P(H)|`, not `deg(H)`.
 
 use super::{age::AgeCmpc, CmpcScheme, SchemeParams};
+use crate::error::Result;
 use crate::poly::powers::{max_power, PowerSet};
 
 /// The Entangled-CMPC baseline scheme.
@@ -26,9 +27,20 @@ pub struct EntangledCmpc {
 }
 
 impl EntangledCmpc {
+    /// Fallible construction — the serving path's entry point.
+    pub fn try_new(s: usize, t: usize, z: usize) -> Result<EntangledCmpc> {
+        Ok(EntangledCmpc {
+            inner: AgeCmpc::try_new(s, t, z, 0)?,
+        })
+    }
+
+    /// # Panics
+    /// Panics on invalid `(s, t, z)`; use [`EntangledCmpc::try_new`] on
+    /// untrusted input.
     pub fn new(s: usize, t: usize, z: usize) -> EntangledCmpc {
-        EntangledCmpc {
-            inner: AgeCmpc::new(s, t, z, 0),
+        match EntangledCmpc::try_new(s, t, z) {
+            Ok(scheme) => scheme,
+            Err(e) => panic!("{e}"),
         }
     }
 

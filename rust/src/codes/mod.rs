@@ -31,12 +31,15 @@ pub mod age;
 pub mod baselines;
 pub mod entangled;
 pub mod polydot;
+pub mod spec;
 
 pub use age::AgeCmpc;
 pub use baselines::{n_gcsa_na, n_ssmm};
 pub use entangled::EntangledCmpc;
 pub use polydot::PolyDotCmpc;
+pub use spec::SchemeSpec;
 
+use crate::error::{CmpcError, Result};
 use crate::poly::powers::{self, PowerSet};
 
 /// Common `(s, t, z)` parameters: `s` row-wise partitions, `t` column-wise
@@ -50,10 +53,34 @@ pub struct SchemeParams {
 }
 
 impl SchemeParams {
+    /// Validated construction — the serving path's entry point. Rejects
+    /// degenerate partitions (`s = 0`, `t = 0`) and `z = 0` (the paper
+    /// assumes at least one colluding worker; `z = 0` would need no secret
+    /// terms at all and a different construction).
+    pub fn try_new(s: usize, t: usize, z: usize) -> Result<SchemeParams> {
+        if s < 1 || t < 1 {
+            return Err(CmpcError::InvalidParams(format!(
+                "need s >= 1 and t >= 1 partitions (got s={s}, t={t})"
+            )));
+        }
+        if z < 1 {
+            return Err(CmpcError::InvalidParams(
+                "need z >= 1 colluding workers".to_string(),
+            ));
+        }
+        Ok(SchemeParams { s, t, z })
+    }
+
+    /// Infallible construction for statically-known-good parameters
+    /// (analysis sweeps, tests).
+    ///
+    /// # Panics
+    /// Panics when [`SchemeParams::try_new`] would return an error.
     pub fn new(s: usize, t: usize, z: usize) -> SchemeParams {
-        assert!(s >= 1 && t >= 1, "need s,t >= 1");
-        assert!(z >= 1, "need z >= 1 colluding workers");
-        SchemeParams { s, t, z }
+        match SchemeParams::try_new(s, t, z) {
+            Ok(p) => p,
+            Err(e) => panic!("{e}"),
+        }
     }
 }
 

@@ -18,6 +18,7 @@
 //! confirm the closed forms.
 
 use super::{greedy_secret_powers, CmpcScheme, SchemeParams};
+use crate::error::Result;
 use crate::poly::powers::PowerSet;
 
 /// A PolyDot-CMPC instance.
@@ -29,13 +30,30 @@ pub struct PolyDotCmpc {
 }
 
 impl PolyDotCmpc {
+    /// Fallible construction of Theorem 1 for `(s, t, z)` — the serving
+    /// path's entry point.
+    pub fn try_new(s: usize, t: usize, z: usize) -> Result<PolyDotCmpc> {
+        Ok(PolyDotCmpc::construct(SchemeParams::try_new(s, t, z)?))
+    }
+
     /// Build the construction of Theorem 1 for `(s, t, z)`.
     ///
     /// The paper excludes `s = t = 1` (that degenerate case is plain BGW —
     /// no coding); we allow it for completeness, where the construction
     /// reduces to Shamir sharing of the whole matrices.
+    ///
+    /// # Panics
+    /// Panics on invalid `(s, t, z)`; use [`PolyDotCmpc::try_new`] on
+    /// untrusted input.
     pub fn new(s: usize, t: usize, z: usize) -> PolyDotCmpc {
-        let params = SchemeParams::new(s, t, z);
+        match PolyDotCmpc::try_new(s, t, z) {
+            Ok(scheme) => scheme,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    fn construct(params: SchemeParams) -> PolyDotCmpc {
+        let z = params.z;
         let mut scheme = PolyDotCmpc {
             params,
             secret_a: Vec::new(),

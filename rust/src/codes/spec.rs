@@ -1,0 +1,144 @@
+//! The unified scheme registry: serializable [`SchemeSpec`]s that resolve to
+//! shared [`CmpcScheme`] instances.
+//!
+//! A serving layer should not hand-construct concrete scheme types per
+//! request. A [`SchemeSpec`] names a construction *family* (plus any family
+//! knobs, like AGE's gap `λ`), and [`SchemeSpec::resolve`] instantiates it
+//! for a validated [`SchemeParams`] triple, returning `Arc<dyn CmpcScheme>`
+//! so the instance can be shared by a deployment, its workers, and the
+//! coordinator's cache.
+//!
+//! [`SchemeSpec::resolve_adaptive`] is Phase 0 of Algorithm 3 generalized
+//! across the registry: resolve every constructible family and keep the one
+//! with the fewest provisioned workers. The same routine backs
+//! `SchemePolicy::Adaptive` in the coordinator.
+
+use std::sync::Arc;
+
+use super::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc, SchemeParams};
+use crate::analysis::SchemeKind;
+use crate::error::{CmpcError, Result};
+
+/// A constructible scheme family, resolvable against any valid `(s, t, z)`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SchemeSpec {
+    /// AGE-CMPC. `lambda: None` runs the exact `λ*` scan of Phase 0;
+    /// `Some(λ)` pins the gap (must satisfy `λ ≤ z`).
+    Age { lambda: Option<usize> },
+    /// PolyDot-CMPC (Algorithm 1 secret terms over PolyDot coded terms).
+    PolyDot,
+    /// Entangled-CMPC baseline (degree-based provisioning of [15]).
+    Entangled,
+}
+
+impl SchemeSpec {
+    /// Every family the registry can construct, with default knobs.
+    pub const CONSTRUCTIBLE: [SchemeSpec; 3] = [
+        SchemeSpec::Age { lambda: None },
+        SchemeSpec::PolyDot,
+        SchemeSpec::Entangled,
+    ];
+
+    /// Human-readable family label (without instance knobs).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchemeSpec::Age { .. } => "AGE-CMPC",
+            SchemeSpec::PolyDot => "PolyDot-CMPC",
+            SchemeSpec::Entangled => "Entangled-CMPC",
+        }
+    }
+
+    /// Instantiate this family for `params`.
+    pub fn resolve(&self, params: SchemeParams) -> Result<Arc<dyn CmpcScheme>> {
+        let SchemeParams { s, t, z } = params;
+        let scheme: Arc<dyn CmpcScheme> = match *self {
+            SchemeSpec::Age { lambda: None } => {
+                Arc::new(AgeCmpc::try_with_optimal_lambda(s, t, z)?)
+            }
+            SchemeSpec::Age { lambda: Some(l) } => {
+                Arc::new(AgeCmpc::try_new(s, t, z, l as u64)?)
+            }
+            SchemeSpec::PolyDot => Arc::new(PolyDotCmpc::try_new(s, t, z)?),
+            SchemeSpec::Entangled => Arc::new(EntangledCmpc::try_new(s, t, z)?),
+        };
+        Ok(scheme)
+    }
+
+    /// Phase 0 across the whole registry: the constructible scheme with the
+    /// fewest provisioned workers for `params` (ties broken in
+    /// [`SchemeSpec::CONSTRUCTIBLE`] order, i.e. toward AGE).
+    pub fn resolve_adaptive(params: SchemeParams) -> Result<Arc<dyn CmpcScheme>> {
+        let mut best: Option<Arc<dyn CmpcScheme>> = None;
+        for spec in SchemeSpec::CONSTRUCTIBLE {
+            let cand = spec.resolve(params)?;
+            let better = match &best {
+                Some(b) => cand.n_workers() < b.n_workers(),
+                None => true,
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        best.ok_or_else(|| CmpcError::InvalidParams("empty scheme registry".to_string()))
+    }
+
+    /// Map an analysis-level [`SchemeKind`] onto the registry. The
+    /// formula-only baselines (SSMM, GCSA-NA) cannot be run, only analyzed —
+    /// they yield [`CmpcError::InvalidParams`].
+    pub fn from_kind(kind: SchemeKind) -> Result<SchemeSpec> {
+        match kind {
+            SchemeKind::Age => Ok(SchemeSpec::Age { lambda: None }),
+            SchemeKind::PolyDot => Ok(SchemeSpec::PolyDot),
+            SchemeKind::Entangled => Ok(SchemeSpec::Entangled),
+            SchemeKind::Ssmm | SchemeKind::GcsaNa => Err(CmpcError::InvalidParams(format!(
+                "{} is a formula-level baseline, not constructible",
+                kind.label()
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_matches_direct_construction() {
+        let p = SchemeParams::new(2, 2, 2);
+        let age = SchemeSpec::Age { lambda: None }.resolve(p).unwrap();
+        assert_eq!(age.n_workers(), 17);
+        let pinned = SchemeSpec::Age { lambda: Some(0) }.resolve(p).unwrap();
+        assert_eq!(pinned.n_workers(), 18);
+        let pd = SchemeSpec::PolyDot.resolve(p).unwrap();
+        assert_eq!(pd.name(), "PolyDot-CMPC");
+        let ent = SchemeSpec::Entangled.resolve(p).unwrap();
+        assert_eq!(ent.n_workers(), 19);
+    }
+
+    #[test]
+    fn adaptive_picks_minimum_workers() {
+        // Example 1 territory: AGE(17) < PolyDot(18) < Entangled(19).
+        let best = SchemeSpec::resolve_adaptive(SchemeParams::new(2, 2, 2)).unwrap();
+        assert_eq!(best.n_workers(), 17);
+        assert!(best.name().starts_with("AGE"));
+    }
+
+    #[test]
+    fn invalid_lambda_is_typed_error() {
+        let p = SchemeParams::new(2, 2, 2);
+        let err = SchemeSpec::Age { lambda: Some(3) }.resolve(p).unwrap_err();
+        assert!(matches!(err, CmpcError::InvalidParams(_)));
+    }
+
+    #[test]
+    fn formula_baselines_not_constructible() {
+        for kind in [SchemeKind::Ssmm, SchemeKind::GcsaNa] {
+            let err = SchemeSpec::from_kind(kind).unwrap_err();
+            assert!(err.to_string().contains("formula-level baseline"));
+        }
+        assert_eq!(
+            SchemeSpec::from_kind(SchemeKind::Age).unwrap(),
+            SchemeSpec::Age { lambda: None }
+        );
+    }
+}

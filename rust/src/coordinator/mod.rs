@@ -3,38 +3,42 @@
 //! Responsibilities (mirroring a vLLM-router-style front end, specialized to
 //! CMPC):
 //!
-//! * **Job intake & queueing** — [`Coordinator::submit`] accepts
-//!   `Y = AᵀB` jobs with per-job privacy/partition parameters.
+//! * **Job intake & validation** — [`Coordinator::submit`] accepts
+//!   `Y = AᵀB` jobs with per-job privacy/partition parameters, validates
+//!   parameters and matrix shapes at the door (typed
+//!   [`crate::error::CmpcError`]s, no
+//!   downstream panics), and returns a [`JobHandle`].
 //! * **Scheme selection** — [`SchemePolicy::Adaptive`] runs Phase 0 of
-//!   Algorithm 3 generalized across constructions: it picks the
-//!   constructible scheme (AGE at its λ*, PolyDot, Entangled) with the
-//!   fewest workers for the job's `(s,t,z)`.
-//! * **Setup caching & batching** — the O(N³) generalized-Vandermonde solve
-//!   and α assignment are cached per `(scheme, s, t, z)` signature;
-//!   [`Coordinator::run_all`] groups queued jobs by signature so a worker
-//!   deployment is provisioned once per group.
-//! * **Backend management** — native or PJRT (AOT artifacts) per
-//!   [`BackendChoice`].
-//! * **Metrics** — per-job [`JobReport`]s with worker counts, phase
-//!   timings, traffic, and verification status.
+//!   Algorithm 3 through the [`SchemeSpec`] registry: the constructible
+//!   scheme (AGE at its λ*, PolyDot, Entangled) with the fewest workers for
+//!   the job's `(s,t,z)`.
+//! * **Deployment caching & batching** — [`Coordinator::drain`] groups
+//!   queued jobs by `(scheme, s, t, z)` signature onto shared
+//!   [`Deployment`]s, so the O(N³) generalized-Vandermonde solve and the
+//!   backend service are provisioned once per signature and reused across
+//!   jobs and across drains.
+//! * **Failure isolation** — a job that fails at execution is reported in
+//!   its [`JobReport::outcome`]; the rest of the batch keeps draining.
+//! * **Backend management** — native or the artifact executor service per
+//!   [`BackendChoice`], shared across every deployment.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::analysis::SchemeKind;
-use crate::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc};
+use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
+use crate::error::Result;
 use crate::matrix::FpMat;
-use crate::metrics::{PhaseTimings, TrafficReport};
-use crate::mpc::protocol::{self, ProtocolConfig, Setup};
-use crate::runtime::BackendChoice;
+use crate::mpc::deployment::Deployment;
+use crate::mpc::protocol::{self, ProtocolConfig, ProtocolOutput};
+use crate::runtime::{BackendChoice, BackendFactory};
 
 /// How the coordinator picks a construction for each job.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum SchemePolicy {
-    /// Always use the given constructible scheme.
-    Fixed(SchemeKind),
-    /// Minimize provisioned workers across constructible schemes
+    /// Always resolve the given spec from the registry.
+    Fixed(SchemeSpec),
+    /// Minimize provisioned workers across the registry
     /// (AGE λ*, PolyDot, Entangled).
     Adaptive,
 }
@@ -46,7 +50,7 @@ pub struct CoordinatorConfig {
     pub backend: BackendChoice,
     /// Verify every product natively (disable for throughput benchmarks).
     pub verify: bool,
-    /// Optional straggler injection passed through to the protocol.
+    /// Optional link latency passed through to the protocol.
     pub link_delay: Option<Duration>,
 }
 
@@ -61,36 +65,88 @@ impl Default for CoordinatorConfig {
     }
 }
 
+impl CoordinatorConfig {
+    /// Start a builder over the defaults.
+    pub fn builder() -> CoordinatorConfigBuilder {
+        CoordinatorConfigBuilder {
+            config: CoordinatorConfig::default(),
+        }
+    }
+}
+
+/// Builder for [`CoordinatorConfig`].
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorConfigBuilder {
+    config: CoordinatorConfig,
+}
+
+impl CoordinatorConfigBuilder {
+    pub fn policy(mut self, policy: SchemePolicy) -> Self {
+        self.config.policy = policy;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendChoice) -> Self {
+        self.config.backend = backend;
+        self
+    }
+
+    pub fn verify(mut self, verify: bool) -> Self {
+        self.config.verify = verify;
+        self
+    }
+
+    pub fn link_delay(mut self, delay: Option<Duration>) -> Self {
+        self.config.link_delay = delay;
+        self
+    }
+
+    pub fn build(self) -> CoordinatorConfig {
+        self.config
+    }
+}
+
+/// Ticket for a submitted job; correlate with [`JobReport::id`] after a
+/// drain.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct JobHandle {
+    id: u64,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
 /// One queued multiplication job.
 pub struct Job {
     pub id: u64,
     pub a: FpMat,
     pub b: FpMat,
-    pub s: usize,
-    pub t: usize,
-    pub z: usize,
+    pub params: SchemeParams,
     pub seed: u64,
 }
 
-/// Outcome of one job.
+/// Outcome of one job: identification plus either the protocol output or
+/// the typed error that stopped it. Per-job failures never abort the batch.
 pub struct JobReport {
     pub id: u64,
     pub scheme: String,
     pub n_workers: usize,
-    pub stragglers_tolerated: usize,
-    pub timings: PhaseTimings,
-    pub traffic: TrafficReport,
-    pub verified: bool,
-    pub y: FpMat,
-    /// True when the deployment setup was served from the coordinator cache.
+    /// True when the deployment was served from the coordinator cache
+    /// (Setup + backend reused; solved once per signature).
     pub setup_cache_hit: bool,
+    pub outcome: Result<ProtocolOutput>,
 }
 
 /// Signature under which deployments (α assignment + reconstruction
-/// coefficients) are shared between jobs.
-#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+/// coefficients + backend) are shared between jobs. The scheme policy is
+/// fixed for a coordinator's lifetime, so `(s, t, z)` fully determines the
+/// resolved scheme — keying on the triple lets cache hits skip Phase-0
+/// scheme resolution entirely.
+#[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
 struct DeploymentKey {
-    scheme: String,
     s: usize,
     t: usize,
     z: usize,
@@ -101,11 +157,11 @@ pub struct Coordinator {
     config: CoordinatorConfig,
     queue: Vec<Job>,
     next_id: u64,
-    setups: BTreeMap<DeploymentKey, Arc<Setup>>,
-    /// Backend factory shared across all jobs: the PJRT client (and its
-    /// compiled-executable cache) lives for the coordinator's lifetime
+    deployments: BTreeMap<DeploymentKey, Arc<Deployment>>,
+    /// Backend factory shared across all deployments: the executor service
+    /// (and its artifact cache) lives for the coordinator's lifetime
     /// instead of being re-created per job (§Perf P1).
-    backend: Option<crate::runtime::BackendFactory>,
+    backend: Option<Arc<BackendFactory>>,
 }
 
 impl Coordinator {
@@ -114,127 +170,170 @@ impl Coordinator {
             config,
             queue: Vec::new(),
             next_id: 0,
-            setups: BTreeMap::new(),
+            deployments: BTreeMap::new(),
             backend: None,
         }
     }
 
-    /// Queue a job; returns its id.
-    pub fn submit(&mut self, a: FpMat, b: FpMat, s: usize, t: usize, z: usize) -> u64 {
+    /// Validate and queue a job. Malformed parameters or shapes are rejected
+    /// here — [`crate::error::CmpcError::InvalidParams`] /
+    /// [`crate::error::CmpcError::ShapeMismatch`] —
+    /// so nothing unconstructible ever reaches a deployment.
+    pub fn submit(
+        &mut self,
+        a: FpMat,
+        b: FpMat,
+        s: usize,
+        t: usize,
+        z: usize,
+    ) -> Result<JobHandle> {
+        let params = SchemeParams::try_new(s, t, z)?;
+        protocol::validate_job_shapes(&a, &b, params)?;
         let id = self.next_id;
         self.next_id += 1;
-        let seed = 0x5EED ^ (id.wrapping_mul(0x9E3779B97F4A7C15));
+        let seed = 0x5EED ^ id.wrapping_mul(0x9E3779B97F4A7C15);
         self.queue.push(Job {
             id,
             a,
             b,
-            s,
-            t,
-            z,
+            params,
             seed,
         });
-        id
+        Ok(JobHandle { id })
+    }
+
+    /// Jobs currently queued.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Deployments currently provisioned (one per distinct signature seen).
+    pub fn provisioned_deployments(&self) -> usize {
+        self.deployments.len()
     }
 
     /// Resolve the scheme for a parameter triple under the current policy.
-    pub fn select_scheme(&self, s: usize, t: usize, z: usize) -> Box<dyn CmpcScheme> {
+    pub fn select_scheme(&self, s: usize, t: usize, z: usize) -> Result<Arc<dyn CmpcScheme>> {
+        self.resolve_policy(SchemeParams::try_new(s, t, z)?)
+    }
+
+    fn resolve_policy(&self, params: SchemeParams) -> Result<Arc<dyn CmpcScheme>> {
         match self.config.policy {
-            SchemePolicy::Fixed(kind) => build_scheme(kind, s, t, z),
-            SchemePolicy::Adaptive => {
-                let candidates: [Box<dyn CmpcScheme>; 3] = [
-                    Box::new(AgeCmpc::with_optimal_lambda(s, t, z)),
-                    Box::new(PolyDotCmpc::new(s, t, z)),
-                    Box::new(EntangledCmpc::new(s, t, z)),
-                ];
-                candidates
-                    .into_iter()
-                    .min_by_key(|c| c.n_workers())
-                    .unwrap()
-            }
+            SchemePolicy::Fixed(spec) => spec.resolve(params),
+            SchemePolicy::Adaptive => SchemeSpec::resolve_adaptive(params),
         }
     }
 
-    /// Drain the queue, batching jobs that share a deployment. Jobs are
-    /// returned in submission order.
-    pub fn run_all(&mut self) -> anyhow::Result<Vec<JobReport>> {
-        if self.backend.is_none() {
-            self.backend = Some(crate::runtime::BackendFactory::new(&self.config.backend)?);
+    fn factory(&mut self) -> Result<Arc<BackendFactory>> {
+        if let Some(f) = &self.backend {
+            return Ok(f.clone());
         }
+        let f = Arc::new(BackendFactory::new(&self.config.backend)?);
+        self.backend = Some(f.clone());
+        Ok(f)
+    }
+
+    /// Fetch or provision the deployment serving `params` under the current
+    /// policy. Returns the deployment and whether it was a cache hit.
+    fn deployment_for(&mut self, params: SchemeParams) -> Result<(Arc<Deployment>, bool)> {
+        let key = DeploymentKey {
+            s: params.s,
+            t: params.t,
+            z: params.z,
+        };
+        if let Some(dep) = self.deployments.get(&key) {
+            return Ok((dep.clone(), true));
+        }
+        let scheme = self.resolve_policy(params)?;
+        let factory = self.factory()?;
+        let proto_config = ProtocolConfig::builder()
+            .backend(self.config.backend.clone())
+            .verify(self.config.verify)
+            .link_delay(self.config.link_delay)
+            .build();
+        let dep = Arc::new(Deployment::for_scheme_with_factory(
+            scheme,
+            proto_config,
+            factory,
+        )?);
+        self.deployments.insert(key, dep.clone());
+        Ok((dep, false))
+    }
+
+    /// Drain the queue, batching jobs that share a deployment signature.
+    /// Reports come back in submission order; a failing job yields an `Err`
+    /// outcome in its report and the batch keeps going.
+    pub fn drain(&mut self) -> Vec<JobReport> {
         let jobs = std::mem::take(&mut self.queue);
         let mut reports: Vec<JobReport> = Vec::with_capacity(jobs.len());
         for job in jobs {
-            let scheme = self.select_scheme(job.s, job.t, job.z);
-            let key = DeploymentKey {
-                scheme: scheme.name(),
-                s: job.s,
-                t: job.t,
-                z: job.z,
+            let report = match self.deployment_for(job.params) {
+                Err(e) => JobReport {
+                    id: job.id,
+                    scheme: String::new(),
+                    n_workers: 0,
+                    setup_cache_hit: false,
+                    outcome: Err(e),
+                },
+                Ok((dep, cache_hit)) => JobReport {
+                    id: job.id,
+                    scheme: dep.scheme().name(),
+                    n_workers: dep.n_workers(),
+                    setup_cache_hit: cache_hit,
+                    outcome: dep.execute_seeded(&job.a, &job.b, job.seed),
+                },
             };
-            let (setup, cache_hit) = match self.setups.get(&key) {
-                Some(s) => (s.clone(), true),
-                None => {
-                    let s = Arc::new(protocol::prepare_setup(scheme.as_ref()));
-                    self.setups.insert(key.clone(), s.clone());
-                    (s, false)
-                }
-            };
-            let cfg = ProtocolConfig {
-                backend: self.config.backend.clone(),
-                seed: job.seed,
-                verify: self.config.verify,
-                worker_delays: Vec::new(),
-                link_delay: self.config.link_delay,
-            };
-            let out = protocol::run_protocol_with_factory(
-                scheme.as_ref(),
-                &setup,
-                &job.a,
-                &job.b,
-                &cfg,
-                self.backend.as_ref().unwrap(),
-            )?;
-            reports.push(JobReport {
-                id: job.id,
-                scheme: out.scheme_name,
-                n_workers: out.n_workers,
-                stragglers_tolerated: out.stragglers_tolerated,
-                timings: out.timings,
-                traffic: out.traffic,
-                verified: out.verified,
-                y: out.y,
-                setup_cache_hit: cache_hit,
-            });
+            reports.push(report);
+        }
+        reports
+    }
+
+    /// Drain the queue, failing on the first job whose outcome is an error
+    /// (the pre-0.2 contract: any job failure surfaced as `Err`).
+    #[deprecated(since = "0.2.0", note = "use `drain`; per-job failures now \
+                 live in `JobReport::outcome` instead of aborting the batch")]
+    pub fn run_all(&mut self) -> Result<Vec<JobReport>> {
+        let reports = self.drain();
+        for r in &reports {
+            if let Err(e) = &r.outcome {
+                return Err(e.clone());
+            }
         }
         Ok(reports)
     }
 }
 
-/// Instantiate a constructible scheme by kind.
-///
-/// # Panics
-/// Panics for formula-only baselines (SSMM, GCSA-NA) — they cannot be run,
-/// only analyzed (see `codes::baselines`).
-pub fn build_scheme(kind: SchemeKind, s: usize, t: usize, z: usize) -> Box<dyn CmpcScheme> {
-    match kind {
-        SchemeKind::Age => Box::new(AgeCmpc::with_optimal_lambda(s, t, z)),
-        SchemeKind::PolyDot => Box::new(PolyDotCmpc::new(s, t, z)),
-        SchemeKind::Entangled => Box::new(EntangledCmpc::new(s, t, z)),
-        SchemeKind::Ssmm | SchemeKind::GcsaNa => {
-            panic!("{} is a formula-level baseline, not constructible", kind.label())
-        }
-    }
+/// Instantiate a constructible scheme by analysis-level kind through the
+/// registry. Formula-only baselines (SSMM, GCSA-NA) yield
+/// [`crate::error::CmpcError::InvalidParams`] — they can be analyzed, not
+/// run.
+pub fn build_scheme(
+    kind: crate::analysis::SchemeKind,
+    s: usize,
+    t: usize,
+    z: usize,
+) -> Result<Arc<dyn CmpcScheme>> {
+    SchemeSpec::from_kind(kind)?.resolve(SchemeParams::try_new(s, t, z)?)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::analysis::SchemeKind;
+    use crate::error::CmpcError;
     use crate::util::rng::ChaChaRng;
+
+    fn unwrap_output(r: &JobReport) -> &ProtocolOutput {
+        r.outcome
+            .as_ref()
+            .unwrap_or_else(|e| panic!("job {} failed: {e}", r.id))
+    }
 
     #[test]
     fn adaptive_policy_picks_minimum_workers() {
         let coord = Coordinator::new(CoordinatorConfig::default());
-        // Example 1 territory: AGE(17) < Entangled(19); PolyDot(2,2,2) = 18.
-        let sch = coord.select_scheme(2, 2, 2);
+        // Example 1 territory: AGE(17) < PolyDot(18) < Entangled(19).
+        let sch = coord.select_scheme(2, 2, 2).unwrap();
         assert_eq!(sch.n_workers(), 17);
         assert!(sch.name().starts_with("AGE"));
     }
@@ -251,46 +350,120 @@ mod tests {
                 )
             })
             .collect();
+        let mut handles = Vec::new();
         for (a, b) in &mats {
-            coord.submit(a.clone(), b.clone(), 2, 2, 2);
+            handles.push(coord.submit(a.clone(), b.clone(), 2, 2, 2).unwrap());
         }
-        let reports = coord.run_all().unwrap();
+        assert_eq!(coord.pending(), 3);
+        let reports = coord.drain();
+        assert_eq!(coord.pending(), 0);
         assert_eq!(reports.len(), 3);
-        // identical (scheme, s, t, z) ⇒ setup computed once, reused twice
+        // handles correlate with reports in submission order
+        for (h, r) in handles.iter().zip(&reports) {
+            assert_eq!(h.id(), r.id);
+        }
+        // identical (scheme, s, t, z) ⇒ deployment provisioned once, reused
         assert!(!reports[0].setup_cache_hit);
         assert!(reports[1].setup_cache_hit && reports[2].setup_cache_hit);
+        assert_eq!(coord.provisioned_deployments(), 1);
         for (r, (a, b)) in reports.iter().zip(&mats) {
-            assert!(r.verified);
-            assert_eq!(r.y, a.transpose().matmul(b));
+            let out = unwrap_output(r);
+            assert!(out.verified);
+            assert_eq!(out.y, a.transpose().matmul(b));
         }
     }
 
     #[test]
-    fn cache_persists_across_run_all_calls() {
+    fn cache_persists_across_drains() {
         let mut coord = Coordinator::new(CoordinatorConfig::default());
         let mut rng = ChaChaRng::seed_from_u64(7);
         let a = FpMat::random(&mut rng, 8, 8);
         let b = FpMat::random(&mut rng, 8, 8);
-        coord.submit(a.clone(), b.clone(), 2, 2, 2);
-        let r1 = coord.run_all().unwrap();
-        coord.submit(a, b, 2, 2, 2);
-        let r2 = coord.run_all().unwrap();
+        coord.submit(a.clone(), b.clone(), 2, 2, 2).unwrap();
+        let r1 = coord.drain();
+        coord.submit(a, b, 2, 2, 2).unwrap();
+        let r2 = coord.drain();
         assert!(!r1[0].setup_cache_hit);
         assert!(r2[0].setup_cache_hit);
     }
 
     #[test]
-    fn fixed_policy_respected() {
-        let coord = Coordinator::new(CoordinatorConfig {
-            policy: SchemePolicy::Fixed(SchemeKind::PolyDot),
-            ..CoordinatorConfig::default()
-        });
-        assert_eq!(coord.select_scheme(2, 2, 2).name(), "PolyDot-CMPC");
+    fn submit_rejects_malformed_jobs_at_intake() {
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        let mut rng = ChaChaRng::seed_from_u64(8);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        // z = 0
+        assert!(matches!(
+            coord.submit(a.clone(), b.clone(), 2, 2, 0),
+            Err(CmpcError::InvalidParams(_))
+        ));
+        // s = 0
+        assert!(matches!(
+            coord.submit(a.clone(), b.clone(), 0, 2, 1),
+            Err(CmpcError::InvalidParams(_))
+        ));
+        // partition does not divide m
+        assert!(matches!(
+            coord.submit(a.clone(), b.clone(), 3, 2, 1),
+            Err(CmpcError::ShapeMismatch(_))
+        ));
+        // mismatched operand sizes
+        let small = FpMat::random(&mut rng, 4, 4);
+        assert!(matches!(
+            coord.submit(a.clone(), small, 2, 2, 1),
+            Err(CmpcError::ShapeMismatch(_))
+        ));
+        // non-square operand
+        let rect = FpMat::random(&mut rng, 8, 4);
+        assert!(matches!(
+            coord.submit(rect, b.clone(), 2, 2, 1),
+            Err(CmpcError::ShapeMismatch(_))
+        ));
+        // nothing malformed was queued; a good job still flows
+        assert_eq!(coord.pending(), 0);
+        coord.submit(a, b, 2, 2, 1).unwrap();
+        let reports = coord.drain();
+        assert!(unwrap_output(&reports[0]).verified);
     }
 
     #[test]
-    #[should_panic(expected = "formula-level baseline")]
+    fn per_job_failure_does_not_abort_batch() {
+        // A backend that cannot start fails each job's deployment lookup;
+        // reports carry the error and the drain completes.
+        let mut coord = Coordinator::new(
+            CoordinatorConfig::builder()
+                .backend(BackendChoice::Pjrt {
+                    // a *file* path component makes manifest reading fail
+                    artifacts_dir: std::path::PathBuf::from("/dev/null"),
+                })
+                .build(),
+        );
+        let mut rng = ChaChaRng::seed_from_u64(9);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        coord.submit(a.clone(), b.clone(), 2, 2, 1).unwrap();
+        coord.submit(a, b, 2, 2, 1).unwrap();
+        let reports = coord.drain();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert!(r.outcome.is_err(), "job {} should fail", r.id);
+        }
+    }
+
+    #[test]
+    fn fixed_policy_respected() {
+        let coord = Coordinator::new(
+            CoordinatorConfig::builder()
+                .policy(SchemePolicy::Fixed(SchemeSpec::PolyDot))
+                .build(),
+        );
+        assert_eq!(coord.select_scheme(2, 2, 2).unwrap().name(), "PolyDot-CMPC");
+    }
+
+    #[test]
     fn ssmm_not_constructible() {
-        build_scheme(SchemeKind::Ssmm, 2, 2, 2);
+        let err = build_scheme(SchemeKind::Ssmm, 2, 2, 2).unwrap_err();
+        assert!(err.to_string().contains("formula-level baseline"));
     }
 }

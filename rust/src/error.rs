@@ -1,0 +1,101 @@
+//! Crate-wide typed error handling.
+//!
+//! Every fallible public entry point returns [`Result`] with [`CmpcError`],
+//! so a serving process can reject a malformed request, report the failure in
+//! its [`crate::coordinator::JobReport`], and keep draining the rest of the
+//! batch — instead of crashing on an `assert!` deep inside the protocol.
+//!
+//! The variants mirror the failure classes of the serving pipeline:
+//!
+//! * [`CmpcError::InvalidParams`] — a `(s, t, z)` triple or config knob that
+//!   no scheme can be constructed for (e.g. `z = 0`, `λ > z`, a
+//!   `worker_delays` vector whose length disagrees with the deployment).
+//! * [`CmpcError::ShapeMismatch`] — job matrices that are not square, not of
+//!   equal size, or not divisible by the `(s, t)` partition.
+//! * [`CmpcError::NotDecodable`] — reconstruction cannot proceed (singular
+//!   generalized Vandermonde after re-draws, an important power missing from
+//!   the reconstruction support, or a verify-mode product mismatch).
+//! * [`CmpcError::InsufficientWorkers`] — fewer shares than the `t²+z`
+//!   reconstruction threshold.
+//! * [`CmpcError::BackendUnavailable`] — the requested compute backend (or
+//!   its artifacts) cannot be used.
+//! * [`CmpcError::Fabric`] — a network-fabric endpoint disappeared at a
+//!   point the protocol cannot tolerate.
+//! * [`CmpcError::Io`] — an underlying filesystem error (artifact manifests,
+//!   CSV output).
+
+/// Crate-wide result alias; `E` defaults to [`CmpcError`].
+pub type Result<T, E = CmpcError> = std::result::Result<T, E>;
+
+/// Typed error for every fallible operation in the crate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CmpcError {
+    /// Scheme or config parameters that cannot be satisfied.
+    InvalidParams(String),
+    /// Job matrices incompatible with each other or with the partition.
+    ShapeMismatch(String),
+    /// Reconstruction is impossible or produced a wrong product.
+    NotDecodable(String),
+    /// Fewer worker shares than the `t²+z` reconstruction threshold.
+    InsufficientWorkers { needed: usize, provisioned: usize },
+    /// The requested compute backend cannot serve the job.
+    BackendUnavailable(String),
+    /// A fabric endpoint vanished at an intolerable point of the protocol.
+    Fabric(String),
+    /// Underlying I/O failure (message keeps the error `Clone`-able).
+    Io(String),
+}
+
+impl std::fmt::Display for CmpcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CmpcError::InvalidParams(m) => write!(f, "invalid parameters: {m}"),
+            CmpcError::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            CmpcError::NotDecodable(m) => write!(f, "not decodable: {m}"),
+            CmpcError::InsufficientWorkers {
+                needed,
+                provisioned,
+            } => write!(
+                f,
+                "insufficient workers: reconstruction needs {needed} shares \
+                 but only {provisioned} workers are provisioned"
+            ),
+            CmpcError::BackendUnavailable(m) => write!(f, "backend unavailable: {m}"),
+            CmpcError::Fabric(m) => write!(f, "fabric failure: {m}"),
+            CmpcError::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CmpcError {}
+
+impl From<std::io::Error> for CmpcError {
+    fn from(e: std::io::Error) -> CmpcError {
+        CmpcError::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = CmpcError::InsufficientWorkers {
+            needed: 6,
+            provisioned: 4,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains('6') && msg.contains('4'));
+        assert!(CmpcError::ShapeMismatch("8x8 vs 4x4".into())
+            .to_string()
+            .contains("8x8 vs 4x4"));
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: CmpcError = io.into();
+        assert!(matches!(e, CmpcError::Io(_)));
+    }
+}

@@ -12,13 +12,28 @@
 //! with AGE at `λ = 0`) and formula-level models of the **SSMM** and
 //! **GCSA-NA** baselines.
 //!
+//! ## Serving model
+//!
+//! The public API is **session-based**: provision a [`Deployment`] once per
+//! `(scheme, s, t, z)` signature — that pays for Phase 0 scheme selection,
+//! the α assignment, the O(N³) generalized-Vandermonde solve, and backend
+//! startup — then stream any number of jobs through it. Scheme families are
+//! named by [`SchemeSpec`] and resolved through one registry (the same
+//! registry behind the coordinator's adaptive policy). Everything fallible
+//! returns [`Result`] with a typed [`CmpcError`]; a malformed job is a
+//! rejected request, never a crashed process.
+//!
+//! For multi-tenant batches, [`coordinator::Coordinator`] adds intake
+//! validation ([`coordinator::Coordinator::submit`] → `JobHandle`),
+//! signature-grouped deployment sharing, and per-job failure isolation
+//! ([`coordinator::Coordinator::drain`] → `Vec<JobReport>`).
+//!
 //! ## Architecture (three layers)
 //!
 //! * **L3 (this crate)** — the coordination layer: code constructions, secret
 //!   term design, the three-phase MPC protocol over a simulated edge-network
-//!   fabric, a serving coordinator (job queue, adaptive scheme selection,
-//!   batching, straggler-tolerant reconstruction), and the complete analysis
-//!   + benchmark harness reproducing every figure in the paper.
+//!   fabric, the serving coordinator, and the complete analysis + benchmark
+//!   harness reproducing every figure in the paper.
 //! * **L2 (JAX, build time)** — the per-worker compute graph
 //!   `H(αₙ) = F_A(αₙ)·F_B(αₙ) mod p`, AOT-lowered to HLO text under
 //!   `python/compile/`, loaded at runtime by [`runtime`].
@@ -31,26 +46,46 @@
 //! ## Quick start
 //!
 //! ```no_run
-//! use cmpc::codes::{AgeCmpc, CmpcScheme};
+//! use cmpc::codes::SchemeParams;
 //! use cmpc::matrix::FpMat;
-//! use cmpc::mpc::protocol::{run_protocol, ProtocolConfig};
+//! use cmpc::mpc::protocol::ProtocolConfig;
 //! use cmpc::util::rng::ChaChaRng;
+//! use cmpc::{Deployment, SchemeSpec};
 //!
-//! let mut rng = ChaChaRng::seed_from_u64(7);
-//! let m = 64;
-//! let a = FpMat::random(&mut rng, m, m);
-//! let b = FpMat::random(&mut rng, m, m);
-//! // s=t=z=2: the paper's Example 1 — AGE needs 17 workers (λ* = 2).
-//! let scheme = AgeCmpc::with_optimal_lambda(2, 2, 2);
-//! assert_eq!(scheme.n_workers(), 17);
-//! let out = run_protocol(&scheme, &a, &b, &ProtocolConfig::default()).unwrap();
-//! assert_eq!(out.y, a.transpose().matmul(&b));
+//! fn main() -> cmpc::Result<()> {
+//!     // s=t=z=2: the paper's Example 1 — AGE needs 17 workers (λ* = 2).
+//!     let params = SchemeParams::try_new(2, 2, 2)?;
+//!     let deployment = Deployment::provision(
+//!         SchemeSpec::Age { lambda: None }, // None = exact λ* scan
+//!         params,
+//!         ProtocolConfig::default(),
+//!     )?;
+//!     assert_eq!(deployment.n_workers(), 17);
+//!
+//!     // The expensive setup is now cached; stream jobs through it.
+//!     let mut rng = ChaChaRng::seed_from_u64(7);
+//!     let m = 64;
+//!     for _ in 0..3 {
+//!         let a = FpMat::random(&mut rng, m, m);
+//!         let b = FpMat::random(&mut rng, m, m);
+//!         let out = deployment.execute(&a, &b)?;
+//!         assert_eq!(out.y, a.transpose().matmul(&b));
+//!     }
+//!     assert_eq!(deployment.jobs_executed(), 3);
+//!     Ok(())
+//! }
 //! ```
+//!
+//! The pre-0.2 `run_protocol(&scheme, &a, &b, &config)` entry point is kept
+//! as a deprecated wrapper for one release; it re-solves the O(N³) setup and
+//! re-creates the backend on every call. Migrate to
+//! [`Deployment::provision`] + [`Deployment::execute`].
 
 pub mod analysis;
 pub mod benchkit;
 pub mod codes;
 pub mod coordinator;
+pub mod error;
 pub mod ff;
 pub mod matrix;
 pub mod metrics;
@@ -59,4 +94,7 @@ pub mod poly;
 pub mod runtime;
 pub mod util;
 
+pub use codes::SchemeSpec;
+pub use error::{CmpcError, Result};
 pub use ff::P;
+pub use mpc::deployment::Deployment;

@@ -6,20 +6,24 @@
 //! * `run     --m M --s S --t T --z Z [--scheme K] [--backend B]` — execute
 //!   one privacy-preserving multiplication end to end and report metrics.
 //! * `serve   --jobs J --m M ...` — batch serving demo through the
-//!   coordinator (setup caching, adaptive scheme selection).
+//!   coordinator (deployment caching, adaptive scheme selection, per-job
+//!   failure isolation).
 //! * `figures [--out DIR] [--zmax Z]` — regenerate every paper figure's
 //!   data series (Figs. 2, 3, 4a–c + ablations) into CSVs.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use cmpc::analysis::{self, figures, SchemeKind};
-use cmpc::codes::CmpcScheme;
+use cmpc::codes::{CmpcScheme, SchemeParams};
 use cmpc::coordinator::{build_scheme, Coordinator, CoordinatorConfig, SchemePolicy};
 use cmpc::matrix::FpMat;
-use cmpc::mpc::protocol::{run_protocol, ProtocolConfig};
+use cmpc::mpc::deployment::Deployment;
+use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::runtime::BackendChoice;
 use cmpc::util::cli::Args;
 use cmpc::util::rng::ChaChaRng;
+use cmpc::{CmpcError, Result, SchemeSpec};
 
 fn main() {
     let args = Args::from_env();
@@ -42,7 +46,7 @@ fn main() {
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
@@ -68,7 +72,7 @@ fn parse_backend(args: &Args) -> BackendChoice {
     }
 }
 
-fn cmd_info(args: &Args) -> anyhow::Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
     let (s, t, z) = parse_stz(args);
     println!(
         "CMPC worker requirements at s={s}, t={t}, z={z}  (t²+z = {} shares to decode)\n",
@@ -89,7 +93,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
         };
         println!("{:<18} {:>9}  {note}", kind.label(), n);
     }
-    let sch = build_scheme(SchemeKind::Age, s, t, z);
+    let sch = build_scheme(SchemeKind::Age, s, t, z)?;
     println!("\nAGE construction detail:");
     println!("  P(C_A) = {:?}", sch.coded_support_a());
     println!("  P(S_A) = {:?}", sch.secret_powers_a());
@@ -99,26 +103,31 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
+fn cmd_run(args: &Args) -> Result<()> {
     let (s, t, z) = parse_stz(args);
     let m: usize = args.get_parse("m", 64);
     let seed: u64 = args.get_parse("seed", 7);
-    let scheme: Box<dyn CmpcScheme> = match args.get("scheme").unwrap_or("age") {
-        "age" => build_scheme(SchemeKind::Age, s, t, z),
-        "polydot" => build_scheme(SchemeKind::PolyDot, s, t, z),
-        "entangled" => build_scheme(SchemeKind::Entangled, s, t, z),
-        "adaptive" => Coordinator::new(CoordinatorConfig::default()).select_scheme(s, t, z),
-        other => anyhow::bail!("unknown scheme {other:?}"),
+    let params = SchemeParams::try_new(s, t, z)?;
+    let scheme: Arc<dyn CmpcScheme> = match args.get("scheme").unwrap_or("age") {
+        "age" => SchemeSpec::Age { lambda: None }.resolve(params)?,
+        "polydot" => SchemeSpec::PolyDot.resolve(params)?,
+        "entangled" => SchemeSpec::Entangled.resolve(params)?,
+        "adaptive" => SchemeSpec::resolve_adaptive(params)?,
+        other => {
+            return Err(CmpcError::InvalidParams(format!(
+                "unknown scheme {other:?} (age|polydot|entangled|adaptive)"
+            )))
+        }
     };
     let mut rng = ChaChaRng::seed_from_u64(seed);
     let a = FpMat::random(&mut rng, m, m);
     let b = FpMat::random(&mut rng, m, m);
-    let cfg = ProtocolConfig {
-        backend: parse_backend(args),
-        seed,
-        ..ProtocolConfig::default()
-    };
-    let out = run_protocol(scheme.as_ref(), &a, &b, &cfg)?;
+    let cfg = ProtocolConfig::builder()
+        .backend(parse_backend(args))
+        .seed(seed)
+        .build();
+    let deployment = Deployment::for_scheme(scheme, cfg)?;
+    let out = deployment.execute(&a, &b)?;
     println!("scheme               {}", out.scheme_name);
     println!("workers              {}", out.n_workers);
     println!("stragglers tolerated {}", out.stragglers_tolerated);
@@ -138,45 +147,52 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &Args) -> Result<()> {
     let (s, t, z) = parse_stz(args);
     let m: usize = args.get_parse("m", 64);
     let jobs: usize = args.get_parse("jobs", 4);
-    let mut coord = Coordinator::new(CoordinatorConfig {
-        policy: SchemePolicy::Adaptive,
-        backend: parse_backend(args),
-        ..CoordinatorConfig::default()
-    });
+    let mut coord = Coordinator::new(
+        CoordinatorConfig::builder()
+            .policy(SchemePolicy::Adaptive)
+            .backend(parse_backend(args))
+            .build(),
+    );
     let mut rng = ChaChaRng::seed_from_u64(11);
     for _ in 0..jobs {
         let a = FpMat::random(&mut rng, m, m);
         let b = FpMat::random(&mut rng, m, m);
-        coord.submit(a, b, s, t, z);
+        coord.submit(a, b, s, t, z)?;
     }
     let t0 = std::time::Instant::now();
-    let reports = coord.run_all()?;
+    let reports = coord.drain();
     let wall = t0.elapsed();
+    let mut ok = 0usize;
     for r in &reports {
-        println!(
-            "job {:>3}  scheme={:<16} N={:<4} cache_hit={:<5} verified={} total={:?}",
-            r.id,
-            r.scheme,
-            r.n_workers,
-            r.setup_cache_hit,
-            r.verified,
-            r.timings.phase1_share + r.timings.phase2_compute
-        );
+        match &r.outcome {
+            Ok(out) => {
+                ok += 1;
+                println!(
+                    "job {:>3}  scheme={:<16} N={:<4} cache_hit={:<5} verified={} total={:?}",
+                    r.id,
+                    r.scheme,
+                    r.n_workers,
+                    r.setup_cache_hit,
+                    out.verified,
+                    out.timings.phase1_share + out.timings.phase2_compute
+                );
+            }
+            Err(e) => println!("job {:>3}  FAILED: {e}", r.id),
+        }
     }
     println!(
-        "\n{} jobs in {:?} → {:.2} jobs/s",
+        "\n{ok}/{} jobs succeeded in {wall:?} → {:.2} jobs/s",
         reports.len(),
-        wall,
         reports.len() as f64 / wall.as_secs_f64()
     );
     Ok(())
 }
 
-fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+fn cmd_figures(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get("out").unwrap_or("results"));
     let zmax: usize = args.get_parse("zmax", 300);
     std::fs::create_dir_all(&out)?;

@@ -1,0 +1,221 @@
+//! Session-based serving: provision a worker deployment once, stream many
+//! jobs through it.
+//!
+//! The paper's Algorithm 3 splits naturally into a *provisioning* phase
+//! (Phase 0 scheme selection, α assignment, the O(N³) generalized-Vandermonde
+//! solve — all independent of the job matrices) and a *per-job* phase
+//! (share generation, worker compute, reconstruction). [`Deployment`] owns
+//! the provisioning products — the resolved scheme, the cached
+//! [`Setup`], and the backend factory (executor service + artifact cache) —
+//! so [`Deployment::execute`] pays only the per-job cost:
+//!
+//! ```no_run
+//! use cmpc::codes::SchemeParams;
+//! use cmpc::matrix::FpMat;
+//! use cmpc::mpc::protocol::ProtocolConfig;
+//! use cmpc::util::rng::ChaChaRng;
+//! use cmpc::{Deployment, SchemeSpec};
+//!
+//! # fn main() -> cmpc::Result<()> {
+//! let params = SchemeParams::try_new(2, 2, 2)?;
+//! let dep = Deployment::provision(
+//!     SchemeSpec::Age { lambda: None },
+//!     params,
+//!     ProtocolConfig::default(),
+//! )?;
+//! let mut rng = ChaChaRng::seed_from_u64(1);
+//! for _ in 0..3 {
+//!     let a = FpMat::random(&mut rng, 64, 64);
+//!     let b = FpMat::random(&mut rng, 64, 64);
+//!     let out = dep.execute(&a, &b)?; // Setup solved once, reused here
+//!     assert_eq!(out.y, a.transpose().matmul(&b));
+//! }
+//! assert_eq!(dep.jobs_executed(), 3);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! A failed `execute` (e.g. a [`CmpcError::ShapeMismatch`] job) leaves the
+//! deployment intact — subsequent jobs keep flowing.
+//!
+//! [`CmpcError::ShapeMismatch`]: crate::error::CmpcError::ShapeMismatch
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
+use crate::error::Result;
+use crate::matrix::FpMat;
+use crate::mpc::protocol::{self, ProtocolConfig, ProtocolOutput, Setup};
+use crate::runtime::BackendFactory;
+
+/// A provisioned worker deployment: resolved scheme + cached [`Setup`] +
+/// shared backend, reusable across any number of jobs with the same
+/// `(scheme, s, t, z)` signature.
+pub struct Deployment {
+    scheme: Arc<dyn CmpcScheme>,
+    setup: Arc<Setup>,
+    factory: Arc<BackendFactory>,
+    config: ProtocolConfig,
+    /// Jobs attempted through this deployment (successful or not); also
+    /// perturbs the per-job secret seed so repeated jobs draw fresh masks.
+    jobs_executed: AtomicU64,
+}
+
+impl Deployment {
+    /// Resolve `spec` for `params` and provision the deployment: α
+    /// assignment, the O(N³) reconstruction solve, and the backend factory
+    /// all happen here, once.
+    pub fn provision(
+        spec: SchemeSpec,
+        params: SchemeParams,
+        config: ProtocolConfig,
+    ) -> Result<Deployment> {
+        Deployment::for_scheme(spec.resolve(params)?, config)
+    }
+
+    /// Provision with registry-wide adaptive scheme selection (Phase 0 of
+    /// Algorithm 3): the constructible scheme with the fewest workers.
+    pub fn provision_adaptive(params: SchemeParams, config: ProtocolConfig) -> Result<Deployment> {
+        Deployment::for_scheme(SchemeSpec::resolve_adaptive(params)?, config)
+    }
+
+    /// Provision around an already-constructed scheme instance (custom or
+    /// experimental constructions outside the registry).
+    pub fn for_scheme(scheme: Arc<dyn CmpcScheme>, config: ProtocolConfig) -> Result<Deployment> {
+        let factory = Arc::new(BackendFactory::new(&config.backend)?);
+        Deployment::for_scheme_with_factory(scheme, config, factory)
+    }
+
+    /// Provision sharing an existing backend factory — the coordinator path,
+    /// where one executor service backs every deployment.
+    pub fn for_scheme_with_factory(
+        scheme: Arc<dyn CmpcScheme>,
+        config: ProtocolConfig,
+        factory: Arc<BackendFactory>,
+    ) -> Result<Deployment> {
+        let setup = Arc::new(protocol::prepare_setup(scheme.as_ref())?);
+        Ok(Deployment {
+            scheme,
+            setup,
+            factory,
+            config,
+            jobs_executed: AtomicU64::new(0),
+        })
+    }
+
+    /// Run one `Y = AᵀB` job through the provisioned fabric. Per-job secret
+    /// randomness is derived from the config seed and an atomically claimed
+    /// job counter, so concurrent jobs on a shared deployment never reuse
+    /// masks.
+    pub fn execute(&self, a: &FpMat, b: &FpMat) -> Result<ProtocolOutput> {
+        // One fetch_add both claims a unique seed slot and counts the job —
+        // a separate load would let two racing executes draw the same masks.
+        let k = self.jobs_executed.fetch_add(1, Ordering::Relaxed);
+        let seed = self
+            .config
+            .seed
+            .wrapping_add(k.wrapping_mul(0x9E3779B97F4A7C15));
+        self.run(a, b, seed)
+    }
+
+    /// [`Deployment::execute`] with an explicit secret seed (reproducible
+    /// serving tests; the coordinator assigns per-job seeds at intake).
+    /// Callers own mask-reuse avoidance across their seeds.
+    pub fn execute_seeded(&self, a: &FpMat, b: &FpMat, seed: u64) -> Result<ProtocolOutput> {
+        self.jobs_executed.fetch_add(1, Ordering::Relaxed);
+        self.run(a, b, seed)
+    }
+
+    fn run(&self, a: &FpMat, b: &FpMat, seed: u64) -> Result<ProtocolOutput> {
+        let cfg = ProtocolConfig {
+            seed,
+            ..self.config.clone()
+        };
+        protocol::run_protocol_with_factory(
+            self.scheme.as_ref(),
+            &self.setup,
+            a,
+            b,
+            &cfg,
+            &self.factory,
+        )
+    }
+
+    /// The resolved scheme this deployment runs.
+    pub fn scheme(&self) -> &dyn CmpcScheme {
+        self.scheme.as_ref()
+    }
+
+    /// The scheme parameters of this deployment.
+    pub fn params(&self) -> SchemeParams {
+        self.scheme.params()
+    }
+
+    /// Provisioned worker count.
+    pub fn n_workers(&self) -> usize {
+        self.setup.n_workers
+    }
+
+    /// Jobs attempted through the cached setup (the Setup itself was solved
+    /// exactly once, at provisioning).
+    pub fn jobs_executed(&self) -> u64 {
+        self.jobs_executed.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::CmpcError;
+    use crate::util::rng::ChaChaRng;
+
+    #[test]
+    fn deployment_reuses_setup_across_jobs() {
+        let params = SchemeParams::new(2, 2, 2);
+        let dep = Deployment::provision(
+            SchemeSpec::Age { lambda: None },
+            params,
+            ProtocolConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(dep.n_workers(), 17);
+        let mut rng = ChaChaRng::seed_from_u64(10);
+        for _ in 0..3 {
+            let a = FpMat::random(&mut rng, 8, 8);
+            let b = FpMat::random(&mut rng, 8, 8);
+            let out = dep.execute(&a, &b).unwrap();
+            assert!(out.verified);
+            assert_eq!(out.y, a.transpose().matmul(&b));
+        }
+        assert_eq!(dep.jobs_executed(), 3);
+    }
+
+    #[test]
+    fn failed_job_leaves_deployment_usable() {
+        let params = SchemeParams::new(2, 2, 1);
+        let dep =
+            Deployment::provision_adaptive(params, ProtocolConfig::default()).unwrap();
+        let mut rng = ChaChaRng::seed_from_u64(11);
+        let bad_a = FpMat::random(&mut rng, 6, 6);
+        let bad_b = FpMat::random(&mut rng, 7, 7); // size disagrees with A
+        let err = dep.execute(&bad_a, &bad_b).unwrap_err();
+        assert!(matches!(err, CmpcError::ShapeMismatch(_)));
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        assert!(dep.execute(&a, &b).unwrap().verified);
+        assert_eq!(dep.jobs_executed(), 2);
+    }
+
+    #[test]
+    fn provision_rejects_bad_spec() {
+        let params = SchemeParams::new(2, 2, 2);
+        let err = Deployment::provision(
+            SchemeSpec::Age { lambda: Some(9) },
+            params,
+            ProtocolConfig::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, CmpcError::InvalidParams(_)));
+    }
+}

@@ -8,10 +8,10 @@
 
 use std::sync::Arc;
 
-use crate::ff;
+use crate::error::{CmpcError, Result};
 use crate::matrix::FpMat;
 use crate::mpc::network::{Endpoint, Payload};
-use crate::poly::interp::vandermonde_inverse_rows;
+use crate::poly::interp::try_vandermonde_inverse_rows;
 
 /// Result of the master phase.
 pub struct MasterOutput {
@@ -33,29 +33,38 @@ pub fn run_master(
     n_workers: usize,
     t: usize,
     z: usize,
-) -> anyhow::Result<MasterOutput> {
+) -> Result<MasterOutput> {
     let needed = t * t + z;
-    anyhow::ensure!(
-        needed <= n_workers,
-        "reconstruction needs t²+z = {needed} shares but only {n_workers} workers exist"
-    );
+    if needed > n_workers {
+        return Err(CmpcError::InsufficientWorkers {
+            needed,
+            provisioned: n_workers,
+        });
+    }
     let mut arrived: Vec<(usize, FpMat)> = Vec::with_capacity(needed);
     while arrived.len() < needed {
         let env = endpoint
             .recv()
-            .map_err(|_| anyhow::anyhow!("fabric closed before reconstruction"))?;
+            .map_err(|_| CmpcError::Fabric("fabric closed before reconstruction".to_string()))?;
         match env.payload {
             Payload::IShare(m) => arrived.push((env.from, m)),
-            other => anyhow::bail!("master: unexpected {other:?}"),
+            other => {
+                return Err(CmpcError::Fabric(format!("master: unexpected {other:?}")));
+            }
         }
     }
     let used_workers: Vec<usize> = arrived.iter().map(|&(id, _)| id).collect();
 
     // Dense Vandermonde over the arrived points: coefficient c_e of I(x)
-    // satisfies c_e = Σₙ rows[e][n]·I(αₙ).
+    // satisfies c_e = Σₙ rows[e][n]·I(αₙ). Distinct αs make the dense solve
+    // invertible; a `None` here means corrupted shares.
     let pts: Vec<u64> = used_workers.iter().map(|&id| alphas[id]).collect();
     let support: Vec<u64> = (0..needed as u64).collect();
-    let rows = vandermonde_inverse_rows(&pts, &support);
+    let rows = try_vandermonde_inverse_rows(&pts, &support).ok_or_else(|| {
+        CmpcError::NotDecodable(
+            "singular dense Vandermonde during reconstruction (repeated αs?)".to_string(),
+        )
+    })?;
 
     // Y blocks are coefficients 0..t² (power i + t·l).
     let block = arrived[0].1.rows;
@@ -74,11 +83,9 @@ pub fn run_master(
             }
         }
     }
-    // Sanity: the top z coefficients are mask sums; reconstructing them is
-    // unnecessary, but verify the degree bound by checking one random
-    // linear identity would cost another pass — decodability is instead
-    // asserted end-to-end by the caller (Y == AᵀB in verify mode).
-    let _ = ff::P;
+    // The top z coefficients of I(x) are mask sums; reconstructing them is
+    // unnecessary — decodability is asserted end-to-end by the caller
+    // (Y == AᵀB in verify mode).
     Ok(MasterOutput {
         y: FpMat::from_blocks(&y_blocks),
         stragglers_tolerated: n_workers - needed,

@@ -18,6 +18,7 @@
 //! [`network::Fabric`], which meters scalars per edge class so measured
 //! communication can be asserted against ζ (eq. 34).
 
+pub mod deployment;
 pub mod master;
 pub mod network;
 pub mod privacy;

@@ -1,15 +1,21 @@
 //! End-to-end orchestration of one CMPC job (Algorithm 3).
 //!
-//! [`run_protocol`] wires the whole thing together: setup (α assignment and
-//! the generalized-Vandermonde solve for the `rₙ^{(i,l)}` coefficients),
-//! Phase 1 source sharing, `N` Phase-2 worker threads over the network
-//! fabric, and Phase-3 master reconstruction — then verifies `Y = AᵀB`
-//! natively when asked.
+//! The serving-facing surface is [`crate::mpc::deployment::Deployment`]
+//! (provision once, execute many jobs); this module holds the underlying
+//! machinery it drives: setup (α assignment and the generalized-Vandermonde
+//! solve for the `rₙ^{(i,l)}` coefficients), Phase 1 source sharing, `N`
+//! Phase-2 worker threads over the network fabric, and Phase-3 master
+//! reconstruction — then native verification of `Y = AᵀB` when asked.
+//!
+//! Every entry point returns [`crate::error::Result`]; malformed inputs
+//! surface as typed [`CmpcError`]s instead of panics, so one bad job cannot
+//! take down a serving process.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::codes::CmpcScheme;
+use crate::codes::{CmpcScheme, SchemeParams};
+use crate::error::{CmpcError, Result};
 use crate::matrix::FpMat;
 use crate::metrics::{PhaseTimings, TrafficReport, WorkerCounters};
 use crate::mpc::network::{Fabric, Payload};
@@ -28,6 +34,7 @@ pub struct ProtocolConfig {
     /// Check `Y == AᵀB` natively before returning.
     pub verify: bool,
     /// Per-worker injected compute delay (straggler model); empty = none.
+    /// When non-empty, its length must equal the deployment's worker count.
     pub worker_delays: Vec<Duration>,
     /// Per-hop link latency.
     pub link_delay: Option<Duration>,
@@ -45,6 +52,52 @@ impl Default for ProtocolConfig {
     }
 }
 
+impl ProtocolConfig {
+    /// Start a builder over the defaults.
+    pub fn builder() -> ProtocolConfigBuilder {
+        ProtocolConfigBuilder {
+            config: ProtocolConfig::default(),
+        }
+    }
+}
+
+/// Builder for [`ProtocolConfig`].
+#[derive(Clone, Debug, Default)]
+pub struct ProtocolConfigBuilder {
+    config: ProtocolConfig,
+}
+
+impl ProtocolConfigBuilder {
+    pub fn backend(mut self, backend: BackendChoice) -> Self {
+        self.config.backend = backend;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.config.seed = seed;
+        self
+    }
+
+    pub fn verify(mut self, verify: bool) -> Self {
+        self.config.verify = verify;
+        self
+    }
+
+    pub fn worker_delays(mut self, delays: Vec<Duration>) -> Self {
+        self.config.worker_delays = delays;
+        self
+    }
+
+    pub fn link_delay(mut self, delay: Option<Duration>) -> Self {
+        self.config.link_delay = delay;
+        self
+    }
+
+    pub fn build(self) -> ProtocolConfig {
+        self.config
+    }
+}
+
 /// Everything a run reports back.
 pub struct ProtocolOutput {
     pub y: FpMat,
@@ -59,8 +112,10 @@ pub struct ProtocolOutput {
 }
 
 /// Precomputed per-deployment state reusable across jobs with the same
-/// scheme and shape (the coordinator caches this — the O(N³) solve dominates
-/// setup).
+/// scheme and shape (the coordinator and [`Deployment`] cache this — the
+/// O(N³) solve dominates setup).
+///
+/// [`Deployment`]: crate::mpc::deployment::Deployment
 pub struct Setup {
     pub alphas: Arc<Vec<u64>>,
     /// `r_coeffs[n][i + t·l]` = worker n's combination coefficient for the
@@ -70,59 +125,100 @@ pub struct Setup {
 }
 
 /// Build the α assignment and reconstruction coefficients for a scheme.
-pub fn prepare_setup(scheme: &dyn CmpcScheme) -> Setup {
+pub fn prepare_setup(scheme: &dyn CmpcScheme) -> Result<Setup> {
     let p = scheme.params();
     let n = scheme.n_workers();
+    let needed = p.t * p.t + p.z;
+    if needed > n {
+        return Err(CmpcError::InsufficientWorkers {
+            needed,
+            provisioned: n,
+        });
+    }
     let support = scheme.reconstruction_support();
-    let (alphas, inv_rows) = choose_alphas(n, &support);
+    let (alphas, inv_rows) = choose_alphas(n, &support)?;
     // Worker n needs r_n^{(i,l)} = inv_rows[row_of(imp(i,l))][n].
     let mut r_coeffs = vec![vec![0u64; p.t * p.t]; n];
     for i in 0..p.t {
         for l in 0..p.t {
             let e = scheme.important_power(i, l);
-            let row = support
-                .binary_search(&e)
-                .expect("important power missing from reconstruction support");
+            let row = support.binary_search(&e).map_err(|_| {
+                CmpcError::NotDecodable(format!(
+                    "important power {e} missing from the reconstruction \
+                     support of {}",
+                    scheme.name()
+                ))
+            })?;
             for (wn, coeffs) in r_coeffs.iter_mut().enumerate() {
                 coeffs[i + p.t * l] = inv_rows[row][wn];
             }
         }
     }
-    Setup {
+    Ok(Setup {
         alphas: Arc::new(alphas),
         r_coeffs: Arc::new(r_coeffs),
         n_workers: n,
+    })
+}
+
+/// Check one job's matrices against each other and the scheme partition.
+/// Shared by [`Deployment::execute`] and `Coordinator::submit` intake.
+///
+/// [`Deployment::execute`]: crate::mpc::deployment::Deployment::execute
+pub fn validate_job_shapes(a: &FpMat, b: &FpMat, params: SchemeParams) -> Result<()> {
+    if a.rows != a.cols || b.rows != b.cols || a.rows != b.rows {
+        return Err(CmpcError::ShapeMismatch(format!(
+            "inputs must be square matrices of equal size (got {}x{} and {}x{})",
+            a.rows, a.cols, b.rows, b.cols
+        )));
     }
+    let m = a.rows;
+    if m == 0 {
+        return Err(CmpcError::ShapeMismatch("inputs must be non-empty".to_string()));
+    }
+    if m % params.s != 0 || m % params.t != 0 {
+        return Err(CmpcError::ShapeMismatch(format!(
+            "partition (s={}, t={}) must divide m={m}",
+            params.s, params.t
+        )));
+    }
+    Ok(())
 }
 
 /// Run one full CMPC multiplication under `scheme`.
+#[deprecated(
+    since = "0.2.0",
+    note = "provision a `cmpc::Deployment` and call `execute` — it caches the \
+            O(N³) setup and the backend across jobs"
+)]
 pub fn run_protocol(
     scheme: &dyn CmpcScheme,
     a: &FpMat,
     b: &FpMat,
     config: &ProtocolConfig,
-) -> anyhow::Result<ProtocolOutput> {
-    let setup = prepare_setup(scheme);
+) -> Result<ProtocolOutput> {
+    let setup = prepare_setup(scheme)?;
     run_protocol_with_setup(scheme, &setup, a, b, config)
 }
 
 /// Run one job against a prepared (possibly cached) [`Setup`], constructing
 /// a fresh backend factory. Callers issuing many jobs should build the
-/// factory once (PJRT client creation + artifact compilation are expensive)
-/// and use [`run_protocol_with_factory`].
+/// factory once (backend service startup + artifact loading are expensive)
+/// and use [`run_protocol_with_factory`] — or, at a higher level, a
+/// [`crate::mpc::deployment::Deployment`].
 pub fn run_protocol_with_setup(
     scheme: &dyn CmpcScheme,
     setup: &Setup,
     a: &FpMat,
     b: &FpMat,
     config: &ProtocolConfig,
-) -> anyhow::Result<ProtocolOutput> {
+) -> Result<ProtocolOutput> {
     let factory = BackendFactory::new(&config.backend)?;
     run_protocol_with_factory(scheme, setup, a, b, config, &factory)
 }
 
-/// Run one job with an existing backend factory (shared PJRT service and
-/// executable cache across jobs — the steady-state serving path).
+/// Run one job with an existing backend factory (shared executor service and
+/// artifact cache across jobs — the steady-state serving path).
 pub fn run_protocol_with_factory(
     scheme: &dyn CmpcScheme,
     setup: &Setup,
@@ -130,25 +226,18 @@ pub fn run_protocol_with_factory(
     b: &FpMat,
     config: &ProtocolConfig,
     backend_factory: &BackendFactory,
-) -> anyhow::Result<ProtocolOutput> {
+) -> Result<ProtocolOutput> {
     let p = scheme.params();
-    let m = a.rows;
-    anyhow::ensure!(
-        a.rows == a.cols && b.rows == b.cols && a.rows == b.rows,
-        "inputs must be square matrices of equal size (got {}x{} and {}x{})",
-        a.rows,
-        a.cols,
-        b.rows,
-        b.cols
-    );
-    anyhow::ensure!(
-        m % p.s == 0 && m % p.t == 0,
-        "partition (s={}, t={}) must divide m={m}",
-        p.s,
-        p.t
-    );
-    let t_setup = Instant::now();
+    validate_job_shapes(a, b, p)?;
     let n = setup.n_workers;
+    if !config.worker_delays.is_empty() && config.worker_delays.len() != n {
+        return Err(CmpcError::InvalidParams(format!(
+            "worker_delays has {} entries but the deployment provisions {n} \
+             workers (leave empty for no injected delay)",
+            config.worker_delays.len()
+        )));
+    }
+    let t_setup = Instant::now();
     let mut job_rng = ChaChaRng::seed_from_u64(config.seed);
     let mut rng_src_a = job_rng.fork();
     let mut rng_src_b = job_rng.fork();
@@ -186,7 +275,7 @@ pub fn run_protocol_with_factory(
             std::thread::Builder::new()
                 .name(format!("cmpc-worker-{wid}"))
                 .spawn(move || worker::run_worker(ctx, endpoint, fabric, backend))
-                .expect("spawn worker"),
+                .expect("spawn worker thread"),
         );
     }
 
@@ -205,7 +294,7 @@ pub fn run_protocol_with_factory(
         // identically (both legs are source→worker).
         fabric
             .send(fabric.source_a_id(), wid, payload)
-            .map_err(|_| anyhow::anyhow!("worker {wid} unreachable in phase 1"))?;
+            .map_err(|_| CmpcError::Fabric(format!("worker {wid} unreachable in phase 1")))?;
     }
     let phase1 = t1.elapsed();
 
@@ -217,7 +306,7 @@ pub fn run_protocol_with_factory(
     // counter totals. Their tail time counts toward phase 2.
     for h in handles {
         h.join()
-            .map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+            .map_err(|_| CmpcError::Fabric("worker thread panicked".to_string()))??;
     }
     let all_done = t2.elapsed();
 
@@ -226,12 +315,11 @@ pub fn run_protocol_with_factory(
     } else {
         false
     };
-    if config.verify {
-        anyhow::ensure!(
-            verified,
+    if config.verify && !verified {
+        return Err(CmpcError::NotDecodable(format!(
             "reconstruction mismatch: Y != AᵀB under {}",
             scheme.name()
-        );
+        )));
     }
 
     Ok(ProtocolOutput {
@@ -253,6 +341,10 @@ pub fn run_protocol_with_factory(
 
 #[cfg(test)]
 mod tests {
+    // The deprecated `run_protocol` wrapper stays covered here until it is
+    // removed; the deployment tests exercise the replacement path.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc};
     use crate::util::testing::property;
@@ -294,10 +386,7 @@ mod tests {
             let scheme = AgeCmpc::with_optimal_lambda(s, t, z);
             let a = FpMat::random(rng, m, m);
             let b = FpMat::random(rng, m, m);
-            let cfg = ProtocolConfig {
-                seed: rng.next_u64(),
-                ..ProtocolConfig::default()
-            };
+            let cfg = ProtocolConfig::builder().seed(rng.next_u64()).build();
             let out = run_protocol(&scheme, &a, &b, &cfg)
                 .map_err(|e| format!("s={s} t={t} z={z} m={m}: {e}"))?;
             if out.y != a.transpose().matmul(&b) {
@@ -315,10 +404,7 @@ mod tests {
         let mut delays = vec![Duration::ZERO; 17];
         delays[0] = Duration::from_millis(150);
         delays[5] = Duration::from_millis(150);
-        let cfg = ProtocolConfig {
-            worker_delays: delays,
-            ..ProtocolConfig::default()
-        };
+        let cfg = ProtocolConfig::builder().worker_delays(delays).build();
         let mut rng = ChaChaRng::seed_from_u64(77);
         let a = FpMat::random(&mut rng, 8, 8);
         let b = FpMat::random(&mut rng, 8, 8);
@@ -366,6 +452,35 @@ mod tests {
         let mut rng = ChaChaRng::seed_from_u64(2);
         let a = FpMat::random(&mut rng, 8, 8); // 3 ∤ 8
         let b = FpMat::random(&mut rng, 8, 8);
-        assert!(run_protocol(&scheme, &a, &b, &ProtocolConfig::default()).is_err());
+        let err = run_protocol(&scheme, &a, &b, &ProtocolConfig::default()).unwrap_err();
+        assert!(matches!(err, CmpcError::ShapeMismatch(_)));
+    }
+
+    #[test]
+    fn rejects_mismatched_worker_delays() {
+        let scheme = AgeCmpc::with_optimal_lambda(2, 2, 2); // N = 17
+        let mut rng = ChaChaRng::seed_from_u64(3);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        let cfg = ProtocolConfig::builder()
+            .worker_delays(vec![Duration::ZERO; 3])
+            .build();
+        let err = run_protocol(&scheme, &a, &b, &cfg).unwrap_err();
+        assert!(matches!(err, CmpcError::InvalidParams(_)));
+    }
+
+    #[test]
+    fn builder_round_trips_every_knob() {
+        let cfg = ProtocolConfig::builder()
+            .backend(BackendChoice::Native)
+            .seed(99)
+            .verify(false)
+            .worker_delays(vec![Duration::from_millis(1); 2])
+            .link_delay(Some(Duration::from_micros(5)))
+            .build();
+        assert_eq!(cfg.seed, 99);
+        assert!(!cfg.verify);
+        assert_eq!(cfg.worker_delays.len(), 2);
+        assert_eq!(cfg.link_delay, Some(Duration::from_micros(5)));
     }
 }

@@ -16,6 +16,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::error::{CmpcError, Result};
 use crate::ff;
 use crate::matrix::FpMat;
 use crate::metrics::WorkerCounters;
@@ -47,7 +48,7 @@ pub fn run_worker(
     endpoint: Endpoint,
     fabric: Arc<Fabric>,
     mut backend: Box<dyn MatmulBackend>,
-) -> anyhow::Result<()> {
+) -> Result<()> {
     let n = ctx.n_workers;
     let t2 = ctx.t * ctx.t;
     // --- receive shares (Phase 1 tail) ---
@@ -57,11 +58,16 @@ pub fn run_worker(
     let (fa, fb) = loop {
         let env = endpoint
             .recv()
-            .map_err(|_| anyhow::anyhow!("worker {} fabric closed", ctx.id))?;
+            .map_err(|_| CmpcError::Fabric(format!("worker {} fabric closed", ctx.id)))?;
         match env.payload {
             Payload::Shares { fa, fb } => break (fa, fb),
             Payload::GShare(g) => early_g.push(g),
-            other => anyhow::bail!("worker {}: unexpected {other:?}", ctx.id),
+            other => {
+                return Err(CmpcError::Fabric(format!(
+                    "worker {}: unexpected {other:?}",
+                    ctx.id
+                )));
+            }
         }
     };
     ctx.counters.add_stored((fa.len() + fb.len()) as u64);
@@ -118,9 +124,9 @@ pub fn run_worker(
             own_g = Some(g);
         } else {
             // Peer may already be done only in failure teardown; surface it.
-            fabric
-                .send(ctx.id, peer, Payload::GShare(g))
-                .map_err(|_| anyhow::anyhow!("worker {}: peer {peer} unreachable", ctx.id))?;
+            fabric.send(ctx.id, peer, Payload::GShare(g)).map_err(|_| {
+                CmpcError::Fabric(format!("worker {}: peer {peer} unreachable", ctx.id))
+            })?;
         }
     }
 
@@ -133,16 +139,21 @@ pub fn run_worker(
         received += 1;
     }
     while received < n - 1 {
-        let env = endpoint
-            .recv()
-            .map_err(|_| anyhow::anyhow!("worker {}: fabric closed mid-exchange", ctx.id))?;
+        let env = endpoint.recv().map_err(|_| {
+            CmpcError::Fabric(format!("worker {}: fabric closed mid-exchange", ctx.id))
+        })?;
         match env.payload {
             Payload::GShare(g) => {
                 ctx.counters.add_stored(g.len() as u64);
                 i_share = i_share.add(&g);
                 received += 1;
             }
-            other => anyhow::bail!("worker {}: unexpected {other:?}", ctx.id),
+            other => {
+                return Err(CmpcError::Fabric(format!(
+                    "worker {}: unexpected {other:?}",
+                    ctx.id
+                )));
+            }
         }
     }
     ctx.counters.add_stored(i_share.len() as u64);

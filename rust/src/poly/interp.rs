@@ -9,6 +9,7 @@
 //!   sparse support `{e₁..e_N}`, each worker holds `H(αₙ)`, and
 //!   `coeff_{e_j} = Σₙ rows[j][n] · H(αₙ)`.
 
+use crate::error::{CmpcError, Result};
 use crate::ff::{self, P};
 
 /// Interpolate the dense coefficient vector of the unique polynomial of
@@ -132,26 +133,55 @@ pub fn vandermonde_inverse_rows(alphas: &[u64], support: &[u64]) -> Vec<Vec<u64>
 /// The protocol only needs distinctness; small consecutive αs keep `αᵉ`
 /// computations cheap, and the offset lets callers re-draw when a sparse
 /// generalized Vandermonde comes out singular.
+///
+/// Fails with [`CmpcError::InvalidParams`] when the field cannot supply
+/// `n + offset` distinct nonzero points (α-space exhaustion).
+pub fn try_evaluation_points(n: usize, offset: u64) -> Result<Vec<u64>> {
+    if (n as u64).saturating_add(offset) >= P - 1 {
+        return Err(CmpcError::InvalidParams(format!(
+            "α space exhausted: need n+offset < p-1 = {} distinct nonzero \
+             evaluation points (n={n}, offset={offset})",
+            P - 1
+        )));
+    }
+    Ok((1 + offset..=n as u64 + offset).collect())
+}
+
+/// Infallible wrapper over [`try_evaluation_points`] for sweep-sized `n`.
+///
+/// # Panics
+/// Panics when the α space is exhausted.
 pub fn evaluation_points(n: usize, offset: u64) -> Vec<u64> {
-    assert!(
-        (n as u64) + offset < P - 1,
-        "need n+offset < p-1 distinct nonzero points (n={n})"
-    );
-    (1 + offset..=n as u64 + offset).collect()
+    match try_evaluation_points(n, offset) {
+        Ok(pts) => pts,
+        Err(e) => panic!("{e}"),
+    }
 }
 
 /// Pick evaluation points and the generalized-Vandermonde inverse for the
 /// given support, re-drawing αs until the matrix inverts. Returns
 /// `(alphas, inverse_rows)`.
-pub fn choose_alphas(n: usize, support: &[u64]) -> (Vec<u64>, Vec<Vec<u64>>) {
-    assert_eq!(n, support.len());
+///
+/// Fails with [`CmpcError::InvalidParams`] if `n ≠ |support|` or the α space
+/// is exhausted, and with [`CmpcError::NotDecodable`] if no offset in the
+/// re-draw budget yields an invertible generalized Vandermonde.
+pub fn choose_alphas(n: usize, support: &[u64]) -> Result<(Vec<u64>, Vec<Vec<u64>>)> {
+    if n != support.len() {
+        return Err(CmpcError::InvalidParams(format!(
+            "need exactly |support| = {} evaluation points, got n = {n}",
+            support.len()
+        )));
+    }
     for offset in 0..1024u64 {
-        let alphas = evaluation_points(n, offset);
+        // Exhaustion only gets worse as the offset grows — fail fast.
+        let alphas = try_evaluation_points(n, offset)?;
         if let Some(rows) = try_vandermonde_inverse_rows(&alphas, support) {
-            return (alphas, rows);
+            return Ok((alphas, rows));
         }
     }
-    panic!("no invertible α assignment found in 1024 draws (support len {n})");
+    Err(CmpcError::NotDecodable(format!(
+        "no invertible α assignment found in 1024 draws (support len {n})"
+    )))
 }
 
 #[cfg(test)]

@@ -14,6 +14,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use crate::error::{CmpcError, Result};
+
 /// Shape key for a modular matmul artifact: `(M, K, N)`.
 pub type MatmulShape = (usize, usize, usize);
 
@@ -27,13 +29,13 @@ pub struct Manifest {
 impl Manifest {
     /// Load `<dir>/manifest.txt`; missing file yields an empty manifest
     /// (every shape falls back to native compute).
-    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+    pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.txt");
         let mut manifest = Manifest::default();
         let text = match std::fs::read_to_string(&path) {
             Ok(t) => t,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(manifest),
-            Err(e) => return Err(anyhow::anyhow!("reading {}: {e}", path.display())),
+            Err(e) => return Err(CmpcError::Io(format!("reading {}: {e}", path.display()))),
         };
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
@@ -44,17 +46,17 @@ impl Manifest {
             match fields.as_slice() {
                 ["matmul_mod", m, k, n, rel] => {
                     let shape: MatmulShape = (
-                        m.parse().map_err(|e| bad_line(lineno, e))?,
-                        k.parse().map_err(|e| bad_line(lineno, e))?,
-                        n.parse().map_err(|e| bad_line(lineno, e))?,
+                        m.parse().map_err(|e| bad_line(lineno, &e))?,
+                        k.parse().map_err(|e| bad_line(lineno, &e))?,
+                        n.parse().map_err(|e| bad_line(lineno, &e))?,
                     );
                     manifest.matmul.insert(shape, dir.join(rel));
                 }
                 _ => {
-                    return Err(anyhow::anyhow!(
+                    return Err(CmpcError::BackendUnavailable(format!(
                         "manifest.txt line {}: unrecognized record {line:?}",
                         lineno + 1
-                    ))
+                    )))
                 }
             }
         }
@@ -66,8 +68,8 @@ impl Manifest {
     }
 }
 
-fn bad_line(lineno: usize, e: std::num::ParseIntError) -> anyhow::Error {
-    anyhow::anyhow!("manifest.txt line {}: {e}", lineno + 1)
+fn bad_line(lineno: usize, e: &std::num::ParseIntError) -> CmpcError {
+    CmpcError::BackendUnavailable(format!("manifest.txt line {}: {e}", lineno + 1))
 }
 
 #[cfg(test)]

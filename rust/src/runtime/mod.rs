@@ -4,20 +4,23 @@
 //!
 //! * [`NativeBackend`] — the cache-blocked Rust matmul from
 //!   [`crate::matrix`]; always available.
-//! * [`pjrt::PjrtBackend`] — executes the AOT-compiled L2 graph
-//!   (`artifacts/*.hlo.txt`, produced once by `make artifacts` from the JAX
-//!   model that calls the L1 Pallas kernel) on the PJRT CPU client via the
-//!   `xla` crate. Artifacts are shape-specialized; requests for shapes
-//!   without an artifact fall back to native and are recorded.
+//! * [`pjrt::PjrtBackend`] — handles into the artifact executor service
+//!   ([`pjrt::PjrtService`]), which serves shapes covered by the AOT-lowered
+//!   L2 graphs (`artifacts/*.hlo.txt`, produced once by `make artifacts`
+//!   from the JAX model that calls the L1 Pallas kernel). Shapes without an
+//!   artifact fall back to native and are recorded in the service stats.
 //!
-//! The PJRT client is not thread-safe to share, so [`pjrt::PjrtService`]
-//! runs it on a dedicated executor thread; workers hold cheap cloneable
-//! [`pjrt::PjrtBackend`] channel handles — the same "accelerator service"
-//! topology a real edge worker with one attached accelerator would use.
+//! The executor service runs on dedicated lanes (threads); workers hold
+//! cheap cloneable channel handles — the "accelerator service" topology a
+//! real edge worker with one attached accelerator would use. The offline
+//! build vendors no XLA FFI crate, so the executor *validates and caches*
+//! each artifact once per shape and runs the arithmetic with the native
+//! kernel; see [`pjrt`] for the exact substitution story.
 
 pub mod manifest;
 pub mod pjrt;
 
+use crate::error::{CmpcError, Result};
 use crate::matrix::FpMat;
 
 /// A modular-matmul compute engine used by Phase 2 workers.
@@ -25,7 +28,7 @@ pub trait MatmulBackend: Send {
     fn name(&self) -> &'static str;
 
     /// `(a · b) mod p`.
-    fn matmul_mod(&mut self, a: &FpMat, b: &FpMat) -> anyhow::Result<FpMat>;
+    fn matmul_mod(&mut self, a: &FpMat, b: &FpMat) -> Result<FpMat>;
 }
 
 /// Pure-Rust backend (delayed-reduction blocked matmul).
@@ -37,7 +40,13 @@ impl MatmulBackend for NativeBackend {
         "native"
     }
 
-    fn matmul_mod(&mut self, a: &FpMat, b: &FpMat) -> anyhow::Result<FpMat> {
+    fn matmul_mod(&mut self, a: &FpMat, b: &FpMat) -> Result<FpMat> {
+        if a.cols != b.rows {
+            return Err(CmpcError::ShapeMismatch(format!(
+                "matmul inner dimensions disagree: {}x{} · {}x{}",
+                a.rows, a.cols, b.rows, b.cols
+            )));
+        }
         Ok(a.matmul(b))
     }
 }
@@ -48,7 +57,7 @@ pub enum BackendChoice {
     /// Native Rust matmul in every worker.
     #[default]
     Native,
-    /// Shared PJRT executor service loaded from an artifact directory
+    /// Shared artifact executor service loaded from an artifact directory
     /// (falls back to native per shape when no artifact matches).
     Pjrt {
         artifacts_dir: std::path::PathBuf,
@@ -62,7 +71,7 @@ pub enum BackendFactory {
 }
 
 impl BackendFactory {
-    pub fn new(choice: &BackendChoice) -> anyhow::Result<BackendFactory> {
+    pub fn new(choice: &BackendChoice) -> Result<BackendFactory> {
         Ok(match choice {
             BackendChoice::Native => BackendFactory::Native,
             BackendChoice::Pjrt { artifacts_dir } => {
@@ -91,5 +100,14 @@ mod tests {
         let b = FpMat::random(&mut rng, 5, 9);
         let mut be = NativeBackend;
         assert_eq!(be.matmul_mod(&a, &b).unwrap(), a.matmul(&b));
+    }
+
+    #[test]
+    fn native_backend_rejects_bad_inner_dims() {
+        let mut rng = ChaChaRng::seed_from_u64(2);
+        let a = FpMat::random(&mut rng, 4, 5);
+        let b = FpMat::random(&mut rng, 6, 3);
+        let err = NativeBackend.matmul_mod(&a, &b).unwrap_err();
+        assert!(matches!(err, CmpcError::ShapeMismatch(_)));
     }
 }

@@ -1,9 +1,9 @@
 //! Self-contained utility substrates.
 //!
-//! The build environment vendors only the `xla` crate's dependency closure,
-//! so the usual ecosystem crates (rand, clap, serde, proptest, criterion) are
-//! unavailable. This module provides the small, well-tested subset the rest
-//! of the library needs:
+//! The build environment vendors no registry crates at all (the crate is
+//! dependency-free by design), so the usual ecosystem crates (rand, clap,
+//! serde, proptest, criterion, anyhow) are unavailable. This module provides
+//! the small, well-tested subset the rest of the library needs:
 //!
 //! * [`rng`] — a ChaCha12-based deterministic CSPRNG (secret coefficients,
 //!   test-case generation).

@@ -1,0 +1,192 @@
+//! Error-path coverage for the fallible serving API: every malformed input
+//! class the acceptance criteria name must surface as a typed [`CmpcError`]
+//! from the public surface — never a panic.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cmpc::codes::{AgeCmpc, CmpcScheme, PolyDotCmpc, SchemeParams};
+use cmpc::coordinator::{Coordinator, CoordinatorConfig};
+use cmpc::matrix::FpMat;
+use cmpc::mpc::master::run_master;
+use cmpc::mpc::network::Fabric;
+use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::poly::interp::{choose_alphas, try_evaluation_points};
+use cmpc::util::rng::ChaChaRng;
+use cmpc::{CmpcError, Deployment, SchemeSpec};
+
+#[test]
+fn zero_parameters_rejected_as_invalid_params() {
+    for (s, t, z) in [(0usize, 2usize, 1usize), (2, 0, 1), (2, 2, 0), (0, 0, 0)] {
+        let err = SchemeParams::try_new(s, t, z).unwrap_err();
+        assert!(
+            matches!(err, CmpcError::InvalidParams(_)),
+            "(s={s}, t={t}, z={z}) → {err}"
+        );
+    }
+    // the same guard protects every registry family
+    for spec in SchemeSpec::CONSTRUCTIBLE {
+        let err = spec
+            .resolve(SchemeParams { s: 2, t: 2, z: 0 })
+            .unwrap_err();
+        assert!(matches!(err, CmpcError::InvalidParams(_)), "{spec:?}");
+    }
+}
+
+#[test]
+fn scheme_constructors_reject_bad_input_without_panicking() {
+    assert!(matches!(
+        AgeCmpc::try_new(2, 2, 2, 3), // λ > z
+        Err(CmpcError::InvalidParams(_))
+    ));
+    assert!(matches!(
+        AgeCmpc::try_with_optimal_lambda(2, 2, 0),
+        Err(CmpcError::InvalidParams(_))
+    ));
+    assert!(matches!(
+        PolyDotCmpc::try_new(0, 1, 1),
+        Err(CmpcError::InvalidParams(_))
+    ));
+}
+
+#[test]
+fn deployment_rejects_malformed_matrices() {
+    let params = SchemeParams::try_new(2, 2, 1).unwrap();
+    let dep = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::default(),
+    )
+    .unwrap();
+    let mut rng = ChaChaRng::seed_from_u64(1);
+
+    // non-square
+    let rect = FpMat::random(&mut rng, 8, 6);
+    let sq = FpMat::random(&mut rng, 8, 8);
+    assert!(matches!(
+        dep.execute(&rect, &sq),
+        Err(CmpcError::ShapeMismatch(_))
+    ));
+
+    // mismatched sizes
+    let small = FpMat::random(&mut rng, 4, 4);
+    assert!(matches!(
+        dep.execute(&sq, &small),
+        Err(CmpcError::ShapeMismatch(_))
+    ));
+
+    // partition does not divide m (s=t=2, m=7)
+    let odd = FpMat::random(&mut rng, 7, 7);
+    let odd2 = FpMat::random(&mut rng, 7, 7);
+    assert!(matches!(
+        dep.execute(&odd, &odd2),
+        Err(CmpcError::ShapeMismatch(_))
+    ));
+
+    // the deployment survives every rejection
+    let b = FpMat::random(&mut rng, 8, 8);
+    assert!(dep.execute(&sq, &b).unwrap().verified);
+}
+
+#[test]
+fn worker_delay_vector_must_match_deployment_size() {
+    let params = SchemeParams::try_new(2, 2, 2).unwrap();
+    let cfg = ProtocolConfig::builder()
+        .worker_delays(vec![Duration::ZERO; 3]) // deployment has N = 17
+        .build();
+    let dep =
+        Deployment::provision(SchemeSpec::Age { lambda: None }, params, cfg).unwrap();
+    let mut rng = ChaChaRng::seed_from_u64(2);
+    let a = FpMat::random(&mut rng, 8, 8);
+    let b = FpMat::random(&mut rng, 8, 8);
+    let err = dep.execute(&a, &b).unwrap_err();
+    assert!(matches!(err, CmpcError::InvalidParams(_)), "{err}");
+}
+
+#[test]
+fn alpha_space_exhaustion_is_typed() {
+    // GF(65537) cannot supply 70000 distinct nonzero evaluation points.
+    assert!(matches!(
+        try_evaluation_points(70_000, 0),
+        Err(CmpcError::InvalidParams(_))
+    ));
+    let support: Vec<u64> = (0..70_000u64).collect();
+    let err = choose_alphas(70_000, &support).unwrap_err();
+    assert!(matches!(err, CmpcError::InvalidParams(_)), "{err}");
+    assert!(err.to_string().contains('α'), "{err}");
+
+    // n ≠ |support| is caught before any solve
+    let err = choose_alphas(3, &[0, 1]).unwrap_err();
+    assert!(matches!(err, CmpcError::InvalidParams(_)));
+}
+
+#[test]
+fn master_reports_insufficient_workers() {
+    // 2 provisioned workers cannot meet the t²+z = 6 reconstruction quota.
+    let (_fabric, mut endpoints) = Fabric::new(2, None);
+    let master_endpoint = endpoints.remove(2); // node id 2 = master
+    let alphas = Arc::new(vec![1u64, 2]);
+    let err = run_master(&master_endpoint, &alphas, 2, 2, 2).unwrap_err();
+    assert_eq!(
+        err,
+        CmpcError::InsufficientWorkers {
+            needed: 6,
+            provisioned: 2
+        }
+    );
+}
+
+#[test]
+fn coordinator_reports_backend_failure_per_job() {
+    // "/dev/null" as a directory component makes the artifact manifest
+    // unreadable: deployment provisioning fails, the report carries the
+    // typed error, and the drain still completes.
+    let mut coord = Coordinator::new(
+        CoordinatorConfig::builder()
+            .backend(cmpc::runtime::BackendChoice::Pjrt {
+                artifacts_dir: std::path::PathBuf::from("/dev/null"),
+            })
+            .build(),
+    );
+    let mut rng = ChaChaRng::seed_from_u64(3);
+    let a = FpMat::random(&mut rng, 8, 8);
+    let b = FpMat::random(&mut rng, 8, 8);
+    coord.submit(a, b, 2, 2, 1).unwrap();
+    let reports = coord.drain();
+    assert_eq!(reports.len(), 1);
+    assert!(reports[0].outcome.is_err());
+}
+
+#[test]
+fn custom_scheme_with_missing_important_power_is_not_decodable() {
+    // A scheme whose important powers point outside its reconstruction
+    // support must fail provisioning with NotDecodable, not panic.
+    struct Sabotaged(AgeCmpc);
+    impl CmpcScheme for Sabotaged {
+        fn name(&self) -> String {
+            "sabotaged".into()
+        }
+        fn params(&self) -> SchemeParams {
+            self.0.params()
+        }
+        fn coded_power_a(&self, i: usize, j: usize) -> u64 {
+            self.0.coded_power_a(i, j)
+        }
+        fn coded_power_b(&self, k: usize, l: usize) -> u64 {
+            self.0.coded_power_b(k, l)
+        }
+        fn secret_powers_a(&self) -> Vec<u64> {
+            self.0.secret_powers_a()
+        }
+        fn secret_powers_b(&self) -> Vec<u64> {
+            self.0.secret_powers_b()
+        }
+        fn important_power(&self, i: usize, l: usize) -> u64 {
+            self.0.important_power(i, l) + 1_000 // far outside P(H)
+        }
+    }
+    let scheme = Sabotaged(AgeCmpc::with_optimal_lambda(2, 2, 2));
+    let err =
+        Deployment::for_scheme(Arc::new(scheme), ProtocolConfig::default()).unwrap_err();
+    assert!(matches!(err, CmpcError::NotDecodable(_)), "{err}");
+}

@@ -1,21 +1,24 @@
 //! Cross-layer integration tests: the Rust protocol engine running over the
-//! AOT-compiled L2/L1 artifacts via PJRT, the coordinator serving path, and
-//! the measured-vs-closed-form overhead identities (E9/E10 in DESIGN.md).
+//! AOT-compiled L2/L1 artifacts via the executor service, the coordinator
+//! serving path, and the measured-vs-closed-form overhead identities (E9/E10
+//! in DESIGN.md).
 //!
 //! Tests that need `artifacts/` skip (with a note) when it is absent so
 //! `cargo test` stays green before `make artifacts`; CI and the Makefile
 //! always build artifacts first.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use cmpc::analysis;
 use cmpc::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc};
 use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
 use cmpc::matrix::FpMat;
-use cmpc::mpc::protocol::{run_protocol, ProtocolConfig};
+use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::runtime::pjrt::PjrtService;
 use cmpc::runtime::{BackendChoice, MatmulBackend, NativeBackend};
 use cmpc::util::rng::ChaChaRng;
+use cmpc::Deployment;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -96,7 +99,7 @@ fn pjrt_unknown_shape_falls_back_to_native() {
 #[test]
 fn full_protocol_over_pjrt_backend() {
     // E9: the three-layer composition — shares generated in Rust, worker
-    // products executed by the AOT HLO (Pallas kernel inside), masks and
+    // products executed through the artifact service, masks and
     // reconstruction in Rust — decodes AᵀB exactly.
     let Some(dir) = artifacts_dir() else { return };
     let scheme = AgeCmpc::with_optimal_lambda(2, 2, 2);
@@ -104,13 +107,11 @@ fn full_protocol_over_pjrt_backend() {
     let mut rng = ChaChaRng::seed_from_u64(123);
     let a = FpMat::random(&mut rng, m, m);
     let b = FpMat::random(&mut rng, m, m);
-    let cfg = ProtocolConfig {
-        backend: BackendChoice::Pjrt {
-            artifacts_dir: dir,
-        },
-        ..ProtocolConfig::default()
-    };
-    let out = run_protocol(&scheme, &a, &b, &cfg).unwrap();
+    let cfg = ProtocolConfig::builder()
+        .backend(BackendChoice::Pjrt { artifacts_dir: dir })
+        .build();
+    let deployment = Deployment::for_scheme(Arc::new(scheme), cfg).unwrap();
+    let out = deployment.execute(&a, &b).unwrap();
     assert!(out.verified);
     assert_eq!(out.y, a.transpose().matmul(&b));
     assert_eq!(out.n_workers, 17);
@@ -119,31 +120,31 @@ fn full_protocol_over_pjrt_backend() {
 #[test]
 fn coordinator_serves_mixed_jobs_over_pjrt() {
     let Some(dir) = artifacts_dir() else { return };
-    let mut coord = Coordinator::new(CoordinatorConfig {
-        policy: SchemePolicy::Adaptive,
-        backend: BackendChoice::Pjrt {
-            artifacts_dir: dir,
-        },
-        ..CoordinatorConfig::default()
-    });
+    let mut coord = Coordinator::new(
+        CoordinatorConfig::builder()
+            .policy(SchemePolicy::Adaptive)
+            .backend(BackendChoice::Pjrt { artifacts_dir: dir })
+            .build(),
+    );
     let mut rng = ChaChaRng::seed_from_u64(5);
     let mut inputs = Vec::new();
     for _ in 0..2 {
         let a = FpMat::random(&mut rng, 64, 64);
         let b = FpMat::random(&mut rng, 64, 64);
-        coord.submit(a.clone(), b.clone(), 2, 2, 2);
+        coord.submit(a.clone(), b.clone(), 2, 2, 2).unwrap();
         inputs.push((a, b));
     }
-    // different partition → different deployment in the same batch
+    // different privacy level → different deployment in the same batch
     let a = FpMat::random(&mut rng, 64, 64);
     let b = FpMat::random(&mut rng, 64, 64);
-    coord.submit(a.clone(), b.clone(), 2, 2, 1);
+    coord.submit(a.clone(), b.clone(), 2, 2, 1).unwrap();
     inputs.push((a, b));
-    let reports = coord.run_all().unwrap();
+    let reports = coord.drain();
     assert_eq!(reports.len(), 3);
     for (r, (a, b)) in reports.iter().zip(&inputs) {
-        assert!(r.verified, "job {}", r.id);
-        assert_eq!(r.y, a.transpose().matmul(b));
+        let out = r.outcome.as_ref().unwrap();
+        assert!(out.verified, "job {}", r.id);
+        assert_eq!(out.y, a.transpose().matmul(b));
     }
     assert!(reports[1].setup_cache_hit);
     assert!(!reports[2].setup_cache_hit);
@@ -156,20 +157,24 @@ fn all_constructible_schemes_decode_same_product() {
     let a = FpMat::random(&mut rng, m, m);
     let b = FpMat::random(&mut rng, m, m);
     let want = a.transpose().matmul(&b);
-    let schemes: Vec<Box<dyn CmpcScheme>> = vec![
-        Box::new(AgeCmpc::with_optimal_lambda(2, 2, 3)),
-        Box::new(AgeCmpc::new(2, 2, 3, 0)),
-        Box::new(PolyDotCmpc::new(2, 2, 3)),
-        Box::new(EntangledCmpc::new(2, 2, 3)),
-        Box::new(AgeCmpc::with_optimal_lambda(3, 2, 2)),
-        Box::new(PolyDotCmpc::new(3, 2, 2)),
-        Box::new(AgeCmpc::with_optimal_lambda(2, 3, 2)),
-        Box::new(PolyDotCmpc::new(2, 3, 2)),
+    let schemes: Vec<Arc<dyn CmpcScheme>> = vec![
+        Arc::new(AgeCmpc::with_optimal_lambda(2, 2, 3)),
+        Arc::new(AgeCmpc::new(2, 2, 3, 0)),
+        Arc::new(PolyDotCmpc::new(2, 2, 3)),
+        Arc::new(EntangledCmpc::new(2, 2, 3)),
+        Arc::new(AgeCmpc::with_optimal_lambda(3, 2, 2)),
+        Arc::new(PolyDotCmpc::new(3, 2, 2)),
+        Arc::new(AgeCmpc::with_optimal_lambda(2, 3, 2)),
+        Arc::new(PolyDotCmpc::new(2, 3, 2)),
     ];
     for scheme in schemes {
-        let out = run_protocol(scheme.as_ref(), &a, &b, &ProtocolConfig::default())
-            .unwrap_or_else(|e| panic!("{}: {e}", scheme.name()));
-        assert_eq!(out.y, want, "{}", scheme.name());
+        let name = scheme.name();
+        let deployment = Deployment::for_scheme(scheme, ProtocolConfig::default())
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let out = deployment
+            .execute(&a, &b)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(out.y, want, "{name}");
     }
 }
 
@@ -181,22 +186,25 @@ fn measured_overheads_track_formulas_across_schemes() {
     for (s, t, z, m) in [(2usize, 2usize, 2usize, 8usize), (3, 2, 1, 12), (2, 3, 2, 12)] {
         let a = FpMat::random(&mut rng, m, m);
         let b = FpMat::random(&mut rng, m, m);
-        let schemes: Vec<Box<dyn CmpcScheme>> = vec![
-            Box::new(AgeCmpc::with_optimal_lambda(s, t, z)),
-            Box::new(PolyDotCmpc::new(s, t, z)),
-            Box::new(EntangledCmpc::new(s, t, z)),
+        let schemes: Vec<Arc<dyn CmpcScheme>> = vec![
+            Arc::new(AgeCmpc::with_optimal_lambda(s, t, z)),
+            Arc::new(PolyDotCmpc::new(s, t, z)),
+            Arc::new(EntangledCmpc::new(s, t, z)),
         ];
         for scheme in schemes {
-            let out = run_protocol(scheme.as_ref(), &a, &b, &ProtocolConfig::default()).unwrap();
+            let name = scheme.name();
+            let deployment =
+                Deployment::for_scheme(scheme, ProtocolConfig::default()).unwrap();
+            let out = deployment.execute(&a, &b).unwrap();
             let n = out.n_workers as u64;
             let xi = analysis::computation_overhead(m, s, t, z, n) as u64;
             let sigma = analysis::storage_overhead(m, s, t, z, n) as u64;
             let zeta = analysis::communication_overhead(m, t, n) as u64;
             for c in &out.worker_counters {
-                assert_eq!(c.mults(), xi, "{} ξ", scheme.name());
-                assert_eq!(c.stored(), sigma, "{} σ", scheme.name());
+                assert_eq!(c.mults(), xi, "{name} ξ");
+                assert_eq!(c.stored(), sigma, "{name} σ");
             }
-            assert_eq!(out.traffic.worker_to_worker, zeta, "{} ζ", scheme.name());
+            assert_eq!(out.traffic.worker_to_worker, zeta, "{name} ζ");
         }
     }
 }

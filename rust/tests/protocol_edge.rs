@@ -2,6 +2,10 @@
 //! scheme layer: feasibility invariants the paper assumes implicitly,
 //! adversarial timing, degenerate partitions, and determinism guarantees.
 
+// `run_protocol` stays covered here while the deprecated compat wrapper
+// exists; the deployment path is exercised in integration.rs/error_paths.rs.
+#![allow(deprecated)]
+
 use std::time::Duration;
 
 use cmpc::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc};
@@ -67,10 +71,9 @@ fn link_latency_does_not_affect_correctness() {
     let mut rng = ChaChaRng::seed_from_u64(50);
     let a = FpMat::random(&mut rng, 8, 8);
     let b = FpMat::random(&mut rng, 8, 8);
-    let cfg = ProtocolConfig {
-        link_delay: Some(Duration::from_micros(200)),
-        ..ProtocolConfig::default()
-    };
+    let cfg = ProtocolConfig::builder()
+        .link_delay(Some(Duration::from_micros(200)))
+        .build();
     let out = run_protocol(&scheme, &a, &b, &cfg).unwrap();
     assert!(out.verified);
 }
@@ -82,10 +85,9 @@ fn every_worker_delayed_still_completes() {
     let mut rng = ChaChaRng::seed_from_u64(51);
     let a = FpMat::random(&mut rng, 8, 8);
     let b = FpMat::random(&mut rng, 8, 8);
-    let cfg = ProtocolConfig {
-        worker_delays: vec![Duration::from_millis(5); n],
-        ..ProtocolConfig::default()
-    };
+    let cfg = ProtocolConfig::builder()
+        .worker_delays(vec![Duration::from_millis(5); n])
+        .build();
     assert!(run_protocol(&scheme, &a, &b, &cfg).unwrap().verified);
 }
 
@@ -101,10 +103,7 @@ fn adversarial_straggler_pattern_first_workers_slow() {
     let mut rng = ChaChaRng::seed_from_u64(52);
     let a = FpMat::random(&mut rng, 8, 8);
     let b = FpMat::random(&mut rng, 8, 8);
-    let cfg = ProtocolConfig {
-        worker_delays: delays,
-        ..ProtocolConfig::default()
-    };
+    let cfg = ProtocolConfig::builder().worker_delays(delays).build();
     let out = run_protocol(&scheme, &a, &b, &cfg).unwrap();
     assert!(out.verified);
     // the slow pack can only appear after the fast pack
@@ -124,10 +123,7 @@ fn deterministic_output_across_secret_seeds() {
     let a = FpMat::random(&mut rng, 12, 12);
     let b = FpMat::random(&mut rng, 12, 12);
     let run = |seed: u64| {
-        let cfg = ProtocolConfig {
-            seed,
-            ..ProtocolConfig::default()
-        };
+        let cfg = ProtocolConfig::builder().seed(seed).build();
         run_protocol(&scheme, &a, &b, &cfg).unwrap().y
     };
     assert_eq!(run(1), run(999_999));
@@ -207,13 +203,13 @@ fn coordinator_mixed_matrix_sizes_batch_correctly() {
         })
         .collect();
     for (a, b) in &pairs {
-        coord.submit(a.clone(), b.clone(), 2, 2, 2);
+        coord.submit(a.clone(), b.clone(), 2, 2, 2).unwrap();
     }
-    let reports = coord.run_all().unwrap();
+    let reports = coord.drain();
     // same scheme+params ⇒ deployments shared even across matrix sizes
     assert!(reports[2].setup_cache_hit);
     for (r, (a, b)) in reports.iter().zip(&pairs) {
-        assert_eq!(r.y, a.transpose().matmul(b));
+        assert_eq!(r.outcome.as_ref().unwrap().y, a.transpose().matmul(b));
     }
 }
 
@@ -251,13 +247,10 @@ fn verify_mode_catches_tampering() {
     let mut rng = ChaChaRng::seed_from_u64(58);
     let a = FpMat::random(&mut rng, 8, 8);
     let b = FpMat::random(&mut rng, 8, 8);
-    // Either setup fails (power missing from support) or verification trips.
-    let result = std::panic::catch_unwind(|| {
-        run_protocol(&scheme, &a, &b, &ProtocolConfig::default())
-    });
-    match result {
-        Err(_) => {}                      // setup panic: power not in support
-        Ok(Err(_)) => {}                  // verification error
-        Ok(Ok(out)) => assert!(!out.verified || out.y != a.transpose().matmul(&b)),
+    // Either setup fails typed (power missing from the reconstruction
+    // support) or verification trips — never a panic.
+    match run_protocol(&scheme, &a, &b, &ProtocolConfig::default()) {
+        Err(_) => {} // NotDecodable from setup or verification
+        Ok(out) => assert!(!out.verified || out.y != a.transpose().matmul(&b)),
     }
 }
