@@ -1,0 +1,205 @@
+//! Bench PR2 — the parallel compute core's perf trajectory.
+//!
+//! Runs the Fig. 2 anchor shapes (Example-1 parameters, serving-sized
+//! matrices) through a provisioned `Deployment` at 1/2/4/8 pool threads,
+//! recording per-phase latency (encode / worker compute / reconstruct
+//! tail), end-to-end job latency (verify on — the full serving path
+//! including the parallel reference product), drain throughput on a
+//! shared coordinator, and peak RSS. Results are printed in the in-tree
+//! bench format *and* emitted as machine-readable `BENCH_2.json` so later
+//! PRs can diff the trajectory.
+//!
+//! Usage (from `rust/`):
+//!
+//! ```sh
+//! cargo bench --bench perf_core                      # full run → ../BENCH_2.json
+//! cargo bench --bench perf_core -- --smoke --out /tmp/b.json   # CI schema smoke
+//! ```
+
+use std::time::{Duration, Instant};
+
+use cmpc::benchkit::{peak_rss_bytes, per_second, Json};
+use cmpc::codes::SchemeParams;
+use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
+use cmpc::matrix::FpMat;
+use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::util::rng::ChaChaRng;
+use cmpc::{Deployment, SchemeSpec};
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+struct Case {
+    scheme: String,
+    s: usize,
+    t: usize,
+    z: usize,
+    m: usize,
+    threads: usize,
+    iters: usize,
+    encode_ns: u64,
+    compute_ns: u64,
+    decode_ns: u64,
+    e2e_ns: u64,
+    jobs_per_sec: f64,
+    speedup_e2e_vs_1t: f64,
+    /// Process RSS high-water mark sampled when this case finished
+    /// (monotonic across the run — per-case deltas, not absolutes).
+    peak_rss_bytes: u64,
+}
+
+fn ns(d: Duration) -> u64 {
+    d.as_nanos() as u64
+}
+
+fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut Vec<Case>) {
+    let params = SchemeParams::new(s, t, z);
+    let mut rng = ChaChaRng::seed_from_u64(0xB2);
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    let mut base_e2e: Option<u64> = None;
+    for &threads in &THREAD_SWEEP {
+        let config = ProtocolConfig::builder().threads(threads).build();
+        let dep = Deployment::provision(SchemeSpec::Age { lambda: None }, params, config)
+            .expect("provision");
+        // Latency: best-of-iters end-to-end (verify on — includes the
+        // parallel reference product) plus the matching phase splits.
+        let mut best_e2e = u64::MAX;
+        let (mut enc, mut comp, mut dec) = (0u64, 0u64, 0u64);
+        for i in 0..iters {
+            let t0 = Instant::now();
+            let out = dep.execute_seeded(&a, &b, 7 + i as u64).expect("execute");
+            let e2e = ns(t0.elapsed());
+            assert!(out.verified);
+            if e2e < best_e2e {
+                best_e2e = e2e;
+                enc = ns(out.timings.phase1_share);
+                comp = ns(out.timings.phase2_compute);
+                dec = ns(out.timings.phase3_reconstruct);
+            }
+        }
+        // Throughput: a drain of 8 queued jobs on a same-sized coordinator
+        // (verify off — steady-state serving throughput). One warmup job is
+        // drained first so the O(N³) setup solve and backend provisioning
+        // happen outside the timed window.
+        let mut coord = Coordinator::new(
+            CoordinatorConfig::builder()
+                .policy(SchemePolicy::Fixed(SchemeSpec::Age { lambda: None }))
+                .verify(false)
+                .threads(threads)
+                .build(),
+        );
+        coord.submit(a.clone(), b.clone(), s, t, z).expect("warmup submit");
+        assert!(coord.drain().iter().all(|r| r.outcome.is_ok()));
+        let batch = 8usize;
+        for _ in 0..batch {
+            coord.submit(a.clone(), b.clone(), s, t, z).expect("submit");
+        }
+        let t0 = Instant::now();
+        let reports = coord.drain();
+        let drain_d = t0.elapsed();
+        assert!(reports.iter().all(|r| r.outcome.is_ok()));
+        let jobs_per_sec = per_second(batch as u64, drain_d);
+
+        let baseline = *base_e2e.get_or_insert(best_e2e);
+        let speedup = baseline as f64 / best_e2e.max(1) as f64;
+        println!(
+            "bench perf_core/{} m={m} threads={threads}       e2e={:>10}ns encode={enc}ns \
+             speedup_vs_1t={speedup:.2} drain={jobs_per_sec:.1} jobs/s",
+            dep.scheme().name(),
+            best_e2e,
+        );
+        cases.push(Case {
+            scheme: dep.scheme().name(),
+            s,
+            t,
+            z,
+            m,
+            threads,
+            iters,
+            encode_ns: enc,
+            compute_ns: comp,
+            decode_ns: dec,
+            e2e_ns: best_e2e,
+            jobs_per_sec,
+            speedup_e2e_vs_1t: speedup,
+            peak_rss_bytes: peak_rss_bytes(),
+        });
+    }
+}
+
+fn main() {
+    let mut smoke = false;
+    let mut out_path = String::from("../BENCH_2.json");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--smoke" => smoke = true,
+            "--out" => out_path = args.next().expect("--out needs a path"),
+            // cargo appends `--bench` to bench-binary invocations even with
+            // `harness = false`; swallow it like criterion does.
+            "--bench" => {}
+            other => panic!("unknown perf_core arg: {other}"),
+        }
+    }
+    let iters = if smoke { 1 } else { 5 };
+    let shapes: &[(usize, usize, usize, usize)] = if smoke {
+        &[(2, 2, 2, 32)]
+    } else {
+        &[(2, 2, 2, 64), (2, 2, 2, 128), (3, 2, 2, 96)]
+    };
+
+    let mut cases = Vec::new();
+    for &(s, t, z, m) in shapes {
+        run_shape(s, t, z, m, iters, &mut cases);
+    }
+
+    let host_threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1) as u64;
+    let json = Json::obj(vec![
+        ("schema", Json::Str("cmpc.bench.v2".to_string())),
+        ("benchmark", Json::Str("perf_core".to_string())),
+        ("provenance", Json::Str("measured".to_string())),
+        (
+            "note",
+            Json::Str(
+                "regenerate with `cargo bench --bench perf_core` from rust/".to_string(),
+            ),
+        ),
+        ("host_threads", Json::Int(host_threads)),
+        (
+            "thread_sweep",
+            Json::Arr(THREAD_SWEEP.iter().map(|&t| Json::Int(t as u64)).collect()),
+        ),
+        ("peak_rss_bytes", Json::Int(peak_rss_bytes())),
+        (
+            "cases",
+            Json::Arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("scheme", Json::Str(c.scheme.clone())),
+                            ("s", Json::Int(c.s as u64)),
+                            ("t", Json::Int(c.t as u64)),
+                            ("z", Json::Int(c.z as u64)),
+                            ("m", Json::Int(c.m as u64)),
+                            ("threads", Json::Int(c.threads as u64)),
+                            ("iters", Json::Int(c.iters as u64)),
+                            ("encode_ns", Json::Int(c.encode_ns)),
+                            ("compute_ns", Json::Int(c.compute_ns)),
+                            ("decode_ns", Json::Int(c.decode_ns)),
+                            ("e2e_ns", Json::Int(c.e2e_ns)),
+                            ("jobs_per_sec", Json::Float(c.jobs_per_sec)),
+                            ("speedup_e2e_vs_1t", Json::Float(c.speedup_e2e_vs_1t)),
+                            ("peak_rss_bytes", Json::Int(c.peak_rss_bytes)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let rendered = format!("{}\n", json.render());
+    std::fs::write(&out_path, &rendered).expect("write BENCH json");
+    println!("perf_core: wrote {} cases to {out_path}", cases.len());
+}

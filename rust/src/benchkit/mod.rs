@@ -65,6 +65,105 @@ pub fn per_second(items: u64, d: Duration) -> f64 {
     items as f64 / d.as_secs_f64().max(1e-12)
 }
 
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`), or 0 where procfs is unavailable. Coarse but
+/// dependency-free — enough for the `BENCH_*.json` storage trajectory.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// Minimal JSON value for the machine-readable `BENCH_*.json` reports
+/// (the offline build vendors no serde; the schema is flat enough that a
+/// five-variant enum covers it).
+#[derive(Clone, Debug)]
+pub enum Json {
+    Str(String),
+    Int(u64),
+    Float(f64),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object from key/value pairs (insertion order preserved).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render to a compact JSON string (RFC 8259 string escaping).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32));
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Int(v) => out.push_str(&v.to_string()),
+            Json::Float(v) => {
+                if v.is_finite() {
+                    out.push_str(&format!("{v:.3}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +181,29 @@ mod tests {
     fn per_second_math() {
         let r = per_second(100, Duration::from_millis(200));
         assert!((r - 500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn json_renders_escaped_and_nested() {
+        let j = Json::obj(vec![
+            ("name", Json::Str("say \"hi\"\n".to_string())),
+            ("n", Json::Int(42)),
+            ("ratio", Json::Float(2.5)),
+            ("xs", Json::Arr(vec![Json::Int(1), Json::Int(2)])),
+        ]);
+        assert_eq!(
+            j.render(),
+            r#"{"name":"say \"hi\"\n","n":42,"ratio":2.500,"xs":[1,2]}"#
+        );
+    }
+
+    #[test]
+    fn peak_rss_probe_is_sane() {
+        // On Linux this must be nonzero and at least a few pages; elsewhere
+        // the probe degrades to 0.
+        let rss = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            assert!(rss > 4096, "VmHWM = {rss}");
+        }
     }
 }

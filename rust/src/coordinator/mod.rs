@@ -31,6 +31,7 @@ use crate::error::Result;
 use crate::matrix::FpMat;
 use crate::mpc::deployment::Deployment;
 use crate::mpc::protocol::{self, ProtocolConfig, ProtocolOutput};
+use crate::runtime::pool::WorkerPool;
 use crate::runtime::{BackendChoice, BackendFactory};
 
 /// How the coordinator picks a construction for each job.
@@ -52,6 +53,11 @@ pub struct CoordinatorConfig {
     pub verify: bool,
     /// Optional link latency passed through to the protocol.
     pub link_delay: Option<Duration>,
+    /// Worker-pool size shared by every deployment this coordinator
+    /// provisions, and used by [`Coordinator::drain`] to run jobs on
+    /// distinct deployments concurrently. `0` (the default) shares the
+    /// process-wide pool; `1` makes draining strictly sequential.
+    pub threads: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -61,6 +67,7 @@ impl Default for CoordinatorConfig {
             backend: BackendChoice::Native,
             verify: true,
             link_delay: None,
+            threads: 0,
         }
     }
 }
@@ -98,6 +105,13 @@ impl CoordinatorConfigBuilder {
 
     pub fn link_delay(mut self, delay: Option<Duration>) -> Self {
         self.config.link_delay = delay;
+        self
+    }
+
+    /// Worker-pool size for deployments and parallel draining
+    /// (0 = all cores, shared).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.config.threads = threads;
         self
     }
 
@@ -162,16 +176,21 @@ pub struct Coordinator {
     /// (and its artifact cache) lives for the coordinator's lifetime
     /// instead of being re-created per job (§Perf P1).
     backend: Option<Arc<BackendFactory>>,
+    /// Worker pool shared across all deployments and by the parallel
+    /// drain loop (§Perf P5).
+    pool: Arc<WorkerPool>,
 }
 
 impl Coordinator {
     pub fn new(config: CoordinatorConfig) -> Coordinator {
+        let pool = WorkerPool::sized_or_global(config.threads);
         Coordinator {
             config,
             queue: Vec::new(),
             next_id: 0,
             deployments: BTreeMap::new(),
             backend: None,
+            pool,
         }
     }
 
@@ -250,56 +269,54 @@ impl Coordinator {
             .backend(self.config.backend.clone())
             .verify(self.config.verify)
             .link_delay(self.config.link_delay)
+            .threads(self.config.threads)
             .build();
-        let dep = Arc::new(Deployment::for_scheme_with_factory(
+        let dep = Arc::new(Deployment::for_scheme_shared(
             scheme,
             proto_config,
             factory,
+            self.pool.clone(),
         )?);
         self.deployments.insert(key, dep.clone());
         Ok((dep, false))
     }
 
     /// Drain the queue, batching jobs that share a deployment signature.
-    /// Reports come back in submission order; a failing job yields an `Err`
-    /// outcome in its report and the batch keeps going.
+    ///
+    /// Deployment resolution runs first (sequentially — it touches the
+    /// cache), then every job executes across the shared worker pool; jobs
+    /// on the same *or* different deployments run concurrently (same-
+    /// deployment jobs may contend on the shared scratch slots — see
+    /// ROADMAP). Reports come back in submission order regardless of pool
+    /// size; a failing job yields an `Err` outcome in its report and the
+    /// batch keeps going. Per-job seeds are fixed at `submit`, so results
+    /// are identical at any pool size.
     pub fn drain(&mut self) -> Vec<JobReport> {
         let jobs = std::mem::take(&mut self.queue);
-        let mut reports: Vec<JobReport> = Vec::with_capacity(jobs.len());
-        for job in jobs {
-            let report = match self.deployment_for(job.params) {
-                Err(e) => JobReport {
-                    id: job.id,
-                    scheme: String::new(),
-                    n_workers: 0,
-                    setup_cache_hit: false,
-                    outcome: Err(e),
-                },
-                Ok((dep, cache_hit)) => JobReport {
-                    id: job.id,
-                    scheme: dep.scheme().name(),
-                    n_workers: dep.n_workers(),
-                    setup_cache_hit: cache_hit,
-                    outcome: dep.execute_seeded(&job.a, &job.b, job.seed),
-                },
-            };
-            reports.push(report);
-        }
-        reports
-    }
-
-    /// Drain the queue, failing on the first job whose outcome is an error
-    /// (the pre-0.2 contract: any job failure surfaced as `Err`).
-    #[deprecated(since = "0.2.0", note = "use `drain`; per-job failures now \
-                 live in `JobReport::outcome` instead of aborting the batch")]
-    pub fn run_all(&mut self) -> Result<Vec<JobReport>> {
-        let reports = self.drain();
-        for r in &reports {
-            if let Err(e) = &r.outcome {
-                return Err(e.clone());
-            }
-        }
-        Ok(reports)
+        let prepared: Vec<(Job, Result<(Arc<Deployment>, bool)>)> = jobs
+            .into_iter()
+            .map(|job| {
+                let dep = self.deployment_for(job.params);
+                (job, dep)
+            })
+            .collect();
+        let pool = self.pool.clone();
+        pool.par_map(&prepared, |_wid, _idx, (job, dep)| match dep {
+            Err(e) => JobReport {
+                id: job.id,
+                scheme: String::new(),
+                n_workers: 0,
+                setup_cache_hit: false,
+                outcome: Err(e.clone()),
+            },
+            Ok((dep, cache_hit)) => JobReport {
+                id: job.id,
+                scheme: dep.scheme().name(),
+                n_workers: dep.n_workers(),
+                setup_cache_hit: *cache_hit,
+                outcome: dep.execute_seeded(&job.a, &job.b, job.seed),
+            },
+        })
     }
 }
 

@@ -47,10 +47,10 @@ pub fn mul(a: u64, b: u64) -> u64 {
 
 /// Reduce an arbitrary `u64` modulo `p`, exploiting `2^16 ≡ −1 (mod p)`.
 ///
-/// Splitting `x = hi·2^16 + lo` gives `x ≡ lo − hi (mod p)`; two folding
-/// rounds bring any 64-bit value into `[0, 2^17)` and a final conditional
-/// subtraction finishes the job. This is ~3× faster than the hardware `%`
-/// on the matmul hot path.
+/// Splitting `x = hi·2^16 + lo` gives `x ≡ lo − hi (mod p)`; four folding
+/// rounds bring any 64-bit value into `(0, 2p)` and one conditional
+/// subtraction finishes the job — fully division-free, which is ~3× faster
+/// than the hardware `%` on the matmul hot path.
 #[inline(always)]
 pub fn reduce(x: u64) -> u64 {
     // Round 1: x < 2^64 -> y < 2^48 + 2^16 (signed fold).
@@ -65,7 +65,12 @@ pub fn reduce(x: u64) -> u64 {
     let lo3 = z & 0xffff;
     let hi3 = z >> 16;
     let w = lo3 + (P << 3) - hi3; // w < 2^20
-    let mut r = w % P; // tiny residual; w fits well within one division
+    // Round 4: w < 2^20 ⇒ hi4 ≤ 9 and lo4 ≤ 2^16 − 1, so one more fold
+    // lands in (0, 2p − 1] and a single conditional subtraction finishes —
+    // no hardware division anywhere.
+    let lo4 = w & 0xffff;
+    let hi4 = w >> 16;
+    let mut r = lo4 + P - hi4; // 0 < r ≤ 2p − 2
     if r >= P {
         r -= P;
     }
@@ -233,13 +238,23 @@ pub fn scale_into(out: &mut [u32], c: u64, x: &[u32]) {
 /// chain of [`axpy`] calls. This is the hot kernel behind share-polynomial
 /// evaluation (Phase 1) and `Gₙ` evaluation (Phase 2).
 pub fn weighted_sum_into(out: &mut [u32], terms: &[(u64, &[u32])]) {
+    let mut acc = Vec::new();
+    weighted_sum_with_scratch(out, terms, &mut acc);
+}
+
+/// [`weighted_sum_into`] with a caller-owned accumulator: `acc` grows to
+/// `out.len()` once and is reused on every subsequent call, so steady-state
+/// invocations allocate nothing (the `alloc_discipline` suite pins this).
+/// This is the form the job hot path uses — per-worker [`Scratch`] buffers
+/// live in a [`ScratchPool`] shared across jobs.
+///
+/// [`Scratch`]: crate::runtime::pool::Scratch
+/// [`ScratchPool`]: crate::runtime::pool::ScratchPool
+pub fn weighted_sum_with_scratch(out: &mut [u32], terms: &[(u64, &[u32])], acc: &mut Vec<u64>) {
     assert!(terms.len() < (1 << 29), "too many terms for delayed reduction");
-    if terms.is_empty() {
-        out.fill(0);
-        return;
-    }
     let n = out.len();
-    let mut acc: Vec<u64> = vec![0; n];
+    acc.clear();
+    acc.resize(n, 0);
     for &(c, xs) in terms {
         debug_assert_eq!(xs.len(), n);
         let c = c % P;
@@ -270,6 +285,65 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn reduce_boundary_values_exact() {
+        // The division-free tail must agree with `%` at every boundary the
+        // folding rounds pivot on.
+        for x in [
+            0u64,
+            1,
+            P - 1,
+            P,
+            P + 1,
+            2 * P - 1,
+            2 * P,
+            (1 << 16) - 1,
+            1 << 16,
+            (1 << 17) - 1,
+            (1 << 20) - 1,
+            1 << 20,
+            (1 << 32) - 1,
+            1 << 32,
+            (1 << 48) - 1,
+            1 << 48,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            assert_eq!(reduce(x), x % P, "reduce({x})");
+        }
+        // Dense sweep around multiples of p across the whole u64 range.
+        for k in [1u64, 2, 1 << 10, 1 << 20, 1 << 30, (u64::MAX / P) - 1, u64::MAX / P] {
+            let base = k * P;
+            for d in 0..3u64 {
+                let x = base.wrapping_add(d);
+                assert_eq!(reduce(x), x % P, "reduce({x}) near {k}·p");
+            }
+            let x = base.wrapping_sub(1);
+            assert_eq!(reduce(x), x % P, "reduce({x}) below {k}·p");
+        }
+    }
+
+    #[test]
+    fn weighted_sum_scratch_reuse_matches() {
+        let mut rng = ChaChaRng::seed_from_u64(17);
+        let mut acc = Vec::new();
+        for _ in 0..20 {
+            let n = rng.gen_index(30) + 1;
+            let k = rng.gen_index(6) + 1;
+            let xs: Vec<Vec<u32>> = (0..k)
+                .map(|_| (0..n).map(|_| rng.field_element() as u32).collect())
+                .collect();
+            let cs: Vec<u64> = (0..k).map(|_| rng.field_element()).collect();
+            let terms: Vec<(u64, &[u32])> =
+                cs.iter().zip(&xs).map(|(&c, x)| (c, x.as_slice())).collect();
+            let mut via_fresh = vec![0u32; n];
+            weighted_sum_into(&mut via_fresh, &terms);
+            let mut via_scratch = vec![0u32; n];
+            weighted_sum_with_scratch(&mut via_scratch, &terms, &mut acc);
+            assert_eq!(via_scratch, via_fresh);
+        }
     }
 
     #[test]

@@ -76,10 +76,22 @@
 //! }
 //! ```
 //!
-//! The pre-0.2 `run_protocol(&scheme, &a, &b, &config)` entry point is kept
-//! as a deprecated wrapper for one release; it re-solves the O(N³) setup and
-//! re-creates the backend on every call. Migrate to
-//! [`Deployment::provision`] + [`Deployment::execute`].
+//! ## Parallel compute core (v0.3)
+//!
+//! Every deployment owns a [`runtime::pool::WorkerPool`] (shared
+//! process-wide by default, sized explicitly with
+//! `ProtocolConfig::builder().threads(n)`): Phase-1 share encoding fans out
+//! across workers with Horner/power-table evaluation, Phase-3
+//! reconstruction fans out across output blocks, verify-mode products use
+//! the parallel in-place matmul, and `Coordinator::drain` executes queued
+//! jobs concurrently. The GF(p) kernels write into caller-owned buffers
+//! with per-worker scratch, so steady-state jobs stay allocation-free in
+//! the compute loops. Results are byte-for-byte identical at any pool size.
+//!
+//! The pre-0.2 `run_protocol(...)` wrapper and `Coordinator::run_all()`
+//! completed their deprecation window and are gone; use
+//! [`Deployment::provision`] + [`Deployment::execute`] and
+//! [`coordinator::Coordinator::drain`].
 
 pub mod analysis;
 pub mod benchkit;

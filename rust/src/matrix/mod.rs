@@ -7,6 +7,7 @@
 //! per output element (or once per K-panel in the blocked path).
 
 use crate::ff::{self, P};
+use crate::runtime::pool::{ScratchPool, WorkerPool};
 use crate::util::rng::ChaChaRng;
 
 /// Row-major dense matrix over `GF(p)`.
@@ -58,11 +59,20 @@ impl FpMat {
     }
 
     /// Build from a function of (row, col).
+    ///
+    /// Inputs must already be reduced (`< p`): a debug assertion trips on
+    /// out-of-range values so kernel bugs can't hide behind silent wrapping;
+    /// release builds still reduce defensively.
     pub fn from_fn<F: FnMut(usize, usize) -> u64>(rows: usize, cols: usize, mut f: F) -> FpMat {
         let mut data = Vec::with_capacity(rows * cols);
         for r in 0..rows {
             for c in 0..cols {
-                data.push((f(r, c) % P) as u32);
+                let v = f(r, c);
+                debug_assert!(
+                    v < P,
+                    "FpMat::from_fn expects reduced elements (got {v} at ({r},{c}))"
+                );
+                data.push((v % P) as u32);
             }
         }
         FpMat { rows, cols, data }
@@ -73,8 +83,11 @@ impl FpMat {
         self.data[r * self.cols + c] as u64
     }
 
+    /// Store a **reduced** element. Debug builds assert `v < p`; release
+    /// builds still reduce defensively (same policy as [`FpMat::from_fn`]).
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: u64) {
+        debug_assert!(v < P, "FpMat::set expects a reduced element (got {v})");
         self.data[r * self.cols + c] = (v % P) as u32;
     }
 
@@ -93,30 +106,45 @@ impl FpMat {
         (self.len() * 4) as u64
     }
 
+    /// Reshape `out` to `rows × cols`, reusing its buffer. Steady-state
+    /// calls with an already-correctly-sized `out` never allocate.
+    #[inline]
+    fn shape_into(out: &mut FpMat, rows: usize, cols: usize) {
+        out.rows = rows;
+        out.cols = cols;
+        out.data.resize(rows * cols, 0);
+    }
+
     /// Transpose.
     pub fn transpose(&self) -> FpMat {
         let mut out = FpMat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// [`FpMat::transpose`] into a caller-owned buffer (allocation-free at
+    /// steady state).
+    pub fn transpose_into(&self, out: &mut FpMat) {
+        FpMat::shape_into(out, self.cols, self.rows);
         for r in 0..self.rows {
             for c in 0..self.cols {
                 out.data[c * self.rows + r] = self.data[r * self.cols + c];
             }
         }
-        out
     }
 
     /// Elementwise sum.
     pub fn add(&self, other: &FpMat) -> FpMat {
+        let mut out = self.clone();
+        out.add_assign(other);
+        out
+    }
+
+    /// `self += other` elementwise, in place.
+    pub fn add_assign(&mut self, other: &FpMat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        let data = self
-            .data
-            .iter()
-            .zip(&other.data)
-            .map(|(&a, &b)| ff::add(a as u64, b as u64) as u32)
-            .collect();
-        FpMat {
-            rows: self.rows,
-            cols: self.cols,
-            data,
+        for (o, &x) in self.data.iter_mut().zip(other.data.iter()) {
+            *o = ff::add(*o as u64, x as u64) as u32;
         }
     }
 
@@ -129,8 +157,14 @@ impl FpMat {
     /// Scalar multiple.
     pub fn scale(&self, c: u64) -> FpMat {
         let mut out = FpMat::zeros(self.rows, self.cols);
-        ff::scale_into(&mut out.data, c % P, &self.data);
+        self.scale_into(c, &mut out);
         out
+    }
+
+    /// `out = c · self` into a caller-owned buffer.
+    pub fn scale_into(&self, c: u64, out: &mut FpMat) {
+        FpMat::shape_into(out, self.rows, self.cols);
+        ff::scale_into(&mut out.data, c % P, &self.data);
     }
 
     /// Modular matrix product, cache-blocked with delayed reduction.
@@ -140,6 +174,14 @@ impl FpMat {
     /// `p² · cols_inner < 2^34 · 2^29 < 2^63` for any realistic size; a guard
     /// asserts the bound.
     pub fn matmul(&self, other: &FpMat) -> FpMat {
+        let mut out = FpMat::zeros(self.rows, other.cols);
+        let mut acc = Vec::new();
+        self.matmul_into(other, &mut out, &mut acc);
+        out
+    }
+
+    #[inline]
+    fn assert_matmul_shapes(&self, other: &FpMat) {
         assert_eq!(
             self.cols, other.rows,
             "matmul shape mismatch: {}x{} · {}x{}",
@@ -149,10 +191,16 @@ impl FpMat {
             (self.cols as u64) < (1u64 << 29),
             "inner dimension too large for delayed reduction"
         );
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = FpMat::zeros(m, n);
-        let mut acc: Vec<u64> = vec![0; n];
-        for i in 0..m {
+    }
+
+    /// Compute one output row band `[row0, row0+rows)` of `self · other`
+    /// into `band` (row-major, `other.cols` wide) using `acc` as the
+    /// unreduced accumulator row. Shared by the sequential and parallel
+    /// matmul drivers.
+    fn matmul_rows_into(&self, other: &FpMat, row0: usize, band: &mut [u32], acc: &mut [u64]) {
+        let (k, n) = (self.cols, other.cols);
+        for (r, orow) in band.chunks_mut(n).enumerate() {
+            let i = row0 + r;
             for a in acc.iter_mut() {
                 *a = 0;
             }
@@ -163,16 +211,60 @@ impl FpMat {
                 }
                 let a64 = aik as u64;
                 let brow = &other.data[kk * n..(kk + 1) * n];
-                for (j, &bkj) in brow.iter().enumerate() {
-                    acc[j] += a64 * bkj as u64;
+                for (a, &bkj) in acc.iter_mut().zip(brow.iter()) {
+                    *a += a64 * bkj as u64;
                 }
             }
-            let orow = &mut out.data[i * n..(i + 1) * n];
             for (o, &a) in orow.iter_mut().zip(acc.iter()) {
                 *o = ff::reduce(a) as u32;
             }
         }
-        out
+    }
+
+    /// [`FpMat::matmul`] into caller-owned output and scratch buffers: `out`
+    /// is reshaped in place and `acc` grows to `other.cols` once — repeat
+    /// calls at the same shape allocate nothing (the `alloc_discipline`
+    /// suite pins this).
+    pub fn matmul_into(&self, other: &FpMat, out: &mut FpMat, acc: &mut Vec<u64>) {
+        self.assert_matmul_shapes(other);
+        let (m, n) = (self.rows, other.cols);
+        FpMat::shape_into(out, m, n);
+        if m == 0 || n == 0 {
+            return;
+        }
+        acc.clear();
+        acc.resize(n, 0);
+        self.matmul_rows_into(other, 0, &mut out.data, acc);
+    }
+
+    /// Parallel [`FpMat::matmul_into`]: output rows are split into one
+    /// contiguous band per pool worker; each band is computed with that
+    /// worker's [`Scratch`] accumulator, so the kernel stays allocation-free
+    /// at steady state while scaling across cores.
+    ///
+    /// [`Scratch`]: crate::runtime::pool::Scratch
+    pub fn par_matmul_into(
+        &self,
+        other: &FpMat,
+        out: &mut FpMat,
+        pool: &WorkerPool,
+        scratch: &ScratchPool,
+    ) {
+        self.assert_matmul_shapes(other);
+        let (m, n) = (self.rows, other.cols);
+        FpMat::shape_into(out, m, n);
+        if m == 0 || n == 0 {
+            return;
+        }
+        let workers = pool.threads().min(m).max(1);
+        let band_rows = m.div_ceil(workers);
+        pool.par_chunks_mut(&mut out.data, band_rows * n, |wid, band_idx, band| {
+            scratch.with(wid, |s| {
+                s.acc.clear();
+                s.acc.resize(n, 0);
+                self.matmul_rows_into(other, band_idx * band_rows, band, &mut s.acc);
+            });
+        });
     }
 
     /// Partition into `row_parts × col_parts` equal blocks (eq. 4).
@@ -269,6 +361,83 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn matmul_into_and_parallel_match_schoolbook() {
+        // The in-place and pool-parallel kernels against the naive
+        // triple-loop reference over random shapes, reusing one scratch
+        // set across iterations the way the serving path does.
+        let pools = [WorkerPool::new(1), WorkerPool::new(4)];
+        let scratches = [ScratchPool::for_pool(&pools[0]), ScratchPool::for_pool(&pools[1])];
+        let mut out = FpMat::zeros(0, 0);
+        let mut acc = Vec::new();
+        property("matmul_into/par == schoolbook", 120, |rng| {
+            let m = rng.gen_index(17) + 1;
+            let k = rng.gen_index(17) + 1;
+            let n = rng.gen_index(17) + 1;
+            let a = FpMat::random(rng, m, k);
+            let b = FpMat::random(rng, k, n);
+            let want = matmul_ref(&a, &b);
+            a.matmul_into(&b, &mut out, &mut acc);
+            if out != want {
+                return Err(format!("matmul_into mismatch at {m}x{k}x{n}"));
+            }
+            for (pool, scratch) in pools.iter().zip(scratches.iter()) {
+                a.par_matmul_into(&b, &mut out, pool, scratch);
+                if out != want {
+                    return Err(format!(
+                        "par_matmul_into mismatch at {m}x{k}x{n}, {} threads",
+                        pool.threads()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transpose_into_reuses_buffer() {
+        let mut rng = ChaChaRng::seed_from_u64(12);
+        let mut out = FpMat::zeros(0, 0);
+        for _ in 0..10 {
+            let r = rng.gen_index(9) + 1;
+            let c = rng.gen_index(9) + 1;
+            let a = FpMat::random(&mut rng, r, c);
+            a.transpose_into(&mut out);
+            assert_eq!(out, a.transpose());
+            assert_eq!((out.rows, out.cols), (c, r));
+        }
+    }
+
+    #[test]
+    fn add_assign_matches_add() {
+        property("add_assign == add", 100, |rng| {
+            let a = small_random(rng, 8);
+            let b = FpMat::random(rng, a.rows, a.cols);
+            let mut inplace = a.clone();
+            inplace.add_assign(&b);
+            if inplace != a.add(&b) {
+                return Err("add_assign".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_into_matches_scale() {
+        let mut rng = ChaChaRng::seed_from_u64(13);
+        let a = FpMat::random(&mut rng, 6, 7);
+        let mut out = FpMat::zeros(0, 0);
+        a.scale_into(12345, &mut out);
+        assert_eq!(out, a.scale(12345));
+    }
+
+    #[test]
+    #[should_panic(expected = "reduced element")]
+    #[cfg(debug_assertions)]
+    fn set_rejects_unreduced_in_debug() {
+        FpMat::zeros(1, 1).set(0, 0, P + 1);
     }
 
     #[test]

@@ -46,16 +46,25 @@ use std::sync::Arc;
 use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
 use crate::error::Result;
 use crate::matrix::FpMat;
-use crate::mpc::protocol::{self, ProtocolConfig, ProtocolOutput, Setup};
+use crate::mpc::protocol::{self, ExecEnv, ProtocolConfig, ProtocolOutput, Setup};
+use crate::runtime::pool::{ScratchPool, WorkerPool};
 use crate::runtime::BackendFactory;
 
 /// A provisioned worker deployment: resolved scheme + cached [`Setup`] +
-/// shared backend, reusable across any number of jobs with the same
-/// `(scheme, s, t, z)` signature.
+/// shared backend + worker pool + per-pool-worker scratch, reusable across
+/// any number of jobs with the same `(scheme, s, t, z)` signature.
 pub struct Deployment {
     scheme: Arc<dyn CmpcScheme>,
     setup: Arc<Setup>,
     factory: Arc<BackendFactory>,
+    /// Pool driving the parallel sections of every job (Phase-1 encoding,
+    /// Phase-3 reconstruction, verify) — shared process-wide when
+    /// `config.threads == 0`, or sized per [`ProtocolConfig::threads`].
+    pool: Arc<WorkerPool>,
+    /// One scratch slot per pool worker; grown at the first job, reused by
+    /// every subsequent one (the zero-steady-state-allocation contract of
+    /// the compute kernels).
+    scratch: Arc<ScratchPool>,
     config: ProtocolConfig,
     /// Jobs attempted through this deployment (successful or not); also
     /// perturbs the per-job secret seed so repeated jobs draw fresh masks.
@@ -88,17 +97,34 @@ impl Deployment {
     }
 
     /// Provision sharing an existing backend factory — the coordinator path,
-    /// where one executor service backs every deployment.
+    /// where one executor service backs every deployment. The worker pool is
+    /// resolved from [`ProtocolConfig::threads`].
     pub fn for_scheme_with_factory(
         scheme: Arc<dyn CmpcScheme>,
         config: ProtocolConfig,
         factory: Arc<BackendFactory>,
     ) -> Result<Deployment> {
+        let pool = WorkerPool::sized_or_global(config.threads);
+        Deployment::for_scheme_shared(scheme, config, factory, pool)
+    }
+
+    /// Provision sharing both an existing backend factory *and* an existing
+    /// worker pool — the coordinator path, where one executor service and
+    /// one pool back every deployment.
+    pub fn for_scheme_shared(
+        scheme: Arc<dyn CmpcScheme>,
+        config: ProtocolConfig,
+        factory: Arc<BackendFactory>,
+        pool: Arc<WorkerPool>,
+    ) -> Result<Deployment> {
         let setup = Arc::new(protocol::prepare_setup(scheme.as_ref())?);
+        let scratch = Arc::new(ScratchPool::for_pool(&pool));
         Ok(Deployment {
             scheme,
             setup,
             factory,
+            pool,
+            scratch,
             config,
             jobs_executed: AtomicU64::new(0),
         })
@@ -132,19 +158,28 @@ impl Deployment {
             seed,
             ..self.config.clone()
         };
-        protocol::run_protocol_with_factory(
+        protocol::run_protocol_with_env(
             self.scheme.as_ref(),
             &self.setup,
             a,
             b,
             &cfg,
-            &self.factory,
+            &ExecEnv {
+                factory: &self.factory,
+                pool: &self.pool,
+                scratch: &self.scratch,
+            },
         )
     }
 
     /// The resolved scheme this deployment runs.
     pub fn scheme(&self) -> &dyn CmpcScheme {
         self.scheme.as_ref()
+    }
+
+    /// The worker pool driving this deployment's parallel sections.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     /// The scheme parameters of this deployment.

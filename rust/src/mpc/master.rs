@@ -5,13 +5,23 @@
 //! whose top `z` coefficients are the summed masks. Any `t²+z` evaluations
 //! determine it, so the master reconstructs from the **first** `t²+z`
 //! `I(αₙ)` arrivals — the protocol tolerates `N − (t²+z)` stragglers.
+//!
+//! The `t²` block reconstructions (`Y_{i,l} = Σₙ rows[i+t·l][n]·I(αₙ)`) are
+//! independent linear combinations, so they fan out across the worker pool;
+//! each block is folded with delayed reduction through a per-worker
+//! [`Scratch`] accumulator (one reduction per output element, no
+//! allocation in the combination loop).
+//!
+//! [`Scratch`]: crate::runtime::pool::Scratch
 
 use std::sync::Arc;
 
 use crate::error::{CmpcError, Result};
+use crate::ff::{self, P};
 use crate::matrix::FpMat;
 use crate::mpc::network::{Endpoint, Payload};
 use crate::poly::interp::try_vandermonde_inverse_rows;
+use crate::runtime::pool::{ScratchPool, WorkerPool};
 
 /// Result of the master phase.
 pub struct MasterOutput {
@@ -26,13 +36,16 @@ pub struct MasterOutput {
 /// Collect `t²+z` I-shares and reconstruct `Y`.
 ///
 /// `alphas[n]` is worker `n`'s evaluation point; `t`/`z` are scheme
-/// parameters; `n_workers` is the provisioned worker count.
+/// parameters; `n_workers` is the provisioned worker count. `pool` and
+/// `scratch` drive the parallel block reconstruction.
 pub fn run_master(
     endpoint: &Endpoint,
     alphas: &Arc<Vec<u64>>,
     n_workers: usize,
     t: usize,
     z: usize,
+    pool: &WorkerPool,
+    scratch: &ScratchPool,
 ) -> Result<MasterOutput> {
     let needed = t * t + z;
     if needed > n_workers {
@@ -66,22 +79,41 @@ pub fn run_master(
         )
     })?;
 
-    // Y blocks are coefficients 0..t² (power i + t·l).
+    // Y blocks are coefficients 0..t² (power i + t·l): t² independent
+    // linear combinations of the arrived shares, one flat slot per block
+    // so the pool can hand them out as disjoint &mut chunks.
     let block = arrived[0].1.rows;
-    let mut y_blocks: Vec<Vec<FpMat>> = (0..t)
-        .map(|_| (0..t).map(|_| FpMat::zeros(block, block)).collect())
-        .collect();
-    for i in 0..t {
-        for l in 0..t {
-            let e = i + t * l;
-            let blk = &mut y_blocks[i][l];
+    let len = block * block;
+    let mut flat: Vec<FpMat> = (0..t * t).map(|_| FpMat::zeros(block, block)).collect();
+    pool.par_chunks_mut(&mut flat, 1, |wid, idx, blk| {
+        // idx = i + t·l is exactly the coefficient power of block (i,l).
+        let e = idx;
+        scratch.with(wid, |s| {
+            s.acc.clear();
+            s.acc.resize(len, 0);
             for (n_idx, (_, share)) in arrived.iter().enumerate() {
-                let c = rows[e][n_idx];
-                if c != 0 {
-                    blk.axpy_inplace(c, share);
+                debug_assert_eq!(share.data.len(), len, "I-share {n_idx} shape");
+                let c = rows[e][n_idx] % P;
+                if c == 0 {
+                    continue;
+                }
+                for (a, &x) in s.acc.iter_mut().zip(share.data.iter()) {
+                    *a += c * x as u64;
                 }
             }
-        }
+            for (o, &a) in blk[0].data.iter_mut().zip(s.acc.iter()) {
+                *o = ff::reduce(a) as u32;
+            }
+        });
+    });
+    // Reassemble the t×t grid: flat[i + t·l] is block (i, l), i.e. grid
+    // row-part i, column-part l.
+    let mut y_blocks: Vec<Vec<FpMat>> = (0..t)
+        .map(|_| Vec::with_capacity(t))
+        .collect();
+    for (idx, blk) in flat.into_iter().enumerate() {
+        let i = idx % t;
+        y_blocks[i].push(blk);
     }
     // The top z coefficients of I(x) are mask sums; reconstructing them is
     // unnecessary — decodability is asserted end-to-end by the caller

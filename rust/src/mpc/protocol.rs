@@ -21,6 +21,7 @@ use crate::metrics::{PhaseTimings, TrafficReport, WorkerCounters};
 use crate::mpc::network::{Fabric, Payload};
 use crate::mpc::{master, source, worker};
 use crate::poly::interp::choose_alphas;
+use crate::runtime::pool::{ScratchPool, WorkerPool};
 use crate::runtime::{BackendChoice, BackendFactory};
 use crate::util::rng::ChaChaRng;
 
@@ -38,6 +39,12 @@ pub struct ProtocolConfig {
     pub worker_delays: Vec<Duration>,
     /// Per-hop link latency.
     pub link_delay: Option<Duration>,
+    /// Worker-pool size for the parallel sections (Phase-1 encoding,
+    /// Phase-3 reconstruction, verify). `0` (the default) shares the
+    /// process-wide pool at [`std::thread::available_parallelism`];
+    /// `1` makes every parallel section literally sequential — the
+    /// determinism tests compare `1` vs `N` byte-for-byte.
+    pub threads: usize,
 }
 
 impl Default for ProtocolConfig {
@@ -48,6 +55,7 @@ impl Default for ProtocolConfig {
             verify: true,
             worker_delays: Vec::new(),
             link_delay: None,
+            threads: 0,
         }
     }
 }
@@ -90,6 +98,12 @@ impl ProtocolConfigBuilder {
 
     pub fn link_delay(mut self, delay: Option<Duration>) -> Self {
         self.config.link_delay = delay;
+        self
+    }
+
+    /// Worker-pool size for the parallel sections (0 = all cores, shared).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.config.threads = threads;
         self
     }
 
@@ -185,26 +199,24 @@ pub fn validate_job_shapes(a: &FpMat, b: &FpMat, params: SchemeParams) -> Result
     Ok(())
 }
 
-/// Run one full CMPC multiplication under `scheme`.
-#[deprecated(
-    since = "0.2.0",
-    note = "provision a `cmpc::Deployment` and call `execute` — it caches the \
-            O(N³) setup and the backend across jobs"
-)]
-pub fn run_protocol(
-    scheme: &dyn CmpcScheme,
-    a: &FpMat,
-    b: &FpMat,
-    config: &ProtocolConfig,
-) -> Result<ProtocolOutput> {
-    let setup = prepare_setup(scheme)?;
-    run_protocol_with_setup(scheme, &setup, a, b, config)
+/// Everything a job run borrows from its deployment: the backend factory
+/// (executor service + artifact cache), the worker pool driving the
+/// parallel sections, and the per-pool-worker scratch buffers. A
+/// [`Deployment`] owns all three for its lifetime, so steady-state jobs
+/// reuse them; ad-hoc callers build them per run via
+/// [`run_protocol_with_setup`].
+///
+/// [`Deployment`]: crate::mpc::deployment::Deployment
+pub struct ExecEnv<'a> {
+    pub factory: &'a BackendFactory,
+    pub pool: &'a WorkerPool,
+    pub scratch: &'a ScratchPool,
 }
 
 /// Run one job against a prepared (possibly cached) [`Setup`], constructing
-/// a fresh backend factory. Callers issuing many jobs should build the
-/// factory once (backend service startup + artifact loading are expensive)
-/// and use [`run_protocol_with_factory`] — or, at a higher level, a
+/// a fresh backend factory, pool, and scratch set from the config. Callers
+/// issuing many jobs should build those once and use
+/// [`run_protocol_with_env`] — or, at a higher level, a
 /// [`crate::mpc::deployment::Deployment`].
 pub fn run_protocol_with_setup(
     scheme: &dyn CmpcScheme,
@@ -214,18 +226,32 @@ pub fn run_protocol_with_setup(
     config: &ProtocolConfig,
 ) -> Result<ProtocolOutput> {
     let factory = BackendFactory::new(&config.backend)?;
-    run_protocol_with_factory(scheme, setup, a, b, config, &factory)
+    let pool = WorkerPool::sized_or_global(config.threads);
+    let scratch = ScratchPool::for_pool(&pool);
+    run_protocol_with_env(
+        scheme,
+        setup,
+        a,
+        b,
+        config,
+        &ExecEnv {
+            factory: &factory,
+            pool: &pool,
+            scratch: &scratch,
+        },
+    )
 }
 
-/// Run one job with an existing backend factory (shared executor service and
-/// artifact cache across jobs — the steady-state serving path).
-pub fn run_protocol_with_factory(
+/// Run one job with an existing execution environment (shared executor
+/// service, worker pool, and scratch buffers across jobs — the steady-state
+/// serving path).
+pub fn run_protocol_with_env(
     scheme: &dyn CmpcScheme,
     setup: &Setup,
     a: &FpMat,
     b: &FpMat,
     config: &ProtocolConfig,
-    backend_factory: &BackendFactory,
+    env: &ExecEnv<'_>,
 ) -> Result<ProtocolOutput> {
     let p = scheme.params();
     validate_job_shapes(a, b, p)?;
@@ -270,7 +296,7 @@ pub fn run_protocol_with_factory(
         };
         let endpoint = worker_endpoints.remove(0);
         let fabric = fabric.clone();
-        let backend = backend_factory.make();
+        let backend = env.factory.make();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("cmpc-worker-{wid}"))
@@ -283,24 +309,30 @@ pub fn run_protocol_with_factory(
     let t1 = Instant::now();
     let fa_poly = source::build_f_a(scheme, a, &mut rng_src_a);
     let fb_poly = source::build_f_b(scheme, b, &mut rng_src_b);
-    for wid in 0..n {
-        let alpha = setup.alphas[wid];
-        let payload = Payload::Shares {
-            fa: fa_poly.eval(alpha),
-            fb: fb_poly.eval(alpha),
-        };
+    // Horner/power-table evaluation of both polynomials at every αₙ, fanned
+    // out across the pool (§Perf P5).
+    let shares = source::encode_shares(&fa_poly, &fb_poly, &setup.alphas, env.pool, env.scratch);
+    for (wid, (fa_n, fb_n)) in shares.into_iter().enumerate() {
         // Source A evaluates F_A, source B evaluates F_B; one combined
         // envelope per worker keeps the fabric simple — traffic is metered
         // identically (both legs are source→worker).
         fabric
-            .send(fabric.source_a_id(), wid, payload)
+            .send(fabric.source_a_id(), wid, Payload::Shares { fa: fa_n, fb: fb_n })
             .map_err(|_| CmpcError::Fabric(format!("worker {wid} unreachable in phase 1")))?;
     }
     let phase1 = t1.elapsed();
 
     // --- Phase 2/3 run concurrently; wait for the master ---
     let t2 = Instant::now();
-    let m_out = master::run_master(&master_endpoint, &setup.alphas, n, p.t, p.z)?;
+    let m_out = master::run_master(
+        &master_endpoint,
+        &setup.alphas,
+        n,
+        p.t,
+        p.z,
+        env.pool,
+        env.scratch,
+    )?;
     let reconstruct_done = t2.elapsed();
     // Workers finish their sends after reconstruction; join them for clean
     // counter totals. Their tail time counts toward phase 2.
@@ -311,7 +343,13 @@ pub fn run_protocol_with_factory(
     let all_done = t2.elapsed();
 
     let verified = if config.verify {
-        m_out.y == a.transpose().matmul(b)
+        // The reference product is the largest single matmul of the run
+        // (full m×m·m); fan it across the pool.
+        let mut at = FpMat::zeros(a.cols, a.rows);
+        a.transpose_into(&mut at);
+        let mut expect = FpMat::zeros(at.rows, b.cols);
+        at.par_matmul_into(b, &mut expect, env.pool, env.scratch);
+        m_out.y == expect
     } else {
         false
     };
@@ -341,19 +379,27 @@ pub fn run_protocol_with_factory(
 
 #[cfg(test)]
 mod tests {
-    // The deprecated `run_protocol` wrapper stays covered here until it is
-    // removed; the deployment tests exercise the replacement path.
-    #![allow(deprecated)]
-
     use super::*;
     use crate::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc};
     use crate::util::testing::property;
+
+    /// One-shot run for tests: solve the setup, then run through the
+    /// config-derived environment (what `Deployment` does once per session).
+    fn run_once(
+        scheme: &dyn CmpcScheme,
+        a: &FpMat,
+        b: &FpMat,
+        config: &ProtocolConfig,
+    ) -> Result<ProtocolOutput> {
+        let setup = prepare_setup(scheme)?;
+        run_protocol_with_setup(scheme, &setup, a, b, config)
+    }
 
     fn run_scheme(scheme: &dyn CmpcScheme, m: usize, seed: u64) {
         let mut rng = ChaChaRng::seed_from_u64(seed);
         let a = FpMat::random(&mut rng, m, m);
         let b = FpMat::random(&mut rng, m, m);
-        let out = run_protocol(scheme, &a, &b, &ProtocolConfig::default()).unwrap();
+        let out = run_once(scheme, &a, &b, &ProtocolConfig::default()).unwrap();
         assert!(out.verified);
         assert_eq!(out.y, a.transpose().matmul(&b));
     }
@@ -387,7 +433,7 @@ mod tests {
             let a = FpMat::random(rng, m, m);
             let b = FpMat::random(rng, m, m);
             let cfg = ProtocolConfig::builder().seed(rng.next_u64()).build();
-            let out = run_protocol(&scheme, &a, &b, &cfg)
+            let out = run_once(&scheme, &a, &b, &cfg)
                 .map_err(|e| format!("s={s} t={t} z={z} m={m}: {e}"))?;
             if out.y != a.transpose().matmul(&b) {
                 return Err(format!("wrong product at s={s} t={t} z={z} m={m}"));
@@ -408,7 +454,7 @@ mod tests {
         let mut rng = ChaChaRng::seed_from_u64(77);
         let a = FpMat::random(&mut rng, 8, 8);
         let b = FpMat::random(&mut rng, 8, 8);
-        let out = run_protocol(&scheme, &a, &b, &cfg).unwrap();
+        let out = run_once(&scheme, &a, &b, &cfg).unwrap();
         assert!(out.verified);
         assert_eq!(out.stragglers_tolerated, 17 - 6);
     }
@@ -421,7 +467,7 @@ mod tests {
         let mut rng = ChaChaRng::seed_from_u64(13);
         let a = FpMat::random(&mut rng, m, m);
         let b = FpMat::random(&mut rng, m, m);
-        let out = run_protocol(&scheme, &a, &b, &ProtocolConfig::default()).unwrap();
+        let out = run_once(&scheme, &a, &b, &ProtocolConfig::default()).unwrap();
         let n = out.n_workers as u64;
         let zeta = crate::analysis::communication_overhead(m, t, n) as u64;
         assert_eq!(out.traffic.worker_to_worker, zeta);
@@ -436,7 +482,7 @@ mod tests {
         let mut rng = ChaChaRng::seed_from_u64(21);
         let a = FpMat::random(&mut rng, m, m);
         let b = FpMat::random(&mut rng, m, m);
-        let out = run_protocol(&scheme, &a, &b, &ProtocolConfig::default()).unwrap();
+        let out = run_once(&scheme, &a, &b, &ProtocolConfig::default()).unwrap();
         let n = out.n_workers as u64;
         let xi = crate::analysis::computation_overhead(m, s, t, z, n) as u64;
         let sigma = crate::analysis::storage_overhead(m, s, t, z, n) as u64;
@@ -452,7 +498,7 @@ mod tests {
         let mut rng = ChaChaRng::seed_from_u64(2);
         let a = FpMat::random(&mut rng, 8, 8); // 3 ∤ 8
         let b = FpMat::random(&mut rng, 8, 8);
-        let err = run_protocol(&scheme, &a, &b, &ProtocolConfig::default()).unwrap_err();
+        let err = run_once(&scheme, &a, &b, &ProtocolConfig::default()).unwrap_err();
         assert!(matches!(err, CmpcError::ShapeMismatch(_)));
     }
 
@@ -465,7 +511,7 @@ mod tests {
         let cfg = ProtocolConfig::builder()
             .worker_delays(vec![Duration::ZERO; 3])
             .build();
-        let err = run_protocol(&scheme, &a, &b, &cfg).unwrap_err();
+        let err = run_once(&scheme, &a, &b, &cfg).unwrap_err();
         assert!(matches!(err, CmpcError::InvalidParams(_)));
     }
 
@@ -477,10 +523,12 @@ mod tests {
             .verify(false)
             .worker_delays(vec![Duration::from_millis(1); 2])
             .link_delay(Some(Duration::from_micros(5)))
+            .threads(3)
             .build();
         assert_eq!(cfg.seed, 99);
         assert!(!cfg.verify);
         assert_eq!(cfg.worker_delays.len(), 2);
         assert_eq!(cfg.link_delay, Some(Duration::from_micros(5)));
+        assert_eq!(cfg.threads, 3);
     }
 }

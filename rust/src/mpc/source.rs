@@ -9,6 +9,7 @@
 use crate::codes::CmpcScheme;
 use crate::matrix::FpMat;
 use crate::poly::MatPoly;
+use crate::runtime::pool::{ScratchPool, WorkerPool};
 use crate::util::rng::ChaChaRng;
 
 /// Build `F_A(x)` from `A` (the polynomial carries blocks of `Aᵀ`).
@@ -53,6 +54,33 @@ pub fn build_f_b(scheme: &dyn CmpcScheme, b: &FpMat, rng: &mut ChaChaRng) -> Mat
 /// Evaluate a share polynomial at every worker's α.
 pub fn shares(poly: &MatPoly, alphas: &[u64]) -> Vec<FpMat> {
     alphas.iter().map(|&a| poly.eval(a)).collect()
+}
+
+/// Evaluate both share polynomials at every worker's α, fanned out across
+/// the pool — the Phase-1 encoding hot path.
+///
+/// Each pool worker evaluates whole `(F_A(αₙ), F_B(αₙ))` pairs through
+/// [`MatPoly::eval_into`] with its own [`ScratchPool`] slot (power table +
+/// unreduced accumulator), so the per-element loop performs no `ff::pow`
+/// and the scratch buffers are reused across workers *and* across jobs.
+/// Results come back in worker order, independent of the pool size — the
+/// determinism tests pin `threads = 1` vs `N` byte-for-byte.
+pub fn encode_shares(
+    fa: &MatPoly,
+    fb: &MatPoly,
+    alphas: &[u64],
+    pool: &WorkerPool,
+    scratch: &ScratchPool,
+) -> Vec<(FpMat, FpMat)> {
+    pool.par_map(alphas, |wid, _idx, &alpha| {
+        scratch.with(wid, |s| {
+            let mut fa_n = FpMat::zeros(fa.rows, fa.cols);
+            let mut fb_n = FpMat::zeros(fb.rows, fb.cols);
+            fa.eval_into(alpha, &mut fa_n, s);
+            fb.eval_into(alpha, &mut fb_n, s);
+            (fa_n, fb_n)
+        })
+    })
 }
 
 #[cfg(test)]
@@ -100,6 +128,29 @@ mod tests {
                     &y_blocks[i][l],
                     "block ({i},{l})"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_shares_matches_sequential_eval_at_any_pool_size() {
+        let scheme = AgeCmpc::new(2, 2, 2, 1);
+        let mut rng = ChaChaRng::seed_from_u64(23);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        let fa = build_f_a(&scheme, &a, &mut rng);
+        let fb = build_f_b(&scheme, &b, &mut rng);
+        let alphas: Vec<u64> = (1..=9).collect();
+        let want_a = shares(&fa, &alphas);
+        let want_b = shares(&fb, &alphas);
+        for threads in [1usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let scratch = ScratchPool::for_pool(&pool);
+            let got = encode_shares(&fa, &fb, &alphas, &pool, &scratch);
+            assert_eq!(got.len(), alphas.len());
+            for (n, (ga, gb)) in got.iter().enumerate() {
+                assert_eq!(ga, &want_a[n], "F_A share {n} at {threads} threads");
+                assert_eq!(gb, &want_b[n], "F_B share {n} at {threads} threads");
             }
         }
     }

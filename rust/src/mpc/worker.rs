@@ -98,13 +98,19 @@ pub fn run_worker(
     ctx.counters.add_stored((ctx.z * h.len()) as u64);
 
     // --- evaluate Gₙ at every peer point and send ---
+    // The coefficient list and the unreduced accumulator are hoisted out of
+    // the peer loop: one warmup growth, then N evaluations with zero
+    // allocations beyond the G matrices themselves (which move into the
+    // fabric envelopes).
     let mut own_g: Option<FpMat> = None;
+    let mut terms: Vec<(u64, &[u32])> = Vec::with_capacity(t2 + ctx.z);
+    let mut acc: Vec<u64> = Vec::new();
     for peer in 0..n {
         let alpha = ctx.alphas[peer];
         // G = scaled[0]·α⁰ + Σ_{il>0} scaled[il]·α^{il} + Σ_w R_w·α^{t²+w},
         // combined in one delayed-reduction pass (§Perf P4).
         let mut g = FpMat::zeros(h.rows, h.cols);
-        let mut terms: Vec<(u64, &[u32])> = Vec::with_capacity(t2 + ctx.z);
+        terms.clear();
         let mut ap = 1u64; // α^il incrementally
         for sc in scaled.iter() {
             terms.push((ap, &sc.data));
@@ -114,7 +120,7 @@ pub fn run_worker(
             terms.push((ap, &mask.data));
             ap = ff::mul(ap, alpha);
         }
-        ff::weighted_sum_into(&mut g.data, &terms);
+        ff::weighted_sum_with_scratch(&mut g.data, &terms, &mut acc);
         // (t²−1+z)·m²/t² multiplications per peer (Corollary 10, term 3).
         ctx.counters
             .add_mults(((t2 - 1 + ctx.z) * h.len()) as u64);
@@ -135,7 +141,7 @@ pub fn run_worker(
     let mut received = 0usize;
     for g in early_g {
         ctx.counters.add_stored(g.len() as u64);
-        i_share = i_share.add(&g);
+        i_share.add_assign(&g);
         received += 1;
     }
     while received < n - 1 {
@@ -145,7 +151,7 @@ pub fn run_worker(
         match env.payload {
             Payload::GShare(g) => {
                 ctx.counters.add_stored(g.len() as u64);
-                i_share = i_share.add(&g);
+                i_share.add_assign(&g);
                 received += 1;
             }
             other => {

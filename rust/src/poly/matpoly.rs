@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 
 use crate::ff;
 use crate::matrix::FpMat;
+use crate::runtime::pool::Scratch;
 
 /// Sparse matrix-coefficient polynomial over `GF(p)`.
 #[derive(Clone, Debug)]
@@ -60,21 +61,66 @@ impl MatPoly {
 
     /// Evaluate at `x = alpha`: `Σ coeffₑ · αᵉ`.
     ///
-    /// Scalar powers track the sorted support incrementally (one `pow` per
-    /// exponent gap); the matrix combination runs through the
-    /// delayed-reduction [`ff::weighted_sum_into`] kernel (§Perf P4).
+    /// Convenience wrapper over [`MatPoly::eval_into`] with throwaway
+    /// buffers; the serving hot path calls `eval_into` with per-worker
+    /// [`Scratch`] instead.
     pub fn eval(&self, alpha: u64) -> FpMat {
         let mut out = FpMat::zeros(self.rows, self.cols);
+        let mut scratch = Scratch::default();
+        self.eval_into(alpha, &mut out, &mut scratch);
+        out
+    }
+
+    /// Fill `table` with `αᵉ` for every `e` in the sorted support.
+    ///
+    /// Powers are built Horner-style over the exponent gaps
+    /// (`α^{e_{i+1}} = α^{e_i} · α^{e_{i+1}−e_i}`), so the only
+    /// exponentiations are one square-and-multiply per *gap* — nothing in
+    /// the per-element accumulation loop ever calls [`ff::pow`].
+    pub fn power_table(&self, alpha: u64, table: &mut Vec<u64>) {
+        table.clear();
         let mut cur_pow = 0u64; // exponent tracked so far
         let mut cur_val = 1u64; // alpha^cur_pow
-        let mut terms: Vec<(u64, &[u32])> = Vec::with_capacity(self.terms.len());
-        for (&e, coeff) in &self.terms {
+        for &e in self.terms.keys() {
             cur_val = ff::mul(cur_val, ff::pow(alpha, e - cur_pow));
             cur_pow = e;
-            terms.push((cur_val, &coeff.data));
+            table.push(cur_val);
         }
-        ff::weighted_sum_into(&mut out.data, &terms);
-        out
+    }
+
+    /// [`MatPoly::eval`] into caller-owned buffers — the Phase-1 share
+    /// encoding kernel (§Perf P4 + P5).
+    ///
+    /// One pass: the per-worker power table (`scratch.powers`) is
+    /// precomputed by [`MatPoly::power_table`], then every coefficient
+    /// block is folded into the unreduced accumulator (`scratch.acc`)
+    /// with delayed reduction — a single reduction per output element.
+    /// After the first call at a given shape, repeat evaluations allocate
+    /// nothing (the `alloc_discipline` suite pins this).
+    pub fn eval_into(&self, alpha: u64, out: &mut FpMat, scratch: &mut Scratch) {
+        assert!(
+            self.terms.len() < (1 << 29),
+            "too many terms for delayed reduction"
+        );
+        out.rows = self.rows;
+        out.cols = self.cols;
+        let n = self.rows * self.cols;
+        out.data.resize(n, 0);
+        self.power_table(alpha, &mut scratch.powers);
+        scratch.acc.clear();
+        scratch.acc.resize(n, 0);
+        for (coeff, &c) in self.terms.values().zip(scratch.powers.iter()) {
+            debug_assert_eq!(coeff.data.len(), n);
+            if c == 0 {
+                continue;
+            }
+            for (a, &x) in scratch.acc.iter_mut().zip(coeff.data.iter()) {
+                *a += c * x as u64;
+            }
+        }
+        for (o, &a) in out.data.iter_mut().zip(scratch.acc.iter()) {
+            *o = ff::reduce(a) as u32;
+        }
     }
 
     /// Polynomial product (used only by tests/small analyses — the protocol
@@ -160,6 +206,44 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn eval_into_reuses_scratch_across_alphas_and_shapes() {
+        let mut rng = ChaChaRng::seed_from_u64(21);
+        let mut scratch = Scratch::default();
+        let mut out = FpMat::zeros(0, 0);
+        for _ in 0..12 {
+            let rows = rng.gen_index(4) + 1;
+            let cols = rng.gen_index(4) + 1;
+            let mut poly = MatPoly::new(rows, cols);
+            let mut powers: Vec<u64> = (0..rng.gen_index(6) + 1)
+                .map(|_| rng.gen_range(80))
+                .collect();
+            powers.sort_unstable();
+            powers.dedup();
+            for &e in &powers {
+                poly.insert(e, FpMat::random(&mut rng, rows, cols));
+            }
+            let alpha = rng.gen_range(P);
+            poly.eval_into(alpha, &mut out, &mut scratch);
+            assert_eq!(out, poly.eval(alpha), "alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn power_table_matches_pow() {
+        let mut rng = ChaChaRng::seed_from_u64(22);
+        let mut poly = MatPoly::new(1, 1);
+        for e in [0u64, 3, 4, 17, 40] {
+            poly.insert(e, FpMat::random(&mut rng, 1, 1));
+        }
+        let mut table = Vec::new();
+        for alpha in [0u64, 1, 2, 65536] {
+            poly.power_table(alpha, &mut table);
+            let expect: Vec<u64> = poly.support().iter().map(|&e| ff::pow(alpha, e)).collect();
+            assert_eq!(table, expect, "alpha={alpha}");
+        }
     }
 
     #[test]

@@ -19,6 +19,9 @@
 
 pub mod manifest;
 pub mod pjrt;
+pub mod pool;
+
+pub use pool::{Scratch, ScratchPool, WorkerPool};
 
 use crate::error::{CmpcError, Result};
 use crate::matrix::FpMat;

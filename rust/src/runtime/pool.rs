@@ -1,0 +1,318 @@
+//! Dependency-free parallel compute core: a scoped-thread worker pool plus
+//! per-worker scratch storage.
+//!
+//! The protocol's per-job hot path has four CPU-bound stages that are
+//! independent across items — Phase-1 share encoding (independent per
+//! worker α), the verify-mode `AᵀB` reference product (independent per
+//! output row band), Phase-3 reconstruction (independent per output block),
+//! and the coordinator's `drain` (independent per job). [`WorkerPool`]
+//! parallelizes all four with nothing but `std::thread::scope`:
+//!
+//! * [`WorkerPool::par_for`] — dynamic (atomic-counter) index scheduling,
+//! * [`WorkerPool::par_chunks_mut`] — disjoint `&mut` chunk scheduling
+//!   (a `Mutex`-shared `chunks_mut` iterator, so no `unsafe` anywhere),
+//! * [`WorkerPool::par_map`] — order-preserving map into a fresh `Vec`.
+//!
+//! Every closure receives the **worker slot id** (`0..threads`) of the
+//! thread running it; [`ScratchPool`] keys its reusable buffers by that id,
+//! so two items never contend for one scratch slot and the buffers persist
+//! across jobs (allocation happens once at warmup — see the
+//! `alloc_discipline` test suite).
+//!
+//! The pool is deliberately *not* a long-lived thread farm: threads are
+//! scoped to each call, which keeps the API safe over borrowed data and
+//! makes a 1-thread pool literally sequential (the caller's thread runs
+//! every item) — the property the determinism tests pin down.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A sized handle describing how many worker slots parallel sections may
+/// use. `threads == 1` runs everything inline on the caller's thread.
+#[derive(Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool with exactly `threads` worker slots (clamped to ≥ 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Pool sized from [`std::thread::available_parallelism`].
+    pub fn with_default_parallelism() -> WorkerPool {
+        let threads = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        WorkerPool::new(threads)
+    }
+
+    /// Process-wide shared pool at default parallelism. Deployments built
+    /// with `ProtocolConfig::threads == 0` all share this instance.
+    pub fn global() -> &'static Arc<WorkerPool> {
+        static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(WorkerPool::with_default_parallelism()))
+    }
+
+    /// Number of worker slots.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Resolve a `threads` config knob: `0` means the shared
+    /// [`WorkerPool::global`] pool at default parallelism, anything else a
+    /// dedicated pool of exactly that size.
+    pub fn sized_or_global(threads: usize) -> Arc<WorkerPool> {
+        if threads == 0 {
+            WorkerPool::global().clone()
+        } else {
+            Arc::new(WorkerPool::new(threads))
+        }
+    }
+
+    /// Run `f(worker_id, index)` for every `index` in `0..n`, distributing
+    /// indices dynamically in chunks of `grain`. `worker_id < threads` is
+    /// stable for the duration of one call and indexes [`ScratchPool`]
+    /// slots without contention.
+    pub fn par_for<F>(&self, n: usize, grain: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        let grain = grain.max(1);
+        let n_tasks = n.div_ceil(grain);
+        let workers = self.threads.min(n_tasks).max(1);
+        if workers == 1 {
+            for i in 0..n {
+                f(0, i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let run = |wid: usize| loop {
+            let start = next.fetch_add(grain, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            let end = (start + grain).min(n);
+            for i in start..end {
+                f(wid, i);
+            }
+        };
+        std::thread::scope(|s| {
+            for wid in 1..workers {
+                let run = &run;
+                s.spawn(move || run(wid));
+            }
+            run(0);
+        });
+    }
+
+    /// Run `f(worker_id, chunk_index, chunk)` over disjoint mutable chunks
+    /// of `data`, `chunk_len` elements each (the last may be shorter).
+    /// Chunks are handed out dynamically through a shared iterator, so no
+    /// `unsafe` is needed for the disjoint `&mut` access.
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, usize, &mut [T]) + Sync,
+    {
+        let chunk_len = chunk_len.max(1);
+        let n_chunks = data.len().div_ceil(chunk_len);
+        let workers = self.threads.min(n_chunks).max(1);
+        if workers == 1 {
+            for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+                f(0, i, c);
+            }
+            return;
+        }
+        let it = Mutex::new(data.chunks_mut(chunk_len).enumerate());
+        let run = |wid: usize| loop {
+            let item = it.lock().unwrap().next();
+            match item {
+                Some((i, c)) => f(wid, i, c),
+                None => break,
+            }
+        };
+        std::thread::scope(|s| {
+            for wid in 1..workers {
+                let run = &run;
+                s.spawn(move || run(wid));
+            }
+            run(0);
+        });
+    }
+
+    /// Map every item of `items` through `f(worker_id, index, item)`,
+    /// preserving order. With one worker slot this is a plain sequential
+    /// map on the caller's thread.
+    pub fn par_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, usize, &T) -> R + Sync,
+    {
+        let workers = self.threads.min(items.len()).max(1);
+        if workers == 1 {
+            return items.iter().enumerate().map(|(i, t)| f(0, i, t)).collect();
+        }
+        let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+        {
+            let it = Mutex::new(out.chunks_mut(1).enumerate());
+            let run = |wid: usize| loop {
+                let item = it.lock().unwrap().next();
+                match item {
+                    Some((i, slot)) => slot[0] = Some(f(wid, i, &items[i])),
+                    None => break,
+                }
+            };
+            std::thread::scope(|s| {
+                for wid in 1..workers {
+                    let run = &run;
+                    s.spawn(move || run(wid));
+                }
+                run(0);
+            });
+        }
+        out.into_iter()
+            .map(|o| o.expect("par_map: every slot filled"))
+            .collect()
+    }
+}
+
+/// Reusable per-worker buffers for the delayed-reduction kernels.
+///
+/// `acc` holds unreduced `u64` partial sums; `powers` holds a share point's
+/// precomputed power table `α^e` over a polynomial support. Both grow to
+/// their steady-state capacity on first use and are only `clear()`ed after
+/// that, so the kernels they back allocate nothing in steady state.
+#[derive(Default, Debug)]
+pub struct Scratch {
+    /// Unreduced accumulator row (matmul, weighted sums).
+    pub acc: Vec<u64>,
+    /// Power table `α^{e}` for `e` over a polynomial support.
+    pub powers: Vec<u64>,
+}
+
+/// One [`Scratch`] per pool worker slot, indexed by the `worker_id` the
+/// pool primitives pass to their closures.
+#[derive(Debug)]
+pub struct ScratchPool {
+    slots: Vec<Mutex<Scratch>>,
+}
+
+impl ScratchPool {
+    /// `slots` independent scratch buffers (clamped to ≥ 1).
+    pub fn new(slots: usize) -> ScratchPool {
+        ScratchPool {
+            slots: (0..slots.max(1)).map(|_| Mutex::new(Scratch::default())).collect(),
+        }
+    }
+
+    /// One slot per worker of `pool` — the pairing used on the job path.
+    pub fn for_pool(pool: &WorkerPool) -> ScratchPool {
+        ScratchPool::new(pool.threads())
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Borrow worker `wid`'s scratch for the duration of `f`. Indices wrap,
+    /// so any `wid` is safe; pool-provided worker ids never contend.
+    pub fn with<R>(&self, wid: usize, f: impl FnOnce(&mut Scratch) -> R) -> R {
+        let mut guard = self.slots[wid % self.slots.len()].lock().unwrap();
+        f(&mut guard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_visits_every_index_once() {
+        for threads in [1, 2, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let n = 103;
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.par_for(n, 4, |_wid, i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_disjointly() {
+        for threads in [1, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut data = vec![0u32; 257];
+            pool.par_chunks_mut(&mut data, 10, |_wid, idx, chunk| {
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = (idx * 10 + k) as u32 + 1;
+                }
+            });
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, i as u32 + 1, "{threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..200).collect();
+        for threads in [1, 2, 5] {
+            let pool = WorkerPool::new(threads);
+            let out = pool.par_map(&items, |_wid, i, &x| x * 2 + i as u64);
+            let expect: Vec<u64> = (0..200).map(|x| x * 3).collect();
+            assert_eq!(out, expect, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn worker_ids_stay_in_range() {
+        let pool = WorkerPool::new(3);
+        let max_wid = AtomicUsize::new(0);
+        pool.par_for(64, 1, |wid, _i| {
+            max_wid.fetch_max(wid, Ordering::Relaxed);
+        });
+        assert!(max_wid.load(Ordering::Relaxed) < 3);
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        let pool = WorkerPool::new(4);
+        pool.par_for(0, 1, |_, _| panic!("no items"));
+        let mut empty: [u32; 0] = [];
+        pool.par_chunks_mut(&mut empty, 5, |_, _, _| panic!("no chunks"));
+        let out: Vec<u32> = pool.par_map(&[] as &[u32], |_, _, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scratch_slots_persist_capacity() {
+        let scratch = ScratchPool::new(2);
+        scratch.with(0, |s| {
+            s.acc.resize(1024, 0);
+        });
+        let cap = scratch.with(0, |s| {
+            s.acc.clear();
+            s.acc.capacity()
+        });
+        assert!(cap >= 1024);
+        assert_eq!(scratch.slots(), 2);
+    }
+
+    #[test]
+    fn pool_clamps_to_one_thread() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        assert!(WorkerPool::global().threads() >= 1);
+    }
+}

@@ -1,0 +1,112 @@
+//! Steady-state allocation discipline for the compute kernels.
+//!
+//! A counting global allocator wraps `System`; after one warmup pass grows
+//! every caller-owned buffer to its steady-state capacity, repeat
+//! invocations of the in-place GF(p) kernels must perform **zero** heap
+//! allocations — the contract `Deployment::execute` relies on for its
+//! per-job compute loops (message buffers and thread plumbing are the only
+//! remaining per-job allocations, and those move into the fabric).
+//!
+//! Kept to a single `#[test]` so no concurrent test can allocate inside
+//! the measurement window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use cmpc::ff;
+use cmpc::matrix::FpMat;
+use cmpc::mpc::source;
+use cmpc::poly::MatPoly;
+use cmpc::runtime::pool::Scratch;
+use cmpc::util::rng::ChaChaRng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_kernels_do_not_allocate() {
+    let mut rng = ChaChaRng::seed_from_u64(0xA110C);
+    let (m, k, n) = (24usize, 16usize, 20usize);
+    let a = FpMat::random(&mut rng, m, k);
+    let b = FpMat::random(&mut rng, k, n);
+    let c = FpMat::random(&mut rng, m, k);
+
+    // Share-polynomial evaluation fixture (the Phase-1 encode kernel).
+    let scheme = cmpc::codes::AgeCmpc::new(2, 2, 2, 1);
+    let sq = FpMat::random(&mut rng, 8, 8);
+    let fa = source::build_f_a(&scheme, &sq, &mut rng);
+
+    // Caller-owned buffers, grown once below.
+    let mut out = FpMat::zeros(m, n);
+    let mut acc: Vec<u64> = Vec::new();
+    let mut tout = FpMat::zeros(k, m);
+    let mut sum = FpMat::zeros(m, k);
+    let mut scaled = FpMat::zeros(m, k);
+    let mut eval_out = FpMat::zeros(1, 1);
+    let mut scratch = Scratch::default();
+    let mut ws_out = vec![0u32; k];
+    let xs: Vec<u32> = (0..k).map(|_| rng.field_element() as u32).collect();
+    let terms: Vec<(u64, &[u32])> = vec![(3, xs.as_slice()), (5, xs.as_slice())];
+    let mut ws_acc: Vec<u64> = Vec::new();
+
+    let run_all = |out: &mut FpMat,
+                   acc: &mut Vec<u64>,
+                   tout: &mut FpMat,
+                   sum: &mut FpMat,
+                   scaled: &mut FpMat,
+                   eval_out: &mut FpMat,
+                   scratch: &mut Scratch,
+                   ws_out: &mut [u32],
+                   ws_acc: &mut Vec<u64>| {
+        a.matmul_into(&b, out, acc);
+        a.transpose_into(tout);
+        sum.add_assign(&c);
+        sum.axpy_inplace(7, &c);
+        a.scale_into(12345, scaled);
+        fa.eval_into(9, eval_out, scratch);
+        ff::weighted_sum_with_scratch(ws_out, &terms, ws_acc);
+    };
+
+    // Warmup: grows every buffer to steady-state capacity.
+    run_all(
+        &mut out, &mut acc, &mut tout, &mut sum, &mut scaled, &mut eval_out, &mut scratch,
+        &mut ws_out, &mut ws_acc,
+    );
+
+    let before = allocs();
+    for _ in 0..10 {
+        run_all(
+            &mut out, &mut acc, &mut tout, &mut sum, &mut scaled, &mut eval_out, &mut scratch,
+            &mut ws_out, &mut ws_acc,
+        );
+    }
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state kernel loop performed {delta} heap allocations"
+    );
+}

@@ -1,0 +1,138 @@
+//! The parallel compute core must be a pure optimization: identical
+//! protocol outputs at any pool size, and the parallel kernels must agree
+//! with naive references over random shapes.
+
+use cmpc::codes::SchemeParams;
+use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
+use cmpc::ff::P;
+use cmpc::matrix::FpMat;
+use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::runtime::pool::{ScratchPool, WorkerPool};
+use cmpc::util::rng::ChaChaRng;
+use cmpc::util::testing::property;
+use cmpc::{Deployment, SchemeSpec};
+
+/// Schoolbook reference matmul with per-element modulo.
+fn matmul_ref(a: &FpMat, b: &FpMat) -> FpMat {
+    let mut out = FpMat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0u64;
+            for k in 0..a.cols {
+                acc = (acc + a.at(i, k) * b.at(k, j)) % P;
+            }
+            out.set(i, j, acc);
+        }
+    }
+    out
+}
+
+#[test]
+fn parallel_matmul_matches_naive_over_random_shapes() {
+    let pool = WorkerPool::new(4);
+    let scratch = ScratchPool::for_pool(&pool);
+    let mut out = FpMat::zeros(0, 0);
+    let mut acc = Vec::new();
+    property("matmul_into/par_matmul_into == naive", 150, |rng| {
+        let m = rng.gen_index(24) + 1;
+        let k = rng.gen_index(24) + 1;
+        let n = rng.gen_index(24) + 1;
+        let a = FpMat::random(rng, m, k);
+        let b = FpMat::random(rng, k, n);
+        let want = matmul_ref(&a, &b);
+        a.matmul_into(&b, &mut out, &mut acc);
+        if out != want {
+            return Err(format!("matmul_into at {m}x{k}x{n}"));
+        }
+        a.par_matmul_into(&b, &mut out, &pool, &scratch);
+        if out != want {
+            return Err(format!("par_matmul_into at {m}x{k}x{n}"));
+        }
+        Ok(())
+    });
+}
+
+/// Identical `ProtocolOutput` at pool sizes 1 vs N under the same seed:
+/// the product, verification status, traffic meters, and per-worker
+/// overhead counters must not depend on how the parallel sections are
+/// scheduled.
+#[test]
+fn deployment_output_identical_across_pool_sizes() {
+    let params = SchemeParams::new(2, 2, 2);
+    let mut rng = ChaChaRng::seed_from_u64(404);
+    let a = FpMat::random(&mut rng, 16, 16);
+    let b = FpMat::random(&mut rng, 16, 16);
+    let run = |threads: usize| {
+        let dep = Deployment::provision(
+            SchemeSpec::Age { lambda: None },
+            params,
+            ProtocolConfig::builder().threads(threads).build(),
+        )
+        .unwrap();
+        dep.execute_seeded(&a, &b, 1234).unwrap()
+    };
+    let base = run(1);
+    assert!(base.verified);
+    for threads in [2, 4, 8] {
+        let out = run(threads);
+        assert_eq!(out.y, base.y, "{threads} threads");
+        assert_eq!(out.verified, base.verified, "{threads} threads");
+        assert_eq!(out.n_workers, base.n_workers);
+        assert_eq!(
+            out.traffic.worker_to_worker, base.traffic.worker_to_worker,
+            "{threads} threads"
+        );
+        assert_eq!(
+            out.traffic.source_to_worker, base.traffic.source_to_worker,
+            "{threads} threads"
+        );
+        for (wc, bc) in out.worker_counters.iter().zip(base.worker_counters.iter()) {
+            assert_eq!(wc.mults(), bc.mults(), "{threads} threads");
+            assert_eq!(wc.stored(), bc.stored(), "{threads} threads");
+        }
+    }
+}
+
+/// `drain` must return reports in submission order with identical outputs
+/// whether jobs run sequentially (threads=1) or concurrently.
+#[test]
+fn parallel_drain_is_deterministic_and_ordered() {
+    let mut rng = ChaChaRng::seed_from_u64(505);
+    // Mixed signatures → multiple deployments; mixed sizes within one
+    // signature → shared deployment with distinct jobs.
+    let jobs: Vec<(FpMat, FpMat, usize, usize, usize)> = vec![
+        (FpMat::random(&mut rng, 8, 8), FpMat::random(&mut rng, 8, 8), 2, 2, 2),
+        (FpMat::random(&mut rng, 12, 12), FpMat::random(&mut rng, 12, 12), 2, 2, 1),
+        (FpMat::random(&mut rng, 16, 16), FpMat::random(&mut rng, 16, 16), 2, 2, 2),
+        (FpMat::random(&mut rng, 8, 8), FpMat::random(&mut rng, 8, 8), 2, 2, 1),
+    ];
+    let run = |threads: usize| {
+        let mut coord = Coordinator::new(
+            CoordinatorConfig::builder()
+                .policy(SchemePolicy::Adaptive)
+                .threads(threads)
+                .build(),
+        );
+        let mut handles = Vec::new();
+        for (a, b, s, t, z) in &jobs {
+            handles.push(coord.submit(a.clone(), b.clone(), *s, *t, *z).unwrap());
+        }
+        let reports = coord.drain();
+        assert_eq!(coord.provisioned_deployments(), 2);
+        for (h, r) in handles.iter().zip(&reports) {
+            assert_eq!(h.id(), r.id, "submission order at {threads} threads");
+        }
+        reports
+    };
+    let seq = run(1);
+    let par = run(4);
+    assert_eq!(seq.len(), par.len());
+    for (i, (rs, rp)) in seq.iter().zip(&par).enumerate() {
+        let ys = &rs.outcome.as_ref().unwrap().y;
+        let yp = &rp.outcome.as_ref().unwrap().y;
+        assert_eq!(ys, yp, "job {i} product differs across pool sizes");
+        let (a, b, ..) = &jobs[i];
+        assert_eq!(ys, &a.transpose().matmul(b), "job {i} wrong product");
+        assert_eq!(rs.scheme, rp.scheme, "job {i}");
+    }
+}

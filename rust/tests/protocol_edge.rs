@@ -2,20 +2,29 @@
 //! scheme layer: feasibility invariants the paper assumes implicitly,
 //! adversarial timing, degenerate partitions, and determinism guarantees.
 
-// `run_protocol` stays covered here while the deprecated compat wrapper
-// exists; the deployment path is exercised in integration.rs/error_paths.rs.
-#![allow(deprecated)]
-
 use std::time::Duration;
 
 use cmpc::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc};
 use cmpc::coordinator::{Coordinator, CoordinatorConfig};
 use cmpc::matrix::FpMat;
 use cmpc::mpc::privacy;
-use cmpc::mpc::protocol::{run_protocol, ProtocolConfig};
+use cmpc::mpc::protocol::{prepare_setup, run_protocol_with_setup, ProtocolConfig, ProtocolOutput};
 use cmpc::poly::interp::evaluation_points;
 use cmpc::util::rng::ChaChaRng;
 use cmpc::util::testing::property;
+
+/// One-shot protocol run (the pre-0.2 `run_protocol` shape): solve the
+/// setup, then run through a config-derived environment. Tests that stream
+/// multiple jobs use `Deployment` instead.
+fn run_protocol(
+    scheme: &dyn CmpcScheme,
+    a: &FpMat,
+    b: &FpMat,
+    config: &ProtocolConfig,
+) -> cmpc::Result<ProtocolOutput> {
+    let setup = prepare_setup(scheme)?;
+    run_protocol_with_setup(scheme, &setup, a, b, config)
+}
 
 /// The master phase requires t²+z ≤ N; every construction must provision at
 /// least that many workers or the scheme is undecodable by its own protocol.
