@@ -119,7 +119,7 @@ fn main() -> cmpc::Result<()> {
     println!("\nper-job results (m={m}):");
     println!(
         "{:>4} {:>18} {:>4} {:>7} {:>12} {:>10}",
-        "job", "scheme", "N", "cache", "phase2+3", "verified"
+        "job", "scheme", "N", "cache", "phase2", "verified"
     );
     let mut cache_hits = 0usize;
     for r in &reports {

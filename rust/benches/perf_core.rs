@@ -1,18 +1,21 @@
-//! Bench PR2 — the parallel compute core's perf trajectory.
+//! Bench PR2/PR3 — the serving core's perf trajectory.
 //!
 //! Runs the Fig. 2 anchor shapes (Example-1 parameters, serving-sized
 //! matrices) through a provisioned `Deployment` at 1/2/4/8 pool threads,
-//! recording per-phase latency (encode / worker compute / reconstruct
-//! tail), end-to-end job latency (verify on — the full serving path
-//! including the parallel reference product), drain throughput on a
-//! shared coordinator, and peak RSS. Results are printed in the in-tree
-//! bench format *and* emitted as machine-readable `BENCH_2.json` so later
-//! PRs can diff the trajectory.
+//! recording per-phase latency (encode / worker compute / reconstruct),
+//! end-to-end job latency (verify on — the full serving path including the
+//! parallel reference product), drain throughput on a shared coordinator,
+//! and peak RSS. PR 3 adds a **job-churn** scenario: small-m jobs/sec on a
+//! provision-once persistent runtime vs. provisioning (spawning N worker
+//! threads + solving setup) per job — the cost the persistent runtime
+//! amortizes away. Results are printed in the in-tree bench format *and*
+//! emitted as machine-readable `BENCH_3.json` so later PRs can diff the
+//! trajectory.
 //!
 //! Usage (from `rust/`):
 //!
 //! ```sh
-//! cargo bench --bench perf_core                      # full run → ../BENCH_2.json
+//! cargo bench --bench perf_core                      # full run → ../BENCH_3.json
 //! cargo bench --bench perf_core -- --smoke --out /tmp/b.json   # CI schema smoke
 //! ```
 
@@ -49,6 +52,58 @@ struct Case {
 
 fn ns(d: Duration) -> u64 {
     d.as_nanos() as u64
+}
+
+struct ChurnCase {
+    m: usize,
+    jobs: usize,
+    /// Jobs/sec streamed through one persistent runtime (provision once).
+    warm_jobs_per_sec: f64,
+    /// Jobs/sec when every job provisions its own deployment (N thread
+    /// spawns + the O(N³) setup solve per job — the pre-runtime shape).
+    cold_jobs_per_sec: f64,
+    speedup_warm_vs_cold: f64,
+}
+
+/// Job churn at small m: provision-once vs per-job provisioning.
+fn run_churn(s: usize, t: usize, z: usize, m: usize, jobs: usize) -> ChurnCase {
+    let params = SchemeParams::new(s, t, z);
+    let mut rng = ChaChaRng::seed_from_u64(0xC4);
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    let config = ProtocolConfig::builder().verify(false).build();
+    let provision = || {
+        Deployment::provision(SchemeSpec::Age { lambda: None }, params, config.clone())
+            .expect("provision")
+    };
+    // Warm: one runtime, `jobs` streamed jobs (plus one unmeasured warmup
+    // that grows the fabric buffer pool to steady state).
+    let dep = provision();
+    dep.execute_seeded(&a, &b, 1).expect("warmup");
+    let t0 = Instant::now();
+    for i in 0..jobs {
+        dep.execute_seeded(&a, &b, 2 + i as u64).expect("warm job");
+    }
+    let warm_jobs_per_sec = per_second(jobs as u64, t0.elapsed());
+    // Cold: provision (thread spawns + setup solve) inside every job.
+    let t0 = Instant::now();
+    for i in 0..jobs {
+        let dep = provision();
+        dep.execute_seeded(&a, &b, 2 + i as u64).expect("cold job");
+    }
+    let cold_jobs_per_sec = per_second(jobs as u64, t0.elapsed());
+    let speedup = warm_jobs_per_sec / cold_jobs_per_sec.max(1e-9);
+    println!(
+        "bench perf_core/churn m={m} jobs={jobs}            warm={warm_jobs_per_sec:.1} jobs/s \
+         cold={cold_jobs_per_sec:.1} jobs/s speedup={speedup:.2}"
+    );
+    ChurnCase {
+        m,
+        jobs,
+        warm_jobs_per_sec,
+        cold_jobs_per_sec,
+        speedup_warm_vs_cold: speedup,
+    }
 }
 
 fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut Vec<Case>) {
@@ -129,7 +184,7 @@ fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut V
 
 fn main() {
     let mut smoke = false;
-    let mut out_path = String::from("../BENCH_2.json");
+    let mut out_path = String::from("../BENCH_3.json");
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -152,12 +207,18 @@ fn main() {
     for &(s, t, z, m) in shapes {
         run_shape(s, t, z, m, iters, &mut cases);
     }
+    let churn_jobs = if smoke { 4 } else { 64 };
+    let churn_shapes: &[usize] = if smoke { &[16] } else { &[16, 32] };
+    let churn: Vec<ChurnCase> = churn_shapes
+        .iter()
+        .map(|&m| run_churn(2, 2, 2, m, churn_jobs))
+        .collect();
 
     let host_threads = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1) as u64;
     let json = Json::obj(vec![
-        ("schema", Json::Str("cmpc.bench.v2".to_string())),
+        ("schema", Json::Str("cmpc.bench.v3".to_string())),
         ("benchmark", Json::Str("perf_core".to_string())),
         ("provenance", Json::Str("measured".to_string())),
         (
@@ -193,6 +254,26 @@ fn main() {
                             ("jobs_per_sec", Json::Float(c.jobs_per_sec)),
                             ("speedup_e2e_vs_1t", Json::Float(c.speedup_e2e_vs_1t)),
                             ("peak_rss_bytes", Json::Int(c.peak_rss_bytes)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "churn",
+            Json::Arr(
+                churn
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("m", Json::Int(c.m as u64)),
+                            ("jobs", Json::Int(c.jobs as u64)),
+                            ("warm_jobs_per_sec", Json::Float(c.warm_jobs_per_sec)),
+                            ("cold_jobs_per_sec", Json::Float(c.cold_jobs_per_sec)),
+                            (
+                                "speedup_warm_vs_cold",
+                                Json::Float(c.speedup_warm_vs_cold),
+                            ),
                         ])
                     })
                     .collect(),

@@ -14,9 +14,13 @@
 //!   the job's `(s,t,z)`.
 //! * **Deployment caching & batching** — [`Coordinator::drain`] groups
 //!   queued jobs by `(scheme, s, t, z)` signature onto shared
-//!   [`Deployment`]s, so the O(N³) generalized-Vandermonde solve and the
-//!   backend service are provisioned once per signature and reused across
-//!   jobs and across drains.
+//!   [`Deployment`]s, so the O(N³) generalized-Vandermonde solve, the
+//!   backend service, **and the persistent worker runtime** (N long-lived
+//!   Phase-2 threads + the job-multiplexed fabric) are provisioned once per
+//!   signature and reused across jobs and across drains. Draining
+//!   *pipelines* concurrent jobs into each live runtime — no per-job thread
+//!   spawns, job-tagged envelopes interleaving on shared links, per-job
+//!   traffic meters.
 //! * **Failure isolation** — a job that fails at execution is reported in
 //!   its [`JobReport::outcome`]; the rest of the batch keeps draining.
 //! * **Backend management** — native or the artifact executor service per
@@ -285,12 +289,15 @@ impl Coordinator {
     ///
     /// Deployment resolution runs first (sequentially — it touches the
     /// cache), then every job executes across the shared worker pool; jobs
-    /// on the same *or* different deployments run concurrently (same-
-    /// deployment jobs may contend on the shared scratch slots — see
-    /// ROADMAP). Reports come back in submission order regardless of pool
-    /// size; a failing job yields an `Err` outcome in its report and the
-    /// batch keeps going. Per-job seeds are fixed at `submit`, so results
-    /// are identical at any pool size.
+    /// on the same *or* different deployments run concurrently. Jobs that
+    /// share a deployment are **pipelined into its one persistent runtime**:
+    /// their envelopes interleave, job-tagged, on the same fabric links and
+    /// no threads are spawned per job (same-deployment jobs may contend on
+    /// the shared scratch slots — see ROADMAP). Reports come back in
+    /// submission order regardless of pool size; a failing job yields an
+    /// `Err` outcome in its report and the batch keeps going. Per-job seeds
+    /// are fixed at `submit`, so results are byte-identical at any pool
+    /// size and under any job interleaving.
     pub fn drain(&mut self) -> Vec<JobReport> {
         let jobs = std::mem::take(&mut self.queue);
         let prepared: Vec<(Job, Result<(Arc<Deployment>, bool)>)> = jobs

@@ -16,12 +16,17 @@
 //!
 //! The public API is **session-based**: provision a [`Deployment`] once per
 //! `(scheme, s, t, z)` signature — that pays for Phase 0 scheme selection,
-//! the α assignment, the O(N³) generalized-Vandermonde solve, and backend
-//! startup — then stream any number of jobs through it. Scheme families are
-//! named by [`SchemeSpec`] and resolved through one registry (the same
-//! registry behind the coordinator's adaptive policy). Everything fallible
-//! returns [`Result`] with a typed [`CmpcError`]; a malformed job is a
-//! rejected request, never a crashed process.
+//! the α assignment, the O(N³) generalized-Vandermonde solve, backend
+//! startup, **and the spawn of `N` persistent Phase-2 worker threads** —
+//! then stream any number of (possibly concurrent) jobs through it. Jobs
+//! are multiplexed over one long-lived fabric with job-tagged envelopes,
+//! per-job traffic meters, and pooled payload buffers: a warm
+//! [`Deployment::execute`] spawns zero threads and performs zero
+//! fabric-payload allocations. Scheme families are named by [`SchemeSpec`]
+//! and resolved through one registry (the same registry behind the
+//! coordinator's adaptive policy). Everything fallible returns [`Result`]
+//! with a typed [`CmpcError`]; a malformed job is a rejected request —
+//! and a dead worker a typed timeout — never a crashed process.
 //!
 //! For multi-tenant batches, [`coordinator::Coordinator`] adds intake
 //! validation ([`coordinator::Coordinator::submit`] → `JobHandle`),
@@ -75,6 +80,18 @@
 //!     Ok(())
 //! }
 //! ```
+//!
+//! ## Persistent worker runtime (v0.4)
+//!
+//! [`mpc::runtime::WorkerRuntime`] realizes the paper's continuously
+//! serving edge workers: worker threads live as long as the deployment and
+//! serve a multi-job state machine keyed by
+//! [`mpc::network::JobId`]-tagged envelopes. The runtime's control plane
+//! ([`mpc::network::ControlMsg`]) starts jobs (per-job seed + counters),
+//! acknowledges completion per worker, reports failures as typed errors,
+//! and shuts down cleanly on drop (worker panics propagate). Outputs are
+//! byte-identical for a given seed regardless of pool size or job
+//! interleaving (`tests/parallel_core.rs`, `tests/runtime_reuse.rs`).
 //!
 //! ## Parallel compute core (v0.3)
 //!

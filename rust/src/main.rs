@@ -133,8 +133,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("stragglers tolerated {}", out.stragglers_tolerated);
     println!("verified Y = AᵀB     {}", out.verified);
     println!(
-        "timings              setup={:?} phase1={:?} phase2+3={:?}",
-        out.timings.setup, out.timings.phase1_share, out.timings.phase2_compute
+        "timings              setup={:?} phase1={:?} phase2={:?} phase3={:?}",
+        out.timings.setup,
+        out.timings.phase1_share,
+        out.timings.phase2_compute,
+        out.timings.phase3_reconstruct
     );
     let tr = out.traffic;
     println!(
@@ -178,7 +181,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     r.n_workers,
                     r.setup_cache_hit,
                     out.verified,
-                    out.timings.phase1_share + out.timings.phase2_compute
+                    out.timings.total()
                 );
             }
             Err(e) => println!("job {:>3}  FAILED: {e}", r.id),

@@ -115,6 +115,26 @@ impl FpMat {
         out.data.resize(rows * cols, 0);
     }
 
+    /// Reshape in place, reusing the buffer (contents of any retained
+    /// prefix are unspecified — callers overwrite before use). Never
+    /// allocates once the buffer has grown to its steady-state capacity;
+    /// the fabric [`BufferPool`] relies on this for recycled payloads.
+    ///
+    /// [`BufferPool`]: crate::mpc::network::BufferPool
+    #[inline]
+    pub fn reshape(&mut self, rows: usize, cols: usize) {
+        FpMat::shape_into(self, rows, cols);
+    }
+
+    /// Overwrite every entry with a fresh uniform field element, in the
+    /// same element order as [`FpMat::random`] (so a reused mask buffer
+    /// draws the byte-identical stream a freshly allocated one would).
+    pub fn fill_random(&mut self, rng: &mut ChaChaRng) {
+        for v in self.data.iter_mut() {
+            *v = rng.field_element() as u32;
+        }
+    }
+
     /// Transpose.
     pub fn transpose(&self) -> FpMat {
         let mut out = FpMat::zeros(self.cols, self.rows);

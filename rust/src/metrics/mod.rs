@@ -75,11 +75,30 @@ impl TrafficCounters {
 }
 
 /// Wall-clock phase breakdown of one protocol run.
+///
+/// The windows are measured separately and do **not** overlap, so
+/// [`PhaseTimings::total`] is the job's end-to-end latency excluding
+/// verification. (Before the persistent-runtime refactor,
+/// `phase2_compute` reported total elapsed *including* reconstruction and
+/// `phase3_reconstruct` was the worker-tail remainder — the fields now
+/// mean what their names say.)
 #[derive(Default, Debug, Clone, Copy)]
 pub struct PhaseTimings {
+    /// Per-job intake: secret-stream derivation, counter registration, and
+    /// the `JobStart` hand-off to the persistent workers. (Deployment
+    /// provisioning — the O(N³) solve, thread spawns — is *not* part of
+    /// any job's timings.)
     pub setup: std::time::Duration,
+    /// Phase 1: building both share polynomials and encoding + sending
+    /// every worker's share pair.
     pub phase1_share: std::time::Duration,
+    /// Phase 2 as observed by the master: from the end of Phase 1 until
+    /// the `t²+z`-th I-share arrived, **plus** the post-reconstruction wait
+    /// for the remaining workers to finish (the straggler tail). Worker
+    /// compute, the G-exchange, and transfer overlap inside this window.
     pub phase2_compute: std::time::Duration,
+    /// Phase 3: the master's reconstruction math only — the dense
+    /// Vandermonde solve and the t² block combinations.
     pub phase3_reconstruct: std::time::Duration,
 }
 

@@ -5,9 +5,12 @@
 //! (Phase 0 scheme selection, α assignment, the O(N³) generalized-Vandermonde
 //! solve — all independent of the job matrices) and a *per-job* phase
 //! (share generation, worker compute, reconstruction). [`Deployment`] owns
-//! the provisioning products — the resolved scheme, the cached
-//! [`Setup`], and the backend factory (executor service + artifact cache) —
-//! so [`Deployment::execute`] pays only the per-job cost:
+//! the provisioning products — the resolved scheme, the cached [`Setup`],
+//! the backend factory (executor service + artifact cache), **and the
+//! persistent [`WorkerRuntime`]**: `N` long-lived Phase-2 worker threads
+//! plus the job-multiplexed, buffer-pooled fabric they serve on. A warm
+//! [`Deployment::execute`] therefore spawns zero threads and performs zero
+//! fabric-payload allocations — it only streams the job:
 //!
 //! ```no_run
 //! use cmpc::codes::SchemeParams;
@@ -22,12 +25,12 @@
 //!     SchemeSpec::Age { lambda: None },
 //!     params,
 //!     ProtocolConfig::default(),
-//! )?;
+//! )?; // 17 persistent worker threads start here
 //! let mut rng = ChaChaRng::seed_from_u64(1);
 //! for _ in 0..3 {
 //!     let a = FpMat::random(&mut rng, 64, 64);
 //!     let b = FpMat::random(&mut rng, 64, 64);
-//!     let out = dep.execute(&a, &b)?; // Setup solved once, reused here
+//!     let out = dep.execute(&a, &b)?; // job streamed to the live workers
 //!     assert_eq!(out.y, a.transpose().matmul(&b));
 //! }
 //! assert_eq!(dep.jobs_executed(), 3);
@@ -35,10 +38,17 @@
 //! # }
 //! ```
 //!
-//! A failed `execute` (e.g. a [`CmpcError::ShapeMismatch`] job) leaves the
-//! deployment intact — subsequent jobs keep flowing.
+//! Jobs may run **concurrently** on one deployment (the coordinator's
+//! `drain` does exactly that): envelopes are job-tagged, traffic meters are
+//! per job, and outputs are byte-identical for a given seed regardless of
+//! interleaving. A failed `execute` (e.g. a [`CmpcError::ShapeMismatch`]
+//! job, or a [`CmpcError::Fabric`] receive timeout) leaves the deployment
+//! intact — subsequent jobs keep flowing. Dropping the deployment shuts the
+//! runtime down cleanly and propagates any worker panic.
 //!
 //! [`CmpcError::ShapeMismatch`]: crate::error::CmpcError::ShapeMismatch
+//! [`CmpcError::Fabric`]: crate::error::CmpcError::Fabric
+//! [`WorkerRuntime`]: crate::mpc::runtime::WorkerRuntime
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -47,13 +57,18 @@ use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
 use crate::error::Result;
 use crate::matrix::FpMat;
 use crate::mpc::protocol::{self, ExecEnv, ProtocolConfig, ProtocolOutput, Setup};
+use crate::mpc::runtime::WorkerRuntime;
 use crate::runtime::pool::{ScratchPool, WorkerPool};
 use crate::runtime::BackendFactory;
 
 /// A provisioned worker deployment: resolved scheme + cached [`Setup`] +
-/// shared backend + worker pool + per-pool-worker scratch, reusable across
-/// any number of jobs with the same `(scheme, s, t, z)` signature.
+/// shared backend + worker pool + per-pool-worker scratch **+ the live
+/// worker runtime**, reusable across any number of (possibly concurrent)
+/// jobs with the same `(scheme, s, t, z)` signature.
 pub struct Deployment {
+    /// Declared first so Drop joins the worker threads before the backend
+    /// factory (whose handles the workers hold) is torn down.
+    runtime: WorkerRuntime,
     scheme: Arc<dyn CmpcScheme>,
     setup: Arc<Setup>,
     factory: Arc<BackendFactory>,
@@ -73,8 +88,8 @@ pub struct Deployment {
 
 impl Deployment {
     /// Resolve `spec` for `params` and provision the deployment: α
-    /// assignment, the O(N³) reconstruction solve, and the backend factory
-    /// all happen here, once.
+    /// assignment, the O(N³) reconstruction solve, the backend factory,
+    /// and the `N` persistent worker threads all start here, once.
     pub fn provision(
         spec: SchemeSpec,
         params: SchemeParams,
@@ -119,7 +134,10 @@ impl Deployment {
     ) -> Result<Deployment> {
         let setup = Arc::new(protocol::prepare_setup(scheme.as_ref())?);
         let scratch = Arc::new(ScratchPool::for_pool(&pool));
+        let runtime =
+            WorkerRuntime::provision(&setup, scheme.params(), &config, factory.as_ref())?;
         Ok(Deployment {
+            runtime,
             scheme,
             setup,
             factory,
@@ -130,7 +148,7 @@ impl Deployment {
         })
     }
 
-    /// Run one `Y = AᵀB` job through the provisioned fabric. Per-job secret
+    /// Run one `Y = AᵀB` job through the provisioned runtime. Per-job secret
     /// randomness is derived from the config seed and an atomically claimed
     /// job counter, so concurrent jobs on a shared deployment never reuse
     /// masks.
@@ -158,7 +176,7 @@ impl Deployment {
             seed,
             ..self.config.clone()
         };
-        protocol::run_protocol_with_env(
+        protocol::run_job(
             self.scheme.as_ref(),
             &self.setup,
             a,
@@ -169,6 +187,7 @@ impl Deployment {
                 pool: &self.pool,
                 scratch: &self.scratch,
             },
+            &self.runtime,
         )
     }
 
@@ -182,6 +201,11 @@ impl Deployment {
         &self.pool
     }
 
+    /// The live worker runtime (persistent threads + multiplexed fabric).
+    pub fn runtime(&self) -> &WorkerRuntime {
+        &self.runtime
+    }
+
     /// The scheme parameters of this deployment.
     pub fn params(&self) -> SchemeParams {
         self.scheme.params()
@@ -190,6 +214,12 @@ impl Deployment {
     /// Provisioned worker count.
     pub fn n_workers(&self) -> usize {
         self.setup.n_workers
+    }
+
+    /// Persistent worker threads serving this deployment (constant for its
+    /// lifetime — jobs spawn nothing).
+    pub fn worker_threads(&self) -> usize {
+        self.runtime.worker_threads()
     }
 
     /// Jobs attempted through the cached setup (the Setup itself was solved
@@ -215,6 +245,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(dep.n_workers(), 17);
+        assert_eq!(dep.worker_threads(), 17);
         let mut rng = ChaChaRng::seed_from_u64(10);
         for _ in 0..3 {
             let a = FpMat::random(&mut rng, 8, 8);
@@ -224,6 +255,9 @@ mod tests {
             assert_eq!(out.y, a.transpose().matmul(&b));
         }
         assert_eq!(dep.jobs_executed(), 3);
+        // the persistent runtime served every job; thread count is flat
+        assert_eq!(dep.worker_threads(), 17);
+        assert_eq!(dep.runtime().jobs_started(), 3);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Phase 3 — master reconstruction (eq. 21).
+//! Phase 3 — master reconstruction (eq. 21) over the multiplexed fabric.
 //!
 //! `I(x)` is a *dense* polynomial of degree `t²+z−1` whose first `t²`
 //! coefficients are the output blocks `Y_{i,l}` (at power `i + t·l`) and
@@ -6,20 +6,32 @@
 //! determine it, so the master reconstructs from the **first** `t²+z`
 //! `I(αₙ)` arrivals — the protocol tolerates `N − (t²+z)` stragglers.
 //!
+//! The master endpoint is shared by every in-flight job of a deployment:
+//! [`run_master`] receives through a [`JobRouter`], which filters envelopes
+//! by [`JobId`] (buffering concurrent jobs' traffic for their own driving
+//! threads) and converts a dead worker thread into a typed
+//! [`CmpcError::Fabric`] timeout instead of a deadlock. After
+//! reconstructing, the master drains the job's tail — every worker sends
+//! `I(αₙ)` then a [`JobDone`] control message — so per-worker overhead
+//! counters are final when the job returns and no stale envelopes linger on
+//! the shared link.
+//!
 //! The `t²` block reconstructions (`Y_{i,l} = Σₙ rows[i+t·l][n]·I(αₙ)`) are
 //! independent linear combinations, so they fan out across the worker pool;
 //! each block is folded with delayed reduction through a per-worker
 //! [`Scratch`] accumulator (one reduction per output element, no
 //! allocation in the combination loop).
 //!
+//! [`JobDone`]: crate::mpc::network::ControlMsg::JobDone
 //! [`Scratch`]: crate::runtime::pool::Scratch
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::error::{CmpcError, Result};
 use crate::ff::{self, P};
 use crate::matrix::FpMat;
-use crate::mpc::network::{Endpoint, Payload};
+use crate::mpc::network::{ControlMsg, JobId, JobRouter, Payload, PooledMat};
 use crate::poly::interp::try_vandermonde_inverse_rows;
 use crate::runtime::pool::{ScratchPool, WorkerPool};
 
@@ -33,20 +45,44 @@ pub struct MasterOutput {
     pub stragglers_tolerated: usize,
 }
 
-/// Collect `t²+z` I-shares and reconstruct `Y`.
+/// Wall-clock windows of the master phase, measured separately so
+/// [`PhaseTimings`] can attribute compute and reconstruction honestly.
+///
+/// [`PhaseTimings`]: crate::metrics::PhaseTimings
+#[derive(Default, Debug, Clone, Copy)]
+pub struct MasterTimings {
+    /// From entry until the `t²+z`-th I-share arrived (worker compute +
+    /// exchange + transfer, overlapped across workers).
+    pub quota_wait: Duration,
+    /// The reconstruction math only: the dense Vandermonde solve plus the
+    /// `t²` block combinations.
+    pub reconstruct: Duration,
+    /// After reconstruction, waiting for the remaining workers' I-shares
+    /// and `JobDone` acks (the straggler tail).
+    pub tail_wait: Duration,
+}
+
+/// Collect `t²+z` I-shares for `job`, reconstruct `Y`, then drain the
+/// job's tail (`n_workers` `JobDone` acks).
 ///
 /// `alphas[n]` is worker `n`'s evaluation point; `t`/`z` are scheme
-/// parameters; `n_workers` is the provisioned worker count. `pool` and
-/// `scratch` drive the parallel block reconstruction.
+/// parameters; `n_workers` is the provisioned worker count. `timeout`
+/// bounds every receive (a dead worker surfaces as
+/// [`CmpcError::Fabric`]); a worker-reported [`ControlMsg::JobError`]
+/// fails the job immediately. `pool` and `scratch` drive the parallel
+/// block reconstruction.
+#[allow(clippy::too_many_arguments)]
 pub fn run_master(
-    endpoint: &Endpoint,
+    router: &JobRouter,
+    job: JobId,
     alphas: &Arc<Vec<u64>>,
     n_workers: usize,
     t: usize,
     z: usize,
+    timeout: Duration,
     pool: &WorkerPool,
     scratch: &ScratchPool,
-) -> Result<MasterOutput> {
+) -> Result<(MasterOutput, MasterTimings)> {
     let needed = t * t + z;
     if needed > n_workers {
         return Err(CmpcError::InsufficientWorkers {
@@ -54,18 +90,26 @@ pub fn run_master(
             provisioned: n_workers,
         });
     }
-    let mut arrived: Vec<(usize, FpMat)> = Vec::with_capacity(needed);
+    let t_quota = Instant::now();
+    let mut arrived: Vec<(usize, PooledMat)> = Vec::with_capacity(needed);
+    let mut done = 0usize;
     while arrived.len() < needed {
-        let env = endpoint
-            .recv()
-            .map_err(|_| CmpcError::Fabric("fabric closed before reconstruction".to_string()))?;
+        let env = router.recv_for(job, timeout)?;
         match env.payload {
             Payload::IShare(m) => arrived.push((env.from, m)),
+            // A worker can finish (I-share consumed above) before slower
+            // peers reach the quota.
+            Payload::Control(ControlMsg::JobDone) => done += 1,
+            Payload::Control(ControlMsg::JobError(msg)) => {
+                return Err(CmpcError::Fabric(format!("job {job}: {msg}")));
+            }
             other => {
                 return Err(CmpcError::Fabric(format!("master: unexpected {other:?}")));
             }
         }
     }
+    let quota_wait = t_quota.elapsed();
+    let t_rec = Instant::now();
     let used_workers: Vec<usize> = arrived.iter().map(|&(id, _)| id).collect();
 
     // Dense Vandermonde over the arrived points: coefficient c_e of I(x)
@@ -108,19 +152,44 @@ pub fn run_master(
     });
     // Reassemble the t×t grid: flat[i + t·l] is block (i, l), i.e. grid
     // row-part i, column-part l.
-    let mut y_blocks: Vec<Vec<FpMat>> = (0..t)
-        .map(|_| Vec::with_capacity(t))
-        .collect();
+    let mut y_blocks: Vec<Vec<FpMat>> = (0..t).map(|_| Vec::with_capacity(t)).collect();
     for (idx, blk) in flat.into_iter().enumerate() {
         let i = idx % t;
         y_blocks[i].push(blk);
     }
-    // The top z coefficients of I(x) are mask sums; reconstructing them is
-    // unnecessary — decodability is asserted end-to-end by the caller
-    // (Y == AᵀB in verify mode).
-    Ok(MasterOutput {
-        y: FpMat::from_blocks(&y_blocks),
-        stragglers_tolerated: n_workers - needed,
-        used_workers,
-    })
+    let y = FpMat::from_blocks(&y_blocks);
+    // Straggler I-shares return their buffers to the pool here; the top z
+    // coefficients of I(x) are mask sums and never need reconstructing —
+    // decodability is asserted end-to-end by the caller (Y == AᵀB).
+    drop(arrived);
+    let reconstruct = t_rec.elapsed();
+
+    // --- drain the job tail: every worker sends I-share then JobDone ---
+    let t_tail = Instant::now();
+    while done < n_workers {
+        let env = router.recv_for(job, timeout)?;
+        match env.payload {
+            Payload::IShare(_) => {} // straggler share beyond the quota
+            Payload::Control(ControlMsg::JobDone) => done += 1,
+            Payload::Control(ControlMsg::JobError(msg)) => {
+                return Err(CmpcError::Fabric(format!("job {job}: {msg}")));
+            }
+            other => {
+                return Err(CmpcError::Fabric(format!("master: unexpected {other:?}")));
+            }
+        }
+    }
+    let tail_wait = t_tail.elapsed();
+    Ok((
+        MasterOutput {
+            y,
+            stragglers_tolerated: n_workers - needed,
+            used_workers,
+        },
+        MasterTimings {
+            quota_wait,
+            reconstruct,
+            tail_wait,
+        },
+    ))
 }

@@ -14,14 +14,18 @@
 //!   tolerance) and reads `Y_{i,l}` off the first `t²` coefficients
 //!   (eq. 21).
 //!
-//! Every node runs on its own thread; all traffic flows through
-//! [`network::Fabric`], which meters scalars per edge class so measured
-//! communication can be asserted against ζ (eq. 34).
+//! Workers are **persistent**: [`runtime::WorkerRuntime`] spawns the `N`
+//! worker threads once per deployment and streams jobs to them over a
+//! long-lived, job-multiplexed [`network::Fabric`], which meters scalars
+//! per edge class — globally and per job — so measured communication can be
+//! asserted against ζ (eq. 34). Payload buffers cycle through a
+//! [`network::BufferPool`], making warm jobs free of fabric allocations.
 
 pub mod deployment;
 pub mod master;
 pub mod network;
 pub mod privacy;
 pub mod protocol;
+pub mod runtime;
 pub mod source;
 pub mod worker;

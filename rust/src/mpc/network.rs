@@ -1,21 +1,43 @@
-//! Simulated edge-network fabric.
+//! Simulated edge-network fabric, multiplexed across concurrent jobs.
 //!
 //! Models the paper's topology: every source connects to every worker, every
 //! worker to every other worker and to the master (D2D links). Nodes are
 //! threads; links are mpsc channels routed through a central [`Fabric`] that
-//! meters traffic per edge class and can inject link latency.
+//! meters traffic per edge class — globally and **per job** — and can inject
+//! link latency.
+//!
+//! Since the persistent-runtime refactor the fabric is *long-lived*: one
+//! [`Fabric`] (and one set of worker threads) serves every job of a
+//! deployment, so every [`Envelope`] carries a [`JobId`] tag and Phase-1/2/3
+//! messages from concurrent jobs interleave safely on the same links. Data
+//! payloads ride in [`PooledMat`] buffers loaned from a [`BufferPool`] and
+//! returned on drop, so a steady-state job performs zero fabric-payload heap
+//! allocations (pinned by `tests/alloc_discipline.rs`). A separate
+//! *control plane* ([`Payload::Control`]) starts jobs, acknowledges their
+//! completion, reports worker failures, and shuts the runtime down; control
+//! messages are unmetered and exempt from the data-topology rules.
 //!
 //! Node-id layout for an `N`-worker deployment:
 //! `0..N` → workers, `N` → master, `N+1` → source A, `N+2` → source B.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
-use std::time::Duration;
+use std::collections::{HashMap, VecDeque};
+use std::ops::{Deref, DerefMut};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
+use std::time::{Duration, Instant};
 
+use crate::error::{CmpcError, Result};
 use crate::matrix::FpMat;
-use crate::metrics::TrafficCounters;
+use crate::metrics::{TrafficCounters, TrafficReport, WorkerCounters};
 
 pub type NodeId = usize;
+
+/// Identifies one job multiplexed over a shared fabric. Assigned by the
+/// worker runtime at submission; unique for the lifetime of the fabric.
+pub type JobId = u64;
+
+/// `JobId` used for job-independent control traffic (shutdown).
+pub const CONTROL_JOB: JobId = u64::MAX;
 
 /// Role classification derived from a node id.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -26,15 +48,125 @@ pub enum Role {
     SourceB,
 }
 
+/// A payload matrix loaned from a [`BufferPool`].
+///
+/// Dereferences to [`FpMat`]; the underlying buffer is returned to its pool
+/// when the `PooledMat` drops (receive side), so steady-state jobs recycle
+/// a fixed working set of payload buffers instead of allocating per message.
+/// [`PooledMat::detached`] wraps a plain matrix with no pool (tests, ad-hoc
+/// sends); its buffer is simply freed on drop.
+#[derive(Debug)]
+pub struct PooledMat {
+    mat: FpMat,
+    pool: Option<Weak<BufferPool>>,
+}
+
+impl PooledMat {
+    /// Wrap a matrix that does not belong to any pool.
+    pub fn detached(mat: FpMat) -> PooledMat {
+        PooledMat { mat, pool: None }
+    }
+}
+
+impl Deref for PooledMat {
+    type Target = FpMat;
+
+    fn deref(&self) -> &FpMat {
+        &self.mat
+    }
+}
+
+impl DerefMut for PooledMat {
+    fn deref_mut(&mut self) -> &mut FpMat {
+        &mut self.mat
+    }
+}
+
+impl Drop for PooledMat {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take().and_then(|w| w.upgrade()) {
+            // `FpMat::zeros(0, 0)` holds an empty Vec — no allocation.
+            pool.give_back(std::mem::replace(&mut self.mat, FpMat::zeros(0, 0)));
+        }
+    }
+}
+
+/// Loan/return pool of payload buffers shared by every node of a fabric.
+///
+/// `loan` pops a free buffer (or creates one on a cold pool) and reshapes it
+/// to the requested size; dropping the returned [`PooledMat`] gives the
+/// buffer back. After one warmup job at the largest shape in flight, loans
+/// and returns perform zero heap allocations.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Mutex<Vec<FpMat>>,
+}
+
+impl BufferPool {
+    pub fn new() -> Arc<BufferPool> {
+        Arc::new(BufferPool::default())
+    }
+
+    /// Borrow a `rows × cols` buffer from `pool`. Contents are unspecified
+    /// (callers fully overwrite before sending). Associated function
+    /// because the loan must capture a `Weak` back-reference for the
+    /// return-on-drop.
+    pub fn loan(pool: &Arc<BufferPool>, rows: usize, cols: usize) -> PooledMat {
+        let mut mat = pool
+            .free
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| FpMat::zeros(0, 0));
+        mat.reshape(rows, cols);
+        PooledMat {
+            mat,
+            pool: Some(Arc::downgrade(pool)),
+        }
+    }
+
+    fn give_back(&self, mat: FpMat) {
+        self.free.lock().unwrap().push(mat);
+    }
+
+    /// Buffers currently sitting in the free list (tests assert recycling).
+    pub fn free_buffers(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+/// Runtime control-plane messages (unmetered; exempt from data topology).
+#[derive(Debug)]
+pub enum ControlMsg {
+    /// Start serving a job: the worker derives its per-job secret stream
+    /// from `seed` (+ its own id) and reports overheads into `counters`.
+    JobStart {
+        seed: u64,
+        counters: Arc<WorkerCounters>,
+    },
+    /// A worker finished every Phase-2/3 obligation of the job.
+    JobDone,
+    /// A worker had to abandon the job (backend failure, dead peer, …).
+    JobError(String),
+    /// The job's driver gave up (worker failure or receive timeout):
+    /// workers drop any state for the job and tombstone it, so one failed
+    /// job cannot leave stuck `JobState`s leaking on its surviving peers.
+    JobAbort,
+    /// Terminate the worker's serve loop (runtime teardown).
+    Shutdown,
+}
+
 /// A protocol message payload.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub enum Payload {
     /// Phase 1: a worker's evaluations of the two share polynomials.
-    Shares { fa: FpMat, fb: FpMat },
+    Shares { fa: PooledMat, fb: PooledMat },
     /// Phase 2: `G_{from}(α_to)`.
-    GShare(FpMat),
+    GShare(PooledMat),
     /// Phase 3: `I(α_from)`.
-    IShare(FpMat),
+    IShare(PooledMat),
+    /// Runtime control plane (job lifecycle, shutdown).
+    Control(ControlMsg),
 }
 
 impl Payload {
@@ -43,23 +175,30 @@ impl Payload {
         match self {
             Payload::Shares { fa, fb } => (fa.len() + fb.len()) as u64,
             Payload::GShare(m) | Payload::IShare(m) => m.len() as u64,
+            Payload::Control(_) => 0,
         }
     }
 }
 
-/// A routed message.
+/// A routed message, tagged with the job it belongs to.
 #[derive(Debug)]
 pub struct Envelope {
+    pub job: JobId,
     pub from: NodeId,
     pub payload: Payload,
 }
 
-/// Central switch: owns one sender per node plus the traffic meters.
+/// Central switch: owns one sender per node plus the traffic meters
+/// (global and per registered job).
 pub struct Fabric {
     txs: Vec<Sender<Envelope>>,
     traffic: Arc<TrafficCounters>,
+    /// Live per-job meters, registered by `begin_job` / drained by `end_job`.
+    /// RwLock so the n(n−1) concurrent data sends of a job share the read
+    /// path; only job registration takes the write lock.
+    job_traffic: RwLock<HashMap<JobId, Arc<TrafficCounters>>>,
     n_workers: usize,
-    /// Optional per-hop latency injected on every send.
+    /// Optional per-hop latency injected on every data send.
     link_delay: Option<Duration>,
 }
 
@@ -84,6 +223,7 @@ impl Fabric {
         let fabric = Arc::new(Fabric {
             txs,
             traffic: TrafficCounters::shared(),
+            job_traffic: RwLock::new(HashMap::new()),
             n_workers,
             link_delay,
         });
@@ -118,49 +258,222 @@ impl Fabric {
         }
     }
 
-    /// Send `payload` from `from` to `to`, metering by edge class.
-    ///
-    /// Returns an error when the destination endpoint has been dropped
-    /// (e.g. a straggler master that already finished Phase 3 — senders may
-    /// legitimately race with teardown, so callers usually ignore it).
-    pub fn send(&self, from: NodeId, to: NodeId, payload: Payload) -> Result<(), ()> {
-        use std::sync::atomic::Ordering::Relaxed;
-        if let Some(d) = self.link_delay {
-            std::thread::sleep(d);
-        }
-        let scalars = payload.scalars();
-        match (self.role(from), self.role(to)) {
-            (Role::SourceA | Role::SourceB, Role::Worker(_)) => {
-                self.traffic.source_to_worker.fetch_add(scalars, Relaxed);
-            }
-            (Role::Worker(_), Role::Worker(_)) => {
-                self.traffic.worker_to_worker.fetch_add(scalars, Relaxed);
-            }
-            (Role::Worker(_), Role::Master) => {
-                self.traffic.worker_to_master.fetch_add(scalars, Relaxed);
-            }
-            (f, t) => panic!("illegal link {f:?} -> {t:?} in CMPC topology"),
-        }
-        self.traffic.messages.fetch_add(1, Relaxed);
-        self.txs[to].send(Envelope { from, payload }).map_err(|_| ())
+    /// Register per-job traffic meters for `job` (runtime job intake).
+    pub fn begin_job(&self, job: JobId) {
+        self.job_traffic
+            .write()
+            .unwrap()
+            .insert(job, TrafficCounters::shared());
     }
 
-    /// Traffic snapshot (scalars per edge class).
-    pub fn traffic(&self) -> crate::metrics::TrafficReport {
+    /// Drain and return the meters of a finished job. Returns an empty
+    /// report when the job was never registered.
+    pub fn end_job(&self, job: JobId) -> TrafficReport {
+        self.job_traffic
+            .write()
+            .unwrap()
+            .remove(&job)
+            .map(|c| c.snapshot())
+            .unwrap_or_default()
+    }
+
+    /// Send `payload` from `from` to `to` on behalf of `job`, metering data
+    /// payloads by edge class (globally and on the job's meters).
+    ///
+    /// Errors are typed [`CmpcError::Fabric`]: a link outside the CMPC data
+    /// topology, or a destination endpoint that has been dropped (a dead
+    /// node thread). Control payloads skip metering, injected link latency,
+    /// and the topology check — they model the runtime, not the network.
+    pub fn send(&self, job: JobId, from: NodeId, to: NodeId, payload: Payload) -> Result<()> {
+        use std::sync::atomic::Ordering::Relaxed;
+        if to >= self.txs.len() {
+            return Err(CmpcError::Fabric(format!(
+                "send to nonexistent node {to} (fabric has {} nodes)",
+                self.txs.len()
+            )));
+        }
+        if !matches!(payload, Payload::Control(_)) {
+            if let Some(d) = self.link_delay {
+                std::thread::sleep(d);
+            }
+            let scalars = payload.scalars();
+            let job_counters = self.job_traffic.read().unwrap().get(&job).cloned();
+            let meters: [Option<&TrafficCounters>; 2] =
+                [Some(self.traffic.as_ref()), job_counters.as_deref()];
+            match (self.role(from), self.role(to)) {
+                (Role::SourceA | Role::SourceB, Role::Worker(_)) => {
+                    for m in meters.into_iter().flatten() {
+                        m.source_to_worker.fetch_add(scalars, Relaxed);
+                        m.messages.fetch_add(1, Relaxed);
+                    }
+                }
+                (Role::Worker(_), Role::Worker(_)) => {
+                    for m in meters.into_iter().flatten() {
+                        m.worker_to_worker.fetch_add(scalars, Relaxed);
+                        m.messages.fetch_add(1, Relaxed);
+                    }
+                }
+                (Role::Worker(_), Role::Master) => {
+                    for m in meters.into_iter().flatten() {
+                        m.worker_to_master.fetch_add(scalars, Relaxed);
+                        m.messages.fetch_add(1, Relaxed);
+                    }
+                }
+                (f, t) => {
+                    return Err(CmpcError::Fabric(format!(
+                        "illegal link {f:?} -> {t:?} in CMPC topology"
+                    )));
+                }
+            }
+        }
+        self.txs[to]
+            .send(Envelope { job, from, payload })
+            .map_err(|_| {
+                CmpcError::Fabric(format!("node {to} endpoint dropped (dead node thread?)"))
+            })
+    }
+
+    /// Cumulative traffic snapshot across all jobs (scalars per edge class).
+    pub fn traffic(&self) -> TrafficReport {
         self.traffic.snapshot()
     }
 }
 
 impl Endpoint {
-    /// Block for the next message.
-    pub fn recv(&self) -> Result<Envelope, ()> {
-        self.rx.recv().map_err(|_| ())
+    /// Block for the next message. Errors ([`CmpcError::Fabric`]) only when
+    /// every sender — i.e. the fabric itself — is gone.
+    pub fn recv(&self) -> Result<Envelope> {
+        self.rx
+            .recv()
+            .map_err(|_| CmpcError::Fabric(format!("node {}: fabric closed", self.id)))
+    }
+
+    /// Block for the next message, at most `timeout`. A timeout surfaces as
+    /// a typed [`CmpcError::Fabric`] instead of deadlocking the caller when
+    /// a peer thread died mid-job.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Envelope> {
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => CmpcError::Fabric(format!(
+                "node {}: no message within {timeout:?} (peer thread dead or stalled?)",
+                self.id
+            )),
+            RecvTimeoutError::Disconnected => {
+                CmpcError::Fabric(format!("node {}: fabric closed", self.id))
+            }
+        })
+    }
+
+    /// `recv_timeout` that preserves the timeout/disconnect distinction
+    /// (the worker serve loop reacts differently to the two).
+    pub(crate) fn recv_timeout_raw(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<Envelope, RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
+    }
+}
+
+/// Demultiplexes one [`Endpoint`] across concurrent jobs.
+///
+/// The master endpoint is shared by every in-flight job of a deployment;
+/// each job's driving thread calls [`JobRouter::recv_for`] to receive *its*
+/// envelopes. Whichever thread currently holds the receiver routes foreign
+/// envelopes into per-job queues and wakes the waiters; envelopes for jobs
+/// that are not open (already finished or failed) are dropped, returning
+/// their payload buffers to the pool.
+pub struct JobRouter {
+    inner: Mutex<RouterInner>,
+    cv: Condvar,
+}
+
+struct RouterInner {
+    /// Present while no thread is actively receiving.
+    rx: Option<Endpoint>,
+    /// Buffered envelopes per open job.
+    queues: HashMap<JobId, VecDeque<Envelope>>,
+}
+
+impl JobRouter {
+    pub fn new(endpoint: Endpoint) -> JobRouter {
+        JobRouter {
+            inner: Mutex::new(RouterInner {
+                rx: Some(endpoint),
+                queues: HashMap::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Register `job` so its envelopes are buffered while other jobs hold
+    /// the receiver. Must precede any traffic for the job.
+    pub fn open(&self, job: JobId) {
+        self.inner
+            .lock()
+            .unwrap()
+            .queues
+            .insert(job, VecDeque::new());
+    }
+
+    /// Unregister `job`, dropping anything still buffered for it. Late
+    /// arrivals for a closed job are dropped on receipt.
+    pub fn close(&self, job: JobId) {
+        self.inner.lock().unwrap().queues.remove(&job);
+    }
+
+    /// Receive the next envelope tagged `job`, waiting at most `timeout`.
+    ///
+    /// Envelopes for other open jobs are routed to their queues as a side
+    /// effect; a timeout surfaces as [`CmpcError::Fabric`] (the deadlock fix
+    /// for a worker thread dying mid-job).
+    pub fn recv_for(&self, job: JobId, timeout: Duration) -> Result<Envelope> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(env) = inner.queues.get_mut(&job).and_then(|q| q.pop_front()) {
+                return Ok(env);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(CmpcError::Fabric(format!(
+                    "job {job}: no message within {timeout:?} (worker thread dead or stalled?)"
+                )));
+            }
+            let remaining = deadline - now;
+            if let Some(rx) = inner.rx.take() {
+                drop(inner);
+                let got = rx.recv_timeout_raw(remaining);
+                inner = self.inner.lock().unwrap();
+                inner.rx = Some(rx);
+                self.cv.notify_all();
+                match got {
+                    Ok(env) if env.job == job => return Ok(env),
+                    Ok(env) => {
+                        // Buffer for an open sibling job; drop otherwise
+                        // (the PooledMat payload returns to its pool).
+                        if let Some(q) = inner.queues.get_mut(&env.job) {
+                            q.push_back(env);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {} // deadline re-checked above
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(CmpcError::Fabric("fabric closed".to_string()));
+                    }
+                }
+            } else {
+                let (guard, _) = self.cv.wait_timeout(inner, remaining).unwrap();
+                inner = guard;
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn pooled(m: &FpMat) -> PooledMat {
+        PooledMat::detached(m.clone())
+    }
 
     #[test]
     fn node_id_layout() {
@@ -174,39 +487,69 @@ mod tests {
     }
 
     #[test]
-    fn traffic_metered_by_class() {
+    fn traffic_metered_by_class_and_job() {
         let (fabric, endpoints) = Fabric::new(2, None);
+        fabric.begin_job(7);
         let m = FpMat::zeros(2, 3); // 6 scalars
         fabric
             .send(
+                7,
                 fabric.source_a_id(),
                 0,
                 Payload::Shares {
-                    fa: m.clone(),
-                    fb: m.clone(),
+                    fa: pooled(&m),
+                    fb: pooled(&m),
                 },
             )
             .unwrap();
-        fabric.send(0, 1, Payload::GShare(m.clone())).unwrap();
+        fabric.send(7, 0, 1, Payload::GShare(pooled(&m))).unwrap();
         fabric
-            .send(1, fabric.master_id(), Payload::IShare(m.clone()))
+            .send(7, 1, fabric.master_id(), Payload::IShare(pooled(&m)))
             .unwrap();
-        let t = fabric.traffic();
-        assert_eq!(t.source_to_worker, 12);
-        assert_eq!(t.worker_to_worker, 6);
-        assert_eq!(t.worker_to_master, 6);
-        assert_eq!(t.messages, 3);
+        // traffic on a different (unregistered) job meters globally only
+        fabric.send(8, 0, 1, Payload::GShare(pooled(&m))).unwrap();
+        let global = fabric.traffic();
+        assert_eq!(global.source_to_worker, 12);
+        assert_eq!(global.worker_to_worker, 12);
+        assert_eq!(global.worker_to_master, 6);
+        assert_eq!(global.messages, 4);
+        let job = fabric.end_job(7);
+        assert_eq!(job.source_to_worker, 12);
+        assert_eq!(job.worker_to_worker, 6);
+        assert_eq!(job.worker_to_master, 6);
+        assert_eq!(job.messages, 3);
+        // an ended job leaves an empty report behind
+        assert_eq!(fabric.end_job(7), TrafficReport::default());
         // endpoints received
         assert!(endpoints[0].recv().is_ok());
+        assert!(endpoints[1].recv().is_ok());
         assert!(endpoints[1].recv().is_ok());
         assert!(endpoints[2].recv().is_ok());
     }
 
     #[test]
-    #[should_panic(expected = "illegal link")]
-    fn master_cannot_message_workers() {
+    fn illegal_link_is_a_typed_error() {
+        // One misrouted data message must not take down a serving process.
         let (fabric, _eps) = Fabric::new(2, None);
-        let _ = fabric.send(fabric.master_id(), 0, Payload::GShare(FpMat::zeros(1, 1)));
+        let err = fabric
+            .send(
+                0,
+                fabric.master_id(),
+                0,
+                Payload::GShare(PooledMat::detached(FpMat::zeros(1, 1))),
+            )
+            .unwrap_err();
+        assert!(matches!(err, CmpcError::Fabric(_)), "{err}");
+        assert!(err.to_string().contains("illegal link"), "{err}");
+        // control messages are exempt (the runtime starts jobs this way)
+        fabric
+            .send(
+                0,
+                fabric.master_id(),
+                0,
+                Payload::Control(ControlMsg::Shutdown),
+            )
+            .unwrap();
     }
 
     #[test]
@@ -214,13 +557,71 @@ mod tests {
         let (fabric, mut endpoints) = Fabric::new(1, None);
         endpoints.remove(0); // drop worker 0's receiver
         let r = fabric.send(
+            0,
             fabric.source_a_id(),
             0,
             Payload::Shares {
-                fa: FpMat::zeros(1, 1),
-                fb: FpMat::zeros(1, 1),
+                fa: PooledMat::detached(FpMat::zeros(1, 1)),
+                fb: PooledMat::detached(FpMat::zeros(1, 1)),
             },
         );
-        assert!(r.is_err());
+        assert!(matches!(r, Err(CmpcError::Fabric(_))));
+    }
+
+    #[test]
+    fn recv_timeout_surfaces_typed_error() {
+        let (_fabric, endpoints) = Fabric::new(1, None);
+        let err = endpoints[0]
+            .recv_timeout(Duration::from_millis(5))
+            .unwrap_err();
+        assert!(matches!(err, CmpcError::Fabric(_)), "{err}");
+    }
+
+    #[test]
+    fn buffer_pool_recycles() {
+        let pool = BufferPool::new();
+        {
+            let mut a = BufferPool::loan(&pool, 4, 4);
+            a.set(0, 0, 9);
+            assert_eq!((a.rows, a.cols), (4, 4));
+        }
+        assert_eq!(pool.free_buffers(), 1);
+        // the recycled buffer is reshaped for the next loan
+        let b = BufferPool::loan(&pool, 2, 8);
+        assert_eq!((b.rows, b.cols, b.len()), (2, 8, 16));
+        assert_eq!(pool.free_buffers(), 0);
+        drop(b);
+        assert_eq!(pool.free_buffers(), 1);
+        // detached mats never enter the pool
+        drop(PooledMat::detached(FpMat::zeros(3, 3)));
+        assert_eq!(pool.free_buffers(), 1);
+    }
+
+    #[test]
+    fn router_filters_by_job() {
+        let (fabric, mut endpoints) = Fabric::new(1, None);
+        let master = endpoints.remove(1);
+        let router = JobRouter::new(master);
+        router.open(1);
+        router.open(2);
+        let m = FpMat::zeros(1, 2);
+        fabric
+            .send(2, 0, fabric.master_id(), Payload::IShare(pooled(&m)))
+            .unwrap();
+        fabric
+            .send(1, 0, fabric.master_id(), Payload::IShare(pooled(&m)))
+            .unwrap();
+        // job 1's receive skips past job 2's envelope, which stays queued
+        let e1 = router.recv_for(1, Duration::from_secs(1)).unwrap();
+        assert_eq!(e1.job, 1);
+        let e2 = router.recv_for(2, Duration::from_secs(1)).unwrap();
+        assert_eq!(e2.job, 2);
+        // closed jobs drop late arrivals; an open one still times out typed
+        router.close(2);
+        fabric
+            .send(2, 0, fabric.master_id(), Payload::IShare(pooled(&m)))
+            .unwrap();
+        let err = router.recv_for(1, Duration::from_millis(10)).unwrap_err();
+        assert!(matches!(err, CmpcError::Fabric(_)), "{err}");
     }
 }

@@ -1,15 +1,25 @@
 //! End-to-end orchestration of one CMPC job (Algorithm 3).
 //!
 //! The serving-facing surface is [`crate::mpc::deployment::Deployment`]
-//! (provision once, execute many jobs); this module holds the underlying
+//! (provision once, stream many jobs); this module holds the underlying
 //! machinery it drives: setup (α assignment and the generalized-Vandermonde
-//! solve for the `rₙ^{(i,l)}` coefficients), Phase 1 source sharing, `N`
-//! Phase-2 worker threads over the network fabric, and Phase-3 master
-//! reconstruction — then native verification of `Y = AᵀB` when asked.
+//! solve for the `rₙ^{(i,l)}` coefficients), and per-job driving of the
+//! **persistent** worker runtime — Phase-1 source sharing into pooled
+//! payload buffers, a [`ControlMsg::JobStart`] hand-off to the long-lived
+//! Phase-2 workers, and Phase-3 master reconstruction filtered by
+//! [`JobId`] — then native verification of `Y = AᵀB` when asked.
+//!
+//! [`run_job`] submits one job against a live [`WorkerRuntime`]: it spawns
+//! **zero threads** and performs zero fabric-payload allocations on a warm
+//! runtime. [`run_protocol_with_env`] keeps the one-shot compatibility
+//! shape by provisioning a throwaway runtime around a single job.
 //!
 //! Every entry point returns [`crate::error::Result`]; malformed inputs
 //! surface as typed [`CmpcError`]s instead of panics, so one bad job cannot
 //! take down a serving process.
+//!
+//! [`ControlMsg::JobStart`]: crate::mpc::network::ControlMsg::JobStart
+//! [`JobId`]: crate::mpc::network::JobId
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -18,8 +28,10 @@ use crate::codes::{CmpcScheme, SchemeParams};
 use crate::error::{CmpcError, Result};
 use crate::matrix::FpMat;
 use crate::metrics::{PhaseTimings, TrafficReport, WorkerCounters};
-use crate::mpc::network::{Fabric, Payload};
-use crate::mpc::{master, source, worker};
+use crate::mpc::master::{MasterOutput, MasterTimings};
+use crate::mpc::network::{ControlMsg, Payload};
+use crate::mpc::runtime::WorkerRuntime;
+use crate::mpc::{master, source};
 use crate::poly::interp::choose_alphas;
 use crate::runtime::pool::{ScratchPool, WorkerPool};
 use crate::runtime::{BackendChoice, BackendFactory};
@@ -45,6 +57,11 @@ pub struct ProtocolConfig {
     /// `1` makes every parallel section literally sequential — the
     /// determinism tests compare `1` vs `N` byte-for-byte.
     pub threads: usize,
+    /// Upper bound on any single fabric receive while a job is in flight.
+    /// A dead worker thread surfaces as a typed [`CmpcError::Fabric`]
+    /// within this window instead of deadlocking the job; it must
+    /// comfortably exceed the longest legitimate compute + injected delay.
+    pub recv_timeout: Duration,
 }
 
 impl Default for ProtocolConfig {
@@ -56,6 +73,7 @@ impl Default for ProtocolConfig {
             worker_delays: Vec::new(),
             link_delay: None,
             threads: 0,
+            recv_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -107,6 +125,12 @@ impl ProtocolConfigBuilder {
         self
     }
 
+    /// Per-receive deadline for in-flight jobs (dead-worker detection).
+    pub fn recv_timeout(mut self, timeout: Duration) -> Self {
+        self.config.recv_timeout = timeout;
+        self
+    }
+
     pub fn build(self) -> ProtocolConfig {
         self.config
     }
@@ -119,8 +143,10 @@ pub struct ProtocolOutput {
     pub n_workers: usize,
     pub stragglers_tolerated: usize,
     pub timings: PhaseTimings,
+    /// This job's traffic only (concurrent jobs on a shared runtime meter
+    /// independently; the fabric also keeps cumulative totals).
     pub traffic: TrafficReport,
-    /// Per-worker overhead counters (index = worker id).
+    /// Per-worker overhead counters (index = worker id), final at return.
     pub worker_counters: Vec<Arc<WorkerCounters>>,
     pub verified: bool,
 }
@@ -215,8 +241,8 @@ pub struct ExecEnv<'a> {
 
 /// Run one job against a prepared (possibly cached) [`Setup`], constructing
 /// a fresh backend factory, pool, and scratch set from the config. Callers
-/// issuing many jobs should build those once and use
-/// [`run_protocol_with_env`] — or, at a higher level, a
+/// issuing many jobs should build those once and use [`run_job`] against a
+/// live runtime — or, at a higher level, a
 /// [`crate::mpc::deployment::Deployment`].
 pub fn run_protocol_with_setup(
     scheme: &dyn CmpcScheme,
@@ -242,9 +268,10 @@ pub fn run_protocol_with_setup(
     )
 }
 
-/// Run one job with an existing execution environment (shared executor
-/// service, worker pool, and scratch buffers across jobs — the steady-state
-/// serving path).
+/// One-shot compatibility path: provision a throwaway [`WorkerRuntime`]
+/// around a single job. Steady-state serving goes through a
+/// [`crate::mpc::deployment::Deployment`], whose runtime (worker threads,
+/// fabric, buffer pool) persists across jobs.
 pub fn run_protocol_with_env(
     scheme: &dyn CmpcScheme,
     setup: &Setup,
@@ -253,9 +280,33 @@ pub fn run_protocol_with_env(
     config: &ProtocolConfig,
     env: &ExecEnv<'_>,
 ) -> Result<ProtocolOutput> {
+    let runtime = WorkerRuntime::provision(setup, scheme.params(), config, env.factory)?;
+    run_job(scheme, setup, a, b, config, env, &runtime)
+    // runtime drops here: clean worker shutdown, panics propagated
+}
+
+/// Submit one job to a **live** worker runtime — the steady-state serving
+/// path. The caller's thread plays the source and master roles; the
+/// persistent worker threads run Phase 2. No threads are spawned, and all
+/// fabric payloads ride pooled buffers.
+pub fn run_job(
+    scheme: &dyn CmpcScheme,
+    setup: &Setup,
+    a: &FpMat,
+    b: &FpMat,
+    config: &ProtocolConfig,
+    env: &ExecEnv<'_>,
+    runtime: &WorkerRuntime,
+) -> Result<ProtocolOutput> {
     let p = scheme.params();
     validate_job_shapes(a, b, p)?;
     let n = setup.n_workers;
+    if runtime.n_workers() != n {
+        return Err(CmpcError::InvalidParams(format!(
+            "runtime provisions {} workers but the setup expects {n}",
+            runtime.n_workers()
+        )));
+    }
     if !config.worker_delays.is_empty() && config.worker_delays.len() != n {
         return Err(CmpcError::InvalidParams(format!(
             "worker_delays has {} entries but the deployment provisions {n} \
@@ -263,84 +314,28 @@ pub fn run_protocol_with_env(
             config.worker_delays.len()
         )));
     }
-    let t_setup = Instant::now();
-    let mut job_rng = ChaChaRng::seed_from_u64(config.seed);
-    let mut rng_src_a = job_rng.fork();
-    let mut rng_src_b = job_rng.fork();
-    let worker_rngs: Vec<ChaChaRng> = (0..n).map(|_| job_rng.fork()).collect();
-
-    let (fabric, mut endpoints) = Fabric::new(n, config.link_delay);
-    let counters: Vec<Arc<WorkerCounters>> =
-        (0..n).map(|_| Arc::new(WorkerCounters::default())).collect();
-    let setup_time = t_setup.elapsed();
-
-    // --- spawn workers ---
-    let mut worker_endpoints: Vec<_> = endpoints.drain(0..n).collect();
-    let master_endpoint = endpoints.remove(0);
-    let mut handles = Vec::with_capacity(n);
-    for (wid, rng) in worker_rngs.into_iter().enumerate() {
-        let ctx = worker::WorkerCtx {
-            id: wid,
-            n_workers: n,
-            t: p.t,
-            z: p.z,
-            alphas: setup.alphas.clone(),
-            r_coeffs: setup.r_coeffs.clone(),
-            rng,
-            counters: counters[wid].clone(),
-            delay: config
-                .worker_delays
-                .get(wid)
-                .copied()
-                .unwrap_or(Duration::ZERO),
-        };
-        let endpoint = worker_endpoints.remove(0);
-        let fabric = fabric.clone();
-        let backend = env.factory.make();
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("cmpc-worker-{wid}"))
-                .spawn(move || worker::run_worker(ctx, endpoint, fabric, backend))
-                .expect("spawn worker thread"),
-        );
+    let job = runtime.begin_job();
+    let result = drive_job(scheme, setup, a, b, config, env, runtime, job);
+    if result.is_err() {
+        // Tell every worker to drop the job: peers of a failed worker
+        // would otherwise hold its JobState (waiting for a G-share that
+        // never comes) until an idle-window timeout that may never fire
+        // under sustained traffic.
+        let fabric = runtime.fabric();
+        for wid in 0..n {
+            let _ = fabric.send(
+                job,
+                fabric.master_id(),
+                wid,
+                Payload::Control(ControlMsg::JobAbort),
+            );
+        }
     }
-
-    // --- Phase 1: sources share ---
-    let t1 = Instant::now();
-    let fa_poly = source::build_f_a(scheme, a, &mut rng_src_a);
-    let fb_poly = source::build_f_b(scheme, b, &mut rng_src_b);
-    // Horner/power-table evaluation of both polynomials at every αₙ, fanned
-    // out across the pool (§Perf P5).
-    let shares = source::encode_shares(&fa_poly, &fb_poly, &setup.alphas, env.pool, env.scratch);
-    for (wid, (fa_n, fb_n)) in shares.into_iter().enumerate() {
-        // Source A evaluates F_A, source B evaluates F_B; one combined
-        // envelope per worker keeps the fabric simple — traffic is metered
-        // identically (both legs are source→worker).
-        fabric
-            .send(fabric.source_a_id(), wid, Payload::Shares { fa: fa_n, fb: fb_n })
-            .map_err(|_| CmpcError::Fabric(format!("worker {wid} unreachable in phase 1")))?;
-    }
-    let phase1 = t1.elapsed();
-
-    // --- Phase 2/3 run concurrently; wait for the master ---
-    let t2 = Instant::now();
-    let m_out = master::run_master(
-        &master_endpoint,
-        &setup.alphas,
-        n,
-        p.t,
-        p.z,
-        env.pool,
-        env.scratch,
-    )?;
-    let reconstruct_done = t2.elapsed();
-    // Workers finish their sends after reconstruction; join them for clean
-    // counter totals. Their tail time counts toward phase 2.
-    for h in handles {
-        h.join()
-            .map_err(|_| CmpcError::Fabric("worker thread panicked".to_string()))??;
-    }
-    let all_done = t2.elapsed();
+    // Unregister whatever happened: late envelopes for the job are dropped
+    // by the router (payload buffers return to the pool) and the per-job
+    // traffic meters are drained.
+    let traffic = runtime.finish_job(job);
+    let (m_out, mt, counters, setup_time, phase1) = result?;
 
     let verified = if config.verify {
         // The reference product is the largest single matmul of the run
@@ -368,13 +363,103 @@ pub fn run_protocol_with_env(
         timings: PhaseTimings {
             setup: setup_time,
             phase1_share: phase1,
-            phase2_compute: all_done,
-            phase3_reconstruct: all_done.saturating_sub(reconstruct_done),
+            phase2_compute: mt.quota_wait + mt.tail_wait,
+            phase3_reconstruct: mt.reconstruct,
         },
-        traffic: fabric.traffic(),
+        traffic,
         worker_counters: counters,
         verified,
     })
+}
+
+type DrivenJob = (
+    MasterOutput,
+    MasterTimings,
+    Vec<Arc<WorkerCounters>>,
+    Duration,
+    Duration,
+);
+
+/// The fallible middle of [`run_job`]: announce the job, share, reconstruct.
+/// Split out so `run_job` can unregister the job on every exit path.
+#[allow(clippy::too_many_arguments)]
+fn drive_job(
+    scheme: &dyn CmpcScheme,
+    setup: &Setup,
+    a: &FpMat,
+    b: &FpMat,
+    config: &ProtocolConfig,
+    env: &ExecEnv<'_>,
+    runtime: &WorkerRuntime,
+    job: crate::mpc::network::JobId,
+) -> Result<DrivenJob> {
+    let p = scheme.params();
+    let n = setup.n_workers;
+    let fabric = runtime.fabric();
+
+    // --- per-job secret streams (legacy fork order: source A, source B,
+    // then workers 0..N — the persistent workers re-derive their own forks
+    // from the same seed, so outputs stay byte-identical to the
+    // spawn-per-job path) ---
+    let t_setup = Instant::now();
+    let mut job_rng = ChaChaRng::seed_from_u64(config.seed);
+    let mut rng_src_a = job_rng.fork();
+    let mut rng_src_b = job_rng.fork();
+    let counters: Vec<Arc<WorkerCounters>> =
+        (0..n).map(|_| Arc::new(WorkerCounters::default())).collect();
+    for (wid, c) in counters.iter().enumerate() {
+        fabric.send(
+            job,
+            fabric.master_id(),
+            wid,
+            Payload::Control(ControlMsg::JobStart {
+                seed: config.seed,
+                counters: c.clone(),
+            }),
+        )?;
+    }
+    let setup_time = t_setup.elapsed();
+
+    // --- Phase 1: sources share (pooled payload buffers) ---
+    let t1 = Instant::now();
+    let fa_poly = source::build_f_a(scheme, a, &mut rng_src_a);
+    let fb_poly = source::build_f_b(scheme, b, &mut rng_src_b);
+    // Horner/power-table evaluation of both polynomials at every αₙ, fanned
+    // out across the pool (§Perf P5).
+    let shares = source::encode_shares_pooled(
+        &fa_poly,
+        &fb_poly,
+        &setup.alphas,
+        env.pool,
+        env.scratch,
+        runtime.buffers(),
+    );
+    for (wid, (fa_n, fb_n)) in shares.into_iter().enumerate() {
+        // Source A evaluates F_A, source B evaluates F_B; one combined
+        // envelope per worker keeps the fabric simple — traffic is metered
+        // identically (both legs are source→worker).
+        fabric.send(
+            job,
+            fabric.source_a_id(),
+            wid,
+            Payload::Shares { fa: fa_n, fb: fb_n },
+        )?;
+    }
+    let phase1 = t1.elapsed();
+
+    // --- Phase 2 runs on the persistent workers; Phase 3 here ---
+    let (m_out, mt) = master::run_master(
+        runtime.router(),
+        job,
+        &setup.alphas,
+        n,
+        p.t,
+        p.z,
+        config.recv_timeout,
+        env.pool,
+        env.scratch,
+    )?;
+    Ok((m_out, mt, counters, setup_time, phase1))
 }
 
 #[cfg(test)]
@@ -524,11 +609,13 @@ mod tests {
             .worker_delays(vec![Duration::from_millis(1); 2])
             .link_delay(Some(Duration::from_micros(5)))
             .threads(3)
+            .recv_timeout(Duration::from_secs(2))
             .build();
         assert_eq!(cfg.seed, 99);
         assert!(!cfg.verify);
         assert_eq!(cfg.worker_delays.len(), 2);
         assert_eq!(cfg.link_delay, Some(Duration::from_micros(5)));
         assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.recv_timeout, Duration::from_secs(2));
     }
 }

@@ -1,0 +1,226 @@
+//! The persistent worker runtime: long-lived Phase-2 workers over a
+//! job-multiplexed, buffer-pooled fabric.
+//!
+//! The paper's cost model (eqs. 32–34) assumes edge workers that hold their
+//! shares and serve computation continuously; [`WorkerRuntime`] realizes
+//! that. At provisioning it spawns `N` persistent worker threads and one
+//! long-lived [`Fabric`], then any number of jobs are *streamed* to them:
+//! [`WorkerRuntime::begin_job`] claims a [`JobId`] (registering per-job
+//! traffic meters and a receive queue on the master's [`JobRouter`]), the
+//! driving thread plays the source and master roles for that job, and
+//! [`WorkerRuntime::finish_job`] returns the job's traffic snapshot and
+//! unregisters it. Concurrent jobs interleave safely on the shared links —
+//! every envelope is job-tagged — and payload buffers cycle through the
+//! shared [`BufferPool`], so a warm runtime executes jobs with **zero
+//! thread spawns and zero fabric-payload allocations**.
+//!
+//! Dropping the runtime shuts it down cleanly: a [`ControlMsg::Shutdown`]
+//! to every worker, then joins. A worker that *panicked* (as opposed to
+//! reporting job-level errors, which never kill the thread) has its panic
+//! propagated to the dropping thread, so failures cannot vanish silently.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::codes::SchemeParams;
+use crate::error::Result;
+use crate::metrics::TrafficReport;
+use crate::mpc::network::{BufferPool, ControlMsg, Fabric, JobId, JobRouter, Payload, CONTROL_JOB};
+use crate::mpc::protocol::{ProtocolConfig, Setup};
+use crate::mpc::worker::{self, WorkerCtx};
+use crate::runtime::BackendFactory;
+
+/// A provisioned set of persistent worker threads plus the multiplexed
+/// fabric they serve on. Owned by a [`Deployment`] (one runtime per
+/// session); `run_protocol_with_env` provisions a throwaway one for
+/// one-shot compatibility callers.
+///
+/// [`Deployment`]: crate::mpc::deployment::Deployment
+pub struct WorkerRuntime {
+    fabric: Arc<Fabric>,
+    router: JobRouter,
+    bufs: Arc<BufferPool>,
+    handles: Vec<JoinHandle<Result<()>>>,
+    next_job: AtomicU64,
+    n_workers: usize,
+    recv_timeout: Duration,
+}
+
+impl WorkerRuntime {
+    /// Spawn the `N` persistent worker threads and the shared fabric.
+    ///
+    /// `config.worker_delays` is applied per worker when its length matches
+    /// `N` (the per-job validation in the protocol layer rejects jobs
+    /// otherwise, so a mismatched vector never silently half-applies).
+    pub fn provision(
+        setup: &Setup,
+        params: SchemeParams,
+        config: &ProtocolConfig,
+        factory: &BackendFactory,
+    ) -> Result<WorkerRuntime> {
+        let n = setup.n_workers;
+        let (fabric, mut endpoints) = Fabric::new(n, config.link_delay);
+        let bufs = BufferPool::new();
+        let worker_endpoints: Vec<_> = endpoints.drain(0..n).collect();
+        let master_endpoint = endpoints.remove(0);
+        // Sources only ever send; their endpoints are dropped.
+        let delays_apply = config.worker_delays.len() == n;
+        let mut handles: Vec<JoinHandle<Result<()>>> = Vec::with_capacity(n);
+        for (wid, endpoint) in worker_endpoints.into_iter().enumerate() {
+            let ctx = WorkerCtx {
+                id: wid,
+                n_workers: n,
+                t: params.t,
+                z: params.z,
+                alphas: setup.alphas.clone(),
+                r_coeffs: setup.r_coeffs.clone(),
+                delay: if delays_apply {
+                    config.worker_delays[wid]
+                } else {
+                    Duration::ZERO
+                },
+                recv_timeout: config.recv_timeout,
+            };
+            let fabric = fabric.clone();
+            let backend = factory.make();
+            let bufs = bufs.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("cmpc-worker-{wid}"))
+                .spawn(move || worker::serve_worker(ctx, endpoint, fabric, backend, bufs));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Unwind the partially provisioned runtime before
+                    // surfacing the error, or the spawned threads leak.
+                    shutdown(&fabric, &mut handles);
+                    return Err(crate::error::CmpcError::Io(format!(
+                        "spawning worker {wid}: {e}"
+                    )));
+                }
+            }
+        }
+        Ok(WorkerRuntime {
+            fabric,
+            router: JobRouter::new(master_endpoint),
+            bufs,
+            handles,
+            next_job: AtomicU64::new(0),
+            n_workers: n,
+            recv_timeout: config.recv_timeout,
+        })
+    }
+
+    /// Claim a fresh [`JobId`]: registers the job's traffic meters on the
+    /// fabric and its receive queue on the master router. Every envelope of
+    /// the job must carry the returned id.
+    pub fn begin_job(&self) -> JobId {
+        let job = self.next_job.fetch_add(1, Ordering::Relaxed);
+        self.router.open(job);
+        self.fabric.begin_job(job);
+        job
+    }
+
+    /// Unregister a finished (or failed) job and return its traffic
+    /// snapshot. Late envelopes for the job are dropped by the router,
+    /// returning their payload buffers to the pool.
+    pub fn finish_job(&self, job: JobId) -> TrafficReport {
+        self.router.close(job);
+        self.fabric.end_job(job)
+    }
+
+    pub fn fabric(&self) -> &Arc<Fabric> {
+        &self.fabric
+    }
+
+    pub fn router(&self) -> &JobRouter {
+        &self.router
+    }
+
+    pub fn buffers(&self) -> &Arc<BufferPool> {
+        &self.bufs
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Persistent worker threads alive in this runtime (always `N`; the
+    /// reuse tests assert no per-job growth).
+    pub fn worker_threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// The per-receive timeout jobs run under.
+    pub fn recv_timeout(&self) -> Duration {
+        self.recv_timeout
+    }
+
+    /// Jobs started over the runtime's lifetime.
+    pub fn jobs_started(&self) -> u64 {
+        self.next_job.load(Ordering::Relaxed)
+    }
+}
+
+/// Send every worker a shutdown and join, propagating worker panics to the
+/// caller (unless the caller is itself already panicking).
+fn shutdown(fabric: &Arc<Fabric>, handles: &mut Vec<JoinHandle<Result<()>>>) {
+    for wid in 0..handles.len() {
+        let _ = fabric.send(
+            CONTROL_JOB,
+            fabric.master_id(),
+            wid,
+            Payload::Control(ControlMsg::Shutdown),
+        );
+    }
+    for h in handles.drain(..) {
+        match h.join() {
+            // Job-level Results were already reported to their jobs as
+            // JobError control messages; nothing to do on Ok.
+            Ok(_) => {}
+            Err(panic) => {
+                if !std::thread::panicking() {
+                    std::panic::resume_unwind(panic);
+                }
+            }
+        }
+    }
+}
+
+impl Drop for WorkerRuntime {
+    fn drop(&mut self) {
+        shutdown(&self.fabric, &mut self.handles);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{AgeCmpc, CmpcScheme};
+    use crate::mpc::protocol::prepare_setup;
+    use crate::runtime::BackendChoice;
+
+    #[test]
+    fn provision_and_clean_shutdown() {
+        let scheme = AgeCmpc::with_optimal_lambda(2, 2, 2);
+        let setup = prepare_setup(&scheme).unwrap();
+        let factory = BackendFactory::new(&BackendChoice::Native).unwrap();
+        let rt = WorkerRuntime::provision(
+            &setup,
+            scheme.params(),
+            &ProtocolConfig::default(),
+            &factory,
+        )
+        .unwrap();
+        assert_eq!(rt.worker_threads(), 17);
+        assert_eq!(rt.n_workers(), 17);
+        let j0 = rt.begin_job();
+        let j1 = rt.begin_job();
+        assert_ne!(j0, j1);
+        assert_eq!(rt.jobs_started(), 2);
+        rt.finish_job(j0);
+        rt.finish_job(j1);
+        drop(rt); // joins all 17 threads without hanging
+    }
+}

@@ -6,8 +6,11 @@
 //! uniform matrices at the scheme's secret powers. Each worker `n` receives
 //! the pair `(F_A(αₙ), F_B(αₙ))`.
 
+use std::sync::Arc;
+
 use crate::codes::CmpcScheme;
 use crate::matrix::FpMat;
+use crate::mpc::network::{BufferPool, PooledMat};
 use crate::poly::MatPoly;
 use crate::runtime::pool::{ScratchPool, WorkerPool};
 use crate::util::rng::ChaChaRng;
@@ -76,6 +79,31 @@ pub fn encode_shares(
         scratch.with(wid, |s| {
             let mut fa_n = FpMat::zeros(fa.rows, fa.cols);
             let mut fb_n = FpMat::zeros(fb.rows, fb.cols);
+            fa.eval_into(alpha, &mut fa_n, s);
+            fb.eval_into(alpha, &mut fb_n, s);
+            (fa_n, fb_n)
+        })
+    })
+}
+
+/// [`encode_shares`], writing into payload buffers loaned from the fabric
+/// [`BufferPool`] — the serving path. Evaluation is identical (same
+/// [`MatPoly::eval_into`] kernel, same worker order), but the resulting
+/// share pairs move straight into fabric envelopes and their buffers return
+/// to the pool after the workers consume them, so a warm deployment encodes
+/// Phase 1 with zero payload allocations.
+pub fn encode_shares_pooled(
+    fa: &MatPoly,
+    fb: &MatPoly,
+    alphas: &[u64],
+    pool: &WorkerPool,
+    scratch: &ScratchPool,
+    bufs: &Arc<BufferPool>,
+) -> Vec<(PooledMat, PooledMat)> {
+    pool.par_map(alphas, |wid, _idx, &alpha| {
+        scratch.with(wid, |s| {
+            let mut fa_n = BufferPool::loan(bufs, fa.rows, fa.cols);
+            let mut fb_n = BufferPool::loan(bufs, fb.rows, fb.cols);
             fa.eval_into(alpha, &mut fa_n, s);
             fb.eval_into(alpha, &mut fb_n, s);
             (fa_n, fb_n)

@@ -1,30 +1,48 @@
-//! Phase 2 — worker computation and inter-worker exchange (eq. 17–20).
+//! Phase 2 — worker computation and inter-worker exchange (eq. 17–20),
+//! served by **persistent** worker threads.
 //!
-//! Worker `n`:
-//! 1. receives its shares `(F_A(αₙ), F_B(αₙ))`,
+//! A worker thread lives as long as its deployment and serves any number of
+//! jobs multiplexed over the shared fabric. For each job `n`:
+//! 1. receives a [`ControlMsg::JobStart`] (per-job seed + overhead counters)
+//!    and its shares `(F_A(αₙ), F_B(αₙ))` — in either order, interleaved
+//!    with other jobs' traffic,
 //! 2. computes `H(αₙ) = F_A(αₙ)·F_B(αₙ)` on the configured backend,
 //! 3. forms `Gₙ(x) = Σ_{i,l} rₙ^{(i,l)} H(αₙ) x^{i+t·l} + Σ_w R_w x^{t²+w}`
-//!    with `z` fresh uniform mask matrices `R_w`,
-//! 4. sends `Gₙ(αₙ')` to every peer `n'` and accumulates received shares
-//!    into `I(αₙ) = Σₙ' Gₙ'(αₙ)`,
-//! 5. sends `I(αₙ)` to the master.
+//!    with `z` fresh uniform mask matrices `R_w` drawn from a per-job rng
+//!    derived from `seed` (byte-identical to the legacy spawn-per-job path),
+//! 4. sends `Gₙ(αₙ')` to every peer — payload buffers loaned from the
+//!    fabric [`BufferPool`] — and accumulates received shares into
+//!    `I(αₙ) = Σₙ' Gₙ'(αₙ)`,
+//! 5. sends `I(αₙ)` then [`ControlMsg::JobDone`] to the master and forgets
+//!    the job.
+//!
+//! Scaled-`H` copies and mask matrices live in per-thread buffers reused
+//! across jobs, so a warm worker performs no fabric-payload allocations.
+//! G-shares from faster peers arriving before this worker's own compute are
+//! buffered per job; a receive timeout (a peer thread died mid-job) fails
+//! the pending jobs with a typed [`ControlMsg::JobError`] instead of
+//! deadlocking, and the thread keeps serving.
 //!
 //! Overhead counters are incremented exactly where the proofs of
 //! Corollaries 10–11 place them, so integration tests can assert
-//! `measured == ξ, σ` per worker.
+//! `measured == ξ, σ` per worker and per job.
 
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::error::{CmpcError, Result};
+use crate::error::Result;
 use crate::ff;
 use crate::matrix::FpMat;
 use crate::metrics::WorkerCounters;
-use crate::mpc::network::{Endpoint, Fabric, Payload};
+use crate::mpc::network::{BufferPool, ControlMsg, Endpoint, Fabric, JobId, Payload, PooledMat};
 use crate::runtime::MatmulBackend;
 use crate::util::rng::ChaChaRng;
 
-/// Everything worker `n` needs before its thread starts.
+/// Everything worker `n` needs before its serve loop starts (job-independent
+/// deployment state; per-job seed and counters arrive via
+/// [`ControlMsg::JobStart`]).
 pub struct WorkerCtx {
     pub id: usize,
     pub n_workers: usize,
@@ -35,42 +53,231 @@ pub struct WorkerCtx {
     /// This worker's reconstruction coefficients `rₙ^{(i,l)}`, indexed
     /// `i + t·l` (distributed by the coordinator; eq. 18).
     pub r_coeffs: Arc<Vec<Vec<u64>>>,
-    /// Secret stream for the `R_w` masks.
-    pub rng: ChaChaRng,
-    pub counters: Arc<WorkerCounters>,
-    /// Injected compute delay (straggler model).
+    /// Injected compute delay per job (straggler model).
     pub delay: Duration,
+    /// How long to wait mid-job before declaring peers dead.
+    pub recv_timeout: Duration,
 }
 
-/// Run the Phase-2 worker loop to completion.
-pub fn run_worker(
-    mut ctx: WorkerCtx,
+/// In-flight state of one job at one worker.
+#[derive(Default)]
+struct JobState {
+    /// Per-job seed + overhead counters from [`ControlMsg::JobStart`].
+    start: Option<(u64, Arc<WorkerCounters>)>,
+    /// Phase-1 shares, held until the compute phase consumes them.
+    shares: Option<(PooledMat, PooledMat)>,
+    /// G-shares from peers that computed before us.
+    early_g: Vec<PooledMat>,
+    /// Own `I(αₙ)` accumulator; present once the compute phase ran.
+    i_share: Option<PooledMat>,
+    /// Peer G-shares folded into `i_share` so far.
+    received: usize,
+}
+
+/// Per-thread compute buffers reused across every job the worker serves.
+#[derive(Default)]
+struct ComputeScratch {
+    /// `rₙ^{(i,l)}·H` — the t² scaled copies.
+    scaled: Vec<FpMat>,
+    /// The z uniform masks `R_w`.
+    masks: Vec<FpMat>,
+    /// Unreduced accumulator for the delayed-reduction G evaluation.
+    acc: Vec<u64>,
+}
+
+/// Serve jobs until [`ControlMsg::Shutdown`] arrives (or the fabric closes).
+///
+/// The loop is a per-job state machine keyed by the envelopes' [`JobId`]:
+/// messages from concurrent jobs interleave arbitrarily and are buffered
+/// per job until that job can advance. A job-level failure (backend error,
+/// unreachable peer, receive timeout) is reported to the master as a
+/// [`ControlMsg::JobError`] and only kills that job — the thread keeps
+/// serving.
+pub fn serve_worker(
+    ctx: WorkerCtx,
     endpoint: Endpoint,
     fabric: Arc<Fabric>,
     mut backend: Box<dyn MatmulBackend>,
+    bufs: Arc<BufferPool>,
 ) -> Result<()> {
-    let n = ctx.n_workers;
-    let t2 = ctx.t * ctx.t;
-    // --- receive shares (Phase 1 tail) ---
-    // Peers that got their shares earlier may already be pushing GShares at
-    // us; buffer those until our own shares arrive.
-    let mut early_g: Vec<FpMat> = Vec::new();
-    let (fa, fb) = loop {
-        let env = endpoint
-            .recv()
-            .map_err(|_| CmpcError::Fabric(format!("worker {} fabric closed", ctx.id)))?;
+    let mut jobs: HashMap<JobId, JobState> = HashMap::new();
+    let mut scratch = ComputeScratch::default();
+    // Ring of recently failed jobs: late envelopes from their slower peers
+    // must be dropped, not resurrected into phantom `JobState`s that would
+    // pin pooled buffers forever and re-fail on the next timeout. Job ids
+    // are never reused, so a tombstone can only ever suppress stale
+    // traffic; the ring is bounded because failures are rare and a
+    // straggling peer delivers within one receive window.
+    let mut failed: VecDeque<JobId> = VecDeque::with_capacity(FAILED_RING);
+    loop {
+        let env = if jobs.is_empty() {
+            // Idle: block until the next job (or shutdown). A closed fabric
+            // means the runtime is gone — exit cleanly.
+            match endpoint.recv() {
+                Ok(env) => env,
+                Err(_) => return Ok(()),
+            }
+        } else {
+            match endpoint.recv_timeout_raw(ctx.recv_timeout) {
+                Ok(env) => env,
+                Err(RecvTimeoutError::Timeout) => {
+                    // A peer thread died mid-job: fail every pending job
+                    // with a typed error instead of deadlocking, then keep
+                    // serving new jobs. (Per-job deadlines that spare
+                    // healthy concurrent jobs are a ROADMAP follow-up.)
+                    for (job, _state) in jobs.drain() {
+                        remember_failed(&mut failed, job);
+                        let _ = fabric.send(
+                            job,
+                            ctx.id,
+                            fabric.master_id(),
+                            Payload::Control(ControlMsg::JobError(format!(
+                                "worker {}: no job traffic within {:?} (dead peer?)",
+                                ctx.id, ctx.recv_timeout
+                            ))),
+                        );
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        };
+        let job = env.job;
+        if matches!(env.payload, Payload::Control(ControlMsg::Shutdown)) {
+            return Ok(());
+        }
+        if failed.contains(&job) {
+            continue; // stale traffic for a job this worker already failed
+        }
         match env.payload {
-            Payload::Shares { fa, fb } => break (fa, fb),
-            Payload::GShare(g) => early_g.push(g),
+            Payload::Control(ControlMsg::JobAbort) => {
+                // The driver gave up on this job (a peer failed or its
+                // receive timed out): drop whatever state we hold and
+                // tombstone the id so a slow peer's G-share cannot
+                // resurrect it.
+                jobs.remove(&job);
+                remember_failed(&mut failed, job);
+            }
+            Payload::Control(ControlMsg::JobStart { seed, counters }) => {
+                jobs.entry(job).or_default().start = Some((seed, counters));
+            }
+            Payload::Shares { fa, fb } => {
+                jobs.entry(job).or_default().shares = Some((fa, fb));
+            }
+            Payload::GShare(g) => {
+                let st = jobs.entry(job).or_default();
+                if let Some(i_share) = st.i_share.as_mut() {
+                    let (_, counters) = st.start.as_ref().expect("computed implies started");
+                    counters.add_stored(g.len() as u64);
+                    i_share.add_assign(&g);
+                    st.received += 1;
+                } else {
+                    st.early_g.push(g);
+                }
+            }
+            // IShare / JobDone / JobError never legally target a worker;
+            // report the routing bug for that job and drop its state.
             other => {
-                return Err(CmpcError::Fabric(format!(
-                    "worker {}: unexpected {other:?}",
-                    ctx.id
-                )));
+                jobs.remove(&job);
+                remember_failed(&mut failed, job);
+                let _ = fabric.send(
+                    job,
+                    ctx.id,
+                    fabric.master_id(),
+                    Payload::Control(ControlMsg::JobError(format!(
+                        "worker {}: unexpected {other:?}",
+                        ctx.id
+                    ))),
+                );
+                continue;
             }
         }
+        if let Some(st) = jobs.get_mut(&job) {
+            match advance_job(&ctx, job, st, &fabric, &bufs, backend.as_mut(), &mut scratch) {
+                Ok(true) => {
+                    jobs.remove(&job);
+                }
+                Ok(false) => {}
+                Err(e) => {
+                    jobs.remove(&job);
+                    remember_failed(&mut failed, job);
+                    let _ = fabric.send(
+                        job,
+                        ctx.id,
+                        fabric.master_id(),
+                        Payload::Control(ControlMsg::JobError(format!(
+                            "worker {}: {e}",
+                            ctx.id
+                        ))),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Tombstone capacity for the recently-failed ring (see `serve_worker`).
+const FAILED_RING: usize = 64;
+
+fn remember_failed(failed: &mut VecDeque<JobId>, job: JobId) {
+    if failed.len() == FAILED_RING {
+        failed.pop_front();
+    }
+    failed.push_back(job);
+}
+
+/// Push one job as far as its buffered state allows. Returns `Ok(true)`
+/// when the job is complete (I-share and JobDone sent).
+fn advance_job(
+    ctx: &WorkerCtx,
+    job: JobId,
+    st: &mut JobState,
+    fabric: &Arc<Fabric>,
+    bufs: &Arc<BufferPool>,
+    backend: &mut dyn MatmulBackend,
+    scratch: &mut ComputeScratch,
+) -> Result<bool> {
+    if st.i_share.is_none() {
+        if st.start.is_none() || st.shares.is_none() {
+            return Ok(false); // still waiting for JobStart or shares
+        }
+        compute_phase(ctx, job, st, fabric, bufs, backend, scratch)?;
+    }
+    if st.received == ctx.n_workers - 1 {
+        let (_, counters) = st.start.as_ref().expect("computed implies started");
+        let i_share = st.i_share.take().expect("i_share present");
+        counters.add_stored(i_share.len() as u64);
+        fabric.send(job, ctx.id, fabric.master_id(), Payload::IShare(i_share))?;
+        fabric.send(
+            job,
+            ctx.id,
+            fabric.master_id(),
+            Payload::Control(ControlMsg::JobDone),
+        )?;
+        return Ok(true);
+    }
+    Ok(false)
+}
+
+/// The Phase-2 compute: `H = F_A·F_B`, the t² scaled copies, the z masks,
+/// and the `N` G-share evaluations (sent to peers / kept as the I-share
+/// seed). Buffered early G-shares are folded in at the end.
+fn compute_phase(
+    ctx: &WorkerCtx,
+    job: JobId,
+    st: &mut JobState,
+    fabric: &Arc<Fabric>,
+    bufs: &Arc<BufferPool>,
+    backend: &mut dyn MatmulBackend,
+    s: &mut ComputeScratch,
+) -> Result<()> {
+    let t2 = ctx.t * ctx.t;
+    let (seed, counters) = {
+        let (seed, c) = st.start.as_ref().expect("started");
+        (*seed, c.clone())
     };
-    ctx.counters.add_stored((fa.len() + fb.len()) as u64);
+    let (fa, fb) = st.shares.take().expect("shares present");
+    counters.add_stored((fa.len() + fb.len()) as u64);
 
     if !ctx.delay.is_zero() {
         std::thread::sleep(ctx.delay);
@@ -79,93 +286,84 @@ pub fn run_worker(
     // --- H(αₙ) = F_A(αₙ)·F_B(αₙ) ---
     let h = backend.matmul_mod(&fa, &fb)?;
     // m³/(st²) scalar multiplications (Corollary 10, term 1).
-    ctx.counters
-        .add_mults((fa.rows * fa.cols * fb.cols) as u64);
-    ctx.counters.add_stored(h.len() as u64);
+    counters.add_mults((fa.rows * fa.cols * fb.cols) as u64);
+    counters.add_stored(h.len() as u64);
+    // Return the share buffers to the pool before loaning G buffers, so a
+    // steady-state job cycles a fixed working set.
+    drop(fa);
+    drop(fb);
 
     // --- rₙ^{(i,l)}·H — t² scaled copies (m² multiplications, term 2) ---
     let my_r = &ctx.r_coeffs[ctx.id];
     debug_assert_eq!(my_r.len(), t2);
-    let scaled: Vec<FpMat> = my_r.iter().map(|&r| h.scale(r)).collect();
-    ctx.counters.add_mults((t2 * h.len()) as u64);
+    while s.scaled.len() < t2 {
+        s.scaled.push(FpMat::zeros(0, 0));
+    }
+    for (sc, &r) in s.scaled.iter_mut().zip(my_r.iter()) {
+        h.scale_into(r, sc);
+    }
+    counters.add_mults((t2 * h.len()) as u64);
     // the t² Lagrange coefficients are worker-resident state (σ term).
-    ctx.counters.add_stored(t2 as u64);
+    counters.add_stored(t2 as u64);
 
-    // --- z uniform masks R_w ---
-    let masks: Vec<FpMat> = (0..ctx.z)
-        .map(|_| FpMat::random(&mut ctx.rng, h.rows, h.cols))
-        .collect();
-    ctx.counters.add_stored((ctx.z * h.len()) as u64);
+    // --- z uniform masks R_w, from the per-job secret stream ---
+    // The stream must match the legacy spawn-per-job path byte for byte:
+    // that path forked the job rng for source A, source B, then workers
+    // 0..N in order, so worker `id` discards 2 + id forks and takes the
+    // next one.
+    let mut job_rng = ChaChaRng::seed_from_u64(seed);
+    for _ in 0..2 + ctx.id {
+        let _ = job_rng.fork();
+    }
+    let mut rng = job_rng.fork();
+    while s.masks.len() < ctx.z {
+        s.masks.push(FpMat::zeros(0, 0));
+    }
+    for mask in s.masks.iter_mut().take(ctx.z) {
+        mask.reshape(h.rows, h.cols);
+        mask.fill_random(&mut rng);
+    }
+    counters.add_stored((ctx.z * h.len()) as u64);
 
     // --- evaluate Gₙ at every peer point and send ---
-    // The coefficient list and the unreduced accumulator are hoisted out of
-    // the peer loop: one warmup growth, then N evaluations with zero
-    // allocations beyond the G matrices themselves (which move into the
-    // fabric envelopes).
-    let mut own_g: Option<FpMat> = None;
+    // G = scaled[0]·α⁰ + Σ_{il>0} scaled[il]·α^{il} + Σ_w R_w·α^{t²+w},
+    // combined in one delayed-reduction pass per peer; the coefficient list
+    // and the unreduced accumulator persist across jobs, and the G payload
+    // buffers are loaned from the fabric pool.
+    let mut own_g: Option<PooledMat> = None;
     let mut terms: Vec<(u64, &[u32])> = Vec::with_capacity(t2 + ctx.z);
-    let mut acc: Vec<u64> = Vec::new();
-    for peer in 0..n {
+    for peer in 0..ctx.n_workers {
         let alpha = ctx.alphas[peer];
-        // G = scaled[0]·α⁰ + Σ_{il>0} scaled[il]·α^{il} + Σ_w R_w·α^{t²+w},
-        // combined in one delayed-reduction pass (§Perf P4).
-        let mut g = FpMat::zeros(h.rows, h.cols);
+        let mut g = BufferPool::loan(bufs, h.rows, h.cols);
         terms.clear();
         let mut ap = 1u64; // α^il incrementally
-        for sc in scaled.iter() {
+        for sc in s.scaled.iter().take(t2) {
             terms.push((ap, &sc.data));
             ap = ff::mul(ap, alpha);
         }
-        for mask in masks.iter() {
+        for mask in s.masks.iter().take(ctx.z) {
             terms.push((ap, &mask.data));
             ap = ff::mul(ap, alpha);
         }
-        ff::weighted_sum_with_scratch(&mut g.data, &terms, &mut acc);
+        ff::weighted_sum_with_scratch(&mut g.data, &terms, &mut s.acc);
         // (t²−1+z)·m²/t² multiplications per peer (Corollary 10, term 3).
-        ctx.counters
-            .add_mults(((t2 - 1 + ctx.z) * h.len()) as u64);
+        counters.add_mults(((t2 - 1 + ctx.z) * h.len()) as u64);
         // each computed evaluation is worker state before transmission (σ).
-        ctx.counters.add_stored(h.len() as u64);
+        counters.add_stored(h.len() as u64);
         if peer == ctx.id {
             own_g = Some(g);
         } else {
-            // Peer may already be done only in failure teardown; surface it.
-            fabric.send(ctx.id, peer, Payload::GShare(g)).map_err(|_| {
-                CmpcError::Fabric(format!("worker {}: peer {peer} unreachable", ctx.id))
-            })?;
+            fabric.send(job, ctx.id, peer, Payload::GShare(g))?;
         }
     }
 
-    // --- accumulate I(αₙ) = Σ Gₙ'(αₙ) ---
+    // --- start accumulating I(αₙ) = Σ Gₙ'(αₙ) from buffered arrivals ---
     let mut i_share = own_g.expect("own G computed");
-    let mut received = 0usize;
-    for g in early_g {
-        ctx.counters.add_stored(g.len() as u64);
+    for g in st.early_g.drain(..) {
+        counters.add_stored(g.len() as u64);
         i_share.add_assign(&g);
-        received += 1;
+        st.received += 1;
     }
-    while received < n - 1 {
-        let env = endpoint.recv().map_err(|_| {
-            CmpcError::Fabric(format!("worker {}: fabric closed mid-exchange", ctx.id))
-        })?;
-        match env.payload {
-            Payload::GShare(g) => {
-                ctx.counters.add_stored(g.len() as u64);
-                i_share.add_assign(&g);
-                received += 1;
-            }
-            other => {
-                return Err(CmpcError::Fabric(format!(
-                    "worker {}: unexpected {other:?}",
-                    ctx.id
-                )));
-            }
-        }
-    }
-    ctx.counters.add_stored(i_share.len() as u64);
-
-    // --- Phase 3 hand-off; the master may already have reconstructed from
-    // t²+z faster peers and hung up, so a send error here is benign. ---
-    let _ = fabric.send(ctx.id, fabric.master_id(), Payload::IShare(i_share));
+    st.i_share = Some(i_share);
     Ok(())
 }

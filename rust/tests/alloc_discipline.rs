@@ -1,11 +1,17 @@
-//! Steady-state allocation discipline for the compute kernels.
+//! Steady-state allocation discipline for the compute kernels **and the
+//! fabric payload path**.
 //!
 //! A counting global allocator wraps `System`; after one warmup pass grows
 //! every caller-owned buffer to its steady-state capacity, repeat
 //! invocations of the in-place GF(p) kernels must perform **zero** heap
 //! allocations — the contract `Deployment::execute` relies on for its
-//! per-job compute loops (message buffers and thread plumbing are the only
-//! remaining per-job allocations, and those move into the fabric).
+//! per-job compute loops. Since the persistent-runtime refactor the fabric
+//! payloads are covered too: `FpMat` message buffers are loaned from the
+//! shared `BufferPool` and returned on drop, so a warm loan→fill→return
+//! cycle (including reshapes within capacity) is also pinned at zero
+//! allocations. The only remaining per-message heap activity is the mpsc
+//! channel's internal block storage, which amortizes and is runtime
+//! plumbing, not payload.
 //!
 //! Kept to a single `#[test]` so no concurrent test can allocate inside
 //! the measurement window.
@@ -15,6 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use cmpc::ff;
 use cmpc::matrix::FpMat;
+use cmpc::mpc::network::BufferPool;
 use cmpc::mpc::source;
 use cmpc::poly::MatPoly;
 use cmpc::runtime::pool::Scratch;
@@ -108,5 +115,37 @@ fn steady_state_kernels_do_not_allocate() {
     assert_eq!(
         delta, 0,
         "steady-state kernel loop performed {delta} heap allocations"
+    );
+
+    // --- fabric payload buffers: loan → fill → return, zero allocations ---
+    // Warmup: grow the pool's working set to the largest payload shape a
+    // job uses (two share buffers + one G buffer in flight at once), and
+    // grow the free-list Vec itself.
+    // Three buffers at the largest in-flight shape: every later loan
+    // reshapes within capacity no matter which recycled buffer it pops.
+    let pool = BufferPool::new();
+    {
+        let _fa = BufferPool::loan(&pool, m, n);
+        let _fb = BufferPool::loan(&pool, m, n);
+        let _g = BufferPool::loan(&pool, m, n);
+    }
+    let before = allocs();
+    for _ in 0..10 {
+        // Same shapes as the warm set, plus a smaller reshape — both must
+        // reuse recycled buffers without touching the heap.
+        let mut fa = BufferPool::loan(&pool, m, k);
+        let mut fb = BufferPool::loan(&pool, k, n);
+        fa.fill_random(&mut rng);
+        fb.fill_random(&mut rng);
+        let mut g = BufferPool::loan(&pool, m / 2, n / 2);
+        g.fill_random(&mut rng);
+        drop(g);
+        drop(fa);
+        drop(fb);
+    }
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "warm BufferPool loan/return cycle performed {delta} heap allocations"
     );
 }

@@ -9,9 +9,10 @@ use cmpc::codes::{AgeCmpc, CmpcScheme, PolyDotCmpc, SchemeParams};
 use cmpc::coordinator::{Coordinator, CoordinatorConfig};
 use cmpc::matrix::FpMat;
 use cmpc::mpc::master::run_master;
-use cmpc::mpc::network::Fabric;
+use cmpc::mpc::network::{Fabric, JobRouter};
 use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::poly::interp::{choose_alphas, try_evaluation_points};
+use cmpc::runtime::pool::{ScratchPool, WorkerPool};
 use cmpc::util::rng::ChaChaRng;
 use cmpc::{CmpcError, Deployment, SchemeSpec};
 
@@ -124,9 +125,22 @@ fn alpha_space_exhaustion_is_typed() {
 fn master_reports_insufficient_workers() {
     // 2 provisioned workers cannot meet the t²+z = 6 reconstruction quota.
     let (_fabric, mut endpoints) = Fabric::new(2, None);
-    let master_endpoint = endpoints.remove(2); // node id 2 = master
+    let router = JobRouter::new(endpoints.remove(2)); // node id 2 = master
     let alphas = Arc::new(vec![1u64, 2]);
-    let err = run_master(&master_endpoint, &alphas, 2, 2, 2).unwrap_err();
+    let pool = WorkerPool::new(1);
+    let scratch = ScratchPool::for_pool(&pool);
+    let err = run_master(
+        &router,
+        0,
+        &alphas,
+        2,
+        2,
+        2,
+        Duration::from_millis(100),
+        &pool,
+        &scratch,
+    )
+    .unwrap_err();
     assert_eq!(
         err,
         CmpcError::InsufficientWorkers {
@@ -134,6 +148,34 @@ fn master_reports_insufficient_workers() {
             provisioned: 2
         }
     );
+}
+
+#[test]
+fn dead_worker_surfaces_recv_timeout_not_deadlock() {
+    // A worker thread that dies mid-job means its I-share never arrives;
+    // the master must surface a typed Fabric error within the configured
+    // receive window instead of blocking forever.
+    let (_fabric, mut endpoints) = Fabric::new(1, None);
+    let router = JobRouter::new(endpoints.remove(1)); // node id 1 = master
+    router.open(0);
+    let alphas = Arc::new(vec![1u64]);
+    let pool = WorkerPool::new(1);
+    let scratch = ScratchPool::for_pool(&pool);
+    let t0 = std::time::Instant::now();
+    let err = run_master(
+        &router,
+        0,
+        &alphas,
+        1,
+        1,
+        0,
+        Duration::from_millis(20),
+        &pool,
+        &scratch,
+    )
+    .unwrap_err();
+    assert!(matches!(err, CmpcError::Fabric(_)), "{err}");
+    assert!(t0.elapsed() < Duration::from_secs(5), "did not time out promptly");
 }
 
 #[test]

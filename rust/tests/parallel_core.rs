@@ -93,6 +93,44 @@ fn deployment_output_identical_across_pool_sizes() {
     }
 }
 
+/// Byte-identical protocol outputs for fixed seeds whether jobs stream
+/// through one persistent runtime sequentially or interleave concurrently
+/// on its shared fabric links.
+#[test]
+fn runtime_output_identical_across_job_interleavings() {
+    let params = SchemeParams::new(2, 2, 1);
+    let mut rng = ChaChaRng::seed_from_u64(606);
+    let a = FpMat::random(&mut rng, 8, 8);
+    let b = FpMat::random(&mut rng, 8, 8);
+    let seeds: Vec<u64> = (0..6).map(|i| 7000 + 13 * i).collect();
+    let dep = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::builder().threads(1).build(),
+    )
+    .unwrap();
+    // sequential reference on the warm runtime
+    let sequential: Vec<_> = seeds
+        .iter()
+        .map(|&s| dep.execute_seeded(&a, &b, s).unwrap())
+        .collect();
+    // same seeds, same runtime, jobs interleaved by 3 driving threads
+    let drive = WorkerPool::new(3);
+    let concurrent = drive.par_map(&seeds, |_w, _i, &s| dep.execute_seeded(&a, &b, s).unwrap());
+    for (i, (sq, cc)) in sequential.iter().zip(&concurrent).enumerate() {
+        assert_eq!(sq.y, cc.y, "job {i} product differs under interleaving");
+        assert_eq!(sq.verified, cc.verified);
+        assert_eq!(
+            sq.traffic.worker_to_worker, cc.traffic.worker_to_worker,
+            "job {i} traffic differs under interleaving"
+        );
+        for (ws, wc) in sq.worker_counters.iter().zip(cc.worker_counters.iter()) {
+            assert_eq!(ws.mults(), wc.mults(), "job {i}");
+            assert_eq!(ws.stored(), wc.stored(), "job {i}");
+        }
+    }
+}
+
 /// `drain` must return reports in submission order with identical outputs
 /// whether jobs run sequentially (threads=1) or concurrently.
 #[test]

@@ -1,0 +1,164 @@
+//! Runtime-reuse stress: one persistent deployment serving many jobs —
+//! sequentially and concurrently — must stay flat on threads, meter traffic
+//! per job, isolate failures, and stay byte-deterministic under any
+//! interleaving.
+//!
+//! Kept to a single `#[test]` so the OS thread-count measurement cannot be
+//! perturbed by sibling tests provisioning their own runtimes in the same
+//! process.
+
+use cmpc::codes::SchemeParams;
+use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
+use cmpc::matrix::FpMat;
+use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::runtime::pool::WorkerPool;
+use cmpc::util::rng::ChaChaRng;
+use cmpc::{CmpcError, Deployment, SchemeSpec};
+
+/// Threads of this process per the kernel (Linux); `None` elsewhere.
+fn os_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+fn zeta(m: usize, t: usize, n: usize) -> u64 {
+    cmpc::analysis::communication_overhead(m, t, n as u64) as u64
+}
+
+#[test]
+fn persistent_runtime_serves_many_jobs() {
+    let params = SchemeParams::new(2, 2, 2); // AGE λ*: N = 17
+    // threads(1): every parallel section runs inline on the submitting
+    // thread, so the only long-lived threads are the 17 persistent workers
+    // — any OS-level growth across jobs would be a per-job spawn.
+    let cfg = ProtocolConfig::builder().threads(1).build();
+    let dep =
+        Deployment::provision(SchemeSpec::Age { lambda: None }, params, cfg).unwrap();
+    assert_eq!(dep.worker_threads(), 17);
+    let n = dep.n_workers();
+    let t = dep.params().t;
+
+    let mut rng = ChaChaRng::seed_from_u64(0xACE);
+    let a8 = FpMat::random(&mut rng, 8, 8);
+    let b8 = FpMat::random(&mut rng, 8, 8);
+    let a16 = FpMat::random(&mut rng, 16, 16);
+    let b16 = FpMat::random(&mut rng, 16, 16);
+    let y8 = a8.transpose().matmul(&b8);
+    let y16 = a16.transpose().matmul(&b16);
+
+    // --- phase 1: warm up, then 32 sequential jobs with mixed seeds ---
+    assert!(dep.execute_seeded(&a8, &b8, 1).unwrap().verified);
+    let baseline_threads = os_thread_count();
+    for i in 0..32u64 {
+        let out = dep.execute_seeded(&a8, &b8, 1000 + 7 * i).unwrap();
+        assert!(out.verified, "job {i}");
+        // Y is independent of the secret seed — byte-identical every time.
+        assert_eq!(out.y, y8, "job {i} output differs");
+        // per-job traffic accounting: exactly ζ worker↔worker scalars
+        assert_eq!(out.traffic.worker_to_worker, zeta(8, t, n), "job {i}");
+        assert_eq!(out.traffic.messages, (n + n * (n - 1) + n) as u64, "job {i}");
+    }
+    if let (Some(before), Some(after)) = (baseline_threads, os_thread_count()) {
+        assert_eq!(
+            after, before,
+            "thread count grew across 32 warm jobs (per-job spawns?)"
+        );
+    }
+    assert_eq!(dep.worker_threads(), 17);
+
+    // --- phase 2: concurrent jobs on ONE runtime — mixed sizes, one
+    // injected failure — with per-job meters and failure isolation ---
+    let drive = WorkerPool::new(4);
+    // (m, seed, valid): the 7×8 pair is the injected-failure job.
+    let bad_a = FpMat::random(&mut rng, 7, 7);
+    let specs: Vec<(usize, u64, bool)> = (0..16)
+        .map(|i| {
+            if i == 5 {
+                (7, 0, false)
+            } else if i % 3 == 0 {
+                (16, 9000 + i as u64, true)
+            } else {
+                (8, 9000 + i as u64, true)
+            }
+        })
+        .collect();
+    let run_concurrent = || {
+        drive.par_map(&specs, |_wid, _idx, &(m, seed, valid)| {
+            if !valid {
+                dep.execute_seeded(&bad_a, &b8, seed)
+            } else if m == 16 {
+                dep.execute_seeded(&a16, &b16, seed)
+            } else {
+                dep.execute_seeded(&a8, &b8, seed)
+            }
+        })
+    };
+    let concurrent = run_concurrent();
+    let concurrent2 = run_concurrent();
+    for (i, ((res, res2), &(m, _seed, valid))) in concurrent
+        .iter()
+        .zip(&concurrent2)
+        .zip(&specs)
+        .enumerate()
+    {
+        if !valid {
+            // the malformed job fails typed and poisons nothing
+            assert!(
+                matches!(res, Err(CmpcError::ShapeMismatch(_))),
+                "job {i} should be rejected"
+            );
+            continue;
+        }
+        let out = res.as_ref().unwrap_or_else(|e| panic!("job {i}: {e}"));
+        let out2 = res2.as_ref().unwrap_or_else(|e| panic!("job {i} rerun: {e}"));
+        assert!(out.verified, "job {i}");
+        // deterministic outputs regardless of interleaving: two concurrent
+        // sweeps agree byte-for-byte, and match the reference product
+        assert_eq!(out.y, out2.y, "job {i} differs across interleavings");
+        assert_eq!(out.y, if m == 16 { y16.clone() } else { y8.clone() }, "job {i}");
+        // per-job traffic meters never bleed across the 8- and 16-sized
+        // jobs interleaving on the same links
+        assert_eq!(
+            out.traffic.worker_to_worker,
+            zeta(m, t, n),
+            "job {i} (m={m}) traffic bled across jobs"
+        );
+        assert_eq!(out.traffic.worker_to_worker, out2.traffic.worker_to_worker);
+        // per-job, per-worker overhead counters are exact under concurrency
+        for (wc, wc2) in out.worker_counters.iter().zip(out2.worker_counters.iter()) {
+            assert_eq!(wc.mults(), wc2.mults(), "job {i}");
+            assert_eq!(wc.stored(), wc2.stored(), "job {i}");
+        }
+    }
+    // 33 sequential + 2×15 concurrent (the bad job never reaches the runtime)
+    assert_eq!(dep.runtime().jobs_started(), 33 + 30);
+    assert_eq!(dep.worker_threads(), 17, "concurrent jobs spawned threads");
+
+    // --- phase 3: concurrent drain through the coordinator pipelines into
+    // one cached deployment, reports in submission order ---
+    let mut coord = Coordinator::new(
+        CoordinatorConfig::builder()
+            .policy(SchemePolicy::Fixed(SchemeSpec::Age { lambda: None }))
+            .threads(4)
+            .build(),
+    );
+    let mut handles = Vec::new();
+    for i in 0..32 {
+        let (a, b) = if i % 2 == 0 { (&a8, &b8) } else { (&a16, &b16) };
+        handles.push(coord.submit(a.clone(), b.clone(), 2, 2, 2).unwrap());
+    }
+    let reports = coord.drain();
+    assert_eq!(reports.len(), 32);
+    assert_eq!(coord.provisioned_deployments(), 1);
+    for (i, (h, r)) in handles.iter().zip(&reports).enumerate() {
+        assert_eq!(h.id(), r.id, "report {i} out of submission order");
+        let out = r.outcome.as_ref().unwrap_or_else(|e| panic!("job {i}: {e}"));
+        let (m, want) = if i % 2 == 0 { (8, &y8) } else { (16, &y16) };
+        assert_eq!(&out.y, want, "drain job {i}");
+        assert_eq!(out.traffic.worker_to_worker, zeta(m, t, n), "drain job {i}");
+    }
+}
