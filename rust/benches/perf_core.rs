@@ -1,4 +1,4 @@
-//! Bench PR2/PR3 — the serving core's perf trajectory.
+//! Bench PR2/PR3/PR4 — the serving core's perf trajectory.
 //!
 //! Runs the Fig. 2 anchor shapes (Example-1 parameters, serving-sized
 //! matrices) through a provisioned `Deployment` at 1/2/4/8 pool threads,
@@ -8,14 +8,17 @@
 //! and peak RSS. PR 3 adds a **job-churn** scenario: small-m jobs/sec on a
 //! provision-once persistent runtime vs. provisioning (spawning N worker
 //! threads + solving setup) per job — the cost the persistent runtime
-//! amortizes away. Results are printed in the in-tree bench format *and*
-//! emitted as machine-readable `BENCH_3.json` so later PRs can diff the
-//! trajectory.
+//! amortizes away. PR 4 adds a **fault** scenario: e2e latency with
+//! 0/1/2 injected stragglers (chaos-delayed I-share legs), full-quota wait
+//! vs the early-decode fast path — the measured form of the code's
+//! straggler tolerance. Results are printed in the in-tree bench format
+//! *and* emitted as machine-readable `BENCH_4.json` so later PRs can diff
+//! the trajectory.
 //!
 //! Usage (from `rust/`):
 //!
 //! ```sh
-//! cargo bench --bench perf_core                      # full run → ../BENCH_3.json
+//! cargo bench --bench perf_core                      # full run → ../BENCH_4.json
 //! cargo bench --bench perf_core -- --smoke --out /tmp/b.json   # CI schema smoke
 //! ```
 
@@ -25,6 +28,7 @@ use cmpc::benchkit::{peak_rss_bytes, per_second, Json};
 use cmpc::codes::SchemeParams;
 use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
 use cmpc::matrix::FpMat;
+use cmpc::mpc::chaos::{ChaosPlan, FaultAction, FaultRule, PayloadClass};
 use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::util::rng::ChaChaRng;
 use cmpc::{Deployment, SchemeSpec};
@@ -106,6 +110,75 @@ fn run_churn(s: usize, t: usize, z: usize, m: usize, jobs: usize) -> ChurnCase {
     }
 }
 
+struct FaultCase {
+    stragglers: usize,
+    delay_ms: u64,
+    /// Best-of-iters e2e with the default full-quota (tail-drain) wait.
+    e2e_full_ns: u64,
+    /// Best-of-iters e2e with `early_decode`: reconstruct at the `t²+z`
+    /// quota, abort the straggler tail.
+    e2e_early_ns: u64,
+    /// `e2e_full_ns / e2e_early_ns` — the measured straggler-tolerance win.
+    early_decode_win: f64,
+}
+
+/// Straggler resilience: `stragglers` workers' own I-share leg sleeps
+/// `delay` (a chaos `Delay` rule — their G-exchange contribution is on
+/// time, the paper's tolerated-dropout regime). The full-quota path eats
+/// the delay in its tail wait; the early-decode path does not.
+fn run_fault(
+    s: usize,
+    t: usize,
+    z: usize,
+    m: usize,
+    stragglers: usize,
+    delay: Duration,
+    iters: usize,
+) -> FaultCase {
+    let params = SchemeParams::new(s, t, z);
+    let mut rng = ChaChaRng::seed_from_u64(0xF4);
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    let run = |early: bool| -> u64 {
+        let mut plan = ChaosPlan::new();
+        for victim in 0..stragglers {
+            plan = plan.rule(
+                FaultRule::new(FaultAction::Delay(delay))
+                    .from_node(victim)
+                    .class(PayloadClass::IShare),
+            );
+        }
+        let config = ProtocolConfig::builder()
+            .verify(false)
+            .early_decode(early)
+            .chaos(plan.into_shared())
+            .build();
+        let dep = Deployment::provision(SchemeSpec::Age { lambda: None }, params, config)
+            .expect("provision");
+        let mut best = u64::MAX;
+        for i in 0..iters {
+            let t0 = Instant::now();
+            dep.execute_seeded(&a, &b, 40 + i as u64).expect("fault job");
+            best = best.min(ns(t0.elapsed()));
+        }
+        best
+    };
+    let e2e_full_ns = run(false);
+    let e2e_early_ns = run(true);
+    let win = e2e_full_ns as f64 / e2e_early_ns.max(1) as f64;
+    println!(
+        "bench perf_core/fault stragglers={stragglers} delay={delay:?}   \
+         full={e2e_full_ns}ns early={e2e_early_ns}ns win={win:.2}"
+    );
+    FaultCase {
+        stragglers,
+        delay_ms: delay.as_millis() as u64,
+        e2e_full_ns,
+        e2e_early_ns,
+        early_decode_win: win,
+    }
+}
+
 fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut Vec<Case>) {
     let params = SchemeParams::new(s, t, z);
     let mut rng = ChaChaRng::seed_from_u64(0xB2);
@@ -184,7 +257,7 @@ fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut V
 
 fn main() {
     let mut smoke = false;
-    let mut out_path = String::from("../BENCH_3.json");
+    let mut out_path = String::from("../BENCH_4.json");
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -213,12 +286,21 @@ fn main() {
         .iter()
         .map(|&m| run_churn(2, 2, 2, m, churn_jobs))
         .collect();
+    let (fault_delay, fault_iters, fault_m) = if smoke {
+        (Duration::from_millis(15), 2, 16)
+    } else {
+        (Duration::from_millis(40), 3, 64)
+    };
+    let fault: Vec<FaultCase> = [0usize, 1, 2]
+        .iter()
+        .map(|&k| run_fault(2, 2, 2, fault_m, k, fault_delay, fault_iters))
+        .collect();
 
     let host_threads = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1) as u64;
     let json = Json::obj(vec![
-        ("schema", Json::Str("cmpc.bench.v3".to_string())),
+        ("schema", Json::Str("cmpc.bench.v4".to_string())),
         ("benchmark", Json::Str("perf_core".to_string())),
         ("provenance", Json::Str("measured".to_string())),
         (
@@ -274,6 +356,23 @@ fn main() {
                                 "speedup_warm_vs_cold",
                                 Json::Float(c.speedup_warm_vs_cold),
                             ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "fault",
+            Json::Arr(
+                fault
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("stragglers", Json::Int(c.stragglers as u64)),
+                            ("delay_ms", Json::Int(c.delay_ms)),
+                            ("e2e_full_ns", Json::Int(c.e2e_full_ns)),
+                            ("e2e_early_ns", Json::Int(c.e2e_early_ns)),
+                            ("early_decode_win", Json::Float(c.early_decode_win)),
                         ])
                     })
                     .collect(),

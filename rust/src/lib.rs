@@ -93,6 +93,26 @@
 //! byte-identical for a given seed regardless of pool size or job
 //! interleaving (`tests/parallel_core.rs`, `tests/runtime_reuse.rs`).
 //!
+//! ## Straggler-resilient runtime (v0.5)
+//!
+//! The runtime now *exploits* the code's redundancy instead of merely
+//! carrying it. Every in-flight job has a **per-job deadline** at each
+//! worker — a dead peer fails one job, never its healthy siblings. With
+//! `ProtocolConfig::builder().early_decode(true)` the master reconstructs
+//! from the **first `t²+z` evaluations** and cancels the straggler tail,
+//! so up to `N−(t²+z)` workers can straggle on — or, once their G-exchange
+//! contribution is delivered, crash before — their own `I(αₙ)` leg without
+//! touching job latency or its result (a *pre*-exchange crash still fails
+//! the in-flight job: every I-share needs all `N` G-shares; the respawned
+//! worker serves the jobs after it). Dead worker threads are **evicted and
+//! respawned** with the same worker index and re-derived rng streams
+//! ([`mpc::runtime::WorkerRuntime::reap`]), so the thread count stays
+//! flat and outputs stay byte-identical across failures;
+//! [`Deployment::health`] meters it all. Every failure mode is
+//! reproducibly exercised by the seed-driven [`mpc::chaos`] harness
+//! (delay/drop/garble/kill at envelope granularity) in
+//! `tests/fault_tolerance.rs`.
+//!
 //! ## Parallel compute core (v0.3)
 //!
 //! Every deployment owns a [`runtime::pool::WorkerPool`] (shared

@@ -74,6 +74,53 @@ impl TrafficCounters {
     }
 }
 
+/// Health counters of one elastic worker runtime (shared by its workers,
+/// its reaper, and the job drivers; snapshot with
+/// [`RuntimeCounters::snapshot`]).
+///
+/// These are the measured counterparts of the fault-tolerance story: how
+/// often the runtime actually exercised eviction/respawn, the early-decode
+/// fast path, and the per-job deadline machinery.
+#[derive(Default, Debug)]
+pub struct RuntimeCounters {
+    /// Worker threads found dead (panic, chaos kill, or self-eviction
+    /// after consecutive deadline misses) and removed.
+    pub evictions: AtomicU64,
+    /// Replacement worker threads provisioned (one per eviction, unless a
+    /// respawn itself failed and was retried later).
+    pub respawns: AtomicU64,
+    /// Jobs whose master decoded at the `t²+z` quota and cancelled the
+    /// straggler tail instead of draining it.
+    pub early_decodes: AtomicU64,
+    /// Per-job deadline expiries reported by workers (each failed exactly
+    /// one job at one worker).
+    pub deadline_misses: AtomicU64,
+    /// `JobAbort` broadcasts issued by job drivers on the failure path.
+    pub jobs_aborted: AtomicU64,
+}
+
+impl RuntimeCounters {
+    pub fn snapshot(&self) -> RuntimeHealthReport {
+        RuntimeHealthReport {
+            evictions: self.evictions.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            early_decodes: self.early_decodes.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            jobs_aborted: self.jobs_aborted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time snapshot of [`RuntimeCounters`].
+#[derive(Default, Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RuntimeHealthReport {
+    pub evictions: u64,
+    pub respawns: u64,
+    pub early_decodes: u64,
+    pub deadline_misses: u64,
+    pub jobs_aborted: u64,
+}
+
 /// Wall-clock phase breakdown of one protocol run.
 ///
 /// The windows are measured separately and do **not** overlap, so
@@ -120,6 +167,20 @@ mod tests {
         c.add_stored(7);
         assert_eq!(c.mults(), 15);
         assert_eq!(c.stored(), 7);
+    }
+
+    #[test]
+    fn runtime_health_snapshot() {
+        let c = RuntimeCounters::default();
+        c.evictions.fetch_add(2, Ordering::Relaxed);
+        c.respawns.fetch_add(2, Ordering::Relaxed);
+        c.early_decodes.fetch_add(1, Ordering::Relaxed);
+        let snap = c.snapshot();
+        assert_eq!(snap.evictions, 2);
+        assert_eq!(snap.respawns, 2);
+        assert_eq!(snap.early_decodes, 1);
+        assert_eq!(snap.deadline_misses, 0);
+        assert_eq!(snap.jobs_aborted, 0);
     }
 
     #[test]

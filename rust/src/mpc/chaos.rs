@@ -1,0 +1,365 @@
+//! Deterministic, envelope-granular fault injection for the worker runtime.
+//!
+//! The whole point of a coded computation is that the master decodes from
+//! *any* `t²+z` of the `N` workers — a claim that can only be trusted if the
+//! failure modes are actually exercised. [`ChaosPlan`] makes them
+//! reproducible: a plan is an ordered list of [`FaultRule`]s consulted by
+//! [`Fabric::send`] for every envelope, and each rule can **delay**, **drop**,
+//! or **garble** a matching envelope, or **kill** its sending node
+//! outright (the crash model the runtime's eviction/respawn machinery
+//! recovers from — see [`WorkerRuntime::reap`]).
+//!
+//! Plans are deterministic by construction: rules match on structural
+//! criteria (sender, receiver, job, payload class, match ordinal), and the
+//! seed-driven helpers ([`ChaosPlan::kill_k_workers`]) draw their victims
+//! from a [`ChaChaRng`] so a failing run can be replayed exactly from its
+//! seed. A plan is attached to a deployment through
+//! [`ProtocolConfig::builder`]`().chaos(plan)` and lives for the fabric's
+//! lifetime.
+//!
+//! Two invariants keep chaos from breaking the runtime itself:
+//! [`ControlMsg::Shutdown`] envelopes are never faultable (a dropped
+//! shutdown would hang the runtime's `Drop` join forever), and a kill marks
+//! the sender dead inside the fabric so *all* of its later sends fail — a
+//! crashed node cannot keep talking.
+//!
+//! [`Fabric::send`]: crate::mpc::network::Fabric::send
+//! [`WorkerRuntime::reap`]: crate::mpc::runtime::WorkerRuntime::reap
+//! [`ProtocolConfig::builder`]: crate::mpc::protocol::ProtocolConfig::builder
+//! [`ControlMsg::Shutdown`]: crate::mpc::network::ControlMsg::Shutdown
+//! [`ChaChaRng`]: crate::util::rng::ChaChaRng
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::mpc::network::{JobId, NodeId, Payload};
+use crate::util::rng::ChaChaRng;
+
+/// What a matching [`FaultRule`] does to an envelope.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Hold the envelope this long before delivering it (a straggling link
+    /// or a slow peer; the sleep happens on the sender's thread, like the
+    /// fabric's own `link_delay`).
+    Delay(Duration),
+    /// Silently discard the envelope (lossy link, or a peer that is mute
+    /// for one job). Dropped envelopes are unmetered — they never
+    /// traversed the fabric.
+    Drop,
+    /// Perturb the payload's first scalar before delivery (corruption in
+    /// flight; verify-mode jobs surface it as a decode failure).
+    Garble,
+    /// Kill the *sending* node: the envelope is discarded, the node is
+    /// marked dead inside the fabric (every later send from it fails), and
+    /// a worker thread observing the kill exits as a crashed thread would.
+    Kill,
+}
+
+/// Payload classification for fault matching (one variant per
+/// [`Payload`] arm).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadClass {
+    /// Phase-1 share pairs (source → worker).
+    Shares,
+    /// Phase-2 `G` evaluations (worker ↔ worker).
+    GShare,
+    /// Phase-3 `I` evaluations (worker → master).
+    IShare,
+    /// Runtime control plane (job lifecycle).
+    Control,
+}
+
+impl PayloadClass {
+    /// Classify a payload.
+    pub fn of(payload: &Payload) -> PayloadClass {
+        match payload {
+            Payload::Shares { .. } => PayloadClass::Shares,
+            Payload::GShare(_) => PayloadClass::GShare,
+            Payload::IShare(_) => PayloadClass::IShare,
+            Payload::Control(_) => PayloadClass::Control,
+        }
+    }
+}
+
+/// One envelope-granular fault rule.
+///
+/// `None` criteria are wildcards; an envelope matches when every set
+/// criterion agrees. Matches are counted per rule (atomically, so
+/// concurrent senders agree on ordinals): the first `skip` matching
+/// envelopes pass unharmed, the next `limit` (or every later one, when
+/// unset) receive the action, and matches beyond the limit fall through to
+/// later rules.
+#[derive(Debug)]
+pub struct FaultRule {
+    from: Option<NodeId>,
+    to: Option<NodeId>,
+    job: Option<JobId>,
+    class: Option<PayloadClass>,
+    skip: u64,
+    limit: Option<u64>,
+    action: FaultAction,
+    /// Matching envelopes seen so far (including skipped ones).
+    hits: AtomicU64,
+}
+
+impl FaultRule {
+    /// A wildcard rule applying `action` to every envelope; narrow it with
+    /// the builder methods.
+    pub fn new(action: FaultAction) -> FaultRule {
+        FaultRule {
+            from: None,
+            to: None,
+            job: None,
+            class: None,
+            skip: 0,
+            limit: None,
+            action,
+            hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Match only envelopes sent by `node`.
+    pub fn from_node(mut self, node: NodeId) -> Self {
+        self.from = Some(node);
+        self
+    }
+
+    /// Match only envelopes addressed to `node`.
+    pub fn to_node(mut self, node: NodeId) -> Self {
+        self.to = Some(node);
+        self
+    }
+
+    /// Match only envelopes of `job`.
+    pub fn job(mut self, job: JobId) -> Self {
+        self.job = Some(job);
+        self
+    }
+
+    /// Match only payloads of `class`.
+    pub fn class(mut self, class: PayloadClass) -> Self {
+        self.class = Some(class);
+        self
+    }
+
+    /// Let the first `n` matching envelopes through unharmed.
+    pub fn skip(mut self, n: u64) -> Self {
+        self.skip = n;
+        self
+    }
+
+    /// Apply the action to at most `n` envelopes (after `skip`).
+    pub fn limit(mut self, n: u64) -> Self {
+        self.limit = Some(n);
+        self
+    }
+
+    /// Matching envelopes observed so far (skipped and faulted alike).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    fn matches(&self, job: JobId, from: NodeId, to: NodeId, class: PayloadClass) -> bool {
+        // `None` criteria are wildcards (written out so the comparison
+        // stays MSRV-1.73 friendly).
+        let from_ok = match self.from {
+            Some(n) => n == from,
+            None => true,
+        };
+        let to_ok = match self.to {
+            Some(n) => n == to,
+            None => true,
+        };
+        let job_ok = match self.job {
+            Some(j) => j == job,
+            None => true,
+        };
+        let class_ok = match self.class {
+            Some(c) => c == class,
+            None => true,
+        };
+        from_ok && to_ok && job_ok && class_ok
+    }
+}
+
+/// An ordered set of [`FaultRule`]s consulted on every fabric send.
+#[derive(Debug, Default)]
+pub struct ChaosPlan {
+    rules: Vec<FaultRule>,
+}
+
+impl ChaosPlan {
+    /// An empty plan (injects nothing).
+    pub fn new() -> ChaosPlan {
+        ChaosPlan::default()
+    }
+
+    /// Append a rule (builder style; earlier rules win).
+    pub fn rule(mut self, rule: FaultRule) -> ChaosPlan {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Wrap the plan for attachment to a `ProtocolConfig`.
+    pub fn into_shared(self) -> Arc<ChaosPlan> {
+        Arc::new(self)
+    }
+
+    /// The plan's rules, in consult order (rule hit counters live here).
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+
+    /// Decide the fate of one envelope: the first rule that matches within
+    /// its `[skip, skip+limit)` window acts; a match inside the skip window
+    /// delivers normally without consulting later rules; an exhausted rule
+    /// falls through.
+    pub fn decide(
+        &self,
+        job: JobId,
+        from: NodeId,
+        to: NodeId,
+        payload: &Payload,
+    ) -> Option<FaultAction> {
+        let class = PayloadClass::of(payload);
+        for rule in &self.rules {
+            if !rule.matches(job, from, to, class) {
+                continue;
+            }
+            let ordinal = rule.hits.fetch_add(1, Ordering::Relaxed);
+            if ordinal < rule.skip {
+                return None; // inside the skip window: deliver unharmed
+            }
+            if let Some(limit) = rule.limit {
+                if ordinal >= rule.skip + limit {
+                    continue; // rule exhausted: later rules may still act
+                }
+            }
+            return Some(rule.action);
+        }
+        None
+    }
+
+    /// Seed-driven crash plan: choose `k` distinct victim workers by
+    /// shuffling `0..n_workers` with a [`ChaChaRng`] under `seed`, and kill
+    /// each on its first envelope of `class`.
+    ///
+    /// `class` selects the crash *moment*: [`PayloadClass::IShare`] kills a
+    /// worker after its full `G`-exchange (the paper's dropout model — its
+    /// peers can still finish, only its own evaluation is lost), while
+    /// [`PayloadClass::GShare`] kills it mid-exchange.
+    ///
+    /// [`ChaChaRng`]: crate::util::rng::ChaChaRng
+    pub fn kill_k_workers(
+        seed: u64,
+        n_workers: usize,
+        k: usize,
+        class: PayloadClass,
+    ) -> ChaosPlan {
+        let mut rng = ChaChaRng::seed_from_u64(seed);
+        let mut ids: Vec<usize> = (0..n_workers).collect();
+        rng.shuffle(&mut ids);
+        let mut plan = ChaosPlan::new();
+        for &victim in ids.iter().take(k) {
+            plan = plan.rule(
+                FaultRule::new(FaultAction::Kill)
+                    .from_node(victim)
+                    .class(class)
+                    .limit(1),
+            );
+        }
+        plan
+    }
+
+    /// Seed-driven crash plan with a **deterministic trigger**: each of the
+    /// `k` victims (chosen as in [`ChaosPlan::kill_k_workers`]) is killed
+    /// on its `(N−1)`-th G-share send of its first job — i.e. mid-send of
+    /// its final exchange evaluation, unconditionally during its compute
+    /// phase, so the crash can never race a `JobAbort`.
+    ///
+    /// The victim's first `N−2` G-shares were already delivered, so all but
+    /// (at most) one peer per victim still complete their `I(αₙ)` — the
+    /// paper's dropout-after-exchange regime, where the master decodes from
+    /// the surviving `≥ N−2k` evaluations.
+    pub fn kill_k_workers_after_exchange(seed: u64, n_workers: usize, k: usize) -> ChaosPlan {
+        let mut rng = ChaChaRng::seed_from_u64(seed);
+        let mut ids: Vec<usize> = (0..n_workers).collect();
+        rng.shuffle(&mut ids);
+        let mut plan = ChaosPlan::new();
+        for &victim in ids.iter().take(k) {
+            plan = plan.rule(
+                FaultRule::new(FaultAction::Kill)
+                    .from_node(victim)
+                    .class(PayloadClass::GShare)
+                    .skip(n_workers.saturating_sub(2) as u64)
+                    .limit(1),
+            );
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::FpMat;
+    use crate::mpc::network::PooledMat;
+
+    fn ishare() -> Payload {
+        Payload::IShare(PooledMat::detached(FpMat::zeros(1, 1)))
+    }
+
+    #[test]
+    fn wildcards_and_criteria_match() {
+        let plan = ChaosPlan::new().rule(
+            FaultRule::new(FaultAction::Drop)
+                .from_node(3)
+                .class(PayloadClass::IShare),
+        );
+        assert_eq!(plan.decide(0, 3, 9, &ishare()), Some(FaultAction::Drop));
+        // wrong sender, wrong class: untouched
+        assert_eq!(plan.decide(0, 4, 9, &ishare()), None);
+        let g = Payload::GShare(PooledMat::detached(FpMat::zeros(1, 1)));
+        assert_eq!(plan.decide(0, 3, 9, &g), None);
+    }
+
+    #[test]
+    fn skip_and_limit_windows() {
+        let plan = ChaosPlan::new().rule(
+            FaultRule::new(FaultAction::Drop).skip(1).limit(2),
+        );
+        assert_eq!(plan.decide(0, 0, 1, &ishare()), None); // skipped
+        assert_eq!(plan.decide(0, 0, 1, &ishare()), Some(FaultAction::Drop));
+        assert_eq!(plan.decide(0, 0, 1, &ishare()), Some(FaultAction::Drop));
+        assert_eq!(plan.decide(0, 0, 1, &ishare()), None); // exhausted
+        assert_eq!(plan.rules()[0].hits(), 4);
+    }
+
+    #[test]
+    fn exhausted_rule_falls_through_to_later_rules() {
+        let plan = ChaosPlan::new()
+            .rule(FaultRule::new(FaultAction::Drop).limit(1))
+            .rule(FaultRule::new(FaultAction::Garble));
+        assert_eq!(plan.decide(0, 0, 1, &ishare()), Some(FaultAction::Drop));
+        assert_eq!(plan.decide(0, 0, 1, &ishare()), Some(FaultAction::Garble));
+    }
+
+    #[test]
+    fn kill_plan_is_seed_deterministic() {
+        let a = ChaosPlan::kill_k_workers(42, 17, 2, PayloadClass::IShare);
+        let b = ChaosPlan::kill_k_workers(42, 17, 2, PayloadClass::IShare);
+        assert_eq!(a.rules().len(), 2);
+        let victims = |p: &ChaosPlan| -> Vec<Option<NodeId>> {
+            p.rules().iter().map(|r| r.from).collect()
+        };
+        assert_eq!(victims(&a), victims(&b));
+        assert_ne!(
+            victims(&a),
+            victims(&ChaosPlan::kill_k_workers(43, 17, 2, PayloadClass::IShare))
+        );
+        // distinct victims
+        let v = victims(&a);
+        assert_ne!(v[0], v[1]);
+    }
+}

@@ -42,9 +42,15 @@
 //! `drain` does exactly that): envelopes are job-tagged, traffic meters are
 //! per job, and outputs are byte-identical for a given seed regardless of
 //! interleaving. A failed `execute` (e.g. a [`CmpcError::ShapeMismatch`]
-//! job, or a [`CmpcError::Fabric`] receive timeout) leaves the deployment
-//! intact — subsequent jobs keep flowing. Dropping the deployment shuts the
-//! runtime down cleanly and propagates any worker panic.
+//! job, or a [`CmpcError::Fabric`] per-job deadline expiry) leaves the
+//! deployment intact — subsequent jobs keep flowing, and a worker thread
+//! that *died* (panic, chaos kill, deadline self-eviction) is evicted and
+//! respawned before the next job starts (see
+//! [`WorkerRuntime::reap`]; [`Deployment::health`] meters it). Dropping
+//! the deployment shuts the runtime down cleanly and propagates any
+//! unreaped worker panic.
+//!
+//! [`WorkerRuntime::reap`]: crate::mpc::runtime::WorkerRuntime::reap
 //!
 //! [`CmpcError::ShapeMismatch`]: crate::error::CmpcError::ShapeMismatch
 //! [`CmpcError::Fabric`]: crate::error::CmpcError::Fabric
@@ -134,8 +140,7 @@ impl Deployment {
     ) -> Result<Deployment> {
         let setup = Arc::new(protocol::prepare_setup(scheme.as_ref())?);
         let scratch = Arc::new(ScratchPool::for_pool(&pool));
-        let runtime =
-            WorkerRuntime::provision(&setup, scheme.params(), &config, factory.as_ref())?;
+        let runtime = WorkerRuntime::provision(&setup, scheme.params(), &config, &factory)?;
         Ok(Deployment {
             runtime,
             scheme,
@@ -201,9 +206,16 @@ impl Deployment {
         &self.pool
     }
 
-    /// The live worker runtime (persistent threads + multiplexed fabric).
+    /// The live worker runtime (persistent threads + multiplexed fabric,
+    /// including the eviction/respawn reaper and the chaos hooks).
     pub fn runtime(&self) -> &WorkerRuntime {
         &self.runtime
+    }
+
+    /// Snapshot of the runtime's fault-tolerance counters: evictions,
+    /// respawns, early decodes, per-job deadline misses, driver aborts.
+    pub fn health(&self) -> crate::metrics::RuntimeHealthReport {
+        self.runtime.health()
     }
 
     /// The scheme parameters of this deployment.

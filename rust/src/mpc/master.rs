@@ -10,11 +10,23 @@
 //! [`run_master`] receives through a [`JobRouter`], which filters envelopes
 //! by [`JobId`] (buffering concurrent jobs' traffic for their own driving
 //! threads) and converts a dead worker thread into a typed
-//! [`CmpcError::Fabric`] timeout instead of a deadlock. After
-//! reconstructing, the master drains the job's tail — every worker sends
-//! `I(αₙ)` then a [`JobDone`] control message — so per-worker overhead
-//! counters are final when the job returns and no stale envelopes linger on
-//! the shared link.
+//! [`CmpcError::Fabric`] timeout instead of a deadlock.
+//!
+//! After reconstructing, the tail is handled one of two ways. On the
+//! default path the master drains it — every worker sends `I(αₙ)` then a
+//! [`JobDone`] control message — so per-worker overhead counters are final
+//! when the job returns and no stale envelopes linger on the shared link.
+//! On the **early-decode fast path** (`early_decode = true`) the master
+//! instead returns as soon as the quota reconstruction is done, cancelling
+//! the job with a [`JobAbort`] broadcast to **every** worker — finished
+//! peers need it too, to tombstone the id against a mid-compute
+//! straggler's late G-shares: the job's latency stops depending on its slowest
+//! `N − (t²+z)` workers — the measured form of the code's straggler
+//! tolerance. The trade: straggler workers' overhead counters may still be
+//! ticking when the job returns, so `measured == ξ, σ` assertions hold only
+//! on the full-drain path.
+//!
+//! [`JobAbort`]: crate::mpc::network::ControlMsg::JobAbort
 //!
 //! The `t²` block reconstructions (`Y_{i,l} = Σₙ rows[i+t·l][n]·I(αₙ)`) are
 //! independent linear combinations, so they fan out across the worker pool;
@@ -31,7 +43,7 @@ use std::time::{Duration, Instant};
 use crate::error::{CmpcError, Result};
 use crate::ff::{self, P};
 use crate::matrix::FpMat;
-use crate::mpc::network::{ControlMsg, JobId, JobRouter, Payload, PooledMat};
+use crate::mpc::network::{ControlMsg, Fabric, JobId, JobRouter, Payload, PooledMat};
 use crate::poly::interp::try_vandermonde_inverse_rows;
 use crate::runtime::pool::{ScratchPool, WorkerPool};
 
@@ -43,6 +55,10 @@ pub struct MasterOutput {
     pub used_workers: Vec<usize>,
     /// Worker ids whose shares arrived late or never (tolerated stragglers).
     pub stragglers_tolerated: usize,
+    /// Whether the early-decode fast path actually cancelled a straggler
+    /// tail (`early_decode` was set *and* at least one worker had not
+    /// acknowledged when reconstruction finished).
+    pub early_decoded: bool,
 }
 
 /// Wall-clock windows of the master phase, measured separately so
@@ -58,28 +74,34 @@ pub struct MasterTimings {
     /// `t²` block combinations.
     pub reconstruct: Duration,
     /// After reconstruction, waiting for the remaining workers' I-shares
-    /// and `JobDone` acks (the straggler tail).
+    /// and `JobDone` acks (the straggler tail). Near-zero on the
+    /// early-decode fast path, which cancels the tail instead of waiting
+    /// for it.
     pub tail_wait: Duration,
 }
 
-/// Collect `t²+z` I-shares for `job`, reconstruct `Y`, then drain the
-/// job's tail (`n_workers` `JobDone` acks).
+/// Collect `t²+z` I-shares for `job`, reconstruct `Y`, then finish the
+/// tail: drain `n_workers` `JobDone` acks, or — with `early_decode` — abort
+/// the stragglers and return immediately.
 ///
 /// `alphas[n]` is worker `n`'s evaluation point; `t`/`z` are scheme
 /// parameters; `n_workers` is the provisioned worker count. `timeout`
 /// bounds every receive (a dead worker surfaces as
 /// [`CmpcError::Fabric`]); a worker-reported [`ControlMsg::JobError`]
-/// fails the job immediately. `pool` and `scratch` drive the parallel
-/// block reconstruction.
+/// fails the job immediately. `fabric` carries the targeted
+/// [`ControlMsg::JobAbort`]s of the early-decode path. `pool` and
+/// `scratch` drive the parallel block reconstruction.
 #[allow(clippy::too_many_arguments)]
 pub fn run_master(
     router: &JobRouter,
+    fabric: &Fabric,
     job: JobId,
     alphas: &Arc<Vec<u64>>,
     n_workers: usize,
     t: usize,
     z: usize,
     timeout: Duration,
+    early_decode: bool,
     pool: &WorkerPool,
     scratch: &ScratchPool,
 ) -> Result<(MasterOutput, MasterTimings)> {
@@ -92,14 +114,25 @@ pub fn run_master(
     }
     let t_quota = Instant::now();
     let mut arrived: Vec<(usize, PooledMat)> = Vec::with_capacity(needed);
-    let mut done = 0usize;
+    // Per-worker JobDone dedup, shared by the quota and drain loops (a
+    // worker acks exactly once; out-of-range senders are ignored).
+    let mut done = vec![false; n_workers];
+    let mut done_count = 0usize;
+    fn note_done(done: &mut [bool], done_count: &mut usize, from: usize) {
+        if from < done.len() && !done[from] {
+            done[from] = true;
+            *done_count += 1;
+        }
+    }
     while arrived.len() < needed {
         let env = router.recv_for(job, timeout)?;
         match env.payload {
             Payload::IShare(m) => arrived.push((env.from, m)),
             // A worker can finish (I-share consumed above) before slower
             // peers reach the quota.
-            Payload::Control(ControlMsg::JobDone) => done += 1,
+            Payload::Control(ControlMsg::JobDone) => {
+                note_done(&mut done, &mut done_count, env.from);
+            }
             Payload::Control(ControlMsg::JobError(msg)) => {
                 return Err(CmpcError::Fabric(format!("job {job}: {msg}")));
             }
@@ -164,18 +197,44 @@ pub fn run_master(
     drop(arrived);
     let reconstruct = t_rec.elapsed();
 
-    // --- drain the job tail: every worker sends I-share then JobDone ---
+    // --- finish the tail ---
     let t_tail = Instant::now();
-    while done < n_workers {
-        let env = router.recv_for(job, timeout)?;
-        match env.payload {
-            Payload::IShare(_) => {} // straggler share beyond the quota
-            Payload::Control(ControlMsg::JobDone) => done += 1,
-            Payload::Control(ControlMsg::JobError(msg)) => {
-                return Err(CmpcError::Fabric(format!("job {job}: {msg}")));
-            }
-            other => {
-                return Err(CmpcError::Fabric(format!("master: unexpected {other:?}")));
+    let early_decoded = early_decode && done_count < n_workers;
+    if early_decoded {
+        // Fast path: the quota decoded Y, so the stragglers' remaining work
+        // is pure waste — cancel the job with a JobAbort to every worker.
+        // Completed workers tombstone the id, which is load-bearing: a
+        // straggler caught mid-compute still emits its G-shares after
+        // waking, and without the tombstone those late shares would seed
+        // phantom `JobState`s at its finished peers (pinning pooled buffers
+        // until a deadline sweep). A worker that died never receives the
+        // abort (`send` to a dropped endpoint is a tolerated error here);
+        // late I-shares/acks are dropped when the driver closes the job on
+        // the router.
+        for wid in 0..n_workers {
+            let _ = fabric.send(
+                job,
+                fabric.master_id(),
+                wid,
+                Payload::Control(ControlMsg::JobAbort),
+            );
+        }
+    } else {
+        // Full drain: every worker sends I-share then JobDone, so overhead
+        // counters are final when the job returns.
+        while done_count < n_workers {
+            let env = router.recv_for(job, timeout)?;
+            match env.payload {
+                Payload::IShare(_) => {} // straggler share beyond the quota
+                Payload::Control(ControlMsg::JobDone) => {
+                    note_done(&mut done, &mut done_count, env.from);
+                }
+                Payload::Control(ControlMsg::JobError(msg)) => {
+                    return Err(CmpcError::Fabric(format!("job {job}: {msg}")));
+                }
+                other => {
+                    return Err(CmpcError::Fabric(format!("master: unexpected {other:?}")));
+                }
             }
         }
     }
@@ -185,6 +244,7 @@ pub fn run_master(
             y,
             stragglers_tolerated: n_workers - needed,
             used_workers,
+            early_decoded,
         },
         MasterTimings {
             quota_wait,

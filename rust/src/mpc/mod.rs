@@ -20,7 +20,20 @@
 //! per edge class — globally and per job — so measured communication can be
 //! asserted against ζ (eq. 34). Payload buffers cycle through a
 //! [`network::BufferPool`], making warm jobs free of fabric allocations.
+//!
+//! The runtime is **straggler-resilient**: every in-flight job carries its
+//! own deadline at each worker (a dead peer fails only the job it starved,
+//! never its healthy siblings), and the master can decode as soon as any
+//! `t²+z` evaluations arrive and cancel the straggler tail
+//! (`ProtocolConfig::early_decode`) — tolerating up to `N−(t²+z)` workers
+//! that straggle, or that crash *after* delivering their G-exchange
+//! contribution (a pre-exchange crash fails the in-flight job, since every
+//! `I(αₙ)` sums all `N` G-shares). Worker threads that crash — or are
+//! killed by a [`chaos`] fault plan — are evicted and respawned with the
+//! same worker index and re-derived rng streams, so subsequent jobs run on
+//! a full complement with byte-identical outputs.
 
+pub mod chaos;
 pub mod deployment;
 pub mod master;
 pub mod network;

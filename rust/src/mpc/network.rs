@@ -22,13 +22,16 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
 use std::time::{Duration, Instant};
 
 use crate::error::{CmpcError, Result};
+use crate::ff;
 use crate::matrix::FpMat;
 use crate::metrics::{TrafficCounters, TrafficReport, WorkerCounters};
+use crate::mpc::chaos::{ChaosPlan, FaultAction};
 
 pub type NodeId = usize;
 
@@ -97,10 +100,31 @@ impl Drop for PooledMat {
 /// to the requested size; dropping the returned [`PooledMat`] gives the
 /// buffer back. After one warmup job at the largest shape in flight, loans
 /// and returns perform zero heap allocations.
+///
+/// The pool also tracks *demand*: the high-water mark of concurrently
+/// loaned scalars since the last [`BufferPool::trim`]. The runtime trims at
+/// every job finish, so a deployment that once served a huge-`m` job and
+/// then settles into small-`m` traffic releases its peak-sized buffers
+/// instead of pinning them forever (the RSS-creep item in ROADMAP), while
+/// steady same-size traffic — where retained capacity tracks demand —
+/// never trims and stays allocation-free.
 #[derive(Debug, Default)]
 pub struct BufferPool {
     free: Mutex<Vec<FpMat>>,
+    /// Scalars currently loaned out.
+    loaned: AtomicUsize,
+    /// High-water mark of `loaned` since the last trim (demand proxy).
+    peak: AtomicUsize,
 }
+
+/// Free capacity above `TRIM_SLACK ×` recent demand triggers a trim…
+const TRIM_SLACK: usize = 4;
+/// …which releases the largest buffers until free capacity is back under
+/// `TRIM_KEEP ×` recent demand.
+const TRIM_KEEP: usize = 2;
+/// Never trim a pool retaining fewer scalars than this (64 KiB of `u32`s) —
+/// below that, churn costs more than the memory.
+const TRIM_MIN_RETAINED: usize = 16 * 1024;
 
 impl BufferPool {
     pub fn new() -> Arc<BufferPool> {
@@ -119,6 +143,9 @@ impl BufferPool {
             .pop()
             .unwrap_or_else(|| FpMat::zeros(0, 0));
         mat.reshape(rows, cols);
+        let scalars = rows * cols;
+        let now = pool.loaned.fetch_add(scalars, Ordering::Relaxed) + scalars;
+        pool.peak.fetch_max(now, Ordering::Relaxed);
         PooledMat {
             mat,
             pool: Some(Arc::downgrade(pool)),
@@ -126,12 +153,55 @@ impl BufferPool {
     }
 
     fn give_back(&self, mat: FpMat) {
+        self.loaned.fetch_sub(mat.len(), Ordering::Relaxed);
         self.free.lock().unwrap().push(mat);
     }
 
     /// Buffers currently sitting in the free list (tests assert recycling).
     pub fn free_buffers(&self) -> usize {
         self.free.lock().unwrap().len()
+    }
+
+    /// Total capacity (in scalars) retained by the free list.
+    pub fn free_capacity_scalars(&self) -> usize {
+        let free = self.free.lock().unwrap();
+        free.iter().map(|m| m.data.capacity()).sum()
+    }
+
+    /// High-water mark of concurrently loaned scalars since the last trim
+    /// (what the next [`BufferPool::trim`] will treat as demand).
+    pub fn peak_loaned_scalars(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// High-water trim: when the free list retains far more capacity than
+    /// recent demand (the loaned high-water mark since the previous trim),
+    /// release the largest buffers until it no longer does. Returns how
+    /// many buffers were freed. Called by the worker runtime at every job
+    /// finish; steady same-size traffic never trims.
+    pub fn trim(&self) -> usize {
+        let outstanding = self.loaned.load(Ordering::Relaxed);
+        let demand = self.peak.swap(outstanding, Ordering::Relaxed);
+        let trigger = demand.saturating_mul(TRIM_SLACK).max(TRIM_MIN_RETAINED);
+        let keep = demand.saturating_mul(TRIM_KEEP).max(TRIM_MIN_RETAINED);
+        let mut free = self.free.lock().unwrap();
+        let mut free_cap: usize = free.iter().map(|m| m.data.capacity()).sum();
+        if free_cap <= trigger {
+            return 0;
+        }
+        // Largest buffers last, so `pop` releases peak-sized ones first.
+        free.sort_by_key(|m| m.data.capacity());
+        let mut released = 0;
+        while free_cap > keep {
+            match free.pop() {
+                Some(mat) => {
+                    free_cap -= mat.data.capacity();
+                    released += 1;
+                }
+                None => break,
+            }
+        }
+        released
     }
 }
 
@@ -180,6 +250,21 @@ impl Payload {
     }
 }
 
+/// [`FaultAction::Garble`]: perturb the payload's first scalar (mod p) so a
+/// verify-mode job detects the corruption as a decode failure. Control
+/// payloads carry no scalars and pass through.
+fn garble(payload: &mut Payload) {
+    let mat = match payload {
+        Payload::Shares { fa, .. } => fa,
+        Payload::GShare(m) | Payload::IShare(m) => m,
+        Payload::Control(_) => return,
+    };
+    if !mat.is_empty() {
+        let v = mat.at(0, 0);
+        mat.set(0, 0, ff::add(v, 1));
+    }
+}
+
 /// A routed message, tagged with the job it belongs to.
 #[derive(Debug)]
 pub struct Envelope {
@@ -191,15 +276,24 @@ pub struct Envelope {
 /// Central switch: owns one sender per node plus the traffic meters
 /// (global and per registered job).
 pub struct Fabric {
-    txs: Vec<Sender<Envelope>>,
+    /// One sender per node. RwLock (not plain Vec) so the eviction/respawn
+    /// path can swap a dead node's channel in place while traffic flows to
+    /// the other nodes; sends clone the `Sender` under the read lock.
+    txs: RwLock<Vec<Sender<Envelope>>>,
     traffic: Arc<TrafficCounters>,
     /// Live per-job meters, registered by `begin_job` / drained by `end_job`.
     /// RwLock so the n(n−1) concurrent data sends of a job share the read
     /// path; only job registration takes the write lock.
     job_traffic: RwLock<HashMap<JobId, Arc<TrafficCounters>>>,
     n_workers: usize,
+    n_nodes: usize,
     /// Optional per-hop latency injected on every data send.
     link_delay: Option<Duration>,
+    /// Optional fault-injection plan consulted on every send.
+    chaos: Option<Arc<ChaosPlan>>,
+    /// Per-node kill marks set by [`FaultAction::Kill`]; a killed node's
+    /// sends fail until [`Fabric::replace_endpoint`] revives it.
+    killed: Vec<AtomicBool>,
 }
 
 /// Receive side handed to a node thread.
@@ -212,6 +306,16 @@ impl Fabric {
     /// Build a fabric for `n_workers` workers (+ master + two sources).
     /// Returns the fabric and one endpoint per node, indexed by node id.
     pub fn new(n_workers: usize, link_delay: Option<Duration>) -> (Arc<Fabric>, Vec<Endpoint>) {
+        Fabric::with_chaos(n_workers, link_delay, None)
+    }
+
+    /// [`Fabric::new`] with a fault-injection plan attached for the
+    /// fabric's lifetime (see [`crate::mpc::chaos`]).
+    pub fn with_chaos(
+        n_workers: usize,
+        link_delay: Option<Duration>,
+        chaos: Option<Arc<ChaosPlan>>,
+    ) -> (Arc<Fabric>, Vec<Endpoint>) {
         let n_nodes = n_workers + 3;
         let mut txs = Vec::with_capacity(n_nodes);
         let mut endpoints = Vec::with_capacity(n_nodes);
@@ -221,13 +325,36 @@ impl Fabric {
             endpoints.push(Endpoint { id, rx });
         }
         let fabric = Arc::new(Fabric {
-            txs,
+            txs: RwLock::new(txs),
             traffic: TrafficCounters::shared(),
             job_traffic: RwLock::new(HashMap::new()),
             n_workers,
+            n_nodes,
             link_delay,
+            chaos,
+            killed: (0..n_nodes).map(|_| AtomicBool::new(false)).collect(),
         });
         (fabric, endpoints)
+    }
+
+    /// Replace a (dead) node's receive endpoint with a fresh channel and
+    /// clear its chaos-kill mark — the eviction/respawn path. Envelopes
+    /// that raced into the old channel drop with it (pooled payloads
+    /// return to their pool); envelopes sent after the old receiver
+    /// dropped were already reported to their senders as typed
+    /// [`CmpcError::Fabric`] errors.
+    pub fn replace_endpoint(&self, node: NodeId) -> Endpoint {
+        let (tx, rx) = channel();
+        self.txs.write().unwrap()[node] = tx;
+        self.killed[node].store(false, Ordering::Relaxed);
+        Endpoint { id: node, rx }
+    }
+
+    /// Whether the chaos plan killed `node` (a worker observing a send
+    /// failure checks this to die like a crashed thread instead of
+    /// reporting a job error — see `serve_worker`).
+    pub fn chaos_killed(&self, node: NodeId) -> bool {
+        self.killed[node].load(Ordering::Relaxed)
     }
 
     pub fn n_workers(&self) -> usize {
@@ -281,16 +408,44 @@ impl Fabric {
     /// payloads by edge class (globally and on the job's meters).
     ///
     /// Errors are typed [`CmpcError::Fabric`]: a link outside the CMPC data
-    /// topology, or a destination endpoint that has been dropped (a dead
-    /// node thread). Control payloads skip metering, injected link latency,
-    /// and the topology check — they model the runtime, not the network.
-    pub fn send(&self, job: JobId, from: NodeId, to: NodeId, payload: Payload) -> Result<()> {
+    /// topology, a destination endpoint that has been dropped (a dead node
+    /// thread), or a sender the chaos plan killed. Control payloads skip
+    /// metering, injected link latency, and the topology check — they model
+    /// the runtime, not the network. When a [`ChaosPlan`] is attached, it
+    /// is consulted here for every envelope except
+    /// [`ControlMsg::Shutdown`] (dropping a shutdown would hang runtime
+    /// teardown); dropped envelopes vanish unmetered.
+    pub fn send(&self, job: JobId, from: NodeId, to: NodeId, mut payload: Payload) -> Result<()> {
         use std::sync::atomic::Ordering::Relaxed;
-        if to >= self.txs.len() {
+        if to >= self.n_nodes {
             return Err(CmpcError::Fabric(format!(
                 "send to nonexistent node {to} (fabric has {} nodes)",
-                self.txs.len()
+                self.n_nodes
             )));
+        }
+        if let Some(plan) = &self.chaos {
+            // Shutdown bypasses chaos entirely — including the killed-sender
+            // check — so runtime teardown always works even if a plan
+            // managed to kill the master node itself.
+            if !matches!(payload, Payload::Control(ControlMsg::Shutdown)) {
+                if self.killed[from].load(Relaxed) {
+                    return Err(CmpcError::Fabric(format!(
+                        "node {from} was killed by the chaos plan (dead node cannot send)"
+                    )));
+                }
+                match plan.decide(job, from, to, &payload) {
+                    None => {}
+                    Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+                    Some(FaultAction::Drop) => return Ok(()),
+                    Some(FaultAction::Garble) => garble(&mut payload),
+                    Some(FaultAction::Kill) => {
+                        self.killed[from].store(true, Relaxed);
+                        return Err(CmpcError::Fabric(format!(
+                            "node {from} killed by the chaos plan mid-send"
+                        )));
+                    }
+                }
+            }
         }
         if !matches!(payload, Payload::Control(_)) {
             if let Some(d) = self.link_delay {
@@ -326,11 +481,12 @@ impl Fabric {
                 }
             }
         }
-        self.txs[to]
-            .send(Envelope { job, from, payload })
-            .map_err(|_| {
-                CmpcError::Fabric(format!("node {to} endpoint dropped (dead node thread?)"))
-            })
+        // Clone the sender out of the lock so a concurrent endpoint
+        // replacement never waits on an in-flight send.
+        let tx = self.txs.read().unwrap()[to].clone();
+        tx.send(Envelope { job, from, payload }).map_err(|_| {
+            CmpcError::Fabric(format!("node {to} endpoint dropped (dead node thread?)"))
+        })
     }
 
     /// Cumulative traffic snapshot across all jobs (scalars per edge class).
@@ -435,7 +591,8 @@ impl JobRouter {
             let now = Instant::now();
             if now >= deadline {
                 return Err(CmpcError::Fabric(format!(
-                    "job {job}: no message within {timeout:?} (worker thread dead or stalled?)"
+                    "job {job}: deadline expired — no message within {timeout:?} \
+                     (worker thread dead or stalled?)"
                 )));
             }
             let remaining = deadline - now;
@@ -575,6 +732,114 @@ mod tests {
             .recv_timeout(Duration::from_millis(5))
             .unwrap_err();
         assert!(matches!(err, CmpcError::Fabric(_)), "{err}");
+    }
+
+    #[test]
+    fn buffer_pool_trim_releases_peak_buffers() {
+        let pool = BufferPool::new();
+        // A "huge-m" working set: 16 buffers of 4096 scalars each.
+        {
+            let _big: Vec<PooledMat> =
+                (0..16).map(|_| BufferPool::loan(&pool, 64, 64)).collect();
+        }
+        let peak_free = pool.free_capacity_scalars();
+        assert_eq!(peak_free, 16 * 64 * 64);
+        // Steady demand at the same size keeps everything: the first trim
+        // still sees the huge peak as demand.
+        assert_eq!(pool.trim(), 0);
+        assert_eq!(pool.free_capacity_scalars(), peak_free);
+        // Small-m traffic afterwards: demand collapses and the trims (as
+        // the runtime issues at each job finish) release the peak buffers.
+        for _ in 0..2 {
+            drop(BufferPool::loan(&pool, 8, 8));
+            pool.trim();
+        }
+        let after = pool.free_capacity_scalars();
+        assert!(
+            after < peak_free / 2,
+            "trim retained {after} of {peak_free} scalars"
+        );
+        // …but never below the churn floor, so tiny pools are left alone.
+        assert!(after <= 16 * 1024, "retained {after} scalars");
+        let tiny = BufferPool::new();
+        drop(BufferPool::loan(&tiny, 4, 4));
+        assert_eq!(tiny.trim(), 0);
+        assert_eq!(tiny.free_buffers(), 1);
+    }
+
+    #[test]
+    fn chaos_drop_and_garble_and_kill() {
+        use crate::mpc::chaos::{ChaosPlan, FaultAction, FaultRule, PayloadClass};
+        let plan = ChaosPlan::new()
+            .rule(
+                FaultRule::new(FaultAction::Drop)
+                    .class(PayloadClass::GShare)
+                    .limit(1),
+            )
+            .rule(
+                FaultRule::new(FaultAction::Garble)
+                    .class(PayloadClass::IShare)
+                    .limit(1),
+            )
+            .rule(FaultRule::new(FaultAction::Kill).from_node(1))
+            .into_shared();
+        let (fabric, endpoints) = Fabric::with_chaos(2, None, Some(plan));
+        let m = FpMat::zeros(2, 2);
+        // dropped: delivered nowhere, unmetered
+        fabric.send(0, 0, 1, Payload::GShare(pooled(&m))).unwrap();
+        assert_eq!(fabric.traffic().worker_to_worker, 0);
+        // garbled: delivered with the first scalar perturbed
+        fabric
+            .send(0, 0, fabric.master_id(), Payload::IShare(pooled(&m)))
+            .unwrap();
+        let env = endpoints[fabric.master_id()].recv().unwrap();
+        match env.payload {
+            Payload::IShare(g) => assert_eq!(g.at(0, 0), 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        // kill: the send fails, the node is marked dead, later sends fail
+        let err = fabric
+            .send(0, 1, fabric.master_id(), Payload::IShare(pooled(&m)))
+            .unwrap_err();
+        assert!(matches!(err, CmpcError::Fabric(_)), "{err}");
+        assert!(fabric.chaos_killed(1));
+        assert!(fabric
+            .send(0, 1, 0, Payload::GShare(pooled(&m)))
+            .is_err());
+        // shutdown is never faultable, even from a killed... (revive first)
+        let _fresh = fabric.replace_endpoint(1);
+        assert!(!fabric.chaos_killed(1));
+        fabric
+            .send(
+                CONTROL_JOB,
+                fabric.master_id(),
+                1,
+                Payload::Control(ControlMsg::Shutdown),
+            )
+            .unwrap();
+    }
+
+    #[test]
+    fn replace_endpoint_revives_a_dead_node() {
+        let (fabric, mut endpoints) = Fabric::new(1, None);
+        drop(endpoints.remove(0)); // worker 0's receiver gone
+        let m = FpMat::zeros(1, 1);
+        assert!(fabric
+            .send(0, fabric.source_a_id(), 0, Payload::GShare(pooled(&m)))
+            .is_err());
+        let fresh = fabric.replace_endpoint(0);
+        fabric
+            .send(
+                0,
+                fabric.source_a_id(),
+                0,
+                Payload::Shares {
+                    fa: pooled(&m),
+                    fb: pooled(&m),
+                },
+            )
+            .unwrap();
+        assert!(fresh.recv().is_ok());
     }
 
     #[test]

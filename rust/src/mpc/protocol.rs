@@ -28,6 +28,7 @@ use crate::codes::{CmpcScheme, SchemeParams};
 use crate::error::{CmpcError, Result};
 use crate::matrix::FpMat;
 use crate::metrics::{PhaseTimings, TrafficReport, WorkerCounters};
+use crate::mpc::chaos::ChaosPlan;
 use crate::mpc::master::{MasterOutput, MasterTimings};
 use crate::mpc::network::{ControlMsg, Payload};
 use crate::mpc::runtime::WorkerRuntime;
@@ -57,11 +58,29 @@ pub struct ProtocolConfig {
     /// `1` makes every parallel section literally sequential — the
     /// determinism tests compare `1` vs `N` byte-for-byte.
     pub threads: usize,
-    /// Upper bound on any single fabric receive while a job is in flight.
-    /// A dead worker thread surfaces as a typed [`CmpcError::Fabric`]
-    /// within this window instead of deadlocking the job; it must
+    /// Upper bound on any single fabric receive while a job is in flight,
+    /// and the **per-job deadline** at each worker: a job with no traffic
+    /// for this long fails with a typed [`CmpcError::Fabric`] — only that
+    /// job; healthy concurrent jobs keep their own deadlines. It must
     /// comfortably exceed the longest legitimate compute + injected delay.
     pub recv_timeout: Duration,
+    /// Decode as soon as any `t²+z` I-shares arrive and cancel the
+    /// straggler tail with targeted `JobAbort`s, instead of draining every
+    /// worker's `JobDone` ack. Turns the code's redundancy into latency:
+    /// a job stops depending on its slowest `N−(t²+z)` workers (and
+    /// tolerates that many crashed ones). Off by default because the
+    /// full drain is what makes [`ProtocolOutput::worker_counters`] final
+    /// at return — with early decode they are lower bounds.
+    pub early_decode: bool,
+    /// Consecutive per-job deadline-miss rounds after which a worker
+    /// thread self-evicts for the runtime's reaper to replace. Rounds are
+    /// consecutive only when **no envelope at all** arrives between them —
+    /// any received traffic proves the link alive and resets the count; a
+    /// worker that trips this is likely stuck behind a partitioned link.
+    pub max_deadline_misses: usize,
+    /// Optional deterministic fault-injection plan threaded through the
+    /// fabric (see [`crate::mpc::chaos`]). `None` injects nothing.
+    pub chaos: Option<Arc<ChaosPlan>>,
 }
 
 impl Default for ProtocolConfig {
@@ -74,6 +93,9 @@ impl Default for ProtocolConfig {
             link_delay: None,
             threads: 0,
             recv_timeout: Duration::from_secs(30),
+            early_decode: false,
+            max_deadline_misses: 8,
+            chaos: None,
         }
     }
 }
@@ -125,9 +147,27 @@ impl ProtocolConfigBuilder {
         self
     }
 
-    /// Per-receive deadline for in-flight jobs (dead-worker detection).
+    /// Per-job deadline for in-flight jobs (dead-worker detection).
     pub fn recv_timeout(mut self, timeout: Duration) -> Self {
         self.config.recv_timeout = timeout;
+        self
+    }
+
+    /// Decode at the `t²+z` quota and cancel the straggler tail.
+    pub fn early_decode(mut self, on: bool) -> Self {
+        self.config.early_decode = on;
+        self
+    }
+
+    /// Consecutive deadline-miss rounds before a worker self-evicts.
+    pub fn max_deadline_misses(mut self, rounds: usize) -> Self {
+        self.config.max_deadline_misses = rounds;
+        self
+    }
+
+    /// Attach a deterministic fault-injection plan to the deployment.
+    pub fn chaos(mut self, plan: Arc<ChaosPlan>) -> Self {
+        self.config.chaos = Some(plan);
         self
     }
 
@@ -146,9 +186,14 @@ pub struct ProtocolOutput {
     /// This job's traffic only (concurrent jobs on a shared runtime meter
     /// independently; the fabric also keeps cumulative totals).
     pub traffic: TrafficReport,
-    /// Per-worker overhead counters (index = worker id), final at return.
+    /// Per-worker overhead counters (index = worker id). Final at return on
+    /// the full-drain path; with [`ProtocolConfig::early_decode`], aborted
+    /// stragglers may still be ticking, so treat them as lower bounds.
     pub worker_counters: Vec<Arc<WorkerCounters>>,
     pub verified: bool,
+    /// Whether the master took the early-decode fast path (decoded at the
+    /// `t²+z` quota and cancelled a straggler tail).
+    pub early_decoded: bool,
 }
 
 /// Precomputed per-deployment state reusable across jobs with the same
@@ -234,7 +279,9 @@ pub fn validate_job_shapes(a: &FpMat, b: &FpMat, params: SchemeParams) -> Result
 ///
 /// [`Deployment`]: crate::mpc::deployment::Deployment
 pub struct ExecEnv<'a> {
-    pub factory: &'a BackendFactory,
+    /// Shared (`Arc`) so the runtime can keep a handle for provisioning
+    /// replacement workers on the eviction/respawn path.
+    pub factory: &'a Arc<BackendFactory>,
     pub pool: &'a WorkerPool,
     pub scratch: &'a ScratchPool,
 }
@@ -251,7 +298,7 @@ pub fn run_protocol_with_setup(
     b: &FpMat,
     config: &ProtocolConfig,
 ) -> Result<ProtocolOutput> {
-    let factory = BackendFactory::new(&config.backend)?;
+    let factory = Arc::new(BackendFactory::new(&config.backend)?);
     let pool = WorkerPool::sized_or_global(config.threads);
     let scratch = ScratchPool::for_pool(&pool);
     run_protocol_with_env(
@@ -319,8 +366,8 @@ pub fn run_job(
     if result.is_err() {
         // Tell every worker to drop the job: peers of a failed worker
         // would otherwise hold its JobState (waiting for a G-share that
-        // never comes) until an idle-window timeout that may never fire
-        // under sustained traffic.
+        // never comes) until its per-job deadline fires — aborting frees
+        // their state (and pooled buffers) immediately.
         let fabric = runtime.fabric();
         for wid in 0..n {
             let _ = fabric.send(
@@ -330,12 +377,17 @@ pub fn run_job(
                 Payload::Control(ControlMsg::JobAbort),
             );
         }
+        runtime.note_job_aborted();
     }
     // Unregister whatever happened: late envelopes for the job are dropped
-    // by the router (payload buffers return to the pool) and the per-job
-    // traffic meters are drained.
+    // by the router (payload buffers return to the pool), the per-job
+    // traffic meters are drained, and the buffer pool gets its high-water
+    // trim opportunity.
     let traffic = runtime.finish_job(job);
     let (m_out, mt, counters, setup_time, phase1) = result?;
+    if m_out.early_decoded {
+        runtime.note_early_decode();
+    }
 
     let verified = if config.verify {
         // The reference product is the largest single matmul of the run
@@ -369,6 +421,7 @@ pub fn run_job(
         traffic,
         worker_counters: counters,
         verified,
+        early_decoded: m_out.early_decoded,
     })
 }
 
@@ -450,12 +503,14 @@ fn drive_job(
     // --- Phase 2 runs on the persistent workers; Phase 3 here ---
     let (m_out, mt) = master::run_master(
         runtime.router(),
+        fabric,
         job,
         &setup.alphas,
         n,
         p.t,
         p.z,
         config.recv_timeout,
+        config.early_decode,
         env.pool,
         env.scratch,
     )?;
@@ -610,6 +665,9 @@ mod tests {
             .link_delay(Some(Duration::from_micros(5)))
             .threads(3)
             .recv_timeout(Duration::from_secs(2))
+            .early_decode(true)
+            .max_deadline_misses(3)
+            .chaos(ChaosPlan::new().into_shared())
             .build();
         assert_eq!(cfg.seed, 99);
         assert!(!cfg.verify);
@@ -617,5 +675,55 @@ mod tests {
         assert_eq!(cfg.link_delay, Some(Duration::from_micros(5)));
         assert_eq!(cfg.threads, 3);
         assert_eq!(cfg.recv_timeout, Duration::from_secs(2));
+        assert!(cfg.early_decode);
+        assert_eq!(cfg.max_deadline_misses, 3);
+        assert!(cfg.chaos.is_some());
+    }
+
+    #[test]
+    fn early_decode_cancels_the_straggler_tail() {
+        // Two workers whose *own* I-share leg straggles (the paper's
+        // tolerated-dropout regime: their G-exchange contribution already
+        // delivered). The early-decode path returns at the t²+z quota with
+        // the identical (verified) product instead of waiting out the tail.
+        // Measured on a live deployment so the runtime's own teardown
+        // (which joins the still-sleeping stragglers) stays outside the
+        // timed window.
+        use crate::codes::SchemeParams;
+        use crate::mpc::chaos::{ChaosPlan, FaultAction, FaultRule, PayloadClass};
+        use crate::mpc::deployment::Deployment;
+        use crate::SchemeSpec;
+        let delay = Duration::from_millis(150);
+        let mut plan = ChaosPlan::new(); // AGE(2,2,2): N=17, quota 6
+        for victim in [3usize, 11] {
+            plan = plan.rule(
+                FaultRule::new(FaultAction::Delay(delay))
+                    .from_node(victim)
+                    .class(PayloadClass::IShare),
+            );
+        }
+        let mut rng = ChaChaRng::seed_from_u64(99);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        let cfg = ProtocolConfig::builder()
+            .early_decode(true)
+            .chaos(plan.into_shared())
+            .build();
+        let dep = Deployment::provision(
+            SchemeSpec::Age { lambda: None },
+            SchemeParams::new(2, 2, 2),
+            cfg,
+        )
+        .unwrap();
+        let out = dep.execute(&a, &b).unwrap();
+        assert!(out.verified);
+        // The fast path fired: decoded at the quota with the stragglers'
+        // acks outstanding (the *relative* latency win over the full-drain
+        // path is asserted, with wall clocks, in tests/fault_tolerance.rs —
+        // an absolute bound here would flake on loaded CI runners).
+        assert!(out.early_decoded);
+        assert_eq!(out.y, a.transpose().matmul(&b));
+        assert!(out.timings.phase2_compute < delay, "tail was waited for");
+        assert!(dep.runtime().health().early_decodes >= 1);
     }
 }

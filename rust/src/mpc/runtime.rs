@@ -1,5 +1,5 @@
 //! The persistent worker runtime: long-lived Phase-2 workers over a
-//! job-multiplexed, buffer-pooled fabric.
+//! job-multiplexed, buffer-pooled fabric — with **eviction and respawn**.
 //!
 //! The paper's cost model (eqs. 32–34) assumes edge workers that hold their
 //! shares and serve computation continuously; [`WorkerRuntime`] realizes
@@ -14,23 +14,48 @@
 //! shared [`BufferPool`], so a warm runtime executes jobs with **zero
 //! thread spawns and zero fabric-payload allocations**.
 //!
+//! **Elasticity.** A worker thread that dies — a panic, a chaos-plan kill
+//! (see [`crate::mpc::chaos`]), or self-eviction after consecutive per-job
+//! deadline misses — does not wedge the deployment: the next
+//! [`WorkerRuntime::begin_job`] (or an explicit [`WorkerRuntime::reap`])
+//! joins the dead thread, records an [`Eviction`], swaps the node's fabric
+//! endpoint for a fresh channel, and spawns a replacement with the **same
+//! worker index** — same α, same reconstruction coefficients, same per-job
+//! rng derivation — so post-respawn outputs are byte-identical to an
+//! uninterrupted worker's. The dead thread's pooled buffers were already
+//! reclaimed when its job states dropped. [`RuntimeCounters`] meters
+//! evictions, respawns, early decodes, deadline misses, and driver aborts.
+//!
 //! Dropping the runtime shuts it down cleanly: a [`ControlMsg::Shutdown`]
-//! to every worker, then joins. A worker that *panicked* (as opposed to
-//! reporting job-level errors, which never kill the thread) has its panic
-//! propagated to the dropping thread, so failures cannot vanish silently.
+//! to every worker, then joins. A worker that *panicked* and was never
+//! reaped has its panic propagated to the dropping thread, so failures
+//! cannot vanish silently; reaped panics live on in the eviction log
+//! instead.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::codes::SchemeParams;
 use crate::error::Result;
-use crate::metrics::TrafficReport;
-use crate::mpc::network::{BufferPool, ControlMsg, Fabric, JobId, JobRouter, Payload, CONTROL_JOB};
+use crate::metrics::{RuntimeCounters, RuntimeHealthReport, TrafficReport};
+use crate::mpc::network::{
+    BufferPool, ControlMsg, Endpoint, Fabric, JobId, JobRouter, Payload, CONTROL_JOB,
+};
 use crate::mpc::protocol::{ProtocolConfig, Setup};
 use crate::mpc::worker::{self, WorkerCtx};
 use crate::runtime::BackendFactory;
+
+/// One recorded worker eviction: which worker slot died and why (the
+/// panic message, the worker's own typed error, or a clean exit — chaos
+/// kill or fabric teardown).
+#[derive(Clone, Debug)]
+pub struct Eviction {
+    pub worker: usize,
+    pub reason: String,
+}
 
 /// A provisioned set of persistent worker threads plus the multiplexed
 /// fabric they serve on. Owned by a [`Deployment`] (one runtime per
@@ -42,10 +67,66 @@ pub struct WorkerRuntime {
     fabric: Arc<Fabric>,
     router: JobRouter,
     bufs: Arc<BufferPool>,
-    handles: Vec<JoinHandle<Result<()>>>,
+    /// One slot per worker index; the reaper replaces slots in place, so
+    /// the vector length is always `N`.
+    handles: Mutex<Vec<JoinHandle<Result<()>>>>,
     next_job: AtomicU64,
     n_workers: usize,
     recv_timeout: Duration,
+    health: Arc<RuntimeCounters>,
+    /// Most recent evictions, oldest first, capped at `EVICTION_LOG_CAP`
+    /// (the health counters stay exact; only the per-event detail rotates)
+    /// so a chronically failing slot cannot grow memory without bound.
+    eviction_log: Mutex<VecDeque<Eviction>>,
+    respawn: RespawnCtx,
+}
+
+/// Retained [`Eviction`] records (FIFO; see `WorkerRuntime::evictions`).
+const EVICTION_LOG_CAP: usize = 256;
+
+/// Everything needed to provision a replacement worker thread for any slot:
+/// the job-independent deployment state a [`WorkerCtx`] is built from, plus
+/// a handle on the backend factory.
+struct RespawnCtx {
+    alphas: Arc<Vec<u64>>,
+    r_coeffs: Arc<Vec<Vec<u64>>>,
+    t: usize,
+    z: usize,
+    /// Per-worker injected delays (empty = none; validated per job).
+    delays: Vec<Duration>,
+    recv_timeout: Duration,
+    max_deadline_misses: usize,
+    factory: Arc<BackendFactory>,
+}
+
+impl RespawnCtx {
+    fn worker_ctx(&self, wid: usize, n: usize, health: &Arc<RuntimeCounters>) -> WorkerCtx {
+        WorkerCtx {
+            id: wid,
+            n_workers: n,
+            t: self.t,
+            z: self.z,
+            alphas: self.alphas.clone(),
+            r_coeffs: self.r_coeffs.clone(),
+            delay: self.delays.get(wid).copied().unwrap_or(Duration::ZERO),
+            recv_timeout: self.recv_timeout,
+            max_deadline_misses: self.max_deadline_misses,
+            health: health.clone(),
+        }
+    }
+}
+
+fn spawn_worker(
+    ctx: WorkerCtx,
+    endpoint: Endpoint,
+    fabric: Arc<Fabric>,
+    factory: &BackendFactory,
+    bufs: Arc<BufferPool>,
+) -> std::io::Result<JoinHandle<Result<()>>> {
+    let backend = factory.make();
+    std::thread::Builder::new()
+        .name(format!("cmpc-worker-{}", ctx.id))
+        .spawn(move || worker::serve_worker(ctx, endpoint, fabric, backend, bufs))
 }
 
 impl WorkerRuntime {
@@ -53,42 +134,46 @@ impl WorkerRuntime {
     ///
     /// `config.worker_delays` is applied per worker when its length matches
     /// `N` (the per-job validation in the protocol layer rejects jobs
-    /// otherwise, so a mismatched vector never silently half-applies).
+    /// otherwise, so a mismatched vector never silently half-applies). The
+    /// factory is retained (shared) so evicted workers can be respawned
+    /// with fresh backend handles.
     pub fn provision(
         setup: &Setup,
         params: SchemeParams,
         config: &ProtocolConfig,
-        factory: &BackendFactory,
+        factory: &Arc<BackendFactory>,
     ) -> Result<WorkerRuntime> {
         let n = setup.n_workers;
-        let (fabric, mut endpoints) = Fabric::new(n, config.link_delay);
+        let (fabric, mut endpoints) =
+            Fabric::with_chaos(n, config.link_delay, config.chaos.clone());
         let bufs = BufferPool::new();
         let worker_endpoints: Vec<_> = endpoints.drain(0..n).collect();
         let master_endpoint = endpoints.remove(0);
         // Sources only ever send; their endpoints are dropped.
-        let delays_apply = config.worker_delays.len() == n;
+        let health = Arc::new(RuntimeCounters::default());
+        let respawn = RespawnCtx {
+            alphas: setup.alphas.clone(),
+            r_coeffs: setup.r_coeffs.clone(),
+            t: params.t,
+            z: params.z,
+            delays: if config.worker_delays.len() == n {
+                config.worker_delays.clone()
+            } else {
+                Vec::new()
+            },
+            recv_timeout: config.recv_timeout,
+            max_deadline_misses: config.max_deadline_misses.max(1),
+            factory: factory.clone(),
+        };
         let mut handles: Vec<JoinHandle<Result<()>>> = Vec::with_capacity(n);
         for (wid, endpoint) in worker_endpoints.into_iter().enumerate() {
-            let ctx = WorkerCtx {
-                id: wid,
-                n_workers: n,
-                t: params.t,
-                z: params.z,
-                alphas: setup.alphas.clone(),
-                r_coeffs: setup.r_coeffs.clone(),
-                delay: if delays_apply {
-                    config.worker_delays[wid]
-                } else {
-                    Duration::ZERO
-                },
-                recv_timeout: config.recv_timeout,
-            };
-            let fabric = fabric.clone();
-            let backend = factory.make();
-            let bufs = bufs.clone();
-            let spawned = std::thread::Builder::new()
-                .name(format!("cmpc-worker-{wid}"))
-                .spawn(move || worker::serve_worker(ctx, endpoint, fabric, backend, bufs));
+            let spawned = spawn_worker(
+                respawn.worker_ctx(wid, n, &health),
+                endpoint,
+                fabric.clone(),
+                factory,
+                bufs.clone(),
+            );
             match spawned {
                 Ok(h) => handles.push(h),
                 Err(e) => {
@@ -105,17 +190,22 @@ impl WorkerRuntime {
             fabric,
             router: JobRouter::new(master_endpoint),
             bufs,
-            handles,
+            handles: Mutex::new(handles),
             next_job: AtomicU64::new(0),
             n_workers: n,
             recv_timeout: config.recv_timeout,
+            health,
+            eviction_log: Mutex::new(VecDeque::new()),
+            respawn,
         })
     }
 
-    /// Claim a fresh [`JobId`]: registers the job's traffic meters on the
-    /// fabric and its receive queue on the master router. Every envelope of
-    /// the job must carry the returned id.
+    /// Claim a fresh [`JobId`]: reaps any dead workers (so the job starts
+    /// against a full complement), then registers the job's traffic meters
+    /// on the fabric and its receive queue on the master router. Every
+    /// envelope of the job must carry the returned id.
     pub fn begin_job(&self) -> JobId {
+        self.reap();
         let job = self.next_job.fetch_add(1, Ordering::Relaxed);
         self.router.open(job);
         self.fabric.begin_job(job);
@@ -124,10 +214,96 @@ impl WorkerRuntime {
 
     /// Unregister a finished (or failed) job and return its traffic
     /// snapshot. Late envelopes for the job are dropped by the router,
-    /// returning their payload buffers to the pool.
+    /// returning their payload buffers to the pool; the pool then gets a
+    /// high-water [`BufferPool::trim`] so retained capacity tracks demand.
     pub fn finish_job(&self, job: JobId) -> TrafficReport {
         self.router.close(job);
-        self.fabric.end_job(job)
+        let traffic = self.fabric.end_job(job);
+        self.bufs.trim();
+        traffic
+    }
+
+    /// Evict dead worker threads and provision replacements in their slots.
+    ///
+    /// A worker thread can die three ways: a panic, a chaos-plan kill
+    /// (simulated crash), or self-eviction after consecutive per-job
+    /// deadline misses. All three end as a finished join handle; this sweep
+    /// joins it (capturing the panic message or typed error into the
+    /// [`Eviction`] record — its pooled buffers were already returned when
+    /// its job states dropped), swaps the node's fabric endpoint for a
+    /// fresh channel, and spawns a replacement thread with the same worker
+    /// index and re-derived rng streams, so outputs stay byte-identical.
+    ///
+    /// Runs automatically at every [`WorkerRuntime::begin_job`]; callers
+    /// may also invoke it directly after a suspected fault. Returns the
+    /// number of workers respawned (0 on the healthy fast path, which costs
+    /// one `is_finished` probe per worker).
+    pub fn reap(&self) -> usize {
+        let mut handles = self.handles.lock().unwrap();
+        let mut respawned = 0;
+        for (wid, slot) in handles.iter_mut().enumerate() {
+            if !slot.is_finished() {
+                continue;
+            }
+            // Fresh endpoint first (also clears any chaos-kill mark), so
+            // the replacement starts with an empty, live channel.
+            let endpoint = self.fabric.replace_endpoint(wid);
+            let spawned = spawn_worker(
+                self.respawn.worker_ctx(wid, self.n_workers, &self.health),
+                endpoint,
+                self.fabric.clone(),
+                &self.respawn.factory,
+                self.bufs.clone(),
+            );
+            let replacement = match spawned {
+                Ok(h) => h,
+                // Spawn failed (resource exhaustion): leave the finished
+                // handle in place; the next reap retries.
+                Err(_) => continue,
+            };
+            let dead = std::mem::replace(slot, replacement);
+            let reason = match dead.join() {
+                Ok(Ok(())) => "exited (chaos kill or fabric teardown)".to_string(),
+                Ok(Err(e)) => e.to_string(),
+                Err(panic) => format!("panic: {}", panic_message(panic.as_ref())),
+            };
+            let mut log = self.eviction_log.lock().unwrap();
+            if log.len() == EVICTION_LOG_CAP {
+                log.pop_front();
+            }
+            log.push_back(Eviction {
+                worker: wid,
+                reason,
+            });
+            drop(log);
+            self.health.evictions.fetch_add(1, Ordering::Relaxed);
+            self.health.respawns.fetch_add(1, Ordering::Relaxed);
+            respawned += 1;
+        }
+        respawned
+    }
+
+    /// Snapshot of the runtime's health counters (evictions, respawns,
+    /// early decodes, deadline misses, driver aborts).
+    pub fn health(&self) -> RuntimeHealthReport {
+        self.health.snapshot()
+    }
+
+    /// Recent evictions (worker slot + reason), oldest first — the last
+    /// `EVICTION_LOG_CAP` (256) events; [`WorkerRuntime::health`] keeps
+    /// the exact lifetime counts.
+    pub fn evictions(&self) -> Vec<Eviction> {
+        self.eviction_log.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Record an early-decoded job (called by the job driver).
+    pub(crate) fn note_early_decode(&self) {
+        self.health.early_decodes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a driver-side abort broadcast (called on the job error path).
+    pub(crate) fn note_job_aborted(&self) {
+        self.health.jobs_aborted.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn fabric(&self) -> &Arc<Fabric> {
@@ -146,10 +322,11 @@ impl WorkerRuntime {
         self.n_workers
     }
 
-    /// Persistent worker threads alive in this runtime (always `N`; the
-    /// reuse tests assert no per-job growth).
+    /// Persistent worker threads alive in this runtime (always `N`: the
+    /// reaper replaces dead slots in place; the reuse tests assert no
+    /// per-job growth).
     pub fn worker_threads(&self) -> usize {
-        self.handles.len()
+        self.handles.lock().unwrap().len()
     }
 
     /// The per-receive timeout jobs run under.
@@ -160,6 +337,16 @@ impl WorkerRuntime {
     /// Jobs started over the runtime's lifetime.
     pub fn jobs_started(&self) -> u64 {
         self.next_job.load(Ordering::Relaxed)
+    }
+}
+
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = panic.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -177,7 +364,8 @@ fn shutdown(fabric: &Arc<Fabric>, handles: &mut Vec<JoinHandle<Result<()>>>) {
     for h in handles.drain(..) {
         match h.join() {
             // Job-level Results were already reported to their jobs as
-            // JobError control messages; nothing to do on Ok.
+            // JobError control messages; self-eviction errors were either
+            // reaped (and logged) or belong to a runtime being torn down.
             Ok(_) => {}
             Err(panic) => {
                 if !std::thread::panicking() {
@@ -190,7 +378,8 @@ fn shutdown(fabric: &Arc<Fabric>, handles: &mut Vec<JoinHandle<Result<()>>>) {
 
 impl Drop for WorkerRuntime {
     fn drop(&mut self) {
-        shutdown(&self.fabric, &mut self.handles);
+        let mut handles = self.handles.lock().unwrap();
+        shutdown(&self.fabric, &mut handles);
     }
 }
 
@@ -201,18 +390,22 @@ mod tests {
     use crate::mpc::protocol::prepare_setup;
     use crate::runtime::BackendChoice;
 
-    #[test]
-    fn provision_and_clean_shutdown() {
+    fn provision_example() -> WorkerRuntime {
         let scheme = AgeCmpc::with_optimal_lambda(2, 2, 2);
         let setup = prepare_setup(&scheme).unwrap();
-        let factory = BackendFactory::new(&BackendChoice::Native).unwrap();
-        let rt = WorkerRuntime::provision(
+        let factory = Arc::new(BackendFactory::new(&BackendChoice::Native).unwrap());
+        WorkerRuntime::provision(
             &setup,
             scheme.params(),
             &ProtocolConfig::default(),
             &factory,
         )
-        .unwrap();
+        .unwrap()
+    }
+
+    #[test]
+    fn provision_and_clean_shutdown() {
+        let rt = provision_example();
         assert_eq!(rt.worker_threads(), 17);
         assert_eq!(rt.n_workers(), 17);
         let j0 = rt.begin_job();
@@ -221,6 +414,15 @@ mod tests {
         assert_eq!(rt.jobs_started(), 2);
         rt.finish_job(j0);
         rt.finish_job(j1);
+        assert_eq!(rt.health(), RuntimeHealthReport::default());
         drop(rt); // joins all 17 threads without hanging
+    }
+
+    #[test]
+    fn reap_is_a_noop_on_healthy_workers() {
+        let rt = provision_example();
+        assert_eq!(rt.reap(), 0);
+        assert_eq!(rt.worker_threads(), 17);
+        assert!(rt.evictions().is_empty());
     }
 }

@@ -19,23 +19,34 @@
 //! Scaled-`H` copies and mask matrices live in per-thread buffers reused
 //! across jobs, so a warm worker performs no fabric-payload allocations.
 //! G-shares from faster peers arriving before this worker's own compute are
-//! buffered per job; a receive timeout (a peer thread died mid-job) fails
-//! the pending jobs with a typed [`ControlMsg::JobError`] instead of
-//! deadlocking, and the thread keeps serving.
+//! buffered per job.
+//!
+//! **Per-job deadlines.** Every in-flight job tracks the instant of its
+//! last envelope; a job that makes no progress for `recv_timeout` is failed
+//! with a typed [`ControlMsg::JobError`] — *only that job*. A healthy
+//! concurrent job keeps flowing while a sibling starves on a dead peer (the
+//! straggler-isolation contract pinned by `tests/error_paths.rs`). A worker
+//! that hits `max_deadline_misses` deadline-miss rounds *with no envelope
+//! received in between* (any traffic proves the link alive and resets the
+//! count) self-evicts — failing its remaining jobs loudly and exiting its
+//! loop — so the runtime's reaper can replace it; a worker killed by the
+//! chaos plan exits the same way a crashed thread would, without reporting
+//! anything.
 //!
 //! Overhead counters are incremented exactly where the proofs of
 //! Corollaries 10–11 place them, so integration tests can assert
 //! `measured == ξ, σ` per worker and per job.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::error::Result;
+use crate::error::{CmpcError, Result};
 use crate::ff;
 use crate::matrix::FpMat;
-use crate::metrics::WorkerCounters;
+use crate::metrics::{RuntimeCounters, WorkerCounters};
 use crate::mpc::network::{BufferPool, ControlMsg, Endpoint, Fabric, JobId, Payload, PooledMat};
 use crate::runtime::MatmulBackend;
 use crate::util::rng::ChaChaRng;
@@ -55,12 +66,17 @@ pub struct WorkerCtx {
     pub r_coeffs: Arc<Vec<Vec<u64>>>,
     /// Injected compute delay per job (straggler model).
     pub delay: Duration,
-    /// How long to wait mid-job before declaring peers dead.
+    /// Per-job deadline: a job with no traffic for this long is failed
+    /// (that job only — concurrent jobs keep their own deadlines).
     pub recv_timeout: Duration,
+    /// Consecutive deadline-miss rounds after which the worker self-evicts
+    /// for the runtime's reaper to replace.
+    pub max_deadline_misses: usize,
+    /// Runtime-level health counters (deadline misses are recorded here).
+    pub health: Arc<RuntimeCounters>,
 }
 
 /// In-flight state of one job at one worker.
-#[derive(Default)]
 struct JobState {
     /// Per-job seed + overhead counters from [`ControlMsg::JobStart`].
     start: Option<(u64, Arc<WorkerCounters>)>,
@@ -72,6 +88,22 @@ struct JobState {
     i_share: Option<PooledMat>,
     /// Peer G-shares folded into `i_share` so far.
     received: usize,
+    /// Deadline basis: refreshed on every envelope of this job. The job
+    /// expires `recv_timeout` after this instant.
+    last_progress: Instant,
+}
+
+impl JobState {
+    fn new() -> JobState {
+        JobState {
+            start: None,
+            shares: None,
+            early_g: Vec::new(),
+            i_share: None,
+            received: 0,
+            last_progress: Instant::now(),
+        }
+    }
 }
 
 /// Per-thread compute buffers reused across every job the worker serves.
@@ -90,9 +122,12 @@ struct ComputeScratch {
 /// The loop is a per-job state machine keyed by the envelopes' [`JobId`]:
 /// messages from concurrent jobs interleave arbitrarily and are buffered
 /// per job until that job can advance. A job-level failure (backend error,
-/// unreachable peer, receive timeout) is reported to the master as a
-/// [`ControlMsg::JobError`] and only kills that job — the thread keeps
-/// serving.
+/// unreachable peer, an expired per-job deadline) is reported to the master
+/// as a [`ControlMsg::JobError`] and only kills that job — the thread keeps
+/// serving. The loop itself exits three ways: a `Shutdown` (clean runtime
+/// teardown), a chaos kill (simulated crash — no report, state dropped),
+/// or self-eviction after `max_deadline_misses` consecutive deadline-miss
+/// rounds (returned as a typed error for the reaper's eviction record).
 pub fn serve_worker(
     ctx: WorkerCtx,
     endpoint: Endpoint,
@@ -102,13 +137,20 @@ pub fn serve_worker(
 ) -> Result<()> {
     let mut jobs: HashMap<JobId, JobState> = HashMap::new();
     let mut scratch = ComputeScratch::default();
-    // Ring of recently failed jobs: late envelopes from their slower peers
-    // must be dropped, not resurrected into phantom `JobState`s that would
-    // pin pooled buffers forever and re-fail on the next timeout. Job ids
-    // are never reused, so a tombstone can only ever suppress stale
-    // traffic; the ring is bounded because failures are rare and a
-    // straggling peer delivers within one receive window.
-    let mut failed: VecDeque<JobId> = VecDeque::with_capacity(FAILED_RING);
+    // Tombstones of recently failed/aborted jobs: late envelopes from
+    // their slower peers must be dropped, not resurrected into phantom
+    // `JobState`s that would pin pooled buffers and re-fail on the next
+    // timeout. Job ids are never reused, so a tombstone can only ever
+    // suppress stale traffic. Since early decode made JobAbort a routine
+    // per-job event (not just a failure path), the set is sized so a peer
+    // would have to straggle *hundreds of jobs* behind before its
+    // tombstone rotates out — and membership stays O(1) per envelope.
+    let mut failed = Tombstones::new();
+    // Deadline-miss rounds since the last received envelope (self-eviction
+    // trigger): a worker that starves repeatedly with no traffic at all in
+    // between is likely wedged behind a partitioned link and is cheaper to
+    // replace than to trust.
+    let mut consecutive_misses = 0usize;
     loop {
         let env = if jobs.is_empty() {
             // Idle: block until the next job (or shutdown). A closed fabric
@@ -118,54 +160,109 @@ pub fn serve_worker(
                 Err(_) => return Ok(()),
             }
         } else {
-            match endpoint.recv_timeout_raw(ctx.recv_timeout) {
+            // Wait no longer than the earliest per-job deadline.
+            let next_expiry = jobs
+                .values()
+                .map(|st| st.last_progress + ctx.recv_timeout)
+                .min()
+                .expect("jobs nonempty");
+            let wait = next_expiry.saturating_duration_since(Instant::now());
+            match endpoint.recv_timeout_raw(wait) {
                 Ok(env) => env,
                 Err(RecvTimeoutError::Timeout) => {
-                    // A peer thread died mid-job: fail every pending job
-                    // with a typed error instead of deadlocking, then keep
-                    // serving new jobs. (Per-job deadlines that spare
-                    // healthy concurrent jobs are a ROADMAP follow-up.)
-                    for (job, _state) in jobs.drain() {
-                        remember_failed(&mut failed, job);
+                    // Fail ONLY the expired jobs — a healthy concurrent job
+                    // survives its sibling's dead peer.
+                    let now = Instant::now();
+                    let expired: Vec<JobId> = jobs
+                        .iter()
+                        .filter(|(_, st)| {
+                            now.saturating_duration_since(st.last_progress)
+                                >= ctx.recv_timeout
+                        })
+                        .map(|(&job, _)| job)
+                        .collect();
+                    if expired.is_empty() {
+                        continue; // raced a refresh; recompute the wait
+                    }
+                    for job in expired {
+                        jobs.remove(&job);
+                        failed.insert(job);
+                        ctx.health.deadline_misses.fetch_add(1, Ordering::Relaxed);
                         let _ = fabric.send(
                             job,
                             ctx.id,
                             fabric.master_id(),
                             Payload::Control(ControlMsg::JobError(format!(
-                                "worker {}: no job traffic within {:?} (dead peer?)",
+                                "worker {}: job deadline expired — no job-{job} \
+                                 traffic within {:?} (dead peer?)",
                                 ctx.id, ctx.recv_timeout
                             ))),
                         );
+                    }
+                    consecutive_misses += 1;
+                    if consecutive_misses >= ctx.max_deadline_misses {
+                        // Fail the still-healthy in-flight jobs loudly
+                        // before leaving: their masters should fail fast on
+                        // a JobError, not sit out their own full deadline
+                        // wondering where this worker went.
+                        for (job, _state) in jobs.drain() {
+                            let _ = fabric.send(
+                                job,
+                                ctx.id,
+                                fabric.master_id(),
+                                Payload::Control(ControlMsg::JobError(format!(
+                                    "worker {}: self-evicting (consecutive \
+                                     deadline misses)",
+                                    ctx.id
+                                ))),
+                            );
+                        }
+                        return Err(CmpcError::Fabric(format!(
+                            "worker {}: self-evicted after {consecutive_misses} \
+                             consecutive deadline-miss rounds",
+                            ctx.id
+                        )));
                     }
                     continue;
                 }
                 Err(RecvTimeoutError::Disconnected) => return Ok(()),
             }
         };
+        // Any received envelope proves the link is alive, so deadline-miss
+        // rounds are only "consecutive" when nothing at all arrives between
+        // them — isolated dead-peer incidents spread over a long serving
+        // life must not accumulate into a spurious self-eviction.
+        consecutive_misses = 0;
         let job = env.job;
         if matches!(env.payload, Payload::Control(ControlMsg::Shutdown)) {
             return Ok(());
         }
-        if failed.contains(&job) {
+        if failed.contains(job) {
             continue; // stale traffic for a job this worker already failed
         }
         match env.payload {
             Payload::Control(ControlMsg::JobAbort) => {
                 // The driver gave up on this job (a peer failed or its
-                // receive timed out): drop whatever state we hold and
+                // receive timed out) or the master early-decoded and no
+                // longer needs the tail: drop whatever state we hold and
                 // tombstone the id so a slow peer's G-share cannot
                 // resurrect it.
                 jobs.remove(&job);
-                remember_failed(&mut failed, job);
+                failed.insert(job);
             }
             Payload::Control(ControlMsg::JobStart { seed, counters }) => {
-                jobs.entry(job).or_default().start = Some((seed, counters));
+                let st = jobs.entry(job).or_insert_with(JobState::new);
+                st.start = Some((seed, counters));
+                st.last_progress = Instant::now();
             }
             Payload::Shares { fa, fb } => {
-                jobs.entry(job).or_default().shares = Some((fa, fb));
+                let st = jobs.entry(job).or_insert_with(JobState::new);
+                st.shares = Some((fa, fb));
+                st.last_progress = Instant::now();
             }
             Payload::GShare(g) => {
-                let st = jobs.entry(job).or_default();
+                let st = jobs.entry(job).or_insert_with(JobState::new);
+                st.last_progress = Instant::now();
                 if let Some(i_share) = st.i_share.as_mut() {
                     let (_, counters) = st.start.as_ref().expect("computed implies started");
                     counters.add_stored(g.len() as u64);
@@ -179,7 +276,7 @@ pub fn serve_worker(
             // report the routing bug for that job and drop its state.
             other => {
                 jobs.remove(&job);
-                remember_failed(&mut failed, job);
+                failed.insert(job);
                 let _ = fabric.send(
                     job,
                     ctx.id,
@@ -200,7 +297,14 @@ pub fn serve_worker(
                 Ok(false) => {}
                 Err(e) => {
                     jobs.remove(&job);
-                    remember_failed(&mut failed, job);
+                    failed.insert(job);
+                    if fabric.chaos_killed(ctx.id) {
+                        // The chaos plan killed this worker mid-send: die
+                        // like a crashed thread — no JobError (a crashed
+                        // node cannot report), state dropped (its pooled
+                        // buffers return to the pool as the maps unwind).
+                        return Ok(());
+                    }
                     let _ = fabric.send(
                         job,
                         ctx.id,
@@ -216,14 +320,42 @@ pub fn serve_worker(
     }
 }
 
-/// Tombstone capacity for the recently-failed ring (see `serve_worker`).
-const FAILED_RING: usize = 64;
+/// Tombstone capacity for the recently-failed/aborted set (see
+/// `serve_worker`). Early decode aborts every job at its stragglers, so
+/// this is sized for routine use: a stale envelope only slips through if
+/// its sender is more than `FAILED_RING` jobs behind the present.
+const FAILED_RING: usize = 1024;
 
-fn remember_failed(failed: &mut VecDeque<JobId>, job: JobId) {
-    if failed.len() == FAILED_RING {
-        failed.pop_front();
+/// Bounded tombstone set: O(1) membership (the per-envelope hot path) with
+/// FIFO eviction once `FAILED_RING` ids are retained.
+struct Tombstones {
+    order: VecDeque<JobId>,
+    set: HashSet<JobId>,
+}
+
+impl Tombstones {
+    fn new() -> Tombstones {
+        Tombstones {
+            order: VecDeque::with_capacity(FAILED_RING),
+            set: HashSet::with_capacity(FAILED_RING),
+        }
     }
-    failed.push_back(job);
+
+    fn contains(&self, job: JobId) -> bool {
+        self.set.contains(&job)
+    }
+
+    fn insert(&mut self, job: JobId) {
+        if !self.set.insert(job) {
+            return; // already tombstoned; keep its original eviction slot
+        }
+        if self.order.len() == FAILED_RING {
+            if let Some(evicted) = self.order.pop_front() {
+                self.set.remove(&evicted);
+            }
+        }
+        self.order.push_back(job);
+    }
 }
 
 /// Push one job as far as its buffered state allows. Returns `Ok(true)`

@@ -148,4 +148,35 @@ fn steady_state_kernels_do_not_allocate() {
         delta, 0,
         "warm BufferPool loan/return cycle performed {delta} heap allocations"
     );
+
+    // --- BufferPool high-water trim on the serving path: a huge-m job
+    // followed by small-m jobs must release the peak buffers (RSS-creep
+    // guard). Runs after the zero-alloc windows above — provisioning a
+    // deployment allocates freely. ---
+    use cmpc::codes::SchemeParams;
+    use cmpc::mpc::protocol::ProtocolConfig;
+    use cmpc::{Deployment, SchemeSpec};
+    let dep = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        SchemeParams::new(2, 2, 2),
+        ProtocolConfig::builder().threads(1).build(),
+    )
+    .unwrap();
+    let big_a = FpMat::random(&mut rng, 64, 64);
+    let big_b = FpMat::random(&mut rng, 64, 64);
+    assert!(dep.execute_seeded(&big_a, &big_b, 1).unwrap().verified);
+    let after_big = dep.runtime().buffers().free_capacity_scalars();
+    let small_a = FpMat::random(&mut rng, 8, 8);
+    let small_b = FpMat::random(&mut rng, 8, 8);
+    // The big job's own finish-trim sees its huge loans as recent demand
+    // and keeps everything; once small jobs re-baseline demand, the
+    // runtime's end-of-job trims release the m=64-sized buffers.
+    for seed in 2..6 {
+        assert!(dep.execute_seeded(&small_a, &small_b, seed).unwrap().verified);
+    }
+    let after_small = dep.runtime().buffers().free_capacity_scalars();
+    assert!(
+        after_small < after_big / 4,
+        "trim kept {after_small} of {after_big} scalars after demand collapsed"
+    );
 }

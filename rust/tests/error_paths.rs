@@ -8,6 +8,7 @@ use std::time::Duration;
 use cmpc::codes::{AgeCmpc, CmpcScheme, PolyDotCmpc, SchemeParams};
 use cmpc::coordinator::{Coordinator, CoordinatorConfig};
 use cmpc::matrix::FpMat;
+use cmpc::mpc::chaos::{ChaosPlan, FaultAction, FaultRule};
 use cmpc::mpc::master::run_master;
 use cmpc::mpc::network::{Fabric, JobRouter};
 use cmpc::mpc::protocol::ProtocolConfig;
@@ -124,19 +125,21 @@ fn alpha_space_exhaustion_is_typed() {
 #[test]
 fn master_reports_insufficient_workers() {
     // 2 provisioned workers cannot meet the t²+z = 6 reconstruction quota.
-    let (_fabric, mut endpoints) = Fabric::new(2, None);
+    let (fabric, mut endpoints) = Fabric::new(2, None);
     let router = JobRouter::new(endpoints.remove(2)); // node id 2 = master
     let alphas = Arc::new(vec![1u64, 2]);
     let pool = WorkerPool::new(1);
     let scratch = ScratchPool::for_pool(&pool);
     let err = run_master(
         &router,
+        &fabric,
         0,
         &alphas,
         2,
         2,
         2,
         Duration::from_millis(100),
+        false,
         &pool,
         &scratch,
     )
@@ -155,7 +158,7 @@ fn dead_worker_surfaces_recv_timeout_not_deadlock() {
     // A worker thread that dies mid-job means its I-share never arrives;
     // the master must surface a typed Fabric error within the configured
     // receive window instead of blocking forever.
-    let (_fabric, mut endpoints) = Fabric::new(1, None);
+    let (fabric, mut endpoints) = Fabric::new(1, None);
     let router = JobRouter::new(endpoints.remove(1)); // node id 1 = master
     router.open(0);
     let alphas = Arc::new(vec![1u64]);
@@ -164,18 +167,93 @@ fn dead_worker_surfaces_recv_timeout_not_deadlock() {
     let t0 = std::time::Instant::now();
     let err = run_master(
         &router,
+        &fabric,
         0,
         &alphas,
         1,
         1,
         0,
         Duration::from_millis(20),
+        false,
         &pool,
         &scratch,
     )
     .unwrap_err();
     assert!(matches!(err, CmpcError::Fabric(_)), "{err}");
     assert!(t0.elapsed() < Duration::from_secs(5), "did not time out promptly");
+}
+
+#[test]
+fn per_job_deadline_spares_healthy_concurrent_job() {
+    // One peer is made mute *for one job only* (every envelope to worker 0
+    // tagged job 0 is dropped by the chaos plan — the "dead peer from this
+    // job's perspective" model). The victim job must fail with a typed
+    // per-job deadline error; a healthy job running concurrently on the
+    // same deployment — and therefore on the same starved workers — must
+    // complete byte-identically to its solo run.
+    let params = SchemeParams::try_new(2, 2, 2).unwrap();
+    let seed_healthy = 0xFEED;
+
+    // Solo reference for the healthy job on a fault-free deployment.
+    let mut rng = ChaChaRng::seed_from_u64(4);
+    let a = FpMat::random(&mut rng, 8, 8);
+    let b = FpMat::random(&mut rng, 8, 8);
+    let solo = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::default(),
+    )
+    .unwrap();
+    let solo_out = solo.execute_seeded(&a, &b, seed_healthy).unwrap();
+    drop(solo);
+
+    let plan = ChaosPlan::new()
+        .rule(FaultRule::new(FaultAction::Drop).to_node(0).job(0))
+        .into_shared();
+    let cfg = ProtocolConfig::builder()
+        .recv_timeout(Duration::from_millis(400))
+        .chaos(plan)
+        .build();
+    let dep = Deployment::provision(SchemeSpec::Age { lambda: None }, params, cfg).unwrap();
+
+    let (victim_res, healthy_out) = std::thread::scope(|s| {
+        // The victim claims JobId 0 (first begin_job on this runtime);
+        // the chaos rule targets exactly that job.
+        let victim = s.spawn(|| dep.execute_seeded(&a, &b, 0xBAD));
+        // Give the victim a comfortable head start on claiming job 0.
+        std::thread::sleep(Duration::from_millis(100));
+        let healthy = dep.execute_seeded(&a, &b, seed_healthy).unwrap();
+        (victim.join().unwrap(), healthy)
+    });
+
+    // Victim: workers 1..N starve on worker 0's G-share for job 0 and fail
+    // it on their per-job deadline; the driver surfaces a typed error.
+    let err = victim_res.unwrap_err();
+    assert!(matches!(err, CmpcError::Fabric(_)), "{err}");
+    assert!(err.to_string().contains("deadline"), "{err}");
+
+    // Healthy sibling: unaffected, byte-identical to its solo run.
+    assert!(healthy_out.verified);
+    assert_eq!(healthy_out.y, solo_out.y, "healthy job output diverged");
+    assert_eq!(
+        healthy_out.traffic.worker_to_worker,
+        solo_out.traffic.worker_to_worker
+    );
+    for (wc, solo_wc) in healthy_out
+        .worker_counters
+        .iter()
+        .zip(solo_out.worker_counters.iter())
+    {
+        assert_eq!(wc.mults(), solo_wc.mults());
+        assert_eq!(wc.stored(), solo_wc.stored());
+    }
+    assert!(dep.health().deadline_misses >= 1);
+
+    // The deployment keeps serving after the victim's failure (and no
+    // worker was evicted — starving on one job is not thread death).
+    let again = dep.execute_seeded(&a, &b, 7).unwrap();
+    assert!(again.verified);
+    assert_eq!(dep.health().evictions, 0);
 }
 
 #[test]

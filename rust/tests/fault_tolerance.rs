@@ -1,0 +1,256 @@
+//! Fault-tolerance acceptance suite: chaos-killed workers, the early-decode
+//! fast path, worker eviction/respawn, straggler-tail cancellation, and
+//! corruption detection — for every constructible scheme.
+//!
+//! Kept to a single `#[test]` so the OS thread-count measurements cannot be
+//! perturbed by sibling tests provisioning runtimes in the same process.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cmpc::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc, SchemeParams};
+use cmpc::matrix::FpMat;
+use cmpc::mpc::chaos::{ChaosPlan, FaultAction, FaultRule, PayloadClass};
+use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::util::rng::ChaChaRng;
+use cmpc::{CmpcError, Deployment, SchemeSpec};
+
+/// Threads of this process per the kernel (Linux); `None` elsewhere.
+fn os_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+/// Drive the reaper until `want` respawns happened (worker threads exit
+/// asynchronously after a chaos kill, so poll briefly).
+fn wait_for_respawns(dep: &Deployment, want: u64) {
+    let t0 = Instant::now();
+    loop {
+        dep.runtime().reap();
+        if dep.health().respawns >= want {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "respawns stuck at {} (want {want}); evictions: {:?}",
+            dep.health().respawns,
+            dep.runtime().evictions()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn chaos_killed_workers_early_decode_and_respawn() {
+    let params = SchemeParams::new(2, 2, 2); // t²+z = 6, z = 2
+    let m = 8;
+    let mut rng = ChaChaRng::seed_from_u64(0xFA17);
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    let y_expect = a.transpose().matmul(&b);
+
+    // ---- 1. z workers killed mid-Phase-2, every scheme: the early-decode
+    // path still yields the byte-identical product, the dead threads are
+    // evicted and respawned, and the next job runs on a full complement. ----
+    let schemes: Vec<Arc<dyn CmpcScheme>> = vec![
+        Arc::new(AgeCmpc::with_optimal_lambda(2, 2, 2)),
+        Arc::new(PolyDotCmpc::new(2, 2, 2)),
+        Arc::new(EntangledCmpc::new(2, 2, 2)),
+    ];
+    for (idx, scheme) in schemes.into_iter().enumerate() {
+        let n = scheme.n_workers();
+        let z = scheme.params().z;
+        let name = scheme.name();
+
+        // Fault-free reference (default full-drain path).
+        let reference = Deployment::for_scheme(
+            scheme.clone(),
+            ProtocolConfig::builder().threads(1).build(),
+        )
+        .unwrap();
+        let y_ref = {
+            let out = reference.execute_seeded(&a, &b, 0x5EED).unwrap();
+            assert!(out.verified, "{name}: reference run");
+            assert!(!out.early_decoded);
+            assert_eq!(out.y, y_expect, "{name}: reference product");
+            out.y
+        };
+        drop(reference);
+
+        // Chaos run: deterministic seed-driven kills after the G-exchange.
+        let plan = ChaosPlan::kill_k_workers_after_exchange(0xC0FFEE + idx as u64, n, z);
+        let dep = Deployment::for_scheme(
+            scheme,
+            ProtocolConfig::builder()
+                .threads(1)
+                .early_decode(true)
+                .recv_timeout(Duration::from_secs(10))
+                .chaos(plan.into_shared())
+                .build(),
+        )
+        .unwrap();
+        let baseline_threads = os_thread_count();
+
+        let out = dep.execute_seeded(&a, &b, 0x5EED).unwrap_or_else(|e| {
+            panic!("{name}: job with {z} killed workers should early-decode: {e}")
+        });
+        assert!(out.verified, "{name}");
+        assert!(out.early_decoded, "{name}: fast path not taken");
+        assert_eq!(out.y, y_ref, "{name}: decode diverged from fault-free run");
+        assert_eq!(out.stragglers_tolerated, n - 6, "{name}");
+
+        // The kill victims died during their compute phase; evict + respawn.
+        wait_for_respawns(&dep, z as u64);
+        let health = dep.health();
+        assert_eq!(health.evictions, z as u64, "{name}");
+        assert_eq!(health.respawns, z as u64, "{name}");
+        assert!(health.early_decodes >= 1, "{name}");
+        assert_eq!(dep.runtime().evictions().len(), z, "{name}");
+        assert_eq!(dep.worker_threads(), n, "{name}");
+        if let (Some(before), Some(after)) = (baseline_threads, os_thread_count()) {
+            assert_eq!(
+                after, before,
+                "{name}: thread count not flat after respawn"
+            );
+        }
+
+        // The job following the faults runs on the respawned complement and
+        // is byte-identical (kill rules are exhausted).
+        let next = dep.execute_seeded(&a, &b, 0x5EED).unwrap();
+        assert!(next.verified, "{name}: post-respawn job");
+        assert_eq!(next.y, y_ref, "{name}: post-respawn decode diverged");
+        assert_eq!(dep.health().evictions, z as u64, "{name}: extra evictions");
+        drop(dep);
+    }
+
+    // ---- 2. Straggler tail: early decode turns tail latency into a
+    // measured win. Two workers' own I-share leg sleeps 300 ms; the
+    // full-drain job must wait it out, the early-decode job must not. ----
+    let delay = Duration::from_millis(300);
+    let straggler_plan = || {
+        let mut plan = ChaosPlan::new();
+        for victim in [2usize, 9] {
+            plan = plan.rule(
+                FaultRule::new(FaultAction::Delay(delay))
+                    .from_node(victim)
+                    .class(PayloadClass::IShare),
+            );
+        }
+        plan.into_shared()
+    };
+    let dep_full = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::builder()
+            .threads(1)
+            .chaos(straggler_plan())
+            .build(),
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let out_full = dep_full.execute_seeded(&a, &b, 0x5EED).unwrap();
+    let full_elapsed = t0.elapsed();
+    assert!(out_full.verified && !out_full.early_decoded);
+    assert!(
+        full_elapsed >= delay,
+        "full drain returned in {full_elapsed:?} despite a {delay:?} straggler"
+    );
+    drop(dep_full);
+    let dep_early = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::builder()
+            .threads(1)
+            .early_decode(true)
+            .chaos(straggler_plan())
+            .build(),
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let out_early = dep_early.execute_seeded(&a, &b, 0x5EED).unwrap();
+    let early_elapsed = t0.elapsed();
+    assert!(out_early.verified && out_early.early_decoded);
+    assert_eq!(out_early.y, out_full.y);
+    assert!(
+        early_elapsed < full_elapsed,
+        "early decode ({early_elapsed:?}) did not beat the full drain ({full_elapsed:?})"
+    );
+    drop(dep_early);
+
+    // ---- 3. Garbled share: corruption in flight is detected, typed, and
+    // non-poisonous (the rule is one-shot; the next job is clean). ----
+    let garble_plan = ChaosPlan::new()
+        .rule(
+            FaultRule::new(FaultAction::Garble)
+                .to_node(2)
+                .class(PayloadClass::Shares)
+                .limit(1),
+        )
+        .into_shared();
+    let dep = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::builder().threads(1).chaos(garble_plan).build(),
+    )
+    .unwrap();
+    let err = dep.execute_seeded(&a, &b, 0x5EED).unwrap_err();
+    assert!(matches!(err, CmpcError::NotDecodable(_)), "{err}");
+    let clean = dep.execute_seeded(&a, &b, 0x5EED).unwrap();
+    assert!(clean.verified);
+    assert_eq!(clean.y, y_expect);
+    drop(dep);
+
+    // ---- 4. Deadline-miss self-eviction: worker 5's *inbound* G-shares
+    // for job 0 are dropped, so it alone starves mid-exchange, misses its
+    // per-job deadline (limit 1), reports a typed JobError, and
+    // self-evicts — strictly before the driver's abort can reach it, since
+    // self-eviction happens in the same timeout round that sends the
+    // JobError the driver reacts to. The reaper replaces it and the
+    // deployment serves clean jobs again. ----
+    let starve_plan = ChaosPlan::new()
+        .rule(
+            FaultRule::new(FaultAction::Drop)
+                .to_node(5)
+                .class(PayloadClass::GShare)
+                .job(0),
+        )
+        .into_shared();
+    let dep = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::builder()
+            .threads(1)
+            .recv_timeout(Duration::from_millis(200))
+            .max_deadline_misses(1)
+            .chaos(starve_plan)
+            .build(),
+    )
+    .unwrap();
+    let n = dep.n_workers();
+    let baseline_threads = os_thread_count();
+    let err = dep.execute_seeded(&a, &b, 0xDEAD).unwrap_err();
+    assert!(matches!(err, CmpcError::Fabric(_)), "{err}");
+    assert!(err.to_string().contains("deadline"), "{err}");
+    wait_for_respawns(&dep, 1);
+    let evictions = dep.runtime().evictions();
+    assert_eq!(evictions.len(), 1);
+    assert_eq!(evictions[0].worker, 5);
+    assert!(
+        evictions[0].reason.contains("self-evicted"),
+        "{}",
+        evictions[0].reason
+    );
+    assert_eq!(dep.health().deadline_misses, 1);
+    assert!(dep.health().jobs_aborted >= 1);
+    assert_eq!(dep.worker_threads(), n);
+    if let (Some(before), Some(after)) = (baseline_threads, os_thread_count()) {
+        assert_eq!(after, before, "thread count not flat after self-eviction respawn");
+    }
+    let clean = dep.execute_seeded(&a, &b, 0xF00D).unwrap();
+    assert!(clean.verified);
+    assert_eq!(clean.y, y_expect);
+}
