@@ -1,4 +1,4 @@
-//! Bench PR2/PR3/PR4 — the serving core's perf trajectory.
+//! Bench PR2/PR3/PR4/PR5 — the serving core's perf trajectory.
 //!
 //! Runs the Fig. 2 anchor shapes (Example-1 parameters, serving-sized
 //! matrices) through a provisioned `Deployment` at 1/2/4/8 pool threads,
@@ -9,27 +9,36 @@
 //! provision-once persistent runtime vs. provisioning (spawning N worker
 //! threads + solving setup) per job — the cost the persistent runtime
 //! amortizes away. PR 4 adds a **fault** scenario: e2e latency with
-//! 0/1/2 injected stragglers (chaos-delayed I-share legs), full-quota wait
-//! vs the early-decode fast path — the measured form of the code's
-//! straggler tolerance. Results are printed in the in-tree bench format
-//! *and* emitted as machine-readable `BENCH_4.json` so later PRs can diff
-//! the trajectory.
+//! 0/1/2 injected stragglers, full-quota wait vs the early-decode fast
+//! path — since PR 5 the stragglers sit behind shaped slow *links*
+//! (in-flight latency on their inbound G-shares), so the fast path's
+//! abort-ack drain stays off the straggler's clock and the win is real.
+//! PR 5 adds a **wire** scenario: each scheme's job runs once through the
+//! loopback TCP cluster (real sockets, framed codec) and the measured
+//! worker↔worker bytes are reported against the analytical ζ — framing
+//! overhead must stay under 5%. Results are printed in the in-tree bench
+//! format *and* emitted as machine-readable `BENCH_5.json` so later PRs
+//! can diff the trajectory.
 //!
 //! Usage (from `rust/`):
 //!
 //! ```sh
-//! cargo bench --bench perf_core                      # full run → ../BENCH_4.json
+//! cargo bench --bench perf_core                      # full run → ../BENCH_5.json
 //! cargo bench --bench perf_core -- --smoke --out /tmp/b.json   # CI schema smoke
 //! ```
 
 use std::time::{Duration, Instant};
 
+use cmpc::analysis;
 use cmpc::benchkit::{peak_rss_bytes, per_second, Json};
 use cmpc::codes::SchemeParams;
 use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
 use cmpc::matrix::FpMat;
-use cmpc::mpc::chaos::{ChaosPlan, FaultAction, FaultRule, PayloadClass};
+use cmpc::mpc::chaos::PayloadClass;
 use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::runtime::manifest::TopologyManifest;
+use cmpc::transport::node::run_local_cluster;
+use cmpc::transport::shaper::{LinkShaper, LinkSpec, ShapeRule};
 use cmpc::util::rng::ChaChaRng;
 use cmpc::{Deployment, SchemeSpec};
 
@@ -122,10 +131,12 @@ struct FaultCase {
     early_decode_win: f64,
 }
 
-/// Straggler resilience: `stragglers` workers' own I-share leg sleeps
-/// `delay` (a chaos `Delay` rule — their G-exchange contribution is on
-/// time, the paper's tolerated-dropout regime). The full-quota path eats
-/// the delay in its tail wait; the early-decode path does not.
+/// Straggler resilience: `stragglers` workers sit behind slow links —
+/// every inbound G-share into them is shaped `+delay` *in flight* (their
+/// own compute and outbound shares are on time, so every other worker
+/// finishes promptly). The full-quota path waits for the victims' late
+/// I-shares; the early-decode path aborts them while they idle-wait, so
+/// they ack instantly and the job returns with exact counters.
 fn run_fault(
     s: usize,
     t: usize,
@@ -140,20 +151,21 @@ fn run_fault(
     let a = FpMat::random(&mut rng, m, m);
     let b = FpMat::random(&mut rng, m, m);
     let run = |early: bool| -> u64 {
-        let mut plan = ChaosPlan::new();
+        let mut shaper = LinkShaper::new();
         for victim in 0..stragglers {
-            plan = plan.rule(
-                FaultRule::new(FaultAction::Delay(delay))
-                    .from_node(victim)
-                    .class(PayloadClass::IShare),
+            shaper = shaper.rule(
+                ShapeRule::new(LinkSpec::latency(delay))
+                    .to_node(victim)
+                    .class(PayloadClass::GShare),
             );
         }
-        let config = ProtocolConfig::builder()
+        let mut config = ProtocolConfig::builder()
             .verify(false)
-            .early_decode(early)
-            .chaos(plan.into_shared())
-            .build();
-        let dep = Deployment::provision(SchemeSpec::Age { lambda: None }, params, config)
+            .early_decode(early);
+        if stragglers > 0 {
+            config = config.shaper(shaper.into_shared());
+        }
+        let dep = Deployment::provision(SchemeSpec::Age { lambda: None }, params, config.build())
             .expect("provision");
         let mut best = u64::MAX;
         for i in 0..iters {
@@ -176,6 +188,63 @@ fn run_fault(
         e2e_full_ns,
         e2e_early_ns,
         early_decode_win: win,
+    }
+}
+
+struct WireCase {
+    scheme: String,
+    m: usize,
+    n_workers: usize,
+    /// Worker↔worker bytes actually written to loopback TCP sockets
+    /// (framed codec, summed over every node's transport).
+    w2w_wire_bytes: u64,
+    /// Analytical ζ (eq. 34) in bytes (scalars × 4).
+    zeta_bytes: u64,
+    /// `(w2w_wire_bytes − zeta_bytes) / zeta_bytes`, percent — the
+    /// framing overhead; must stay under 5%.
+    overhead_pct: f64,
+    /// Total bytes on the wire, all classes + control.
+    total_wire_bytes: u64,
+    e2e_ns: u64,
+}
+
+/// Serialized bytes/job per scheme vs analytical ζ: one job through the
+/// loopback TCP cluster — transmitted, not just counted.
+fn run_wire(scheme: &str, s: usize, t: usize, z: usize, m: usize) -> WireCase {
+    let mut manifest =
+        TopologyManifest::template(scheme, s, t, z, m, 0xB17E, 1, "127.0.0.1", 0)
+            .expect("wire manifest");
+    manifest.recv_timeout = Duration::from_secs(30);
+    let t0 = Instant::now();
+    let report = run_local_cluster(&manifest, None).expect("wire cluster");
+    let e2e_ns = ns(t0.elapsed());
+    assert!(report.master.jobs.iter().all(|j| j.verified));
+    let n = manifest.n_workers() as u64;
+    let zeta_bytes = analysis::communication_overhead(m, t, n) as u64 * 4;
+    let w2w = report.wire.bytes_worker_to_worker;
+    assert!(w2w >= zeta_bytes, "wire below ζ: {w2w} < {zeta_bytes}");
+    let overhead_pct = (w2w - zeta_bytes) as f64 * 100.0 / zeta_bytes as f64;
+    assert!(
+        overhead_pct < 5.0,
+        "{scheme}: framing overhead {overhead_pct:.2}% breaches the 5% budget"
+    );
+    println!(
+        "bench perf_core/wire scheme={scheme} m={m} N={n}    w2w={w2w}B zeta={zeta_bytes}B \
+         overhead={overhead_pct:.2}% total={}B",
+        report.wire.total_bytes()
+    );
+    // Let the cluster's detached reader threads release their sockets
+    // before the next scheme's bind wave.
+    std::thread::sleep(Duration::from_millis(50));
+    WireCase {
+        scheme: scheme.to_string(),
+        m,
+        n_workers: n as usize,
+        w2w_wire_bytes: w2w,
+        zeta_bytes,
+        overhead_pct,
+        total_wire_bytes: report.wire.total_bytes(),
+        e2e_ns,
     }
 }
 
@@ -257,7 +326,7 @@ fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut V
 
 fn main() {
     let mut smoke = false;
-    let mut out_path = String::from("../BENCH_4.json");
+    let mut out_path = String::from("../BENCH_5.json");
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -295,12 +364,19 @@ fn main() {
         .iter()
         .map(|&k| run_fault(2, 2, 2, fault_m, k, fault_delay, fault_iters))
         .collect();
+    // Wire section: m must keep the G-block ≥ ~200 scalars so the fixed
+    // per-frame header stays under the 5% framing budget.
+    let wire_m = if smoke { 32 } else { 64 };
+    let wire: Vec<WireCase> = ["age", "polydot", "entangled"]
+        .iter()
+        .map(|&scheme| run_wire(scheme, 2, 2, 2, wire_m))
+        .collect();
 
     let host_threads = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1) as u64;
     let json = Json::obj(vec![
-        ("schema", Json::Str("cmpc.bench.v4".to_string())),
+        ("schema", Json::Str("cmpc.bench.v5".to_string())),
         ("benchmark", Json::Str("perf_core".to_string())),
         ("provenance", Json::Str("measured".to_string())),
         (
@@ -373,6 +449,25 @@ fn main() {
                             ("e2e_full_ns", Json::Int(c.e2e_full_ns)),
                             ("e2e_early_ns", Json::Int(c.e2e_early_ns)),
                             ("early_decode_win", Json::Float(c.early_decode_win)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "wire",
+            Json::Arr(
+                wire.iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("scheme", Json::Str(c.scheme.clone())),
+                            ("m", Json::Int(c.m as u64)),
+                            ("n_workers", Json::Int(c.n_workers as u64)),
+                            ("w2w_wire_bytes", Json::Int(c.w2w_wire_bytes)),
+                            ("zeta_bytes", Json::Int(c.zeta_bytes)),
+                            ("overhead_pct", Json::Float(c.overhead_pct)),
+                            ("total_wire_bytes", Json::Int(c.total_wire_bytes)),
+                            ("e2e_ns", Json::Int(c.e2e_ns)),
                         ])
                     })
                     .collect(),

@@ -113,6 +113,26 @@
 //! (delay/drop/garble/kill at envelope granularity) in
 //! `tests/fault_tolerance.rs`.
 //!
+//! ## Distributed edge transport (v0.6)
+//!
+//! The fabric is **pluggable over real networks**
+//! ([`mpc::network::Transport`]): the in-process channel transport stays
+//! the zero-cost default, and [`transport::tcp::TcpTransport`] runs the
+//! same `serve_worker`/`run_master` state machines across OS processes on
+//! real sockets — `cmpc node --role worker|master|source-a|source-b
+//! --manifest <path>` runs one party per a
+//! [`runtime::manifest::TopologyManifest`] (`cmpc topology` writes one).
+//! Envelopes cross the wire in the hardened framed codec of
+//! [`transport::wire`] (typed errors on truncated/corrupt/version-skewed
+//! frames, never a panic), the transport meters the bytes it actually
+//! sends per edge class (compared against the analytical ζ in
+//! `tests/distributed.rs`), and [`transport::shaper::LinkShaper`] adds
+//! per-link latency + token-bucket bandwidth emulation — non-blocking,
+//! composable with both transports and with [`mpc::chaos`] — so LAN vs
+//! WAN edge scenarios are reproducible in-tree. Early decode now drains
+//! per-worker `AbortAck`s, making ξ/σ counters exact (not lower bounds)
+//! on the fast path too.
+//!
 //! ## Parallel compute core (v0.3)
 //!
 //! Every deployment owns a [`runtime::pool::WorkerPool`] (shared
@@ -141,6 +161,7 @@ pub mod metrics;
 pub mod mpc;
 pub mod poly;
 pub mod runtime;
+pub mod transport;
 pub mod util;
 
 pub use codes::SchemeSpec;

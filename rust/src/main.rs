@@ -8,6 +8,11 @@
 //! * `serve   --jobs J --m M ...` — batch serving demo through the
 //!   coordinator (deployment caching, adaptive scheme selection, per-job
 //!   failure isolation).
+//! * `topology --scheme K --s S --t T --z Z --m M --base-port P --out F` —
+//!   write a distributed-deployment manifest (prints the worker count).
+//! * `node    --role worker|master|source-a|source-b --manifest F` — run
+//!   one CMPC party as this OS process, over TCP per the manifest
+//!   (`--role reference` prints the in-process digests for comparison).
 //! * `figures [--out DIR] [--zmax Z]` — regenerate every paper figure's
 //!   data series (Figs. 2, 3, 4a–c + ablations) into CSVs.
 
@@ -20,7 +25,9 @@ use cmpc::coordinator::{build_scheme, Coordinator, CoordinatorConfig, SchemePoli
 use cmpc::matrix::FpMat;
 use cmpc::mpc::deployment::Deployment;
 use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::runtime::manifest::TopologyManifest;
 use cmpc::runtime::BackendChoice;
+use cmpc::transport::node::{self, NodeRole};
 use cmpc::util::cli::Args;
 use cmpc::util::rng::ChaChaRng;
 use cmpc::{CmpcError, Result, SchemeSpec};
@@ -31,16 +38,23 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
+        Some("topology") => cmd_topology(&args),
+        Some("node") => cmd_node(&args),
         Some("figures") => cmd_figures(&args),
         _ => {
             eprintln!(
-                "usage: cmpc <info|run|serve|figures> [options]\n\
+                "usage: cmpc <info|run|serve|topology|node|figures> [options]\n\
                  \n\
-                 info    --s S --t T --z Z\n\
-                 run     --m M --s S --t T --z Z [--scheme age|polydot|entangled|adaptive]\n\
-                 \x20       [--backend native|pjrt] [--artifacts DIR] [--seed N]\n\
-                 serve   --jobs J --m M --s S --t T --z Z [--backend ...]\n\
-                 figures [--out DIR] [--zmax Z]"
+                 info     --s S --t T --z Z\n\
+                 run      --m M --s S --t T --z Z [--scheme age|polydot|entangled|adaptive]\n\
+                 \x20        [--backend native|pjrt] [--artifacts DIR] [--seed N]\n\
+                 serve    --jobs J --m M --s S --t T --z Z [--backend ...]\n\
+                 topology --scheme age|polydot|entangled --s S --t T --z Z --m M [--seed N]\n\
+                 \x20        [--jobs J] [--host H] --base-port P [--early-decode] --out FILE\n\
+                 \x20        (prints the worker count N; manifest lists every node's host:port)\n\
+                 node     --role worker|master|source-a|source-b|reference --manifest FILE\n\
+                 \x20        [--index I]   (worker role only; run one process per party)\n\
+                 figures  [--out DIR] [--zmax Z]"
             );
             std::process::exit(2);
         }
@@ -192,6 +206,95 @@ fn cmd_serve(args: &Args) -> Result<()> {
         reports.len(),
         reports.len() as f64 / wall.as_secs_f64()
     );
+    Ok(())
+}
+
+fn cmd_topology(args: &Args) -> Result<()> {
+    let (s, t, z) = parse_stz(args);
+    let scheme = args.get("scheme").unwrap_or("age");
+    let m: usize = args.get_parse("m", 64);
+    let seed: u64 = args.get_parse("seed", 7);
+    let jobs: usize = args.get_parse("jobs", 2);
+    let host = args.get("host").unwrap_or("127.0.0.1");
+    let base_port: u16 = args.get_parse("base-port", 9300);
+    let out = args.get("out").map(PathBuf::from);
+    let mut manifest = TopologyManifest::template(scheme, s, t, z, m, seed, jobs, host, base_port)?;
+    manifest.early_decode = args.flag("early-decode");
+    if let Some(ms) = args.get("recv-timeout-ms") {
+        manifest.recv_timeout = std::time::Duration::from_millis(
+            ms.parse()
+                .map_err(|_| CmpcError::InvalidParams("bad --recv-timeout-ms".to_string()))?,
+        );
+    }
+    let rendered = manifest.render();
+    match &out {
+        Some(path) => std::fs::write(path, rendered)
+            .map_err(|e| CmpcError::Io(format!("writing {}: {e}", path.display())))?,
+        None => print!("{rendered}"),
+    }
+    if let Some(path) = &out {
+        eprintln!(
+            "wrote {} ({} workers + master + 2 sources on {host}:{base_port}..)",
+            path.display(),
+            manifest.n_workers()
+        );
+        // Worker count on stdout, alone, so scripts can spawn the right
+        // number of `cmpc node --role worker` processes.
+        println!("{}", manifest.n_workers());
+    }
+    Ok(())
+}
+
+fn cmd_node(args: &Args) -> Result<()> {
+    let manifest_path = args
+        .get("manifest")
+        .ok_or_else(|| CmpcError::InvalidParams("node needs --manifest <file>".to_string()))?;
+    let manifest = TopologyManifest::load(&PathBuf::from(manifest_path))?;
+    let role = args
+        .get("role")
+        .ok_or_else(|| CmpcError::InvalidParams("node needs --role".to_string()))?;
+    if role == "reference" {
+        for (job, digest) in node::run_reference(&manifest)? {
+            println!("job {job} digest 0x{digest:016x}");
+        }
+        println!("reference: {} in-process jobs decoded", manifest.jobs);
+        return Ok(());
+    }
+    let index = args
+        .get("index")
+        .map(|v| {
+            v.parse::<usize>()
+                .map_err(|_| CmpcError::InvalidParams("bad --index".to_string()))
+        })
+        .transpose()?;
+    let role = NodeRole::parse(role, index)?;
+    match node::run_role(role, &manifest)? {
+        Some(report) => {
+            for j in &report.jobs {
+                println!("job {} digest 0x{:016x}", j.job, j.digest);
+            }
+            for j in &report.jobs {
+                // Scalar traffic is metered where it is sent — worker
+                // processes own the ζ legs; the master reports its wire
+                // bytes below.
+                eprintln!(
+                    "job {}: verified={} early_decode={} elapsed={:?}",
+                    j.job, j.verified, j.early_decoded, j.elapsed
+                );
+            }
+            let w = report.wire;
+            eprintln!(
+                "master wire: {} frames, {} bytes (control {} B)",
+                w.frames,
+                w.total_bytes(),
+                w.bytes_control
+            );
+            println!("master: {}/{} jobs verified", report.jobs.len(), manifest.jobs);
+        }
+        None => {
+            // Long-running roles return after the master's shutdown.
+        }
+    }
     Ok(())
 }
 

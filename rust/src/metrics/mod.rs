@@ -28,6 +28,16 @@ impl WorkerCounters {
         self.stored_scalars.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Overwrite both counters with the totals a worker reported in its
+    /// `JobDone`/`AbortAck` control message. On the in-process fabric the
+    /// worker incremented this very instance, so the store is idempotent;
+    /// over a remote transport (where the `Arc` cannot be shared) this is
+    /// how the driver-side counters become exact.
+    pub fn record_final(&self, mults: u64, stored: u64) {
+        self.scalar_mults.store(mults, Ordering::Relaxed);
+        self.stored_scalars.store(stored, Ordering::Relaxed);
+    }
+
     pub fn mults(&self) -> u64 {
         self.scalar_mults.load(Ordering::Relaxed)
     }
@@ -70,6 +80,71 @@ impl TrafficCounters {
             worker_to_worker: self.worker_to_worker.load(Ordering::Relaxed),
             worker_to_master: self.worker_to_master.load(Ordering::Relaxed),
             messages: self.messages.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// On-wire byte totals of a serialized transport (the framed codec of
+/// `transport::wire`), split by edge class like [`TrafficReport`] — but in
+/// **bytes actually written to the wire**, framing included, so the
+/// measured communication can be compared against the analytical ζ (eq. 34,
+/// in scalars × 4 bytes) with the framing overhead made visible.
+#[derive(Default, Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireStats {
+    /// Phase 1: source → worker frame bytes.
+    pub bytes_source_to_worker: u64,
+    /// Phase 2: worker ↔ worker frame bytes (the on-wire form of ζ).
+    pub bytes_worker_to_worker: u64,
+    /// Phase 3: worker → master frame bytes.
+    pub bytes_worker_to_master: u64,
+    /// Control-plane frame bytes (job lifecycle; unmetered in ζ).
+    pub bytes_control: u64,
+    /// Frames written.
+    pub frames: u64,
+    /// Inbound frames that failed to decode (corrupt/truncated/stale peer).
+    pub decode_errors: u64,
+}
+
+impl WireStats {
+    /// All payload-class bytes plus control bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_source_to_worker
+            + self.bytes_worker_to_worker
+            + self.bytes_worker_to_master
+            + self.bytes_control
+    }
+
+    /// Fold another snapshot into this one (summing a cluster's transports).
+    pub fn merge(&mut self, other: &WireStats) {
+        self.bytes_source_to_worker += other.bytes_source_to_worker;
+        self.bytes_worker_to_worker += other.bytes_worker_to_worker;
+        self.bytes_worker_to_master += other.bytes_worker_to_master;
+        self.bytes_control += other.bytes_control;
+        self.frames += other.frames;
+        self.decode_errors += other.decode_errors;
+    }
+}
+
+/// Shared atomic accumulator behind [`WireStats`].
+#[derive(Default, Debug)]
+pub struct WireCounters {
+    pub bytes_source_to_worker: AtomicU64,
+    pub bytes_worker_to_worker: AtomicU64,
+    pub bytes_worker_to_master: AtomicU64,
+    pub bytes_control: AtomicU64,
+    pub frames: AtomicU64,
+    pub decode_errors: AtomicU64,
+}
+
+impl WireCounters {
+    pub fn snapshot(&self) -> WireStats {
+        WireStats {
+            bytes_source_to_worker: self.bytes_source_to_worker.load(Ordering::Relaxed),
+            bytes_worker_to_worker: self.bytes_worker_to_worker.load(Ordering::Relaxed),
+            bytes_worker_to_master: self.bytes_worker_to_master.load(Ordering::Relaxed),
+            bytes_control: self.bytes_control.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
+            decode_errors: self.decode_errors.load(Ordering::Relaxed),
         }
     }
 }
@@ -147,11 +222,18 @@ pub struct PhaseTimings {
     /// Phase 3: the master's reconstruction math only — the dense
     /// Vandermonde solve and the t² block combinations.
     pub phase3_reconstruct: std::time::Duration,
+    /// Early-decode fast path only: after reconstruction, waiting for the
+    /// aborted stragglers' `AbortAck`s so the per-worker overhead counters
+    /// are final at job return. Zero on the full-drain path (its
+    /// tail wait is inside `phase2_compute`). Kept out of `phase2_compute`
+    /// because the decoded `Y` was already in hand when this window opened.
+    pub ack_wait: std::time::Duration,
 }
 
 impl PhaseTimings {
     pub fn total(&self) -> std::time::Duration {
         self.setup + self.phase1_share + self.phase2_compute + self.phase3_reconstruct
+            + self.ack_wait
     }
 }
 

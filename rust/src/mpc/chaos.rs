@@ -39,9 +39,13 @@ use crate::util::rng::ChaChaRng;
 /// What a matching [`FaultRule`] does to an envelope.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultAction {
-    /// Hold the envelope this long before delivering it (a straggling link
-    /// or a slow peer; the sleep happens on the sender's thread, like the
-    /// fabric's own `link_delay`).
+    /// Hold the envelope this long before delivering it (a *busy or slow
+    /// peer*: the sleep happens on the sender's thread, like the fabric's
+    /// own `link_delay`, so the sender can do nothing else meanwhile). To
+    /// model a slow **link** that delays delivery without blocking the
+    /// sender, use the transport shaper
+    /// ([`crate::transport::shaper::LinkShaper`]) instead — the two
+    /// compose.
     Delay(Duration),
     /// Silently discard the envelope (lossy link, or a peer that is mute
     /// for one job). Dropped envelopes are unmetered — they never
@@ -71,10 +75,13 @@ pub enum PayloadClass {
 }
 
 impl PayloadClass {
-    /// Classify a payload.
+    /// Classify a payload. The split Phase-1 forms (`ShareA`/`ShareB`,
+    /// sent by physically separate source processes) classify as
+    /// [`PayloadClass::Shares`], so one rule covers both delivery shapes.
     pub fn of(payload: &Payload) -> PayloadClass {
         match payload {
             Payload::Shares { .. } => PayloadClass::Shares,
+            Payload::ShareA(_) | Payload::ShareB(_) => PayloadClass::Shares,
             Payload::GShare(_) => PayloadClass::GShare,
             Payload::IShare(_) => PayloadClass::IShare,
             Payload::Control(_) => PayloadClass::Control,

@@ -67,6 +67,15 @@ use crate::mpc::runtime::WorkerRuntime;
 use crate::runtime::pool::{ScratchPool, WorkerPool};
 use crate::runtime::BackendFactory;
 
+/// Per-job secret-seed derivation: `base + k·golden` (wrapping). The
+/// **single source of truth** shared by [`Deployment::execute`] (where `k`
+/// is the atomically claimed job counter) and the distributed runner
+/// (where `k` is the manifest job id) — byte-identical
+/// distributed-vs-in-process outputs depend on these never diverging.
+pub fn derive_job_seed(base: u64, k: u64) -> u64 {
+    base.wrapping_add(k.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
 /// A provisioned worker deployment: resolved scheme + cached [`Setup`] +
 /// shared backend + worker pool + per-pool-worker scratch **+ the live
 /// worker runtime**, reusable across any number of (possibly concurrent)
@@ -155,17 +164,13 @@ impl Deployment {
 
     /// Run one `Y = AᵀB` job through the provisioned runtime. Per-job secret
     /// randomness is derived from the config seed and an atomically claimed
-    /// job counter, so concurrent jobs on a shared deployment never reuse
-    /// masks.
+    /// job counter ([`derive_job_seed`]), so concurrent jobs on a shared
+    /// deployment never reuse masks.
     pub fn execute(&self, a: &FpMat, b: &FpMat) -> Result<ProtocolOutput> {
         // One fetch_add both claims a unique seed slot and counts the job —
         // a separate load would let two racing executes draw the same masks.
         let k = self.jobs_executed.fetch_add(1, Ordering::Relaxed);
-        let seed = self
-            .config
-            .seed
-            .wrapping_add(k.wrapping_mul(0x9E3779B97F4A7C15));
-        self.run(a, b, seed)
+        self.run(a, b, derive_job_seed(self.config.seed, k))
     }
 
     /// [`Deployment::execute`] with an explicit secret seed (reproducible

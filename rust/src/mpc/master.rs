@@ -14,19 +14,33 @@
 //!
 //! After reconstructing, the tail is handled one of two ways. On the
 //! default path the master drains it — every worker sends `I(αₙ)` then a
-//! [`JobDone`] control message — so per-worker overhead counters are final
-//! when the job returns and no stale envelopes linger on the shared link.
-//! On the **early-decode fast path** (`early_decode = true`) the master
-//! instead returns as soon as the quota reconstruction is done, cancelling
-//! the job with a [`JobAbort`] broadcast to **every** worker — finished
-//! peers need it too, to tombstone the id against a mid-compute
-//! straggler's late G-shares: the job's latency stops depending on its slowest
-//! `N − (t²+z)` workers — the measured form of the code's straggler
-//! tolerance. The trade: straggler workers' overhead counters may still be
-//! ticking when the job returns, so `measured == ξ, σ` assertions hold only
-//! on the full-drain path.
+//! [`JobDone`] control message carrying its final overhead totals — so
+//! per-worker counters are final when the job returns and no stale
+//! envelopes linger on the shared link. On the **early-decode fast path**
+//! (`early_decode = true`) the master instead cancels the job as soon as
+//! the quota reconstruction is done, with a [`JobAbort`] broadcast to
+//! **every** worker — finished peers need it too, to tombstone the id
+//! against a mid-compute straggler's late G-shares: the job's latency
+//! stops depending on its slowest `N − (t²+z)` workers — the measured form
+//! of the code's straggler tolerance.
+//!
+//! The fast path then drains one [`AbortAck`] per outstanding worker
+//! (bounded by the receive timeout): a worker acks only after dropping and
+//! tombstoning the job's state, so its reported totals can never tick
+//! again — the driver's ξ/σ counters are **exact on both paths**, not
+//! lower bounds. Workers already known dead are excluded from the wait —
+//! on the in-process transport that detection is reliable (the abort send
+//! fails on a dropped endpoint, and chaos kills mark the shared fabric);
+//! on a remote transport a write to a just-crashed peer can still succeed
+//! into the OS buffer, so a dead remote worker may run this window out to
+//! its `recv_timeout` bound (see ROADMAP: link-liveness probing). A
+//! worker that is genuinely *busy* (not merely behind a slow link) also
+//! delays only the ack window — the decoded `Y` was in hand before it
+//! opened, which is why the wait is metered separately as
+//! [`MasterTimings::ack_wait`].
 //!
 //! [`JobAbort`]: crate::mpc::network::ControlMsg::JobAbort
+//! [`AbortAck`]: crate::mpc::network::ControlMsg::AbortAck
 //!
 //! The `t²` block reconstructions (`Y_{i,l} = Σₙ rows[i+t·l][n]·I(αₙ)`) are
 //! independent linear combinations, so they fan out across the worker pool;
@@ -43,6 +57,7 @@ use std::time::{Duration, Instant};
 use crate::error::{CmpcError, Result};
 use crate::ff::{self, P};
 use crate::matrix::FpMat;
+use crate::metrics::WorkerCounters;
 use crate::mpc::network::{ControlMsg, Fabric, JobId, JobRouter, Payload, PooledMat};
 use crate::poly::interp::try_vandermonde_inverse_rows;
 use crate::runtime::pool::{ScratchPool, WorkerPool};
@@ -78,18 +93,25 @@ pub struct MasterTimings {
     /// early-decode fast path, which cancels the tail instead of waiting
     /// for it.
     pub tail_wait: Duration,
+    /// Early-decode fast path only: draining `AbortAck`s from the aborted
+    /// stragglers so the overhead counters are final at return. `Y` was
+    /// already decoded when this window opened.
+    pub ack_wait: Duration,
 }
 
 /// Collect `t²+z` I-shares for `job`, reconstruct `Y`, then finish the
-/// tail: drain `n_workers` `JobDone` acks, or — with `early_decode` — abort
-/// the stragglers and return immediately.
+/// tail: drain `n_workers` `JobDone` acks, or — with `early_decode` —
+/// abort the stragglers and drain their `AbortAck`s (so counters are
+/// final) without waiting for their remaining work.
 ///
 /// `alphas[n]` is worker `n`'s evaluation point; `t`/`z` are scheme
 /// parameters; `n_workers` is the provisioned worker count. `timeout`
 /// bounds every receive (a dead worker surfaces as
 /// [`CmpcError::Fabric`]); a worker-reported [`ControlMsg::JobError`]
 /// fails the job immediately. `fabric` carries the targeted
-/// [`ControlMsg::JobAbort`]s of the early-decode path. `pool` and
+/// [`ControlMsg::JobAbort`]s of the early-decode path. `counters` are the
+/// driver-side per-worker overhead counters, finalized from the totals in
+/// `JobDone`/`AbortAck` (pass `&[]` to skip — unit harnesses). `pool` and
 /// `scratch` drive the parallel block reconstruction.
 #[allow(clippy::too_many_arguments)]
 pub fn run_master(
@@ -102,6 +124,7 @@ pub fn run_master(
     z: usize,
     timeout: Duration,
     early_decode: bool,
+    counters: &[Arc<WorkerCounters>],
     pool: &WorkerPool,
     scratch: &ScratchPool,
 ) -> Result<(MasterOutput, MasterTimings)> {
@@ -124,13 +147,28 @@ pub fn run_master(
             *done_count += 1;
         }
     }
+    let finalize = |counters: &[Arc<WorkerCounters>], from: usize, mults: u64, stored: u64| {
+        if let Some(c) = counters.get(from) {
+            c.record_final(mults, stored);
+        }
+    };
     while arrived.len() < needed {
         let env = router.recv_for(job, timeout)?;
         match env.payload {
-            Payload::IShare(m) => arrived.push((env.from, m)),
+            // The sender id is attacker-controlled on a remote transport
+            // (frames need no handshake): an out-of-range worker id must
+            // be dropped, never index `alphas`. A *forged duplicate* id
+            // surfaces downstream as a typed NotDecodable (repeated αs
+            // make the dense Vandermonde singular).
+            Payload::IShare(m) => {
+                if env.from < n_workers {
+                    arrived.push((env.from, m));
+                }
+            }
             // A worker can finish (I-share consumed above) before slower
             // peers reach the quota.
-            Payload::Control(ControlMsg::JobDone) => {
+            Payload::Control(ControlMsg::JobDone { mults, stored }) => {
+                finalize(counters, env.from, mults, stored);
                 note_done(&mut done, &mut done_count, env.from);
             }
             Payload::Control(ControlMsg::JobError(msg)) => {
@@ -200,7 +238,7 @@ pub fn run_master(
     // --- finish the tail ---
     let t_tail = Instant::now();
     let early_decoded = early_decode && done_count < n_workers;
-    if early_decoded {
+    let (tail_wait, ack_wait) = if early_decoded {
         // Fast path: the quota decoded Y, so the stragglers' remaining work
         // is pure waste — cancel the job with a JobAbort to every worker.
         // Completed workers tombstone the id, which is load-bearing: a
@@ -208,25 +246,82 @@ pub fn run_master(
         // waking, and without the tombstone those late shares would seed
         // phantom `JobState`s at its finished peers (pinning pooled buffers
         // until a deadline sweep). A worker that died never receives the
-        // abort (`send` to a dropped endpoint is a tolerated error here);
-        // late I-shares/acks are dropped when the driver closes the job on
-        // the router.
-        for wid in 0..n_workers {
-            let _ = fabric.send(
+        // abort (`send` to a dropped endpoint is a tolerated error here —
+        // and excludes it from the ack wait, as does a chaos-kill mark);
+        // anything still in flight after the drain is dropped when the
+        // driver closes the job on the router.
+        let mut awaiting = vec![false; n_workers];
+        let mut awaiting_count = 0usize;
+        for (wid, wait) in awaiting.iter_mut().enumerate() {
+            let sent = fabric.send(
                 job,
                 fabric.master_id(),
                 wid,
                 Payload::Control(ControlMsg::JobAbort),
             );
+            if !done[wid] && sent.is_ok() && !fabric.chaos_killed(wid) {
+                *wait = true;
+                awaiting_count += 1;
+            }
         }
+        let tail_wait = t_tail.elapsed();
+        // Drain one AbortAck (or late JobDone) per live outstanding
+        // worker, so every counter is final at return. Bounded by the
+        // receive timeout: a worker that dies between the send and its
+        // ack cannot stall the job — its counters are final anyway
+        // (dead workers don't count), and the decoded Y is already in
+        // hand, so running out the clock degrades nothing but this
+        // window.
+        let t_ack = Instant::now();
+        let deadline = t_ack + timeout;
+        while awaiting_count > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let env = match router.recv_for(job, deadline - now) {
+                Ok(env) => env,
+                Err(_) => break, // timed out: give up on the missing acks
+            };
+            let from = env.from;
+            let mut acked = false;
+            match env.payload {
+                // A straggler that was already mid-send delivers its
+                // I-share before seeing the abort; ignore it.
+                Payload::IShare(_) => {}
+                Payload::Control(ControlMsg::AbortAck { mults, stored })
+                | Payload::Control(ControlMsg::JobDone { mults, stored }) => {
+                    // First report wins: a straggler that completed right
+                    // as the abort went out sends JobDone (real totals)
+                    // and then acks the abort for a job it has already
+                    // forgotten (zeros) — the zeros must not clobber.
+                    if from < done.len() && !done[from] {
+                        finalize(counters, from, mults, stored);
+                    }
+                    note_done(&mut done, &mut done_count, from);
+                    acked = true;
+                }
+                // The job already decoded; a worker failing its (now
+                // cancelled) remainder is not a job failure.
+                Payload::Control(ControlMsg::JobError(_)) => acked = true,
+                _ => {}
+            }
+            if acked && from < awaiting.len() && awaiting[from] {
+                awaiting[from] = false;
+                awaiting_count -= 1;
+            }
+        }
+        (tail_wait, t_ack.elapsed())
     } else {
-        // Full drain: every worker sends I-share then JobDone, so overhead
-        // counters are final when the job returns.
+        // Full drain: every worker sends I-share then JobDone (with its
+        // final totals), so overhead counters are final when the job
+        // returns.
         while done_count < n_workers {
             let env = router.recv_for(job, timeout)?;
             match env.payload {
                 Payload::IShare(_) => {} // straggler share beyond the quota
-                Payload::Control(ControlMsg::JobDone) => {
+                Payload::Control(ControlMsg::JobDone { mults, stored }) => {
+                    finalize(counters, env.from, mults, stored);
                     note_done(&mut done, &mut done_count, env.from);
                 }
                 Payload::Control(ControlMsg::JobError(msg)) => {
@@ -237,8 +332,8 @@ pub fn run_master(
                 }
             }
         }
-    }
-    let tail_wait = t_tail.elapsed();
+        (t_tail.elapsed(), Duration::ZERO)
+    };
     Ok((
         MasterOutput {
             y,
@@ -250,6 +345,7 @@ pub fn run_master(
             quota_wait,
             reconstruct,
             tail_wait,
+            ack_wait,
         },
     ))
 }

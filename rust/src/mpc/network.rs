@@ -1,10 +1,24 @@
-//! Simulated edge-network fabric, multiplexed across concurrent jobs.
+//! Edge-network fabric, multiplexed across concurrent jobs and **pluggable
+//! over real transports**.
 //!
 //! Models the paper's topology: every source connects to every worker, every
-//! worker to every other worker and to the master (D2D links). Nodes are
-//! threads; links are mpsc channels routed through a central [`Fabric`] that
-//! meters traffic per edge class — globally and **per job** — and can inject
-//! link latency.
+//! worker to every other worker and to the master (D2D links). Links are
+//! routed through a central [`Fabric`] that meters traffic per edge class —
+//! globally and **per job** — and can inject link latency, chaos faults
+//! ([`crate::mpc::chaos`]), and shaped latency/bandwidth
+//! ([`crate::transport::shaper`]).
+//!
+//! The [`Fabric`] is policy (topology checks, metering, chaos, shaping);
+//! the link layer underneath it is a [`Transport`]:
+//!
+//! * [`ChannelTransport`] — the in-process default: nodes are threads and
+//!   links are mpsc channels. Zero-copy (envelopes move with their
+//!   [`PooledMat`] payloads intact) and zero-cost relative to the
+//!   pre-transport fabric.
+//! * [`crate::transport::tcp::TcpTransport`] — each party is a separate
+//!   process (or thread) reachable at a `host:port` from a
+//!   [`crate::runtime::manifest::TopologyManifest`]; envelopes cross the
+//!   wire in the framed codec of [`crate::transport::wire`].
 //!
 //! Since the persistent-runtime refactor the fabric is *long-lived*: one
 //! [`Fabric`] (and one set of worker threads) serves every job of a
@@ -20,18 +34,21 @@
 //! Node-id layout for an `N`-worker deployment:
 //! `0..N` → workers, `N` → master, `N+1` → source A, `N+2` → source B.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::ops::{Deref, DerefMut};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::error::{CmpcError, Result};
 use crate::ff;
 use crate::matrix::FpMat;
-use crate::metrics::{TrafficCounters, TrafficReport, WorkerCounters};
-use crate::mpc::chaos::{ChaosPlan, FaultAction};
+use crate::metrics::{TrafficCounters, TrafficReport, WireStats, WorkerCounters};
+use crate::mpc::chaos::{ChaosPlan, FaultAction, PayloadClass};
+use crate::transport::shaper::LinkShaper;
+use crate::transport::wire;
 
 pub type NodeId = usize;
 
@@ -210,18 +227,31 @@ impl BufferPool {
 pub enum ControlMsg {
     /// Start serving a job: the worker derives its per-job secret stream
     /// from `seed` (+ its own id) and reports overheads into `counters`.
+    ///
+    /// The counters `Arc` is shared memory and cannot cross a remote
+    /// transport: the wire codec serializes only `seed`, and a remote
+    /// worker installs a fresh local instance whose totals travel back in
+    /// [`ControlMsg::JobDone`] / [`ControlMsg::AbortAck`].
     JobStart {
         seed: u64,
         counters: Arc<WorkerCounters>,
     },
-    /// A worker finished every Phase-2/3 obligation of the job.
-    JobDone,
+    /// A worker finished every Phase-2/3 obligation of the job; carries its
+    /// final overhead totals so the driver-side counters are exact even
+    /// when the worker lives in another process.
+    JobDone { mults: u64, stored: u64 },
     /// A worker had to abandon the job (backend failure, dead peer, …).
     JobError(String),
-    /// The job's driver gave up (worker failure or receive timeout):
-    /// workers drop any state for the job and tombstone it, so one failed
-    /// job cannot leave stuck `JobState`s leaking on its surviving peers.
+    /// The job's driver gave up (worker failure or receive timeout) or the
+    /// master early-decoded and cancelled the straggler tail: workers drop
+    /// any state for the job and tombstone it, so one aborted job cannot
+    /// leave stuck `JobState`s leaking on its surviving peers.
     JobAbort,
+    /// A worker's acknowledgement of a [`ControlMsg::JobAbort`]: the job's
+    /// state is dropped and tombstoned, so the overhead totals carried here
+    /// are **final** — the early-decode driver drains these to report exact
+    /// ξ/σ counters instead of lower bounds.
+    AbortAck { mults: u64, stored: u64 },
     /// Terminate the worker's serve loop (runtime teardown).
     Shutdown,
 }
@@ -229,8 +259,16 @@ pub enum ControlMsg {
 /// A protocol message payload.
 #[derive(Debug)]
 pub enum Payload {
-    /// Phase 1: a worker's evaluations of the two share polynomials.
+    /// Phase 1: a worker's evaluations of the two share polynomials in one
+    /// combined envelope (the in-process driver plays both sources on one
+    /// thread, so one message per worker keeps the fabric simple).
     Shares { fa: PooledMat, fb: PooledMat },
+    /// Phase 1, split form: `F_A(α_to)` alone — what a *physically
+    /// separate* source-A process sends (it does not hold `B`). Workers
+    /// accept the combined and split forms interchangeably.
+    ShareA(PooledMat),
+    /// Phase 1, split form: `F_B(α_to)` from source B.
+    ShareB(PooledMat),
     /// Phase 2: `G_{from}(α_to)`.
     GShare(PooledMat),
     /// Phase 3: `I(α_from)`.
@@ -244,6 +282,7 @@ impl Payload {
     pub fn scalars(&self) -> u64 {
         match self {
             Payload::Shares { fa, fb } => (fa.len() + fb.len()) as u64,
+            Payload::ShareA(m) | Payload::ShareB(m) => m.len() as u64,
             Payload::GShare(m) | Payload::IShare(m) => m.len() as u64,
             Payload::Control(_) => 0,
         }
@@ -256,6 +295,7 @@ impl Payload {
 fn garble(payload: &mut Payload) {
     let mat = match payload {
         Payload::Shares { fa, .. } => fa,
+        Payload::ShareA(m) | Payload::ShareB(m) => m,
         Payload::GShare(m) | Payload::IShare(m) => m,
         Payload::Control(_) => return,
     };
@@ -273,13 +313,173 @@ pub struct Envelope {
     pub payload: Payload,
 }
 
-/// Central switch: owns one sender per node plus the traffic meters
-/// (global and per registered job).
-pub struct Fabric {
+/// The pluggable link layer beneath a [`Fabric`]: raw, policy-free
+/// delivery of [`Envelope`]s to node ids.
+///
+/// Everything above the trait — topology legality, traffic metering, chaos
+/// fault injection, link shaping — lives in [`Fabric::send`], so the two
+/// implementations stay small: [`ChannelTransport`] moves envelopes through
+/// in-process mpsc channels (payload buffers intact, zero copies), and
+/// [`crate::transport::tcp::TcpTransport`] serializes them through the
+/// framed wire codec onto `std::net` sockets.
+pub trait Transport: Send + Sync {
+    /// Nodes this transport can address (`n_workers + 3`).
+    fn n_nodes(&self) -> usize;
+
+    /// Deliver `env` to node `to`. Blocking; a dead or unreachable
+    /// destination surfaces as a typed [`CmpcError::Fabric`].
+    fn deliver(&self, to: NodeId, env: Envelope) -> Result<()>;
+
+    /// Swap `node`'s local receive queue for a fresh one (the
+    /// eviction/respawn path). Errors when `node` is not hosted by this
+    /// transport (e.g. a remote peer of a TCP transport).
+    fn replace_endpoint(&self, node: NodeId) -> Result<Endpoint>;
+
+    /// On-wire byte totals, when this transport serializes at all (the
+    /// in-process channel transport reports zeros: nothing crosses a wire).
+    fn wire_stats(&self) -> WireStats {
+        WireStats::default()
+    }
+}
+
+/// The in-process [`Transport`]: one mpsc channel per node.
+pub struct ChannelTransport {
     /// One sender per node. RwLock (not plain Vec) so the eviction/respawn
     /// path can swap a dead node's channel in place while traffic flows to
     /// the other nodes; sends clone the `Sender` under the read lock.
     txs: RwLock<Vec<Sender<Envelope>>>,
+    n_nodes: usize,
+}
+
+impl ChannelTransport {
+    /// Build channels for `n_nodes` nodes; returns one endpoint per node,
+    /// indexed by node id.
+    pub fn new(n_nodes: usize) -> (Arc<ChannelTransport>, Vec<Endpoint>) {
+        let mut txs = Vec::with_capacity(n_nodes);
+        let mut endpoints = Vec::with_capacity(n_nodes);
+        for id in 0..n_nodes {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            endpoints.push(Endpoint { id, rx });
+        }
+        (
+            Arc::new(ChannelTransport {
+                txs: RwLock::new(txs),
+                n_nodes,
+            }),
+            endpoints,
+        )
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn deliver(&self, to: NodeId, env: Envelope) -> Result<()> {
+        // Clone the sender out of the lock so a concurrent endpoint
+        // replacement never waits on an in-flight send.
+        let tx = self.txs.read().unwrap()[to].clone();
+        tx.send(env).map_err(|_| {
+            CmpcError::Fabric(format!("node {to} endpoint dropped (dead node thread?)"))
+        })
+    }
+
+    fn replace_endpoint(&self, node: NodeId) -> Result<Endpoint> {
+        let (tx, rx) = channel();
+        self.txs.write().unwrap()[node] = tx;
+        Ok(Endpoint { id: node, rx })
+    }
+}
+
+/// Fabric policy knobs independent of the transport underneath.
+#[derive(Clone, Default)]
+pub struct FabricTuning {
+    /// Fixed per-hop latency injected on every data send (sleeps the
+    /// sender; prefer the shaper for non-blocking in-flight latency).
+    pub link_delay: Option<Duration>,
+    /// Fault-injection plan consulted on every send.
+    pub chaos: Option<Arc<ChaosPlan>>,
+    /// Per-link latency/bandwidth emulation; shaped envelopes are released
+    /// by a pump thread at their modeled arrival time.
+    pub shaper: Option<Arc<LinkShaper>>,
+}
+
+/// A shaped envelope waiting for its modeled arrival time.
+struct Delayed {
+    at: Instant,
+    seq: u64,
+    to: NodeId,
+    env: Envelope,
+}
+
+impl PartialEq for Delayed {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for Delayed {}
+
+impl PartialOrd for Delayed {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Delayed {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed so BinaryHeap (a max-heap) pops the earliest release
+        // first; seq breaks ties FIFO.
+        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deliver shaped envelopes at their release instants. Exits when the
+/// fabric drops its sender; anything still queued is flushed immediately
+/// (the runtime is tearing down — late envelopes are dropped by routers
+/// and tombstones downstream).
+fn shaper_pump(rx: Receiver<Delayed>, transport: Arc<dyn Transport>) {
+    let mut heap: BinaryHeap<Delayed> = BinaryHeap::new();
+    let mut open = true;
+    loop {
+        let now = Instant::now();
+        loop {
+            let due = match heap.peek() {
+                Some(head) => head.at <= now || !open,
+                None => false,
+            };
+            if !due {
+                break;
+            }
+            let d = heap.pop().expect("peeked non-empty");
+            let _ = transport.deliver(d.to, d.env);
+        }
+        if !open && heap.is_empty() {
+            return;
+        }
+        let wait = heap
+            .peek()
+            .map(|head| head.at.saturating_duration_since(Instant::now()));
+        match wait {
+            None => match rx.recv() {
+                Ok(d) => heap.push(d),
+                Err(_) => open = false,
+            },
+            Some(wait) => match rx.recv_timeout(wait) {
+                Ok(d) => heap.push(d),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => open = false,
+            },
+        }
+    }
+}
+
+/// Central switch: transport + policy (topology, per-edge-class meters —
+/// global and per registered job — chaos, shaping).
+pub struct Fabric {
+    transport: Arc<dyn Transport>,
     traffic: Arc<TrafficCounters>,
     /// Live per-job meters, registered by `begin_job` / drained by `end_job`.
     /// RwLock so the n(n−1) concurrent data sends of a job share the read
@@ -294,6 +494,11 @@ pub struct Fabric {
     /// Per-node kill marks set by [`FaultAction::Kill`]; a killed node's
     /// sends fail until [`Fabric::replace_endpoint`] revives it.
     killed: Vec<AtomicBool>,
+    /// Link shaper + the pump feeding shaped envelopes (None when unshaped).
+    shaper: Option<Arc<LinkShaper>>,
+    shaper_tx: Option<Sender<Delayed>>,
+    shaper_seq: AtomicU64,
+    pump: Mutex<Option<JoinHandle<()>>>,
 }
 
 /// Receive side handed to a node thread.
@@ -303,8 +508,9 @@ pub struct Endpoint {
 }
 
 impl Fabric {
-    /// Build a fabric for `n_workers` workers (+ master + two sources).
-    /// Returns the fabric and one endpoint per node, indexed by node id.
+    /// Build an in-process fabric for `n_workers` workers (+ master + two
+    /// sources). Returns the fabric and one endpoint per node, indexed by
+    /// node id.
     pub fn new(n_workers: usize, link_delay: Option<Duration>) -> (Arc<Fabric>, Vec<Endpoint>) {
         Fabric::with_chaos(n_workers, link_delay, None)
     }
@@ -316,25 +522,56 @@ impl Fabric {
         link_delay: Option<Duration>,
         chaos: Option<Arc<ChaosPlan>>,
     ) -> (Arc<Fabric>, Vec<Endpoint>) {
-        let n_nodes = n_workers + 3;
-        let mut txs = Vec::with_capacity(n_nodes);
-        let mut endpoints = Vec::with_capacity(n_nodes);
-        for id in 0..n_nodes {
-            let (tx, rx) = channel();
-            txs.push(tx);
-            endpoints.push(Endpoint { id, rx });
-        }
-        let fabric = Arc::new(Fabric {
-            txs: RwLock::new(txs),
+        Fabric::with_tuning(
+            n_workers,
+            FabricTuning {
+                link_delay,
+                chaos,
+                shaper: None,
+            },
+        )
+    }
+
+    /// In-process fabric with the full set of policy knobs.
+    pub fn with_tuning(n_workers: usize, tuning: FabricTuning) -> (Arc<Fabric>, Vec<Endpoint>) {
+        let (transport, endpoints) = ChannelTransport::new(n_workers + 3);
+        let fabric = Fabric::over_transport(transport, tuning);
+        (fabric, endpoints)
+    }
+
+    /// Wrap an existing [`Transport`] (e.g. a bound TCP transport) in
+    /// fabric policy. The node count comes from the transport
+    /// (`n_workers = n_nodes − 3`); endpoints are obtained from the
+    /// transport separately.
+    pub fn over_transport(transport: Arc<dyn Transport>, tuning: FabricTuning) -> Arc<Fabric> {
+        let n_nodes = transport.n_nodes();
+        let n_workers = n_nodes.saturating_sub(3);
+        let (shaper_tx, pump) = match &tuning.shaper {
+            Some(_) => {
+                let (tx, rx) = channel::<Delayed>();
+                let t = transport.clone();
+                let handle = std::thread::Builder::new()
+                    .name("cmpc-shaper".to_string())
+                    .spawn(move || shaper_pump(rx, t))
+                    .expect("spawning shaper pump");
+                (Some(tx), Some(handle))
+            }
+            None => (None, None),
+        };
+        Arc::new(Fabric {
+            transport,
             traffic: TrafficCounters::shared(),
             job_traffic: RwLock::new(HashMap::new()),
             n_workers,
             n_nodes,
-            link_delay,
-            chaos,
+            link_delay: tuning.link_delay,
+            chaos: tuning.chaos,
             killed: (0..n_nodes).map(|_| AtomicBool::new(false)).collect(),
-        });
-        (fabric, endpoints)
+            shaper: tuning.shaper,
+            shaper_tx,
+            shaper_seq: AtomicU64::new(0),
+            pump: Mutex::new(pump),
+        })
     }
 
     /// Replace a (dead) node's receive endpoint with a fresh channel and
@@ -342,12 +579,12 @@ impl Fabric {
     /// that raced into the old channel drop with it (pooled payloads
     /// return to their pool); envelopes sent after the old receiver
     /// dropped were already reported to their senders as typed
-    /// [`CmpcError::Fabric`] errors.
-    pub fn replace_endpoint(&self, node: NodeId) -> Endpoint {
-        let (tx, rx) = channel();
-        self.txs.write().unwrap()[node] = tx;
+    /// [`CmpcError::Fabric`] errors. Errors when the underlying transport
+    /// does not host `node` locally.
+    pub fn replace_endpoint(&self, node: NodeId) -> Result<Endpoint> {
+        let endpoint = self.transport.replace_endpoint(node)?;
         self.killed[node].store(false, Ordering::Relaxed);
-        Endpoint { id: node, rx }
+        Ok(endpoint)
     }
 
     /// Whether the chaos plan killed `node` (a worker observing a send
@@ -410,11 +647,20 @@ impl Fabric {
     /// Errors are typed [`CmpcError::Fabric`]: a link outside the CMPC data
     /// topology, a destination endpoint that has been dropped (a dead node
     /// thread), or a sender the chaos plan killed. Control payloads skip
-    /// metering, injected link latency, and the topology check — they model
-    /// the runtime, not the network. When a [`ChaosPlan`] is attached, it
-    /// is consulted here for every envelope except
+    /// metering, injected link latency, shaping, and the topology check —
+    /// they model the runtime, not the network. When a [`ChaosPlan`] is
+    /// attached, it is consulted here for every envelope except
     /// [`ControlMsg::Shutdown`] (dropping a shutdown would hang runtime
     /// teardown); dropped envelopes vanish unmetered.
+    ///
+    /// When a [`LinkShaper`] rule matches a data envelope, the send
+    /// returns immediately and the envelope is delivered by the pump
+    /// thread at its modeled arrival time (token-bucket serialization +
+    /// propagation latency) — the sender is **not** blocked, unlike
+    /// `link_delay` and chaos [`FaultAction::Delay`], which model a busy
+    /// sender rather than a slow link. A delivery failure after shaping
+    /// (dead endpoint) cannot be reported to the sender; it surfaces as
+    /// the receiver's per-job deadline instead.
     pub fn send(&self, job: JobId, from: NodeId, to: NodeId, mut payload: Payload) -> Result<()> {
         use std::sync::atomic::Ordering::Relaxed;
         if to >= self.n_nodes {
@@ -481,21 +727,51 @@ impl Fabric {
                 }
             }
         }
-        // Clone the sender out of the lock so a concurrent endpoint
-        // replacement never waits on an in-flight send.
-        let tx = self.txs.read().unwrap()[to].clone();
-        tx.send(Envelope { job, from, payload }).map_err(|_| {
-            CmpcError::Fabric(format!("node {to} endpoint dropped (dead node thread?)"))
-        })
+        let env = Envelope { job, from, payload };
+        if let (Some(shaper), Some(tx)) = (&self.shaper, &self.shaper_tx) {
+            if !matches!(env.payload, Payload::Control(_)) {
+                let class = PayloadClass::of(&env.payload);
+                let bytes = wire::frame_len(&env) as u64;
+                if let Some(at) = shaper.release_at(from, to, class, bytes, Instant::now()) {
+                    let seq = self.shaper_seq.fetch_add(1, Relaxed);
+                    return tx.send(Delayed { at, seq, to, env }).map_err(|_| {
+                        CmpcError::Fabric("link shaper pump is gone".to_string())
+                    });
+                }
+            }
+        }
+        self.transport.deliver(to, env)
     }
 
     /// Cumulative traffic snapshot across all jobs (scalars per edge class).
     pub fn traffic(&self) -> TrafficReport {
         self.traffic.snapshot()
     }
+
+    /// On-wire byte totals of the underlying transport (zeros for the
+    /// in-process channel transport).
+    pub fn wire_stats(&self) -> WireStats {
+        self.transport.wire_stats()
+    }
+}
+
+impl Drop for Fabric {
+    fn drop(&mut self) {
+        // Disconnect the pump (it flushes whatever is still queued) and
+        // join it so no delivery races the transport teardown.
+        self.shaper_tx = None;
+        if let Some(handle) = self.pump.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
 }
 
 impl Endpoint {
+    /// Wrap a receive queue as a node endpoint (transport construction).
+    pub(crate) fn new(id: NodeId, rx: Receiver<Envelope>) -> Endpoint {
+        Endpoint { id, rx }
+    }
+
     /// Block for the next message. Errors ([`CmpcError::Fabric`]) only when
     /// every sender — i.e. the fabric itself — is gone.
     pub fn recv(&self) -> Result<Envelope> {
@@ -807,7 +1083,7 @@ mod tests {
             .send(0, 1, 0, Payload::GShare(pooled(&m)))
             .is_err());
         // shutdown is never faultable, even from a killed... (revive first)
-        let _fresh = fabric.replace_endpoint(1);
+        let _fresh = fabric.replace_endpoint(1).unwrap();
         assert!(!fabric.chaos_killed(1));
         fabric
             .send(
@@ -827,7 +1103,7 @@ mod tests {
         assert!(fabric
             .send(0, fabric.source_a_id(), 0, Payload::GShare(pooled(&m)))
             .is_err());
-        let fresh = fabric.replace_endpoint(0);
+        let fresh = fabric.replace_endpoint(0).unwrap();
         fabric
             .send(
                 0,
@@ -860,6 +1136,73 @@ mod tests {
         // detached mats never enter the pool
         drop(PooledMat::detached(FpMat::zeros(3, 3)));
         assert_eq!(pool.free_buffers(), 1);
+    }
+
+    #[test]
+    fn split_shares_meter_as_source_traffic() {
+        // The split Phase-1 form (separate source processes) meters on the
+        // same source→worker class as the combined envelope.
+        let (fabric, endpoints) = Fabric::new(1, None);
+        fabric.begin_job(3);
+        let m = FpMat::zeros(2, 2); // 4 scalars
+        fabric
+            .send(3, fabric.source_a_id(), 0, Payload::ShareA(pooled(&m)))
+            .unwrap();
+        fabric
+            .send(3, fabric.source_b_id(), 0, Payload::ShareB(pooled(&m)))
+            .unwrap();
+        let job = fabric.end_job(3);
+        assert_eq!(job.source_to_worker, 8);
+        assert_eq!(job.messages, 2);
+        assert!(endpoints[0].recv().is_ok());
+        assert!(endpoints[0].recv().is_ok());
+    }
+
+    #[test]
+    fn shaper_delays_delivery_without_blocking_sender() {
+        use crate::transport::shaper::{LinkShaper, LinkSpec, ShapeRule};
+        let latency = Duration::from_millis(80);
+        let shaper = LinkShaper::new()
+            .rule(ShapeRule::new(LinkSpec::latency(latency)).to_node(0))
+            .into_shared();
+        let (fabric, endpoints) = Fabric::with_tuning(
+            1,
+            FabricTuning {
+                shaper: Some(shaper),
+                ..FabricTuning::default()
+            },
+        );
+        let m = FpMat::zeros(2, 2);
+        let t0 = Instant::now();
+        fabric
+            .send(0, fabric.source_a_id(), 0, Payload::ShareA(pooled(&m)))
+            .unwrap();
+        let sent_in = t0.elapsed();
+        assert!(
+            sent_in < latency / 2,
+            "shaped send blocked the sender for {sent_in:?}"
+        );
+        // Control messages bypass the shaper entirely: this one overtakes
+        // the shaped data envelope still sitting in the pump.
+        fabric
+            .send(0, fabric.master_id(), 0, Payload::Control(ControlMsg::JobAbort))
+            .unwrap();
+        let first = endpoints[0].recv().unwrap();
+        assert!(
+            matches!(first.payload, Payload::Control(ControlMsg::JobAbort)),
+            "control did not overtake shaped data"
+        );
+        let second = endpoints[0].recv().unwrap();
+        assert!(matches!(second.payload, Payload::ShareA(_)));
+        assert!(
+            t0.elapsed() >= latency - Duration::from_millis(10),
+            "shaped envelope released after only {:?}",
+            t0.elapsed()
+        );
+        // Metering happened at send time regardless of shaping.
+        assert_eq!(fabric.traffic().source_to_worker, 4);
+        drop(endpoints);
+        drop(fabric); // joins the pump thread without hanging
     }
 
     #[test]

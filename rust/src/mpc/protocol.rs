@@ -36,6 +36,7 @@ use crate::mpc::{master, source};
 use crate::poly::interp::choose_alphas;
 use crate::runtime::pool::{ScratchPool, WorkerPool};
 use crate::runtime::{BackendChoice, BackendFactory};
+use crate::transport::shaper::LinkShaper;
 use crate::util::rng::ChaChaRng;
 
 /// Knobs for one protocol run.
@@ -65,12 +66,14 @@ pub struct ProtocolConfig {
     /// comfortably exceed the longest legitimate compute + injected delay.
     pub recv_timeout: Duration,
     /// Decode as soon as any `t²+z` I-shares arrive and cancel the
-    /// straggler tail with targeted `JobAbort`s, instead of draining every
-    /// worker's `JobDone` ack. Turns the code's redundancy into latency:
-    /// a job stops depending on its slowest `N−(t²+z)` workers (and
-    /// tolerates that many crashed ones). Off by default because the
-    /// full drain is what makes [`ProtocolOutput::worker_counters`] final
-    /// at return — with early decode they are lower bounds.
+    /// straggler tail with a `JobAbort` broadcast, instead of draining
+    /// every worker's full remainder. Turns the code's redundancy into
+    /// latency: a job stops depending on its slowest `N−(t²+z)` workers
+    /// (and tolerates that many crashed ones). The overhead counters stay
+    /// exact — each live aborted worker answers with an `AbortAck`
+    /// carrying its final totals (drained within `recv_timeout`, metered
+    /// as `PhaseTimings::ack_wait`). Off by default simply because the
+    /// full drain generates no abort/ack traffic.
     pub early_decode: bool,
     /// Consecutive per-job deadline-miss rounds after which a worker
     /// thread self-evicts for the runtime's reaper to replace. Rounds are
@@ -81,6 +84,11 @@ pub struct ProtocolConfig {
     /// Optional deterministic fault-injection plan threaded through the
     /// fabric (see [`crate::mpc::chaos`]). `None` injects nothing.
     pub chaos: Option<Arc<ChaosPlan>>,
+    /// Optional per-link latency/bandwidth emulation (see
+    /// [`crate::transport::shaper`]). Unlike `link_delay` (which sleeps
+    /// the sender), shaped envelopes are delayed *in flight* and the
+    /// sender continues immediately — the honest model of a slow link.
+    pub shaper: Option<Arc<LinkShaper>>,
 }
 
 impl Default for ProtocolConfig {
@@ -96,6 +104,7 @@ impl Default for ProtocolConfig {
             early_decode: false,
             max_deadline_misses: 8,
             chaos: None,
+            shaper: None,
         }
     }
 }
@@ -171,6 +180,12 @@ impl ProtocolConfigBuilder {
         self
     }
 
+    /// Attach per-link latency/bandwidth emulation to the deployment.
+    pub fn shaper(mut self, shaper: Arc<LinkShaper>) -> Self {
+        self.config.shaper = Some(shaper);
+        self
+    }
+
     pub fn build(self) -> ProtocolConfig {
         self.config
     }
@@ -186,9 +201,13 @@ pub struct ProtocolOutput {
     /// This job's traffic only (concurrent jobs on a shared runtime meter
     /// independently; the fabric also keeps cumulative totals).
     pub traffic: TrafficReport,
-    /// Per-worker overhead counters (index = worker id). Final at return on
-    /// the full-drain path; with [`ProtocolConfig::early_decode`], aborted
-    /// stragglers may still be ticking, so treat them as lower bounds.
+    /// Per-worker overhead counters (index = worker id). **Final at
+    /// return on both paths**: the full drain collects every worker's
+    /// `JobDone` totals, and the early-decode fast path drains one
+    /// `AbortAck` per live aborted worker (each acks only after dropping
+    /// and tombstoning the job, so nothing can tick afterwards). The one
+    /// exception is a worker that dies *during* the ack window — its
+    /// counters stop with it.
     pub worker_counters: Vec<Arc<WorkerCounters>>,
     pub verified: bool,
     /// Whether the master took the early-decode fast path (decoded at the
@@ -417,6 +436,7 @@ pub fn run_job(
             phase1_share: phase1,
             phase2_compute: mt.quota_wait + mt.tail_wait,
             phase3_reconstruct: mt.reconstruct,
+            ack_wait: mt.ack_wait,
         },
         traffic,
         worker_counters: counters,
@@ -511,6 +531,7 @@ fn drive_job(
         p.z,
         config.recv_timeout,
         config.early_decode,
+        &counters,
         env.pool,
         env.scratch,
     )?;
@@ -668,6 +689,7 @@ mod tests {
             .early_decode(true)
             .max_deadline_misses(3)
             .chaos(ChaosPlan::new().into_shared())
+            .shaper(LinkShaper::new().into_shared())
             .build();
         assert_eq!(cfg.seed, 99);
         assert!(!cfg.verify);
@@ -678,6 +700,7 @@ mod tests {
         assert!(cfg.early_decode);
         assert_eq!(cfg.max_deadline_misses, 3);
         assert!(cfg.chaos.is_some());
+        assert!(cfg.shaper.is_some());
     }
 
     #[test]
@@ -725,5 +748,20 @@ mod tests {
         assert_eq!(out.y, a.transpose().matmul(&b));
         assert!(out.timings.phase2_compute < delay, "tail was waited for");
         assert!(dep.runtime().health().early_decodes >= 1);
+        // The abort-ack drain makes the fast path's counters final at
+        // return (the ack window — not phase 2 — absorbs the sleeping
+        // victims' wake-ups): nothing may tick afterwards.
+        let snap: Vec<(u64, u64)> = out
+            .worker_counters
+            .iter()
+            .map(|c| (c.mults(), c.stored()))
+            .collect();
+        std::thread::sleep(delay + Duration::from_millis(50));
+        let after: Vec<(u64, u64)> = out
+            .worker_counters
+            .iter()
+            .map(|c| (c.mults(), c.stored()))
+            .collect();
+        assert_eq!(snap, after, "counters ticked after an early-decoded return");
     }
 }

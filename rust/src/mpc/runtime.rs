@@ -42,7 +42,8 @@ use crate::codes::SchemeParams;
 use crate::error::Result;
 use crate::metrics::{RuntimeCounters, RuntimeHealthReport, TrafficReport};
 use crate::mpc::network::{
-    BufferPool, ControlMsg, Endpoint, Fabric, JobId, JobRouter, Payload, CONTROL_JOB,
+    BufferPool, ControlMsg, Endpoint, Fabric, FabricTuning, JobId, JobRouter, Payload,
+    CONTROL_JOB,
 };
 use crate::mpc::protocol::{ProtocolConfig, Setup};
 use crate::mpc::worker::{self, WorkerCtx};
@@ -111,6 +112,9 @@ impl RespawnCtx {
             delay: self.delays.get(wid).copied().unwrap_or(Duration::ZERO),
             recv_timeout: self.recv_timeout,
             max_deadline_misses: self.max_deadline_misses,
+            // The runtime owns its worker threads' lifecycle (Shutdown on
+            // drop), so idle workers block indefinitely.
+            idle_timeout: None,
             health: health.clone(),
         }
     }
@@ -144,8 +148,14 @@ impl WorkerRuntime {
         factory: &Arc<BackendFactory>,
     ) -> Result<WorkerRuntime> {
         let n = setup.n_workers;
-        let (fabric, mut endpoints) =
-            Fabric::with_chaos(n, config.link_delay, config.chaos.clone());
+        let (fabric, mut endpoints) = Fabric::with_tuning(
+            n,
+            FabricTuning {
+                link_delay: config.link_delay,
+                chaos: config.chaos.clone(),
+                shaper: config.shaper.clone(),
+            },
+        );
         let bufs = BufferPool::new();
         let worker_endpoints: Vec<_> = endpoints.drain(0..n).collect();
         let master_endpoint = endpoints.remove(0);
@@ -246,8 +256,13 @@ impl WorkerRuntime {
                 continue;
             }
             // Fresh endpoint first (also clears any chaos-kill mark), so
-            // the replacement starts with an empty, live channel.
-            let endpoint = self.fabric.replace_endpoint(wid);
+            // the replacement starts with an empty, live channel. The
+            // channel transport always hosts every node, so this cannot
+            // fail; a remote transport would (respawn is in-process-only).
+            let endpoint = match self.fabric.replace_endpoint(wid) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
             let spawned = spawn_worker(
                 self.respawn.worker_ctx(wid, self.n_workers, &self.health),
                 endpoint,

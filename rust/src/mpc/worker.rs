@@ -5,7 +5,9 @@
 //! jobs multiplexed over the shared fabric. For each job `n`:
 //! 1. receives a [`ControlMsg::JobStart`] (per-job seed + overhead counters)
 //!    and its shares `(F_A(αₙ), F_B(αₙ))` — in either order, interleaved
-//!    with other jobs' traffic,
+//!    with other jobs' traffic; the shares arrive combined (one in-process
+//!    driver playing both sources) or split across [`Payload::ShareA`] /
+//!    [`Payload::ShareB`] envelopes from two separate source processes,
 //! 2. computes `H(αₙ) = F_A(αₙ)·F_B(αₙ)` on the configured backend,
 //! 3. forms `Gₙ(x) = Σ_{i,l} rₙ^{(i,l)} H(αₙ) x^{i+t·l} + Σ_w R_w x^{t²+w}`
 //!    with `z` fresh uniform mask matrices `R_w` drawn from a per-job rng
@@ -72,6 +74,13 @@ pub struct WorkerCtx {
     /// Consecutive deadline-miss rounds after which the worker self-evicts
     /// for the runtime's reaper to replace.
     pub max_deadline_misses: usize,
+    /// How long the serve loop may sit **idle** (no jobs in flight, no
+    /// envelope at all) before exiting cleanly. `None` — the in-process
+    /// runtime default — blocks forever (the runtime owns the thread's
+    /// lifecycle via `Shutdown`). Multi-process node workers set a bound
+    /// so a worker orphaned by a killed master process terminates instead
+    /// of leaking.
+    pub idle_timeout: Option<Duration>,
     /// Runtime-level health counters (deadline misses are recorded here).
     pub health: Arc<RuntimeCounters>,
 }
@@ -80,8 +89,11 @@ pub struct WorkerCtx {
 struct JobState {
     /// Per-job seed + overhead counters from [`ControlMsg::JobStart`].
     start: Option<(u64, Arc<WorkerCounters>)>,
-    /// Phase-1 shares, held until the compute phase consumes them.
-    shares: Option<(PooledMat, PooledMat)>,
+    /// Phase-1 `F_A(αₙ)` share — from the combined in-process envelope or
+    /// a separate source-A process's [`Payload::ShareA`].
+    share_a: Option<PooledMat>,
+    /// Phase-1 `F_B(αₙ)` share (combined envelope or [`Payload::ShareB`]).
+    share_b: Option<PooledMat>,
     /// G-shares from peers that computed before us.
     early_g: Vec<PooledMat>,
     /// Own `I(αₙ)` accumulator; present once the compute phase ran.
@@ -97,11 +109,21 @@ impl JobState {
     fn new() -> JobState {
         JobState {
             start: None,
-            shares: None,
+            share_a: None,
+            share_b: None,
             early_g: Vec::new(),
             i_share: None,
             received: 0,
             last_progress: Instant::now(),
+        }
+    }
+
+    /// Current overhead totals (zeros before the job started counting) —
+    /// what `JobDone`/`AbortAck` report back to the driver.
+    fn counter_totals(&self) -> (u64, u64) {
+        match &self.start {
+            Some((_, c)) => (c.mults(), c.stored()),
+            None => (0, 0),
         }
     }
 }
@@ -154,10 +176,18 @@ pub fn serve_worker(
     loop {
         let env = if jobs.is_empty() {
             // Idle: block until the next job (or shutdown). A closed fabric
-            // means the runtime is gone — exit cleanly.
-            match endpoint.recv() {
-                Ok(env) => env,
-                Err(_) => return Ok(()),
+            // means the runtime is gone — exit cleanly. With an idle bound
+            // (multi-process node workers), a silent fabric eventually
+            // means an orphaned process: exit cleanly too.
+            match ctx.idle_timeout {
+                None => match endpoint.recv() {
+                    Ok(env) => env,
+                    Err(_) => return Ok(()),
+                },
+                Some(limit) => match endpoint.recv_timeout_raw(limit) {
+                    Ok(env) => env,
+                    Err(_) => return Ok(()),
+                },
             }
         } else {
             // Wait no longer than the earliest per-job deadline.
@@ -244,11 +274,20 @@ pub fn serve_worker(
             Payload::Control(ControlMsg::JobAbort) => {
                 // The driver gave up on this job (a peer failed or its
                 // receive timed out) or the master early-decoded and no
-                // longer needs the tail: drop whatever state we hold and
+                // longer needs the tail: drop whatever state we hold,
                 // tombstone the id so a slow peer's G-share cannot
-                // resurrect it.
-                jobs.remove(&job);
+                // resurrect it, and acknowledge with our final counter
+                // totals — after the tombstone, nothing can tick them, so
+                // the driver's ξ/σ report is exact, not a lower bound.
+                let totals = jobs.remove(&job).map(|st| st.counter_totals());
                 failed.insert(job);
+                let (mults, stored) = totals.unwrap_or((0, 0));
+                let _ = fabric.send(
+                    job,
+                    ctx.id,
+                    fabric.master_id(),
+                    Payload::Control(ControlMsg::AbortAck { mults, stored }),
+                );
             }
             Payload::Control(ControlMsg::JobStart { seed, counters }) => {
                 let st = jobs.entry(job).or_insert_with(JobState::new);
@@ -257,7 +296,18 @@ pub fn serve_worker(
             }
             Payload::Shares { fa, fb } => {
                 let st = jobs.entry(job).or_insert_with(JobState::new);
-                st.shares = Some((fa, fb));
+                st.share_a = Some(fa);
+                st.share_b = Some(fb);
+                st.last_progress = Instant::now();
+            }
+            Payload::ShareA(fa) => {
+                let st = jobs.entry(job).or_insert_with(JobState::new);
+                st.share_a = Some(fa);
+                st.last_progress = Instant::now();
+            }
+            Payload::ShareB(fb) => {
+                let st = jobs.entry(job).or_insert_with(JobState::new);
+                st.share_b = Some(fb);
                 st.last_progress = Instant::now();
             }
             Payload::GShare(g) => {
@@ -272,8 +322,9 @@ pub fn serve_worker(
                     st.early_g.push(g);
                 }
             }
-            // IShare / JobDone / JobError never legally target a worker;
-            // report the routing bug for that job and drop its state.
+            // IShare / JobDone / JobError / AbortAck never legally target
+            // a worker; report the routing bug for that job and drop its
+            // state.
             other => {
                 jobs.remove(&job);
                 failed.insert(job);
@@ -370,8 +421,8 @@ fn advance_job(
     scratch: &mut ComputeScratch,
 ) -> Result<bool> {
     if st.i_share.is_none() {
-        if st.start.is_none() || st.shares.is_none() {
-            return Ok(false); // still waiting for JobStart or shares
+        if st.start.is_none() || st.share_a.is_none() || st.share_b.is_none() {
+            return Ok(false); // still waiting for JobStart or either share
         }
         compute_phase(ctx, job, st, fabric, bufs, backend, scratch)?;
     }
@@ -380,11 +431,15 @@ fn advance_job(
         let i_share = st.i_share.take().expect("i_share present");
         counters.add_stored(i_share.len() as u64);
         fabric.send(job, ctx.id, fabric.master_id(), Payload::IShare(i_share))?;
+        // Totals are final here — the worker never touches this job's
+        // counters again — so JobDone can carry them (the driver-side
+        // counters of a *remote* worker are set from exactly this).
+        let (mults, stored) = (counters.mults(), counters.stored());
         fabric.send(
             job,
             ctx.id,
             fabric.master_id(),
-            Payload::Control(ControlMsg::JobDone),
+            Payload::Control(ControlMsg::JobDone { mults, stored }),
         )?;
         return Ok(true);
     }
@@ -408,7 +463,8 @@ fn compute_phase(
         let (seed, c) = st.start.as_ref().expect("started");
         (*seed, c.clone())
     };
-    let (fa, fb) = st.shares.take().expect("shares present");
+    let fa = st.share_a.take().expect("share A present");
+    let fb = st.share_b.take().expect("share B present");
     counters.add_stored((fa.len() + fb.len()) as u64);
 
     if !ctx.delay.is_zero() {

@@ -1,20 +1,47 @@
-//! Artifact manifest: maps compiled HLO graphs to the shapes they serve.
+//! Plain-text manifests: compiled-artifact maps and distributed-topology
+//! descriptions.
 //!
-//! `python/compile/aot.py` writes `artifacts/manifest.txt` with one record
-//! per lowered executable:
+//! **Artifact manifest** ([`Manifest`]): `python/compile/aot.py` writes
+//! `artifacts/manifest.txt` with one record per lowered executable:
 //!
 //! ```text
 //! # model  M  K  N  path
 //! matmul_mod 128 128 128 matmul_mod_128x128x128.hlo.txt
 //! ```
 //!
+//! **Topology manifest** ([`TopologyManifest`]): describes one distributed
+//! CMPC deployment — scheme, job parameters, one `host:port` per node, and
+//! optional link-shaping rules — consumed by `cmpc node` (every party
+//! process reads the same file) and by the loopback cluster harness:
+//!
+//! ```text
+//! # cmpc topology v1
+//! scheme age
+//! params 2 2 2
+//! m 64
+//! seed 7
+//! jobs 2
+//! worker 0 10.0.0.10:9300
+//! worker 1 10.0.0.11:9300
+//! master 10.0.0.2:9300
+//! source-a 10.0.0.3:9300
+//! source-b 10.0.0.4:9300
+//! shape * * 40000 12500000 65536 gshare
+//! ```
+//!
 //! A plain line format is used instead of JSON because the offline build has
-//! no serde; the format is versioned by the header comment.
+//! no serde; the formats are versioned by their header comments.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
 
+use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
 use crate::error::{CmpcError, Result};
+use crate::mpc::chaos::PayloadClass;
+use crate::mpc::network::NodeId;
+use crate::transport::shaper::{LinkShaper, LinkSpec, ShapeRule};
 
 /// Shape key for a modular matmul artifact: `(M, K, N)`.
 pub type MatmulShape = (usize, usize, usize);
@@ -72,6 +99,451 @@ fn bad_line(lineno: usize, e: &std::num::ParseIntError) -> CmpcError {
     CmpcError::BackendUnavailable(format!("manifest.txt line {}: {e}", lineno + 1))
 }
 
+// ------------------------------------------------------------- topology
+
+/// One parsed `shape` line: a link-matching rule for the
+/// [`LinkShaper`] built by [`TopologyManifest::shaper`]. `None` = `*`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeLine {
+    pub from: Option<NodeId>,
+    pub to: Option<NodeId>,
+    pub latency_us: u64,
+    pub rate_bps: u64,
+    pub burst_bytes: u64,
+    pub class: Option<PayloadClass>,
+}
+
+/// A distributed CMPC deployment description: scheme + job parameters +
+/// one address per node + optional link shaping. Every party process
+/// reads the same manifest, so the whole cluster derives identical setup
+/// (α assignment, reconstruction coefficients, per-job seeds and data).
+///
+/// Node-id layout matches the fabric: `0..N` → workers, `N` → master,
+/// `N+1` → source A, `N+2` → source B.
+#[derive(Debug, Clone)]
+pub struct TopologyManifest {
+    /// Scheme family: `age`, `polydot`, or `entangled`.
+    pub scheme: String,
+    pub s: usize,
+    pub t: usize,
+    pub z: usize,
+    /// Job matrix size (m×m).
+    pub m: usize,
+    /// Base seed: per-job secret seeds and the demo job data derive from it
+    /// identically in every process (and in the in-process reference).
+    pub seed: u64,
+    /// Jobs the master drives before shutting the cluster down.
+    pub jobs: usize,
+    /// Master decodes at the t²+z quota and aborts the straggler tail.
+    pub early_decode: bool,
+    /// Master checks `Y == AᵀB` before reporting each job.
+    pub verify: bool,
+    /// Outbound connect retry budget (peers may start in any order).
+    pub connect_timeout: Duration,
+    /// Per-receive bound while a job is in flight (same meaning as
+    /// `ProtocolConfig::recv_timeout`).
+    pub recv_timeout: Duration,
+    /// Worker addresses, indexed by worker id.
+    pub workers: Vec<String>,
+    pub master: String,
+    pub source_a: String,
+    pub source_b: String,
+    /// Link-shaping rules (empty = unshaped).
+    pub shapes: Vec<ShapeLine>,
+}
+
+fn topo_err(lineno: usize, msg: impl std::fmt::Display) -> CmpcError {
+    CmpcError::InvalidParams(format!("topology manifest line {}: {msg}", lineno + 1))
+}
+
+fn parse_field<T: std::str::FromStr>(lineno: usize, name: &str, v: &str) -> Result<T> {
+    v.parse()
+        .map_err(|_| topo_err(lineno, format!("bad {name} value {v:?}")))
+}
+
+fn parse_wild(lineno: usize, name: &str, v: &str) -> Result<Option<usize>> {
+    if v == "*" {
+        Ok(None)
+    } else {
+        Ok(Some(parse_field(lineno, name, v)?))
+    }
+}
+
+impl TopologyManifest {
+    /// Build a loopback/demo manifest for `scheme` at `(s,t,z)`:
+    /// `host:base_port+node_id` per node (`base_port == 0` leaves every
+    /// port 0, for harnesses that bind first and learn real ports).
+    #[allow(clippy::too_many_arguments)]
+    pub fn template(
+        scheme: &str,
+        s: usize,
+        t: usize,
+        z: usize,
+        m: usize,
+        seed: u64,
+        jobs: usize,
+        host: &str,
+        base_port: u16,
+    ) -> Result<TopologyManifest> {
+        let mut manifest = TopologyManifest {
+            scheme: scheme.to_string(),
+            s,
+            t,
+            z,
+            m,
+            seed,
+            jobs,
+            early_decode: false,
+            verify: true,
+            connect_timeout: Duration::from_secs(10),
+            recv_timeout: Duration::from_secs(30),
+            workers: Vec::new(),
+            master: String::new(),
+            source_a: String::new(),
+            source_b: String::new(),
+            shapes: Vec::new(),
+        };
+        let n = manifest.resolve_scheme()?.n_workers();
+        if base_port != 0 && (base_port as usize) + n + 2 > u16::MAX as usize {
+            return Err(CmpcError::InvalidParams(format!(
+                "base port {base_port} leaves no room for {} node ports",
+                n + 3
+            )));
+        }
+        let addr = |i: usize| {
+            if base_port == 0 {
+                format!("{host}:0")
+            } else {
+                format!("{host}:{}", base_port as usize + i)
+            }
+        };
+        manifest.workers = (0..n).map(&addr).collect();
+        manifest.master = addr(n);
+        manifest.source_a = addr(n + 1);
+        manifest.source_b = addr(n + 2);
+        Ok(manifest)
+    }
+
+    /// Parse the line format shown in the module docs. Unknown keys are
+    /// errors (typos must not silently reconfigure a cluster).
+    pub fn parse(text: &str) -> Result<TopologyManifest> {
+        let mut scheme = None;
+        let mut params: Option<(usize, usize, usize)> = None;
+        let (mut m, mut seed, mut jobs) = (None, None, None);
+        let mut early_decode = false;
+        let mut verify = true;
+        let mut connect_timeout = Duration::from_secs(10);
+        let mut recv_timeout = Duration::from_secs(30);
+        let mut workers: HashMap<usize, String> = HashMap::new();
+        let (mut master, mut source_a, mut source_b) = (None, None, None);
+        let mut shapes = Vec::new();
+        // Duplicate identity/parameter lines are errors, same as unknown
+        // keys: a stale line left in a hand-edited manifest must not
+        // silently win (or lose) over the intended one.
+        fn no_dup<T>(lineno: usize, key: &str, slot: &Option<T>) -> Result<()> {
+            if slot.is_some() {
+                return Err(topo_err(lineno, format!("duplicate {key} line")));
+            }
+            Ok(())
+        }
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            match fields.as_slice() {
+                ["scheme", v] => {
+                    no_dup(lineno, "scheme", &scheme)?;
+                    scheme = Some(v.to_string());
+                }
+                ["params", s, t, z] => {
+                    no_dup(lineno, "params", &params)?;
+                    params = Some((
+                        parse_field(lineno, "s", s)?,
+                        parse_field(lineno, "t", t)?,
+                        parse_field(lineno, "z", z)?,
+                    ))
+                }
+                ["m", v] => {
+                    no_dup(lineno, "m", &m)?;
+                    m = Some(parse_field(lineno, "m", v)?);
+                }
+                ["seed", v] => {
+                    no_dup(lineno, "seed", &seed)?;
+                    seed = Some(parse_field(lineno, "seed", v)?);
+                }
+                ["jobs", v] => {
+                    no_dup(lineno, "jobs", &jobs)?;
+                    jobs = Some(parse_field(lineno, "jobs", v)?);
+                }
+                ["early_decode", v] => {
+                    early_decode = parse_field::<u8>(lineno, "early_decode", v)? != 0
+                }
+                ["verify", v] => verify = parse_field::<u8>(lineno, "verify", v)? != 0,
+                ["connect_timeout_ms", v] => {
+                    connect_timeout =
+                        Duration::from_millis(parse_field(lineno, "connect_timeout_ms", v)?)
+                }
+                ["recv_timeout_ms", v] => {
+                    recv_timeout =
+                        Duration::from_millis(parse_field(lineno, "recv_timeout_ms", v)?)
+                }
+                ["worker", idx, addr] => {
+                    let idx: usize = parse_field(lineno, "worker index", idx)?;
+                    if workers.insert(idx, addr.to_string()).is_some() {
+                        return Err(topo_err(lineno, format!("duplicate worker {idx}")));
+                    }
+                }
+                ["master", addr] => {
+                    no_dup(lineno, "master", &master)?;
+                    master = Some(addr.to_string());
+                }
+                ["source-a", addr] => {
+                    no_dup(lineno, "source-a", &source_a)?;
+                    source_a = Some(addr.to_string());
+                }
+                ["source-b", addr] => {
+                    no_dup(lineno, "source-b", &source_b)?;
+                    source_b = Some(addr.to_string());
+                }
+                ["shape", rest @ ..] if (4..=6usize).contains(&rest.len()) => {
+                    let from = parse_wild(lineno, "shape from", rest[0])?;
+                    let to = parse_wild(lineno, "shape to", rest[1])?;
+                    let latency_us = parse_field(lineno, "latency_us", rest[2])?;
+                    let rate_bps = parse_field(lineno, "rate_bps", rest[3])?;
+                    let burst_bytes = if rest.len() >= 5 {
+                        parse_field(lineno, "burst_bytes", rest[4])?
+                    } else {
+                        0
+                    };
+                    let class = if rest.len() == 6 {
+                        match rest[5] {
+                            "*" => None,
+                            "shares" => Some(PayloadClass::Shares),
+                            "gshare" => Some(PayloadClass::GShare),
+                            "ishare" => Some(PayloadClass::IShare),
+                            other => {
+                                return Err(topo_err(
+                                    lineno,
+                                    format!("unknown shape class {other:?}"),
+                                ))
+                            }
+                        }
+                    } else {
+                        None
+                    };
+                    shapes.push(ShapeLine {
+                        from,
+                        to,
+                        latency_us,
+                        rate_bps,
+                        burst_bytes,
+                        class,
+                    });
+                }
+                _ => return Err(topo_err(lineno, format!("unrecognized record {line:?}"))),
+            }
+        }
+        let missing = |what: &str| {
+            CmpcError::InvalidParams(format!("topology manifest: missing {what}"))
+        };
+        let (s, t, z) = params.ok_or_else(|| missing("params"))?;
+        let n = workers.len();
+        let mut worker_addrs = Vec::with_capacity(n);
+        for i in 0..n {
+            worker_addrs.push(workers.remove(&i).ok_or_else(|| {
+                CmpcError::InvalidParams(format!(
+                    "topology manifest: worker ids must be contiguous (missing worker {i})"
+                ))
+            })?);
+        }
+        let manifest = TopologyManifest {
+            scheme: scheme.ok_or_else(|| missing("scheme"))?,
+            s,
+            t,
+            z,
+            m: m.ok_or_else(|| missing("m"))?,
+            seed: seed.ok_or_else(|| missing("seed"))?,
+            jobs: jobs.ok_or_else(|| missing("jobs"))?,
+            early_decode,
+            verify,
+            connect_timeout,
+            recv_timeout,
+            workers: worker_addrs,
+            master: master.ok_or_else(|| missing("master address"))?,
+            source_a: source_a.ok_or_else(|| missing("source-a address"))?,
+            source_b: source_b.ok_or_else(|| missing("source-b address"))?,
+            shapes,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Load and parse a manifest file.
+    pub fn load(path: &Path) -> Result<TopologyManifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| CmpcError::Io(format!("reading {}: {e}", path.display())))?;
+        TopologyManifest::parse(&text)
+    }
+
+    /// Serialize back to the line format ([`TopologyManifest::parse`] is
+    /// its inverse).
+    pub fn render(&self) -> String {
+        let mut out = String::from("# cmpc topology v1\n");
+        out.push_str(&format!("scheme {}\n", self.scheme));
+        out.push_str(&format!("params {} {} {}\n", self.s, self.t, self.z));
+        out.push_str(&format!("m {}\n", self.m));
+        out.push_str(&format!("seed {}\n", self.seed));
+        out.push_str(&format!("jobs {}\n", self.jobs));
+        out.push_str(&format!("early_decode {}\n", u8::from(self.early_decode)));
+        out.push_str(&format!("verify {}\n", u8::from(self.verify)));
+        out.push_str(&format!(
+            "connect_timeout_ms {}\n",
+            self.connect_timeout.as_millis()
+        ));
+        out.push_str(&format!(
+            "recv_timeout_ms {}\n",
+            self.recv_timeout.as_millis()
+        ));
+        for (i, addr) in self.workers.iter().enumerate() {
+            out.push_str(&format!("worker {i} {addr}\n"));
+        }
+        out.push_str(&format!("master {}\n", self.master));
+        out.push_str(&format!("source-a {}\n", self.source_a));
+        out.push_str(&format!("source-b {}\n", self.source_b));
+        for sh in &self.shapes {
+            let wild = |v: Option<usize>| match v {
+                Some(n) => n.to_string(),
+                None => "*".to_string(),
+            };
+            let class = match sh.class {
+                None => "*",
+                Some(PayloadClass::Shares) => "shares",
+                Some(PayloadClass::GShare) => "gshare",
+                Some(PayloadClass::IShare) => "ishare",
+                Some(PayloadClass::Control) => "*",
+            };
+            out.push_str(&format!(
+                "shape {} {} {} {} {} {class}\n",
+                wild(sh.from),
+                wild(sh.to),
+                sh.latency_us,
+                sh.rate_bps,
+                sh.burst_bytes
+            ));
+        }
+        out
+    }
+
+    /// Cross-field validation: the scheme must resolve and its worker
+    /// count must match the declared addresses.
+    pub fn validate(&self) -> Result<()> {
+        if self.jobs == 0 {
+            return Err(CmpcError::InvalidParams(
+                "topology manifest: jobs must be ≥ 1".to_string(),
+            ));
+        }
+        let scheme = self.resolve_scheme()?;
+        if scheme.n_workers() != self.workers.len() {
+            return Err(CmpcError::InvalidParams(format!(
+                "topology manifest: {} needs {} workers at (s={}, t={}, z={}) but {} worker \
+                 addresses are declared",
+                scheme.name(),
+                scheme.n_workers(),
+                self.s,
+                self.t,
+                self.z,
+                self.workers.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// The registry spec named by the `scheme` line.
+    pub fn spec(&self) -> Result<SchemeSpec> {
+        match self.scheme.as_str() {
+            "age" => Ok(SchemeSpec::Age { lambda: None }),
+            "polydot" => Ok(SchemeSpec::PolyDot),
+            "entangled" => Ok(SchemeSpec::Entangled),
+            other => Err(CmpcError::InvalidParams(format!(
+                "topology manifest: unknown scheme {other:?} (age|polydot|entangled)"
+            ))),
+        }
+    }
+
+    /// Resolve the manifest's scheme instance.
+    pub fn resolve_scheme(&self) -> Result<Arc<dyn CmpcScheme>> {
+        self.spec()?.resolve(SchemeParams::try_new(self.s, self.t, self.z)?)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.workers.len() + 3
+    }
+
+    pub fn master_id(&self) -> NodeId {
+        self.workers.len()
+    }
+
+    pub fn source_a_id(&self) -> NodeId {
+        self.workers.len() + 1
+    }
+
+    pub fn source_b_id(&self) -> NodeId {
+        self.workers.len() + 2
+    }
+
+    /// Every node's address, indexed by node id (what the TCP transport
+    /// consumes).
+    pub fn addrs(&self) -> Vec<String> {
+        let mut v = self.workers.clone();
+        v.push(self.master.clone());
+        v.push(self.source_a.clone());
+        v.push(self.source_b.clone());
+        v
+    }
+
+    /// Build the [`LinkShaper`] described by the `shape` lines (`None`
+    /// when there are none).
+    pub fn shaper(&self) -> Option<Arc<LinkShaper>> {
+        if self.shapes.is_empty() {
+            return None;
+        }
+        let mut shaper = LinkShaper::new();
+        for sh in &self.shapes {
+            // Ceiling division: a tiny nonzero bit rate must never round
+            // to 0, which LinkSpec treats as the *unlimited* sentinel —
+            // that would silently invert a worst-case-WAN experiment.
+            let rate_bytes = if sh.rate_bps == 0 {
+                0
+            } else {
+                sh.rate_bps.div_ceil(8)
+            };
+            let spec = LinkSpec::new(
+                Duration::from_micros(sh.latency_us),
+                rate_bytes,
+                sh.burst_bytes,
+            );
+            let mut rule = ShapeRule::new(spec);
+            if let Some(f) = sh.from {
+                rule = rule.from_node(f);
+            }
+            if let Some(t) = sh.to {
+                rule = rule.to_node(t);
+            }
+            if let Some(c) = sh.class {
+                rule = rule.class(c);
+            }
+            shaper = shaper.rule(rule);
+        }
+        Some(shaper.into_shared())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +583,89 @@ mod tests {
         std::fs::write(dir.join("manifest.txt"), "bogus record here\n").unwrap();
         assert!(Manifest::load(&dir).is_err());
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn topology_template_roundtrips_through_render_and_parse() {
+        let mut m =
+            TopologyManifest::template("age", 2, 2, 2, 8, 7, 2, "127.0.0.1", 9300).unwrap();
+        m.shapes.push(ShapeLine {
+            from: None,
+            to: Some(3),
+            latency_us: 500,
+            rate_bps: 8_000_000,
+            burst_bytes: 4096,
+            class: Some(PayloadClass::GShare),
+        });
+        assert_eq!(m.n_workers(), 17); // AGE(2,2,2)
+        assert_eq!(m.master_id(), 17);
+        assert_eq!(m.addrs().len(), 20);
+        assert_eq!(m.workers[0], "127.0.0.1:9300");
+        assert_eq!(m.source_b, "127.0.0.1:9319");
+        let back = TopologyManifest::parse(&m.render()).unwrap();
+        assert_eq!(back.scheme, "age");
+        assert_eq!((back.s, back.t, back.z, back.m), (2, 2, 2, 8));
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.jobs, 2);
+        assert_eq!(back.workers, m.workers);
+        assert_eq!(back.master, m.master);
+        assert_eq!(back.shapes, m.shapes);
+        assert!(back.shaper().is_some());
+        assert!(back.spec().is_ok());
+    }
+
+    #[test]
+    fn topology_rejects_inconsistent_files() {
+        let good = TopologyManifest::template("age", 2, 2, 2, 8, 7, 1, "127.0.0.1", 9400)
+            .unwrap()
+            .render();
+        // a missing worker id breaks contiguity
+        let holey: String = good
+            .lines()
+            .filter(|l| !l.starts_with("worker 3 "))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let err = TopologyManifest::parse(&holey).unwrap_err();
+        assert!(matches!(err, CmpcError::InvalidParams(_)), "{err}");
+        // wrong worker count for the scheme
+        let short: String = good
+            .lines()
+            .filter(|l| !l.starts_with("worker 16 "))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let err = TopologyManifest::parse(&short).unwrap_err();
+        assert!(err.to_string().contains("worker"), "{err}");
+        // unknown keys are typed errors, not silence
+        let err = TopologyManifest::parse(&format!("{good}warp_drive on\n")).unwrap_err();
+        assert!(matches!(err, CmpcError::InvalidParams(_)), "{err}");
+        // …and so are duplicated identity lines (no silent last-wins)
+        let err =
+            TopologyManifest::parse(&format!("{good}master 10.0.0.9:1234\n")).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        let err = TopologyManifest::parse(&format!("{good}seed 8\n")).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn topology_shape_rate_never_rounds_to_unlimited() {
+        let mut m =
+            TopologyManifest::template("age", 2, 2, 2, 8, 7, 1, "127.0.0.1", 9500).unwrap();
+        m.shapes.push(ShapeLine {
+            from: None,
+            to: None,
+            latency_us: 0,
+            rate_bps: 4, // sub-byte bit rate: must shape, not become ∞
+            burst_bytes: 0,
+            class: None,
+        });
+        let shaper = m.shaper().expect("shaper built");
+        let at = shaper.release_at(
+            0,
+            1,
+            PayloadClass::GShare,
+            1024,
+            std::time::Instant::now(),
+        );
+        assert!(at.is_some(), "tiny bit rate was treated as unlimited");
     }
 }

@@ -1,0 +1,25 @@
+//! Distributed edge transport: the pieces that take the fabric off the
+//! in-process mpsc channels and onto real networks.
+//!
+//! * [`wire`] — the std-only framed wire codec: versioned magic +
+//!   length-prefixed little-endian encoding of every
+//!   [`crate::mpc::network::Envelope`], hardened against truncated,
+//!   corrupt, and adversarial frames (typed errors, never panics, no
+//!   unbounded allocations).
+//! * [`tcp`] — a [`crate::mpc::network::Transport`] over `std::net`
+//!   sockets: each party binds one listener, connects lazily to its peers
+//!   per a [`crate::runtime::manifest::TopologyManifest`], and meters the
+//!   bytes it actually puts on the wire per edge class.
+//! * [`shaper`] — per-link latency + token-bucket bandwidth emulation,
+//!   composable with both transports and with the chaos fault harness, so
+//!   LAN vs WAN edge scenarios are reproducible in-tree.
+//! * [`node`] — the multi-node runner behind `cmpc node`: one OS process
+//!   (or thread) per party — worker / master / source-a / source-b —
+//!   driving the existing `serve_worker` / `run_master` state machines
+//!   over TCP, plus an in-process loopback cluster harness for tests and
+//!   benches.
+
+pub mod node;
+pub mod shaper;
+pub mod tcp;
+pub mod wire;

@@ -1,0 +1,610 @@
+//! Multi-node runner: one OS process (or thread) per CMPC party, over TCP.
+//!
+//! `cmpc node --role worker|master|source-a|source-b --manifest <path>`
+//! runs exactly one party; a [`TopologyManifest`] read by every process
+//! makes the cluster self-consistent (same scheme resolution, same α
+//! assignment, same per-job seeds and demo data). The protocol state
+//! machines are the *same code* the in-process runtime drives —
+//! [`serve_worker`] for workers, [`run_master`] + [`JobRouter`] for the
+//! master — only the transport underneath changes, so a multi-process run
+//! decodes `Y` byte-identical to the in-process fabric (pinned by
+//! `tests/distributed.rs` and the CI multi-process lane).
+//!
+//! Division of labor per the paper's topology:
+//!
+//! * **master** — drives the jobs: announces each [`ControlMsg::JobStart`]
+//!   (to workers *and* sources), runs Phase-3 reconstruction, verifies
+//!   `Y = AᵀB` locally, reports digests/traffic, and shuts the cluster
+//!   down after the last job (even on failure, so peers never hang).
+//! * **source-a / source-b** — hold `A` resp. `B` (derived from the
+//!   manifest seed per job, so the demo needs no data distribution),
+//!   build their share polynomial on each `JobStart`, and send
+//!   [`Payload::ShareA`] / [`Payload::ShareB`] evaluations to every
+//!   worker — the split form of Phase 1, since neither source holds the
+//!   other's matrix.
+//! * **worker `i`** — `serve_worker` verbatim: Phase-2 compute, the
+//!   G-exchange with every peer, `I(αᵢ)` to the master.
+//!
+//! [`run_local_cluster`] runs the same topology inside one process —
+//! every node a thread, every link a real 127.0.0.1 socket — which is how
+//! the tests and the bench measure on-wire bytes against the analytical ζ.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::codes::SchemeParams;
+use crate::error::{CmpcError, Result};
+use crate::matrix::FpMat;
+use crate::metrics::{RuntimeCounters, TrafficReport, WireStats, WorkerCounters};
+use crate::mpc::chaos::ChaosPlan;
+use crate::mpc::deployment::Deployment;
+use crate::mpc::master::run_master;
+use crate::mpc::network::{
+    ControlMsg, Endpoint, Fabric, FabricTuning, JobId, JobRouter, NodeId, Payload, PooledMat,
+    Transport, CONTROL_JOB,
+};
+use crate::mpc::protocol::{prepare_setup, ProtocolConfig};
+use crate::mpc::source;
+use crate::mpc::worker::{serve_worker, WorkerCtx};
+use crate::runtime::manifest::TopologyManifest;
+use crate::runtime::pool::{ScratchPool, WorkerPool};
+use crate::runtime::{BackendChoice, BackendFactory};
+use crate::transport::tcp::TcpTransport;
+use crate::util::rng::ChaChaRng;
+
+/// Which party this process plays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeRole {
+    Worker(usize),
+    Master,
+    SourceA,
+    SourceB,
+}
+
+impl NodeRole {
+    /// Parse a `--role` string (+ `--index` for workers).
+    pub fn parse(role: &str, index: Option<usize>) -> Result<NodeRole> {
+        match role {
+            "worker" => match index {
+                Some(i) => Ok(NodeRole::Worker(i)),
+                None => Err(CmpcError::InvalidParams(
+                    "role worker needs --index <worker id>".to_string(),
+                )),
+            },
+            "master" => Ok(NodeRole::Master),
+            "source-a" => Ok(NodeRole::SourceA),
+            "source-b" => Ok(NodeRole::SourceB),
+            other => Err(CmpcError::InvalidParams(format!(
+                "unknown role {other:?} (worker|master|source-a|source-b)"
+            ))),
+        }
+    }
+}
+
+/// Per-job secret seed — delegates to the same derivation
+/// [`Deployment::execute`] uses ([`crate::mpc::deployment::derive_job_seed`]),
+/// which is what makes a distributed run byte-identical to the in-process
+/// reference.
+pub fn job_secret_seed(base: u64, job: JobId) -> u64 {
+    crate::mpc::deployment::derive_job_seed(base, job)
+}
+
+/// The demo input matrices of one job, derived from the manifest seed so
+/// every party (and the in-process reference) agrees without any data
+/// distribution. Source A uses `A`, source B uses `B`, the master uses
+/// both for verification.
+pub fn job_matrices(base: u64, job: JobId, m: usize) -> (FpMat, FpMat) {
+    let seed = base ^ job.wrapping_mul(0xD6E8_FEB8_6659_FD93).wrapping_add(0x5851_F42D);
+    let mut rng = ChaChaRng::seed_from_u64(seed);
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    (a, b)
+}
+
+fn fnv1a(h: &mut u64, byte: u8) {
+    *h ^= byte as u64;
+    *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+}
+
+/// FNV-1a digest over a matrix's dimensions and scalars — the compact
+/// output-equality witness the CI lane diffs between the distributed
+/// master and the in-process reference.
+pub fn digest_mat(m: &FpMat) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for d in [m.rows as u64, m.cols as u64] {
+        for byte in d.to_le_bytes() {
+            fnv1a(&mut h, byte);
+        }
+    }
+    for &v in &m.data {
+        for byte in v.to_le_bytes() {
+            fnv1a(&mut h, byte);
+        }
+    }
+    h
+}
+
+/// How long a long-running role (worker, source) tolerates a completely
+/// silent fabric before concluding the master is gone.
+///
+/// The window must comfortably exceed the longest **inter-job gap** — the
+/// master verifies `Y = AᵀB` single-threaded between jobs, so at large `m`
+/// with a small `recv_timeout_ms` the 4× multiple can get tight; raise
+/// `recv_timeout_ms` in the manifest if idle peers bail mid-run.
+fn idle_budget(manifest: &TopologyManifest) -> Duration {
+    manifest
+        .recv_timeout
+        .saturating_mul(4)
+        .max(Duration::from_secs(1))
+}
+
+fn over_tcp(
+    manifest: &TopologyManifest,
+    transport: &Arc<TcpTransport>,
+    chaos: Option<Arc<ChaosPlan>>,
+) -> Arc<Fabric> {
+    let t: Arc<dyn Transport> = transport.clone();
+    Fabric::over_transport(
+        t,
+        FabricTuning {
+            link_delay: None,
+            chaos,
+            shaper: manifest.shaper(),
+        },
+    )
+}
+
+/// Serve worker `index` over `transport` until the master's shutdown (or a
+/// chaos kill / self-eviction). The state machine is the in-process
+/// [`serve_worker`], unchanged.
+pub fn serve_worker_node(
+    manifest: &TopologyManifest,
+    index: usize,
+    transport: Arc<TcpTransport>,
+    endpoint: Endpoint,
+    chaos: Option<Arc<ChaosPlan>>,
+) -> Result<()> {
+    if index >= manifest.n_workers() {
+        return Err(CmpcError::InvalidParams(format!(
+            "worker index {index} outside the manifest's {} workers",
+            manifest.n_workers()
+        )));
+    }
+    let scheme = manifest.resolve_scheme()?;
+    let p = scheme.params();
+    let setup = prepare_setup(scheme.as_ref())?;
+    let fabric = over_tcp(manifest, &transport, chaos);
+    let ctx = WorkerCtx {
+        id: index,
+        n_workers: setup.n_workers,
+        t: p.t,
+        z: p.z,
+        alphas: setup.alphas.clone(),
+        r_coeffs: setup.r_coeffs.clone(),
+        delay: Duration::ZERO,
+        recv_timeout: manifest.recv_timeout,
+        max_deadline_misses: ProtocolConfig::default().max_deadline_misses,
+        // An orphaned worker process (master killed before its shutdown
+        // broadcast) terminates after a silent idle window instead of
+        // leaking — same bound the sources use.
+        idle_timeout: Some(idle_budget(manifest)),
+        health: Arc::new(RuntimeCounters::default()),
+    };
+    let factory = BackendFactory::new(&BackendChoice::Native)?;
+    serve_worker(
+        ctx,
+        endpoint,
+        fabric,
+        factory.make(),
+        transport.buffers().clone(),
+    )
+}
+
+/// Serve one source role: on every [`ControlMsg::JobStart`], build the
+/// share polynomial for this source's matrix and send the split Phase-1
+/// shares to every worker. Exits on shutdown — or after a long idle
+/// window (4× the receive timeout) with no master traffic at all, so a
+/// crashed master cannot strand source processes forever.
+pub fn serve_source_node(
+    manifest: &TopologyManifest,
+    is_source_a: bool,
+    transport: Arc<TcpTransport>,
+    endpoint: Endpoint,
+    chaos: Option<Arc<ChaosPlan>>,
+) -> Result<()> {
+    let scheme = manifest.resolve_scheme()?;
+    let setup = prepare_setup(scheme.as_ref())?;
+    let fabric = over_tcp(manifest, &transport, chaos);
+    let my_id = if is_source_a {
+        manifest.source_a_id()
+    } else {
+        manifest.source_b_id()
+    };
+    let idle = idle_budget(manifest);
+    loop {
+        let env = match endpoint.recv_timeout(idle) {
+            Ok(env) => env,
+            // No master traffic for the whole idle window: the driver is
+            // gone (crashed before its shutdown broadcast) — bail out.
+            Err(_) => return Ok(()),
+        };
+        match env.payload {
+            Payload::Control(ControlMsg::Shutdown) => return Ok(()),
+            Payload::Control(ControlMsg::JobStart { seed, .. }) => {
+                let job = env.job;
+                let (a, b) = job_matrices(manifest.seed, job, manifest.m);
+                // Fork order must match the in-process driver: source A
+                // takes the job rng's first fork, source B the second.
+                let mut job_rng = ChaChaRng::seed_from_u64(seed);
+                let mut rng_a = job_rng.fork();
+                let mut rng_b = job_rng.fork();
+                let poly = if is_source_a {
+                    source::build_f_a(scheme.as_ref(), &a, &mut rng_a)
+                } else {
+                    source::build_f_b(scheme.as_ref(), &b, &mut rng_b)
+                };
+                for (wid, share) in source::shares(&poly, &setup.alphas).into_iter().enumerate()
+                {
+                    let payload = if is_source_a {
+                        Payload::ShareA(PooledMat::detached(share))
+                    } else {
+                        Payload::ShareB(PooledMat::detached(share))
+                    };
+                    // A dead worker is the master's problem (its job will
+                    // fail or early-decode around it); the source keeps
+                    // serving later jobs either way.
+                    let _ = fabric.send(job, my_id, wid, payload);
+                }
+            }
+            // Stray traffic (e.g. a JobAbort for a failed job): sources
+            // hold no per-job state, nothing to drop.
+            _ => {}
+        }
+    }
+}
+
+/// One finished job as observed by the distributed master.
+pub struct NodeJobReport {
+    pub job: JobId,
+    pub y: FpMat,
+    pub digest: u64,
+    pub verified: bool,
+    pub early_decoded: bool,
+    /// Scalar traffic metered by the **master process's own fabric** —
+    /// near-zero in a distributed run, since each process meters only its
+    /// own sends (the ζ legs live in the worker processes; the measured
+    /// distributed form is the wire stats).
+    pub traffic: TrafficReport,
+    /// Per-worker ξ/σ counters, finalized from the totals each worker
+    /// reported in its `JobDone`/`AbortAck` — exact across process
+    /// boundaries.
+    pub worker_counters: Vec<Arc<WorkerCounters>>,
+    pub elapsed: Duration,
+}
+
+/// Everything the master learned in one distributed run.
+pub struct MasterRunReport {
+    pub jobs: Vec<NodeJobReport>,
+    /// Bytes this master process itself put on the wire (the cluster
+    /// harness additionally sums every node's transport).
+    pub wire: WireStats,
+}
+
+/// Drive `manifest.jobs` jobs as the master node, then shut the cluster
+/// down — **also on failure**, so worker and source processes never hang
+/// on a dead driver.
+///
+/// A worker that is unreachable **at `JobStart`** fails the run fast (the
+/// send `?`s out after the connect budget). That is deliberate, not a gap
+/// in the straggler story: the code tolerates workers that straggle or die
+/// *after* delivering their G-exchange contribution, but every `I(αₙ)`
+/// sums all `N` G-shares, so a worker dead before Phase 2 makes the job
+/// undecodable no matter how long the master waits — failing at the first
+/// send is the cheapest honest outcome. (In-process deployments recover
+/// across jobs via the runtime's respawn reaper; the distributed analogue
+/// is the reconnect-and-rejoin item in ROADMAP.)
+pub fn run_master_node(
+    manifest: &TopologyManifest,
+    transport: Arc<TcpTransport>,
+    endpoint: Endpoint,
+    chaos: Option<Arc<ChaosPlan>>,
+) -> Result<MasterRunReport> {
+    let scheme = manifest.resolve_scheme()?;
+    let p = scheme.params();
+    let setup = prepare_setup(scheme.as_ref())?;
+    let n = setup.n_workers;
+    let fabric = over_tcp(manifest, &transport, chaos);
+    let router = JobRouter::new(endpoint);
+    let pool = WorkerPool::sized_or_global(0);
+    let scratch = ScratchPool::for_pool(&pool);
+    let master_id = manifest.master_id();
+
+    let drive = || -> Result<Vec<NodeJobReport>> {
+        let mut reports = Vec::new();
+        for k in 0..manifest.jobs {
+            let job = k as JobId;
+            router.open(job);
+            fabric.begin_job(job);
+            let t0 = Instant::now();
+            let outcome = (|| -> Result<(FpMat, Vec<Arc<WorkerCounters>>, bool)> {
+                let seed = job_secret_seed(manifest.seed, job);
+                let counters: Vec<Arc<WorkerCounters>> =
+                    (0..n).map(|_| Arc::new(WorkerCounters::default())).collect();
+                for (wid, c) in counters.iter().enumerate() {
+                    fabric.send(
+                        job,
+                        master_id,
+                        wid,
+                        Payload::Control(ControlMsg::JobStart {
+                            seed,
+                            counters: c.clone(),
+                        }),
+                    )?;
+                }
+                // The sources' cue to encode and send this job's shares.
+                for src in [manifest.source_a_id(), manifest.source_b_id()] {
+                    fabric.send(
+                        job,
+                        master_id,
+                        src,
+                        Payload::Control(ControlMsg::JobStart {
+                            seed,
+                            counters: Arc::new(WorkerCounters::default()),
+                        }),
+                    )?;
+                }
+                let (m_out, _mt) = run_master(
+                    &router,
+                    &fabric,
+                    job,
+                    &setup.alphas,
+                    n,
+                    p.t,
+                    p.z,
+                    manifest.recv_timeout,
+                    manifest.early_decode,
+                    &counters,
+                    &pool,
+                    &scratch,
+                )?;
+                Ok((m_out.y, counters, m_out.early_decoded))
+            })();
+            let traffic = fabric.end_job(job);
+            router.close(job);
+            match outcome {
+                Ok((y, worker_counters, early_decoded)) => {
+                    let verified = if manifest.verify {
+                        let (a, b) = job_matrices(manifest.seed, job, manifest.m);
+                        let ok = y == a.transpose().matmul(&b);
+                        if !ok {
+                            return Err(CmpcError::NotDecodable(format!(
+                                "job {job}: distributed reconstruction mismatch: Y != AᵀB"
+                            )));
+                        }
+                        ok
+                    } else {
+                        false
+                    };
+                    reports.push(NodeJobReport {
+                        job,
+                        digest: digest_mat(&y),
+                        y,
+                        verified,
+                        early_decoded,
+                        traffic,
+                        worker_counters,
+                        elapsed: t0.elapsed(),
+                    });
+                }
+                Err(e) => {
+                    // Free the workers' state for the failed job before
+                    // giving up.
+                    for wid in 0..n {
+                        let _ = fabric.send(
+                            job,
+                            master_id,
+                            wid,
+                            Payload::Control(ControlMsg::JobAbort),
+                        );
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(reports)
+    };
+    let result = drive();
+    // Tear the cluster down no matter what happened above. One retry per
+    // node: a write onto a connection that died since the last job marks
+    // it broken and reconnects on the second attempt — a live worker
+    // stranded without its shutdown would otherwise idle for the whole
+    // orphan window.
+    let mut peers: Vec<NodeId> = (0..n).collect();
+    peers.push(manifest.source_a_id());
+    peers.push(manifest.source_b_id());
+    for peer in peers {
+        for _attempt in 0..2 {
+            if fabric
+                .send(
+                    CONTROL_JOB,
+                    master_id,
+                    peer,
+                    Payload::Control(ControlMsg::Shutdown),
+                )
+                .is_ok()
+            {
+                break;
+            }
+        }
+    }
+    let jobs = result?;
+    Ok(MasterRunReport {
+        jobs,
+        wire: transport.wire_stats(),
+    })
+}
+
+/// Bind this role's listener per the manifest and run it. Returns the
+/// master's report when the role is [`NodeRole::Master`], `None` for the
+/// long-running roles.
+pub fn run_role(role: NodeRole, manifest: &TopologyManifest) -> Result<Option<MasterRunReport>> {
+    manifest.validate()?;
+    match role {
+        NodeRole::Worker(i) => {
+            let (t, e) = TcpTransport::bind_manifest(manifest, i)?;
+            serve_worker_node(manifest, i, t, e, None)?;
+            Ok(None)
+        }
+        NodeRole::Master => {
+            let (t, e) = TcpTransport::bind_manifest(manifest, manifest.master_id())?;
+            Ok(Some(run_master_node(manifest, t, e, None)?))
+        }
+        NodeRole::SourceA => {
+            let (t, e) = TcpTransport::bind_manifest(manifest, manifest.source_a_id())?;
+            serve_source_node(manifest, true, t, e, None)?;
+            Ok(None)
+        }
+        NodeRole::SourceB => {
+            let (t, e) = TcpTransport::bind_manifest(manifest, manifest.source_b_id())?;
+            serve_source_node(manifest, false, t, e, None)?;
+            Ok(None)
+        }
+    }
+}
+
+/// Run the manifest's jobs through the **in-process** session API
+/// (provision once, `execute_seeded` with the same per-job seeds and
+/// data) and return `(job, digest)` pairs — the reference the CI lane
+/// diffs the distributed master's output against.
+pub fn run_reference(manifest: &TopologyManifest) -> Result<Vec<(JobId, u64)>> {
+    manifest.validate()?;
+    let dep = Deployment::provision(
+        manifest.spec()?,
+        SchemeParams::try_new(manifest.s, manifest.t, manifest.z)?,
+        ProtocolConfig::builder().verify(manifest.verify).build(),
+    )?;
+    let mut digests = Vec::with_capacity(manifest.jobs);
+    for k in 0..manifest.jobs {
+        let job = k as JobId;
+        let (a, b) = job_matrices(manifest.seed, job, manifest.m);
+        let out = dep.execute_seeded(&a, &b, job_secret_seed(manifest.seed, job))?;
+        digests.push((job, digest_mat(&out.y)));
+    }
+    Ok(digests)
+}
+
+/// A whole-cluster loopback run: every node a thread in this process,
+/// every link a real 127.0.0.1 socket.
+pub struct ClusterReport {
+    pub master: MasterRunReport,
+    /// Wire stats summed over **every** node's transport — this is where
+    /// the measured worker↔worker bytes compare against ζ.
+    pub wire: WireStats,
+}
+
+/// Run the manifest's whole topology over loopback TCP inside this
+/// process. Manifest addresses may use port `0`: all listeners bind
+/// first, then the real ports are distributed to every node.
+///
+/// A chaos plan, when given, is attached to every node's fabric (sharing
+/// one `Arc`, so rule hit-counters behave exactly as on the in-process
+/// single fabric).
+pub fn run_local_cluster(
+    manifest: &TopologyManifest,
+    chaos: Option<Arc<ChaosPlan>>,
+) -> Result<ClusterReport> {
+    manifest.validate()?;
+    let mut listeners = Vec::with_capacity(manifest.n_nodes());
+    for addr in manifest.addrs() {
+        listeners.push(
+            TcpListener::bind(&addr)
+                .map_err(|e| CmpcError::Io(format!("cluster bind {addr}: {e}")))?,
+        );
+    }
+    let actual: Vec<String> = listeners
+        .iter()
+        .map(|l| {
+            l.local_addr()
+                .map(|a| a.to_string())
+                .map_err(|e| CmpcError::Io(format!("listener address: {e}")))
+        })
+        .collect::<Result<_>>()?;
+    let mut pairs = Vec::with_capacity(manifest.n_nodes());
+    let mut wire_handles = Vec::with_capacity(manifest.n_nodes());
+    for (i, listener) in listeners.into_iter().enumerate() {
+        let (t, e) =
+            TcpTransport::from_listener(listener, actual.clone(), i, manifest.connect_timeout)?;
+        wire_handles.push(t.clone());
+        pairs.push((t, e));
+    }
+    let n = manifest.n_workers();
+    let mut worker_handles = Vec::new();
+    let mut source_handles = Vec::new();
+    let mut master_pair = None;
+    for (i, (t, e)) in pairs.into_iter().enumerate() {
+        if i == manifest.master_id() {
+            master_pair = Some((t, e));
+            continue;
+        }
+        let mc = manifest.clone();
+        let ch = chaos.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("cmpc-node-{i}"))
+            .spawn(move || -> Result<()> {
+                if i < n {
+                    serve_worker_node(&mc, i, t, e, ch)
+                } else {
+                    serve_source_node(&mc, i == mc.source_a_id(), t, e, ch)
+                }
+            })
+            .map_err(|e| CmpcError::Io(format!("spawning cluster node {i}: {e}")))?;
+        if i < n {
+            worker_handles.push(handle);
+        } else {
+            source_handles.push(handle);
+        }
+    }
+    let (mt, me) = master_pair.expect("master slot present");
+    let master_result = run_master_node(manifest, mt, me, chaos);
+    // The master broadcast Shutdown (even on failure), so every node
+    // thread unwinds; chaos-killed workers exited on their own.
+    for h in worker_handles.into_iter().chain(source_handles) {
+        let _ = h.join();
+    }
+    let mut wire = WireStats::default();
+    for t in &wire_handles {
+        wire.merge(&t.wire_stats());
+    }
+    let master = master_result?;
+    Ok(ClusterReport { master, wire })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_derivations_are_deterministic() {
+        let (a1, b1) = job_matrices(7, 3, 8);
+        let (a2, b2) = job_matrices(7, 3, 8);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        let (a3, _) = job_matrices(7, 4, 8);
+        assert_ne!(a1, a3, "different jobs must draw different data");
+        assert_ne!(job_secret_seed(7, 0), job_secret_seed(7, 1));
+        assert_eq!(digest_mat(&a1), digest_mat(&a2));
+        assert_ne!(digest_mat(&a1), digest_mat(&a3));
+    }
+
+    #[test]
+    fn role_parsing() {
+        assert_eq!(
+            NodeRole::parse("worker", Some(3)).unwrap(),
+            NodeRole::Worker(3)
+        );
+        assert_eq!(NodeRole::parse("master", None).unwrap(), NodeRole::Master);
+        assert!(NodeRole::parse("worker", None).is_err());
+        assert!(NodeRole::parse("sourcer", None).is_err());
+    }
+}

@@ -1,0 +1,312 @@
+//! Per-link latency + bandwidth emulation — reproducible LAN/WAN edge
+//! scenarios on any transport.
+//!
+//! A [`LinkShaper`] is an ordered list of [`ShapeRule`]s; the first rule
+//! matching a data envelope's `(from, to, payload class)` assigns its link
+//! a [`LinkSpec`]: propagation latency plus a token-bucket bandwidth model
+//! (frames of `b` bytes depart when the bucket holds `b` tokens, refilled
+//! at `rate_bytes_per_sec` up to `burst_bytes`; departures on one link are
+//! FIFO). The modeled arrival time is `departure + latency`.
+//!
+//! Unlike `ProtocolConfig::link_delay` and the chaos
+//! [`FaultAction::Delay`] — which sleep the **sending thread**, modeling a
+//! busy peer — shaping delays the envelope *in flight*: the sender returns
+//! immediately and the fabric's pump thread delivers at the modeled
+//! arrival time. That distinction is load-bearing for the early-decode
+//! fast path: a worker straggling behind a slow *link* is idle and
+//! acknowledges a `JobAbort` instantly (exact overhead counters, no added
+//! latency), whereas a *busy* worker cannot answer until it wakes.
+//!
+//! Shapers attach per deployment via
+//! `ProtocolConfig::builder().shaper(...)`, per manifest via `shape` lines
+//! (see [`crate::runtime::manifest::TopologyManifest`]), and compose with
+//! the chaos harness: chaos decides *whether* an envelope survives, the
+//! shaper decides *when* it arrives.
+//!
+//! [`FaultAction::Delay`]: crate::mpc::chaos::FaultAction::Delay
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::mpc::chaos::PayloadClass;
+use crate::mpc::network::NodeId;
+
+/// The emulated characteristics of one link direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkSpec {
+    /// Propagation delay added to every frame.
+    pub latency: Duration,
+    /// Serialization rate in bytes/second; `0` = unlimited (latency only).
+    pub rate_bytes_per_sec: u64,
+    /// Token-bucket depth in bytes (how much can burst at line rate).
+    pub burst_bytes: u64,
+}
+
+impl LinkSpec {
+    /// Latency-only link (unlimited bandwidth).
+    pub fn latency(latency: Duration) -> LinkSpec {
+        LinkSpec {
+            latency,
+            rate_bytes_per_sec: 0,
+            burst_bytes: 0,
+        }
+    }
+
+    /// Full specification.
+    pub fn new(latency: Duration, rate_bytes_per_sec: u64, burst_bytes: u64) -> LinkSpec {
+        LinkSpec {
+            latency,
+            rate_bytes_per_sec,
+            burst_bytes,
+        }
+    }
+
+    /// A typical WAN edge link: 40 ms one-way, 100 Mbit/s, 64 KiB burst.
+    pub fn wan() -> LinkSpec {
+        LinkSpec::new(Duration::from_millis(40), 12_500_000, 64 * 1024)
+    }
+
+    /// A typical LAN link: 200 µs one-way, 1 Gbit/s, 256 KiB burst.
+    pub fn lan() -> LinkSpec {
+        LinkSpec::new(Duration::from_micros(200), 125_000_000, 256 * 1024)
+    }
+}
+
+/// One link-matching rule (wildcards via `None`, same idiom as the chaos
+/// harness's `FaultRule`). Earlier rules win.
+#[derive(Clone, Copy, Debug)]
+pub struct ShapeRule {
+    from: Option<NodeId>,
+    to: Option<NodeId>,
+    class: Option<PayloadClass>,
+    spec: LinkSpec,
+}
+
+impl ShapeRule {
+    /// Shape every data envelope with `spec`; narrow with the builders.
+    pub fn new(spec: LinkSpec) -> ShapeRule {
+        ShapeRule {
+            from: None,
+            to: None,
+            class: None,
+            spec,
+        }
+    }
+
+    /// Only envelopes sent by `node`.
+    pub fn from_node(mut self, node: NodeId) -> Self {
+        self.from = Some(node);
+        self
+    }
+
+    /// Only envelopes addressed to `node`.
+    pub fn to_node(mut self, node: NodeId) -> Self {
+        self.to = Some(node);
+        self
+    }
+
+    /// Only payloads of `class` (e.g. shape the bulky Phase-2 G-exchange
+    /// while Phase-1 shares pass untouched).
+    pub fn class(mut self, class: PayloadClass) -> Self {
+        self.class = Some(class);
+        self
+    }
+
+    fn matches(&self, from: NodeId, to: NodeId, class: PayloadClass) -> bool {
+        let from_ok = match self.from {
+            Some(n) => n == from,
+            None => true,
+        };
+        let to_ok = match self.to {
+            Some(n) => n == to,
+            None => true,
+        };
+        let class_ok = match self.class {
+            Some(c) => c == class,
+            None => true,
+        };
+        from_ok && to_ok && class_ok
+    }
+}
+
+/// Per-link token-bucket state.
+struct Bucket {
+    tokens: f64,
+    last_refill: Instant,
+    last_departure: Instant,
+}
+
+/// Ordered [`ShapeRule`]s plus the per-link bucket state they drive.
+///
+/// Bucket state is keyed by `(rule index, from, to)`: two class-specific
+/// rules matching the same physical link model two independent queues
+/// (each with its own rate/burst), rather than corrupting one bucket with
+/// flip-flopping parameters.
+#[derive(Default)]
+pub struct LinkShaper {
+    rules: Vec<ShapeRule>,
+    buckets: Mutex<HashMap<(usize, NodeId, NodeId), Bucket>>,
+}
+
+impl std::fmt::Debug for LinkShaper {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LinkShaper")
+            .field("rules", &self.rules)
+            .finish()
+    }
+}
+
+impl LinkShaper {
+    /// A shaper with no rules (shapes nothing).
+    pub fn new() -> LinkShaper {
+        LinkShaper::default()
+    }
+
+    /// Append a rule (builder style; earlier rules win).
+    pub fn rule(mut self, rule: ShapeRule) -> LinkShaper {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Shape every link with one spec (the "whole deployment is on a WAN"
+    /// convenience).
+    pub fn all_links(spec: LinkSpec) -> LinkShaper {
+        LinkShaper::new().rule(ShapeRule::new(spec))
+    }
+
+    /// Wrap for attachment to a `ProtocolConfig` / fabric tuning.
+    pub fn into_shared(self) -> Arc<LinkShaper> {
+        Arc::new(self)
+    }
+
+    /// The rules, in consult order.
+    pub fn rules(&self) -> &[ShapeRule] {
+        &self.rules
+    }
+
+    /// Modeled arrival instant for a `bytes`-byte frame sent now on
+    /// `(from → to)`, or `None` when no rule matches (deliver inline).
+    ///
+    /// Mutates the link's token bucket: consumption is committed even
+    /// though delivery happens later (the pump owns the wait).
+    pub fn release_at(
+        &self,
+        from: NodeId,
+        to: NodeId,
+        class: PayloadClass,
+        bytes: u64,
+        now: Instant,
+    ) -> Option<Instant> {
+        let (rule_idx, rule) = self
+            .rules
+            .iter()
+            .enumerate()
+            .find(|(_, r)| r.matches(from, to, class))?;
+        let spec = rule.spec;
+        let mut buckets = self.buckets.lock().unwrap();
+        let b = buckets.entry((rule_idx, from, to)).or_insert_with(|| Bucket {
+            tokens: spec.burst_bytes as f64,
+            last_refill: now,
+            last_departure: now,
+        });
+        let mut departure = now;
+        if spec.rate_bytes_per_sec > 0 {
+            let rate = spec.rate_bytes_per_sec as f64;
+            let dt = now.saturating_duration_since(b.last_refill).as_secs_f64();
+            b.tokens = (b.tokens + dt * rate).min(spec.burst_bytes as f64);
+            b.last_refill = now;
+            // Token *debt* model: the balance may go negative — each
+            // queued frame borrows against future refills, so back-to-back
+            // sends serialize at exactly `rate` with up to `burst` of
+            // slack.
+            b.tokens -= bytes as f64;
+            if b.tokens < 0.0 {
+                departure = now + Duration::from_secs_f64(-b.tokens / rate);
+            }
+        }
+        if departure < b.last_departure {
+            departure = b.last_departure; // FIFO per link
+        }
+        b.last_departure = departure;
+        let release = departure + spec.latency;
+        if release <= now {
+            None
+        } else {
+            Some(release)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GSHARE: PayloadClass = PayloadClass::GShare;
+
+    #[test]
+    fn no_rules_means_no_shaping() {
+        let s = LinkShaper::new();
+        assert!(s.release_at(0, 1, GSHARE, 1024, Instant::now()).is_none());
+    }
+
+    #[test]
+    fn latency_only_rule_delays_matching_links() {
+        let s = LinkShaper::new().rule(
+            ShapeRule::new(LinkSpec::latency(Duration::from_millis(50))).to_node(3),
+        );
+        let now = Instant::now();
+        let at = s.release_at(0, 3, GSHARE, 64, now).unwrap();
+        assert!(at >= now + Duration::from_millis(50));
+        // other destinations untouched
+        assert!(s.release_at(0, 2, GSHARE, 64, now).is_none());
+    }
+
+    #[test]
+    fn class_filter_narrows_the_match() {
+        let s = LinkShaper::new().rule(
+            ShapeRule::new(LinkSpec::latency(Duration::from_millis(10))).class(GSHARE),
+        );
+        let now = Instant::now();
+        assert!(s.release_at(0, 1, GSHARE, 8, now).is_some());
+        assert!(s
+            .release_at(0, 1, PayloadClass::Shares, 8, now)
+            .is_none());
+    }
+
+    #[test]
+    fn token_bucket_serializes_beyond_the_burst() {
+        // 1000 B/s, 100-byte burst: the first 100-byte frame departs at
+        // once, the second waits ~100 ms, the third ~200 ms — FIFO.
+        let s = LinkShaper::new().rule(ShapeRule::new(LinkSpec::new(
+            Duration::ZERO,
+            1000,
+            100,
+        )));
+        let now = Instant::now();
+        assert!(s.release_at(0, 1, GSHARE, 100, now).is_none()); // burst
+        let second = s.release_at(0, 1, GSHARE, 100, now).unwrap();
+        let third = s.release_at(0, 1, GSHARE, 100, now).unwrap();
+        let d2 = second.saturating_duration_since(now);
+        let d3 = third.saturating_duration_since(now);
+        assert!(
+            d2 >= Duration::from_millis(90) && d2 <= Duration::from_millis(110),
+            "{d2:?}"
+        );
+        assert!(d3 >= d2 + Duration::from_millis(90), "{d3:?} vs {d2:?}");
+        // independent link: its own bucket, full burst again
+        assert!(s.release_at(5, 1, GSHARE, 100, now).is_none());
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let s = LinkShaper::new()
+            .rule(
+                ShapeRule::new(LinkSpec::latency(Duration::from_millis(5))).from_node(1),
+            )
+            .rule(ShapeRule::new(LinkSpec::latency(Duration::from_millis(500))));
+        let now = Instant::now();
+        let at = s.release_at(1, 2, GSHARE, 8, now).unwrap();
+        assert!(at < now + Duration::from_millis(100));
+    }
+}

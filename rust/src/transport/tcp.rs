@@ -1,0 +1,468 @@
+//! TCP transport: the fabric over `std::net` sockets, one process (or
+//! thread) per party.
+//!
+//! Each party binds **one listener** at its manifest address and owns a
+//! [`TcpTransport`] hosting its own node id. Outbound links are connected
+//! lazily on first send (with retries up to `connect_timeout`, so peers
+//! may start in any order); inbound connections need no handshake — every
+//! frame carries its sender id, so the reader threads just decode frames
+//! (via [`wire::FrameReader`], payload matrices loaned from the local
+//! [`BufferPool`]) and push them onto the local node's receive queue. The
+//! [`Endpoint`] handed to the node is the same mpsc-backed type the
+//! in-process transport uses, so `serve_worker`, `run_master`, and the
+//! `JobRouter` run unchanged over TCP.
+//!
+//! The transport meters every byte it actually writes, per edge class
+//! ([`WireStats`]) — the measured on-wire form of the paper's ζ, asserted
+//! against the analytical value in `tests/distributed.rs`.
+//!
+//! Inbound frames that fail to decode (corrupt, truncated, version skew)
+//! terminate that connection and bump `decode_errors`; they can never
+//! panic the process or allocate unboundedly (see [`wire`]).
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{CmpcError, Result};
+use crate::metrics::{WireCounters, WireStats};
+use crate::mpc::network::{BufferPool, Endpoint, Envelope, NodeId, Payload, Transport};
+use crate::runtime::manifest::TopologyManifest;
+use crate::transport::wire::{self, FrameReader};
+
+/// One lazily-connected outbound link plus its reusable encode buffer.
+struct PeerSlot {
+    conn: Option<TcpStream>,
+    /// Whether this link ever connected. First contact retries up to the
+    /// connect budget (peers start in any order); *re*connects after a
+    /// break are single-attempt, so sends to a peer that died cannot
+    /// stall the caller for the whole budget (e.g. at teardown).
+    ever_connected: bool,
+    buf: Vec<u8>,
+}
+
+/// A [`Transport`] hosting one local node over TCP.
+pub struct TcpTransport {
+    local: NodeId,
+    n_nodes: usize,
+    addrs: Vec<String>,
+    peers: Vec<Mutex<PeerSlot>>,
+    /// The local node's receive queue. Behind a lock so
+    /// `replace_endpoint` can swap it while reader threads hold clones of
+    /// the lock, not of a stale sender.
+    local_tx: Arc<RwLock<Sender<Envelope>>>,
+    wire: Arc<WireCounters>,
+    bufs: Arc<BufferPool>,
+    connect_timeout: Duration,
+    shutdown: Arc<AtomicBool>,
+    listen_addr: SocketAddr,
+    accept_thread: Mutex<Option<JoinHandle<()>>>,
+    /// Handles (`try_clone`) of every accepted inbound stream, so Drop can
+    /// `shutdown()` them and the detached reader threads exit
+    /// deterministically instead of lingering until the remote peer
+    /// closes.
+    accepted: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl TcpTransport {
+    /// Bind the local node's listener at `addrs[local]` and start
+    /// accepting. Returns the transport and the local node's endpoint.
+    pub fn bind(
+        addrs: Vec<String>,
+        local: NodeId,
+        connect_timeout: Duration,
+    ) -> Result<(Arc<TcpTransport>, Endpoint)> {
+        if local >= addrs.len() {
+            return Err(CmpcError::InvalidParams(format!(
+                "local node {local} outside the {}-node topology",
+                addrs.len()
+            )));
+        }
+        let listener = TcpListener::bind(&addrs[local]).map_err(|e| {
+            CmpcError::Io(format!("binding node {local} at {}: {e}", addrs[local]))
+        })?;
+        TcpTransport::from_listener(listener, addrs, local, connect_timeout)
+    }
+
+    /// [`TcpTransport::bind`] for a manifest-described topology.
+    pub fn bind_manifest(
+        manifest: &TopologyManifest,
+        local: NodeId,
+    ) -> Result<(Arc<TcpTransport>, Endpoint)> {
+        TcpTransport::bind(manifest.addrs(), local, manifest.connect_timeout)
+    }
+
+    /// Wrap an **already bound** listener (the loopback cluster binds all
+    /// listeners on port 0 first, then distributes the real addresses).
+    pub fn from_listener(
+        listener: TcpListener,
+        addrs: Vec<String>,
+        local: NodeId,
+        connect_timeout: Duration,
+    ) -> Result<(Arc<TcpTransport>, Endpoint)> {
+        let n_nodes = addrs.len();
+        let listen_addr = listener
+            .local_addr()
+            .map_err(|e| CmpcError::Io(format!("listener address: {e}")))?;
+        let (tx, rx) = channel();
+        let local_tx = Arc::new(RwLock::new(tx));
+        let wire = Arc::new(WireCounters::default());
+        let bufs = BufferPool::new();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let local_tx = local_tx.clone();
+            let wire = wire.clone();
+            let bufs = bufs.clone();
+            let shutdown = shutdown.clone();
+            let accepted = accepted.clone();
+            std::thread::Builder::new()
+                .name(format!("cmpc-tcp-accept-{local}"))
+                .spawn(move || accept_loop(listener, local_tx, wire, bufs, shutdown, accepted))
+                .map_err(|e| CmpcError::Io(format!("spawning acceptor: {e}")))?
+        };
+        let transport = Arc::new(TcpTransport {
+            local,
+            n_nodes,
+            addrs,
+            peers: (0..n_nodes)
+                .map(|_| {
+                    Mutex::new(PeerSlot {
+                        conn: None,
+                        ever_connected: false,
+                        buf: Vec::new(),
+                    })
+                })
+                .collect(),
+            local_tx,
+            wire,
+            bufs,
+            connect_timeout,
+            shutdown,
+            listen_addr,
+            accept_thread: Mutex::new(Some(accept)),
+            accepted,
+        });
+        Ok((transport, Endpoint::new(local, rx)))
+    }
+
+    /// The bound listener address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listen_addr
+    }
+
+    /// The node id this transport hosts.
+    pub fn local_node(&self) -> NodeId {
+        self.local
+    }
+
+    /// The payload buffer pool inbound matrices are loaned from — hand
+    /// this to `serve_worker` so receive and compute share one pool.
+    pub fn buffers(&self) -> &Arc<BufferPool> {
+        &self.bufs
+    }
+
+    /// Single connection attempt (reconnects after a break).
+    fn connect_once(&self, to: NodeId) -> Result<TcpStream> {
+        let addr = &self.addrs[to];
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                Ok(s)
+            }
+            Err(e) => Err(CmpcError::Fabric(format!(
+                "node {}: connecting to node {to} at {addr}: {e}",
+                self.local
+            ))),
+        }
+    }
+
+    /// First contact: retry until the connect budget runs out (the peer
+    /// process may not have bound its listener yet).
+    fn connect(&self, to: NodeId) -> Result<TcpStream> {
+        let deadline = Instant::now() + self.connect_timeout;
+        loop {
+            match self.connect_once(to) {
+                Ok(s) => return Ok(s),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    fn meter(&self, env: &Envelope, to: NodeId, bytes: u64) {
+        use Ordering::Relaxed;
+        let n_workers = self.n_nodes.saturating_sub(3);
+        let counter = match &env.payload {
+            Payload::Control(_) => &self.wire.bytes_control,
+            _ if env.from > n_workers && to < n_workers => &self.wire.bytes_source_to_worker,
+            _ if env.from < n_workers && to < n_workers => &self.wire.bytes_worker_to_worker,
+            _ if env.from < n_workers && to == n_workers => &self.wire.bytes_worker_to_master,
+            // Data on a link the fabric would have rejected; count as
+            // control rather than corrupt a ζ class.
+            _ => &self.wire.bytes_control,
+        };
+        counter.fetch_add(bytes, Relaxed);
+        self.wire.frames.fetch_add(1, Relaxed);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    local_tx: Arc<RwLock<Sender<Envelope>>>,
+    wire: Arc<WireCounters>,
+    bufs: Arc<BufferPool>,
+    shutdown: Arc<AtomicBool>,
+    accepted: Arc<Mutex<Vec<TcpStream>>>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shutdown.load(Ordering::Relaxed) {
+                    return; // the Drop wake-up connection
+                }
+                let _ = stream.set_nodelay(true);
+                if let Ok(handle) = stream.try_clone() {
+                    accepted.lock().unwrap().push(handle);
+                }
+                let tx = local_tx.clone();
+                let wire = wire.clone();
+                let bufs = bufs.clone();
+                // Reader threads exit on peer EOF / decode error; they
+                // hold no Arc back to the transport, so teardown order is
+                // acyclic.
+                let _ = std::thread::Builder::new()
+                    .name("cmpc-tcp-rx".to_string())
+                    .spawn(move || reader_loop(stream, tx, wire, bufs));
+            }
+            Err(_) => {
+                if shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn reader_loop(
+    stream: TcpStream,
+    local_tx: Arc<RwLock<Sender<Envelope>>>,
+    wire: Arc<WireCounters>,
+    bufs: Arc<BufferPool>,
+) {
+    let mut reader = std::io::BufReader::new(stream);
+    let mut frames = FrameReader::new();
+    loop {
+        match frames.read_from(&mut reader, Some(&bufs)) {
+            Ok(Some(env)) => {
+                let tx = local_tx.read().unwrap().clone();
+                if tx.send(env).is_err() {
+                    return; // local node gone; stop draining the socket
+                }
+            }
+            Ok(None) => return, // clean EOF: peer closed
+            Err(_) => {
+                // Corrupt or truncated frame: this connection can no
+                // longer be framed — drop it. The peer re-connects if it
+                // is still alive; persistent garbage shows up here.
+                wire.decode_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn deliver(&self, to: NodeId, env: Envelope) -> Result<()> {
+        if to >= self.n_nodes {
+            return Err(CmpcError::Fabric(format!(
+                "send to nonexistent node {to} ({}-node topology)",
+                self.n_nodes
+            )));
+        }
+        if to == self.local {
+            // Self-delivery never touches the wire.
+            let tx = self.local_tx.read().unwrap().clone();
+            return tx.send(env).map_err(|_| {
+                CmpcError::Fabric(format!("node {to}: local endpoint dropped"))
+            });
+        }
+        let mut slot = self.peers[to].lock().unwrap();
+        if slot.conn.is_none() {
+            let stream = if slot.ever_connected {
+                self.connect_once(to)?
+            } else {
+                self.connect(to)?
+            };
+            slot.conn = Some(stream);
+            slot.ever_connected = true;
+        }
+        let PeerSlot { conn, buf, .. } = &mut *slot;
+        let stream = conn.as_mut().expect("connected above");
+        match wire::write_envelope(stream, &env, buf) {
+            Ok(n) => {
+                self.meter(&env, to, n as u64);
+                Ok(())
+            }
+            Err(e) => {
+                // Connection is unusable; a later send may reconnect (the
+                // peer could have restarted).
+                *conn = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn replace_endpoint(&self, node: NodeId) -> Result<Endpoint> {
+        if node != self.local {
+            return Err(CmpcError::Fabric(format!(
+                "node {node} is remote; only the local node {} can be re-endpointed",
+                self.local
+            )));
+        }
+        let (tx, rx) = channel();
+        *self.local_tx.write().unwrap() = tx;
+        Ok(Endpoint::new(node, rx))
+    }
+
+    fn wire_stats(&self) -> WireStats {
+        self.wire.snapshot()
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Wake the acceptor with a throwaway connection so it observes the
+        // flag and exits.
+        let _ = TcpStream::connect(self.listen_addr);
+        if let Some(h) = self.accept_thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // Shut down every accepted inbound stream: the detached reader
+        // threads see EOF at once and exit instead of lingering (with
+        // their sockets) until the remote peer happens to close.
+        for stream in self.accepted.lock().unwrap().drain(..) {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::FpMat;
+    use crate::mpc::network::PooledMat;
+    use crate::util::rng::ChaChaRng;
+
+    /// Bind a 4-node loopback topology (1 worker + master + 2 sources)
+    /// and return transports for the first `live` nodes.
+    fn loopback(live: usize) -> (Vec<Arc<TcpTransport>>, Vec<Endpoint>) {
+        let listeners: Vec<TcpListener> = (0..4)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let addrs: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let mut transports = Vec::new();
+        let mut endpoints = Vec::new();
+        for (i, listener) in listeners.into_iter().enumerate().take(live) {
+            let (t, e) =
+                TcpTransport::from_listener(listener, addrs.clone(), i, Duration::from_secs(5))
+                    .unwrap();
+            transports.push(t);
+            endpoints.push(e);
+        }
+        (transports, endpoints)
+    }
+
+    #[test]
+    fn envelopes_cross_real_sockets() {
+        let (transports, endpoints) = loopback(2);
+        let mut rng = ChaChaRng::seed_from_u64(3);
+        let m = FpMat::random(&mut rng, 4, 4);
+        // worker 0 → master (node 1)
+        transports[0]
+            .deliver(
+                1,
+                Envelope {
+                    job: 9,
+                    from: 0,
+                    payload: Payload::IShare(PooledMat::detached(m.clone())),
+                },
+            )
+            .unwrap();
+        let env = endpoints[1].recv().unwrap();
+        assert_eq!(env.job, 9);
+        assert_eq!(env.from, 0);
+        match env.payload {
+            Payload::IShare(got) => assert_eq!(*got, m),
+            other => panic!("unexpected {other:?}"),
+        }
+        let stats = transports[0].wire_stats();
+        assert_eq!(stats.frames, 1);
+        assert!(stats.bytes_worker_to_master > 0);
+        assert_eq!(stats.decode_errors, 0);
+        // the receiving side loaned the payload from its pool
+        drop(env);
+    }
+
+    #[test]
+    fn dead_peer_is_a_typed_error_and_garbage_is_contained() {
+        let (transports, endpoints) = loopback(1);
+        // A peer address where nothing listens: bind, learn the port, drop.
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let own = TcpListener::bind("127.0.0.1:0").unwrap();
+        let own_addr = own.local_addr().unwrap().to_string();
+        let (t, _e) = TcpTransport::from_listener(
+            own,
+            vec![own_addr, dead_addr],
+            0,
+            Duration::from_millis(200),
+        )
+        .unwrap();
+        let err = t
+            .deliver(
+                1,
+                Envelope {
+                    job: 0,
+                    from: 0,
+                    payload: Payload::IShare(PooledMat::detached(FpMat::zeros(1, 1))),
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, CmpcError::Fabric(_)), "{err}");
+        drop(t);
+
+        // Garbage into our listener: decode error counted, process fine.
+        let mut s = TcpStream::connect(transports[0].local_addr()).unwrap();
+        use std::io::Write;
+        s.write_all(b"this is not a cmpc frame at all................").unwrap();
+        drop(s);
+        let t0 = Instant::now();
+        while transports[0].wire_stats().decode_errors == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "decode error not counted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // endpoint got nothing
+        assert!(endpoints[0]
+            .recv_timeout(Duration::from_millis(50))
+            .is_err());
+    }
+}

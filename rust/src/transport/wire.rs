@@ -1,0 +1,715 @@
+//! Framed wire codec for fabric envelopes — std-only, versioned,
+//! hardened against adversarial bytes.
+//!
+//! Every [`Envelope`] serializes to one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic      0x434D5043 ("CMPC"), little-endian
+//! 4       2     version    WIRE_VERSION, little-endian
+//! 6       8     job        JobId, little-endian
+//! 14      4     from       sender NodeId, little-endian
+//! 18      1     tag        payload kind
+//! 19      4     len        payload byte length, little-endian
+//! 23      len   payload
+//! ```
+//!
+//! Matrices are `rows:u32, cols:u32` followed by `rows·cols` little-endian
+//! `u32` scalars (all `< p`); control messages are a sub-tag byte plus a
+//! fixed body ([`ControlMsg::JobError`] carries a length-prefixed UTF-8
+//! string). The framing overhead on a Phase-2 `G`-share is
+//! `HEADER_LEN + 8` bytes over the `4·(m/t)²` payload — under 5% for any
+//! serving-sized block, which `tests/distributed.rs` pins against the
+//! analytical ζ.
+//!
+//! **Decoding never trusts the peer.** Truncated buffers, flipped magic or
+//! version, unknown tags, length prefixes that disagree with their
+//! contents, matrix headers larger than their frame, and out-of-range
+//! scalars all surface as typed [`CmpcError::Fabric`] errors — no panics,
+//! and no allocation is sized from attacker-controlled fields before the
+//! bytes backing it exist ([`FrameReader`] reads bodies in bounded
+//! chunks, so a lying length prefix cannot trigger an outsized
+//! allocation).
+//!
+//! One lossy corner, by construction: [`ControlMsg::JobStart`] carries a
+//! shared-memory counters `Arc` that cannot cross a process boundary. The
+//! codec serializes only the seed; the decoder installs a fresh counters
+//! instance, and the worker's totals travel back in its
+//! [`ControlMsg::JobDone`] / [`ControlMsg::AbortAck`].
+
+use std::io::Read;
+use std::sync::Arc;
+
+use crate::error::{CmpcError, Result};
+use crate::ff::P;
+use crate::metrics::WorkerCounters;
+use crate::mpc::network::{BufferPool, ControlMsg, Envelope, Payload, PooledMat};
+
+/// `"CMPC"` as a little-endian u32.
+pub const WIRE_MAGIC: u32 = 0x434D_5043;
+
+/// Current frame format version. Decoders reject every other version with
+/// a typed error (no silent cross-version reads).
+pub const WIRE_VERSION: u16 = 1;
+
+/// Fixed frame header length in bytes.
+pub const HEADER_LEN: usize = 23;
+
+/// Upper bound on a single frame's payload (256 MiB) — rejects absurd
+/// length prefixes before any allocation happens.
+pub const MAX_FRAME_PAYLOAD: usize = 256 * 1024 * 1024;
+
+/// Bodies are read from streams in chunks of this size, so a lying length
+/// prefix allocates at most one chunk beyond the bytes actually received.
+const READ_CHUNK: usize = 64 * 1024;
+
+const TAG_SHARES: u8 = 0;
+const TAG_SHARE_A: u8 = 1;
+const TAG_SHARE_B: u8 = 2;
+const TAG_GSHARE: u8 = 3;
+const TAG_ISHARE: u8 = 4;
+const TAG_CONTROL: u8 = 5;
+
+const CTL_JOB_START: u8 = 0;
+const CTL_JOB_DONE: u8 = 1;
+const CTL_JOB_ERROR: u8 = 2;
+const CTL_JOB_ABORT: u8 = 3;
+const CTL_ABORT_ACK: u8 = 4;
+const CTL_SHUTDOWN: u8 = 5;
+
+fn corrupt(msg: impl std::fmt::Display) -> CmpcError {
+    CmpcError::Fabric(format!("wire: {msg}"))
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_mat(out: &mut Vec<u8>, m: &PooledMat) {
+    put_u32(out, m.rows as u32);
+    put_u32(out, m.cols as u32);
+    for &v in &m.data {
+        put_u32(out, v);
+    }
+}
+
+fn mat_wire_len(m: &PooledMat) -> usize {
+    8 + 4 * m.len()
+}
+
+fn payload_tag(payload: &Payload) -> u8 {
+    match payload {
+        Payload::Shares { .. } => TAG_SHARES,
+        Payload::ShareA(_) => TAG_SHARE_A,
+        Payload::ShareB(_) => TAG_SHARE_B,
+        Payload::GShare(_) => TAG_GSHARE,
+        Payload::IShare(_) => TAG_ISHARE,
+        Payload::Control(_) => TAG_CONTROL,
+    }
+}
+
+fn payload_wire_len(payload: &Payload) -> usize {
+    match payload {
+        Payload::Shares { fa, fb } => mat_wire_len(fa) + mat_wire_len(fb),
+        Payload::ShareA(m) | Payload::ShareB(m) => mat_wire_len(m),
+        Payload::GShare(m) | Payload::IShare(m) => mat_wire_len(m),
+        Payload::Control(c) => {
+            1 + match c {
+                ControlMsg::JobStart { .. } => 8,
+                ControlMsg::JobDone { .. } => 16,
+                ControlMsg::JobError(msg) => 4 + msg.len(),
+                ControlMsg::JobAbort => 0,
+                ControlMsg::AbortAck { .. } => 16,
+                ControlMsg::Shutdown => 0,
+            }
+        }
+    }
+}
+
+/// Exact on-wire size of `env`'s frame, header included — used by the
+/// link shaper to model serialization time even on the in-process
+/// transport, and by capacity planning.
+pub fn frame_len(env: &Envelope) -> usize {
+    HEADER_LEN + payload_wire_len(&env.payload)
+}
+
+/// Append `env`'s frame to `out` (which is **not** cleared — callers batch
+/// frames by encoding into the same buffer).
+pub fn encode_envelope(env: &Envelope, out: &mut Vec<u8>) {
+    out.reserve(frame_len(env));
+    put_u32(out, WIRE_MAGIC);
+    put_u16(out, WIRE_VERSION);
+    put_u64(out, env.job);
+    put_u32(out, env.from as u32);
+    out.push(payload_tag(&env.payload));
+    put_u32(out, payload_wire_len(&env.payload) as u32);
+    match &env.payload {
+        Payload::Shares { fa, fb } => {
+            put_mat(out, fa);
+            put_mat(out, fb);
+        }
+        Payload::ShareA(m) | Payload::ShareB(m) => put_mat(out, m),
+        Payload::GShare(m) | Payload::IShare(m) => put_mat(out, m),
+        Payload::Control(c) => match c {
+            ControlMsg::JobStart { seed, .. } => {
+                out.push(CTL_JOB_START);
+                put_u64(out, *seed);
+            }
+            ControlMsg::JobDone { mults, stored } => {
+                out.push(CTL_JOB_DONE);
+                put_u64(out, *mults);
+                put_u64(out, *stored);
+            }
+            ControlMsg::JobError(msg) => {
+                out.push(CTL_JOB_ERROR);
+                put_u32(out, msg.len() as u32);
+                out.extend_from_slice(msg.as_bytes());
+            }
+            ControlMsg::JobAbort => out.push(CTL_JOB_ABORT),
+            ControlMsg::AbortAck { mults, stored } => {
+                out.push(CTL_ABORT_ACK);
+                put_u64(out, *mults);
+                put_u64(out, *stored);
+            }
+            ControlMsg::Shutdown => out.push(CTL_SHUTDOWN),
+        },
+    }
+}
+
+/// Encode `env` into `scratch` (cleared first) and write it to `w`.
+/// Returns the frame length in bytes.
+///
+/// Payloads over [`MAX_FRAME_PAYLOAD`] are rejected **here, at the
+/// sender** with a typed error: encoding them would produce a frame every
+/// receiver discards as oversized (and past `u32::MAX` the length prefix
+/// would wrap, mis-framing the whole stream), turning a loud local
+/// failure into a silent remote wedge.
+pub fn write_envelope<W: std::io::Write>(
+    w: &mut W,
+    env: &Envelope,
+    scratch: &mut Vec<u8>,
+) -> Result<usize> {
+    let payload_len = payload_wire_len(&env.payload);
+    if payload_len > MAX_FRAME_PAYLOAD {
+        return Err(CmpcError::Fabric(format!(
+            "wire: refusing to send a {payload_len}-byte payload \
+             (cap {MAX_FRAME_PAYLOAD} bytes; partition the job smaller)"
+        )));
+    }
+    scratch.clear();
+    encode_envelope(env, scratch);
+    w.write_all(scratch)
+        .map_err(|e| CmpcError::Fabric(format!("wire write: {e}")))?;
+    Ok(scratch.len())
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked little-endian cursor over untrusted bytes.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(corrupt(format!(
+                "truncated frame: wanted {n} more bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+}
+
+struct FrameHeader {
+    job: u64,
+    from: usize,
+    tag: u8,
+    len: usize,
+}
+
+fn parse_header(r: &mut Reader<'_>) -> Result<FrameHeader> {
+    let magic = r.u32()?;
+    if magic != WIRE_MAGIC {
+        return Err(corrupt(format!(
+            "bad magic 0x{magic:08x} (expected 0x{WIRE_MAGIC:08x})"
+        )));
+    }
+    let version = r.u16()?;
+    if version != WIRE_VERSION {
+        return Err(corrupt(format!(
+            "version mismatch: frame is v{version}, this build speaks v{WIRE_VERSION}"
+        )));
+    }
+    let job = r.u64()?;
+    let from = r.u32()? as usize;
+    let tag = r.u8()?;
+    let len = r.u32()? as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(corrupt(format!(
+            "oversized frame: payload length {len} exceeds the {MAX_FRAME_PAYLOAD}-byte cap"
+        )));
+    }
+    Ok(FrameHeader {
+        job,
+        from,
+        tag,
+        len,
+    })
+}
+
+fn decode_mat(r: &mut Reader<'_>, bufs: Option<&Arc<BufferPool>>) -> Result<PooledMat> {
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let scalars = (rows as u64).saturating_mul(cols as u64);
+    // Reject before allocating: the matrix must fit in the bytes that are
+    // actually present.
+    if scalars.saturating_mul(4) > r.remaining() as u64 {
+        return Err(corrupt(format!(
+            "matrix header claims {rows}x{cols} scalars but only {} payload bytes remain",
+            r.remaining()
+        )));
+    }
+    let scalars = scalars as usize;
+    let mut mat = match bufs {
+        Some(pool) => BufferPool::loan(pool, rows, cols),
+        None => PooledMat::detached(crate::matrix::FpMat::zeros(rows, cols)),
+    };
+    for slot in mat.data.iter_mut().take(scalars) {
+        let v = r.u32()?;
+        if (v as u64) >= P {
+            return Err(corrupt(format!("scalar {v} out of field range (p = {P})")));
+        }
+        *slot = v;
+    }
+    Ok(mat)
+}
+
+fn decode_payload(tag: u8, body: &[u8], bufs: Option<&Arc<BufferPool>>) -> Result<Payload> {
+    let mut r = Reader::new(body);
+    let payload = match tag {
+        TAG_SHARES => {
+            let fa = decode_mat(&mut r, bufs)?;
+            let fb = decode_mat(&mut r, bufs)?;
+            Payload::Shares { fa, fb }
+        }
+        TAG_SHARE_A => Payload::ShareA(decode_mat(&mut r, bufs)?),
+        TAG_SHARE_B => Payload::ShareB(decode_mat(&mut r, bufs)?),
+        TAG_GSHARE => Payload::GShare(decode_mat(&mut r, bufs)?),
+        TAG_ISHARE => Payload::IShare(decode_mat(&mut r, bufs)?),
+        TAG_CONTROL => {
+            let ctl = match r.u8()? {
+                CTL_JOB_START => ControlMsg::JobStart {
+                    seed: r.u64()?,
+                    // The counters Arc cannot cross a wire; the receiver
+                    // gets a fresh instance and reports totals back in its
+                    // JobDone / AbortAck.
+                    counters: Arc::new(WorkerCounters::default()),
+                },
+                CTL_JOB_DONE => ControlMsg::JobDone {
+                    mults: r.u64()?,
+                    stored: r.u64()?,
+                },
+                CTL_JOB_ERROR => {
+                    let len = r.u32()? as usize;
+                    let bytes = r.bytes(len)?;
+                    ControlMsg::JobError(String::from_utf8_lossy(bytes).into_owned())
+                }
+                CTL_JOB_ABORT => ControlMsg::JobAbort,
+                CTL_ABORT_ACK => ControlMsg::AbortAck {
+                    mults: r.u64()?,
+                    stored: r.u64()?,
+                },
+                CTL_SHUTDOWN => ControlMsg::Shutdown,
+                other => return Err(corrupt(format!("unknown control sub-tag {other}"))),
+            };
+            Payload::Control(ctl)
+        }
+        other => return Err(corrupt(format!("unknown payload tag {other}"))),
+    };
+    if r.remaining() != 0 {
+        return Err(corrupt(format!(
+            "frame length mismatch: {} trailing payload bytes",
+            r.remaining()
+        )));
+    }
+    Ok(payload)
+}
+
+/// Decode one frame from the front of `buf`. Returns the envelope and the
+/// number of bytes consumed. Matrices are loaned from `bufs` when given
+/// (the zero-alloc receive path), detached otherwise.
+pub fn decode_envelope(
+    buf: &[u8],
+    bufs: Option<&Arc<BufferPool>>,
+) -> Result<(Envelope, usize)> {
+    let mut r = Reader::new(buf);
+    let h = parse_header(&mut r)?;
+    let body = r.bytes(h.len)?;
+    let payload = decode_payload(h.tag, body, bufs)?;
+    Ok((
+        Envelope {
+            job: h.job,
+            from: h.from,
+            payload,
+        },
+        HEADER_LEN + h.len,
+    ))
+}
+
+/// Streaming frame decoder with a reusable body buffer (one per reader
+/// thread: steady-state frames reuse its capacity, and pooled matrices
+/// make the whole receive path allocation-free once warm).
+#[derive(Default)]
+pub struct FrameReader {
+    body: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Read exactly one frame from `r`. `Ok(None)` on a clean EOF at a
+    /// frame boundary (the peer closed); mid-frame EOF, I/O failures, and
+    /// corrupt frames are typed errors.
+    pub fn read_from<R: Read>(
+        &mut self,
+        r: &mut R,
+        bufs: Option<&Arc<BufferPool>>,
+    ) -> Result<Option<Envelope>> {
+        let mut header = [0u8; HEADER_LEN];
+        let mut got = 0usize;
+        while got < HEADER_LEN {
+            match r.read(&mut header[got..]) {
+                Ok(0) => {
+                    if got == 0 {
+                        return Ok(None);
+                    }
+                    return Err(corrupt(format!(
+                        "connection closed {got} bytes into a frame header"
+                    )));
+                }
+                Ok(n) => got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(CmpcError::Fabric(format!("wire read: {e}"))),
+            }
+        }
+        let h = parse_header(&mut Reader::new(&header))?;
+        self.body.clear();
+        // Chunked body read: a lying length prefix can make us allocate at
+        // most one READ_CHUNK beyond what the peer actually sent.
+        let mut remaining = h.len;
+        while remaining > 0 {
+            let chunk = remaining.min(READ_CHUNK);
+            let start = self.body.len();
+            self.body.resize(start + chunk, 0);
+            r.read_exact(&mut self.body[start..]).map_err(|e| {
+                if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                    corrupt(format!(
+                        "connection closed mid-frame ({} of {} payload bytes missing)",
+                        remaining,
+                        h.len
+                    ))
+                } else {
+                    CmpcError::Fabric(format!("wire read: {e}"))
+                }
+            })?;
+            remaining -= chunk;
+        }
+        let payload = decode_payload(h.tag, &self.body, bufs)?;
+        Ok(Some(Envelope {
+            job: h.job,
+            from: h.from,
+            payload,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::FpMat;
+    use crate::util::rng::ChaChaRng;
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> PooledMat {
+        let mut rng = ChaChaRng::seed_from_u64(seed);
+        PooledMat::detached(FpMat::random(&mut rng, rows, cols))
+    }
+
+    fn env(payload: Payload) -> Envelope {
+        Envelope {
+            job: 0x0123_4567_89AB_CDEF,
+            from: 42,
+            payload,
+        }
+    }
+
+    fn every_payload() -> Vec<Payload> {
+        vec![
+            Payload::Shares {
+                fa: mat(3, 4, 1),
+                fb: mat(4, 2, 2),
+            },
+            Payload::ShareA(mat(2, 2, 3)),
+            Payload::ShareB(mat(1, 5, 4)),
+            Payload::GShare(mat(4, 4, 5)),
+            Payload::IShare(mat(0, 0, 6)), // empty matrices are legal
+            Payload::Control(ControlMsg::JobStart {
+                seed: 77,
+                counters: Arc::new(WorkerCounters::default()),
+            }),
+            Payload::Control(ControlMsg::JobDone {
+                mults: 123,
+                stored: 456,
+            }),
+            Payload::Control(ControlMsg::JobError("worker 3: α went missing".into())),
+            Payload::Control(ControlMsg::JobAbort),
+            Payload::Control(ControlMsg::AbortAck {
+                mults: 9,
+                stored: 10,
+            }),
+            Payload::Control(ControlMsg::Shutdown),
+        ]
+    }
+
+    fn assert_payload_eq(a: &Payload, b: &Payload) {
+        match (a, b) {
+            (Payload::Shares { fa, fb }, Payload::Shares { fa: fa2, fb: fb2 }) => {
+                assert_eq!(**fa, **fa2);
+                assert_eq!(**fb, **fb2);
+            }
+            (Payload::ShareA(x), Payload::ShareA(y))
+            | (Payload::ShareB(x), Payload::ShareB(y))
+            | (Payload::GShare(x), Payload::GShare(y))
+            | (Payload::IShare(x), Payload::IShare(y)) => assert_eq!(**x, **y),
+            (Payload::Control(x), Payload::Control(y)) => match (x, y) {
+                (
+                    ControlMsg::JobStart { seed, .. },
+                    ControlMsg::JobStart { seed: s2, .. },
+                ) => assert_eq!(seed, s2),
+                (
+                    ControlMsg::JobDone { mults, stored },
+                    ControlMsg::JobDone {
+                        mults: m2,
+                        stored: s2,
+                    },
+                )
+                | (
+                    ControlMsg::AbortAck { mults, stored },
+                    ControlMsg::AbortAck {
+                        mults: m2,
+                        stored: s2,
+                    },
+                ) => {
+                    assert_eq!(mults, m2);
+                    assert_eq!(stored, s2);
+                }
+                (ControlMsg::JobError(m1), ControlMsg::JobError(m2)) => assert_eq!(m1, m2),
+                (ControlMsg::JobAbort, ControlMsg::JobAbort) => {}
+                (ControlMsg::Shutdown, ControlMsg::Shutdown) => {}
+                (x, y) => panic!("control variant mismatch: {x:?} vs {y:?}"),
+            },
+            (a, b) => panic!("payload variant mismatch: {a:?} vs {b:?}"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_every_variant() {
+        for payload in every_payload() {
+            let e = env(payload);
+            let mut buf = Vec::new();
+            encode_envelope(&e, &mut buf);
+            assert_eq!(buf.len(), frame_len(&e), "frame_len disagrees for {e:?}");
+            let (back, consumed) = decode_envelope(&buf, None).unwrap();
+            assert_eq!(consumed, buf.len());
+            assert_eq!(back.job, e.job);
+            assert_eq!(back.from, e.from);
+            assert_payload_eq(&back.payload, &e.payload);
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_a_stream_with_pooled_buffers() {
+        let pool = BufferPool::new();
+        let mut buf = Vec::new();
+        let frames = every_payload();
+        let count = frames.len();
+        for payload in frames {
+            encode_envelope(&env(payload), &mut buf);
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        let mut fr = FrameReader::new();
+        let mut seen = 0;
+        while let Some(e) = fr.read_from(&mut cursor, Some(&pool)).unwrap() {
+            assert_eq!(e.from, 42);
+            seen += 1;
+        }
+        assert_eq!(seen, count);
+        // EOF at a frame boundary keeps returning None
+        assert!(fr.read_from(&mut cursor, Some(&pool)).unwrap().is_none());
+        // decoded matrices were loaned from the pool and returned on drop
+        assert!(pool.free_buffers() > 0);
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_a_typed_error() {
+        for payload in every_payload() {
+            let e = env(payload);
+            let mut buf = Vec::new();
+            encode_envelope(&e, &mut buf);
+            for cut in 0..buf.len() {
+                let err = decode_envelope(&buf[..cut], None).unwrap_err();
+                assert!(
+                    matches!(err, CmpcError::Fabric(_)),
+                    "cut at {cut}: {err}"
+                );
+                // streaming: EOF mid-frame is an error, EOF at 0 is None
+                let mut cursor = std::io::Cursor::new(buf[..cut].to_vec());
+                let got = FrameReader::new().read_from(&mut cursor, None);
+                if cut == 0 {
+                    assert!(matches!(got, Ok(None)));
+                } else {
+                    assert!(got.is_err(), "stream cut at {cut} did not error");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_headers_are_typed_errors() {
+        let e = env(Payload::GShare(mat(2, 2, 9)));
+        let mut good = Vec::new();
+        encode_envelope(&e, &mut good);
+
+        // flipped magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        let err = decode_envelope(&bad, None).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        // version bump
+        let mut bad = good.clone();
+        bad[4] = 0x7F;
+        let err = decode_envelope(&bad, None).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        // unknown payload tag
+        let mut bad = good.clone();
+        bad[18] = 0xEE;
+        let err = decode_envelope(&bad, None).unwrap_err();
+        assert!(err.to_string().contains("tag"), "{err}");
+
+        // oversized length prefix: rejected before any allocation
+        let mut bad = good.clone();
+        bad[19..23].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_envelope(&bad, None).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+        let mut cursor = std::io::Cursor::new(bad);
+        assert!(FrameReader::new().read_from(&mut cursor, None).is_err());
+
+        // length prefix larger than the actual body (trailing-byte check
+        // on the other side: shrink len, leaving trailing bytes)
+        let mut bad = good.clone();
+        let short = (payload_wire_len(&e.payload) - 1) as u32;
+        bad[19..23].copy_from_slice(&short.to_le_bytes());
+        assert!(decode_envelope(&bad, None).is_err());
+
+        // matrix dims that overflow the frame
+        let mut bad = good.clone();
+        bad[HEADER_LEN..HEADER_LEN + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_envelope(&bad, None).unwrap_err();
+        assert!(err.to_string().contains("matrix header"), "{err}");
+
+        // scalar out of field range
+        let mut bad = good.clone();
+        let first_scalar = HEADER_LEN + 8;
+        bad[first_scalar..first_scalar + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_envelope(&bad, None).unwrap_err();
+        assert!(err.to_string().contains("field range"), "{err}");
+
+        // unknown control sub-tag
+        let ce = env(Payload::Control(ControlMsg::JobAbort));
+        let mut bad = Vec::new();
+        encode_envelope(&ce, &mut bad);
+        bad[HEADER_LEN] = 0x66;
+        let err = decode_envelope(&bad, None).unwrap_err();
+        assert!(err.to_string().contains("sub-tag"), "{err}");
+    }
+
+    #[test]
+    fn garbage_streams_never_panic() {
+        // A deterministic fuzz sweep: random bytes, random flips of valid
+        // frames — every outcome must be Ok or a typed error, never a
+        // panic or an absurd allocation.
+        let mut rng = ChaChaRng::seed_from_u64(0xF422);
+        for round in 0..200u64 {
+            let mut buf = Vec::new();
+            if round % 2 == 0 {
+                let len = (rng.next_u64() % 64) as usize;
+                for _ in 0..len {
+                    buf.push(rng.next_u64() as u8);
+                }
+            } else {
+                encode_envelope(&env(Payload::GShare(mat(2, 3, round))), &mut buf);
+                let flips = 1 + (rng.next_u64() % 4) as usize;
+                for _ in 0..flips {
+                    let i = (rng.next_u64() as usize) % buf.len();
+                    buf[i] ^= (rng.next_u64() as u8) | 1;
+                }
+            }
+            let _ = decode_envelope(&buf, None); // must not panic
+            let mut cursor = std::io::Cursor::new(buf);
+            let mut fr = FrameReader::new();
+            loop {
+                match fr.read_from(&mut cursor, None) {
+                    Ok(Some(_)) => {}
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Distributed-transport acceptance: a full multi-node topology — every
+//! party its own thread, every link a real 127.0.0.1 TCP socket, every
+//! envelope through the framed wire codec — must decode `Y` byte-identical
+//! to the in-process fabric, for every constructible scheme, with the
+//! measured on-wire bytes matching the analytical ζ within the framing
+//! overhead budget (<5%). Plus one run under WAN link shaping and one
+//! under a chaos kill with early decode.
+//!
+//! Kept to a single `#[test]` so the socket/thread churn of one scenario
+//! cannot interfere with another's timings.
+
+use std::time::Duration;
+
+use cmpc::analysis;
+use cmpc::codes::SchemeParams;
+use cmpc::mpc::chaos::ChaosPlan;
+use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::runtime::manifest::{ShapeLine, TopologyManifest};
+use cmpc::transport::node::{self, run_local_cluster};
+use cmpc::{Deployment, SchemeSpec};
+
+#[test]
+fn tcp_loopback_matches_the_in_process_fabric() {
+    let (s, t, z) = (2usize, 2usize, 2usize);
+    let m = 32usize; // (m/t)² = 256-scalar G blocks → ~3% framing overhead
+    let seed = 0xD157u64;
+    let jobs = 2usize;
+
+    // ---- 1. Every scheme: multi-node loopback ≡ in-process, and wire
+    // bytes ≡ ζ within the framing budget. ----
+    for scheme in ["age", "polydot", "entangled"] {
+        let mut manifest =
+            TopologyManifest::template(scheme, s, t, z, m, seed, jobs, "127.0.0.1", 0).unwrap();
+        manifest.recv_timeout = Duration::from_secs(20);
+
+        // In-process reference with the same per-job seeds and data.
+        let dep = Deployment::provision(
+            manifest.spec().unwrap(),
+            SchemeParams::new(s, t, z),
+            ProtocolConfig::builder().threads(1).build(),
+        )
+        .unwrap();
+        let mut refs = Vec::new();
+        for k in 0..jobs {
+            let (a, b) = node::job_matrices(seed, k as u64, m);
+            let out = dep
+                .execute_seeded(&a, &b, node::job_secret_seed(seed, k as u64))
+                .unwrap();
+            assert!(out.verified, "{scheme} reference job {k}");
+            refs.push(out);
+        }
+        drop(dep);
+
+        let report = run_local_cluster(&manifest, None).unwrap();
+        assert_eq!(report.master.jobs.len(), jobs, "{scheme}");
+        for (k, job) in report.master.jobs.iter().enumerate() {
+            assert!(job.verified, "{scheme} job {k}");
+            assert!(!job.early_decoded, "{scheme} job {k}: full drain expected");
+            assert_eq!(
+                job.y, refs[k].y,
+                "{scheme} job {k}: distributed Y diverged from the in-process fabric"
+            );
+            assert_eq!(job.digest, node::digest_mat(&refs[k].y), "{scheme} job {k}");
+            // The remote counter plumbing (totals riding JobDone) must
+            // reproduce the in-process ξ/σ exactly, per worker.
+            for (wid, (remote, local)) in job
+                .worker_counters
+                .iter()
+                .zip(refs[k].worker_counters.iter())
+                .enumerate()
+            {
+                assert_eq!(
+                    remote.mults(),
+                    local.mults(),
+                    "{scheme} job {k}: ξ mismatch at worker {wid}"
+                );
+                assert_eq!(
+                    remote.stored(),
+                    local.stored(),
+                    "{scheme} job {k}: σ mismatch at worker {wid}"
+                );
+            }
+        }
+        // Measured on-wire worker↔worker bytes vs the analytical ζ
+        // (eq. 34, scalars × 4 bytes): transmitted, not just counted.
+        let n = manifest.n_workers() as u64;
+        let zeta_bytes = analysis::communication_overhead(m, t, n) as u64 * 4 * jobs as u64;
+        let w2w = report.wire.bytes_worker_to_worker;
+        assert!(
+            w2w >= zeta_bytes,
+            "{scheme}: wire carried fewer bytes than ζ ({w2w} < {zeta_bytes})"
+        );
+        let overhead_pct = (w2w - zeta_bytes) as f64 * 100.0 / zeta_bytes as f64;
+        assert!(
+            overhead_pct < 5.0,
+            "{scheme}: framing overhead {overhead_pct:.2}% breaches the 5% budget"
+        );
+        assert_eq!(report.wire.decode_errors, 0, "{scheme}: corrupt frames on loopback");
+        // Give the previous cluster's detached reader threads a beat to
+        // observe EOF and release their sockets before the next bind wave.
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // ---- 2. WAN shaping: all data links get in-flight latency + a token
+    // bucket; the decode is byte-identical, just later. ----
+    let m_small = 16usize;
+    let (a, b) = node::job_matrices(seed, 0, m_small);
+    let dep = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        SchemeParams::new(s, t, z),
+        ProtocolConfig::builder().threads(1).build(),
+    )
+    .unwrap();
+    let want = dep
+        .execute_seeded(&a, &b, node::job_secret_seed(seed, 0))
+        .unwrap()
+        .y;
+    drop(dep);
+    let mut manifest =
+        TopologyManifest::template("age", s, t, z, m_small, seed, 1, "127.0.0.1", 0).unwrap();
+    manifest.recv_timeout = Duration::from_secs(20);
+    manifest.shapes.push(ShapeLine {
+        from: None,
+        to: None,
+        latency_us: 5_000,        // 5 ms per hop
+        rate_bps: 80_000_000,     // 10 MB/s
+        burst_bytes: 8 * 1024,
+        class: None,
+    });
+    let report = run_local_cluster(&manifest, None).unwrap();
+    let job = &report.master.jobs[0];
+    assert!(job.verified);
+    assert_eq!(job.y, want, "WAN-shaped cluster diverged from the reference");
+    assert!(
+        job.elapsed >= Duration::from_millis(10),
+        "WAN shaping had no measurable effect ({:?})",
+        job.elapsed
+    );
+
+    // ---- 3. Chaos kill + early decode over real sockets: z workers die
+    // after their exchange; the master still decodes the identical Y at
+    // the quota and aborts the tail. ----
+    let mut manifest =
+        TopologyManifest::template("age", s, t, z, m_small, seed, 1, "127.0.0.1", 0).unwrap();
+    manifest.early_decode = true;
+    manifest.recv_timeout = Duration::from_secs(3);
+    let n = manifest.n_workers();
+    let plan = ChaosPlan::kill_k_workers_after_exchange(0xC1A0, n, z).into_shared();
+    let report = run_local_cluster(&manifest, Some(plan)).unwrap();
+    let job = &report.master.jobs[0];
+    assert!(job.verified);
+    assert!(job.early_decoded, "kill scenario should take the fast path");
+    assert_eq!(job.y, want, "early-decoded distributed Y diverged");
+}

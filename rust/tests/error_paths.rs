@@ -140,6 +140,7 @@ fn master_reports_insufficient_workers() {
         2,
         Duration::from_millis(100),
         false,
+        &[],
         &pool,
         &scratch,
     )
@@ -175,6 +176,7 @@ fn dead_worker_surfaces_recv_timeout_not_deadlock() {
         0,
         Duration::from_millis(20),
         false,
+        &[],
         &pool,
         &scratch,
     )

@@ -12,6 +12,7 @@ use cmpc::codes::{AgeCmpc, CmpcScheme, EntangledCmpc, PolyDotCmpc, SchemeParams}
 use cmpc::matrix::FpMat;
 use cmpc::mpc::chaos::{ChaosPlan, FaultAction, FaultRule, PayloadClass};
 use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::transport::shaper::{LinkShaper, LinkSpec, ShapeRule};
 use cmpc::util::rng::ChaChaRng;
 use cmpc::{CmpcError, Deployment, SchemeSpec};
 
@@ -128,26 +129,30 @@ fn chaos_killed_workers_early_decode_and_respawn() {
     }
 
     // ---- 2. Straggler tail: early decode turns tail latency into a
-    // measured win. Two workers' own I-share leg sleeps 300 ms; the
-    // full-drain job must wait it out, the early-decode job must not. ----
+    // measured win. Two workers sit behind slow *links*: every inbound
+    // G-share into them is shaped +300 ms in flight (their own compute
+    // and outbound shares are on time, so everyone else finishes fast).
+    // The full-drain job must wait for the victims' late I-shares; the
+    // early-decode job aborts them while they idle-wait — they ack
+    // instantly, so the job returns early AND with exact counters. ----
     let delay = Duration::from_millis(300);
-    let straggler_plan = || {
-        let mut plan = ChaosPlan::new();
+    let straggler_shaper = || {
+        let mut shaper = LinkShaper::new();
         for victim in [2usize, 9] {
-            plan = plan.rule(
-                FaultRule::new(FaultAction::Delay(delay))
-                    .from_node(victim)
-                    .class(PayloadClass::IShare),
+            shaper = shaper.rule(
+                ShapeRule::new(LinkSpec::latency(delay))
+                    .to_node(victim)
+                    .class(PayloadClass::GShare),
             );
         }
-        plan.into_shared()
+        shaper.into_shared()
     };
     let dep_full = Deployment::provision(
         SchemeSpec::Age { lambda: None },
         params,
         ProtocolConfig::builder()
             .threads(1)
-            .chaos(straggler_plan())
+            .shaper(straggler_shaper())
             .build(),
     )
     .unwrap();
@@ -157,7 +162,7 @@ fn chaos_killed_workers_early_decode_and_respawn() {
     assert!(out_full.verified && !out_full.early_decoded);
     assert!(
         full_elapsed >= delay,
-        "full drain returned in {full_elapsed:?} despite a {delay:?} straggler"
+        "full drain returned in {full_elapsed:?} despite a {delay:?} slow-link straggler"
     );
     drop(dep_full);
     let dep_early = Deployment::provision(
@@ -166,7 +171,7 @@ fn chaos_killed_workers_early_decode_and_respawn() {
         ProtocolConfig::builder()
             .threads(1)
             .early_decode(true)
-            .chaos(straggler_plan())
+            .shaper(straggler_shaper())
             .build(),
     )
     .unwrap();
@@ -178,6 +183,24 @@ fn chaos_killed_workers_early_decode_and_respawn() {
     assert!(
         early_elapsed < full_elapsed,
         "early decode ({early_elapsed:?}) did not beat the full drain ({full_elapsed:?})"
+    );
+    // Exactness on the fast path (the JobAbort-ack contract): the victims
+    // acked the abort after tombstoning the job, so even when their shaped
+    // G-shares finally arrive, not one counter may move.
+    let snap: Vec<(u64, u64)> = out_early
+        .worker_counters
+        .iter()
+        .map(|c| (c.mults(), c.stored()))
+        .collect();
+    std::thread::sleep(delay + Duration::from_millis(100));
+    let after: Vec<(u64, u64)> = out_early
+        .worker_counters
+        .iter()
+        .map(|c| (c.mults(), c.stored()))
+        .collect();
+    assert_eq!(
+        snap, after,
+        "early-decoded counters ticked after the job returned"
     );
     drop(dep_early);
 
