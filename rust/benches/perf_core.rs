@@ -16,23 +16,30 @@
 //! PR 5 adds a **wire** scenario: each scheme's job runs once through the
 //! loopback TCP cluster (real sockets, framed codec) and the measured
 //! worker↔worker bytes are reported against the analytical ζ — framing
-//! overhead must stay under 5%. Results are printed in the in-tree bench
-//! format *and* emitted as machine-readable `BENCH_5.json` so later PRs
-//! can diff the trajectory.
+//! overhead must stay under 5%. PR 6 adds a **gateway** scenario: the
+//! multi-tenant load driver pushes concurrent closed-loop tenants through
+//! a loopback serving gateway (admission → batcher → shared deployment)
+//! and reports sustained QPS, gateway-observed p50/p99 latency, and the
+//! batching profile straight from `GatewayStats`. Results are printed in
+//! the in-tree bench format *and* emitted as machine-readable
+//! `BENCH_6.json` so later PRs can diff the trajectory.
 //!
 //! Usage (from `rust/`):
 //!
 //! ```sh
-//! cargo bench --bench perf_core                      # full run → ../BENCH_5.json
+//! cargo bench --bench perf_core                      # full run → ../BENCH_6.json
 //! cargo bench --bench perf_core -- --smoke --out /tmp/b.json   # CI schema smoke
 //! ```
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cmpc::analysis;
 use cmpc::benchkit::{peak_rss_bytes, per_second, Json};
 use cmpc::codes::SchemeParams;
 use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
+use cmpc::gateway::client::{run_load, LoadPlan};
+use cmpc::gateway::{Gateway, GatewayConfig, LocalEngine};
 use cmpc::matrix::FpMat;
 use cmpc::mpc::chaos::PayloadClass;
 use cmpc::mpc::protocol::ProtocolConfig;
@@ -248,6 +255,75 @@ fn run_wire(scheme: &str, s: usize, t: usize, z: usize, m: usize) -> WireCase {
     }
 }
 
+struct GatewayCase {
+    tenants: usize,
+    jobs_per_tenant: usize,
+    m: usize,
+    /// Client-observed completion rate across all tenants.
+    sustained_qps: f64,
+    /// Gateway-observed (admission → response) latency percentiles.
+    p50_us: u64,
+    p99_us: u64,
+    batches: u64,
+    batched_jobs: u64,
+    max_batch: usize,
+    /// `GatewayStats::batch_size` with trailing zero buckets trimmed
+    /// (bucket `i` counts batches of `i + 1` jobs).
+    batch_size_hist: Vec<u64>,
+}
+
+/// Serving-gateway throughput: `tenants` concurrent closed-loop clients
+/// drive the deterministic job sequence through a loopback gateway onto
+/// one shared in-process deployment.
+fn run_gateway(tenants: usize, jobs_per_tenant: usize, m: usize) -> GatewayCase {
+    let engine = Arc::new(LocalEngine::new(
+        CoordinatorConfig::builder().verify(false).build(),
+    ));
+    let gateway = Gateway::start("127.0.0.1:0", GatewayConfig::default(), engine)
+        .expect("gateway start");
+    let plan = LoadPlan {
+        addr: gateway.local_addr().to_string(),
+        tenants: (0..tenants as u32).collect(),
+        jobs_per_tenant,
+        m,
+        s: 2,
+        t: 2,
+        z: 2,
+        seed: 0x6A7E,
+        qps: None,
+    };
+    let report = run_load(&plan).expect("gateway load");
+    assert_eq!(report.accepted(), tenants * jobs_per_tenant, "open admission rejected a job");
+    let stats = gateway.shutdown();
+    let mut hist = stats.batch_size.to_vec();
+    while hist.last() == Some(&0) {
+        hist.pop();
+    }
+    let case = GatewayCase {
+        tenants,
+        jobs_per_tenant,
+        m,
+        sustained_qps: report.qps(),
+        p50_us: stats.p50_latency_us(),
+        p99_us: stats.p99_latency_us(),
+        batches: stats.batches,
+        batched_jobs: stats.batched_jobs,
+        max_batch: stats.max_batch(),
+        batch_size_hist: hist,
+    };
+    println!(
+        "bench perf_core/gateway tenants={tenants} jobs={} m={m}  qps={:.1} p50={}us \
+         p99={}us batches={} max_batch={}",
+        tenants * jobs_per_tenant,
+        case.sustained_qps,
+        case.p50_us,
+        case.p99_us,
+        case.batches,
+        case.max_batch,
+    );
+    case
+}
+
 fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut Vec<Case>) {
     let params = SchemeParams::new(s, t, z);
     let mut rng = ChaChaRng::seed_from_u64(0xB2);
@@ -326,7 +402,7 @@ fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut V
 
 fn main() {
     let mut smoke = false;
-    let mut out_path = String::from("../BENCH_5.json");
+    let mut out_path = String::from("../BENCH_6.json");
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -371,12 +447,17 @@ fn main() {
         .iter()
         .map(|&scheme| run_wire(scheme, 2, 2, 2, wire_m))
         .collect();
+    let gateway: Vec<GatewayCase> = if smoke {
+        vec![run_gateway(2, 4, 16)]
+    } else {
+        vec![run_gateway(2, 16, 32), run_gateway(4, 16, 32)]
+    };
 
     let host_threads = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1) as u64;
     let json = Json::obj(vec![
-        ("schema", Json::Str("cmpc.bench.v5".to_string())),
+        ("schema", Json::Str("cmpc.bench.v6".to_string())),
         ("benchmark", Json::Str("perf_core".to_string())),
         ("provenance", Json::Str("measured".to_string())),
         (
@@ -468,6 +549,33 @@ fn main() {
                             ("overhead_pct", Json::Float(c.overhead_pct)),
                             ("total_wire_bytes", Json::Int(c.total_wire_bytes)),
                             ("e2e_ns", Json::Int(c.e2e_ns)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gateway",
+            Json::Arr(
+                gateway
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("tenants", Json::Int(c.tenants as u64)),
+                            ("jobs_per_tenant", Json::Int(c.jobs_per_tenant as u64)),
+                            ("m", Json::Int(c.m as u64)),
+                            ("sustained_qps", Json::Float(c.sustained_qps)),
+                            ("p50_us", Json::Int(c.p50_us)),
+                            ("p99_us", Json::Int(c.p99_us)),
+                            ("batches", Json::Int(c.batches)),
+                            ("batched_jobs", Json::Int(c.batched_jobs)),
+                            ("max_batch", Json::Int(c.max_batch as u64)),
+                            (
+                                "batch_size_hist",
+                                Json::Arr(
+                                    c.batch_size_hist.iter().map(|&v| Json::Int(v)).collect(),
+                                ),
+                            ),
                         ])
                     })
                     .collect(),

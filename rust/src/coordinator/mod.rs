@@ -293,11 +293,17 @@ impl Coordinator {
     /// share a deployment are **pipelined into its one persistent runtime**:
     /// their envelopes interleave, job-tagged, on the same fabric links and
     /// no threads are spawned per job (same-deployment jobs may contend on
-    /// the shared scratch slots — see ROADMAP). Reports come back in
-    /// submission order regardless of pool size; a failing job yields an
-    /// `Err` outcome in its report and the batch keeps going. Per-job seeds
-    /// are fixed at `submit`, so results are byte-identical at any pool
-    /// size and under any job interleaving.
+    /// the shared scratch slots — see ROADMAP).
+    ///
+    /// **Ordering contract**: reports come back in **submission order**
+    /// (ascending [`JobHandle`] id) regardless of pool size or completion
+    /// order — `par_map` is order-preserving by construction, and callers
+    /// (the CLI, tests that zip handles with reports, anything correlating
+    /// responses by position) rely on `reports[i]` answering the i-th
+    /// `submit`. A failing job yields an `Err` outcome *in its slot* and
+    /// the batch keeps going. Per-job seeds are fixed at `submit`, so
+    /// results are byte-identical at any pool size and under any job
+    /// interleaving.
     pub fn drain(&mut self) -> Vec<JobReport> {
         let jobs = std::mem::take(&mut self.queue);
         let prepared: Vec<(Job, Result<(Arc<Deployment>, bool)>)> = jobs
@@ -308,7 +314,7 @@ impl Coordinator {
             })
             .collect();
         let pool = self.pool.clone();
-        pool.par_map(&prepared, |_wid, _idx, (job, dep)| match dep {
+        let reports = pool.par_map(&prepared, |_wid, _idx, (job, dep)| match dep {
             Err(e) => JobReport {
                 id: job.id,
                 scheme: String::new(),
@@ -323,7 +329,12 @@ impl Coordinator {
                 setup_cache_hit: *cache_hit,
                 outcome: dep.execute_seeded(&job.a, &job.b, job.seed),
             },
-        })
+        });
+        debug_assert!(
+            reports.windows(2).all(|w| w[0].id < w[1].id),
+            "drain must preserve submission order"
+        );
+        reports
     }
 }
 
@@ -394,6 +405,36 @@ mod tests {
             let out = unwrap_output(r);
             assert!(out.verified);
             assert_eq!(out.y, a.transpose().matmul(b));
+        }
+    }
+
+    #[test]
+    fn drain_reports_stay_in_submission_order_under_parallelism() {
+        // S2 pin: the ordering contract holds at a pool size that forces
+        // genuine interleaving, with jobs of different cost (two distinct
+        // signatures) so completion order differs from submission order.
+        let mut coord = Coordinator::new(
+            CoordinatorConfig::builder().threads(4).build(),
+        );
+        let mut rng = ChaChaRng::seed_from_u64(42);
+        let mut handles = Vec::new();
+        for k in 0..8 {
+            let m = if k % 2 == 0 { 8 } else { 4 };
+            let a = FpMat::random(&mut rng, m, m);
+            let b = FpMat::random(&mut rng, m, m);
+            handles.push(coord.submit(a, b, 2, 2, if k % 2 == 0 { 2 } else { 1 }).unwrap());
+        }
+        let reports = coord.drain();
+        assert_eq!(reports.len(), handles.len());
+        for (h, r) in handles.iter().zip(&reports) {
+            assert_eq!(h.id(), r.id, "reports[i] must answer the i-th submit");
+        }
+        assert!(
+            reports.windows(2).all(|w| w[0].id < w[1].id),
+            "ids must ascend"
+        );
+        for r in &reports {
+            assert!(unwrap_output(r).verified);
         }
     }
 

@@ -1,0 +1,228 @@
+//! Admission control — the gateway's door policy.
+//!
+//! Every tenant gets a classic **token bucket** (capacity `burst`, refill
+//! `rate_per_sec`) plus a **pending-job cap**: a submission consumes one
+//! token at the door and one pending slot until its result (or internal
+//! failure) goes back out. Refusals are *typed*
+//! ([`RejectReason`]) so clients, tests, and the CI lane branch on the
+//! cause instead of parsing prose.
+//!
+//! Buckets with `rate_per_sec == 0` never refill — with `burst = K`,
+//! exactly the first `K` submissions are admitted no matter how fast or
+//! slow they arrive. That degenerate mode is what makes the over-quota
+//! set in `tests/gateway.rs` and the CI `gateway` lane deterministic.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::transport::wire::RejectReason;
+
+/// One tenant's door policy, as declared by a manifest `tenant` line.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantQuota {
+    pub id: u32,
+    /// Token-bucket capacity (also its initial fill).
+    pub burst: u32,
+    /// Token refill rate; `0` disables refill (deterministic test mode).
+    pub rate_per_sec: f64,
+    /// Jobs this tenant may have in flight (queued or executing) at once.
+    pub max_pending: usize,
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+struct TenantState {
+    quota: TenantQuota,
+    bucket: Mutex<Bucket>,
+    pending: AtomicUsize,
+}
+
+impl TenantState {
+    fn new(quota: TenantQuota, now: Instant) -> TenantState {
+        TenantState {
+            quota,
+            bucket: Mutex::new(Bucket {
+                tokens: quota.burst as f64,
+                last: now,
+            }),
+            pending: AtomicUsize::new(0),
+        }
+    }
+
+    fn try_take_token(&self, now: Instant) -> bool {
+        let mut b = self.bucket.lock().unwrap();
+        if self.quota.rate_per_sec > 0.0 {
+            let dt = now.saturating_duration_since(b.last).as_secs_f64();
+            b.tokens = (b.tokens + dt * self.quota.rate_per_sec).min(self.quota.burst as f64);
+            b.last = now;
+        }
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Per-tenant admission state for one gateway. An empty quota table means
+/// **open admission**: any tenant id is served under one implicit
+/// unlimited quota (the zero-config `cmpc gateway` demo path); with any
+/// quota configured, unlisted tenants get [`RejectReason::UnknownTenant`].
+pub struct Admission {
+    tenants: HashMap<u32, TenantState>,
+    open: Option<TenantState>,
+}
+
+impl Admission {
+    pub fn new(quotas: &[TenantQuota]) -> Admission {
+        let now = Instant::now();
+        let open = if quotas.is_empty() {
+            Some(TenantState::new(
+                TenantQuota {
+                    id: 0,
+                    burst: u32::MAX,
+                    // Effectively unlimited: the bucket refills far faster
+                    // than any loopback client can submit.
+                    rate_per_sec: f64::from(u32::MAX),
+                    max_pending: usize::MAX,
+                },
+                now,
+            ))
+        } else {
+            None
+        };
+        Admission {
+            tenants: quotas
+                .iter()
+                .map(|&q| (q.id, TenantState::new(q, now)))
+                .collect(),
+            open,
+        }
+    }
+
+    fn state(&self, tenant: u32) -> Option<&TenantState> {
+        self.tenants.get(&tenant).or(self.open.as_ref())
+    }
+
+    /// Decide a submission at the door. `Ok(())` takes one token and one
+    /// pending slot; the caller owes a matching [`Admission::release`]
+    /// once the job's response is on its way out.
+    pub fn try_admit(&self, tenant: u32) -> std::result::Result<(), RejectReason> {
+        let state = self.state(tenant).ok_or(RejectReason::UnknownTenant)?;
+        // Claim the pending slot first: a rejected claim must not have
+        // consumed a token.
+        let prev = state.pending.fetch_add(1, Ordering::AcqRel);
+        if prev >= state.quota.max_pending {
+            state.pending.fetch_sub(1, Ordering::AcqRel);
+            return Err(RejectReason::QueueFull);
+        }
+        if !state.try_take_token(Instant::now()) {
+            state.pending.fetch_sub(1, Ordering::AcqRel);
+            return Err(RejectReason::QuotaExceeded);
+        }
+        Ok(())
+    }
+
+    /// Return the pending slot taken by a successful [`Admission::try_admit`].
+    /// Tokens are deliberately not returned — they meter *submissions*, not
+    /// completions.
+    pub fn release(&self, tenant: u32) {
+        if let Some(state) = self.state(tenant) {
+            state.pending.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Jobs currently holding a pending slot for `tenant` (0 for unknown).
+    pub fn pending(&self, tenant: u32) -> usize {
+        self.state(tenant)
+            .map(|s| s.pending.load(Ordering::Acquire))
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quota(id: u32, burst: u32, rate: f64, max_pending: usize) -> TenantQuota {
+        TenantQuota {
+            id,
+            burst,
+            rate_per_sec: rate,
+            max_pending,
+        }
+    }
+
+    #[test]
+    fn zero_rate_bucket_admits_exactly_burst() {
+        let adm = Admission::new(&[quota(7, 3, 0.0, 100)]);
+        for _ in 0..3 {
+            adm.try_admit(7).unwrap();
+        }
+        assert_eq!(adm.try_admit(7), Err(RejectReason::QuotaExceeded));
+        // Releasing pending slots does not mint tokens.
+        for _ in 0..3 {
+            adm.release(7);
+        }
+        assert_eq!(adm.try_admit(7), Err(RejectReason::QuotaExceeded));
+    }
+
+    #[test]
+    fn pending_cap_is_typed_and_recoverable() {
+        let adm = Admission::new(&[quota(1, 100, 0.0, 2)]);
+        adm.try_admit(1).unwrap();
+        adm.try_admit(1).unwrap();
+        assert_eq!(adm.try_admit(1), Err(RejectReason::QueueFull));
+        assert_eq!(adm.pending(1), 2);
+        adm.release(1);
+        adm.try_admit(1).unwrap();
+        assert_eq!(adm.pending(1), 2);
+    }
+
+    #[test]
+    fn tenants_are_isolated() {
+        let adm = Admission::new(&[quota(1, 1, 0.0, 10), quota(2, 10, 0.0, 10)]);
+        adm.try_admit(1).unwrap();
+        assert_eq!(adm.try_admit(1), Err(RejectReason::QuotaExceeded));
+        // Tenant 2 is untouched by tenant 1 exhausting its bucket.
+        for _ in 0..10 {
+            adm.try_admit(2).unwrap();
+        }
+        assert_eq!(adm.try_admit(3), Err(RejectReason::UnknownTenant));
+    }
+
+    #[test]
+    fn empty_table_is_open_admission() {
+        let adm = Admission::new(&[]);
+        for tenant in [0, 9, 4_000_000_000] {
+            for _ in 0..64 {
+                adm.try_admit(tenant).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn refill_restores_tokens_over_time() {
+        let adm = Admission::new(&[quota(5, 2, 4000.0, 100)]);
+        adm.try_admit(5).unwrap();
+        adm.try_admit(5).unwrap();
+        // Bucket drained; at 4000 tokens/s a few ms restores it.
+        let t0 = Instant::now();
+        loop {
+            if adm.try_admit(5).is_ok() {
+                break;
+            }
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(5),
+                "bucket never refilled"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+}

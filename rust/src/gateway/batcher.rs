@@ -1,0 +1,227 @@
+//! Request batching — compatible in-flight submissions share a deployment.
+//!
+//! Admitted jobs queue under their **batch signature** `(s, t, z, m)` —
+//! the same key `Coordinator::drain` groups by, plus the matrix size
+//! (which fixes the compute shape). The dispatcher thread pulls one batch
+//! at a time: a queue flushes the moment it reaches `max_batch`, or when
+//! its **oldest** job has waited `max_wait` (the batching window — a
+//! lone request is never held hostage waiting for company), or
+//! immediately once shutdown starts. Everything in one batch then
+//! executes on one shared provisioned deployment, so the O(N³) setup
+//! solve and the `N` persistent worker threads amortize across tenants
+//! and connections exactly as they do across `Coordinator::drain` calls.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::matrix::FpMat;
+
+use super::poller::ConnHandle;
+
+/// The compatibility signature: jobs batch together iff these agree.
+/// (The scheme policy is fixed per gateway, so `(s, t, z)` determines the
+/// resolved scheme — same argument as the coordinator's cache key.)
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct BatchKey {
+    pub s: usize,
+    pub t: usize,
+    pub z: usize,
+    pub m: usize,
+}
+
+/// One job's inputs, as handed to the execution engine.
+pub struct BatchInput {
+    pub a: FpMat,
+    pub b: FpMat,
+}
+
+/// One admitted, queued job: inputs plus everything needed to route the
+/// response back out.
+pub(crate) struct BatchJob {
+    pub conn: Arc<ConnHandle>,
+    pub corr: u64,
+    pub tenant: u32,
+    pub input: BatchInput,
+    pub admitted_at: Instant,
+}
+
+/// One flushed batch, ready for the engine.
+pub(crate) struct Batch {
+    pub key: BatchKey,
+    pub jobs: Vec<BatchJob>,
+}
+
+struct BatchState {
+    queues: BTreeMap<BatchKey, VecDeque<BatchJob>>,
+    stopped: bool,
+}
+
+/// Signature-keyed queues + the flush policy described in the module docs.
+pub(crate) struct Batcher {
+    state: Mutex<BatchState>,
+    cv: Condvar,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+impl Batcher {
+    pub(crate) fn new(max_batch: usize, max_wait: Duration) -> Batcher {
+        Batcher {
+            state: Mutex::new(BatchState {
+                queues: BTreeMap::new(),
+                stopped: false,
+            }),
+            cv: Condvar::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+        }
+    }
+
+    /// Enqueue an admitted job under its signature.
+    pub(crate) fn push(&self, key: BatchKey, job: BatchJob) {
+        let mut state = self.state.lock().unwrap();
+        state.queues.entry(key).or_default().push_back(job);
+        self.cv.notify_all();
+    }
+
+    /// Total jobs queued across every signature.
+    pub(crate) fn queued(&self) -> usize {
+        let state = self.state.lock().unwrap();
+        state.queues.values().map(VecDeque::len).sum()
+    }
+
+    /// Start shutdown: wakes the dispatcher so it drains the remaining
+    /// queues (each remaining [`Batcher::next_batch`] call returns them
+    /// immediately, window or not) and then observes the end of stream.
+    pub(crate) fn stop(&self) {
+        let mut state = self.state.lock().unwrap();
+        state.stopped = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until a batch is due, and pop it. Returns `None` only after
+    /// [`Batcher::stop`] once every queue is empty.
+    pub(crate) fn next_batch(&self) -> Option<Batch> {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            // A full queue flushes immediately.
+            if let Some((&key, _)) = state
+                .queues
+                .iter()
+                .find(|(_, q)| q.len() >= self.max_batch)
+            {
+                return Some(self.pop(&mut state, key));
+            }
+            // Otherwise the queue whose oldest job expires first decides
+            // how long to wait.
+            let oldest: Option<(BatchKey, Instant)> = state
+                .queues
+                .iter()
+                .filter_map(|(&key, q)| q.front().map(|j| (key, j.admitted_at)))
+                .min_by_key(|&(_, at)| at);
+            match oldest {
+                Some((key, at)) => {
+                    if state.stopped || at.elapsed() >= self.max_wait {
+                        return Some(self.pop(&mut state, key));
+                    }
+                    let wait = self.max_wait.saturating_sub(at.elapsed());
+                    let (next, _) = self.cv.wait_timeout(state, wait).unwrap();
+                    state = next;
+                }
+                None => {
+                    if state.stopped {
+                        return None;
+                    }
+                    state = self.cv.wait(state).unwrap();
+                }
+            }
+        }
+    }
+
+    fn pop(&self, state: &mut BatchState, key: BatchKey) -> Batch {
+        let queue = state.queues.get_mut(&key).expect("picked key exists");
+        let take = queue.len().min(self.max_batch);
+        let jobs: Vec<BatchJob> = queue.drain(..take).collect();
+        if queue.is_empty() {
+            state.queues.remove(&key);
+        }
+        Batch { key, jobs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: usize) -> BatchKey {
+        BatchKey { s: 2, t: 2, z: 2, m }
+    }
+
+    fn job(conn: &Arc<ConnHandle>, corr: u64, m: usize) -> BatchJob {
+        BatchJob {
+            conn: conn.clone(),
+            corr,
+            tenant: 0,
+            input: BatchInput {
+                a: FpMat::zeros(m, m),
+                b: FpMat::zeros(m, m),
+            },
+            admitted_at: Instant::now(),
+        }
+    }
+
+    /// A detached handle (no poller behind it) for queue-logic tests.
+    fn conn() -> Arc<ConnHandle> {
+        super::super::poller::test_handle()
+    }
+
+    #[test]
+    fn full_queue_flushes_without_waiting_for_the_window() {
+        let b = Batcher::new(3, Duration::from_secs(3600));
+        let c = conn();
+        for corr in 0..3 {
+            b.push(key(8), job(&c, corr, 8));
+        }
+        let t0 = Instant::now();
+        let batch = b.next_batch().expect("batch due");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(batch.key, key(8));
+        let corrs: Vec<u64> = batch.jobs.iter().map(|j| j.corr).collect();
+        assert_eq!(corrs, vec![0, 1, 2]);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn window_expiry_flushes_a_lone_job() {
+        let b = Batcher::new(64, Duration::from_millis(20));
+        let c = conn();
+        b.push(key(4), job(&c, 9, 4));
+        let batch = b.next_batch().expect("window flush");
+        assert_eq!(batch.jobs.len(), 1);
+        assert_eq!(batch.jobs[0].corr, 9);
+    }
+
+    #[test]
+    fn signatures_do_not_mix() {
+        let b = Batcher::new(2, Duration::from_millis(10));
+        let c = conn();
+        b.push(key(4), job(&c, 1, 4));
+        b.push(key(8), job(&c, 2, 8));
+        let first = b.next_batch().unwrap();
+        let second = b.next_batch().unwrap();
+        assert_ne!(first.key, second.key);
+        assert_eq!(first.jobs.len(), 1);
+        assert_eq!(second.jobs.len(), 1);
+    }
+
+    #[test]
+    fn stop_drains_then_ends_the_stream() {
+        let b = Batcher::new(64, Duration::from_secs(3600));
+        let c = conn();
+        b.push(key(4), job(&c, 1, 4));
+        b.stop();
+        assert!(b.next_batch().is_some());
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,376 @@
+//! Gateway client + the `cmpc client` load driver.
+//!
+//! [`GatewayClient`] is the minimal blocking client: one TCP connection,
+//! one frame out per submission, typed replies back ([`ClientReply`]).
+//! [`run_load`] is the multi-tenant load driver behind `cmpc client`: one
+//! thread per tenant, each driving a deterministic slice of the global
+//! job sequence (`job_matrices(seed, k, m)` for `k` in the tenant's
+//! contiguous range), so accepted digests diff 1:1 against
+//! `cmpc node --role reference` no matter how the gateway interleaved or
+//! batched the tenants.
+
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::{CmpcError, Result};
+use crate::matrix::FpMat;
+use crate::transport::node::job_matrices;
+use crate::transport::wire::{
+    read_client_frame, write_client_frame, ClientFrame, ClientMsg, RejectReason,
+};
+
+/// A gateway's answer to one submission, keyed by the echoed correlation
+/// id.
+#[derive(Debug, Clone)]
+pub enum ClientReply {
+    /// The job ran; `digest` is the FNV digest of `y` (what the CI lane
+    /// diffs against the reference).
+    Accepted {
+        corr: u64,
+        digest: u64,
+        /// Admission→decode latency as the gateway measured it.
+        elapsed_us: u64,
+        y: FpMat,
+    },
+    /// The typed refusal, verbatim from the gateway's door (or engine,
+    /// for [`RejectReason::Internal`]).
+    Rejected {
+        corr: u64,
+        reason: RejectReason,
+        detail: String,
+    },
+}
+
+impl ClientReply {
+    pub fn corr(&self) -> u64 {
+        match self {
+            ClientReply::Accepted { corr, .. } | ClientReply::Rejected { corr, .. } => *corr,
+        }
+    }
+}
+
+/// Blocking client for one tenant over one connection.
+pub struct GatewayClient {
+    stream: TcpStream,
+    scratch: Vec<u8>,
+    tenant: u32,
+}
+
+impl GatewayClient {
+    pub fn connect(addr: &str, tenant: u32) -> Result<GatewayClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| CmpcError::Io(format!("connecting to gateway {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        Ok(GatewayClient {
+            stream,
+            scratch: Vec::new(),
+            tenant,
+        })
+    }
+
+    pub fn tenant(&self) -> u32 {
+        self.tenant
+    }
+
+    /// Fire one submission; the reply (matched by `corr`) comes back via
+    /// [`GatewayClient::recv`].
+    pub fn submit(
+        &mut self,
+        corr: u64,
+        s: usize,
+        t: usize,
+        z: usize,
+        a: FpMat,
+        b: FpMat,
+    ) -> Result<()> {
+        write_client_frame(
+            &mut self.stream,
+            &ClientFrame {
+                corr,
+                tenant: self.tenant,
+                msg: ClientMsg::Submit { s, t, z, a, b },
+            },
+            &mut self.scratch,
+        )?;
+        Ok(())
+    }
+
+    /// Block for the next reply on this connection.
+    pub fn recv(&mut self) -> Result<ClientReply> {
+        let frame = read_client_frame(&mut self.stream)?.ok_or_else(|| {
+            CmpcError::Io("gateway closed the connection mid-conversation".to_string())
+        })?;
+        match frame.msg {
+            ClientMsg::Result {
+                digest,
+                elapsed_us,
+                y,
+            } => Ok(ClientReply::Accepted {
+                corr: frame.corr,
+                digest,
+                elapsed_us,
+                y,
+            }),
+            ClientMsg::Reject { reason, detail } => Ok(ClientReply::Rejected {
+                corr: frame.corr,
+                reason,
+                detail,
+            }),
+            ClientMsg::Submit { .. } | ClientMsg::Shutdown => Err(CmpcError::Io(
+                "gateway sent a request-plane frame to a client".to_string(),
+            )),
+        }
+    }
+
+    /// Submit one job and block for its reply (closed-loop convenience).
+    #[allow(clippy::too_many_arguments)]
+    pub fn call(
+        &mut self,
+        corr: u64,
+        s: usize,
+        t: usize,
+        z: usize,
+        a: FpMat,
+        b: FpMat,
+    ) -> Result<ClientReply> {
+        self.submit(corr, s, t, z, a, b)?;
+        self.recv()
+    }
+
+    /// Ask the gateway to drain and stop (the CI lane's clean teardown).
+    pub fn shutdown_gateway(mut self) -> Result<()> {
+        write_client_frame(
+            &mut self.stream,
+            &ClientFrame {
+                corr: 0,
+                tenant: self.tenant,
+                msg: ClientMsg::Shutdown,
+            },
+            &mut self.scratch,
+        )?;
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ load driver
+
+/// What `cmpc client` runs: a per-tenant slice of the deterministic
+/// global job sequence against one gateway.
+#[derive(Clone, Debug)]
+pub struct LoadPlan {
+    pub addr: String,
+    /// Tenant ids; tenant at index `i` drives global jobs
+    /// `[i·jobs_per_tenant, (i+1)·jobs_per_tenant)`.
+    pub tenants: Vec<u32>,
+    pub jobs_per_tenant: usize,
+    pub m: usize,
+    pub s: usize,
+    pub t: usize,
+    pub z: usize,
+    /// Must match the reference's manifest seed for digests to diff.
+    pub seed: u64,
+    /// `None` = closed loop (submit → wait → next; deterministic order,
+    /// what the CI lane uses). `Some(q)` = open loop: each tenant paces
+    /// submissions at `q` jobs/sec without waiting, then drains replies.
+    pub qps: Option<f64>,
+}
+
+/// One job's outcome as the client observed it.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub tenant: u32,
+    /// Global job index (also the correlation id on the wire).
+    pub job: u64,
+    pub reply: ClientReply,
+    /// Submit→reply latency at the client.
+    pub latency: Duration,
+}
+
+/// Aggregate of one [`run_load`] drive.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    /// Every outcome, sorted by global job index.
+    pub outcomes: Vec<JobOutcome>,
+    pub elapsed: Duration,
+}
+
+impl LoadReport {
+    pub fn accepted(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| matches!(o.reply, ClientReply::Accepted { .. }))
+            .count()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.outcomes.len() - self.accepted()
+    }
+
+    /// Client-observed completion rate over the whole drive.
+    pub fn qps(&self) -> f64 {
+        if self.elapsed.as_secs_f64() > 0.0 {
+            self.outcomes.len() as f64 / self.elapsed.as_secs_f64()
+        } else {
+            0.0
+        }
+    }
+
+    /// Client-observed latency percentile over **accepted** jobs
+    /// (`p` in `[0, 1]`); zero when nothing was accepted.
+    pub fn latency_percentile(&self, p: f64) -> Duration {
+        let mut lats: Vec<Duration> = self
+            .outcomes
+            .iter()
+            .filter(|o| matches!(o.reply, ClientReply::Accepted { .. }))
+            .map(|o| o.latency)
+            .collect();
+        if lats.is_empty() {
+            return Duration::ZERO;
+        }
+        lats.sort_unstable();
+        let rank = ((p.clamp(0.0, 1.0) * lats.len() as f64).ceil() as usize)
+            .clamp(1, lats.len());
+        lats[rank - 1]
+    }
+}
+
+fn drive_tenant(plan: &LoadPlan, tenant_idx: usize) -> Result<Vec<JobOutcome>> {
+    let tenant = plan.tenants[tenant_idx];
+    let mut client = GatewayClient::connect(&plan.addr, tenant)?;
+    let base = (tenant_idx * plan.jobs_per_tenant) as u64;
+    let jobs: Vec<u64> = (0..plan.jobs_per_tenant as u64).map(|k| base + k).collect();
+    let mut outcomes = Vec::with_capacity(jobs.len());
+    match plan.qps {
+        // Closed loop: strictly sequential per tenant, so token-bucket
+        // admission decisions are deterministic in job order.
+        None => {
+            for &job in &jobs {
+                let (a, b) = job_matrices(plan.seed, job, plan.m);
+                let t0 = Instant::now();
+                let reply = client.call(job, plan.s, plan.t, plan.z, a, b)?;
+                if reply.corr() != job {
+                    return Err(CmpcError::Io(format!(
+                        "gateway answered corr {} to submission {job}",
+                        reply.corr()
+                    )));
+                }
+                outcomes.push(JobOutcome {
+                    tenant,
+                    job,
+                    reply,
+                    latency: t0.elapsed(),
+                });
+            }
+        }
+        // Open loop: pace submissions at `q`/sec regardless of replies,
+        // then drain — replies may arrive in any order; match by corr.
+        Some(q) => {
+            let interval = Duration::from_secs_f64(1.0 / q.max(1e-6));
+            let start = Instant::now();
+            let mut submitted_at = std::collections::HashMap::new();
+            for (k, &job) in jobs.iter().enumerate() {
+                let due = start + interval * k as u32;
+                if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(wait);
+                }
+                let (a, b) = job_matrices(plan.seed, job, plan.m);
+                submitted_at.insert(job, Instant::now());
+                client.submit(job, plan.s, plan.t, plan.z, a, b)?;
+            }
+            for _ in 0..jobs.len() {
+                let reply = client.recv()?;
+                let job = reply.corr();
+                let t0 = submitted_at.remove(&job).ok_or_else(|| {
+                    CmpcError::Io(format!("gateway answered unknown corr {job}"))
+                })?;
+                outcomes.push(JobOutcome {
+                    tenant,
+                    job,
+                    reply,
+                    latency: t0.elapsed(),
+                });
+            }
+        }
+    }
+    Ok(outcomes)
+}
+
+/// Drive the plan: one thread per tenant, all concurrent. Outcomes come
+/// back sorted by global job index.
+pub fn run_load(plan: &LoadPlan) -> Result<LoadReport> {
+    if plan.tenants.is_empty() || plan.jobs_per_tenant == 0 {
+        return Ok(LoadReport::default());
+    }
+    let t0 = Instant::now();
+    let all: Mutex<Vec<JobOutcome>> = Mutex::new(Vec::new());
+    let first_err: Mutex<Option<CmpcError>> = Mutex::new(None);
+    std::thread::scope(|scope| {
+        for tenant_idx in 0..plan.tenants.len() {
+            let all = &all;
+            let first_err = &first_err;
+            scope.spawn(move || match drive_tenant(plan, tenant_idx) {
+                Ok(mut outcomes) => all.lock().unwrap().append(&mut outcomes),
+                Err(e) => {
+                    first_err.lock().unwrap().get_or_insert(e);
+                }
+            });
+        }
+    });
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    let mut outcomes = all.into_inner().unwrap();
+    outcomes.sort_by_key(|o| o.job);
+    Ok(LoadReport {
+        outcomes,
+        elapsed: t0.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_a_noop() {
+        let report = run_load(&LoadPlan {
+            addr: "127.0.0.1:1".to_string(),
+            tenants: Vec::new(),
+            jobs_per_tenant: 0,
+            m: 4,
+            s: 2,
+            t: 2,
+            z: 2,
+            seed: 7,
+            qps: None,
+        })
+        .unwrap();
+        assert!(report.outcomes.is_empty());
+        assert_eq!(report.accepted(), 0);
+        assert_eq!(report.latency_percentile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn percentiles_rank_correctly() {
+        let mk = |job: u64, us: u64| JobOutcome {
+            tenant: 0,
+            job,
+            reply: ClientReply::Accepted {
+                corr: job,
+                digest: 0,
+                elapsed_us: us,
+                y: FpMat::zeros(1, 1),
+            },
+            latency: Duration::from_micros(us),
+        };
+        let report = LoadReport {
+            outcomes: (1..=100).map(|i| mk(i, i * 10)).collect(),
+            elapsed: Duration::from_secs(1),
+        };
+        assert_eq!(report.accepted(), 100);
+        assert_eq!(report.latency_percentile(0.5), Duration::from_micros(500));
+        assert_eq!(report.latency_percentile(0.99), Duration::from_micros(990));
+        assert_eq!(report.latency_percentile(1.0), Duration::from_micros(1000));
+    }
+}

@@ -1,0 +1,714 @@
+//! Async serving gateway — the multi-tenant front door (v0.7).
+//!
+//! Everything below the coordinator assumes a trusted in-process caller.
+//! This module adds the missing serving tier for an edge deployment:
+//! untrusted clients connect over TCP, speak the client plane of the
+//! framed wire codec ([`crate::transport::wire::ClientFrame`], tags 6–9),
+//! and are policed *at the door* — nothing malformed, over-quota, or
+//! oversized ever touches a provisioned deployment.
+//!
+//! ```text
+//!   clients ──TCP──▶ [poller threads]──▶ admission ──▶ batcher ──▶ dispatcher
+//!   (many)            fixed pool          per-tenant    (s,t,z,m)     │
+//!     ▲                nonblocking        token bucket  signature     ▼
+//!     └── Result / Reject frames ◀── outboxes ◀─────────────── ExecuteEngine
+//!                                                        (local deployments │
+//!                                                         remote CMPC cluster)
+//! ```
+//!
+//! * **Admission** ([`admission`]) — per-tenant token buckets + pending
+//!   caps; refusals are typed ([`RejectReason`]) and leave the connection
+//!   usable.
+//! * **Batching** ([`batcher`]) — admitted jobs group by `(s, t, z, m)`
+//!   signature and execute as one batch on one shared [`Deployment`]
+//!   (generalizing `Coordinator::drain`'s grouping to concurrent network
+//!   clients), with a `max_wait` window so a lone request never stalls.
+//! * **Multiplexing** ([`poller`]) — a fixed accept + poller thread set
+//!   serves every connection with non-blocking sockets; thread count is
+//!   independent of connection count.
+//! * **Execution** ([`ExecuteEngine`]) — [`LocalEngine`] provisions
+//!   in-process deployments per signature; [`RemoteEngine`] binds the
+//!   master slot of a [`TopologyManifest`] and drives a real multi-process
+//!   CMPC cluster, pushing each client's matrices to the source nodes via
+//!   [`ControlMsg::JobInput`].
+//!
+//! [`metrics::GatewayStats`](crate::metrics::GatewayStats) meters it all:
+//! accepted/rejected-by-reason/completed counts, queue depth, batch-size
+//! and latency histograms — `tests/gateway.rs` asserts observable batching
+//! through it, and the bench's `gateway[]` section reports sustained QPS
+//! and p99 latency from the same counters.
+
+pub mod admission;
+pub mod batcher;
+pub mod client;
+pub mod poller;
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::codes::SchemeParams;
+use crate::coordinator::{CoordinatorConfig, SchemePolicy};
+use crate::error::{CmpcError, Result};
+use crate::matrix::FpMat;
+use crate::metrics::{GatewayCounters, GatewayStats, WorkerCounters};
+use crate::mpc::deployment::Deployment;
+use crate::mpc::master::run_master;
+use crate::mpc::network::{
+    ControlMsg, Fabric, FabricTuning, JobRouter, Payload, Transport, CONTROL_JOB,
+};
+use crate::mpc::protocol::{self, prepare_setup, ProtocolConfig, Setup};
+use crate::runtime::manifest::TopologyManifest;
+use crate::runtime::pool::{ScratchPool, WorkerPool};
+use crate::runtime::BackendFactory;
+use crate::transport::node::{digest_mat, job_secret_seed};
+use crate::transport::tcp::TcpTransport;
+use crate::transport::wire::{ClientFrame, ClientHeader, ClientMsg, RejectReason};
+
+use admission::{Admission, TenantQuota};
+use batcher::{Batch, BatchInput, BatchJob, BatchKey, Batcher};
+use poller::{ConnHandle, FrameOutcome, PollerPool, Sink};
+
+pub use admission::TenantQuota;
+pub use batcher::{BatchInput, BatchKey};
+pub use client::{ClientReply, GatewayClient};
+
+/// Gateway-wide configuration (the serving-tier analogue of
+/// [`CoordinatorConfig`]).
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Poller threads multiplexing every client connection (≥ 1). The
+    /// gateway's thread count is `pollers + 2` (accept + dispatcher),
+    /// constant for its lifetime.
+    pub poller_threads: usize,
+    /// A signature queue flushes as soon as it holds this many jobs.
+    pub max_batch: usize,
+    /// …or once its oldest job has waited this long.
+    pub max_wait: Duration,
+    /// Submissions whose frame payload exceeds this are refused from the
+    /// header alone ([`RejectReason::TooLarge`]) — the body is never read.
+    pub max_payload_bytes: usize,
+    /// Tenant quota table; empty = open admission (see
+    /// [`admission::Admission`]).
+    pub tenants: Vec<TenantQuota>,
+    /// When set, only submissions matching this exact `(s, t, z, m)`
+    /// signature are accepted — the remote-cluster mode, where the
+    /// provisioned worker set serves one manifest shape.
+    pub shape_lock: Option<BatchKey>,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig {
+            poller_threads: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            max_payload_bytes: 64 * 1024 * 1024,
+            tenants: Vec::new(),
+            shape_lock: None,
+        }
+    }
+}
+
+/// One successfully executed job, as the engine hands it back.
+pub struct EngineOutput {
+    pub y: FpMat,
+    /// FNV digest of `y` ([`digest_mat`]) — echoed to the client and
+    /// diffed against `cmpc node --role reference` by the CI lane.
+    pub digest: u64,
+}
+
+/// Where admitted batches execute. Implementations must return exactly
+/// one result per input, in order; a per-job failure becomes a typed
+/// [`RejectReason::Internal`] for that client only.
+pub trait ExecuteEngine: Send + Sync {
+    fn execute(&self, key: BatchKey, inputs: &[BatchInput]) -> Vec<Result<EngineOutput>>;
+
+    /// Called once after the dispatcher drains, before the gateway's
+    /// threads join — remote engines tear their cluster down here.
+    fn shutdown(&self) {}
+}
+
+// ------------------------------------------------------------ local engine
+
+/// In-process execution: one cached [`Deployment`] per `(s, t, z)`
+/// signature, batches fanned across the shared worker pool — the same
+/// shape as `Coordinator::drain`, minus the intake queue (the gateway's
+/// batcher replaced it).
+pub struct LocalEngine {
+    config: CoordinatorConfig,
+    deployments: Mutex<BTreeMap<(usize, usize, usize), Arc<Deployment>>>,
+    factory: Mutex<Option<Arc<BackendFactory>>>,
+    pool: Arc<WorkerPool>,
+}
+
+impl LocalEngine {
+    pub fn new(config: CoordinatorConfig) -> LocalEngine {
+        let pool = WorkerPool::sized_or_global(config.threads);
+        LocalEngine {
+            config,
+            deployments: Mutex::new(BTreeMap::new()),
+            factory: Mutex::new(None),
+            pool,
+        }
+    }
+
+    /// Deployments provisioned so far (one per distinct signature served)
+    /// — how `tests/gateway.rs` proves compatible requests shared one.
+    pub fn provisioned(&self) -> usize {
+        self.deployments.lock().unwrap().len()
+    }
+
+    fn factory(&self) -> Result<Arc<BackendFactory>> {
+        let mut slot = self.factory.lock().unwrap();
+        if let Some(f) = slot.as_ref() {
+            return Ok(f.clone());
+        }
+        let f = Arc::new(BackendFactory::new(&self.config.backend)?);
+        *slot = Some(f.clone());
+        Ok(f)
+    }
+
+    fn deployment_for(&self, key: BatchKey) -> Result<Arc<Deployment>> {
+        let sig = (key.s, key.t, key.z);
+        if let Some(dep) = self.deployments.lock().unwrap().get(&sig) {
+            return Ok(dep.clone());
+        }
+        let params = SchemeParams::try_new(key.s, key.t, key.z)?;
+        let scheme = match self.config.policy {
+            SchemePolicy::Fixed(spec) => spec.resolve(params)?,
+            SchemePolicy::Adaptive => crate::codes::SchemeSpec::resolve_adaptive(params)?,
+        };
+        let proto = ProtocolConfig::builder()
+            .backend(self.config.backend.clone())
+            .verify(self.config.verify)
+            .link_delay(self.config.link_delay)
+            .threads(self.config.threads)
+            .build();
+        let dep = Arc::new(Deployment::for_scheme_shared(
+            scheme,
+            proto,
+            self.factory()?,
+            self.pool.clone(),
+        )?);
+        // Double-provision race: first insert wins, the loser's deployment
+        // drops (admissible — provisioning is idempotent and rare).
+        let mut cache = self.deployments.lock().unwrap();
+        Ok(cache.entry(sig).or_insert(dep).clone())
+    }
+}
+
+impl ExecuteEngine for LocalEngine {
+    fn execute(&self, key: BatchKey, inputs: &[BatchInput]) -> Vec<Result<EngineOutput>> {
+        let dep = match self.deployment_for(key) {
+            Ok(dep) => dep,
+            Err(e) => return inputs.iter().map(|_| Err(e.clone())).collect(),
+        };
+        // Jobs in a batch run concurrently on the one shared deployment —
+        // the fabric multiplexes them by job tag, exactly as in
+        // `Coordinator::drain`.
+        self.pool.par_map(inputs, |_wid, _idx, input| {
+            dep.execute(&input.a, &input.b).map(|out| EngineOutput {
+                digest: digest_mat(&out.y),
+                y: out.y,
+            })
+        })
+    }
+}
+
+// ----------------------------------------------------------- remote engine
+
+/// Distributed execution: this process binds the **master** slot of a
+/// [`TopologyManifest`] whose workers and sources run as their own
+/// processes (`cmpc node --role worker|source-a|source-b`). Each client
+/// job's matrices are pushed to the sources with
+/// [`ControlMsg::JobInput`] (control traffic — unmetered, same as
+/// `JobStart`), then the standard master state machine reconstructs `Y`.
+/// The cluster serves exactly the manifest's `(s, t, z, m)` shape; pair
+/// with [`GatewayConfig::shape_lock`] so mismatches are refused at the
+/// door.
+pub struct RemoteEngine {
+    manifest: TopologyManifest,
+    fabric: Arc<Fabric>,
+    router: JobRouter,
+    setup: Setup,
+    params: SchemeParams,
+    pool: Arc<WorkerPool>,
+    scratch: ScratchPool,
+    next_job: AtomicU64,
+    /// Jobs run one at a time through the cluster (batching still shares
+    /// the provisioned worker set; pipelining is a ROADMAP item).
+    drive: Mutex<()>,
+}
+
+impl RemoteEngine {
+    /// Bind the manifest's master address and connect to the cluster.
+    pub fn connect(manifest: TopologyManifest) -> Result<RemoteEngine> {
+        manifest.validate()?;
+        let scheme = manifest.resolve_scheme()?;
+        let params = scheme.params();
+        let setup = prepare_setup(scheme.as_ref())?;
+        let (transport, endpoint) = TcpTransport::bind_manifest(&manifest, manifest.master_id())?;
+        let t: Arc<dyn Transport> = transport;
+        let fabric = Fabric::over_transport(
+            t,
+            FabricTuning {
+                link_delay: None,
+                chaos: None,
+                shaper: manifest.shaper(),
+            },
+        );
+        let router = JobRouter::new(endpoint);
+        let pool = WorkerPool::sized_or_global(0);
+        let scratch = ScratchPool::for_pool(&pool);
+        Ok(RemoteEngine {
+            manifest,
+            fabric,
+            router,
+            setup,
+            params,
+            pool,
+            scratch,
+            next_job: AtomicU64::new(0),
+            drive: Mutex::new(()),
+        })
+    }
+
+    /// The one signature this cluster serves — hand it to
+    /// [`GatewayConfig::shape_lock`].
+    pub fn shape(&self) -> BatchKey {
+        BatchKey {
+            s: self.manifest.s,
+            t: self.manifest.t,
+            z: self.manifest.z,
+            m: self.manifest.m,
+        }
+    }
+
+    fn run_one(&self, a: &FpMat, b: &FpMat) -> Result<FpMat> {
+        let _guard = self.drive.lock().unwrap();
+        let job = self.next_job.fetch_add(1, Ordering::Relaxed);
+        let n = self.setup.n_workers;
+        let master_id = self.manifest.master_id();
+        self.router.open(job);
+        self.fabric.begin_job(job);
+        let outcome = (|| -> Result<FpMat> {
+            let seed = job_secret_seed(self.manifest.seed, job);
+            let counters: Vec<Arc<WorkerCounters>> =
+                (0..n).map(|_| Arc::new(WorkerCounters::default())).collect();
+            for (wid, c) in counters.iter().enumerate() {
+                self.fabric.send(
+                    job,
+                    master_id,
+                    wid,
+                    Payload::Control(ControlMsg::JobStart {
+                        seed,
+                        counters: c.clone(),
+                    }),
+                )?;
+            }
+            // The sources encode *these* matrices (not manifest-derived
+            // demo data) — the seed keeps the mask fork order identical
+            // to every other driver.
+            self.fabric.send(
+                job,
+                master_id,
+                self.manifest.source_a_id(),
+                Payload::Control(ControlMsg::JobInput {
+                    seed,
+                    mat: a.clone(),
+                }),
+            )?;
+            self.fabric.send(
+                job,
+                master_id,
+                self.manifest.source_b_id(),
+                Payload::Control(ControlMsg::JobInput {
+                    seed,
+                    mat: b.clone(),
+                }),
+            )?;
+            let (m_out, _timings) = run_master(
+                &self.router,
+                &self.fabric,
+                job,
+                &self.setup.alphas,
+                n,
+                self.params.t,
+                self.params.z,
+                self.manifest.recv_timeout,
+                self.manifest.early_decode,
+                &counters,
+                &self.pool,
+                &self.scratch,
+            )?;
+            if self.manifest.verify && m_out.y != a.transpose().matmul(b) {
+                return Err(CmpcError::NotDecodable(format!(
+                    "gateway job {job}: distributed reconstruction mismatch: Y != AᵀB"
+                )));
+            }
+            Ok(m_out.y)
+        })();
+        self.fabric.end_job(job);
+        self.router.close(job);
+        if outcome.is_err() {
+            // Free the workers' per-job state before reporting failure.
+            for wid in 0..n {
+                let _ = self.fabric.send(
+                    job,
+                    master_id,
+                    wid,
+                    Payload::Control(ControlMsg::JobAbort),
+                );
+            }
+        }
+        outcome
+    }
+
+    fn shutdown_cluster(&self) {
+        let master_id = self.manifest.master_id();
+        let mut peers: Vec<usize> = (0..self.setup.n_workers).collect();
+        peers.push(self.manifest.source_a_id());
+        peers.push(self.manifest.source_b_id());
+        for peer in peers {
+            // Two attempts, as in `run_master_node`: the first write onto
+            // a connection that died since the last job marks it broken;
+            // the retry reconnects.
+            for _attempt in 0..2 {
+                if self
+                    .fabric
+                    .send(
+                        CONTROL_JOB,
+                        master_id,
+                        peer,
+                        Payload::Control(ControlMsg::Shutdown),
+                    )
+                    .is_ok()
+                {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+impl ExecuteEngine for RemoteEngine {
+    fn execute(&self, _key: BatchKey, inputs: &[BatchInput]) -> Vec<Result<EngineOutput>> {
+        inputs
+            .iter()
+            .map(|input| {
+                self.run_one(&input.a, &input.b).map(|y| EngineOutput {
+                    digest: digest_mat(&y),
+                    y,
+                })
+            })
+            .collect()
+    }
+
+    fn shutdown(&self) {
+        self.shutdown_cluster();
+    }
+}
+
+// ---------------------------------------------------------------- gateway
+
+struct GatewayInner {
+    admission: Admission,
+    batcher: Batcher,
+    counters: Arc<GatewayCounters>,
+    engine: Arc<dyn ExecuteEngine>,
+    stop: Arc<AtomicBool>,
+    shape_lock: Option<BatchKey>,
+}
+
+impl GatewayInner {
+    fn reject(
+        &self,
+        conn: &Arc<ConnHandle>,
+        corr: u64,
+        tenant: u32,
+        reason: RejectReason,
+        detail: String,
+    ) {
+        self.counters.note_rejected(reason.as_u8());
+        conn.send(&ClientFrame {
+            corr,
+            tenant,
+            msg: ClientMsg::Reject { reason, detail },
+        });
+    }
+
+    fn handle_submit(
+        &self,
+        conn: &Arc<ConnHandle>,
+        corr: u64,
+        tenant: u32,
+        s: usize,
+        t: usize,
+        z: usize,
+        a: FpMat,
+        b: FpMat,
+    ) {
+        if self.stop.load(Ordering::Acquire) {
+            return self.reject(
+                conn,
+                corr,
+                tenant,
+                RejectReason::ShuttingDown,
+                "gateway is draining".to_string(),
+            );
+        }
+        let key = BatchKey { s, t, z, m: a.rows };
+        if let Some(lock) = self.shape_lock {
+            if key != lock {
+                return self.reject(
+                    conn,
+                    corr,
+                    tenant,
+                    RejectReason::Malformed,
+                    format!(
+                        "this gateway serves only (s={}, t={}, z={}, m={}) \
+                         (got s={s}, t={t}, z={z}, m={})",
+                        lock.s, lock.t, lock.z, lock.m, a.rows
+                    ),
+                );
+            }
+        }
+        let validated = SchemeParams::try_new(s, t, z)
+            .and_then(|params| protocol::validate_job_shapes(&a, &b, params));
+        if let Err(e) = validated {
+            return self.reject(conn, corr, tenant, RejectReason::Malformed, e.to_string());
+        }
+        if let Err(reason) = self.admission.try_admit(tenant) {
+            return self.reject(
+                conn,
+                corr,
+                tenant,
+                reason,
+                format!("tenant {tenant}: {reason}"),
+            );
+        }
+        self.counters.note_accepted();
+        self.counters.queue_enter();
+        self.batcher.push(
+            key,
+            BatchJob {
+                conn: conn.clone(),
+                corr,
+                tenant,
+                input: BatchInput { a, b },
+                admitted_at: Instant::now(),
+            },
+        );
+    }
+
+    fn dispatch(&self, batch: Batch) {
+        let n = batch.jobs.len();
+        for _ in 0..n {
+            self.counters.queue_exit();
+        }
+        self.counters.note_batch(n);
+        let (metas, inputs): (Vec<(Arc<ConnHandle>, u64, u32, Instant)>, Vec<BatchInput>) = batch
+            .jobs
+            .into_iter()
+            .map(|j| ((j.conn, j.corr, j.tenant, j.admitted_at), j.input))
+            .unzip();
+        let mut results = self.engine.execute(batch.key, &inputs);
+        debug_assert_eq!(results.len(), n, "engine must answer every job");
+        while results.len() < metas.len() {
+            results.push(Err(CmpcError::Fabric(
+                "gateway: engine returned too few results".to_string(),
+            )));
+        }
+        for ((conn, corr, tenant, admitted_at), result) in metas.into_iter().zip(results) {
+            self.admission.release(tenant);
+            match result {
+                Ok(out) => {
+                    let elapsed = admitted_at.elapsed();
+                    self.counters.note_completed(elapsed);
+                    conn.send(&ClientFrame {
+                        corr,
+                        tenant,
+                        msg: ClientMsg::Result {
+                            digest: out.digest,
+                            elapsed_us: elapsed.as_micros() as u64,
+                            y: out.y,
+                        },
+                    });
+                }
+                Err(e) => {
+                    self.counters.note_failed();
+                    self.reject(&conn, corr, tenant, RejectReason::Internal, e.to_string());
+                }
+            }
+        }
+    }
+}
+
+impl Sink for GatewayInner {
+    fn on_connect(&self, _conn: &Arc<ConnHandle>) {
+        self.counters.note_connection();
+    }
+
+    fn on_frame(&self, conn: &Arc<ConnHandle>, frame: ClientFrame) -> FrameOutcome {
+        match frame.msg {
+            ClientMsg::Submit { s, t, z, a, b } => {
+                self.handle_submit(conn, frame.corr, frame.tenant, s, t, z, a, b);
+                FrameOutcome::Continue
+            }
+            ClientMsg::Shutdown => {
+                self.stop.store(true, Ordering::Release);
+                self.batcher.stop();
+                FrameOutcome::CloseAfterFlush
+            }
+            // Response-plane frames have no business arriving at the
+            // gateway; refuse and drop the connection.
+            ClientMsg::Result { .. } | ClientMsg::Reject { .. } => {
+                self.reject(
+                    conn,
+                    frame.corr,
+                    frame.tenant,
+                    RejectReason::Malformed,
+                    "response-plane frame sent to the gateway".to_string(),
+                );
+                FrameOutcome::CloseAfterFlush
+            }
+        }
+    }
+
+    fn on_oversize(&self, conn: &Arc<ConnHandle>, header: &ClientHeader) -> FrameOutcome {
+        self.reject(
+            conn,
+            header.corr,
+            header.tenant,
+            RejectReason::TooLarge,
+            format!("{}-byte payload exceeds the gateway cap", header.payload_len),
+        );
+        FrameOutcome::CloseAfterFlush
+    }
+
+    fn on_corrupt(&self, conn: &Arc<ConnHandle>, err: &CmpcError) -> FrameOutcome {
+        // Corr/tenant are unknowable from a corrupt stream; echo zeros.
+        self.reject(conn, 0, 0, RejectReason::Malformed, err.to_string());
+        FrameOutcome::CloseAfterFlush
+    }
+
+    fn on_disconnect(&self, _conn: &Arc<ConnHandle>) {}
+}
+
+/// A running gateway: fixed thread set (accept + pollers + dispatcher),
+/// admission/batching state, and the execution engine behind it.
+pub struct Gateway {
+    inner: Arc<GatewayInner>,
+    pollers: Option<PollerPool>,
+    dispatcher: Option<JoinHandle<()>>,
+    local_addr: SocketAddr,
+}
+
+impl Gateway {
+    /// Bind `listen` (`host:port`; port 0 picks a free one) and start
+    /// serving.
+    pub fn start(
+        listen: &str,
+        config: GatewayConfig,
+        engine: Arc<dyn ExecuteEngine>,
+    ) -> Result<Gateway> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| CmpcError::Io(format!("gateway bind {listen}: {e}")))?;
+        Gateway::start_on(listener, config, engine)
+    }
+
+    /// Start on an already-bound listener.
+    pub fn start_on(
+        listener: TcpListener,
+        config: GatewayConfig,
+        engine: Arc<dyn ExecuteEngine>,
+    ) -> Result<Gateway> {
+        let inner = Arc::new(GatewayInner {
+            admission: Admission::new(&config.tenants),
+            batcher: Batcher::new(config.max_batch, config.max_wait),
+            counters: GatewayCounters::shared(),
+            engine,
+            stop: Arc::new(AtomicBool::new(false)),
+            shape_lock: config.shape_lock,
+        });
+        let sink: Arc<dyn Sink> = inner.clone();
+        let pollers = PollerPool::spawn(
+            listener,
+            config.poller_threads,
+            config.max_payload_bytes.min(crate::transport::wire::MAX_FRAME_PAYLOAD),
+            sink,
+            inner.stop.clone(),
+        )?;
+        let local_addr = pollers.local_addr();
+        let dispatcher = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("cmpc-gw-dispatch".to_string())
+                .spawn(move || {
+                    while let Some(batch) = inner.batcher.next_batch() {
+                        inner.dispatch(batch);
+                    }
+                    inner.engine.shutdown();
+                })
+                .map_err(|e| CmpcError::Io(format!("spawning gateway dispatcher: {e}")))?
+        };
+        Ok(Gateway {
+            inner,
+            pollers: Some(pollers),
+            dispatcher: Some(dispatcher),
+            local_addr,
+        })
+    }
+
+    /// The bound client-facing address (real port even when 0 was asked).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Point-in-time serving metrics.
+    pub fn stats(&self) -> GatewayStats {
+        self.inner.counters.snapshot()
+    }
+
+    /// Whether shutdown has been requested (client `Shutdown` frame or
+    /// [`Gateway::shutdown`]).
+    pub fn stopping(&self) -> bool {
+        self.inner.stop.load(Ordering::Acquire)
+    }
+
+    /// Block until shutdown is requested — the `cmpc gateway` serve loop.
+    pub fn wait(&self) {
+        while !self.stopping() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// Drain and stop: queued jobs finish, queued responses get a bounded
+    /// flush window, every gateway thread joins, the engine tears down.
+    /// Returns the final stats snapshot.
+    pub fn shutdown(mut self) -> GatewayStats {
+        self.stop_and_join();
+        self.inner.counters.snapshot()
+    }
+
+    fn stop_and_join(&mut self) {
+        self.inner.stop.store(true, Ordering::Release);
+        self.inner.batcher.stop();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        if let Some(p) = self.pollers.take() {
+            p.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}

@@ -133,6 +133,27 @@
 //! per-worker `AbortAck`s, making ξ/σ counters exact (not lower bounds)
 //! on the fast path too.
 //!
+//! ## Serving gateway (v0.7)
+//!
+//! [`gateway`] is the multi-tenant **front door** over everything above:
+//! untrusted clients speak the client plane of [`transport::wire`]
+//! (`SubmitJob`/`JobResult`/`Reject` frames, versioned and
+//! truncation-hardened like the fabric plane) to a
+//! readiness-driven connection multiplexer ([`gateway::poller`]) that
+//! serves thousands of connections on a **fixed** thread pool of
+//! non-blocking sockets. Submissions pass per-tenant token-bucket +
+//! queue-depth admission ([`gateway::admission`], quotas from `tenant`
+//! manifest lines) with typed refusals, then batch by `(s, t, z, m)`
+//! signature ([`gateway::batcher`]) onto one shared deployment —
+//! in-process ([`gateway::LocalEngine`]) or a real multi-process cluster
+//! ([`gateway::RemoteEngine`], which pushes each client's matrices to the
+//! source nodes via `ControlMsg::JobInput`). `cmpc gateway --manifest F`
+//! serves; `cmpc client` drives deterministic multi-tenant load whose
+//! accepted digests diff 1:1 against `cmpc node --role reference`;
+//! [`metrics::GatewayStats`] meters admission, batching, queue depth, and
+//! latency histograms. Results are byte-identical to direct
+//! [`Deployment::execute`] calls (`tests/gateway.rs`).
+//!
 //! ## Parallel compute core (v0.3)
 //!
 //! Every deployment owns a [`runtime::pool::WorkerPool`] (shared
@@ -156,6 +177,7 @@ pub mod codes;
 pub mod coordinator;
 pub mod error;
 pub mod ff;
+pub mod gateway;
 pub mod matrix;
 pub mod metrics;
 pub mod mpc;

@@ -13,6 +13,11 @@
 //! * `node    --role worker|master|source-a|source-b --manifest F` — run
 //!   one CMPC party as this OS process, over TCP per the manifest
 //!   (`--role reference` prints the in-process digests for comparison).
+//! * `gateway --manifest F [--engine local|cluster]` — multi-tenant
+//!   serving front door: admission control + batching over a local or
+//!   distributed execution engine (v0.7).
+//! * `client  --addr A --tenants 0,1 --jobs-per-tenant J ...` — load
+//!   driver for a gateway; prints per-job digests in the reference format.
 //! * `figures [--out DIR] [--zmax Z]` — regenerate every paper figure's
 //!   data series (Figs. 2, 3, 4a–c + ablations) into CSVs.
 
@@ -22,6 +27,8 @@ use std::sync::Arc;
 use cmpc::analysis::{self, figures, SchemeKind};
 use cmpc::codes::{CmpcScheme, SchemeParams};
 use cmpc::coordinator::{build_scheme, Coordinator, CoordinatorConfig, SchemePolicy};
+use cmpc::gateway::client::{run_load, ClientReply, GatewayClient, LoadPlan};
+use cmpc::gateway::{ExecuteEngine, Gateway, GatewayConfig, LocalEngine, RemoteEngine};
 use cmpc::matrix::FpMat;
 use cmpc::mpc::deployment::Deployment;
 use cmpc::mpc::protocol::ProtocolConfig;
@@ -40,10 +47,12 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("topology") => cmd_topology(&args),
         Some("node") => cmd_node(&args),
+        Some("gateway") => cmd_gateway(&args),
+        Some("client") => cmd_client(&args),
         Some("figures") => cmd_figures(&args),
         _ => {
             eprintln!(
-                "usage: cmpc <info|run|serve|topology|node|figures> [options]\n\
+                "usage: cmpc <info|run|serve|topology|node|gateway|client|figures> [options]\n\
                  \n\
                  info     --s S --t T --z Z\n\
                  run      --m M --s S --t T --z Z [--scheme age|polydot|entangled|adaptive]\n\
@@ -54,6 +63,11 @@ fn main() {
                  \x20        (prints the worker count N; manifest lists every node's host:port)\n\
                  node     --role worker|master|source-a|source-b|reference --manifest FILE\n\
                  \x20        [--index I]   (worker role only; run one process per party)\n\
+                 gateway  --manifest FILE [--engine local|cluster] [--listen H:P]\n\
+                 \x20        [--pollers N] [--max-batch N] [--max-wait-ms MS] [--backend ...]\n\
+                 \x20        (serves clients until one sends a shutdown frame)\n\
+                 client   --addr H:P [--tenants 0,1,..] [--jobs-per-tenant J] --m M\n\
+                 \x20        --s S --t T --z Z [--seed N] [--qps Q] [--shutdown]\n\
                  figures  [--out DIR] [--zmax Z]"
             );
             std::process::exit(2);
@@ -294,6 +308,150 @@ fn cmd_node(args: &Args) -> Result<()> {
         None => {
             // Long-running roles return after the master's shutdown.
         }
+    }
+    Ok(())
+}
+
+fn cmd_gateway(args: &Args) -> Result<()> {
+    let manifest_path = args.get("manifest").ok_or_else(|| {
+        CmpcError::InvalidParams("gateway needs --manifest <file>".to_string())
+    })?;
+    let manifest = TopologyManifest::load(&PathBuf::from(manifest_path))?;
+    let listen = args
+        .get("listen")
+        .map(str::to_string)
+        .or_else(|| manifest.gateway.clone())
+        .ok_or_else(|| {
+            CmpcError::InvalidParams(
+                "gateway needs --listen or a manifest gateway line".to_string(),
+            )
+        })?;
+    let mut config = GatewayConfig {
+        tenants: manifest.tenants.clone(),
+        ..GatewayConfig::default()
+    };
+    config.poller_threads = args.get_parse("pollers", config.poller_threads);
+    config.max_batch = args.get_parse("max-batch", config.max_batch);
+    if let Some(ms) = args.get("max-wait-ms") {
+        config.max_wait = std::time::Duration::from_millis(
+            ms.parse()
+                .map_err(|_| CmpcError::InvalidParams("bad --max-wait-ms".to_string()))?,
+        );
+    }
+    let engine_kind = args.get("engine").unwrap_or("cluster");
+    let engine: Arc<dyn ExecuteEngine> = match engine_kind {
+        "local" => Arc::new(LocalEngine::new(
+            CoordinatorConfig::builder()
+                .backend(parse_backend(args))
+                .verify(manifest.verify)
+                .build(),
+        )),
+        "cluster" => {
+            let engine = RemoteEngine::connect(manifest.clone())?;
+            config.shape_lock = Some(engine.shape());
+            Arc::new(engine)
+        }
+        other => {
+            return Err(CmpcError::InvalidParams(format!(
+                "unknown engine {other:?} (local|cluster)"
+            )))
+        }
+    };
+    let gateway = Gateway::start(&listen, config, engine)?;
+    // Announce the bound address immediately (port 0 resolves here) —
+    // flushed explicitly because stdout is block-buffered under a pipe.
+    println!("listening {}", gateway.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    eprintln!(
+        "gateway: engine={engine_kind}, {} tenant quotas, serving on {}",
+        manifest.tenants.len(),
+        gateway.local_addr()
+    );
+    gateway.wait();
+    let stats = gateway.shutdown();
+    println!(
+        "gateway: connections={} accepted={} completed={} failed={} rejected={}",
+        stats.connections,
+        stats.accepted,
+        stats.completed,
+        stats.failed,
+        stats.rejected_total()
+    );
+    println!(
+        "gateway: batches={} batched_jobs={} max_batch={} p50_us={} p99_us={}",
+        stats.batches,
+        stats.batched_jobs,
+        stats.max_batch(),
+        stats.p50_latency_us(),
+        stats.p99_latency_us()
+    );
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("addr").ok_or_else(|| {
+        CmpcError::InvalidParams("client needs --addr <host:port>".to_string())
+    })?;
+    let (s, t, z) = parse_stz(args);
+    let tenants: Vec<u32> = match args.get("tenants") {
+        None => vec![0],
+        Some(list) => list
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse::<u32>()
+                    .map_err(|_| CmpcError::InvalidParams(format!("bad tenant id {v:?}")))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let qps = args
+        .get("qps")
+        .map(|v| {
+            v.parse::<f64>()
+                .map_err(|_| CmpcError::InvalidParams("bad --qps".to_string()))
+        })
+        .transpose()?;
+    let plan = LoadPlan {
+        addr: addr.to_string(),
+        tenants,
+        jobs_per_tenant: args.get_parse("jobs-per-tenant", 4),
+        m: args.get_parse("m", 64),
+        s,
+        t,
+        z,
+        seed: args.get_parse("seed", 7),
+        qps,
+    };
+    let report = run_load(&plan)?;
+    for o in &report.outcomes {
+        match &o.reply {
+            // Same line format as `cmpc node`, so accepted digests diff
+            // 1:1 against `--role reference` output.
+            ClientReply::Accepted { digest, .. } => {
+                println!("job {} digest 0x{digest:016x}", o.job)
+            }
+            ClientReply::Rejected { reason, detail, .. } => {
+                println!("job {} rejected {reason} ({detail})", o.job)
+            }
+        }
+    }
+    eprintln!(
+        "client: {} accepted, {} rejected in {:?} → {:.2} jobs/s, p50={:?} p99={:?}",
+        report.accepted(),
+        report.rejected(),
+        report.elapsed,
+        report.qps(),
+        report.latency_percentile(0.5),
+        report.latency_percentile(0.99)
+    );
+    println!(
+        "client: {} accepted, {} rejected",
+        report.accepted(),
+        report.rejected()
+    );
+    if args.flag("shutdown") {
+        GatewayClient::connect(addr, 0)?.shutdown_gateway()?;
     }
     Ok(())
 }

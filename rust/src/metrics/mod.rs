@@ -237,6 +237,197 @@ impl PhaseTimings {
     }
 }
 
+/// Distinct typed rejection reasons the gateway can issue (the width of
+/// the per-reason counter array — indexed by the reason's wire code, see
+/// `transport::wire::RejectReason`).
+pub const REJECT_REASONS: usize = 7;
+
+/// Log₂ latency-histogram buckets: bucket `i` counts jobs whose serving
+/// latency was in `[2^i, 2^{i+1})` µs — 32 buckets span sub-µs to ~35min.
+pub const LATENCY_BUCKETS: usize = 32;
+
+/// Batch-size histogram buckets: bucket `i` counts dispatched batches of
+/// `i + 1` jobs; the last bucket absorbs everything at or above it.
+pub const BATCH_BUCKETS: usize = 32;
+
+/// Shared atomic accumulator behind [`GatewayStats`] — incremented by the
+/// gateway's poller (admission), batcher (dispatch), and engine
+/// (completion) threads.
+#[derive(Default, Debug)]
+pub struct GatewayCounters {
+    /// Client connections accepted by the listener.
+    pub connections: AtomicU64,
+    /// Submissions admitted past the door (quota + validation passed).
+    pub accepted: AtomicU64,
+    /// Admitted jobs that returned a `Result` to their client.
+    pub completed: AtomicU64,
+    /// Admitted jobs that failed post-admission (`Internal` rejects).
+    pub failed: AtomicU64,
+    /// Typed rejections at the door, indexed by the reason's wire code.
+    pub rejected: [AtomicU64; REJECT_REASONS],
+    /// Batches dispatched onto a shared deployment.
+    pub batches: AtomicU64,
+    /// Jobs carried inside those batches (`batched_jobs / batches` =
+    /// the mean batch size; ≥ 2-job batches prove observable batching).
+    pub batched_jobs: AtomicU64,
+    /// Gauge: admitted jobs currently waiting in the batcher.
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    pub peak_queue_depth: AtomicU64,
+    /// Log₂ histogram of serving latency (admission → result encoded).
+    pub latency_us: [AtomicU64; LATENCY_BUCKETS],
+    /// Histogram of dispatched batch sizes.
+    pub batch_size: [AtomicU64; BATCH_BUCKETS],
+}
+
+impl GatewayCounters {
+    pub fn shared() -> Arc<GatewayCounters> {
+        Arc::new(GatewayCounters::default())
+    }
+
+    pub fn note_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a typed rejection by its wire code (out-of-range codes fold
+    /// into the last bucket rather than panic — the counter is telemetry,
+    /// not a validator).
+    pub fn note_rejected(&self, code: u8) {
+        let idx = (code as usize).min(REJECT_REASONS - 1);
+        self.rejected[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a completed job and its serving latency.
+    pub fn note_completed(&self, latency: std::time::Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let us = latency.as_micros() as u64;
+        // floor(log2(us)), with 0 µs in bucket 0.
+        let idx = (63 - (us | 1).leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
+        self.latency_us[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one dispatched batch of `size` jobs.
+    pub fn note_batch(&self, size: usize) {
+        if size == 0 {
+            return;
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_jobs.fetch_add(size as u64, Ordering::Relaxed);
+        self.batch_size[size.min(BATCH_BUCKETS) - 1].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job entered the batcher queue (bumps the gauge and its peak).
+    pub fn queue_enter(&self) {
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// A job left the batcher queue (dispatched or dropped).
+    pub fn queue_exit(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> GatewayStats {
+        use Ordering::Relaxed;
+        let mut rejected = [0u64; REJECT_REASONS];
+        for (slot, c) in rejected.iter_mut().zip(self.rejected.iter()) {
+            *slot = c.load(Relaxed);
+        }
+        let mut latency_us = [0u64; LATENCY_BUCKETS];
+        for (slot, c) in latency_us.iter_mut().zip(self.latency_us.iter()) {
+            *slot = c.load(Relaxed);
+        }
+        let mut batch_size = [0u64; BATCH_BUCKETS];
+        for (slot, c) in batch_size.iter_mut().zip(self.batch_size.iter()) {
+            *slot = c.load(Relaxed);
+        }
+        GatewayStats {
+            connections: self.connections.load(Relaxed),
+            accepted: self.accepted.load(Relaxed),
+            completed: self.completed.load(Relaxed),
+            failed: self.failed.load(Relaxed),
+            rejected,
+            batches: self.batches.load(Relaxed),
+            batched_jobs: self.batched_jobs.load(Relaxed),
+            queue_depth: self.queue_depth.load(Relaxed),
+            peak_queue_depth: self.peak_queue_depth.load(Relaxed),
+            latency_us,
+            batch_size,
+        }
+    }
+}
+
+/// Point-in-time snapshot of [`GatewayCounters`] — the serving-path
+/// analogue of [`WireStats`], surfaced the same way (`cmpc gateway`
+/// prints it at shutdown; `tests/gateway.rs` asserts on it).
+#[derive(Default, Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GatewayStats {
+    pub connections: u64,
+    pub accepted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: [u64; REJECT_REASONS],
+    pub batches: u64,
+    pub batched_jobs: u64,
+    pub queue_depth: u64,
+    pub peak_queue_depth: u64,
+    pub latency_us: [u64; LATENCY_BUCKETS],
+    pub batch_size: [u64; BATCH_BUCKETS],
+}
+
+impl GatewayStats {
+    /// Rejections summed across every reason.
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected.iter().sum()
+    }
+
+    /// Approximate latency percentile (`p` in `0.0..=1.0`) from the log₂
+    /// histogram: the upper bound of the bucket where the cumulative
+    /// count crosses `p`, in µs. Zero when nothing completed.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.latency_us.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &count) in self.latency_us.iter().enumerate() {
+            seen += count;
+            if seen >= target {
+                return (1u64 << (i + 1)).saturating_sub(1);
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn p50_latency_us(&self) -> u64 {
+        self.latency_percentile_us(0.50)
+    }
+
+    pub fn p99_latency_us(&self) -> u64 {
+        self.latency_percentile_us(0.99)
+    }
+
+    /// Largest batch size observed (bucket upper edge; 0 when none).
+    pub fn max_batch(&self) -> usize {
+        self.batch_size
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(_, &c)| c > 0)
+            .map(|(i, _)| i + 1)
+            .unwrap_or(0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,5 +465,47 @@ mod tests {
         assert_eq!(snap.worker_to_worker, 42);
         assert_eq!(snap.messages, 2);
         assert_eq!(snap.source_to_worker, 0);
+    }
+
+    #[test]
+    fn gateway_snapshot_and_histograms() {
+        let g = GatewayCounters::shared();
+        g.note_connection();
+        g.note_accepted();
+        g.note_accepted();
+        g.note_rejected(0); // quota-exceeded
+        g.note_rejected(3); // malformed
+        g.note_rejected(0xFF); // out-of-range folds into the last bucket
+        g.queue_enter();
+        g.queue_enter();
+        g.queue_exit();
+        g.note_batch(2);
+        g.note_batch(1);
+        g.note_batch(0); // ignored
+        g.note_completed(std::time::Duration::from_micros(100));
+        g.note_completed(std::time::Duration::from_micros(100));
+        g.note_completed(std::time::Duration::from_millis(10));
+
+        let s = g.snapshot();
+        assert_eq!(s.connections, 1);
+        assert_eq!(s.accepted, 2);
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.rejected[0], 1);
+        assert_eq!(s.rejected[3], 1);
+        assert_eq!(s.rejected[REJECT_REASONS - 1], 1);
+        assert_eq!(s.rejected_total(), 3);
+        assert_eq!(s.queue_depth, 1);
+        assert_eq!(s.peak_queue_depth, 2);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.batched_jobs, 3);
+        assert_eq!(s.max_batch(), 2);
+        // 100 µs lands in bucket 6 ([64,128)); 10 ms in bucket 13.
+        assert_eq!(s.latency_us[6], 2);
+        assert_eq!(s.latency_us[13], 1);
+        // p50 crosses in the 100 µs bucket, p99 in the 10 ms bucket.
+        assert_eq!(s.p50_latency_us(), (1u64 << 7) - 1);
+        assert_eq!(s.p99_latency_us(), (1u64 << 14) - 1);
+        // Empty histogram → 0.
+        assert_eq!(GatewayStats::default().latency_percentile_us(0.99), 0);
     }
 }

@@ -32,12 +32,14 @@
 //! on the in-process transport that detection is reliable (the abort send
 //! fails on a dropped endpoint, and chaos kills mark the shared fabric);
 //! on a remote transport a write to a just-crashed peer can still succeed
-//! into the OS buffer, so a dead remote worker may run this window out to
-//! its `recv_timeout` bound (see ROADMAP: link-liveness probing). A
-//! worker that is genuinely *busy* (not merely behind a slow link) also
-//! delays only the ack window — the decoded `Y` was in hand before it
-//! opened, which is why the wait is metered separately as
-//! [`MasterTimings::ack_wait`].
+//! into the OS buffer, so the drain additionally polls the transport's
+//! link-liveness ([`Fabric::peer_dead`]) in bounded slices: when the
+//! reader side observes the peer's connections die (EOF/reset), the wait
+//! on that worker is abandoned immediately instead of running out the
+//! full `recv_timeout`. A worker that is genuinely *busy* (not merely
+//! behind a slow link) also delays only the ack window — the decoded `Y`
+//! was in hand before it opened, which is why the wait is metered
+//! separately as [`MasterTimings::ack_wait`].
 //!
 //! [`JobAbort`]: crate::mpc::network::ControlMsg::JobAbort
 //! [`AbortAck`]: crate::mpc::network::ControlMsg::AbortAck
@@ -259,7 +261,7 @@ pub fn run_master(
                 wid,
                 Payload::Control(ControlMsg::JobAbort),
             );
-            if !done[wid] && sent.is_ok() && !fabric.chaos_killed(wid) {
+            if !done[wid] && sent.is_ok() && !fabric.peer_dead(wid) {
                 *wait = true;
                 awaiting_count += 1;
             }
@@ -271,17 +273,32 @@ pub fn run_master(
         // ack cannot stall the job — its counters are final anyway
         // (dead workers don't count), and the decoded Y is already in
         // hand, so running out the clock degrades nothing but this
-        // window.
+        // window. The wait polls in bounded slices, re-probing
+        // link-liveness between them: a remote worker that crashed after
+        // the abort write landed in its OS buffer will never ack, and the
+        // reader-side EOF is the only signal — without the probe this
+        // window would silently run out the whole timeout.
         let t_ack = Instant::now();
         let deadline = t_ack + timeout;
+        const ACK_POLL: Duration = Duration::from_millis(50);
         while awaiting_count > 0 {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            let env = match router.recv_for(job, deadline - now) {
+            // Abandon workers whose links died since the abort went out.
+            for (wid, wait) in awaiting.iter_mut().enumerate() {
+                if *wait && fabric.peer_dead(wid) {
+                    *wait = false;
+                    awaiting_count -= 1;
+                }
+            }
+            if awaiting_count == 0 {
+                break;
+            }
+            let env = match router.recv_for(job, (deadline - now).min(ACK_POLL)) {
                 Ok(env) => env,
-                Err(_) => break, // timed out: give up on the missing acks
+                Err(_) => continue, // slice expired: re-probe, re-check deadline
             };
             let from = env.from;
             let mut acked = false;

@@ -254,6 +254,14 @@ pub enum ControlMsg {
     AbortAck { mults: u64, stored: u64 },
     /// Terminate the worker's serve loop (runtime teardown).
     Shutdown,
+    /// Push one job's *input matrix* to a source node, with the per-job
+    /// secret seed: the gateway's remote engine drives arbitrary
+    /// client-submitted data through a distributed cluster by sending
+    /// source A its `A` and source B its `B`, instead of the sources
+    /// deriving manifest-seeded inputs locally. Control-plane by design:
+    /// master→source is not a data-topology edge, and these bytes are the
+    /// job input, not protocol overhead, so they stay unmetered.
+    JobInput { seed: u64, mat: FpMat },
 }
 
 /// A protocol message payload.
@@ -339,6 +347,17 @@ pub trait Transport: Send + Sync {
     /// in-process channel transport reports zeros: nothing crosses a wire).
     fn wire_stats(&self) -> WireStats {
         WireStats::default()
+    }
+
+    /// Link-liveness: `false` once the transport has *observed* `node`
+    /// die — every inbound connection that ever carried its envelopes hit
+    /// EOF or a read error. Default `true`: an in-process transport has no
+    /// link failures, and a peer we have not heard from yet is presumed
+    /// alive (absence of evidence is not death). The master's abort-ack
+    /// drain polls this to stop waiting on a crashed remote worker instead
+    /// of running out its full `recv_timeout`.
+    fn peer_alive(&self, _node: NodeId) -> bool {
+        true
     }
 }
 
@@ -592,6 +611,15 @@ impl Fabric {
     /// reporting a job error — see `serve_worker`).
     pub fn chaos_killed(&self, node: NodeId) -> bool {
         self.killed[node].load(Ordering::Relaxed)
+    }
+
+    /// Whether `node` is known dead — chaos-killed, or reported gone by
+    /// the transport's link-liveness ([`Transport::peer_alive`]): on TCP
+    /// every connection that carried its envelopes hit EOF/error. Used by
+    /// the master's abort-ack drain to give up on a crashed peer early
+    /// instead of running out the full receive timeout.
+    pub fn peer_dead(&self, node: NodeId) -> bool {
+        self.chaos_killed(node) || !self.transport.peer_alive(node)
     }
 
     pub fn n_workers(&self) -> usize {

@@ -27,7 +27,16 @@
 //! source-a 10.0.0.3:9300
 //! source-b 10.0.0.4:9300
 //! shape * * 40000 12500000 65536 gshare
+//! gateway 10.0.0.2:9400
+//! tenant 0 100 50 64
+//! tenant 1 2 0 64
 //! ```
+//!
+//! The optional `gateway` line is the client-facing listen address for
+//! `cmpc gateway` (v0.7); each `tenant` line is
+//! `tenant <id> <burst> <rate_per_sec> <max_pending>` — a
+//! [`TenantQuota`] for its admission table (no `tenant` lines = open
+//! admission).
 //!
 //! A plain line format is used instead of JSON because the offline build has
 //! no serde; the formats are versioned by their header comments.
@@ -39,6 +48,7 @@ use std::time::Duration;
 
 use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
 use crate::error::{CmpcError, Result};
+use crate::gateway::admission::TenantQuota;
 use crate::mpc::chaos::PayloadClass;
 use crate::mpc::network::NodeId;
 use crate::transport::shaper::{LinkShaper, LinkSpec, ShapeRule};
@@ -150,6 +160,11 @@ pub struct TopologyManifest {
     pub source_b: String,
     /// Link-shaping rules (empty = unshaped).
     pub shapes: Vec<ShapeLine>,
+    /// Client-facing listen address for `cmpc gateway` (`None` = this
+    /// topology has no serving tier).
+    pub gateway: Option<String>,
+    /// Gateway admission table (empty = open admission).
+    pub tenants: Vec<TenantQuota>,
 }
 
 fn topo_err(lineno: usize, msg: impl std::fmt::Display) -> CmpcError {
@@ -202,6 +217,8 @@ impl TopologyManifest {
             source_a: String::new(),
             source_b: String::new(),
             shapes: Vec::new(),
+            gateway: None,
+            tenants: Vec::new(),
         };
         let n = manifest.resolve_scheme()?.n_workers();
         if base_port != 0 && (base_port as usize) + n + 2 > u16::MAX as usize {
@@ -237,6 +254,8 @@ impl TopologyManifest {
         let mut workers: HashMap<usize, String> = HashMap::new();
         let (mut master, mut source_a, mut source_b) = (None, None, None);
         let mut shapes = Vec::new();
+        let mut gateway = None;
+        let mut tenants: Vec<TenantQuota> = Vec::new();
         // Duplicate identity/parameter lines are errors, same as unknown
         // keys: a stale line left in a hand-edited manifest must not
         // silently win (or lose) over the intended one.
@@ -307,6 +326,22 @@ impl TopologyManifest {
                     no_dup(lineno, "source-b", &source_b)?;
                     source_b = Some(addr.to_string());
                 }
+                ["gateway", addr] => {
+                    no_dup(lineno, "gateway", &gateway)?;
+                    gateway = Some(addr.to_string());
+                }
+                ["tenant", id, burst, rate, max_pending] => {
+                    let id: u32 = parse_field(lineno, "tenant id", id)?;
+                    if tenants.iter().any(|q| q.id == id) {
+                        return Err(topo_err(lineno, format!("duplicate tenant {id}")));
+                    }
+                    tenants.push(TenantQuota {
+                        id,
+                        burst: parse_field(lineno, "tenant burst", burst)?,
+                        rate_per_sec: parse_field(lineno, "tenant rate_per_sec", rate)?,
+                        max_pending: parse_field(lineno, "tenant max_pending", max_pending)?,
+                    });
+                }
                 ["shape", rest @ ..] if (4..=6usize).contains(&rest.len()) => {
                     let from = parse_wild(lineno, "shape from", rest[0])?;
                     let to = parse_wild(lineno, "shape to", rest[1])?;
@@ -375,6 +410,8 @@ impl TopologyManifest {
             source_a: source_a.ok_or_else(|| missing("source-a address"))?,
             source_b: source_b.ok_or_else(|| missing("source-b address"))?,
             shapes,
+            gateway,
+            tenants,
         };
         manifest.validate()?;
         Ok(manifest)
@@ -433,6 +470,17 @@ impl TopologyManifest {
                 sh.burst_bytes
             ));
         }
+        if let Some(gw) = &self.gateway {
+            out.push_str(&format!("gateway {gw}\n"));
+        }
+        for q in &self.tenants {
+            // f64 Display round-trips through FromStr (shortest repr), so
+            // render ∘ parse stays the identity for rate_per_sec.
+            out.push_str(&format!(
+                "tenant {} {} {} {}\n",
+                q.id, q.burst, q.rate_per_sec, q.max_pending
+            ));
+        }
         out
     }
 
@@ -456,6 +504,11 @@ impl TopologyManifest {
                 self.z,
                 self.workers.len()
             )));
+        }
+        if !self.tenants.is_empty() && self.gateway.is_none() {
+            return Err(CmpcError::InvalidParams(
+                "topology manifest: tenant quotas declared without a gateway line".to_string(),
+            ));
         }
         Ok(())
     }
@@ -644,6 +697,55 @@ mod tests {
         assert!(err.to_string().contains("duplicate"), "{err}");
         let err = TopologyManifest::parse(&format!("{good}seed 8\n")).unwrap_err();
         assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn topology_gateway_and_tenant_lines_round_trip() {
+        let mut m =
+            TopologyManifest::template("age", 2, 2, 2, 8, 7, 2, "127.0.0.1", 9600).unwrap();
+        m.gateway = Some("127.0.0.1:9650".to_string());
+        m.tenants = vec![
+            TenantQuota {
+                id: 0,
+                burst: 100,
+                rate_per_sec: 50.5,
+                max_pending: 64,
+            },
+            TenantQuota {
+                id: 1,
+                burst: 2,
+                rate_per_sec: 0.0,
+                max_pending: 64,
+            },
+        ];
+        let rendered = m.render();
+        assert!(rendered.contains("gateway 127.0.0.1:9650"));
+        assert!(rendered.contains("tenant 1 2 0 64"));
+        let back = TopologyManifest::parse(&rendered).unwrap();
+        assert_eq!(back.gateway.as_deref(), Some("127.0.0.1:9650"));
+        assert_eq!(back.tenants, m.tenants);
+
+        // Duplicate tenant ids are typed errors, not silent last-wins.
+        let err =
+            TopologyManifest::parse(&format!("{rendered}tenant 1 9 9 9\n")).unwrap_err();
+        assert!(err.to_string().contains("duplicate tenant"), "{err}");
+        // A quota table without a gateway to enforce it is a typo.
+        let orphaned: String = rendered
+            .lines()
+            .filter(|l| !l.starts_with("gateway "))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let err = TopologyManifest::parse(&orphaned).unwrap_err();
+        assert!(err.to_string().contains("gateway"), "{err}");
+        // Untouched templates stay gateway-free.
+        assert!(TopologyManifest::parse(
+            &TopologyManifest::template("age", 2, 2, 2, 8, 7, 2, "127.0.0.1", 9700)
+                .unwrap()
+                .render()
+        )
+        .unwrap()
+        .gateway
+        .is_none());
     }
 
     #[test]

@@ -203,9 +203,11 @@ pub fn serve_worker_node(
 
 /// Serve one source role: on every [`ControlMsg::JobStart`], build the
 /// share polynomial for this source's matrix and send the split Phase-1
-/// shares to every worker. Exits on shutdown — or after a long idle
-/// window (4× the receive timeout) with no master traffic at all, so a
-/// crashed master cannot strand source processes forever.
+/// shares to every worker. [`ControlMsg::JobInput`] (the gateway's remote
+/// engine) is the same pipeline with a *pushed* client matrix in place of
+/// the manifest-derived demo data. Exits on shutdown — or after a long
+/// idle window (4× the receive timeout) with no master traffic at all, so
+/// a crashed master cannot strand source processes forever.
 pub fn serve_source_node(
     manifest: &TopologyManifest,
     is_source_a: bool,
@@ -222,6 +224,30 @@ pub fn serve_source_node(
         manifest.source_b_id()
     };
     let idle = idle_budget(manifest);
+    let emit = |job: JobId, seed: u64, mine: &FpMat| {
+        // Fork order must match the in-process driver: source A takes the
+        // job rng's first fork, source B the second (each process draws
+        // both, uses its own).
+        let mut job_rng = ChaChaRng::seed_from_u64(seed);
+        let mut rng_a = job_rng.fork();
+        let mut rng_b = job_rng.fork();
+        let poly = if is_source_a {
+            source::build_f_a(scheme.as_ref(), mine, &mut rng_a)
+        } else {
+            source::build_f_b(scheme.as_ref(), mine, &mut rng_b)
+        };
+        for (wid, share) in source::shares(&poly, &setup.alphas).into_iter().enumerate() {
+            let payload = if is_source_a {
+                Payload::ShareA(PooledMat::detached(share))
+            } else {
+                Payload::ShareB(PooledMat::detached(share))
+            };
+            // A dead worker is the master's problem (its job will
+            // fail or early-decode around it); the source keeps
+            // serving later jobs either way.
+            let _ = fabric.send(job, my_id, wid, payload);
+        }
+    };
     loop {
         let env = match endpoint.recv_timeout(idle) {
             Ok(env) => env,
@@ -232,30 +258,14 @@ pub fn serve_source_node(
         match env.payload {
             Payload::Control(ControlMsg::Shutdown) => return Ok(()),
             Payload::Control(ControlMsg::JobStart { seed, .. }) => {
-                let job = env.job;
-                let (a, b) = job_matrices(manifest.seed, job, manifest.m);
-                // Fork order must match the in-process driver: source A
-                // takes the job rng's first fork, source B the second.
-                let mut job_rng = ChaChaRng::seed_from_u64(seed);
-                let mut rng_a = job_rng.fork();
-                let mut rng_b = job_rng.fork();
-                let poly = if is_source_a {
-                    source::build_f_a(scheme.as_ref(), &a, &mut rng_a)
-                } else {
-                    source::build_f_b(scheme.as_ref(), &b, &mut rng_b)
-                };
-                for (wid, share) in source::shares(&poly, &setup.alphas).into_iter().enumerate()
-                {
-                    let payload = if is_source_a {
-                        Payload::ShareA(PooledMat::detached(share))
-                    } else {
-                        Payload::ShareB(PooledMat::detached(share))
-                    };
-                    // A dead worker is the master's problem (its job will
-                    // fail or early-decode around it); the source keeps
-                    // serving later jobs either way.
-                    let _ = fabric.send(job, my_id, wid, payload);
-                }
+                let (a, b) = job_matrices(manifest.seed, env.job, manifest.m);
+                emit(env.job, seed, if is_source_a { &a } else { &b });
+            }
+            // Gateway push (v0.7): the client's matrix replaces the
+            // manifest-derived demo data; masks and fork order are
+            // unchanged, so decode needs no new code anywhere.
+            Payload::Control(ControlMsg::JobInput { seed, mat }) => {
+                emit(env.job, seed, &mat);
             }
             // Stray traffic (e.g. a JobAbort for a failed job): sources
             // hold no per-job state, nothing to drop.

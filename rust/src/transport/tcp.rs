@@ -19,9 +19,16 @@
 //! Inbound frames that fail to decode (corrupt, truncated, version skew)
 //! terminate that connection and bump `decode_errors`; they can never
 //! panic the process or allocate unboundedly (see [`wire`]).
+//!
+//! **Link liveness.** Every reader thread notes which sender ids its
+//! connection carried; when the connection dies (EOF, reset, decode
+//! error) those notes are withdrawn. A peer whose every noted connection
+//! is gone reports `peer_alive == false` until it reconnects — the signal
+//! the master's abort-ack drain uses to stop waiting on a crashed worker
+//! whose last write landed in the OS buffer.
 
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
@@ -32,6 +39,28 @@ use crate::metrics::{WireCounters, WireStats};
 use crate::mpc::network::{BufferPool, Endpoint, Envelope, NodeId, Payload, Transport};
 use crate::runtime::manifest::TopologyManifest;
 use crate::transport::wire::{self, FrameReader};
+
+/// Reader-side link-liveness book-keeping (see [`Transport::peer_alive`]).
+///
+/// `seen[n]` — whether node `n`'s envelopes were *ever* observed on an
+/// inbound connection; `live[n]` — how many currently-open inbound
+/// connections have carried them. A node is presumed alive until it has
+/// been seen and every connection that saw it is gone; a reconnect
+/// re-increments `live`, so a restarted peer is alive again on its first
+/// frame.
+struct Liveness {
+    seen: Vec<AtomicBool>,
+    live: Vec<AtomicUsize>,
+}
+
+impl Liveness {
+    fn new(n_nodes: usize) -> Arc<Liveness> {
+        Arc::new(Liveness {
+            seen: (0..n_nodes).map(|_| AtomicBool::new(false)).collect(),
+            live: (0..n_nodes).map(|_| AtomicUsize::new(0)).collect(),
+        })
+    }
+}
 
 /// One lazily-connected outbound link plus its reusable encode buffer.
 struct PeerSlot {
@@ -65,6 +94,8 @@ pub struct TcpTransport {
     /// deterministically instead of lingering until the remote peer
     /// closes.
     accepted: Arc<Mutex<Vec<TcpStream>>>,
+    /// Reader-side link-liveness (shared with the detached reader threads).
+    liveness: Arc<Liveness>,
 }
 
 impl TcpTransport {
@@ -113,15 +144,19 @@ impl TcpTransport {
         let bufs = BufferPool::new();
         let shutdown = Arc::new(AtomicBool::new(false));
         let accepted = Arc::new(Mutex::new(Vec::new()));
+        let liveness = Liveness::new(n_nodes);
         let accept = {
             let local_tx = local_tx.clone();
             let wire = wire.clone();
             let bufs = bufs.clone();
             let shutdown = shutdown.clone();
             let accepted = accepted.clone();
+            let liveness = liveness.clone();
             std::thread::Builder::new()
                 .name(format!("cmpc-tcp-accept-{local}"))
-                .spawn(move || accept_loop(listener, local_tx, wire, bufs, shutdown, accepted))
+                .spawn(move || {
+                    accept_loop(listener, local_tx, wire, bufs, shutdown, accepted, liveness)
+                })
                 .map_err(|e| CmpcError::Io(format!("spawning acceptor: {e}")))?
         };
         let transport = Arc::new(TcpTransport {
@@ -145,6 +180,7 @@ impl TcpTransport {
             listen_addr,
             accept_thread: Mutex::new(Some(accept)),
             accepted,
+            liveness,
         });
         Ok((transport, Endpoint::new(local, rx)))
     }
@@ -221,6 +257,7 @@ fn accept_loop(
     bufs: Arc<BufferPool>,
     shutdown: Arc<AtomicBool>,
     accepted: Arc<Mutex<Vec<TcpStream>>>,
+    liveness: Arc<Liveness>,
 ) {
     loop {
         match listener.accept() {
@@ -235,12 +272,13 @@ fn accept_loop(
                 let tx = local_tx.clone();
                 let wire = wire.clone();
                 let bufs = bufs.clone();
+                let liveness = liveness.clone();
                 // Reader threads exit on peer EOF / decode error; they
                 // hold no Arc back to the transport, so teardown order is
                 // acyclic.
                 let _ = std::thread::Builder::new()
                     .name("cmpc-tcp-rx".to_string())
-                    .spawn(move || reader_loop(stream, tx, wire, bufs));
+                    .spawn(move || reader_loop(stream, tx, wire, bufs, liveness));
             }
             Err(_) => {
                 if shutdown.load(Ordering::Relaxed) {
@@ -257,12 +295,37 @@ fn reader_loop(
     local_tx: Arc<RwLock<Sender<Envelope>>>,
     wire: Arc<WireCounters>,
     bufs: Arc<BufferPool>,
+    liveness: Arc<Liveness>,
+) {
+    // Sender ids this connection has carried (almost always exactly one).
+    let mut noted: Vec<NodeId> = Vec::new();
+    read_frames(stream, &local_tx, &wire, &bufs, &liveness, &mut noted);
+    // The connection is gone — however it died, the peers it carried have
+    // one fewer live inbound link. When a peer's count reaches zero it
+    // reads as dead ([`Transport::peer_alive`]) until it reconnects.
+    for &from in &noted {
+        liveness.live[from].fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn read_frames(
+    stream: TcpStream,
+    local_tx: &Arc<RwLock<Sender<Envelope>>>,
+    wire: &Arc<WireCounters>,
+    bufs: &Arc<BufferPool>,
+    liveness: &Arc<Liveness>,
+    noted: &mut Vec<NodeId>,
 ) {
     let mut reader = std::io::BufReader::new(stream);
     let mut frames = FrameReader::new();
     loop {
-        match frames.read_from(&mut reader, Some(&bufs)) {
+        match frames.read_from(&mut reader, Some(bufs)) {
             Ok(Some(env)) => {
+                if env.from < liveness.seen.len() && !noted.contains(&env.from) {
+                    noted.push(env.from);
+                    liveness.seen[env.from].store(true, Ordering::Relaxed);
+                    liveness.live[env.from].fetch_add(1, Ordering::Relaxed);
+                }
                 let tx = local_tx.read().unwrap().clone();
                 if tx.send(env).is_err() {
                     return; // local node gone; stop draining the socket
@@ -340,6 +403,16 @@ impl Transport for TcpTransport {
     fn wire_stats(&self) -> WireStats {
         self.wire.snapshot()
     }
+
+    fn peer_alive(&self, node: NodeId) -> bool {
+        if node >= self.n_nodes {
+            return true; // no evidence either way; sends will error anyway
+        }
+        // Alive until observed dead: never seen, or at least one inbound
+        // connection that carried this peer's envelopes is still open.
+        !self.liveness.seen[node].load(Ordering::Relaxed)
+            || self.liveness.live[node].load(Ordering::Relaxed) > 0
+    }
 }
 
 impl Drop for TcpTransport {
@@ -364,7 +437,7 @@ impl Drop for TcpTransport {
 mod tests {
     use super::*;
     use crate::matrix::FpMat;
-    use crate::mpc::network::PooledMat;
+    use crate::mpc::network::{ControlMsg, PooledMat};
     use crate::util::rng::ChaChaRng;
 
     /// Bind a 4-node loopback topology (1 worker + master + 2 sources)
@@ -464,5 +537,44 @@ mod tests {
         assert!(endpoints[0]
             .recv_timeout(Duration::from_millis(50))
             .is_err());
+    }
+
+    #[test]
+    fn link_liveness_tracks_reader_side_disconnects() {
+        let (mut transports, endpoints) = loopback(2);
+        // No evidence yet: peers are presumed alive.
+        assert!(transports[1].peer_alive(0));
+        // worker 0 → master (node 1): once the frame lands, node 1 has
+        // seen node 0 on a live inbound connection.
+        transports[0]
+            .deliver(
+                1,
+                Envelope {
+                    job: 1,
+                    from: 0,
+                    payload: Payload::Control(ControlMsg::JobDone {
+                        mults: 0,
+                        stored: 0,
+                    }),
+                },
+            )
+            .unwrap();
+        endpoints[1].recv().unwrap();
+        assert!(transports[1].peer_alive(0));
+        // Kill node 0: its outbound socket closes with its transport, node
+        // 1's reader hits EOF, and the last live connection that carried
+        // node 0 goes away — peer_alive flips without any send attempt.
+        let t0_transport = transports.remove(0);
+        drop(t0_transport);
+        let deadline = Instant::now();
+        while transports[0].peer_alive(0) {
+            assert!(
+                deadline.elapsed() < Duration::from_secs(5),
+                "peer 0 never read as dead after its transport dropped"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // An unrelated peer that was never heard from stays presumed alive.
+        assert!(transports[0].peer_alive(2));
     }
 }

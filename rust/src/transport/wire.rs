@@ -36,12 +36,26 @@
 //! codec serializes only the seed; the decoder installs a fresh counters
 //! instance, and the worker's totals travel back in its
 //! [`ControlMsg::JobDone`] / [`ControlMsg::AbortAck`].
+//!
+//! **Client plane.** The serving gateway's client-facing protocol shares
+//! this frame header — the `job` slot carries the client's correlation id
+//! and the `from` slot the tenant id — but uses a disjoint tag family
+//! ([`ClientFrame`]): `Submit` / `Result` / `Reject` / `Shutdown`. The two
+//! families are mutually unintelligible by construction: the fabric
+//! decoder rejects client tags as unknown payloads and the client decoder
+//! rejects fabric tags, so a client connection can never inject Phase-2
+//! traffic into the worker fabric (and a misrouted worker socket cannot
+//! impersonate a client). Client-plane decoding is incremental
+//! ([`peek_client_header`] / [`decode_client_frame`]) so the gateway's
+//! readiness poller can parse from partial nonblocking reads and reject
+//! oversized submissions from the header alone, before buffering a body.
 
 use std::io::Read;
 use std::sync::Arc;
 
 use crate::error::{CmpcError, Result};
 use crate::ff::P;
+use crate::matrix::FpMat;
 use crate::metrics::WorkerCounters;
 use crate::mpc::network::{BufferPool, ControlMsg, Envelope, Payload, PooledMat};
 
@@ -70,12 +84,20 @@ const TAG_GSHARE: u8 = 3;
 const TAG_ISHARE: u8 = 4;
 const TAG_CONTROL: u8 = 5;
 
+// Client-plane tags (gateway front door). Disjoint from the fabric tags
+// above so the two decoders reject each other's frames.
+const TAG_SUBMIT: u8 = 6;
+const TAG_RESULT: u8 = 7;
+const TAG_REJECT: u8 = 8;
+const TAG_GW_SHUTDOWN: u8 = 9;
+
 const CTL_JOB_START: u8 = 0;
 const CTL_JOB_DONE: u8 = 1;
 const CTL_JOB_ERROR: u8 = 2;
 const CTL_JOB_ABORT: u8 = 3;
 const CTL_ABORT_ACK: u8 = 4;
 const CTL_SHUTDOWN: u8 = 5;
+const CTL_JOB_INPUT: u8 = 6;
 
 fn corrupt(msg: impl std::fmt::Display) -> CmpcError {
     CmpcError::Fabric(format!("wire: {msg}"))
@@ -95,7 +117,8 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_mat(out: &mut Vec<u8>, m: &PooledMat) {
+// `&PooledMat` deref-coerces to `&FpMat`, so both planes share these.
+fn put_mat(out: &mut Vec<u8>, m: &FpMat) {
     put_u32(out, m.rows as u32);
     put_u32(out, m.cols as u32);
     for &v in &m.data {
@@ -103,7 +126,7 @@ fn put_mat(out: &mut Vec<u8>, m: &PooledMat) {
     }
 }
 
-fn mat_wire_len(m: &PooledMat) -> usize {
+fn mat_wire_len(m: &FpMat) -> usize {
     8 + 4 * m.len()
 }
 
@@ -131,6 +154,7 @@ fn payload_wire_len(payload: &Payload) -> usize {
                 ControlMsg::JobAbort => 0,
                 ControlMsg::AbortAck { .. } => 16,
                 ControlMsg::Shutdown => 0,
+                ControlMsg::JobInput { mat, .. } => 8 + mat_wire_len(mat),
             }
         }
     }
@@ -182,6 +206,11 @@ pub fn encode_envelope(env: &Envelope, out: &mut Vec<u8>) {
                 put_u64(out, *stored);
             }
             ControlMsg::Shutdown => out.push(CTL_SHUTDOWN),
+            ControlMsg::JobInput { seed, mat } => {
+                out.push(CTL_JOB_INPUT);
+                put_u64(out, *seed);
+                put_mat(out, mat);
+            }
         },
     }
 }
@@ -328,6 +357,30 @@ fn decode_mat(r: &mut Reader<'_>, bufs: Option<&Arc<BufferPool>>) -> Result<Pool
     Ok(mat)
 }
 
+/// Same validation as [`decode_mat`] but into a plain (unpooled) [`FpMat`]
+/// — the client plane and [`ControlMsg::JobInput`] carry whole input
+/// matrices whose lifetime is the job, not a fabric receive buffer.
+fn decode_fpmat(r: &mut Reader<'_>) -> Result<FpMat> {
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let scalars = (rows as u64).saturating_mul(cols as u64);
+    if scalars.saturating_mul(4) > r.remaining() as u64 {
+        return Err(corrupt(format!(
+            "matrix header claims {rows}x{cols} scalars but only {} payload bytes remain",
+            r.remaining()
+        )));
+    }
+    let mut mat = FpMat::zeros(rows, cols);
+    for slot in mat.data.iter_mut() {
+        let v = r.u32()?;
+        if (v as u64) >= P {
+            return Err(corrupt(format!("scalar {v} out of field range (p = {P})")));
+        }
+        *slot = v;
+    }
+    Ok(mat)
+}
+
 fn decode_payload(tag: u8, body: &[u8], bufs: Option<&Arc<BufferPool>>) -> Result<Payload> {
     let mut r = Reader::new(body);
     let payload = match tag {
@@ -364,6 +417,10 @@ fn decode_payload(tag: u8, body: &[u8], bufs: Option<&Arc<BufferPool>>) -> Resul
                     stored: r.u64()?,
                 },
                 CTL_SHUTDOWN => ControlMsg::Shutdown,
+                CTL_JOB_INPUT => ControlMsg::JobInput {
+                    seed: r.u64()?,
+                    mat: decode_fpmat(&mut r)?,
+                },
                 other => return Err(corrupt(format!("unknown control sub-tag {other}"))),
             };
             Payload::Control(ctl)
@@ -469,6 +526,330 @@ impl FrameReader {
     }
 }
 
+// ---------------------------------------------------------- client plane
+
+/// Why a gateway refused a submission — carried verbatim in a
+/// [`ClientMsg::Reject`] so clients and tests branch on the cause without
+/// parsing prose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The tenant's token bucket is empty (rate/burst quota).
+    QuotaExceeded,
+    /// The tenant's pending-job queue is at its depth cap.
+    QueueFull,
+    /// The tenant id is not in the gateway's manifest.
+    UnknownTenant,
+    /// The submission failed scheme/shape validation.
+    Malformed,
+    /// The frame's payload exceeds the gateway's configured cap.
+    TooLarge,
+    /// The gateway is draining for shutdown.
+    ShuttingDown,
+    /// The deployment failed after admission (the one post-door reason).
+    Internal,
+}
+
+impl RejectReason {
+    /// Stable wire code — also the index into
+    /// [`crate::metrics::GatewayStats::rejected`].
+    pub fn as_u8(self) -> u8 {
+        match self {
+            RejectReason::QuotaExceeded => 0,
+            RejectReason::QueueFull => 1,
+            RejectReason::UnknownTenant => 2,
+            RejectReason::Malformed => 3,
+            RejectReason::TooLarge => 4,
+            RejectReason::ShuttingDown => 5,
+            RejectReason::Internal => 6,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<RejectReason> {
+        Some(match v {
+            0 => RejectReason::QuotaExceeded,
+            1 => RejectReason::QueueFull,
+            2 => RejectReason::UnknownTenant,
+            3 => RejectReason::Malformed,
+            4 => RejectReason::TooLarge,
+            5 => RejectReason::ShuttingDown,
+            6 => RejectReason::Internal,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RejectReason::QuotaExceeded => "quota-exceeded",
+            RejectReason::QueueFull => "queue-full",
+            RejectReason::UnknownTenant => "unknown-tenant",
+            RejectReason::Malformed => "malformed",
+            RejectReason::TooLarge => "too-large",
+            RejectReason::ShuttingDown => "shutting-down",
+            RejectReason::Internal => "internal",
+        })
+    }
+}
+
+/// Client-plane payloads (tags 6–9).
+#[derive(Debug, Clone)]
+pub enum ClientMsg {
+    /// A tenant submits one `Y = AᵀB` job under scheme params `(s, t, z)`.
+    Submit {
+        s: usize,
+        t: usize,
+        z: usize,
+        a: FpMat,
+        b: FpMat,
+    },
+    /// Success: the decoded product, its FNV digest, and the serving
+    /// latency the gateway observed (admission → decode).
+    Result {
+        digest: u64,
+        elapsed_us: u64,
+        y: FpMat,
+    },
+    /// Typed refusal. Every reason except [`RejectReason::Internal`] is
+    /// decided at the door, before the job touches a deployment.
+    Reject {
+        reason: RejectReason,
+        detail: String,
+    },
+    /// Administrative: drain in-flight jobs and stop the gateway (the CI
+    /// lane's clean teardown; unauthenticated until the TLS/auth arc).
+    Shutdown,
+}
+
+/// One client-plane frame. Shares the fabric's 23-byte header: the `job`
+/// slot carries the client's correlation id (echoed verbatim on the
+/// response) and the `from` slot the tenant id.
+#[derive(Debug, Clone)]
+pub struct ClientFrame {
+    pub corr: u64,
+    pub tenant: u32,
+    pub msg: ClientMsg,
+}
+
+fn client_tag(msg: &ClientMsg) -> u8 {
+    match msg {
+        ClientMsg::Submit { .. } => TAG_SUBMIT,
+        ClientMsg::Result { .. } => TAG_RESULT,
+        ClientMsg::Reject { .. } => TAG_REJECT,
+        ClientMsg::Shutdown => TAG_GW_SHUTDOWN,
+    }
+}
+
+fn client_payload_len(msg: &ClientMsg) -> usize {
+    match msg {
+        ClientMsg::Submit { a, b, .. } => 12 + mat_wire_len(a) + mat_wire_len(b),
+        ClientMsg::Result { y, .. } => 16 + mat_wire_len(y),
+        ClientMsg::Reject { detail, .. } => 5 + detail.len(),
+        ClientMsg::Shutdown => 0,
+    }
+}
+
+/// Exact on-wire size of `frame`, header included.
+pub fn client_frame_len(frame: &ClientFrame) -> usize {
+    HEADER_LEN + client_payload_len(&frame.msg)
+}
+
+/// Append `frame`'s bytes to `out` (not cleared — callers batch frames).
+pub fn encode_client_frame(frame: &ClientFrame, out: &mut Vec<u8>) {
+    out.reserve(client_frame_len(frame));
+    put_u32(out, WIRE_MAGIC);
+    put_u16(out, WIRE_VERSION);
+    put_u64(out, frame.corr);
+    put_u32(out, frame.tenant);
+    out.push(client_tag(&frame.msg));
+    put_u32(out, client_payload_len(&frame.msg) as u32);
+    match &frame.msg {
+        ClientMsg::Submit { s, t, z, a, b } => {
+            put_u32(out, *s as u32);
+            put_u32(out, *t as u32);
+            put_u32(out, *z as u32);
+            put_mat(out, a);
+            put_mat(out, b);
+        }
+        ClientMsg::Result {
+            digest,
+            elapsed_us,
+            y,
+        } => {
+            put_u64(out, *digest);
+            put_u64(out, *elapsed_us);
+            put_mat(out, y);
+        }
+        ClientMsg::Reject { reason, detail } => {
+            out.push(reason.as_u8());
+            put_u32(out, detail.len() as u32);
+            out.extend_from_slice(detail.as_bytes());
+        }
+        ClientMsg::Shutdown => {}
+    }
+}
+
+/// Encode `frame` into `scratch` (cleared) and write it to `w`, with the
+/// same sender-side payload cap as [`write_envelope`].
+pub fn write_client_frame<W: std::io::Write>(
+    w: &mut W,
+    frame: &ClientFrame,
+    scratch: &mut Vec<u8>,
+) -> Result<usize> {
+    let payload_len = client_payload_len(&frame.msg);
+    if payload_len > MAX_FRAME_PAYLOAD {
+        return Err(CmpcError::Fabric(format!(
+            "wire: refusing to send a {payload_len}-byte client payload \
+             (cap {MAX_FRAME_PAYLOAD} bytes; partition the job smaller)"
+        )));
+    }
+    scratch.clear();
+    encode_client_frame(frame, scratch);
+    w.write_all(scratch)
+        .map_err(|e| CmpcError::Fabric(format!("wire write: {e}")))?;
+    Ok(scratch.len())
+}
+
+/// A validated client-frame header — what the gateway's poller learns
+/// from the first [`HEADER_LEN`] buffered bytes, before any body arrives.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientHeader {
+    pub corr: u64,
+    pub tenant: u32,
+    pub tag: u8,
+    pub payload_len: usize,
+}
+
+/// Validate and parse a client-frame header from the front of `buf`.
+/// `Ok(None)` while fewer than [`HEADER_LEN`] bytes are buffered; flipped
+/// magic/version and oversized length prefixes are typed errors. This is
+/// how the poller rejects an oversized submission from 23 bytes, without
+/// ever buffering the claimed body.
+pub fn peek_client_header(buf: &[u8]) -> Result<Option<ClientHeader>> {
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let h = parse_header(&mut Reader::new(&buf[..HEADER_LEN]))?;
+    Ok(Some(ClientHeader {
+        corr: h.job,
+        tenant: h.from as u32,
+        tag: h.tag,
+        payload_len: h.len,
+    }))
+}
+
+/// Decode one client frame from the front of `buf`. `Ok(None)` while the
+/// buffer holds less than a full frame (keep reading); `Ok(Some((frame,
+/// consumed)))` once one is complete; corrupt bytes are typed errors.
+/// Fabric tags (0–5) are rejected here — the planes never cross.
+pub fn decode_client_frame(buf: &[u8]) -> Result<Option<(ClientFrame, usize)>> {
+    let h = match peek_client_header(buf)? {
+        Some(h) => h,
+        None => return Ok(None),
+    };
+    let total = HEADER_LEN + h.payload_len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let msg = decode_client_payload(h.tag, &buf[HEADER_LEN..total])?;
+    Ok(Some((
+        ClientFrame {
+            corr: h.corr,
+            tenant: h.tenant,
+            msg,
+        },
+        total,
+    )))
+}
+
+fn decode_client_payload(tag: u8, body: &[u8]) -> Result<ClientMsg> {
+    let mut r = Reader::new(body);
+    let msg = match tag {
+        TAG_SUBMIT => {
+            let s = r.u32()? as usize;
+            let t = r.u32()? as usize;
+            let z = r.u32()? as usize;
+            let a = decode_fpmat(&mut r)?;
+            let b = decode_fpmat(&mut r)?;
+            ClientMsg::Submit { s, t, z, a, b }
+        }
+        TAG_RESULT => ClientMsg::Result {
+            digest: r.u64()?,
+            elapsed_us: r.u64()?,
+            y: decode_fpmat(&mut r)?,
+        },
+        TAG_REJECT => {
+            let code = r.u8()?;
+            let reason = RejectReason::from_u8(code)
+                .ok_or_else(|| corrupt(format!("unknown reject reason {code}")))?;
+            let len = r.u32()? as usize;
+            let bytes = r.bytes(len)?;
+            ClientMsg::Reject {
+                reason,
+                detail: String::from_utf8_lossy(bytes).into_owned(),
+            }
+        }
+        TAG_GW_SHUTDOWN => ClientMsg::Shutdown,
+        other => return Err(corrupt(format!("unknown client frame tag {other}"))),
+    };
+    if r.remaining() != 0 {
+        return Err(corrupt(format!(
+            "client frame length mismatch: {} trailing payload bytes",
+            r.remaining()
+        )));
+    }
+    Ok(msg)
+}
+
+/// Blocking read of one client frame from `r` — the load driver's receive
+/// path (the gateway itself parses incrementally via
+/// [`decode_client_frame`]). `Ok(None)` on a clean EOF at a frame
+/// boundary; bodies are read in bounded chunks like [`FrameReader`].
+pub fn read_client_frame<R: Read>(r: &mut R) -> Result<Option<ClientFrame>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(corrupt(format!(
+                    "connection closed {got} bytes into a frame header"
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(CmpcError::Fabric(format!("wire read: {e}"))),
+        }
+    }
+    let h = parse_header(&mut Reader::new(&header))?;
+    let mut body = Vec::new();
+    let mut remaining = h.len;
+    while remaining > 0 {
+        let chunk = remaining.min(READ_CHUNK);
+        let start = body.len();
+        body.resize(start + chunk, 0);
+        r.read_exact(&mut body[start..]).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                corrupt(format!(
+                    "connection closed mid-frame ({remaining} of {} payload bytes missing)",
+                    h.len
+                ))
+            } else {
+                CmpcError::Fabric(format!("wire read: {e}"))
+            }
+        })?;
+        remaining -= chunk;
+    }
+    let msg = decode_client_payload(h.tag, &body)?;
+    Ok(Some(ClientFrame {
+        corr: h.job,
+        tenant: h.from as u32,
+        msg,
+    }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -478,6 +859,11 @@ mod tests {
     fn mat(rows: usize, cols: usize, seed: u64) -> PooledMat {
         let mut rng = ChaChaRng::seed_from_u64(seed);
         PooledMat::detached(FpMat::random(&mut rng, rows, cols))
+    }
+
+    fn fpmat(rows: usize, cols: usize, seed: u64) -> FpMat {
+        let mut rng = ChaChaRng::seed_from_u64(seed);
+        FpMat::random(&mut rng, rows, cols)
     }
 
     fn env(payload: Payload) -> Envelope {
@@ -513,6 +899,10 @@ mod tests {
                 stored: 10,
             }),
             Payload::Control(ControlMsg::Shutdown),
+            Payload::Control(ControlMsg::JobInput {
+                seed: 0xBEEF,
+                mat: fpmat(3, 3, 11),
+            }),
         ]
     }
 
@@ -551,6 +941,13 @@ mod tests {
                 (ControlMsg::JobError(m1), ControlMsg::JobError(m2)) => assert_eq!(m1, m2),
                 (ControlMsg::JobAbort, ControlMsg::JobAbort) => {}
                 (ControlMsg::Shutdown, ControlMsg::Shutdown) => {}
+                (
+                    ControlMsg::JobInput { seed, mat },
+                    ControlMsg::JobInput { seed: s2, mat: m2 },
+                ) => {
+                    assert_eq!(seed, s2);
+                    assert_eq!(mat, m2);
+                }
                 (x, y) => panic!("control variant mismatch: {x:?} vs {y:?}"),
             },
             (a, b) => panic!("payload variant mismatch: {a:?} vs {b:?}"),
@@ -710,6 +1107,249 @@ mod tests {
                     Ok(None) | Err(_) => break,
                 }
             }
+        }
+    }
+
+    // ------------------------------------------------------ client plane
+
+    fn every_client_msg() -> Vec<ClientMsg> {
+        vec![
+            ClientMsg::Submit {
+                s: 2,
+                t: 2,
+                z: 2,
+                a: fpmat(4, 4, 21),
+                b: fpmat(4, 4, 22),
+            },
+            ClientMsg::Result {
+                digest: 0xD16E57,
+                elapsed_us: 1234,
+                y: fpmat(3, 3, 23),
+            },
+            ClientMsg::Reject {
+                reason: RejectReason::QuotaExceeded,
+                detail: "tenant 7: bucket empty".into(),
+            },
+            ClientMsg::Reject {
+                reason: RejectReason::Internal,
+                detail: String::new(),
+            },
+            ClientMsg::Shutdown,
+        ]
+    }
+
+    fn assert_client_eq(a: &ClientMsg, b: &ClientMsg) {
+        match (a, b) {
+            (
+                ClientMsg::Submit { s, t, z, a: a1, b: b1 },
+                ClientMsg::Submit {
+                    s: s2,
+                    t: t2,
+                    z: z2,
+                    a: a2,
+                    b: b2,
+                },
+            ) => {
+                assert_eq!((s, t, z), (s2, t2, z2));
+                assert_eq!(a1, a2);
+                assert_eq!(b1, b2);
+            }
+            (
+                ClientMsg::Result {
+                    digest,
+                    elapsed_us,
+                    y,
+                },
+                ClientMsg::Result {
+                    digest: d2,
+                    elapsed_us: e2,
+                    y: y2,
+                },
+            ) => {
+                assert_eq!(digest, d2);
+                assert_eq!(elapsed_us, e2);
+                assert_eq!(y, y2);
+            }
+            (
+                ClientMsg::Reject { reason, detail },
+                ClientMsg::Reject {
+                    reason: r2,
+                    detail: d2,
+                },
+            ) => {
+                assert_eq!(reason, r2);
+                assert_eq!(detail, d2);
+            }
+            (ClientMsg::Shutdown, ClientMsg::Shutdown) => {}
+            (x, y) => panic!("client variant mismatch: {x:?} vs {y:?}"),
+        }
+    }
+
+    #[test]
+    fn client_frames_roundtrip_incrementally_and_over_streams() {
+        for (i, msg) in every_client_msg().into_iter().enumerate() {
+            let f = ClientFrame {
+                corr: 0xC0FFEE + i as u64,
+                tenant: 3 + i as u32,
+                msg,
+            };
+            let mut buf = Vec::new();
+            encode_client_frame(&f, &mut buf);
+            assert_eq!(buf.len(), client_frame_len(&f), "len disagrees for {f:?}");
+            let h = peek_client_header(&buf).unwrap().unwrap();
+            assert_eq!(h.corr, f.corr);
+            assert_eq!(h.tenant, f.tenant);
+            assert_eq!(h.payload_len, buf.len() - HEADER_LEN);
+            let (back, consumed) = decode_client_frame(&buf).unwrap().unwrap();
+            assert_eq!(consumed, buf.len());
+            assert_eq!(back.corr, f.corr);
+            assert_eq!(back.tenant, f.tenant);
+            assert_client_eq(&back.msg, &f.msg);
+            let mut cursor = std::io::Cursor::new(buf);
+            let back = read_client_frame(&mut cursor).unwrap().unwrap();
+            assert_client_eq(&back.msg, &f.msg);
+            assert!(read_client_frame(&mut cursor).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn partial_client_frames_are_incomplete_not_errors() {
+        // The incremental decoder must treat every prefix of a valid frame
+        // as "keep reading" — that is what lets the poller parse from
+        // partial nonblocking reads. The blocking stream reader, by
+        // contrast, sees the same prefix as a peer dying mid-frame.
+        for msg in every_client_msg() {
+            let f = ClientFrame {
+                corr: 1,
+                tenant: 2,
+                msg,
+            };
+            let mut buf = Vec::new();
+            encode_client_frame(&f, &mut buf);
+            for cut in 0..buf.len() {
+                match decode_client_frame(&buf[..cut]) {
+                    Ok(None) => {}
+                    other => panic!("cut at {cut}: {other:?}"),
+                }
+                let mut cursor = std::io::Cursor::new(buf[..cut].to_vec());
+                let got = read_client_frame(&mut cursor);
+                if cut == 0 {
+                    assert!(matches!(got, Ok(None)));
+                } else {
+                    assert!(got.is_err(), "stream cut at {cut} did not error");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn client_plane_and_fabric_plane_reject_each_other() {
+        // A fabric frame fed to the client decoder is an unknown tag...
+        let mut buf = Vec::new();
+        encode_envelope(&env(Payload::GShare(mat(2, 2, 31))), &mut buf);
+        let err = decode_client_frame(&buf).unwrap_err();
+        assert!(err.to_string().contains("client frame tag"), "{err}");
+        // ...and a client frame fed to the fabric decoder likewise, so a
+        // client socket can never inject Phase-2 traffic.
+        let f = ClientFrame {
+            corr: 9,
+            tenant: 1,
+            msg: ClientMsg::Shutdown,
+        };
+        let mut buf = Vec::new();
+        encode_client_frame(&f, &mut buf);
+        let err = decode_envelope(&buf, None).unwrap_err();
+        assert!(err.to_string().contains("tag"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_client_frames_are_typed_errors() {
+        let f = ClientFrame {
+            corr: 5,
+            tenant: 0,
+            msg: ClientMsg::Submit {
+                s: 2,
+                t: 2,
+                z: 2,
+                a: fpmat(2, 2, 41),
+                b: fpmat(2, 2, 42),
+            },
+        };
+        let mut good = Vec::new();
+        encode_client_frame(&f, &mut good);
+
+        // flipped magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(peek_client_header(&bad).is_err());
+
+        // oversized length prefix: rejected from the header alone
+        let mut bad = good.clone();
+        bad[19..23].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = peek_client_header(&bad).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+
+        // matrix dims that overflow the frame (A's dims sit after s,t,z)
+        let mut bad = good.clone();
+        bad[HEADER_LEN + 12..HEADER_LEN + 16].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_client_frame(&bad).unwrap_err();
+        assert!(err.to_string().contains("matrix header"), "{err}");
+
+        // scalar out of field range
+        let mut bad = good.clone();
+        let first_scalar = HEADER_LEN + 12 + 8;
+        bad[first_scalar..first_scalar + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_client_frame(&bad).unwrap_err();
+        assert!(err.to_string().contains("field range"), "{err}");
+
+        // unknown reject-reason code
+        let rj = ClientFrame {
+            corr: 5,
+            tenant: 0,
+            msg: ClientMsg::Reject {
+                reason: RejectReason::Malformed,
+                detail: "x".into(),
+            },
+        };
+        let mut bad = Vec::new();
+        encode_client_frame(&rj, &mut bad);
+        bad[HEADER_LEN] = 0x77;
+        let err = decode_client_frame(&bad).unwrap_err();
+        assert!(err.to_string().contains("reject reason"), "{err}");
+    }
+
+    #[test]
+    fn garbage_client_streams_never_panic() {
+        let mut rng = ChaChaRng::seed_from_u64(0xC11E);
+        for round in 0..200u64 {
+            let mut buf = Vec::new();
+            if round % 2 == 0 {
+                let len = (rng.next_u64() % 64) as usize;
+                for _ in 0..len {
+                    buf.push(rng.next_u64() as u8);
+                }
+            } else {
+                let f = ClientFrame {
+                    corr: round,
+                    tenant: 1,
+                    msg: ClientMsg::Submit {
+                        s: 2,
+                        t: 2,
+                        z: 2,
+                        a: fpmat(2, 3, round),
+                        b: fpmat(3, 2, round + 1),
+                    },
+                };
+                encode_client_frame(&f, &mut buf);
+                let flips = 1 + (rng.next_u64() % 4) as usize;
+                for _ in 0..flips {
+                    let i = (rng.next_u64() as usize) % buf.len();
+                    buf[i] ^= (rng.next_u64() as u8) | 1;
+                }
+            }
+            let _ = decode_client_frame(&buf); // must not panic
+            let mut cursor = std::io::Cursor::new(buf);
+            let _ = read_client_frame(&mut cursor);
         }
     }
 }

@@ -1,0 +1,359 @@
+//! Serving-gateway acceptance pins (v0.7): byte-identity with in-process
+//! execution, typed multi-tenant admission, observable batching, and a
+//! fixed-size poller thread pool under many concurrent connections.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use cmpc::coordinator::CoordinatorConfig;
+use cmpc::gateway::client::{run_load, ClientReply, GatewayClient, LoadPlan};
+use cmpc::gateway::{BatchKey, Gateway, GatewayConfig, LocalEngine, TenantQuota};
+use cmpc::matrix::FpMat;
+use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::transport::node::{digest_mat, job_matrices};
+use cmpc::transport::wire::RejectReason;
+use cmpc::util::rng::ChaChaRng;
+use cmpc::{Deployment, SchemeSpec};
+
+/// Serialize the tests in this binary: the thread-count pin below reads
+/// `/proc/self/status`, which is process-wide — a concurrently running
+/// sibling test would make it flaky.
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Threads of this process per the kernel (Linux); `None` elsewhere.
+fn os_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+fn start_local(
+    config: GatewayConfig,
+) -> (Gateway, Arc<LocalEngine>, String) {
+    let engine = Arc::new(LocalEngine::new(CoordinatorConfig::default()));
+    let gateway =
+        Gateway::start("127.0.0.1:0", config, engine.clone()).expect("gateway starts");
+    let addr = gateway.local_addr().to_string();
+    (gateway, engine, addr)
+}
+
+/// Acceptance (a): results served through the gateway are byte-identical
+/// to direct in-process execution of the same inputs.
+#[test]
+fn gateway_results_match_in_process_execution() {
+    let _serial = serial();
+    let (gateway, _engine, addr) = start_local(GatewayConfig::default());
+    let direct = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        cmpc::codes::SchemeParams::new(2, 2, 2),
+        ProtocolConfig::default(),
+    )
+    .unwrap();
+    let mut rng = ChaChaRng::seed_from_u64(31);
+    let mut client = GatewayClient::connect(&addr, 0).unwrap();
+    for corr in 0..3u64 {
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        let reply = client
+            .call(corr, 2, 2, 2, a.clone(), b.clone())
+            .expect("round trip");
+        match reply {
+            ClientReply::Accepted {
+                corr: got, digest, y, ..
+            } => {
+                assert_eq!(got, corr);
+                let expected = direct.execute(&a, &b).unwrap().y;
+                assert_eq!(y, expected, "gateway Y differs from direct execute");
+                assert_eq!(y, a.transpose().matmul(&b));
+                assert_eq!(digest, digest_mat(&y));
+            }
+            ClientReply::Rejected { reason, detail, .. } => {
+                panic!("job {corr} rejected: {reason} ({detail})")
+            }
+        }
+    }
+    let stats = gateway.shutdown();
+    assert_eq!(stats.accepted, 3);
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.rejected_total(), 0);
+}
+
+/// Acceptance (b) + S3: over-quota submissions get typed rejections while
+/// an in-quota tenant on the same gateway is unaffected.
+#[test]
+fn over_quota_tenant_is_rejected_without_hurting_neighbors() {
+    let _serial = serial();
+    let config = GatewayConfig {
+        tenants: vec![
+            TenantQuota {
+                id: 0,
+                burst: 100,
+                rate_per_sec: 0.0,
+                max_pending: 64,
+            },
+            // rate 0 + burst 2: exactly the first two submissions pass,
+            // independent of timing.
+            TenantQuota {
+                id: 1,
+                burst: 2,
+                rate_per_sec: 0.0,
+                max_pending: 64,
+            },
+        ],
+        ..GatewayConfig::default()
+    };
+    let (gateway, _engine, addr) = start_local(config);
+    let mut rng = ChaChaRng::seed_from_u64(32);
+    let mut job = |client: &mut GatewayClient, corr: u64| {
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        client.call(corr, 2, 2, 2, a, b).unwrap()
+    };
+
+    let mut limited = GatewayClient::connect(&addr, 1).unwrap();
+    for corr in 0..4u64 {
+        let reply = job(&mut limited, corr);
+        match reply {
+            ClientReply::Accepted { corr: got, .. } => {
+                assert!(corr < 2, "job {got} should have been over quota");
+            }
+            ClientReply::Rejected { reason, corr: got, .. } => {
+                assert!(got >= 2, "job {got} rejected while under quota");
+                assert_eq!(reason, RejectReason::QuotaExceeded);
+            }
+        }
+    }
+    // The healthy tenant still flows — same gateway, after the storm.
+    let mut healthy = GatewayClient::connect(&addr, 0).unwrap();
+    for corr in 0..4u64 {
+        assert!(
+            matches!(job(&mut healthy, corr), ClientReply::Accepted { .. }),
+            "healthy tenant was throttled by its neighbor"
+        );
+    }
+    // Unknown tenants are a distinct typed refusal.
+    let mut stranger = GatewayClient::connect(&addr, 99).unwrap();
+    match job(&mut stranger, 0) {
+        ClientReply::Rejected { reason, .. } => {
+            assert_eq!(reason, RejectReason::UnknownTenant)
+        }
+        other => panic!("unknown tenant admitted: {other:?}"),
+    }
+    let stats = gateway.shutdown();
+    assert_eq!(stats.accepted, 6);
+    assert_eq!(stats.completed, 6);
+    assert_eq!(
+        stats.rejected[RejectReason::QuotaExceeded.as_u8() as usize],
+        2
+    );
+    assert_eq!(
+        stats.rejected[RejectReason::UnknownTenant.as_u8() as usize],
+        1
+    );
+}
+
+/// S3: malformed submissions are refused at the door — no deployment is
+/// ever provisioned for them.
+#[test]
+fn malformed_submissions_never_touch_a_deployment() {
+    let _serial = serial();
+    let (gateway, engine, addr) = start_local(GatewayConfig::default());
+    let mut client = GatewayClient::connect(&addr, 0).unwrap();
+    // s=3 does not divide m=8: shape validation must fail at the door.
+    let reply = client
+        .call(7, 3, 2, 2, FpMat::zeros(8, 8), FpMat::zeros(8, 8))
+        .unwrap();
+    match reply {
+        ClientReply::Rejected { reason, corr, .. } => {
+            assert_eq!(reason, RejectReason::Malformed);
+            assert_eq!(corr, 7);
+        }
+        other => panic!("malformed job admitted: {other:?}"),
+    }
+    // The connection survives a malformed submission…
+    let reply = client
+        .call(8, 0, 0, 0, FpMat::zeros(4, 4), FpMat::zeros(4, 4))
+        .unwrap();
+    assert!(matches!(
+        reply,
+        ClientReply::Rejected {
+            reason: RejectReason::Malformed,
+            ..
+        }
+    ));
+    assert_eq!(engine.provisioned(), 0, "rejected jobs reached the engine");
+    let stats = gateway.shutdown();
+    assert_eq!(stats.accepted, 0);
+    assert_eq!(stats.rejected[RejectReason::Malformed.as_u8() as usize], 2);
+}
+
+/// S3: oversized frames are refused from the header alone, and the shape
+/// lock pins a gateway to its cluster's one signature.
+#[test]
+fn oversized_and_off_shape_submissions_are_typed_rejects() {
+    let _serial = serial();
+    let config = GatewayConfig {
+        max_payload_bytes: 1024,
+        ..GatewayConfig::default()
+    };
+    let (gateway, engine, addr) = start_local(config);
+    let mut client = GatewayClient::connect(&addr, 0).unwrap();
+    // m=64 ⇒ ~32 KiB payload, far over the 1 KiB cap.
+    let reply = client
+        .call(1, 2, 2, 2, FpMat::zeros(64, 64), FpMat::zeros(64, 64))
+        .unwrap();
+    match reply {
+        ClientReply::Rejected { reason, .. } => assert_eq!(reason, RejectReason::TooLarge),
+        other => panic!("oversized job admitted: {other:?}"),
+    }
+    assert_eq!(engine.provisioned(), 0);
+    let stats = gateway.shutdown();
+    assert_eq!(stats.rejected[RejectReason::TooLarge.as_u8() as usize], 1);
+
+    // Shape-locked gateway (the remote-cluster mode): only the pinned
+    // signature passes the door.
+    let config = GatewayConfig {
+        shape_lock: Some(BatchKey {
+            s: 2,
+            t: 2,
+            z: 2,
+            m: 8,
+        }),
+        ..GatewayConfig::default()
+    };
+    let (gateway, engine, addr) = start_local(config);
+    let mut client = GatewayClient::connect(&addr, 0).unwrap();
+    let reply = client
+        .call(2, 2, 2, 1, FpMat::zeros(4, 4), FpMat::zeros(4, 4))
+        .unwrap();
+    match reply {
+        ClientReply::Rejected { reason, .. } => assert_eq!(reason, RejectReason::Malformed),
+        other => panic!("off-shape job admitted: {other:?}"),
+    }
+    assert!(matches!(
+        client.call(3, 2, 2, 2, FpMat::zeros(8, 8), FpMat::zeros(8, 8)).unwrap(),
+        ClientReply::Accepted { .. }
+    ));
+    assert_eq!(engine.provisioned(), 1);
+    gateway.shutdown();
+}
+
+/// Acceptance (c): compatible concurrent submissions are observably
+/// batched onto one shared deployment.
+#[test]
+fn concurrent_compatible_jobs_batch_onto_one_deployment() {
+    let _serial = serial();
+    let config = GatewayConfig {
+        max_batch: 4,
+        // Window far beyond test scale: only a *full* batch flushes, so
+        // the four jobs provably ran as one batch.
+        max_wait: Duration::from_secs(30),
+        ..GatewayConfig::default()
+    };
+    let (gateway, engine, addr) = start_local(config);
+    std::thread::scope(|scope| {
+        for k in 0..4u64 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let (a, b) = job_matrices(77, k, 8);
+                let mut client = GatewayClient::connect(&addr, 0).unwrap();
+                let reply = client.call(k, 2, 2, 2, a, b).unwrap();
+                assert!(matches!(reply, ClientReply::Accepted { .. }));
+            });
+        }
+    });
+    assert_eq!(engine.provisioned(), 1, "compatible jobs split deployments");
+    let stats = gateway.shutdown();
+    assert_eq!(stats.accepted, 4);
+    assert_eq!(stats.batches, 1, "expected one shared batch");
+    assert_eq!(stats.batched_jobs, 4);
+    assert_eq!(stats.max_batch(), 4);
+    assert_eq!(stats.peak_queue_depth, 4);
+    assert_eq!(stats.queue_depth, 0);
+}
+
+/// The multi-tenant load driver end to end: concurrent tenants, digests
+/// byte-identical to direct computation of the same deterministic inputs.
+#[test]
+fn load_driver_digests_match_direct_computation() {
+    let _serial = serial();
+    let (gateway, _engine, addr) = start_local(GatewayConfig::default());
+    let plan = LoadPlan {
+        addr,
+        tenants: vec![0, 1],
+        jobs_per_tenant: 3,
+        m: 8,
+        s: 2,
+        t: 2,
+        z: 2,
+        seed: 123,
+        qps: None,
+    };
+    let report = run_load(&plan).unwrap();
+    assert_eq!(report.outcomes.len(), 6);
+    assert_eq!(report.accepted(), 6);
+    for o in &report.outcomes {
+        let (a, b) = job_matrices(plan.seed, o.job, plan.m);
+        match &o.reply {
+            ClientReply::Accepted { digest, y, .. } => {
+                assert_eq!(*y, a.transpose().matmul(&b));
+                assert_eq!(*digest, digest_mat(y));
+            }
+            ClientReply::Rejected { reason, detail, .. } => {
+                panic!("job {} rejected: {reason} ({detail})", o.job)
+            }
+        }
+    }
+    gateway.shutdown();
+}
+
+/// Acceptance (d): the gateway serves ≥ 64 concurrent connections with a
+/// fixed-size poller pool — the process thread count does not scale with
+/// connections.
+#[test]
+fn many_connections_do_not_spawn_threads() {
+    let _serial = serial();
+    let (gateway, _engine, addr) = start_local(GatewayConfig::default());
+    // Warm up: provision the deployment (and its worker threads) once.
+    let (a, b) = job_matrices(9, 0, 8);
+    let mut warm = GatewayClient::connect(&addr, 0).unwrap();
+    assert!(matches!(
+        warm.call(0, 2, 2, 2, a, b).unwrap(),
+        ClientReply::Accepted { .. }
+    ));
+    let baseline = os_thread_count();
+    std::thread::scope(|scope| {
+        for k in 0..64u64 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let (a, b) = job_matrices(9, k + 1, 8);
+                let mut client = GatewayClient::connect(&addr, 0).unwrap();
+                let reply = client.call(k + 1, 2, 2, 2, a, b).unwrap();
+                assert!(matches!(reply, ClientReply::Accepted { .. }));
+            });
+        }
+    });
+    if let (Some(before), Some(after)) = (baseline, os_thread_count()) {
+        assert_eq!(
+            before, after,
+            "thread count scaled with connection count"
+        );
+    }
+    let stats = gateway.shutdown();
+    assert!(
+        stats.connections >= 65,
+        "expected ≥65 connections, saw {}",
+        stats.connections
+    );
+    assert_eq!(stats.accepted, 65);
+    assert_eq!(stats.completed, 65);
+}
