@@ -20,14 +20,17 @@
 //! multi-tenant load driver pushes concurrent closed-loop tenants through
 //! a loopback serving gateway (admission → batcher → shared deployment)
 //! and reports sustained QPS, gateway-observed p50/p99 latency, and the
-//! batching profile straight from `GatewayStats`. Results are printed in
-//! the in-tree bench format *and* emitted as machine-readable
-//! `BENCH_6.json` so later PRs can diff the trajectory.
+//! batching profile straight from `GatewayStats`. PR 7 adds a
+//! **byzantine** scenario: clean-run e2e at adversary tolerance a=0/1/2 —
+//! the raised `t²+z+2a` recovery quota plus the fingerprint error-locator
+//! pass — reported as overhead against the a=0 baseline. Results are
+//! printed in the in-tree bench format *and* emitted as machine-readable
+//! `BENCH_7.json` so later PRs can diff the trajectory.
 //!
 //! Usage (from `rust/`):
 //!
 //! ```sh
-//! cargo bench --bench perf_core                      # full run → ../BENCH_6.json
+//! cargo bench --bench perf_core                      # full run → ../BENCH_7.json
 //! cargo bench --bench perf_core -- --smoke --out /tmp/b.json   # CI schema smoke
 //! ```
 
@@ -289,6 +292,7 @@ fn run_gateway(tenants: usize, jobs_per_tenant: usize, m: usize) -> GatewayCase 
         s: 2,
         t: 2,
         z: 2,
+        adv: 0,
         seed: 0x6A7E,
         qps: None,
     };
@@ -322,6 +326,68 @@ fn run_gateway(tenants: usize, jobs_per_tenant: usize, m: usize) -> GatewayCase 
         case.max_batch,
     );
     case
+}
+
+struct ByzantineCase {
+    adversary_tolerance: usize,
+    m: usize,
+    /// Best-of-iters clean-run e2e at recovery quota `t²+z+2a`.
+    e2e_ns: u64,
+    /// Reconstruction window of the best run — includes the per-share
+    /// fingerprinting and the error-locator pass when `a > 0`.
+    decode_ns: u64,
+    /// `e2e_ns / e2e_ns(a=0)` from the same sweep — what the Byzantine
+    /// margin costs when nobody actually cheats (1.0 for a=0).
+    overhead_vs_a0: f64,
+}
+
+/// Byzantine decode overhead: the same job at adversary tolerance `adv`,
+/// no corruption injected — measures the price of the raised quota (two
+/// extra I-share waits per tolerated adversary) plus the locator pass.
+fn run_byzantine(adv: usize, m: usize, iters: usize, baseline_ns: Option<u64>) -> ByzantineCase {
+    let params = SchemeParams::new(2, 2, 2);
+    let mut rng = ChaChaRng::seed_from_u64(0xB7);
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    let dep = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::builder()
+            .verify(false)
+            .adversary_tolerance(adv)
+            .build(),
+    )
+    .expect("provision");
+    dep.execute_seeded(&a, &b, 1).expect("warmup");
+    let mut best = u64::MAX;
+    let mut decode_ns = 0u64;
+    for i in 0..iters {
+        let t0 = Instant::now();
+        let out = dep
+            .execute_seeded(&a, &b, 2 + i as u64)
+            .expect("byzantine job");
+        let e2e = ns(t0.elapsed());
+        assert!(
+            out.blamed_workers.is_empty(),
+            "clean run blamed a worker at a={adv}"
+        );
+        if e2e < best {
+            best = e2e;
+            decode_ns = ns(out.timings.phase3_reconstruct);
+        }
+    }
+    let overhead = best as f64 / baseline_ns.unwrap_or(best).max(1) as f64;
+    println!(
+        "bench perf_core/byzantine a={adv} m={m}          e2e={best}ns decode={decode_ns}ns \
+         overhead_vs_a0={overhead:.2}"
+    );
+    ByzantineCase {
+        adversary_tolerance: adv,
+        m,
+        e2e_ns: best,
+        decode_ns,
+        overhead_vs_a0: overhead,
+    }
 }
 
 fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut Vec<Case>) {
@@ -402,7 +468,7 @@ fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut V
 
 fn main() {
     let mut smoke = false;
-    let mut out_path = String::from("../BENCH_6.json");
+    let mut out_path = String::from("../BENCH_7.json");
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -452,12 +518,18 @@ fn main() {
     } else {
         vec![run_gateway(2, 16, 32), run_gateway(4, 16, 32)]
     };
+    let (byz_m, byz_iters) = if smoke { (16, 2) } else { (64, 3) };
+    let mut byzantine: Vec<ByzantineCase> = Vec::new();
+    for adv in [0usize, 1, 2] {
+        let baseline = byzantine.first().map(|c| c.e2e_ns);
+        byzantine.push(run_byzantine(adv, byz_m, byz_iters, baseline));
+    }
 
     let host_threads = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1) as u64;
     let json = Json::obj(vec![
-        ("schema", Json::Str("cmpc.bench.v6".to_string())),
+        ("schema", Json::Str("cmpc.bench.v7".to_string())),
         ("benchmark", Json::Str("perf_core".to_string())),
         ("provenance", Json::Str("measured".to_string())),
         (
@@ -576,6 +648,26 @@ fn main() {
                                     c.batch_size_hist.iter().map(|&v| Json::Int(v)).collect(),
                                 ),
                             ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "byzantine",
+            Json::Arr(
+                byzantine
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            (
+                                "adversary_tolerance",
+                                Json::Int(c.adversary_tolerance as u64),
+                            ),
+                            ("m", Json::Int(c.m as u64)),
+                            ("e2e_ns", Json::Int(c.e2e_ns)),
+                            ("decode_ns", Json::Int(c.decode_ns)),
+                            ("overhead_vs_a0", Json::Float(c.overhead_vs_a0)),
                         ])
                     })
                     .collect(),

@@ -153,6 +153,14 @@ impl AgeCmpc {
         best.1
     }
 
+    /// The same instance with Byzantine adversary tolerance `a` (see
+    /// [`SchemeParams::with_adversary_tolerance`]). Construction is
+    /// unaffected — only the master's recovery quota rises to `t²+z+2a`.
+    pub fn with_adversary_tolerance(mut self, a: usize) -> AgeCmpc {
+        self.params.adversary_tolerance = a;
+        self
+    }
+
     /// `θ = ts + λ`.
     #[inline]
     pub fn theta(&self) -> u64 {

@@ -44,6 +44,13 @@ impl EntangledCmpc {
         }
     }
 
+    /// The same instance with Byzantine adversary tolerance `a` (see
+    /// [`SchemeParams::with_adversary_tolerance`]).
+    pub fn with_adversary_tolerance(mut self, a: usize) -> EntangledCmpc {
+        self.inner = self.inner.with_adversary_tolerance(a);
+        self
+    }
+
     /// `deg(H) = deg(F_A) + deg(F_B)`.
     pub fn degree_h(&self) -> u64 {
         max_power(&self.inner.support_a()).unwrap() + max_power(&self.inner.support_b()).unwrap()

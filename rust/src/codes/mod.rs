@@ -50,13 +50,22 @@ pub struct SchemeParams {
     pub s: usize,
     pub t: usize,
     pub z: usize,
+    /// Byzantine adversary tolerance `a`: how many *garbled* (not merely
+    /// dead) worker shares the master can locate and exclude during
+    /// reconstruction. Raises the recovery quota from `t²+z` to `t²+z+2a`
+    /// — the Reed–Solomon unique-decoding bound: `2a` extra evaluations
+    /// buy location + correction of up to `a` errors. `0` (the default)
+    /// keeps the erasure-only decode byte-identical to previous releases.
+    pub adversary_tolerance: usize,
 }
 
 impl SchemeParams {
     /// Validated construction — the serving path's entry point. Rejects
     /// degenerate partitions (`s = 0`, `t = 0`) and `z = 0` (the paper
     /// assumes at least one colluding worker; `z = 0` would need no secret
-    /// terms at all and a different construction).
+    /// terms at all and a different construction). Adversary tolerance
+    /// starts at `0`; raise it with
+    /// [`SchemeParams::with_adversary_tolerance`].
     pub fn try_new(s: usize, t: usize, z: usize) -> Result<SchemeParams> {
         if s < 1 || t < 1 {
             return Err(CmpcError::InvalidParams(format!(
@@ -68,7 +77,12 @@ impl SchemeParams {
                 "need z >= 1 colluding workers".to_string(),
             ));
         }
-        Ok(SchemeParams { s, t, z })
+        Ok(SchemeParams {
+            s,
+            t,
+            z,
+            adversary_tolerance: 0,
+        })
     }
 
     /// Infallible construction for statically-known-good parameters
@@ -81,6 +95,18 @@ impl SchemeParams {
             Ok(p) => p,
             Err(e) => panic!("{e}"),
         }
+    }
+
+    /// The same parameters with Byzantine adversary tolerance `a`.
+    pub fn with_adversary_tolerance(mut self, a: usize) -> SchemeParams {
+        self.adversary_tolerance = a;
+        self
+    }
+
+    /// Shares the master must collect before reconstruction can start:
+    /// `t²+z` (the erasure quota) plus `2·a` error-correction margin.
+    pub fn recovery_quota(&self) -> usize {
+        self.t * self.t + self.z + 2 * self.adversary_tolerance
     }
 }
 

@@ -72,6 +72,13 @@ impl PolyDotCmpc {
         scheme
     }
 
+    /// The same instance with Byzantine adversary tolerance `a` (see
+    /// [`SchemeParams::with_adversary_tolerance`]).
+    pub fn with_adversary_tolerance(mut self, a: usize) -> PolyDotCmpc {
+        self.params.adversary_tolerance = a;
+        self
+    }
+
     /// `θ' = t(2s − 1)`.
     #[inline]
     pub fn theta_prime(&self) -> u64 {

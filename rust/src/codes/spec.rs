@@ -48,18 +48,28 @@ impl SchemeSpec {
         }
     }
 
-    /// Instantiate this family for `params`.
+    /// Instantiate this family for `params` (Byzantine adversary tolerance
+    /// rides along onto the resolved instance).
     pub fn resolve(&self, params: SchemeParams) -> Result<Arc<dyn CmpcScheme>> {
-        let SchemeParams { s, t, z } = params;
+        let SchemeParams {
+            s,
+            t,
+            z,
+            adversary_tolerance: a,
+        } = params;
         let scheme: Arc<dyn CmpcScheme> = match *self {
             SchemeSpec::Age { lambda: None } => {
-                Arc::new(AgeCmpc::try_with_optimal_lambda(s, t, z)?)
+                Arc::new(AgeCmpc::try_with_optimal_lambda(s, t, z)?.with_adversary_tolerance(a))
             }
             SchemeSpec::Age { lambda: Some(l) } => {
-                Arc::new(AgeCmpc::try_new(s, t, z, l as u64)?)
+                Arc::new(AgeCmpc::try_new(s, t, z, l as u64)?.with_adversary_tolerance(a))
             }
-            SchemeSpec::PolyDot => Arc::new(PolyDotCmpc::try_new(s, t, z)?),
-            SchemeSpec::Entangled => Arc::new(EntangledCmpc::try_new(s, t, z)?),
+            SchemeSpec::PolyDot => {
+                Arc::new(PolyDotCmpc::try_new(s, t, z)?.with_adversary_tolerance(a))
+            }
+            SchemeSpec::Entangled => {
+                Arc::new(EntangledCmpc::try_new(s, t, z)?.with_adversary_tolerance(a))
+            }
         };
         Ok(scheme)
     }

@@ -1,8 +1,9 @@
 //! Request batching — compatible in-flight submissions share a deployment.
 //!
-//! Admitted jobs queue under their **batch signature** `(s, t, z, m)` —
-//! the same key `Coordinator::drain` groups by, plus the matrix size
-//! (which fixes the compute shape). The dispatcher thread pulls one batch
+//! Admitted jobs queue under their **batch signature** `(s, t, z, adv, m)`
+//! — the same key `Coordinator::drain` groups by, plus the adversary
+//! tolerance (which fixes the recovery quota) and the matrix size (which
+//! fixes the compute shape). The dispatcher thread pulls one batch
 //! at a time: a queue flushes the moment it reaches `max_batch`, or when
 //! its **oldest** job has waited `max_wait` (the batching window — a
 //! lone request is never held hostage waiting for company), or
@@ -20,13 +21,17 @@ use crate::matrix::FpMat;
 use super::poller::ConnHandle;
 
 /// The compatibility signature: jobs batch together iff these agree.
-/// (The scheme policy is fixed per gateway, so `(s, t, z)` determines the
-/// resolved scheme — same argument as the coordinator's cache key.)
+/// (The scheme policy is fixed per gateway, so `(s, t, z, adv)` determines
+/// the resolved scheme — same argument as the coordinator's cache key.
+/// `adv` is the adversary tolerance: jobs demanding different Byzantine
+/// quotas must not share a deployment, since the quota is provisioned
+/// into the master's receive loop.)
 #[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct BatchKey {
     pub s: usize,
     pub t: usize,
     pub z: usize,
+    pub adv: usize,
     pub m: usize,
 }
 
@@ -155,7 +160,13 @@ mod tests {
     use super::*;
 
     fn key(m: usize) -> BatchKey {
-        BatchKey { s: 2, t: 2, z: 2, m }
+        BatchKey {
+            s: 2,
+            t: 2,
+            z: 2,
+            adv: 0,
+            m,
+        }
     }
 
     fn job(conn: &Arc<ConnHandle>, corr: u64, m: usize) -> BatchJob {

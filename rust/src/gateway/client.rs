@@ -74,13 +74,16 @@ impl GatewayClient {
     }
 
     /// Fire one submission; the reply (matched by `corr`) comes back via
-    /// [`GatewayClient::recv`].
+    /// [`GatewayClient::recv`]. `adv` is the adversary tolerance the
+    /// decode must honor (0 = plain crash-fault decoding).
+    #[allow(clippy::too_many_arguments)]
     pub fn submit(
         &mut self,
         corr: u64,
         s: usize,
         t: usize,
         z: usize,
+        adv: usize,
         a: FpMat,
         b: FpMat,
     ) -> Result<()> {
@@ -89,7 +92,7 @@ impl GatewayClient {
             &ClientFrame {
                 corr,
                 tenant: self.tenant,
-                msg: ClientMsg::Submit { s, t, z, a, b },
+                msg: ClientMsg::Submit { s, t, z, adv, a, b },
             },
             &mut self.scratch,
         )?;
@@ -117,7 +120,7 @@ impl GatewayClient {
                 reason,
                 detail,
             }),
-            ClientMsg::Submit { .. } | ClientMsg::Shutdown => Err(CmpcError::Io(
+            ClientMsg::Submit { .. } | ClientMsg::Shutdown { .. } => Err(CmpcError::Io(
                 "gateway sent a request-plane frame to a client".to_string(),
             )),
         }
@@ -131,21 +134,42 @@ impl GatewayClient {
         s: usize,
         t: usize,
         z: usize,
+        adv: usize,
         a: FpMat,
         b: FpMat,
     ) -> Result<ClientReply> {
-        self.submit(corr, s, t, z, a, b)?;
+        self.submit(corr, s, t, z, adv, a, b)?;
         self.recv()
     }
 
     /// Ask the gateway to drain and stop (the CI lane's clean teardown).
-    pub fn shutdown_gateway(mut self) -> Result<()> {
+    /// `token` must match the gateway's `gateway_token` manifest line; a
+    /// mismatch comes back as a [`RejectReason::Unauthorized`] reply on
+    /// [`GatewayClient::recv`] and the gateway keeps serving. Consumes
+    /// the client by value: an accepted shutdown closes the connection.
+    pub fn shutdown_gateway(mut self, token: u64) -> Result<()> {
         write_client_frame(
             &mut self.stream,
             &ClientFrame {
                 corr: 0,
                 tenant: self.tenant,
-                msg: ClientMsg::Shutdown,
+                msg: ClientMsg::Shutdown { token },
+            },
+            &mut self.scratch,
+        )?;
+        Ok(())
+    }
+
+    /// Like [`GatewayClient::shutdown_gateway`] but keeps the client, so
+    /// callers can observe the gateway's answer to a rejected (or
+    /// accepted) shutdown on the same connection.
+    pub fn request_shutdown(&mut self, token: u64) -> Result<()> {
+        write_client_frame(
+            &mut self.stream,
+            &ClientFrame {
+                corr: 0,
+                tenant: self.tenant,
+                msg: ClientMsg::Shutdown { token },
             },
             &mut self.scratch,
         )?;
@@ -168,6 +192,9 @@ pub struct LoadPlan {
     pub s: usize,
     pub t: usize,
     pub z: usize,
+    /// Adversary tolerance every submission carries (must match the
+    /// serving manifest's `adversary_tolerance` under a shape lock).
+    pub adv: usize,
     /// Must match the reference's manifest seed for digests to diff.
     pub seed: u64,
     /// `None` = closed loop (submit → wait → next; deterministic order,
@@ -248,7 +275,7 @@ fn drive_tenant(plan: &LoadPlan, tenant_idx: usize) -> Result<Vec<JobOutcome>> {
             for &job in &jobs {
                 let (a, b) = job_matrices(plan.seed, job, plan.m);
                 let t0 = Instant::now();
-                let reply = client.call(job, plan.s, plan.t, plan.z, a, b)?;
+                let reply = client.call(job, plan.s, plan.t, plan.z, plan.adv, a, b)?;
                 if reply.corr() != job {
                     return Err(CmpcError::Io(format!(
                         "gateway answered corr {} to submission {job}",
@@ -276,7 +303,7 @@ fn drive_tenant(plan: &LoadPlan, tenant_idx: usize) -> Result<Vec<JobOutcome>> {
                 }
                 let (a, b) = job_matrices(plan.seed, job, plan.m);
                 submitted_at.insert(job, Instant::now());
-                client.submit(job, plan.s, plan.t, plan.z, a, b)?;
+                client.submit(job, plan.s, plan.t, plan.z, plan.adv, a, b)?;
             }
             for _ in 0..jobs.len() {
                 let reply = client.recv()?;
@@ -342,6 +369,7 @@ mod tests {
             s: 2,
             t: 2,
             z: 2,
+            adv: 0,
             seed: 7,
             qps: None,
         })

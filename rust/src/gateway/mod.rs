@@ -19,8 +19,9 @@
 //! * **Admission** ([`admission`]) — per-tenant token buckets + pending
 //!   caps; refusals are typed ([`RejectReason`]) and leave the connection
 //!   usable.
-//! * **Batching** ([`batcher`]) — admitted jobs group by `(s, t, z, m)`
-//!   signature and execute as one batch on one shared [`Deployment`]
+//! * **Batching** ([`batcher`]) — admitted jobs group by
+//!   `(s, t, z, adv, m)` signature and execute as one batch on one shared
+//!   [`Deployment`]
 //!   (generalizing `Coordinator::drain`'s grouping to concurrent network
 //!   clients), with a `max_wait` window so a lone request never stalls.
 //! * **Multiplexing** ([`poller`]) — a fixed accept + poller thread set
@@ -94,10 +95,15 @@ pub struct GatewayConfig {
     /// Tenant quota table; empty = open admission (see
     /// [`admission::Admission`]).
     pub tenants: Vec<TenantQuota>,
-    /// When set, only submissions matching this exact `(s, t, z, m)`
+    /// When set, only submissions matching this exact `(s, t, z, adv, m)`
     /// signature are accepted — the remote-cluster mode, where the
     /// provisioned worker set serves one manifest shape.
     pub shape_lock: Option<BatchKey>,
+    /// When set, a client `Shutdown` frame must carry this token
+    /// (`gateway_token` manifest line); mismatches are refused with
+    /// [`RejectReason::Unauthorized`] and the gateway keeps serving.
+    /// `None` = any token stops the gateway (single-operator rigs).
+    pub shutdown_token: Option<u64>,
 }
 
 impl Default for GatewayConfig {
@@ -109,6 +115,7 @@ impl Default for GatewayConfig {
             max_payload_bytes: 64 * 1024 * 1024,
             tenants: Vec::new(),
             shape_lock: None,
+            shutdown_token: None,
         }
     }
 }
@@ -134,13 +141,13 @@ pub trait ExecuteEngine: Send + Sync {
 
 // ------------------------------------------------------------ local engine
 
-/// In-process execution: one cached [`Deployment`] per `(s, t, z)`
+/// In-process execution: one cached [`Deployment`] per `(s, t, z, adv)`
 /// signature, batches fanned across the shared worker pool — the same
 /// shape as `Coordinator::drain`, minus the intake queue (the gateway's
 /// batcher replaced it).
 pub struct LocalEngine {
     config: CoordinatorConfig,
-    deployments: Mutex<BTreeMap<(usize, usize, usize), Arc<Deployment>>>,
+    deployments: Mutex<BTreeMap<(usize, usize, usize, usize), Arc<Deployment>>>,
     factory: Mutex<Option<Arc<BackendFactory>>>,
     pool: Arc<WorkerPool>,
 }
@@ -173,11 +180,12 @@ impl LocalEngine {
     }
 
     fn deployment_for(&self, key: BatchKey) -> Result<Arc<Deployment>> {
-        let sig = (key.s, key.t, key.z);
+        let sig = (key.s, key.t, key.z, key.adv);
         if let Some(dep) = self.deployments.lock().unwrap().get(&sig) {
             return Ok(dep.clone());
         }
-        let params = SchemeParams::try_new(key.s, key.t, key.z)?;
+        let params =
+            SchemeParams::try_new(key.s, key.t, key.z)?.with_adversary_tolerance(key.adv);
         let scheme = match self.config.policy {
             SchemePolicy::Fixed(spec) => spec.resolve(params)?,
             SchemePolicy::Adaptive => crate::codes::SchemeSpec::resolve_adaptive(params)?,
@@ -284,6 +292,7 @@ impl RemoteEngine {
             s: self.manifest.s,
             t: self.manifest.t,
             z: self.manifest.z,
+            adv: self.manifest.adversary_tolerance,
             m: self.manifest.m,
         }
     }
@@ -339,6 +348,7 @@ impl RemoteEngine {
                 n,
                 self.params.t,
                 self.params.z,
+                self.params.adversary_tolerance,
                 self.manifest.recv_timeout,
                 self.manifest.early_decode,
                 &counters,
@@ -422,6 +432,7 @@ struct GatewayInner {
     engine: Arc<dyn ExecuteEngine>,
     stop: Arc<AtomicBool>,
     shape_lock: Option<BatchKey>,
+    shutdown_token: Option<u64>,
 }
 
 impl GatewayInner {
@@ -441,6 +452,7 @@ impl GatewayInner {
         });
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn handle_submit(
         &self,
         conn: &Arc<ConnHandle>,
@@ -449,6 +461,7 @@ impl GatewayInner {
         s: usize,
         t: usize,
         z: usize,
+        adv: usize,
         a: FpMat,
         b: FpMat,
     ) {
@@ -461,7 +474,13 @@ impl GatewayInner {
                 "gateway is draining".to_string(),
             );
         }
-        let key = BatchKey { s, t, z, m: a.rows };
+        let key = BatchKey {
+            s,
+            t,
+            z,
+            adv,
+            m: a.rows,
+        };
         if let Some(lock) = self.shape_lock {
             if key != lock {
                 return self.reject(
@@ -470,9 +489,9 @@ impl GatewayInner {
                     tenant,
                     RejectReason::Malformed,
                     format!(
-                        "this gateway serves only (s={}, t={}, z={}, m={}) \
-                         (got s={s}, t={t}, z={z}, m={})",
-                        lock.s, lock.t, lock.z, lock.m, a.rows
+                        "this gateway serves only (s={}, t={}, z={}, adv={}, m={}) \
+                         (got s={s}, t={t}, z={z}, adv={adv}, m={})",
+                        lock.s, lock.t, lock.z, lock.adv, lock.m, a.rows
                     ),
                 );
             }
@@ -555,11 +574,25 @@ impl Sink for GatewayInner {
 
     fn on_frame(&self, conn: &Arc<ConnHandle>, frame: ClientFrame) -> FrameOutcome {
         match frame.msg {
-            ClientMsg::Submit { s, t, z, a, b } => {
-                self.handle_submit(conn, frame.corr, frame.tenant, s, t, z, a, b);
+            ClientMsg::Submit { s, t, z, adv, a, b } => {
+                self.handle_submit(conn, frame.corr, frame.tenant, s, t, z, adv, a, b);
                 FrameOutcome::Continue
             }
-            ClientMsg::Shutdown => {
+            ClientMsg::Shutdown { token } => {
+                if let Some(expected) = self.shutdown_token {
+                    if token != expected {
+                        // Wrong token: typed refusal, connection stays
+                        // usable, gateway keeps serving.
+                        self.reject(
+                            conn,
+                            frame.corr,
+                            frame.tenant,
+                            RejectReason::Unauthorized,
+                            "shutdown refused: admin token mismatch".to_string(),
+                        );
+                        return FrameOutcome::Continue;
+                    }
+                }
                 self.stop.store(true, Ordering::Release);
                 self.batcher.stop();
                 FrameOutcome::CloseAfterFlush
@@ -605,6 +638,9 @@ pub struct Gateway {
     inner: Arc<GatewayInner>,
     pollers: Option<PollerPool>,
     dispatcher: Option<JoinHandle<()>>,
+    /// Final-flush signal for the pollers — set only after the dispatcher
+    /// joins, so teardown never races responses into a closed outbox.
+    flush: Arc<AtomicBool>,
     local_addr: SocketAddr,
 }
 
@@ -634,7 +670,9 @@ impl Gateway {
             engine,
             stop: Arc::new(AtomicBool::new(false)),
             shape_lock: config.shape_lock,
+            shutdown_token: config.shutdown_token,
         });
+        let flush = Arc::new(AtomicBool::new(false));
         let sink: Arc<dyn Sink> = inner.clone();
         let pollers = PollerPool::spawn(
             listener,
@@ -642,6 +680,7 @@ impl Gateway {
             config.max_payload_bytes.min(crate::transport::wire::MAX_FRAME_PAYLOAD),
             sink,
             inner.stop.clone(),
+            flush.clone(),
         )?;
         let local_addr = pollers.local_addr();
         let dispatcher = {
@@ -660,6 +699,7 @@ impl Gateway {
             inner,
             pollers: Some(pollers),
             dispatcher: Some(dispatcher),
+            flush,
             local_addr,
         })
     }
@@ -687,20 +727,32 @@ impl Gateway {
         }
     }
 
-    /// Drain and stop: queued jobs finish, queued responses get a bounded
-    /// flush window, every gateway thread joins, the engine tears down.
-    /// Returns the final stats snapshot.
+    /// Drain and stop: intake closes first, every queued job finishes and
+    /// its `Result`/`Reject` frame is queued, and only then do the pollers
+    /// run their bounded final flush and drop connections. Returns the
+    /// final stats snapshot.
     pub fn shutdown(mut self) -> GatewayStats {
         self.stop_and_join();
         self.inner.counters.snapshot()
     }
 
     fn stop_and_join(&mut self) {
+        // Phase 1 — stop intake: new submissions get ShuttingDown rejects,
+        // the acceptor exits, and the batcher wakes the dispatcher to
+        // drain its queues. Pollers keep sweeping (reads and writes), so
+        // responses produced during the drain still reach their clients.
         self.inner.stop.store(true, Ordering::Release);
         self.inner.batcher.stop();
+        // Phase 2 — wait for the dispatcher: once it joins, every admitted
+        // job has executed and its response bytes sit in some outbox.
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
+        // Phase 3 — final flush: the pollers push the queued bytes out
+        // (bounded by the drain budget for slow/dead clients) and drop
+        // the connections. Nothing can race in behind the deadline,
+        // because nothing upstream is still producing.
+        self.flush.store(true, Ordering::Release);
         if let Some(p) = self.pollers.take() {
             p.join();
         }

@@ -38,7 +38,10 @@ const IDLE_PARK: Duration = Duration::from_micros(300);
 /// Read granularity per non-blocking `read` call.
 const READ_BUF: usize = 64 * 1024;
 
-/// Budget for flushing queued responses after stop is signalled.
+/// Budget for the final outbox flush after `flush` is signalled. By then
+/// the dispatcher has already joined, so every `Result`/`Reject` frame is
+/// sitting in some connection's outbox — this deadline only bounds slow
+/// or dead clients, not in-flight work.
 const DRAIN_BUDGET: Duration = Duration::from_secs(2);
 
 /// What the sink wants done with the connection after a callback.
@@ -132,12 +135,19 @@ pub(crate) struct PollerPool {
 impl PollerPool {
     /// Bind-free constructor: the caller provides the listener (so tests
     /// bind port 0 and read the real address back).
+    /// `stop` halts intake (the acceptor exits; new connections are no
+    /// longer registered) while pollers keep sweeping, so responses to
+    /// already-admitted jobs still flow. `flush` then moves the pollers
+    /// into their final bounded outbox drain — the gateway sets it only
+    /// after the dispatcher has joined, which is what makes teardown
+    /// lossless for every queued response.
     pub(crate) fn spawn(
         listener: TcpListener,
         threads: usize,
         max_payload: usize,
         sink: Arc<dyn Sink>,
         stop: Arc<AtomicBool>,
+        flush: Arc<AtomicBool>,
     ) -> Result<PollerPool> {
         let threads = threads.max(1);
         let local_addr = listener
@@ -162,10 +172,11 @@ impl PollerPool {
         for (p, inbox) in inboxes.into_iter().enumerate() {
             let sink = sink.clone();
             let stop = stop.clone();
+            let flush = flush.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("cmpc-gw-poll-{p}"))
-                    .spawn(move || poll_loop(inbox, max_payload, sink, stop))
+                    .spawn(move || poll_loop(inbox, max_payload, sink, stop, flush))
                     .map_err(|e| CmpcError::Io(format!("spawning gateway poller {p}: {e}")))?,
             );
         }
@@ -220,10 +231,16 @@ fn poll_loop(
     max_payload: usize,
     sink: Arc<dyn Sink>,
     stop: Arc<AtomicBool>,
+    flush: Arc<AtomicBool>,
 ) {
     let mut conns: Vec<Conn> = Vec::new();
     let mut scratch = vec![0u8; READ_BUF];
-    loop {
+    // Main loop runs until the *flush* signal — under `stop` alone the
+    // poller keeps serving existing connections (reads included, so
+    // in-flight submissions get their ShuttingDown rejects), it just
+    // registers no new ones. The dispatcher may still be producing
+    // Result frames during this window; exiting here would lose them.
+    while !flush.load(Ordering::Acquire) {
         let stopping = stop.load(Ordering::Acquire);
         let mut progress = false;
         if !stopping {
@@ -248,14 +265,12 @@ fn poll_loop(
             }
             keep
         });
-        if stopping {
-            break;
-        }
         if !progress {
             std::thread::sleep(IDLE_PARK);
         }
     }
-    // Stop requested: give already-queued responses a bounded chance to
+    // Flush requested: every response is already queued (the dispatcher
+    // joined before the signal), so give outboxes a bounded window to
     // reach their clients, then drop everything.
     let deadline = Instant::now() + DRAIN_BUDGET;
     while !conns.is_empty() && Instant::now() < deadline {

@@ -30,6 +30,7 @@ use cmpc::coordinator::{build_scheme, Coordinator, CoordinatorConfig, SchemePoli
 use cmpc::gateway::client::{run_load, ClientReply, GatewayClient, LoadPlan};
 use cmpc::gateway::{ExecuteEngine, Gateway, GatewayConfig, LocalEngine, RemoteEngine};
 use cmpc::matrix::FpMat;
+use cmpc::mpc::chaos::{ChaosPlan, FaultAction, FaultRule, PayloadClass};
 use cmpc::mpc::deployment::Deployment;
 use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::runtime::manifest::TopologyManifest;
@@ -54,20 +55,23 @@ fn main() {
             eprintln!(
                 "usage: cmpc <info|run|serve|topology|node|gateway|client|figures> [options]\n\
                  \n\
-                 info     --s S --t T --z Z\n\
-                 run      --m M --s S --t T --z Z [--scheme age|polydot|entangled|adaptive]\n\
+                 info     --s S --t T --z Z [--a A]\n\
+                 run      --m M --s S --t T --z Z [--a A]\n\
+                 \x20        [--scheme age|polydot|entangled|adaptive]\n\
                  \x20        [--backend native|pjrt] [--artifacts DIR] [--seed N]\n\
                  serve    --jobs J --m M --s S --t T --z Z [--backend ...]\n\
                  topology --scheme age|polydot|entangled --s S --t T --z Z --m M [--seed N]\n\
-                 \x20        [--jobs J] [--host H] --base-port P [--early-decode] --out FILE\n\
+                 \x20        [--jobs J] [--host H] --base-port P [--early-decode]\n\
+                 \x20        [--a A] [--gateway-token TOK] --out FILE\n\
                  \x20        (prints the worker count N; manifest lists every node's host:port)\n\
                  node     --role worker|master|source-a|source-b|reference --manifest FILE\n\
-                 \x20        [--index I]   (worker role only; run one process per party)\n\
+                 \x20        [--index I] [--garble-ishare]   (worker role only)\n\
                  gateway  --manifest FILE [--engine local|cluster] [--listen H:P]\n\
                  \x20        [--pollers N] [--max-batch N] [--max-wait-ms MS] [--backend ...]\n\
-                 \x20        (serves clients until one sends a shutdown frame)\n\
+                 \x20        (serves clients until one sends an authorized shutdown frame)\n\
                  client   --addr H:P [--tenants 0,1,..] [--jobs-per-tenant J] --m M\n\
-                 \x20        --s S --t T --z Z [--seed N] [--qps Q] [--shutdown]\n\
+                 \x20        --s S --t T --z Z [--a A] [--seed N] [--qps Q]\n\
+                 \x20        [--shutdown] [--token TOK]\n\
                  figures  [--out DIR] [--zmax Z]"
             );
             std::process::exit(2);
@@ -102,10 +106,19 @@ fn parse_backend(args: &Args) -> BackendChoice {
 
 fn cmd_info(args: &Args) -> Result<()> {
     let (s, t, z) = parse_stz(args);
-    println!(
-        "CMPC worker requirements at s={s}, t={t}, z={z}  (t²+z = {} shares to decode)\n",
-        t * t + z
-    );
+    let a: usize = args.get_parse("a", 0usize);
+    if a == 0 {
+        println!(
+            "CMPC worker requirements at s={s}, t={t}, z={z}  (t²+z = {} shares to decode)\n",
+            t * t + z
+        );
+    } else {
+        println!(
+            "CMPC worker requirements at s={s}, t={t}, z={z}, a={a}  \
+             (recovery quota t²+z+2a = {} shares to locate {a} garbled and decode)\n",
+            t * t + z + 2 * a
+        );
+    }
     println!("{:<18} {:>9}  notes", "scheme", "N");
     for kind in SchemeKind::ALL {
         let n = analysis::n_workers(kind, s, t, z);
@@ -135,7 +148,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (s, t, z) = parse_stz(args);
     let m: usize = args.get_parse("m", 64);
     let seed: u64 = args.get_parse("seed", 7);
-    let params = SchemeParams::try_new(s, t, z)?;
+    let adv: usize = args.get_parse("a", 0usize);
+    let params = SchemeParams::try_new(s, t, z)?.with_adversary_tolerance(adv);
     let scheme: Arc<dyn CmpcScheme> = match args.get("scheme").unwrap_or("age") {
         "age" => SchemeSpec::Age { lambda: None }.resolve(params)?,
         "polydot" => SchemeSpec::PolyDot.resolve(params)?,
@@ -234,6 +248,13 @@ fn cmd_topology(args: &Args) -> Result<()> {
     let out = args.get("out").map(PathBuf::from);
     let mut manifest = TopologyManifest::template(scheme, s, t, z, m, seed, jobs, host, base_port)?;
     manifest.early_decode = args.flag("early-decode");
+    manifest.adversary_tolerance = args.get_parse("a", 0usize);
+    if let Some(tok) = args.get("gateway-token") {
+        manifest.gateway_token = Some(
+            tok.parse()
+                .map_err(|_| CmpcError::InvalidParams("bad --gateway-token".to_string()))?,
+        );
+    }
     if let Some(ms) = args.get("recv-timeout-ms") {
         manifest.recv_timeout = std::time::Duration::from_millis(
             ms.parse()
@@ -282,10 +303,34 @@ fn cmd_node(args: &Args) -> Result<()> {
         })
         .transpose()?;
     let role = NodeRole::parse(role, index)?;
-    match node::run_role(role, &manifest)? {
+    let chaos = if args.flag("garble-ishare") {
+        let NodeRole::Worker(i) = role else {
+            return Err(CmpcError::InvalidParams(
+                "--garble-ishare applies to the worker role only".to_string(),
+            ));
+        };
+        Some(
+            ChaosPlan::new()
+                .rule(
+                    FaultRule::new(FaultAction::Garble)
+                        .from_node(i)
+                        .class(PayloadClass::IShare)
+                        .limit(1),
+                )
+                .into_shared(),
+        )
+    } else {
+        None
+    };
+    match node::run_role(role, &manifest, chaos)? {
         Some(report) => {
             for j in &report.jobs {
                 println!("job {} digest 0x{:016x}", j.job, j.digest);
+            }
+            for j in &report.jobs {
+                if !j.blamed_workers.is_empty() {
+                    println!("job {} blamed {:?}", j.job, j.blamed_workers);
+                }
             }
             for j in &report.jobs {
                 // Scalar traffic is metered where it is sent — worker
@@ -328,6 +373,7 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         })?;
     let mut config = GatewayConfig {
         tenants: manifest.tenants.clone(),
+        shutdown_token: manifest.gateway_token,
         ..GatewayConfig::default()
     };
     config.poller_threads = args.get_parse("pollers", config.poller_threads);
@@ -420,6 +466,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         s,
         t,
         z,
+        adv: args.get_parse("a", 0usize),
         seed: args.get_parse("seed", 7),
         qps,
     };
@@ -451,7 +498,8 @@ fn cmd_client(args: &Args) -> Result<()> {
         report.rejected()
     );
     if args.flag("shutdown") {
-        GatewayClient::connect(addr, 0)?.shutdown_gateway()?;
+        let token: u64 = args.get_parse("token", 0u64);
+        GatewayClient::connect(addr, 0)?.shutdown_gateway(token)?;
     }
     Ok(())
 }

@@ -172,6 +172,9 @@ pub struct RuntimeCounters {
     pub deadline_misses: AtomicU64,
     /// `JobAbort` broadcasts issued by job drivers on the failure path.
     pub jobs_aborted: AtomicU64,
+    /// Garbled I-shares located (and excluded) by the Byzantine decoder —
+    /// one tick per blamed worker, across all jobs.
+    pub byzantine_detected: AtomicU64,
 }
 
 impl RuntimeCounters {
@@ -182,18 +185,30 @@ impl RuntimeCounters {
             early_decodes: self.early_decodes.load(Ordering::Relaxed),
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
             jobs_aborted: self.jobs_aborted.load(Ordering::Relaxed),
+            byzantine_detected: self.byzantine_detected.load(Ordering::Relaxed),
+            blamed_workers: Vec::new(),
         }
     }
 }
 
-/// Point-in-time snapshot of [`RuntimeCounters`].
-#[derive(Default, Debug, Clone, Copy, PartialEq, Eq)]
+/// Point-in-time snapshot of [`RuntimeCounters`], plus the runtime's blame
+/// log ([`blamed_workers`] is filled in by `WorkerRuntime::health` — a bare
+/// counter snapshot leaves it empty).
+///
+/// [`blamed_workers`]: RuntimeHealthReport::blamed_workers
+#[derive(Default, Debug, Clone, PartialEq, Eq)]
 pub struct RuntimeHealthReport {
     pub evictions: u64,
     pub respawns: u64,
     pub early_decodes: u64,
     pub deadline_misses: u64,
     pub jobs_aborted: u64,
+    /// Total garbled I-shares located and excluded (one per blamed worker
+    /// per affected job).
+    pub byzantine_detected: u64,
+    /// Worker ids ever blamed by the Byzantine decoder, in blame order
+    /// (duplicates possible if a respawned slot misbehaves again).
+    pub blamed_workers: Vec<usize>,
 }
 
 /// Wall-clock phase breakdown of one protocol run.
@@ -240,7 +255,7 @@ impl PhaseTimings {
 /// Distinct typed rejection reasons the gateway can issue (the width of
 /// the per-reason counter array — indexed by the reason's wire code, see
 /// `transport::wire::RejectReason`).
-pub const REJECT_REASONS: usize = 7;
+pub const REJECT_REASONS: usize = 8;
 
 /// Log₂ latency-histogram buckets: bucket `i` counts jobs whose serving
 /// latency was in `[2^i, 2^{i+1})` µs — 32 buckets span sub-µs to ~35min.
@@ -454,6 +469,10 @@ mod tests {
         assert_eq!(snap.early_decodes, 1);
         assert_eq!(snap.deadline_misses, 0);
         assert_eq!(snap.jobs_aborted, 0);
+        c.byzantine_detected.fetch_add(3, Ordering::Relaxed);
+        let snap = c.snapshot();
+        assert_eq!(snap.byzantine_detected, 3);
+        assert!(snap.blamed_workers.is_empty(), "bare snapshot has no blame log");
     }
 
     #[test]

@@ -248,6 +248,42 @@ impl ChaosPlan {
         None
     }
 
+    /// The `k` distinct victim workers every seed-driven plan under `seed`
+    /// picks: `0..n_workers` shuffled with a [`ChaChaRng`], first `k`
+    /// taken. Public so tests can predict (and assert blame against) the
+    /// exact victims of [`ChaosPlan::kill_k_workers`] /
+    /// [`ChaosPlan::garble_k_workers`] without duplicating the shuffle.
+    ///
+    /// [`ChaChaRng`]: crate::util::rng::ChaChaRng
+    pub fn chosen_victims(seed: u64, n_workers: usize, k: usize) -> Vec<usize> {
+        let mut rng = ChaChaRng::seed_from_u64(seed);
+        let mut ids: Vec<usize> = (0..n_workers).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(k);
+        ids
+    }
+
+    /// Seed-driven Byzantine plan: each of the `k` victims (chosen as in
+    /// [`ChaosPlan::chosen_victims`]) has the **first `I`-share it sends**
+    /// garbled in flight — the adversary model of the Byzantine decoder:
+    /// the worker computed honestly (its G-exchange is untouched, so peers
+    /// are unaffected) but the evaluation the master receives is corrupt.
+    /// `limit(1)` scopes the corruption to one share per victim; a master
+    /// running with `adversary_tolerance ≥ k` must locate exactly these
+    /// victims and reconstruct byte-identically without them.
+    pub fn garble_k_workers(seed: u64, n_workers: usize, k: usize) -> ChaosPlan {
+        let mut plan = ChaosPlan::new();
+        for victim in ChaosPlan::chosen_victims(seed, n_workers, k) {
+            plan = plan.rule(
+                FaultRule::new(FaultAction::Garble)
+                    .from_node(victim)
+                    .class(PayloadClass::IShare)
+                    .limit(1),
+            );
+        }
+        plan
+    }
+
     /// Seed-driven crash plan: choose `k` distinct victim workers by
     /// shuffling `0..n_workers` with a [`ChaChaRng`] under `seed`, and kill
     /// each on its first envelope of `class`.
@@ -264,11 +300,8 @@ impl ChaosPlan {
         k: usize,
         class: PayloadClass,
     ) -> ChaosPlan {
-        let mut rng = ChaChaRng::seed_from_u64(seed);
-        let mut ids: Vec<usize> = (0..n_workers).collect();
-        rng.shuffle(&mut ids);
         let mut plan = ChaosPlan::new();
-        for &victim in ids.iter().take(k) {
+        for victim in ChaosPlan::chosen_victims(seed, n_workers, k) {
             plan = plan.rule(
                 FaultRule::new(FaultAction::Kill)
                     .from_node(victim)
@@ -290,11 +323,8 @@ impl ChaosPlan {
     /// paper's dropout-after-exchange regime, where the master decodes from
     /// the surviving `≥ N−2k` evaluations.
     pub fn kill_k_workers_after_exchange(seed: u64, n_workers: usize, k: usize) -> ChaosPlan {
-        let mut rng = ChaChaRng::seed_from_u64(seed);
-        let mut ids: Vec<usize> = (0..n_workers).collect();
-        rng.shuffle(&mut ids);
         let mut plan = ChaosPlan::new();
-        for &victim in ids.iter().take(k) {
+        for victim in ChaosPlan::chosen_victims(seed, n_workers, k) {
             plan = plan.rule(
                 FaultRule::new(FaultAction::Kill)
                     .from_node(victim)
@@ -350,6 +380,21 @@ mod tests {
             .rule(FaultRule::new(FaultAction::Garble));
         assert_eq!(plan.decide(0, 0, 1, &ishare()), Some(FaultAction::Drop));
         assert_eq!(plan.decide(0, 0, 1, &ishare()), Some(FaultAction::Garble));
+    }
+
+    #[test]
+    fn garble_plan_matches_chosen_victims() {
+        let victims = ChaosPlan::chosen_victims(7, 17, 2);
+        assert_eq!(victims.len(), 2);
+        assert_ne!(victims[0], victims[1]);
+        let plan = ChaosPlan::garble_k_workers(7, 17, 2);
+        let rule_victims: Vec<usize> =
+            plan.rules().iter().filter_map(|r| r.from).collect();
+        assert_eq!(rule_victims, victims);
+        for rule in plan.rules() {
+            assert_eq!(rule.action, FaultAction::Garble);
+            assert_eq!(rule.class, Some(PayloadClass::IShare));
+        }
     }
 
     #[test]

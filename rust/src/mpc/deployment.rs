@@ -107,15 +107,23 @@ impl Deployment {
     /// and the `N` persistent worker threads all start here, once.
     pub fn provision(
         spec: SchemeSpec,
-        params: SchemeParams,
+        mut params: SchemeParams,
         config: ProtocolConfig,
     ) -> Result<Deployment> {
+        // Either knob may carry the Byzantine tolerance; fold the config's
+        // into the scheme params so the provisioning quota check
+        // (`recovery_quota` = t²+z+2a) sees it.
+        params.adversary_tolerance = params.adversary_tolerance.max(config.adversary_tolerance);
         Deployment::for_scheme(spec.resolve(params)?, config)
     }
 
     /// Provision with registry-wide adaptive scheme selection (Phase 0 of
     /// Algorithm 3): the constructible scheme with the fewest workers.
-    pub fn provision_adaptive(params: SchemeParams, config: ProtocolConfig) -> Result<Deployment> {
+    pub fn provision_adaptive(
+        mut params: SchemeParams,
+        config: ProtocolConfig,
+    ) -> Result<Deployment> {
+        params.adversary_tolerance = params.adversary_tolerance.max(config.adversary_tolerance);
         Deployment::for_scheme(SchemeSpec::resolve_adaptive(params)?, config)
     }
 
@@ -217,8 +225,10 @@ impl Deployment {
         &self.runtime
     }
 
-    /// Snapshot of the runtime's fault-tolerance counters: evictions,
-    /// respawns, early decodes, per-job deadline misses, driver aborts.
+    /// Snapshot of the runtime's fault-tolerance counters — evictions,
+    /// respawns, early decodes, per-job deadline misses, driver aborts,
+    /// Byzantine detections — plus `blamed_workers`: every worker id the
+    /// Byzantine decoder located serving a garbled I-share.
     pub fn health(&self) -> crate::metrics::RuntimeHealthReport {
         self.runtime.health()
     }

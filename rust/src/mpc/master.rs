@@ -6,6 +6,17 @@
 //! determine it, so the master reconstructs from the **first** `t²+z`
 //! `I(αₙ)` arrivals — the protocol tolerates `N − (t²+z)` stragglers.
 //!
+//! With Byzantine adversary tolerance `a > 0` the recovery quota rises to
+//! `t²+z+2a` arrivals: the extra `2a` evaluations are the Reed–Solomon
+//! margin that lets the master *locate* up to `a` garbled shares (see
+//! [`locate_corrupt_evaluations`]) instead of failing on them. Location
+//! runs over per-share scalar fingerprints, blamed shares are excluded
+//! (and reported in [`MasterOutput::blamed_workers`] for the runtime to
+//! evict), and reconstruction proceeds on `t²+z` consistent shares —
+//! byte-identical to a fault-free run, since interpolation over `GF(p)`
+//! is exact and unique. More than `a` corruptions is a typed
+//! [`CmpcError::NotDecodable`], never a wrong product.
+//!
 //! The master endpoint is shared by every in-flight job of a deployment:
 //! [`run_master`] receives through a [`JobRouter`], which filters envelopes
 //! by [`JobId`] (buffering concurrent jobs' traffic for their own driving
@@ -61,7 +72,7 @@ use crate::ff::{self, P};
 use crate::matrix::FpMat;
 use crate::metrics::WorkerCounters;
 use crate::mpc::network::{ControlMsg, Fabric, JobId, JobRouter, Payload, PooledMat};
-use crate::poly::interp::try_vandermonde_inverse_rows;
+use crate::poly::interp::{locate_corrupt_evaluations, try_vandermonde_inverse_rows};
 use crate::runtime::pool::{ScratchPool, WorkerPool};
 
 /// Result of the master phase.
@@ -76,6 +87,38 @@ pub struct MasterOutput {
     /// tail (`early_decode` was set *and* at least one worker had not
     /// acknowledged when reconstruction finished).
     pub early_decoded: bool,
+    /// Worker ids whose `I(αₙ)` was located as *corrupted* by the
+    /// Byzantine error-locator pass and excluded from reconstruction
+    /// (sorted; empty when every arrived share was consistent or
+    /// `adversary_tolerance = 0`). The runtime evicts these like dead
+    /// workers.
+    pub blamed_workers: Vec<usize>,
+}
+
+/// Per-job fingerprint weight: any fixed nonzero field point defines a
+/// valid fingerprint family (the weighted share combination is itself an
+/// evaluation of one dense degree-`< t²+z` polynomial); deriving it from
+/// the job id makes a crafted fingerprint-invisible corruption
+/// unrepeatable across jobs while keeping every path (in-process,
+/// multi-process, gateway) byte-deterministic.
+fn fingerprint_point(job: JobId) -> u64 {
+    2 + job.wrapping_mul(0x9E37_79B9_7F4A_7C15) % (P - 2)
+}
+
+/// Compress one I-share into a single scalar: `Σ_p data[p]·r^p` (Horner
+/// over the reversed scalars). Position `p` of the I-shares is an
+/// evaluation of a dense polynomial of degree `< t²+z` at the worker's α,
+/// so the fingerprints are evaluations of the *weighted-sum* polynomial —
+/// the error locator runs on scalars instead of whole matrices. A
+/// corrupted share evades the fingerprint only if its corruption vector is
+/// a root of the weight polynomial (probability ~`len/P`); the verify-mode
+/// product check backstops that sliver.
+fn fingerprint(data: &[u32], r: u64) -> u64 {
+    let mut acc = 0u64;
+    for &x in data.iter().rev() {
+        acc = ff::add(ff::mul(acc, r), x as u64);
+    }
+    acc
 }
 
 /// Wall-clock windows of the master phase, measured separately so
@@ -101,13 +144,16 @@ pub struct MasterTimings {
     pub ack_wait: Duration,
 }
 
-/// Collect `t²+z` I-shares for `job`, reconstruct `Y`, then finish the
-/// tail: drain `n_workers` `JobDone` acks, or — with `early_decode` —
-/// abort the stragglers and drain their `AbortAck`s (so counters are
-/// final) without waiting for their remaining work.
+/// Collect `t²+z+2a` I-shares for `job` (`a = adversary_tolerance`),
+/// locate and exclude up to `a` corrupted shares, reconstruct `Y`, then
+/// finish the tail: drain `n_workers` `JobDone` acks, or — with
+/// `early_decode` — abort the stragglers and drain their `AbortAck`s (so
+/// counters are final) without waiting for their remaining work.
 ///
 /// `alphas[n]` is worker `n`'s evaluation point; `t`/`z` are scheme
-/// parameters; `n_workers` is the provisioned worker count. `timeout`
+/// parameters; `adversary_tolerance` is the Byzantine error budget `a`
+/// (0 keeps the erasure-only decode, byte-identical to previous
+/// releases); `n_workers` is the provisioned worker count. `timeout`
 /// bounds every receive (a dead worker surfaces as
 /// [`CmpcError::Fabric`]); a worker-reported [`ControlMsg::JobError`]
 /// fails the job immediately. `fabric` carries the targeted
@@ -124,13 +170,17 @@ pub fn run_master(
     n_workers: usize,
     t: usize,
     z: usize,
+    adversary_tolerance: usize,
     timeout: Duration,
     early_decode: bool,
     counters: &[Arc<WorkerCounters>],
     pool: &WorkerPool,
     scratch: &ScratchPool,
 ) -> Result<(MasterOutput, MasterTimings)> {
-    let needed = t * t + z;
+    // k_dim evaluations determine I(x); 2a extra buy location + exclusion
+    // of up to a corrupted shares (Reed–Solomon unique decoding).
+    let k_dim = t * t + z;
+    let needed = k_dim + 2 * adversary_tolerance;
     if needed > n_workers {
         return Err(CmpcError::InsufficientWorkers {
             needed,
@@ -183,13 +233,50 @@ pub fn run_master(
     }
     let quota_wait = t_quota.elapsed();
     let t_rec = Instant::now();
+
+    // --- Byzantine error location (a > 0) ---
+    // Fingerprint every arrived share into one scalar and run the
+    // decode-and-verify error locator over the (α, fingerprint) pairs: with
+    // k_dim+2a points and ≤ a corruptions, the minimal consistent exclusion
+    // set is exactly the corrupted shares. Locatees are excluded (and
+    // reported for eviction); more than `a` corruptions is a typed refusal
+    // — never a silently wrong product.
+    let mut blamed_workers: Vec<usize> = Vec::new();
+    if adversary_tolerance > 0 {
+        let r = fingerprint_point(job);
+        let fp_pts: Vec<(u64, u64)> = arrived
+            .iter()
+            .map(|(id, share)| (alphas[*id], fingerprint(&share.data, r)))
+            .collect();
+        let blamed_idx = locate_corrupt_evaluations(&fp_pts, k_dim, adversary_tolerance)
+            .ok_or_else(|| {
+                CmpcError::NotDecodable(format!(
+                    "job {job}: more than {adversary_tolerance} corrupted I-shares \
+                     among {needed} — error location failed (raise adversary_tolerance?)"
+                ))
+            })?;
+        if !blamed_idx.is_empty() {
+            blamed_workers = blamed_idx.iter().map(|&i| arrived[i].0).collect();
+            blamed_workers.sort_unstable();
+            let mut pos = 0usize;
+            arrived.retain(|_| {
+                let keep = !blamed_idx.contains(&pos);
+                pos += 1;
+                keep
+            });
+        }
+        // Any k_dim consistent shares reconstruct the exact same Y (unique
+        // interpolation over GF(p)); surplus honest shares just return
+        // their buffers to the pool.
+        arrived.truncate(k_dim);
+    }
     let used_workers: Vec<usize> = arrived.iter().map(|&(id, _)| id).collect();
 
     // Dense Vandermonde over the arrived points: coefficient c_e of I(x)
     // satisfies c_e = Σₙ rows[e][n]·I(αₙ). Distinct αs make the dense solve
     // invertible; a `None` here means corrupted shares.
     let pts: Vec<u64> = used_workers.iter().map(|&id| alphas[id]).collect();
-    let support: Vec<u64> = (0..needed as u64).collect();
+    let support: Vec<u64> = (0..k_dim as u64).collect();
     let rows = try_vandermonde_inverse_rows(&pts, &support).ok_or_else(|| {
         CmpcError::NotDecodable(
             "singular dense Vandermonde during reconstruction (repeated αs?)".to_string(),
@@ -357,6 +444,7 @@ pub fn run_master(
             stragglers_tolerated: n_workers - needed,
             used_workers,
             early_decoded,
+            blamed_workers,
         },
         MasterTimings {
             quota_wait,

@@ -75,6 +75,14 @@ pub struct ProtocolConfig {
     /// as `PhaseTimings::ack_wait`). Off by default simply because the
     /// full drain generates no abort/ack traffic.
     pub early_decode: bool,
+    /// Byzantine adversary tolerance `a` for this deployment's jobs: the
+    /// master collects `t²+z+2a` I-shares and *locates* up to `a` garbled
+    /// ones, excludes them (reconstruction stays byte-identical to a
+    /// fault-free run) and reports them for eviction. The effective
+    /// tolerance of a run is the max of this knob and the scheme's own
+    /// [`SchemeParams::adversary_tolerance`] — set either. `0` (default)
+    /// keeps the erasure-only decode.
+    pub adversary_tolerance: usize,
     /// Consecutive per-job deadline-miss rounds after which a worker
     /// thread self-evicts for the runtime's reaper to replace. Rounds are
     /// consecutive only when **no envelope at all** arrives between them —
@@ -102,6 +110,7 @@ impl Default for ProtocolConfig {
             threads: 0,
             recv_timeout: Duration::from_secs(30),
             early_decode: false,
+            adversary_tolerance: 0,
             max_deadline_misses: 8,
             chaos: None,
             shaper: None,
@@ -168,6 +177,13 @@ impl ProtocolConfigBuilder {
         self
     }
 
+    /// Byzantine adversary tolerance `a` (locate and survive up to `a`
+    /// garbled worker shares; raises the recovery quota to `t²+z+2a`).
+    pub fn adversary_tolerance(mut self, a: usize) -> Self {
+        self.config.adversary_tolerance = a;
+        self
+    }
+
     /// Consecutive deadline-miss rounds before a worker self-evicts.
     pub fn max_deadline_misses(mut self, rounds: usize) -> Self {
         self.config.max_deadline_misses = rounds;
@@ -211,8 +227,13 @@ pub struct ProtocolOutput {
     pub worker_counters: Vec<Arc<WorkerCounters>>,
     pub verified: bool,
     /// Whether the master took the early-decode fast path (decoded at the
-    /// `t²+z` quota and cancelled a straggler tail).
+    /// recovery quota and cancelled a straggler tail).
     pub early_decoded: bool,
+    /// Worker ids whose I-shares the Byzantine decoder located as garbled
+    /// and excluded from reconstruction (sorted; empty when every share was
+    /// consistent or `adversary_tolerance` is 0). The output `y` is already
+    /// the corruption-free product — these indices are for blame/eviction.
+    pub blamed_workers: Vec<usize>,
 }
 
 /// Precomputed per-deployment state reusable across jobs with the same
@@ -232,7 +253,7 @@ pub struct Setup {
 pub fn prepare_setup(scheme: &dyn CmpcScheme) -> Result<Setup> {
     let p = scheme.params();
     let n = scheme.n_workers();
-    let needed = p.t * p.t + p.z;
+    let needed = p.recovery_quota();
     if needed > n {
         return Err(CmpcError::InsufficientWorkers {
             needed,
@@ -407,6 +428,12 @@ pub fn run_job(
     if m_out.early_decoded {
         runtime.note_early_decode();
     }
+    if !m_out.blamed_workers.is_empty() {
+        // Located garbled shares: record the blame and evict the culprits
+        // (the runtime shuts them down so the reaper respawns clean
+        // replacements before the next job).
+        runtime.note_byzantine(&m_out.blamed_workers);
+    }
 
     let verified = if config.verify {
         // The reference product is the largest single matmul of the run
@@ -442,6 +469,7 @@ pub fn run_job(
         worker_counters: counters,
         verified,
         early_decoded: m_out.early_decoded,
+        blamed_workers: m_out.blamed_workers,
     })
 }
 
@@ -529,6 +557,7 @@ fn drive_job(
         n,
         p.t,
         p.z,
+        config.adversary_tolerance.max(p.adversary_tolerance),
         config.recv_timeout,
         config.early_decode,
         &counters,
@@ -687,6 +716,7 @@ mod tests {
             .threads(3)
             .recv_timeout(Duration::from_secs(2))
             .early_decode(true)
+            .adversary_tolerance(2)
             .max_deadline_misses(3)
             .chaos(ChaosPlan::new().into_shared())
             .shaper(LinkShaper::new().into_shared())
@@ -698,6 +728,7 @@ mod tests {
         assert_eq!(cfg.threads, 3);
         assert_eq!(cfg.recv_timeout, Duration::from_secs(2));
         assert!(cfg.early_decode);
+        assert_eq!(cfg.adversary_tolerance, 2);
         assert_eq!(cfg.max_deadline_misses, 3);
         assert!(cfg.chaos.is_some());
         assert!(cfg.shaper.is_some());

@@ -79,6 +79,13 @@ pub struct WorkerRuntime {
     /// (the health counters stay exact; only the per-event detail rotates)
     /// so a chronically failing slot cannot grow memory without bound.
     eviction_log: Mutex<VecDeque<Eviction>>,
+    /// Every worker id ever blamed by the Byzantine decoder, in blame
+    /// order — surfaced verbatim by [`WorkerRuntime::health`].
+    blame_log: Mutex<Vec<usize>>,
+    /// Blamed workers shut down but not yet reaped: consulted (and
+    /// drained) by [`WorkerRuntime::reap`] so their eviction records say
+    /// *blamed* rather than "clean exit".
+    pending_blame: Mutex<Vec<usize>>,
     respawn: RespawnCtx,
 }
 
@@ -206,6 +213,8 @@ impl WorkerRuntime {
             recv_timeout: config.recv_timeout,
             health,
             eviction_log: Mutex::new(VecDeque::new()),
+            blame_log: Mutex::new(Vec::new()),
+            pending_blame: Mutex::new(Vec::new()),
             respawn,
         })
     }
@@ -277,7 +286,16 @@ impl WorkerRuntime {
                 Err(_) => continue,
             };
             let dead = std::mem::replace(slot, replacement);
+            let blamed = {
+                let mut pending = self.pending_blame.lock().unwrap();
+                let was = pending.contains(&wid);
+                pending.retain(|&w| w != wid);
+                was
+            };
             let reason = match dead.join() {
+                Ok(Ok(())) if blamed => {
+                    "blamed: garbled I-share located by the Byzantine decoder".to_string()
+                }
                 Ok(Ok(())) => "exited (chaos kill or fabric teardown)".to_string(),
                 Ok(Err(e)) => e.to_string(),
                 Err(panic) => format!("panic: {}", panic_message(panic.as_ref())),
@@ -299,9 +317,13 @@ impl WorkerRuntime {
     }
 
     /// Snapshot of the runtime's health counters (evictions, respawns,
-    /// early decodes, deadline misses, driver aborts).
+    /// early decodes, deadline misses, driver aborts, Byzantine blames)
+    /// plus the blame log — every worker id the Byzantine decoder has
+    /// located serving a garbled I-share, in blame order.
     pub fn health(&self) -> RuntimeHealthReport {
-        self.health.snapshot()
+        let mut snap = self.health.snapshot();
+        snap.blamed_workers = self.blame_log.lock().unwrap().clone();
+        snap
     }
 
     /// Recent evictions (worker slot + reason), oldest first — the last
@@ -319,6 +341,41 @@ impl WorkerRuntime {
     /// Record a driver-side abort broadcast (called on the job error path).
     pub(crate) fn note_job_aborted(&self) {
         self.health.jobs_aborted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record workers the Byzantine decoder blamed for garbled I-shares
+    /// and evict them: each gets a targeted [`ControlMsg::Shutdown`] (the
+    /// worker exits cleanly, exactly like a chaos kill), is marked
+    /// pending-blame so its eviction record carries the real reason, and
+    /// the next [`WorkerRuntime::reap`] — automatic at `begin_job` —
+    /// respawns a clean replacement with the same index and re-derived
+    /// rng streams.
+    pub(crate) fn note_byzantine(&self, blamed: &[usize]) {
+        if blamed.is_empty() {
+            return;
+        }
+        self.health
+            .byzantine_detected
+            .fetch_add(blamed.len() as u64, Ordering::Relaxed);
+        self.blame_log.lock().unwrap().extend_from_slice(blamed);
+        {
+            let mut pending = self.pending_blame.lock().unwrap();
+            for &wid in blamed {
+                if !pending.contains(&wid) {
+                    pending.push(wid);
+                }
+            }
+        }
+        for &wid in blamed {
+            // Best-effort: a blamed worker that already died (or was
+            // chaos-killed) simply has nothing to shut down.
+            let _ = self.fabric.send(
+                CONTROL_JOB,
+                self.fabric.master_id(),
+                wid,
+                Payload::Control(ControlMsg::Shutdown),
+            );
+        }
     }
 
     pub fn fabric(&self) -> &Arc<Fabric> {

@@ -129,6 +129,101 @@ pub fn vandermonde_inverse_rows(alphas: &[u64], support: &[u64]) -> Vec<Vec<u64>
         .expect("singular Vandermonde — repeated evaluation points?")
 }
 
+/// Evaluate a dense coefficient vector at `x` (Horner).
+fn eval_dense(coeffs: &[u64], x: u64) -> u64 {
+    let mut acc = 0u64;
+    for &c in coeffs.iter().rev() {
+        acc = ff::add(ff::mul(acc, x), c);
+    }
+    acc
+}
+
+/// Locate up to `a` corrupted evaluations of a polynomial of degree
+/// `< k_dim` — the error-locator pass of Byzantine-robust reconstruction.
+///
+/// `points` are `(x, y)` pairs of which at most `a` may carry a wrong `y`.
+/// The search is the decode-and-verify form of Reed–Solomon unique
+/// decoding: for candidate exclusion sets `E` of growing size `0..=a`
+/// (lexicographic, so the result is deterministic), interpolate the first
+/// `k_dim` kept points and accept iff every other kept point agrees.
+///
+/// Soundness needs the caller to supply `points.len() ≥ k_dim + 2a`: then
+/// any accepted candidate agrees with the (≥ `len − a`)-point majority on
+/// at least `k_dim` honest points, i.e. *is* the true polynomial, and the
+/// minimal accepted `E` is exactly the set of disagreeing evaluations.
+///
+/// Returns the blamed indices into `points` (empty when every point is
+/// consistent), or `None` when no exclusion of `≤ a` points explains the
+/// data — more than `a` corruptions.
+pub fn locate_corrupt_evaluations(
+    points: &[(u64, u64)],
+    k_dim: usize,
+    a: usize,
+) -> Option<Vec<usize>> {
+    let n = points.len();
+    if n < k_dim {
+        return None;
+    }
+    let max_excl = a.min(n - k_dim);
+    let mut kept: Vec<(u64, u64)> = Vec::with_capacity(n);
+    let mut fits = |excluded: &[usize]| -> bool {
+        kept.clear();
+        kept.extend(
+            points
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !excluded.contains(i))
+                .map(|(_, &p)| p),
+        );
+        let coeffs = lagrange_interpolate(&kept[..k_dim]);
+        kept[k_dim..]
+            .iter()
+            .all(|&(x, y)| eval_dense(&coeffs, x) == y)
+    };
+    for e in 0..=max_excl {
+        if let Some(excl) = first_combination(n, e, &mut fits) {
+            return Some(excl);
+        }
+    }
+    None
+}
+
+/// First size-`e` combination of `0..n` (lexicographic order) accepted by
+/// `accept`, or `None`.
+fn first_combination(
+    n: usize,
+    e: usize,
+    accept: &mut dyn FnMut(&[usize]) -> bool,
+) -> Option<Vec<usize>> {
+    if e == 0 {
+        return if accept(&[]) { Some(Vec::new()) } else { None };
+    }
+    if e > n {
+        return None;
+    }
+    let mut idx: Vec<usize> = (0..e).collect();
+    loop {
+        if accept(&idx) {
+            return Some(idx);
+        }
+        // advance to the next lexicographic combination
+        let mut i = e;
+        loop {
+            if i == 0 {
+                return None;
+            }
+            i -= 1;
+            if idx[i] != i + n - e {
+                idx[i] += 1;
+                for j in i + 1..e {
+                    idx[j] = idx[j - 1] + 1;
+                }
+                break;
+            }
+        }
+    }
+}
+
 /// Choose `n` distinct nonzero evaluation points starting at `1 + offset`.
 /// The protocol only needs distinctness; small consecutive αs keep `αᵉ`
 /// computations cheap, and the offset lets callers re-draw when a sparse
@@ -249,6 +344,73 @@ mod tests {
                     .fold(0u64, |acc, (&r, &h)| ff::add(acc, ff::mul(r, h)));
                 if got != cj {
                     return Err(format!("coeff {j}: {got} != {cj}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corrupt_evaluations_are_located_exactly() {
+        property("error locator finds planted corruptions", 150, |rng| {
+            let k_dim = rng.gen_index(6) + 2; // degree < k_dim
+            let a = rng.gen_index(3); // tolerance 0..=2
+            let n = k_dim + 2 * a;
+            let coeffs: Vec<u64> = (0..k_dim).map(|_| rng.field_element()).collect();
+            let mut pts: Vec<(u64, u64)> = (1..=n as u64)
+                .map(|x| (x, eval_dense(&coeffs, x)))
+                .collect();
+            // plant e ≤ a corruptions at distinct positions
+            let e = rng.gen_index(a + 1);
+            let mut victims: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut victims);
+            let mut victims: Vec<usize> = victims.into_iter().take(e).collect();
+            victims.sort_unstable();
+            for &v in &victims {
+                pts[v].1 = ff::add(pts[v].1, 1);
+            }
+            let got = locate_corrupt_evaluations(&pts, k_dim, a)
+                .ok_or_else(|| format!("k={k_dim} a={a} e={e}: not located"))?;
+            if got != victims {
+                return Err(format!("k={k_dim} a={a}: blamed {got:?}, planted {victims:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn too_many_corruptions_are_refused_not_misdecoded() {
+        property("a+1 corruptions never decode", 100, |rng| {
+            let k_dim = rng.gen_index(5) + 2;
+            let a = rng.gen_index(2) + 1; // 1..=2
+            let n = k_dim + 2 * a;
+            let coeffs: Vec<u64> = (0..k_dim).map(|_| rng.field_element()).collect();
+            let mut pts: Vec<(u64, u64)> = (1..=n as u64)
+                .map(|x| (x, eval_dense(&coeffs, x)))
+                .collect();
+            let mut victims: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut victims);
+            for &v in victims.iter().take(a + 1) {
+                pts[v].1 = ff::add(pts[v].1, 1 + rng.gen_range(100));
+            }
+            // With a+1 planted errors the locator must either refuse (None)
+            // — the typical case — or, in rare aligned draws, return a
+            // candidate; it must never silently blame fewer than a+1 points
+            // while claiming consistency with the planted polynomial.
+            if let Some(blamed) = locate_corrupt_evaluations(&pts, k_dim, a) {
+                // consistency check: excluded + interpolated must actually
+                // fit all kept points (the locator's own invariant).
+                let kept: Vec<(u64, u64)> = pts
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !blamed.contains(i))
+                    .map(|(_, &p)| p)
+                    .collect();
+                let cand = lagrange_interpolate(&kept[..k_dim]);
+                for &(x, y) in &kept[k_dim..] {
+                    if eval_dense(&cand, x) != y {
+                        return Err("locator returned an inconsistent candidate".into());
+                    }
                 }
             }
             Ok(())

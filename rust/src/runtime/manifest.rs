@@ -144,8 +144,13 @@ pub struct TopologyManifest {
     pub seed: u64,
     /// Jobs the master drives before shutting the cluster down.
     pub jobs: usize,
-    /// Master decodes at the t²+z quota and aborts the straggler tail.
+    /// Master decodes at the recovery quota and aborts the straggler tail.
     pub early_decode: bool,
+    /// Byzantine adversary tolerance `a`: the master collects `t²+z+2a`
+    /// I-shares and locates/excludes up to `a` garbled ones (0 = classic
+    /// erasure-only decode). Every party derives the same raised quota
+    /// from this line, so the cluster stays self-consistent.
+    pub adversary_tolerance: usize,
     /// Master checks `Y == AᵀB` before reporting each job.
     pub verify: bool,
     /// Outbound connect retry budget (peers may start in any order).
@@ -163,6 +168,11 @@ pub struct TopologyManifest {
     /// Client-facing listen address for `cmpc gateway` (`None` = this
     /// topology has no serving tier).
     pub gateway: Option<String>,
+    /// Shared secret required by gateway `Shutdown` frames (`None` = any
+    /// client may stop the gateway — the pre-v0.8 behavior). A frame with
+    /// a non-matching token is rejected with a typed `Unauthorized`
+    /// instead of killing the serving tier.
+    pub gateway_token: Option<u64>,
     /// Gateway admission table (empty = open admission).
     pub tenants: Vec<TenantQuota>,
 }
@@ -209,6 +219,7 @@ impl TopologyManifest {
             seed,
             jobs,
             early_decode: false,
+            adversary_tolerance: 0,
             verify: true,
             connect_timeout: Duration::from_secs(10),
             recv_timeout: Duration::from_secs(30),
@@ -218,6 +229,7 @@ impl TopologyManifest {
             source_b: String::new(),
             shapes: Vec::new(),
             gateway: None,
+            gateway_token: None,
             tenants: Vec::new(),
         };
         let n = manifest.resolve_scheme()?.n_workers();
@@ -248,6 +260,7 @@ impl TopologyManifest {
         let mut params: Option<(usize, usize, usize)> = None;
         let (mut m, mut seed, mut jobs) = (None, None, None);
         let mut early_decode = false;
+        let mut adversary_tolerance = 0usize;
         let mut verify = true;
         let mut connect_timeout = Duration::from_secs(10);
         let mut recv_timeout = Duration::from_secs(30);
@@ -255,6 +268,7 @@ impl TopologyManifest {
         let (mut master, mut source_a, mut source_b) = (None, None, None);
         let mut shapes = Vec::new();
         let mut gateway = None;
+        let mut gateway_token = None;
         let mut tenants: Vec<TenantQuota> = Vec::new();
         // Duplicate identity/parameter lines are errors, same as unknown
         // keys: a stale line left in a hand-edited manifest must not
@@ -299,6 +313,9 @@ impl TopologyManifest {
                 ["early_decode", v] => {
                     early_decode = parse_field::<u8>(lineno, "early_decode", v)? != 0
                 }
+                ["adversary_tolerance", v] => {
+                    adversary_tolerance = parse_field(lineno, "adversary_tolerance", v)?
+                }
                 ["verify", v] => verify = parse_field::<u8>(lineno, "verify", v)? != 0,
                 ["connect_timeout_ms", v] => {
                     connect_timeout =
@@ -329,6 +346,10 @@ impl TopologyManifest {
                 ["gateway", addr] => {
                     no_dup(lineno, "gateway", &gateway)?;
                     gateway = Some(addr.to_string());
+                }
+                ["gateway_token", v] => {
+                    no_dup(lineno, "gateway_token", &gateway_token)?;
+                    gateway_token = Some(parse_field::<u64>(lineno, "gateway_token", v)?);
                 }
                 ["tenant", id, burst, rate, max_pending] => {
                     let id: u32 = parse_field(lineno, "tenant id", id)?;
@@ -402,6 +423,7 @@ impl TopologyManifest {
             seed: seed.ok_or_else(|| missing("seed"))?,
             jobs: jobs.ok_or_else(|| missing("jobs"))?,
             early_decode,
+            adversary_tolerance,
             verify,
             connect_timeout,
             recv_timeout,
@@ -411,6 +433,7 @@ impl TopologyManifest {
             source_b: source_b.ok_or_else(|| missing("source-b address"))?,
             shapes,
             gateway,
+            gateway_token,
             tenants,
         };
         manifest.validate()?;
@@ -434,6 +457,10 @@ impl TopologyManifest {
         out.push_str(&format!("seed {}\n", self.seed));
         out.push_str(&format!("jobs {}\n", self.jobs));
         out.push_str(&format!("early_decode {}\n", u8::from(self.early_decode)));
+        out.push_str(&format!(
+            "adversary_tolerance {}\n",
+            self.adversary_tolerance
+        ));
         out.push_str(&format!("verify {}\n", u8::from(self.verify)));
         out.push_str(&format!(
             "connect_timeout_ms {}\n",
@@ -473,6 +500,9 @@ impl TopologyManifest {
         if let Some(gw) = &self.gateway {
             out.push_str(&format!("gateway {gw}\n"));
         }
+        if let Some(token) = self.gateway_token {
+            out.push_str(&format!("gateway_token {token}\n"));
+        }
         for q in &self.tenants {
             // f64 Display round-trips through FromStr (shortest repr), so
             // render ∘ parse stays the identity for rate_per_sec.
@@ -505,9 +535,24 @@ impl TopologyManifest {
                 self.workers.len()
             )));
         }
+        let quota = self.t * self.t + self.z + 2 * self.adversary_tolerance;
+        if quota > scheme.n_workers() {
+            return Err(CmpcError::InvalidParams(format!(
+                "topology manifest: adversary_tolerance {} raises the recovery quota to \
+                 {quota} but {} provisions only {} workers",
+                self.adversary_tolerance,
+                scheme.name(),
+                scheme.n_workers()
+            )));
+        }
         if !self.tenants.is_empty() && self.gateway.is_none() {
             return Err(CmpcError::InvalidParams(
                 "topology manifest: tenant quotas declared without a gateway line".to_string(),
+            ));
+        }
+        if self.gateway_token.is_some() && self.gateway.is_none() {
+            return Err(CmpcError::InvalidParams(
+                "topology manifest: gateway_token declared without a gateway line".to_string(),
             ));
         }
         Ok(())
@@ -525,9 +570,13 @@ impl TopologyManifest {
         }
     }
 
-    /// Resolve the manifest's scheme instance.
+    /// Resolve the manifest's scheme instance (the Byzantine tolerance
+    /// rides along, so every party derives the same raised quota).
     pub fn resolve_scheme(&self) -> Result<Arc<dyn CmpcScheme>> {
-        self.spec()?.resolve(SchemeParams::try_new(self.s, self.t, self.z)?)
+        self.spec()?.resolve(
+            SchemeParams::try_new(self.s, self.t, self.z)?
+                .with_adversary_tolerance(self.adversary_tolerance),
+        )
     }
 
     pub fn n_workers(&self) -> usize {
@@ -655,11 +704,14 @@ mod tests {
         assert_eq!(m.addrs().len(), 20);
         assert_eq!(m.workers[0], "127.0.0.1:9300");
         assert_eq!(m.source_b, "127.0.0.1:9319");
+        m.adversary_tolerance = 2;
         let back = TopologyManifest::parse(&m.render()).unwrap();
         assert_eq!(back.scheme, "age");
         assert_eq!((back.s, back.t, back.z, back.m), (2, 2, 2, 8));
         assert_eq!(back.seed, 7);
         assert_eq!(back.jobs, 2);
+        assert_eq!(back.adversary_tolerance, 2);
+        assert_eq!(back.resolve_scheme().unwrap().params().recovery_quota(), 10);
         assert_eq!(back.workers, m.workers);
         assert_eq!(back.master, m.master);
         assert_eq!(back.shapes, m.shapes);
@@ -700,10 +752,24 @@ mod tests {
     }
 
     #[test]
+    fn topology_adversary_tolerance_must_fit_the_worker_count() {
+        // AGE(2,2,2) provisions 17 workers; a=6 needs t²+z+2a = 18 shares.
+        let mut m =
+            TopologyManifest::template("age", 2, 2, 2, 8, 7, 1, "127.0.0.1", 9800).unwrap();
+        m.adversary_tolerance = 6;
+        let err = m.validate().unwrap_err();
+        assert!(matches!(err, CmpcError::InvalidParams(_)), "{err}");
+        assert!(err.to_string().contains("recovery quota"), "{err}");
+        m.adversary_tolerance = 5; // quota 16 ≤ 17: fine
+        m.validate().unwrap();
+    }
+
+    #[test]
     fn topology_gateway_and_tenant_lines_round_trip() {
         let mut m =
             TopologyManifest::template("age", 2, 2, 2, 8, 7, 2, "127.0.0.1", 9600).unwrap();
         m.gateway = Some("127.0.0.1:9650".to_string());
+        m.gateway_token = Some(0xDEAD_BEEF);
         m.tenants = vec![
             TenantQuota {
                 id: 0,
@@ -720,10 +786,20 @@ mod tests {
         ];
         let rendered = m.render();
         assert!(rendered.contains("gateway 127.0.0.1:9650"));
+        assert!(rendered.contains(&format!("gateway_token {}", 0xDEAD_BEEFu64)));
         assert!(rendered.contains("tenant 1 2 0 64"));
         let back = TopologyManifest::parse(&rendered).unwrap();
         assert_eq!(back.gateway.as_deref(), Some("127.0.0.1:9650"));
+        assert_eq!(back.gateway_token, Some(0xDEAD_BEEF));
         assert_eq!(back.tenants, m.tenants);
+
+        // A shutdown token without a gateway to guard is a typo (checked
+        // on its own, without tenant lines masking the error).
+        let mut orphan_token =
+            TopologyManifest::template("age", 2, 2, 2, 8, 7, 2, "127.0.0.1", 9600).unwrap();
+        orphan_token.gateway_token = Some(1);
+        let err = orphan_token.validate().unwrap_err();
+        assert!(err.to_string().contains("gateway_token"), "{err}");
 
         // Duplicate tenant ids are typed errors, not silent last-wins.
         let err =

@@ -281,6 +281,10 @@ pub struct NodeJobReport {
     pub digest: u64,
     pub verified: bool,
     pub early_decoded: bool,
+    /// Worker ids whose I-shares arrived garbled and were located and
+    /// excluded by the Byzantine decoder (sorted; empty unless the
+    /// manifest sets `adversary_tolerance > 0` and corruption occurred).
+    pub blamed_workers: Vec<usize>,
     /// Scalar traffic metered by the **master process's own fabric** —
     /// near-zero in a distributed run, since each process meters only its
     /// own sends (the ζ legs live in the worker processes; the measured
@@ -337,7 +341,7 @@ pub fn run_master_node(
             router.open(job);
             fabric.begin_job(job);
             let t0 = Instant::now();
-            let outcome = (|| -> Result<(FpMat, Vec<Arc<WorkerCounters>>, bool)> {
+            let outcome = (|| -> Result<(FpMat, Vec<Arc<WorkerCounters>>, bool, Vec<usize>)> {
                 let seed = job_secret_seed(manifest.seed, job);
                 let counters: Vec<Arc<WorkerCounters>> =
                     (0..n).map(|_| Arc::new(WorkerCounters::default())).collect();
@@ -372,18 +376,19 @@ pub fn run_master_node(
                     n,
                     p.t,
                     p.z,
+                    p.adversary_tolerance,
                     manifest.recv_timeout,
                     manifest.early_decode,
                     &counters,
                     &pool,
                     &scratch,
                 )?;
-                Ok((m_out.y, counters, m_out.early_decoded))
+                Ok((m_out.y, counters, m_out.early_decoded, m_out.blamed_workers))
             })();
             let traffic = fabric.end_job(job);
             router.close(job);
             match outcome {
-                Ok((y, worker_counters, early_decoded)) => {
+                Ok((y, worker_counters, early_decoded, blamed_workers)) => {
                     let verified = if manifest.verify {
                         let (a, b) = job_matrices(manifest.seed, job, manifest.m);
                         let ok = y == a.transpose().matmul(&b);
@@ -402,6 +407,7 @@ pub fn run_master_node(
                         y,
                         verified,
                         early_decoded,
+                        blamed_workers,
                         traffic,
                         worker_counters,
                         elapsed: t0.elapsed(),
@@ -458,26 +464,30 @@ pub fn run_master_node(
 /// Bind this role's listener per the manifest and run it. Returns the
 /// master's report when the role is [`NodeRole::Master`], `None` for the
 /// long-running roles.
-pub fn run_role(role: NodeRole, manifest: &TopologyManifest) -> Result<Option<MasterRunReport>> {
+pub fn run_role(
+    role: NodeRole,
+    manifest: &TopologyManifest,
+    chaos: Option<Arc<ChaosPlan>>,
+) -> Result<Option<MasterRunReport>> {
     manifest.validate()?;
     match role {
         NodeRole::Worker(i) => {
             let (t, e) = TcpTransport::bind_manifest(manifest, i)?;
-            serve_worker_node(manifest, i, t, e, None)?;
+            serve_worker_node(manifest, i, t, e, chaos)?;
             Ok(None)
         }
         NodeRole::Master => {
             let (t, e) = TcpTransport::bind_manifest(manifest, manifest.master_id())?;
-            Ok(Some(run_master_node(manifest, t, e, None)?))
+            Ok(Some(run_master_node(manifest, t, e, chaos)?))
         }
         NodeRole::SourceA => {
             let (t, e) = TcpTransport::bind_manifest(manifest, manifest.source_a_id())?;
-            serve_source_node(manifest, true, t, e, None)?;
+            serve_source_node(manifest, true, t, e, chaos)?;
             Ok(None)
         }
         NodeRole::SourceB => {
             let (t, e) = TcpTransport::bind_manifest(manifest, manifest.source_b_id())?;
-            serve_source_node(manifest, false, t, e, None)?;
+            serve_source_node(manifest, false, t, e, chaos)?;
             Ok(None)
         }
     }
@@ -491,7 +501,8 @@ pub fn run_reference(manifest: &TopologyManifest) -> Result<Vec<(JobId, u64)>> {
     manifest.validate()?;
     let dep = Deployment::provision(
         manifest.spec()?,
-        SchemeParams::try_new(manifest.s, manifest.t, manifest.z)?,
+        SchemeParams::try_new(manifest.s, manifest.t, manifest.z)?
+            .with_adversary_tolerance(manifest.adversary_tolerance),
         ProtocolConfig::builder().verify(manifest.verify).build(),
     )?;
     let mut digests = Vec::with_capacity(manifest.jobs);

@@ -63,8 +63,9 @@ use crate::mpc::network::{BufferPool, ControlMsg, Envelope, Payload, PooledMat};
 pub const WIRE_MAGIC: u32 = 0x434D_5043;
 
 /// Current frame format version. Decoders reject every other version with
-/// a typed error (no silent cross-version reads).
-pub const WIRE_VERSION: u16 = 1;
+/// a typed error (no silent cross-version reads). v2 added the adversary
+/// tolerance to `Submit` and the admin token to the client `Shutdown`.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Fixed frame header length in bytes.
 pub const HEADER_LEN: usize = 23;
@@ -547,6 +548,8 @@ pub enum RejectReason {
     ShuttingDown,
     /// The deployment failed after admission (the one post-door reason).
     Internal,
+    /// A [`ClientMsg::Shutdown`] carried the wrong admin token.
+    Unauthorized,
 }
 
 impl RejectReason {
@@ -561,6 +564,7 @@ impl RejectReason {
             RejectReason::TooLarge => 4,
             RejectReason::ShuttingDown => 5,
             RejectReason::Internal => 6,
+            RejectReason::Unauthorized => 7,
         }
     }
 
@@ -573,6 +577,7 @@ impl RejectReason {
             4 => RejectReason::TooLarge,
             5 => RejectReason::ShuttingDown,
             6 => RejectReason::Internal,
+            7 => RejectReason::Unauthorized,
             _ => return None,
         })
     }
@@ -588,6 +593,7 @@ impl std::fmt::Display for RejectReason {
             RejectReason::TooLarge => "too-large",
             RejectReason::ShuttingDown => "shutting-down",
             RejectReason::Internal => "internal",
+            RejectReason::Unauthorized => "unauthorized",
         })
     }
 }
@@ -595,11 +601,14 @@ impl std::fmt::Display for RejectReason {
 /// Client-plane payloads (tags 6–9).
 #[derive(Debug, Clone)]
 pub enum ClientMsg {
-    /// A tenant submits one `Y = AᵀB` job under scheme params `(s, t, z)`.
+    /// A tenant submits one `Y = AᵀB` job under scheme params `(s, t, z)`
+    /// plus the adversary tolerance `adv` the decode must honor (raises
+    /// the recovery quota to `t² + z + 2·adv`).
     Submit {
         s: usize,
         t: usize,
         z: usize,
+        adv: usize,
         a: FpMat,
         b: FpMat,
     },
@@ -617,8 +626,12 @@ pub enum ClientMsg {
         detail: String,
     },
     /// Administrative: drain in-flight jobs and stop the gateway (the CI
-    /// lane's clean teardown; unauthenticated until the TLS/auth arc).
-    Shutdown,
+    /// lane's clean teardown). `token` must match the gateway's
+    /// `gateway_token` manifest line; a mismatch is answered with a
+    /// [`RejectReason::Unauthorized`] and the gateway keeps serving. A
+    /// gateway with no configured token accepts any value (the
+    /// pre-auth behavior, for single-operator rigs).
+    Shutdown { token: u64 },
 }
 
 /// One client-plane frame. Shares the fabric's 23-byte header: the `job`
@@ -636,16 +649,16 @@ fn client_tag(msg: &ClientMsg) -> u8 {
         ClientMsg::Submit { .. } => TAG_SUBMIT,
         ClientMsg::Result { .. } => TAG_RESULT,
         ClientMsg::Reject { .. } => TAG_REJECT,
-        ClientMsg::Shutdown => TAG_GW_SHUTDOWN,
+        ClientMsg::Shutdown { .. } => TAG_GW_SHUTDOWN,
     }
 }
 
 fn client_payload_len(msg: &ClientMsg) -> usize {
     match msg {
-        ClientMsg::Submit { a, b, .. } => 12 + mat_wire_len(a) + mat_wire_len(b),
+        ClientMsg::Submit { a, b, .. } => 16 + mat_wire_len(a) + mat_wire_len(b),
         ClientMsg::Result { y, .. } => 16 + mat_wire_len(y),
         ClientMsg::Reject { detail, .. } => 5 + detail.len(),
-        ClientMsg::Shutdown => 0,
+        ClientMsg::Shutdown { .. } => 8,
     }
 }
 
@@ -664,10 +677,11 @@ pub fn encode_client_frame(frame: &ClientFrame, out: &mut Vec<u8>) {
     out.push(client_tag(&frame.msg));
     put_u32(out, client_payload_len(&frame.msg) as u32);
     match &frame.msg {
-        ClientMsg::Submit { s, t, z, a, b } => {
+        ClientMsg::Submit { s, t, z, adv, a, b } => {
             put_u32(out, *s as u32);
             put_u32(out, *t as u32);
             put_u32(out, *z as u32);
+            put_u32(out, *adv as u32);
             put_mat(out, a);
             put_mat(out, b);
         }
@@ -685,7 +699,7 @@ pub fn encode_client_frame(frame: &ClientFrame, out: &mut Vec<u8>) {
             put_u32(out, detail.len() as u32);
             out.extend_from_slice(detail.as_bytes());
         }
-        ClientMsg::Shutdown => {}
+        ClientMsg::Shutdown { token } => put_u64(out, *token),
     }
 }
 
@@ -769,9 +783,10 @@ fn decode_client_payload(tag: u8, body: &[u8]) -> Result<ClientMsg> {
             let s = r.u32()? as usize;
             let t = r.u32()? as usize;
             let z = r.u32()? as usize;
+            let adv = r.u32()? as usize;
             let a = decode_fpmat(&mut r)?;
             let b = decode_fpmat(&mut r)?;
-            ClientMsg::Submit { s, t, z, a, b }
+            ClientMsg::Submit { s, t, z, adv, a, b }
         }
         TAG_RESULT => ClientMsg::Result {
             digest: r.u64()?,
@@ -789,7 +804,7 @@ fn decode_client_payload(tag: u8, body: &[u8]) -> Result<ClientMsg> {
                 detail: String::from_utf8_lossy(bytes).into_owned(),
             }
         }
-        TAG_GW_SHUTDOWN => ClientMsg::Shutdown,
+        TAG_GW_SHUTDOWN => ClientMsg::Shutdown { token: r.u64()? },
         other => return Err(corrupt(format!("unknown client frame tag {other}"))),
     };
     if r.remaining() != 0 {
@@ -1118,6 +1133,7 @@ mod tests {
                 s: 2,
                 t: 2,
                 z: 2,
+                adv: 1,
                 a: fpmat(4, 4, 21),
                 b: fpmat(4, 4, 22),
             },
@@ -1134,23 +1150,35 @@ mod tests {
                 reason: RejectReason::Internal,
                 detail: String::new(),
             },
-            ClientMsg::Shutdown,
+            ClientMsg::Reject {
+                reason: RejectReason::Unauthorized,
+                detail: "shutdown token mismatch".into(),
+            },
+            ClientMsg::Shutdown { token: 0xFEED_FACE },
         ]
     }
 
     fn assert_client_eq(a: &ClientMsg, b: &ClientMsg) {
         match (a, b) {
             (
-                ClientMsg::Submit { s, t, z, a: a1, b: b1 },
+                ClientMsg::Submit {
+                    s,
+                    t,
+                    z,
+                    adv,
+                    a: a1,
+                    b: b1,
+                },
                 ClientMsg::Submit {
                     s: s2,
                     t: t2,
                     z: z2,
+                    adv: adv2,
                     a: a2,
                     b: b2,
                 },
             ) => {
-                assert_eq!((s, t, z), (s2, t2, z2));
+                assert_eq!((s, t, z, adv), (s2, t2, z2, adv2));
                 assert_eq!(a1, a2);
                 assert_eq!(b1, b2);
             }
@@ -1180,7 +1208,9 @@ mod tests {
                 assert_eq!(reason, r2);
                 assert_eq!(detail, d2);
             }
-            (ClientMsg::Shutdown, ClientMsg::Shutdown) => {}
+            (ClientMsg::Shutdown { token }, ClientMsg::Shutdown { token: t2 }) => {
+                assert_eq!(token, t2);
+            }
             (x, y) => panic!("client variant mismatch: {x:?} vs {y:?}"),
         }
     }
@@ -1254,7 +1284,7 @@ mod tests {
         let f = ClientFrame {
             corr: 9,
             tenant: 1,
-            msg: ClientMsg::Shutdown,
+            msg: ClientMsg::Shutdown { token: 0 },
         };
         let mut buf = Vec::new();
         encode_client_frame(&f, &mut buf);
@@ -1271,6 +1301,7 @@ mod tests {
                 s: 2,
                 t: 2,
                 z: 2,
+                adv: 0,
                 a: fpmat(2, 2, 41),
                 b: fpmat(2, 2, 42),
             },
@@ -1289,15 +1320,15 @@ mod tests {
         let err = peek_client_header(&bad).unwrap_err();
         assert!(err.to_string().contains("oversized"), "{err}");
 
-        // matrix dims that overflow the frame (A's dims sit after s,t,z)
+        // matrix dims that overflow the frame (A's dims sit after s,t,z,adv)
         let mut bad = good.clone();
-        bad[HEADER_LEN + 12..HEADER_LEN + 16].copy_from_slice(&u32::MAX.to_le_bytes());
+        bad[HEADER_LEN + 16..HEADER_LEN + 20].copy_from_slice(&u32::MAX.to_le_bytes());
         let err = decode_client_frame(&bad).unwrap_err();
         assert!(err.to_string().contains("matrix header"), "{err}");
 
         // scalar out of field range
         let mut bad = good.clone();
-        let first_scalar = HEADER_LEN + 12 + 8;
+        let first_scalar = HEADER_LEN + 16 + 8;
         bad[first_scalar..first_scalar + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         let err = decode_client_frame(&bad).unwrap_err();
         assert!(err.to_string().contains("field range"), "{err}");
@@ -1336,6 +1367,7 @@ mod tests {
                         s: 2,
                         t: 2,
                         z: 2,
+                        adv: (round % 3) as usize,
                         a: fpmat(2, 3, round),
                         b: fpmat(3, 2, round + 1),
                     },

@@ -3,8 +3,10 @@
 //! envelope through the framed wire codec — must decode `Y` byte-identical
 //! to the in-process fabric, for every constructible scheme, with the
 //! measured on-wire bytes matching the analytical ζ within the framing
-//! overhead budget (<5%). Plus one run under WAN link shaping and one
-//! under a chaos kill with early decode.
+//! overhead budget (<5%). Plus one run under WAN link shaping, one
+//! under a chaos kill with early decode, and one where a worker's
+//! I-share is garbled on the wire and the Byzantine decoder must
+//! locate and blame it.
 //!
 //! Kept to a single `#[test]` so the socket/thread churn of one scenario
 //! cannot interfere with another's timings.
@@ -13,7 +15,7 @@ use std::time::Duration;
 
 use cmpc::analysis;
 use cmpc::codes::SchemeParams;
-use cmpc::mpc::chaos::ChaosPlan;
+use cmpc::mpc::chaos::{ChaosPlan, FaultAction, FaultRule, PayloadClass};
 use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::runtime::manifest::{ShapeLine, TopologyManifest};
 use cmpc::transport::node::{self, run_local_cluster};
@@ -151,4 +153,54 @@ fn tcp_loopback_matches_the_in_process_fabric() {
     assert!(job.verified);
     assert!(job.early_decoded, "kill scenario should take the fast path");
     assert_eq!(job.y, want, "early-decoded distributed Y diverged");
+
+    // ---- 4. Byzantine garble over real sockets: worker `victim`'s
+    // I-share is corrupted in flight on the w2m edge; at
+    // `adversary_tolerance 1` the master must locate the bad share,
+    // decode the identical Y from the survivors, and blame the right
+    // worker index in its job report. Honest workers' I-shares are
+    // link-shaped +150 ms so the garbled share deterministically lands
+    // inside the raised t²+z+2a quota window. ----
+    let mut manifest =
+        TopologyManifest::template("age", s, t, z, m_small, seed, 1, "127.0.0.1", 0).unwrap();
+    manifest.adversary_tolerance = 1;
+    manifest.recv_timeout = Duration::from_secs(20);
+    let n = manifest.n_workers();
+    let victim = 3usize;
+    for w in (0..n).filter(|&w| w != victim) {
+        manifest.shapes.push(ShapeLine {
+            from: Some(w),
+            to: None,
+            latency_us: 150_000,
+            rate_bps: 0, // unlimited — latency only
+            burst_bytes: 0,
+            class: Some(PayloadClass::IShare),
+        });
+    }
+    let garble = ChaosPlan::new()
+        .rule(
+            FaultRule::new(FaultAction::Garble)
+                .from_node(victim)
+                .class(PayloadClass::IShare)
+                .limit(1),
+        )
+        .into_shared();
+    let report = run_local_cluster(&manifest, Some(garble)).unwrap();
+    let job = &report.master.jobs[0];
+    assert!(job.verified, "garbled cluster failed to decode");
+    assert_eq!(
+        job.y, want,
+        "Byzantine-decoded distributed Y diverged from the in-process fabric"
+    );
+    assert_eq!(job.digest, node::digest_mat(&want));
+    assert_eq!(
+        job.blamed_workers,
+        vec![victim],
+        "master blamed the wrong worker for the garbled I-share"
+    );
+    // The in-process reference run of the same manifest (tolerance
+    // included) must agree digest-for-digest with the garbled cluster.
+    let refs = node::run_reference(&manifest).unwrap();
+    assert_eq!(refs.len(), 1);
+    assert_eq!(job.digest, refs[0].1, "reference digest diverged");
 }

@@ -29,7 +29,12 @@ fn zero_parameters_rejected_as_invalid_params() {
     // the same guard protects every registry family
     for spec in SchemeSpec::CONSTRUCTIBLE {
         let err = spec
-            .resolve(SchemeParams { s: 2, t: 2, z: 0 })
+            .resolve(SchemeParams {
+                s: 2,
+                t: 2,
+                z: 0,
+                adversary_tolerance: 0,
+            })
             .unwrap_err();
         assert!(matches!(err, CmpcError::InvalidParams(_)), "{spec:?}");
     }
@@ -138,6 +143,7 @@ fn master_reports_insufficient_workers() {
         2,
         2,
         2,
+        0,
         Duration::from_millis(100),
         false,
         &[],
@@ -173,6 +179,7 @@ fn dead_worker_surfaces_recv_timeout_not_deadlock() {
         &alphas,
         1,
         1,
+        0,
         0,
         Duration::from_millis(20),
         false,

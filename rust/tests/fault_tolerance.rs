@@ -1,6 +1,8 @@
 //! Fault-tolerance acceptance suite: chaos-killed workers, the early-decode
-//! fast path, worker eviction/respawn, straggler-tail cancellation, and
-//! corruption detection — for every constructible scheme.
+//! fast path, worker eviction/respawn, straggler-tail cancellation,
+//! corruption detection, and Byzantine error location (garbled shares are
+//! *located*, excluded, blamed, and evicted) — for every constructible
+//! scheme.
 //!
 //! Kept to a single `#[test]` so the OS thread-count measurements cannot be
 //! perturbed by sibling tests provisioning runtimes in the same process.
@@ -276,4 +278,211 @@ fn chaos_killed_workers_early_decode_and_respawn() {
     let clean = dep.execute_seeded(&a, &b, 0xF00D).unwrap();
     assert!(clean.verified);
     assert_eq!(clean.y, y_expect);
+    drop(dep);
+
+    // ---- 5. Byzantine location: with tolerance `a`, `a` chaos-garbled
+    // I-shares per scheme are *located* by the error-correcting decoder,
+    // excluded from reconstruction (the product stays byte-identical),
+    // blamed in `health()`, and the blamed workers are evicted and
+    // respawned like dead ones. Honest I-shares are link-shaped slow so
+    // the garbled ones land inside the raised recovery quota
+    // deterministically. ----
+    fn slow_honest_ishares(n: usize, fast: &[usize]) -> Arc<LinkShaper> {
+        let mut shaper = LinkShaper::new();
+        for w in (0..n).filter(|w| !fast.contains(w)) {
+            shaper = shaper.rule(
+                ShapeRule::new(LinkSpec::latency(Duration::from_millis(150)))
+                    .from_node(w)
+                    .class(PayloadClass::IShare),
+            );
+        }
+        shaper.into_shared()
+    }
+    for adv in [1usize, 2] {
+        let schemes: Vec<Arc<dyn CmpcScheme>> = vec![
+            Arc::new(AgeCmpc::with_optimal_lambda(2, 2, 2)),
+            Arc::new(PolyDotCmpc::new(2, 2, 2)),
+            Arc::new(EntangledCmpc::new(2, 2, 2)),
+        ];
+        for (idx, scheme) in schemes.into_iter().enumerate() {
+            let n = scheme.n_workers();
+            let name = scheme.name();
+            let seed = 0xB1A4_E000 + (adv * 10 + idx) as u64;
+            let plan = ChaosPlan::garble_k_workers(seed, n, adv);
+            let mut victims = ChaosPlan::chosen_victims(seed, n, adv);
+            victims.sort_unstable();
+
+            // Exercise both tolerance channels: the scheme-params knob for
+            // a = 1, the protocol-config knob for a = 2 (drive_job takes
+            // the max of the two, so each alone must raise the quota).
+            let (scheme, config) = if adv == 1 {
+                let raised: Arc<dyn CmpcScheme> = match idx {
+                    0 => Arc::new(AgeCmpc::with_optimal_lambda(2, 2, 2).with_adversary_tolerance(1)),
+                    1 => Arc::new(PolyDotCmpc::new(2, 2, 2).with_adversary_tolerance(1)),
+                    _ => Arc::new(EntangledCmpc::new(2, 2, 2).with_adversary_tolerance(1)),
+                };
+                (
+                    raised,
+                    ProtocolConfig::builder()
+                        .threads(1)
+                        .chaos(plan.into_shared())
+                        .shaper(slow_honest_ishares(n, &victims))
+                        .build(),
+                )
+            } else {
+                (
+                    scheme,
+                    ProtocolConfig::builder()
+                        .threads(1)
+                        .adversary_tolerance(adv)
+                        .chaos(plan.into_shared())
+                        .shaper(slow_honest_ishares(n, &victims))
+                        .build(),
+                )
+            };
+            let dep = Deployment::for_scheme(scheme, config).unwrap();
+
+            let out = dep.execute_seeded(&a, &b, 0x5EED).unwrap_or_else(|e| {
+                panic!("{name} a={adv}: {adv} garbled shares should be located: {e}")
+            });
+            assert!(out.verified, "{name} a={adv}");
+            assert_eq!(
+                out.y, y_expect,
+                "{name} a={adv}: decode diverged despite error location"
+            );
+            assert_eq!(
+                out.blamed_workers, victims,
+                "{name} a={adv}: wrong workers blamed"
+            );
+
+            // Blame surfaces in health and turns into eviction + respawn.
+            wait_for_respawns(&dep, adv as u64);
+            let health = dep.health();
+            assert_eq!(health.byzantine_detected, adv as u64, "{name} a={adv}");
+            assert_eq!(health.blamed_workers, victims, "{name} a={adv}");
+            assert_eq!(health.evictions, adv as u64, "{name} a={adv}");
+            assert_eq!(health.respawns, adv as u64, "{name} a={adv}");
+            let evictions = dep.runtime().evictions();
+            assert_eq!(evictions.len(), adv, "{name} a={adv}");
+            let mut evicted: Vec<usize> = evictions.iter().map(|e| e.worker).collect();
+            evicted.sort_unstable();
+            assert_eq!(evicted, victims, "{name} a={adv}: evicted wrong workers");
+            for ev in &evictions {
+                assert!(
+                    ev.reason.contains("blamed"),
+                    "{name} a={adv}: eviction reason: {}",
+                    ev.reason
+                );
+            }
+            assert_eq!(dep.worker_threads(), n, "{name} a={adv}");
+
+            // Garble rules are one-shot: the job after the respawn is clean,
+            // byte-identical, and accrues no further blame.
+            let next = dep.execute_seeded(&a, &b, 0x5EED).unwrap();
+            assert!(next.verified, "{name} a={adv}: post-blame job");
+            assert_eq!(next.y, y_expect, "{name} a={adv}");
+            assert!(next.blamed_workers.is_empty(), "{name} a={adv}");
+            assert_eq!(dep.health().byzantine_detected, adv as u64, "{name} a={adv}");
+            drop(dep);
+        }
+    }
+
+    // ---- 6. Overload: `a + 1` garbled shares at tolerance `a` is a typed
+    // refusal — never a panic, never a silently wrong product — and the
+    // deployment is not poisoned. ----
+    {
+        let scheme: Arc<dyn CmpcScheme> = Arc::new(AgeCmpc::with_optimal_lambda(2, 2, 2));
+        let n = scheme.n_workers();
+        let seed = 0xB1A4_EBAD;
+        let plan = ChaosPlan::garble_k_workers(seed, n, 2);
+        let victims = ChaosPlan::chosen_victims(seed, n, 2);
+        let dep = Deployment::for_scheme(
+            scheme,
+            ProtocolConfig::builder()
+                .threads(1)
+                .adversary_tolerance(1) // quota 8 locates at most 1 error
+                .chaos(plan.into_shared())
+                .shaper(slow_honest_ishares(n, &victims))
+                .build(),
+        )
+        .unwrap();
+        let err = dep.execute_seeded(&a, &b, 0x5EED).unwrap_err();
+        assert!(
+            matches!(err, CmpcError::NotDecodable(_)),
+            "2 errors at tolerance 1 must be NotDecodable, got: {err}"
+        );
+        assert_eq!(dep.health().byzantine_detected, 0, "no blame on refusal");
+        assert!(dep.health().blamed_workers.is_empty());
+        let clean = dep.execute_seeded(&a, &b, 0x5EED).unwrap();
+        assert!(clean.verified);
+        assert_eq!(clean.y, y_expect);
+        drop(dep);
+    }
+
+    // ---- 7. Combined garble + kill with early decode at the raised
+    // quota: one worker garbles its I-share, two more die mid-exchange,
+    // and the fast path still returns the byte-identical product the
+    // moment `t²+z+2a` usable shares are in — blaming the garbler and
+    // evicting all three. ----
+    {
+        let scheme: Arc<dyn CmpcScheme> = Arc::new(AgeCmpc::with_optimal_lambda(2, 2, 2));
+        let n = scheme.n_workers();
+        let z = scheme.params().z;
+        let kill_seed = 0xC0FFEE_BAD;
+        let mut killed = ChaosPlan::chosen_victims(kill_seed, n, z);
+        killed.sort_unstable();
+        let garbler = (0..n).find(|w| !killed.contains(w)).unwrap();
+        let plan = ChaosPlan::kill_k_workers_after_exchange(kill_seed, n, z).rule(
+            FaultRule::new(FaultAction::Garble)
+                .from_node(garbler)
+                .class(PayloadClass::IShare)
+                .limit(1),
+        );
+        let dep = Deployment::for_scheme(
+            scheme,
+            ProtocolConfig::builder()
+                .threads(1)
+                .adversary_tolerance(1)
+                .early_decode(true)
+                .recv_timeout(Duration::from_secs(10))
+                .chaos(plan.into_shared())
+                .shaper(slow_honest_ishares(n, &[garbler]))
+                .build(),
+        )
+        .unwrap();
+        let out = dep.execute_seeded(&a, &b, 0x5EED).unwrap_or_else(|e| {
+            panic!("garble+kill at raised quota should early-decode: {e}")
+        });
+        assert!(out.verified);
+        assert!(out.early_decoded, "fast path not taken under garble+kill");
+        assert_eq!(out.y, y_expect, "garble+kill decode diverged");
+        assert_eq!(out.blamed_workers, vec![garbler]);
+        assert_eq!(out.stragglers_tolerated, n - 8); // quota t²+z+2a = 8
+
+        // Three evictions: two dead, one blamed.
+        wait_for_respawns(&dep, (z + 1) as u64);
+        let health = dep.health();
+        assert_eq!(health.byzantine_detected, 1);
+        assert_eq!(health.blamed_workers, vec![garbler]);
+        assert_eq!(health.evictions, (z + 1) as u64);
+        let evictions = dep.runtime().evictions();
+        let blamed_ev: Vec<&str> = evictions
+            .iter()
+            .filter(|e| e.reason.contains("blamed"))
+            .map(|e| e.reason.as_str())
+            .collect();
+        assert_eq!(blamed_ev.len(), 1, "exactly one blamed eviction: {evictions:?}");
+        let mut evicted: Vec<usize> = evictions.iter().map(|e| e.worker).collect();
+        evicted.sort_unstable();
+        let mut expect = killed.clone();
+        expect.push(garbler);
+        expect.sort_unstable();
+        assert_eq!(evicted, expect, "evicted set must be killed + blamed");
+        assert_eq!(dep.worker_threads(), n);
+
+        // Full complement again: the next job is clean and byte-identical.
+        let next = dep.execute_seeded(&a, &b, 0x5EED).unwrap();
+        assert!(next.verified);
+        assert_eq!(next.y, y_expect);
+    }
 }

@@ -1,6 +1,8 @@
-//! Serving-gateway acceptance pins (v0.7): byte-identity with in-process
-//! execution, typed multi-tenant admission, observable batching, and a
-//! fixed-size poller thread pool under many concurrent connections.
+//! Serving-gateway acceptance pins (v0.7/v0.8): byte-identity with
+//! in-process execution, typed multi-tenant admission, observable batching,
+//! a fixed-size poller thread pool under many concurrent connections,
+//! token-authenticated shutdown, and the teardown flush (queued results
+//! are delivered, not dropped, when the gateway stops).
 
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::time::Duration;
@@ -63,7 +65,7 @@ fn gateway_results_match_in_process_execution() {
         let a = FpMat::random(&mut rng, 8, 8);
         let b = FpMat::random(&mut rng, 8, 8);
         let reply = client
-            .call(corr, 2, 2, 2, a.clone(), b.clone())
+            .call(corr, 2, 2, 2, 0, a.clone(), b.clone())
             .expect("round trip");
         match reply {
             ClientReply::Accepted {
@@ -116,7 +118,7 @@ fn over_quota_tenant_is_rejected_without_hurting_neighbors() {
     let mut job = |client: &mut GatewayClient, corr: u64| {
         let a = FpMat::random(&mut rng, 8, 8);
         let b = FpMat::random(&mut rng, 8, 8);
-        client.call(corr, 2, 2, 2, a, b).unwrap()
+        client.call(corr, 2, 2, 2, 0, a, b).unwrap()
     };
 
     let mut limited = GatewayClient::connect(&addr, 1).unwrap();
@@ -170,7 +172,7 @@ fn malformed_submissions_never_touch_a_deployment() {
     let mut client = GatewayClient::connect(&addr, 0).unwrap();
     // s=3 does not divide m=8: shape validation must fail at the door.
     let reply = client
-        .call(7, 3, 2, 2, FpMat::zeros(8, 8), FpMat::zeros(8, 8))
+        .call(7, 3, 2, 2, 0, FpMat::zeros(8, 8), FpMat::zeros(8, 8))
         .unwrap();
     match reply {
         ClientReply::Rejected { reason, corr, .. } => {
@@ -181,7 +183,7 @@ fn malformed_submissions_never_touch_a_deployment() {
     }
     // The connection survives a malformed submission…
     let reply = client
-        .call(8, 0, 0, 0, FpMat::zeros(4, 4), FpMat::zeros(4, 4))
+        .call(8, 0, 0, 0, 0, FpMat::zeros(4, 4), FpMat::zeros(4, 4))
         .unwrap();
     assert!(matches!(
         reply,
@@ -209,7 +211,7 @@ fn oversized_and_off_shape_submissions_are_typed_rejects() {
     let mut client = GatewayClient::connect(&addr, 0).unwrap();
     // m=64 ⇒ ~32 KiB payload, far over the 1 KiB cap.
     let reply = client
-        .call(1, 2, 2, 2, FpMat::zeros(64, 64), FpMat::zeros(64, 64))
+        .call(1, 2, 2, 2, 0, FpMat::zeros(64, 64), FpMat::zeros(64, 64))
         .unwrap();
     match reply {
         ClientReply::Rejected { reason, .. } => assert_eq!(reason, RejectReason::TooLarge),
@@ -226,6 +228,7 @@ fn oversized_and_off_shape_submissions_are_typed_rejects() {
             s: 2,
             t: 2,
             z: 2,
+            adv: 0,
             m: 8,
         }),
         ..GatewayConfig::default()
@@ -233,14 +236,14 @@ fn oversized_and_off_shape_submissions_are_typed_rejects() {
     let (gateway, engine, addr) = start_local(config);
     let mut client = GatewayClient::connect(&addr, 0).unwrap();
     let reply = client
-        .call(2, 2, 2, 1, FpMat::zeros(4, 4), FpMat::zeros(4, 4))
+        .call(2, 2, 2, 1, 0, FpMat::zeros(4, 4), FpMat::zeros(4, 4))
         .unwrap();
     match reply {
         ClientReply::Rejected { reason, .. } => assert_eq!(reason, RejectReason::Malformed),
         other => panic!("off-shape job admitted: {other:?}"),
     }
     assert!(matches!(
-        client.call(3, 2, 2, 2, FpMat::zeros(8, 8), FpMat::zeros(8, 8)).unwrap(),
+        client.call(3, 2, 2, 2, 0, FpMat::zeros(8, 8), FpMat::zeros(8, 8)).unwrap(),
         ClientReply::Accepted { .. }
     ));
     assert_eq!(engine.provisioned(), 1);
@@ -266,7 +269,7 @@ fn concurrent_compatible_jobs_batch_onto_one_deployment() {
             scope.spawn(move || {
                 let (a, b) = job_matrices(77, k, 8);
                 let mut client = GatewayClient::connect(&addr, 0).unwrap();
-                let reply = client.call(k, 2, 2, 2, a, b).unwrap();
+                let reply = client.call(k, 2, 2, 2, 0, a, b).unwrap();
                 assert!(matches!(reply, ClientReply::Accepted { .. }));
             });
         }
@@ -295,6 +298,7 @@ fn load_driver_digests_match_direct_computation() {
         s: 2,
         t: 2,
         z: 2,
+        adv: 0,
         seed: 123,
         qps: None,
     };
@@ -327,7 +331,7 @@ fn many_connections_do_not_spawn_threads() {
     let (a, b) = job_matrices(9, 0, 8);
     let mut warm = GatewayClient::connect(&addr, 0).unwrap();
     assert!(matches!(
-        warm.call(0, 2, 2, 2, a, b).unwrap(),
+        warm.call(0, 2, 2, 2, 0, a, b).unwrap(),
         ClientReply::Accepted { .. }
     ));
     let baseline = os_thread_count();
@@ -337,7 +341,7 @@ fn many_connections_do_not_spawn_threads() {
             scope.spawn(move || {
                 let (a, b) = job_matrices(9, k + 1, 8);
                 let mut client = GatewayClient::connect(&addr, 0).unwrap();
-                let reply = client.call(k + 1, 2, 2, 2, a, b).unwrap();
+                let reply = client.call(k + 1, 2, 2, 2, 0, a, b).unwrap();
                 assert!(matches!(reply, ClientReply::Accepted { .. }));
             });
         }
@@ -356,4 +360,105 @@ fn many_connections_do_not_spawn_threads() {
     );
     assert_eq!(stats.accepted, 65);
     assert_eq!(stats.completed, 65);
+}
+
+/// v0.8: a client `Shutdown` frame must carry the gateway's admin token.
+/// A mismatch is a typed `Unauthorized` reject — the connection and the
+/// gateway both keep serving — and only the matching token stops intake.
+#[test]
+fn shutdown_requires_the_admin_token() {
+    let _serial = serial();
+    const TOKEN: u64 = 0xD00_57EA_1ED;
+    let config = GatewayConfig {
+        shutdown_token: Some(TOKEN),
+        ..GatewayConfig::default()
+    };
+    let (gateway, _engine, addr) = start_local(config);
+
+    // Wrong token: typed refusal, nothing stops.
+    let mut intruder = GatewayClient::connect(&addr, 0).unwrap();
+    intruder.request_shutdown(TOKEN ^ 1).unwrap();
+    match intruder.recv().unwrap() {
+        ClientReply::Rejected { reason, .. } => {
+            assert_eq!(reason, RejectReason::Unauthorized)
+        }
+        other => panic!("unauthorized shutdown was honored: {other:?}"),
+    }
+    assert!(!gateway.stopping(), "wrong token stopped the gateway");
+    // …and the same connection still serves jobs.
+    let (a, b) = job_matrices(55, 0, 8);
+    match intruder.call(1, 2, 2, 2, 0, a.clone(), b.clone()).unwrap() {
+        ClientReply::Accepted { y, .. } => assert_eq!(y, a.transpose().matmul(&b)),
+        other => panic!("job after refused shutdown: {other:?}"),
+    }
+
+    // The matching token stops intake (observable via `stopping`).
+    GatewayClient::connect(&addr, 0)
+        .unwrap()
+        .shutdown_gateway(TOKEN)
+        .unwrap();
+    gateway.wait();
+    let stats = gateway.shutdown();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(
+        stats.rejected[RejectReason::Unauthorized.as_u8() as usize],
+        1
+    );
+}
+
+/// v0.8 teardown flush: results still queued when shutdown starts are
+/// delivered to their clients before the connections drop — a batching
+/// window far beyond test scale guarantees the jobs are *only* flushed by
+/// the shutdown drain itself.
+#[test]
+fn shutdown_flushes_queued_results_to_clients() {
+    let _serial = serial();
+    const TOKEN: u64 = 7;
+    let jobs = 8u64;
+    let config = GatewayConfig {
+        max_batch: 64,
+        max_wait: Duration::from_secs(3600),
+        shutdown_token: Some(TOKEN),
+        ..GatewayConfig::default()
+    };
+    let (gateway, _engine, addr) = start_local(config);
+    std::thread::scope(|scope| {
+        for k in 0..jobs {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let (a, b) = job_matrices(44, k, 8);
+                let mut client = GatewayClient::connect(&addr, 0).unwrap();
+                match client.call(k, 2, 2, 2, 0, a.clone(), b.clone()).unwrap() {
+                    ClientReply::Accepted { digest, y, .. } => {
+                        assert_eq!(y, a.transpose().matmul(&b), "job {k}");
+                        assert_eq!(digest, digest_mat(&y), "job {k}");
+                    }
+                    ClientReply::Rejected { reason, detail, .. } => {
+                        panic!("queued job {k} lost in teardown: {reason} ({detail})")
+                    }
+                }
+            });
+        }
+        // Wait until every job is admitted and parked in the batch queue
+        // (the hour-long window cannot flush them), then pull the plug:
+        // the clean-shutdown drain must execute and deliver all of them.
+        let t0 = std::time::Instant::now();
+        while gateway.stats().accepted < jobs {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "jobs not admitted: {:?}",
+                gateway.stats()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        GatewayClient::connect(&addr, 0)
+            .unwrap()
+            .shutdown_gateway(TOKEN)
+            .unwrap();
+    });
+    let stats = gateway.shutdown();
+    assert_eq!(stats.accepted, jobs);
+    assert_eq!(stats.completed, jobs, "queued results were dropped in teardown");
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.queue_depth, 0, "jobs left behind in the batch queues");
 }
