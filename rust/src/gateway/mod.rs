@@ -101,8 +101,18 @@ pub struct GatewayConfig {
     pub shape_lock: Option<BatchKey>,
     /// When set, a client `Shutdown` frame must carry this token
     /// (`gateway_token` manifest line); mismatches are refused with
-    /// [`RejectReason::Unauthorized`] and the gateway keeps serving.
-    /// `None` = any token stops the gateway (single-operator rigs).
+    /// [`RejectReason::Unauthorized`], the offending connection is
+    /// dropped (each guess costs a reconnect), and the gateway keeps
+    /// serving. `None` = any token stops the gateway (single-operator
+    /// rigs).
+    ///
+    /// **Interim hardening only**: the client plane is neither encrypted
+    /// nor authenticated yet (ROADMAP TLS/auth item), so the token rides
+    /// the wire in cleartext and any on-path observer of a legitimate
+    /// shutdown learns it. Treat it as protection against *accidental*
+    /// and *drive-by* shutdowns on non-loopback binds, not against an
+    /// eavesdropping adversary — keep non-loopback gateways on trusted
+    /// segments until the transport is secured.
     pub shutdown_token: Option<u64>,
 }
 
@@ -580,9 +590,13 @@ impl Sink for GatewayInner {
             }
             ClientMsg::Shutdown { token } => {
                 if let Some(expected) = self.shutdown_token {
-                    if token != expected {
-                        // Wrong token: typed refusal, connection stays
-                        // usable, gateway keeps serving.
+                    if token ^ expected != 0 {
+                        // Wrong token: typed refusal, then *drop the
+                        // connection* — the gateway keeps serving, but a
+                        // guesser pays a full reconnect per attempt
+                        // instead of streaming guesses down one socket.
+                        // (The XOR-then-test compare touches every bit of
+                        // the token before branching.)
                         self.reject(
                             conn,
                             frame.corr,
@@ -590,7 +604,7 @@ impl Sink for GatewayInner {
                             RejectReason::Unauthorized,
                             "shutdown refused: admin token mismatch".to_string(),
                         );
-                        return FrameOutcome::Continue;
+                        return FrameOutcome::CloseAfterFlush;
                     }
                 }
                 self.stop.store(true, Ordering::Release);

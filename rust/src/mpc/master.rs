@@ -10,12 +10,27 @@
 //! `t²+z+2a` arrivals: the extra `2a` evaluations are the Reed–Solomon
 //! margin that lets the master *locate* up to `a` garbled shares (see
 //! [`locate_corrupt_evaluations`]) instead of failing on them. Location
-//! runs over per-share scalar fingerprints, blamed shares are excluded
-//! (and reported in [`MasterOutput::blamed_workers`] for the runtime to
-//! evict), and reconstruction proceeds on `t²+z` consistent shares —
-//! byte-identical to a fault-free run, since interpolation over `GF(p)`
-//! is exact and unique. More than `a` corruptions is a typed
-//! [`CmpcError::NotDecodable`], never a wrong product.
+//! runs over per-share scalar fingerprints whose random weights are drawn
+//! from a **master-local secret RNG** — never derived from anything a
+//! worker sees, so a Byzantine worker cannot craft a corruption that is
+//! invisible to the fingerprint (see `locate_corrupt_shares` below). Blamed
+//! shares are excluded (and reported in [`MasterOutput::blamed_workers`]
+//! for the runtime to evict), the surviving candidate set is verified
+//! **against the full share data** before it is trusted, and
+//! reconstruction proceeds on `t²+z` consistent shares — byte-identical
+//! to a fault-free run, since interpolation over `GF(p)` is exact and
+//! unique.
+//!
+//! The correction guarantee is the Reed–Solomon unique-decoding bound:
+//! it holds for **up to `a` corruptions**. Beyond the budget the master
+//! refuses with a typed [`CmpcError::NotDecodable`] unless the `> a`
+//! corrupted shares are mutually consistent, in full matrix data, with a
+//! wrong degree-`< t²+z` polynomial through the honest shares — which
+//! requires knowing honest share values the corrupt workers never see,
+//! but is not information-theoretically excluded. Deployments that must
+//! rule out even that alignment should keep `verify = true` as the
+//! backstop: the end-to-end `Y = AᵀB` product check catches any wrong
+//! reconstruction regardless of how it was produced.
 //!
 //! The master endpoint is shared by every in-flight job of a deployment:
 //! [`run_master`] receives through a [`JobRouter`], which filters envelopes
@@ -74,6 +89,7 @@ use crate::metrics::WorkerCounters;
 use crate::mpc::network::{ControlMsg, Fabric, JobId, JobRouter, Payload, PooledMat};
 use crate::poly::interp::{locate_corrupt_evaluations, try_vandermonde_inverse_rows};
 use crate::runtime::pool::{ScratchPool, WorkerPool};
+use crate::util::rng::ChaChaRng;
 
 /// Result of the master phase.
 pub struct MasterOutput {
@@ -95,30 +111,175 @@ pub struct MasterOutput {
     pub blamed_workers: Vec<usize>,
 }
 
-/// Per-job fingerprint weight: any fixed nonzero field point defines a
-/// valid fingerprint family (the weighted share combination is itself an
-/// evaluation of one dense degree-`< t²+z` polynomial); deriving it from
-/// the job id makes a crafted fingerprint-invisible corruption
-/// unrepeatable across jobs while keeping every path (in-process,
-/// multi-process, gateway) byte-deterministic.
-fn fingerprint_point(job: JobId) -> u64 {
-    2 + job.wrapping_mul(0x9E37_79B9_7F4A_7C15) % (P - 2)
+/// Independent secret fingerprint components per location attempt. A
+/// fixed corruption vector survives one uniformly random weighted sum
+/// with probability exactly `1/P`; surviving both components of an
+/// attempt is `1/P²` ≈ 2.3·10⁻¹⁰.
+const FP_COMPONENTS: usize = 2;
+/// Location attempts with fresh secret weights before giving up. Each
+/// retry fires only when a corruption slipped every fingerprint of the
+/// previous attempt *and* was then caught by the full-data verification,
+/// so reaching the bound is astronomically unlikely under `≤ a` faults.
+const FP_ATTEMPTS: usize = 4;
+
+/// OS-entropy seed for the master-local fingerprint RNG. `RandomState`
+/// keys come from the platform's secure entropy source; the seed never
+/// leaves this process, is never derived from the job id or any other
+/// value a worker can observe, and is drawn *after* the shares arrived —
+/// a Byzantine worker cannot target its corruption at the weights.
+fn entropy_seed() -> u64 {
+    use std::collections::hash_map::RandomState;
+    use std::hash::{BuildHasher, Hasher};
+    RandomState::new().build_hasher().finish()
 }
 
-/// Compress one I-share into a single scalar: `Σ_p data[p]·r^p` (Horner
-/// over the reversed scalars). Position `p` of the I-shares is an
-/// evaluation of a dense polynomial of degree `< t²+z` at the worker's α,
-/// so the fingerprints are evaluations of the *weighted-sum* polynomial —
-/// the error locator runs on scalars instead of whole matrices. A
-/// corrupted share evades the fingerprint only if its corruption vector is
-/// a root of the weight polynomial (probability ~`len/P`); the verify-mode
-/// product check backstops that sliver.
-fn fingerprint(data: &[u32], r: u64) -> u64 {
+/// Compress one I-share into a single scalar: `Σ_p w[p]·data[p]`.
+/// Position `p` across the I-shares is an evaluation of one dense
+/// polynomial of degree `< t²+z` at the worker's α, so for any fixed
+/// weight vector the fingerprints are evaluations of the *weighted-sum*
+/// polynomial — the error locator runs on scalars instead of whole
+/// matrices. With uniformly random secret weights, a fixed nonzero
+/// corruption vector hashes to zero with probability exactly `1/P`.
+fn fingerprint(data: &[u32], weights: &[u64]) -> u64 {
     let mut acc = 0u64;
-    for &x in data.iter().rev() {
-        acc = ff::add(ff::mul(acc, r), x as u64);
+    for (&w, &x) in weights.iter().zip(data.iter()) {
+        acc = ff::add(acc, ff::mul(w, x as u64));
     }
     acc
+}
+
+/// Check that every share in `kept` lies on one polynomial of degree
+/// `< k_dim` **position-by-position in full data** — the deterministic
+/// acceptance test behind the probabilistic fingerprint location. The
+/// interpolant through the first `k_dim` shares is evaluated at each
+/// surplus share's α via scalar Lagrange weights and compared entry-wise;
+/// with distinct αs, any single inconsistent share in the set forces at
+/// least one surplus mismatch (two distinct degree-`< k_dim` polynomials
+/// cannot agree at `k_dim` points), so a corruption that survived the
+/// fingerprints cannot survive this.
+fn shares_fully_consistent(kept: &[(u64, &[u32])], k_dim: usize) -> bool {
+    if kept.len() < k_dim {
+        return false;
+    }
+    let base: Vec<u64> = kept[..k_dim].iter().map(|&(x, _)| x).collect();
+    let len = kept[0].1.len();
+    if kept.iter().any(|&(_, d)| d.len() != len) {
+        return false;
+    }
+    let mut weights = vec![0u64; k_dim];
+    for &(xm, data_m) in &kept[k_dim..] {
+        for (j, w) in weights.iter_mut().enumerate() {
+            let mut num = 1u64;
+            let mut den = 1u64;
+            for (i, &bi) in base.iter().enumerate() {
+                if i != j {
+                    num = ff::mul(num, ff::sub(xm, bi));
+                    den = ff::mul(den, ff::sub(base[j], bi));
+                }
+            }
+            *w = ff::mul(num, ff::inv(den));
+        }
+        for p in 0..len {
+            let mut acc = 0u64;
+            for (j, &w) in weights.iter().enumerate() {
+                acc = ff::add(acc, ff::mul(w, kept[j].1[p] as u64));
+            }
+            if acc != data_m[p] as u64 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Locate up to `a` corrupted shares among `shares` (`(α, full data)`
+/// pairs, at least `k_dim + 2a` of them for the full correction radius).
+///
+/// Three layers compose into the soundness story:
+/// 1. **Secret fingerprints** — each attempt compresses every share with
+///    [`FP_COMPONENTS`] independent uniformly random weight vectors drawn
+///    from `rng` (master-local, seeded from OS entropy after the shares
+///    are already in hand). Unlike a public or job-derived fingerprint
+///    point, the weights are unpredictable to the workers, so a crafted
+///    corruption with a vanishing weighted sum is a `1/P` lottery per
+///    component, not a computable construction.
+/// 2. **Error location** — [`locate_corrupt_evaluations`]
+///    (Berlekamp–Welch, polynomial-time) runs per component; the blamed
+///    union across components is the candidate corrupt set.
+/// 3. **Full-data verification** — the surviving candidate set must be
+///    consistent position-by-position in the actual share matrices
+///    ([`shares_fully_consistent`]); a fingerprint-evading corruption is
+///    caught here and the attempt retries with fresh secret weights.
+///
+/// Shares whose length differs from the (honest-majority) modal length
+/// can never be consistent and are pre-blamed before fingerprinting.
+/// Returns blamed indices into `shares` (sorted), or `None` when the
+/// faults exceed the correction radius — the caller's typed
+/// [`CmpcError::NotDecodable`].
+fn locate_corrupt_shares(
+    shares: &[(u64, &[u32])],
+    k_dim: usize,
+    a: usize,
+    rng: &mut ChaChaRng,
+) -> Option<Vec<usize>> {
+    let n = shares.len();
+    if n < k_dim {
+        return None;
+    }
+    // A repeated α can only come from a forged duplicate sender id (each
+    // worker evaluates at one α and sends once per job): refuse it typed,
+    // exactly like the `a = 0` path's singular Vandermonde — and never
+    // feed it to the Lagrange denominators below, which would divide by
+    // zero.
+    let mut seen_alphas: Vec<u64> = shares.iter().map(|&(x, _)| x).collect();
+    seen_alphas.sort_unstable();
+    if seen_alphas.windows(2).any(|w| w[0] == w[1]) {
+        return None;
+    }
+    // Honest shares (a strict majority: ≥ k_dim + a of n ≤ k_dim + 2a)
+    // agree on the block length; any minority-length share is corrupt by
+    // construction and would otherwise defeat entry-wise comparison.
+    let mut lens: Vec<usize> = shares.iter().map(|s| s.1.len()).collect();
+    lens.sort_unstable();
+    let modal_len = lens[lens.len() / 2];
+    let pre_blamed: Vec<usize> = (0..n).filter(|&i| shares[i].1.len() != modal_len).collect();
+    if pre_blamed.len() > a {
+        return None;
+    }
+    let sized: Vec<usize> = (0..n).filter(|i| !pre_blamed.contains(i)).collect();
+    let budget = a - pre_blamed.len();
+
+    for _attempt in 0..FP_ATTEMPTS {
+        let mut blamed: Vec<usize> = pre_blamed.clone();
+        for _component in 0..FP_COMPONENTS {
+            let weights: Vec<u64> = (0..modal_len).map(|_| rng.field_element()).collect();
+            let pts: Vec<(u64, u64)> = sized
+                .iter()
+                .map(|&i| (shares[i].0, fingerprint(shares[i].1, &weights)))
+                .collect();
+            let located = locate_corrupt_evaluations(&pts, k_dim, budget)?;
+            for idx in located {
+                let share_idx = sized[idx];
+                if !blamed.contains(&share_idx) {
+                    blamed.push(share_idx);
+                }
+            }
+        }
+        if blamed.len() > a {
+            return None;
+        }
+        blamed.sort_unstable();
+        let kept: Vec<(u64, &[u32])> = (0..n)
+            .filter(|i| !blamed.contains(i))
+            .map(|i| shares[i])
+            .collect();
+        if shares_fully_consistent(&kept, k_dim) {
+            return Some(blamed);
+        }
+        // A corruption hashed to zero under every weight vector of this
+        // attempt (probability ≤ a/P² ≈ 10⁻⁹): redraw and relocate.
+    }
+    None
 }
 
 /// Wall-clock windows of the master phase, measured separately so
@@ -235,26 +396,27 @@ pub fn run_master(
     let t_rec = Instant::now();
 
     // --- Byzantine error location (a > 0) ---
-    // Fingerprint every arrived share into one scalar and run the
-    // decode-and-verify error locator over the (α, fingerprint) pairs: with
-    // k_dim+2a points and ≤ a corruptions, the minimal consistent exclusion
-    // set is exactly the corrupted shares. Locatees are excluded (and
-    // reported for eviction); more than `a` corruptions is a typed refusal
-    // — never a silently wrong product.
+    // Run the secret-fingerprint error locator over the arrived shares:
+    // with k_dim+2a shares and ≤ a corruptions, the blamed set is exactly
+    // the corrupted shares, and the kept set is verified against the full
+    // share data before it is trusted (see `locate_corrupt_shares`).
+    // Locatees are excluded (and reported for eviction); faults beyond the
+    // correction radius are a typed refusal.
     let mut blamed_workers: Vec<usize> = Vec::new();
     if adversary_tolerance > 0 {
-        let r = fingerprint_point(job);
-        let fp_pts: Vec<(u64, u64)> = arrived
+        let share_views: Vec<(u64, &[u32])> = arrived
             .iter()
-            .map(|(id, share)| (alphas[*id], fingerprint(&share.data, r)))
+            .map(|(id, share)| (alphas[*id], share.data.as_slice()))
             .collect();
-        let blamed_idx = locate_corrupt_evaluations(&fp_pts, k_dim, adversary_tolerance)
-            .ok_or_else(|| {
-                CmpcError::NotDecodable(format!(
-                    "job {job}: more than {adversary_tolerance} corrupted I-shares \
-                     among {needed} — error location failed (raise adversary_tolerance?)"
-                ))
-            })?;
+        let mut fp_rng = ChaChaRng::seed_from_u64(entropy_seed());
+        let blamed_idx =
+            locate_corrupt_shares(&share_views, k_dim, adversary_tolerance, &mut fp_rng)
+                .ok_or_else(|| {
+                    CmpcError::NotDecodable(format!(
+                        "job {job}: more than {adversary_tolerance} corrupted I-shares \
+                         among {needed} — error location failed (raise adversary_tolerance?)"
+                    ))
+                })?;
         if !blamed_idx.is_empty() {
             blamed_workers = blamed_idx.iter().map(|&i| arrived[i].0).collect();
             blamed_workers.sort_unstable();
@@ -453,4 +615,142 @@ pub fn run_master(
             ack_wait,
         },
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build `n` I-share-shaped vectors: position `p` across the shares is
+    /// the evaluation of one dense degree-`< k_dim` polynomial at αₙ = n+1.
+    fn make_shares(k_dim: usize, len: usize, n: usize, seed: u64) -> (Vec<u64>, Vec<Vec<u32>>) {
+        let mut rng = ChaChaRng::seed_from_u64(seed);
+        let coeffs: Vec<Vec<u64>> = (0..k_dim)
+            .map(|_| (0..len).map(|_| rng.field_element()).collect())
+            .collect();
+        let alphas: Vec<u64> = (1..=n as u64).collect();
+        let shares = alphas
+            .iter()
+            .map(|&alpha| {
+                (0..len)
+                    .map(|p| {
+                        let mut acc = 0u64;
+                        let mut xp = 1u64;
+                        for c in &coeffs {
+                            acc = ff::add(acc, ff::mul(c[p], xp));
+                            xp = ff::mul(xp, alpha);
+                        }
+                        acc as u32
+                    })
+                    .collect()
+            })
+            .collect();
+        (alphas, shares)
+    }
+
+    fn views<'a>(alphas: &[u64], shares: &'a [Vec<u32>]) -> Vec<(u64, &'a [u32])> {
+        alphas
+            .iter()
+            .zip(shares)
+            .map(|(&x, s)| (x, s.as_slice()))
+            .collect()
+    }
+
+    #[test]
+    fn random_corruption_is_located() {
+        let (k_dim, len, a) = (5usize, 64usize, 2usize);
+        let (alphas, mut shares) = make_shares(k_dim, len, k_dim + 2 * a, 1);
+        shares[3][17] = ff::add(shares[3][17] as u64, 1234) as u32;
+        shares[6][0] = ff::add(shares[6][0] as u64, 7) as u32;
+        let mut rng = ChaChaRng::seed_from_u64(99);
+        let blamed =
+            locate_corrupt_shares(&views(&alphas, &shares), k_dim, a, &mut rng).expect("located");
+        assert_eq!(blamed, vec![3, 6]);
+    }
+
+    /// Regression for the public-fingerprint hole: a Byzantine worker that
+    /// knows a *predictable* fingerprint point `r` (the old scheme derived
+    /// it from the job id) can corrupt two positions with
+    /// `d₀·r⁰ = −d₁·r¹`, making the corruption a root of the weight
+    /// polynomial — invisible to any fingerprint at `r`. The locator's
+    /// weights are now secret, uniform, and drawn after the shares are in
+    /// hand, so the same crafted share must be blamed.
+    #[test]
+    fn crafted_fingerprint_evasion_is_still_located() {
+        let (k_dim, len, a) = (4usize, 48usize, 1usize);
+        let (alphas, mut shares) = make_shares(k_dim, len, k_dim + 2 * a, 2);
+        // The point the attacker predicts (any fixed/public derivation).
+        let r = 2 + 0xDEAD_BEEFu64 % (P - 2);
+        let d0 = 4242u64;
+        let d1 = ff::neg(ff::mul(d0, ff::inv(r))); // d0 + d1·r ≡ 0 (mod p)
+        shares[2][0] = ff::add(shares[2][0] as u64, d0) as u32;
+        shares[2][1] = ff::add(shares[2][1] as u64, d1) as u32;
+        // Sanity: the corruption really is invisible to a fingerprint at r.
+        let evade: u64 = ff::add(d0, ff::mul(d1, r));
+        assert_eq!(evade, 0, "attack vector must vanish at the public point");
+        let mut rng = ChaChaRng::seed_from_u64(5);
+        let blamed =
+            locate_corrupt_shares(&views(&alphas, &shares), k_dim, a, &mut rng).expect("located");
+        assert_eq!(blamed, vec![2], "crafted corruption evaded the locator");
+    }
+
+    #[test]
+    fn beyond_budget_is_refused_not_misdecoded() {
+        let (k_dim, len, a) = (4usize, 32usize, 1usize);
+        let (alphas, mut shares) = make_shares(k_dim, len, k_dim + 2 * a, 3);
+        shares[0][3] = ff::add(shares[0][3] as u64, 5) as u32;
+        shares[4][9] = ff::add(shares[4][9] as u64, 11) as u32;
+        let mut rng = ChaChaRng::seed_from_u64(8);
+        assert_eq!(
+            locate_corrupt_shares(&views(&alphas, &shares), k_dim, a, &mut rng),
+            None,
+            "a+1 corruptions must refuse"
+        );
+    }
+
+    /// A share with the wrong length can never be consistent entry-wise;
+    /// the honest-majority modal length pre-blames it.
+    #[test]
+    fn wrong_length_share_is_blamed() {
+        let (k_dim, len, a) = (3usize, 40usize, 1usize);
+        let (alphas, mut shares) = make_shares(k_dim, len, k_dim + 2 * a, 4);
+        shares[1].truncate(len - 5);
+        let mut rng = ChaChaRng::seed_from_u64(6);
+        let blamed =
+            locate_corrupt_shares(&views(&alphas, &shares), k_dim, a, &mut rng).expect("located");
+        assert_eq!(blamed, vec![1]);
+    }
+
+    #[test]
+    fn clean_shares_blame_nobody() {
+        let (k_dim, len, a) = (6usize, 50usize, 2usize);
+        let (alphas, shares) = make_shares(k_dim, len, k_dim + 2 * a, 10);
+        let mut rng = ChaChaRng::seed_from_u64(11);
+        let blamed =
+            locate_corrupt_shares(&views(&alphas, &shares), k_dim, a, &mut rng).expect("located");
+        assert!(blamed.is_empty());
+    }
+
+    /// A forged duplicate sender id (two shares at one α) is a typed
+    /// refusal — matching the `a = 0` path's singular Vandermonde — and
+    /// never a divide-by-zero panic in the consistency check.
+    #[test]
+    fn duplicate_alpha_is_refused_not_a_panic() {
+        let (k_dim, len, a) = (3usize, 24usize, 1usize);
+        let (mut alphas, shares) = make_shares(k_dim, len, k_dim + 2 * a, 12);
+        alphas[4] = alphas[0]; // replayed worker id
+        let mut rng = ChaChaRng::seed_from_u64(13);
+        assert_eq!(
+            locate_corrupt_shares(&views(&alphas, &shares), k_dim, a, &mut rng),
+            None
+        );
+    }
+
+    #[test]
+    fn entropy_seeds_differ_across_draws() {
+        // Not a randomness-quality test — just that the secret seed is not
+        // a constant (which would make the weights predictable again).
+        let seeds: Vec<u64> = (0..4).map(|_| entropy_seed()).collect();
+        assert!(seeds.windows(2).any(|w| w[0] != w[1]));
+    }
 }

@@ -142,86 +142,137 @@ fn eval_dense(coeffs: &[u64], x: u64) -> u64 {
 /// `< k_dim` — the error-locator pass of Byzantine-robust reconstruction.
 ///
 /// `points` are `(x, y)` pairs of which at most `a` may carry a wrong `y`.
-/// The search is the decode-and-verify form of Reed–Solomon unique
-/// decoding: for candidate exclusion sets `E` of growing size `0..=a`
-/// (lexicographic, so the result is deterministic), interpolate the first
-/// `k_dim` kept points and accept iff every other kept point agrees.
+/// Decoding is **Berlekamp–Welch**: solve the linear system
+/// `Q(xᵢ) = yᵢ·E(xᵢ)` for a monic error-locator `E` of degree
+/// `e = min(a, (len − k_dim)/2)` and a numerator `Q` of degree
+/// `< k_dim + e` (one Gaussian elimination, `O(len³)` — polynomial in
+/// every parameter, unlike a subset search, so a large fleet with a large
+/// error budget cannot stall the master combinatorially). Any solution
+/// yields the unique codeword `f = Q/E` within the unique-decoding
+/// radius; the blamed set is exactly the points where `yᵢ ≠ f(xᵢ)`.
 ///
-/// Soundness needs the caller to supply `points.len() ≥ k_dim + 2a`: then
-/// any accepted candidate agrees with the (≥ `len − a`)-point majority on
-/// at least `k_dim` honest points, i.e. *is* the true polynomial, and the
-/// minimal accepted `E` is exactly the set of disagreeing evaluations.
+/// Soundness needs the caller to supply `points.len() ≥ k_dim + 2a`
+/// (the Reed–Solomon unique-decoding bound): then at most `a` wrong
+/// points leave `≥ k_dim + a` agreeing ones, which pin `f` uniquely.
+/// When the surplus is smaller, the effective radius `e` shrinks with it
+/// rather than risking an ambiguous (unsound) exclusion.
 ///
 /// Returns the blamed indices into `points` (empty when every point is
-/// consistent), or `None` when no exclusion of `≤ a` points explains the
-/// data — more than `a` corruptions.
+/// consistent), or `None` when no polynomial of degree `< k_dim` agrees
+/// with all but `≤ e` points — more corruptions than the radius covers.
 pub fn locate_corrupt_evaluations(
     points: &[(u64, u64)],
     k_dim: usize,
     a: usize,
 ) -> Option<Vec<usize>> {
     let n = points.len();
-    if n < k_dim {
+    if n < k_dim || k_dim == 0 {
         return None;
     }
-    let max_excl = a.min(n - k_dim);
-    let mut kept: Vec<(u64, u64)> = Vec::with_capacity(n);
-    let mut fits = |excluded: &[usize]| -> bool {
-        kept.clear();
-        kept.extend(
-            points
-                .iter()
-                .enumerate()
-                .filter(|(i, _)| !excluded.contains(i))
-                .map(|(_, &p)| p),
-        );
-        let coeffs = lagrange_interpolate(&kept[..k_dim]);
-        kept[k_dim..]
-            .iter()
-            .all(|&(x, y)| eval_dense(&coeffs, x) == y)
-    };
-    for e in 0..=max_excl {
-        if let Some(excl) = first_combination(n, e, &mut fits) {
-            return Some(excl);
+    let e = a.min((n - k_dim) / 2);
+    // Unknowns: q₀..q_{k_dim+e−1}, then e₀..e_{e−1} (E is monic of degree
+    // exactly e, so its top coefficient is fixed at 1 and moved to the
+    // right-hand side): row i reads
+    //   Σ_j qⱼ·xᵢʲ − yᵢ·Σ_{j<e} eⱼ·xᵢʲ = yᵢ·xᵢᵉ.
+    let cols = k_dim + 2 * e;
+    let mut aug: Vec<Vec<u64>> = points
+        .iter()
+        .map(|&(x, y)| {
+            let mut row = Vec::with_capacity(cols + 1);
+            let mut xp = 1u64;
+            for _ in 0..k_dim + e {
+                row.push(xp);
+                xp = ff::mul(xp, x);
+            }
+            let mut xp = 1u64;
+            for _ in 0..e {
+                row.push(ff::neg(ff::mul(y, xp)));
+                xp = ff::mul(xp, x);
+            }
+            row.push(ff::mul(y, xp)); // xp = xᵉ after the loop
+            row
+        })
+        .collect();
+    // Row-reduce; free variables are set to 0 (with ≤ e true errors the
+    // system is consistent and *any* solution gives the same ratio Q/E —
+    // two solutions satisfy Q₁E₂ = Q₂E₁ at n ≥ k_dim+2e points, which
+    // exceeds the product's degree, so they are equal as polynomials).
+    let mut pivot_of_col: Vec<Option<usize>> = vec![None; cols];
+    let mut rank = 0usize;
+    for c in 0..cols {
+        if rank >= n {
+            break;
+        }
+        let Some(piv) = (rank..n).find(|&i| aug[i][c] != 0) else {
+            continue;
+        };
+        aug.swap(rank, piv);
+        let inv = ff::inv(aug[rank][c]);
+        for v in aug[rank].iter_mut() {
+            *v = ff::mul(*v, inv);
+        }
+        let prow = aug[rank].clone();
+        for (i, row) in aug.iter_mut().enumerate() {
+            if i != rank && row[c] != 0 {
+                let f = row[c];
+                for (v, &pv) in row.iter_mut().zip(prow.iter()) {
+                    *v = ff::sub(*v, ff::mul(f, pv));
+                }
+            }
+        }
+        pivot_of_col[c] = Some(rank);
+        rank += 1;
+    }
+    // A zeroed row with a nonzero right-hand side means no (Q, E) exists:
+    // more than e corruptions.
+    if aug[rank..].iter().any(|row| row[cols] != 0) {
+        return None;
+    }
+    let mut sol = vec![0u64; cols];
+    for (c, piv) in pivot_of_col.iter().enumerate() {
+        if let Some(r) = *piv {
+            sol[c] = aug[r][cols];
         }
     }
-    None
+    let mut e_coeffs = sol[k_dim + e..].to_vec();
+    e_coeffs.push(1); // monic xᵉ
+    let f = poly_div_exact(&sol[..k_dim + e], &e_coeffs)?;
+    let blamed: Vec<usize> = points
+        .iter()
+        .enumerate()
+        .filter(|&(_, &(x, y))| eval_dense(&f, x) != y)
+        .map(|(i, _)| i)
+        .collect();
+    // Beyond the radius the division can still come out exact on an
+    // aligned draw; the agreement count is the decoder's real acceptance
+    // test.
+    if blamed.len() > e {
+        return None;
+    }
+    Some(blamed)
 }
 
-/// First size-`e` combination of `0..n` (lexicographic order) accepted by
-/// `accept`, or `None`.
-fn first_combination(
-    n: usize,
-    e: usize,
-    accept: &mut dyn FnMut(&[usize]) -> bool,
-) -> Option<Vec<usize>> {
-    if e == 0 {
-        return if accept(&[]) { Some(Vec::new()) } else { None };
+/// Exact polynomial division `num / den` over `GF(p)` for a monic `den`;
+/// `None` when the remainder is nonzero.
+fn poly_div_exact(num: &[u64], den: &[u64]) -> Option<Vec<u64>> {
+    let d = den.len() - 1;
+    let mut rem: Vec<u64> = num.to_vec();
+    if rem.len() <= d {
+        return rem.iter().all(|&c| c == 0).then(|| vec![0]);
     }
-    if e > n {
-        return None;
-    }
-    let mut idx: Vec<usize> = (0..e).collect();
-    loop {
-        if accept(&idx) {
-            return Some(idx);
+    let qlen = rem.len() - d;
+    let mut quot = vec![0u64; qlen];
+    for i in (0..qlen).rev() {
+        let c = rem[i + d];
+        if c == 0 {
+            continue;
         }
-        // advance to the next lexicographic combination
-        let mut i = e;
-        loop {
-            if i == 0 {
-                return None;
-            }
-            i -= 1;
-            if idx[i] != i + n - e {
-                idx[i] += 1;
-                for j in i + 1..e {
-                    idx[j] = idx[j - 1] + 1;
-                }
-                break;
-            }
+        quot[i] = c;
+        for (j, &dc) in den.iter().enumerate() {
+            rem[i + j] = ff::sub(rem[i + j], ff::mul(c, dc));
         }
     }
+    rem.iter().all(|&c| c == 0).then_some(quot)
 }
 
 /// Choose `n` distinct nonzero evaluation points starting at `1 + offset`.
@@ -415,6 +466,45 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The locator is Berlekamp–Welch (one O(n³) elimination), not a
+    /// subset search: n = 60 with a = 10 would be C(60,10) ≈ 7.5·10¹⁰
+    /// candidate exclusions by brute force, yet must locate instantly.
+    #[test]
+    fn locator_is_polynomial_time_at_fleet_scale() {
+        let k_dim = 40usize;
+        let a = 10usize;
+        let n = k_dim + 2 * a;
+        let mut rng = crate::util::rng::ChaChaRng::seed_from_u64(77);
+        let coeffs: Vec<u64> = (0..k_dim).map(|_| rng.field_element()).collect();
+        let mut pts: Vec<(u64, u64)> = (1..=n as u64)
+            .map(|x| (x, eval_dense(&coeffs, x)))
+            .collect();
+        let mut victims: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut victims);
+        let mut victims: Vec<usize> = victims.into_iter().take(a).collect();
+        victims.sort_unstable();
+        for &v in &victims {
+            pts[v].1 = ff::add(pts[v].1, 1 + rng.gen_range(1000));
+        }
+        let blamed = locate_corrupt_evaluations(&pts, k_dim, a).expect("locatable");
+        assert_eq!(blamed, victims);
+    }
+
+    /// With fewer surplus points than `2a`, the effective radius shrinks
+    /// instead of returning an ambiguous (possibly wrong) exclusion: one
+    /// corruption with a single surplus point cannot be attributed.
+    #[test]
+    fn insufficient_surplus_refuses_instead_of_guessing() {
+        let k_dim = 4usize;
+        let coeffs = [3u64, 1, 4, 1];
+        let mut pts: Vec<(u64, u64)> = (1..=(k_dim as u64 + 1))
+            .map(|x| (x, eval_dense(&coeffs, x)))
+            .collect();
+        pts[2].1 = ff::add(pts[2].1, 9);
+        // n = k+1 < k+2: radius 0, the corruption is detected, not placed.
+        assert_eq!(locate_corrupt_evaluations(&pts, k_dim, 1), None);
     }
 
     #[test]

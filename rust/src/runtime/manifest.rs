@@ -170,8 +170,14 @@ pub struct TopologyManifest {
     pub gateway: Option<String>,
     /// Shared secret required by gateway `Shutdown` frames (`None` = any
     /// client may stop the gateway — the pre-v0.8 behavior). A frame with
-    /// a non-matching token is rejected with a typed `Unauthorized`
-    /// instead of killing the serving tier.
+    /// a non-matching token is rejected with a typed `Unauthorized` and
+    /// its connection dropped, instead of killing the serving tier.
+    ///
+    /// The client plane is not yet encrypted or authenticated, so the
+    /// token travels in cleartext: it guards against accidental and
+    /// drive-by shutdowns, not an on-path eavesdropper. Keep non-loopback
+    /// gateways on trusted network segments until the TLS/auth ROADMAP
+    /// item lands.
     pub gateway_token: Option<u64>,
     /// Gateway admission table (empty = open admission).
     pub tenants: Vec<TenantQuota>,

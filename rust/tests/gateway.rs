@@ -363,8 +363,10 @@ fn many_connections_do_not_spawn_threads() {
 }
 
 /// v0.8: a client `Shutdown` frame must carry the gateway's admin token.
-/// A mismatch is a typed `Unauthorized` reject — the connection and the
-/// gateway both keep serving — and only the matching token stops intake.
+/// A mismatch is a typed `Unauthorized` reject, the offending connection
+/// is dropped (a guesser pays a reconnect per attempt, so the token
+/// cannot be brute-forced down one socket), the gateway keeps serving —
+/// and only the matching token stops intake.
 #[test]
 fn shutdown_requires_the_admin_token() {
     let _serial = serial();
@@ -385,9 +387,16 @@ fn shutdown_requires_the_admin_token() {
         other => panic!("unauthorized shutdown was honored: {other:?}"),
     }
     assert!(!gateway.stopping(), "wrong token stopped the gateway");
-    // …and the same connection still serves jobs.
+    // …the intruder's connection is dropped after the refusal (the next
+    // round-trip on it fails)…
     let (a, b) = job_matrices(55, 0, 8);
-    match intruder.call(1, 2, 2, 2, 0, a.clone(), b.clone()).unwrap() {
+    assert!(
+        intruder.call(1, 2, 2, 2, 0, a.clone(), b.clone()).is_err(),
+        "connection survived a refused shutdown attempt"
+    );
+    // …while the gateway itself still serves fresh connections.
+    let mut honest = GatewayClient::connect(&addr, 0).unwrap();
+    match honest.call(1, 2, 2, 2, 0, a.clone(), b.clone()).unwrap() {
         ClientReply::Accepted { y, .. } => assert_eq!(y, a.transpose().matmul(&b)),
         other => panic!("job after refused shutdown: {other:?}"),
     }
