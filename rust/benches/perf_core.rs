@@ -1,4 +1,4 @@
-//! Bench PR2/PR3/PR4/PR5 — the serving core's perf trajectory.
+//! Bench PR2–PR8 — the serving core's perf trajectory.
 //!
 //! Runs the Fig. 2 anchor shapes (Example-1 parameters, serving-sized
 //! matrices) through a provisioned `Deployment` at 1/2/4/8 pool threads,
@@ -23,14 +23,22 @@
 //! batching profile straight from `GatewayStats`. PR 7 adds a
 //! **byzantine** scenario: clean-run e2e at adversary tolerance a=0/1/2 —
 //! the raised `t²+z+2a` recovery quota plus the fingerprint error-locator
-//! pass — reported as overhead against the a=0 baseline. Results are
-//! printed in the in-tree bench format *and* emitted as machine-readable
-//! `BENCH_7.json` so later PRs can diff the trajectory.
+//! pass — reported as overhead against the a=0 baseline. PR 8 adds a
+//! **fused** scenario — k same-shape jobs through one wide
+//! `Deployment::execute_fused_seeded` pass vs the same k jobs run
+//! sequentially with identical seeds (batch 1/4/16 per scheme, output
+//! identity asserted on every pair) — and a **gate** case: one fixed
+//! m=32 single-thread job normalized by an in-process scalar calibration
+//! loop, yielding the machine-portable `e2e_per_calib` ratio the CI
+//! smoke lane compares against the committed baseline (>10% regression
+//! fails the lane). Results are printed in the in-tree bench format
+//! *and* emitted as machine-readable `BENCH_8.json` so later PRs can
+//! diff the trajectory.
 //!
 //! Usage (from `rust/`):
 //!
 //! ```sh
-//! cargo bench --bench perf_core                      # full run → ../BENCH_7.json
+//! cargo bench --bench perf_core                      # full run → ../BENCH_8.json
 //! cargo bench --bench perf_core -- --smoke --out /tmp/b.json   # CI schema smoke
 //! ```
 
@@ -390,6 +398,151 @@ fn run_byzantine(adv: usize, m: usize, iters: usize, baseline_ns: Option<u64>) -
     }
 }
 
+struct FusedCase {
+    scheme: String,
+    m: usize,
+    batch: usize,
+    /// Best-of-iters wall time for the whole batch through one
+    /// `execute_fused_seeded` call (batch 1 routes through the sequential
+    /// fallback — the amortization-free reference point).
+    fused_ns: u64,
+    /// Best-of-iters wall time for the same jobs as k sequential
+    /// `execute_seeded` calls with the same seeds.
+    sequential_ns: u64,
+    speedup_fused_vs_seq: f64,
+    fused_jobs_per_sec: f64,
+}
+
+/// Fused-batch amortization: k same-shape jobs as one wide pass vs the
+/// same k jobs run job-at-a-time, identical per-job seeds. The outputs
+/// are asserted identical pair-by-pair before anything is timed — the
+/// fused path is a scheduling change, never a numeric one.
+fn run_fused(spec: SchemeSpec, label: &str, m: usize, batch: usize, iters: usize) -> FusedCase {
+    let params = SchemeParams::new(2, 2, 2);
+    let mut rng = ChaChaRng::seed_from_u64(0xF05E + batch as u64);
+    let mats: Vec<(FpMat, FpMat)> = (0..batch)
+        .map(|_| (FpMat::random(&mut rng, m, m), FpMat::random(&mut rng, m, m)))
+        .collect();
+    let jobs: Vec<(&FpMat, &FpMat)> = mats.iter().map(|(a, b)| (a, b)).collect();
+    let seeds: Vec<u64> = (0..batch as u64).map(|i| 0xF00 + i).collect();
+    let dep = Deployment::provision(
+        spec,
+        params,
+        ProtocolConfig::builder().verify(false).build(),
+    )
+    .expect("provision");
+    // Warmup + identity pin: fused output j must equal the sequential run
+    // of job j under the same seed.
+    let fused_out = dep.execute_fused_seeded(&jobs, &seeds).expect("fused warmup");
+    for ((out, &(a, b)), &seed) in fused_out.iter().zip(&jobs).zip(&seeds) {
+        let seq = dep.execute_seeded(a, b, seed).expect("sequential warmup");
+        assert_eq!(out.y, seq.y, "{label}: fused/sequential divergence");
+    }
+    let (mut fused_ns, mut seq_ns) = (u64::MAX, u64::MAX);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        dep.execute_fused_seeded(&jobs, &seeds).expect("fused batch");
+        fused_ns = fused_ns.min(ns(t0.elapsed()));
+        let t0 = Instant::now();
+        for (&(a, b), &seed) in jobs.iter().zip(&seeds) {
+            dep.execute_seeded(a, b, seed).expect("sequential job");
+        }
+        seq_ns = seq_ns.min(ns(t0.elapsed()));
+    }
+    let speedup = seq_ns as f64 / fused_ns.max(1) as f64;
+    let fused_jobs_per_sec = per_second(batch as u64, Duration::from_nanos(fused_ns));
+    println!(
+        "bench perf_core/fused scheme={label} m={m} batch={batch:<2}  fused={fused_ns}ns \
+         seq={seq_ns}ns speedup={speedup:.2} ({fused_jobs_per_sec:.1} jobs/s fused)"
+    );
+    FusedCase {
+        scheme: label.to_string(),
+        m,
+        batch,
+        fused_ns,
+        sequential_ns: seq_ns,
+        speedup_fused_vs_seq: speedup,
+        fused_jobs_per_sec,
+    }
+}
+
+/// Machine-speed calibration: a fixed scalar `%`-reduction matmul whose
+/// code path shares nothing with the crate's Montgomery kernels. The
+/// regression gate compares `e2e_ns / calib_ns` — a dimensionless,
+/// machine-normalized latency — so the committed baseline transfers
+/// across runner generations.
+fn calibrate_ns() -> u64 {
+    use std::hint::black_box;
+    const D: usize = 48;
+    let a: Vec<u64> = (0..D * D).map(|i| (i as u64).wrapping_mul(2654435761) % 65537).collect();
+    let b: Vec<u64> = (0..D * D).map(|i| (i as u64).wrapping_mul(40503) % 65537).collect();
+    let mut c = vec![0u64; D * D];
+    let mut best = u64::MAX;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        for i in 0..D {
+            for j in 0..D {
+                let mut acc = 0u64;
+                for k in 0..D {
+                    acc = (acc + black_box(a[i * D + k]) * b[k * D + j]) % 65537;
+                }
+                c[i * D + j] = acc;
+            }
+        }
+        black_box(&mut c);
+        best = best.min(ns(t0.elapsed()));
+    }
+    best
+}
+
+struct GateCase {
+    m: usize,
+    threads: usize,
+    e2e_ns: u64,
+    calib_ns: u64,
+    /// `e2e_ns / calib_ns` — what the CI smoke lane diffs against the
+    /// committed `BENCH_8.json` gate (fails at >10% regression).
+    e2e_per_calib: f64,
+}
+
+/// The CI regression-gate shape: a fixed (2,2,2) m=32 single-thread job,
+/// best-of-iters, normalized by the in-process calibration loop. Runs in
+/// both smoke and full mode so the committed full-run baseline and the
+/// smoke measurement are the same quantity.
+fn run_gate(iters: usize) -> GateCase {
+    let calib_ns = calibrate_ns();
+    let (m, threads) = (32usize, 1usize);
+    let params = SchemeParams::new(2, 2, 2);
+    let mut rng = ChaChaRng::seed_from_u64(0x6A7E2);
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    let dep = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::builder().verify(false).threads(threads).build(),
+    )
+    .expect("provision");
+    dep.execute_seeded(&a, &b, 1).expect("gate warmup");
+    let mut e2e_ns = u64::MAX;
+    for i in 0..iters.max(2) {
+        let t0 = Instant::now();
+        dep.execute_seeded(&a, &b, 2 + i as u64).expect("gate job");
+        e2e_ns = e2e_ns.min(ns(t0.elapsed()));
+    }
+    let ratio = e2e_ns as f64 / calib_ns.max(1) as f64;
+    println!(
+        "bench perf_core/gate m={m} threads={threads}        e2e={e2e_ns}ns calib={calib_ns}ns \
+         e2e_per_calib={ratio:.3}"
+    );
+    GateCase {
+        m,
+        threads,
+        e2e_ns,
+        calib_ns,
+        e2e_per_calib: ratio,
+    }
+}
+
 fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut Vec<Case>) {
     let params = SchemeParams::new(s, t, z);
     let mut rng = ChaChaRng::seed_from_u64(0xB2);
@@ -468,7 +621,7 @@ fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut V
 
 fn main() {
     let mut smoke = false;
-    let mut out_path = String::from("../BENCH_7.json");
+    let mut out_path = String::from("../BENCH_8.json");
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -524,12 +677,26 @@ fn main() {
         let baseline = byzantine.first().map(|c| c.e2e_ns);
         byzantine.push(run_byzantine(adv, byz_m, byz_iters, baseline));
     }
+    // Fused batching: every scheme at batch 1/4/16 — the serving profile
+    // the kernel fusion targets (small m, high job rate).
+    let fused_m = if smoke { 16 } else { 32 };
+    let mut fused: Vec<FusedCase> = Vec::new();
+    for (spec, label) in [
+        (SchemeSpec::Age { lambda: None }, "age"),
+        (SchemeSpec::PolyDot, "polydot"),
+        (SchemeSpec::Entangled, "entangled"),
+    ] {
+        for batch in [1usize, 4, 16] {
+            fused.push(run_fused(spec, label, fused_m, batch, iters));
+        }
+    }
+    let gate = run_gate(if smoke { 2 } else { 5 });
 
     let host_threads = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1) as u64;
     let json = Json::obj(vec![
-        ("schema", Json::Str("cmpc.bench.v7".to_string())),
+        ("schema", Json::Str("cmpc.bench.v8".to_string())),
         ("benchmark", Json::Str("perf_core".to_string())),
         ("provenance", Json::Str("measured".to_string())),
         (
@@ -672,6 +839,38 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "fused",
+            Json::Arr(
+                fused
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("scheme", Json::Str(c.scheme.clone())),
+                            ("m", Json::Int(c.m as u64)),
+                            ("batch", Json::Int(c.batch as u64)),
+                            ("fused_ns", Json::Int(c.fused_ns)),
+                            ("sequential_ns", Json::Int(c.sequential_ns)),
+                            (
+                                "speedup_fused_vs_seq",
+                                Json::Float(c.speedup_fused_vs_seq),
+                            ),
+                            ("fused_jobs_per_sec", Json::Float(c.fused_jobs_per_sec)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gate",
+            Json::obj(vec![
+                ("m", Json::Int(gate.m as u64)),
+                ("threads", Json::Int(gate.threads as u64)),
+                ("e2e_ns", Json::Int(gate.e2e_ns)),
+                ("calib_ns", Json::Int(gate.calib_ns)),
+                ("e2e_per_calib", Json::Float(gate.e2e_per_calib)),
+            ]),
         ),
     ]);
     let rendered = format!("{}\n", json.render());

@@ -62,6 +62,12 @@ pub struct CoordinatorConfig {
     /// distinct deployments concurrently. `0` (the default) shares the
     /// process-wide pool; `1` makes draining strictly sequential.
     pub threads: usize,
+    /// Fuse same-deployment, same-shape queued jobs into wide batches at
+    /// drain time ([`crate::mpc::fused`]): per-job fixed costs amortize
+    /// across the batch, outputs stay byte-identical job by job. Off by
+    /// default — the fabric path exercises the full runtime (and tests
+    /// that meter it expect envelope-level accounting).
+    pub fused: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -72,6 +78,7 @@ impl Default for CoordinatorConfig {
             verify: true,
             link_delay: None,
             threads: 0,
+            fused: false,
         }
     }
 }
@@ -116,6 +123,13 @@ impl CoordinatorConfigBuilder {
     /// (0 = all cores, shared).
     pub fn threads(mut self, threads: usize) -> Self {
         self.config.threads = threads;
+        self
+    }
+
+    /// Fuse same-deployment, same-shape jobs into wide batches at drain
+    /// time (identical outputs, amortized fixed costs).
+    pub fn fused(mut self, on: bool) -> Self {
+        self.config.fused = on;
         self
     }
 
@@ -313,6 +327,9 @@ impl Coordinator {
                 (job, dep)
             })
             .collect();
+        if self.config.fused {
+            return self.drain_fused(prepared);
+        }
         let pool = self.pool.clone();
         let reports = pool.par_map(&prepared, |_wid, _idx, (job, dep)| match dep {
             Err(e) => JobReport {
@@ -335,6 +352,82 @@ impl Coordinator {
             "drain must preserve submission order"
         );
         reports
+    }
+
+    /// The `config.fused` drain path: group job indices by (deployment
+    /// identity, shape), run each ≥2-job group through
+    /// [`Deployment::execute_fused_seeded`] (per-job seeds were fixed at
+    /// `submit`, so results are byte-identical to the sequential drain),
+    /// then run the leftovers — singletons, batch-level refusals, failed
+    /// deployment lookups — through the ordinary per-job path. Reports
+    /// still come back in submission order.
+    fn drain_fused(&self, prepared: Vec<(Job, Result<(Arc<Deployment>, bool)>)>) -> Vec<JobReport> {
+        let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for (i, (job, dep)) in prepared.iter().enumerate() {
+            if let Ok((dep, _)) = dep {
+                groups
+                    .entry((Arc::as_ptr(dep) as usize, job.a.rows))
+                    .or_default()
+                    .push(i);
+            }
+        }
+        let mut outcomes: Vec<Option<Result<ProtocolOutput>>> =
+            prepared.iter().map(|_| None).collect();
+        for idxs in groups.values() {
+            if idxs.len() < 2 {
+                continue;
+            }
+            let (_, dep_res) = &prepared[idxs[0]];
+            let (dep, _) = dep_res.as_ref().expect("grouped deployments are Ok");
+            let refs: Vec<(&FpMat, &FpMat)> = idxs
+                .iter()
+                .map(|&i| (&prepared[i].0.a, &prepared[i].0.b))
+                .collect();
+            let seeds: Vec<u64> = idxs.iter().map(|&i| prepared[i].0.seed).collect();
+            // A batch-level refusal leaves the group's slots unresolved;
+            // they fall through to the per-job path below.
+            if let Ok(outs) = dep.execute_fused_seeded(&refs, &seeds) {
+                for (&i, out) in idxs.iter().zip(outs) {
+                    outcomes[i] = Some(Ok(out));
+                }
+            }
+        }
+        let remaining: Vec<usize> = outcomes
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| o.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        let single_outs = self.pool.par_map(&remaining, |_wid, _k, &i| {
+            let (job, dep) = &prepared[i];
+            match dep {
+                Err(e) => Err(e.clone()),
+                Ok((dep, _)) => dep.execute_seeded(&job.a, &job.b, job.seed),
+            }
+        });
+        for (&i, out) in remaining.iter().zip(single_outs) {
+            outcomes[i] = Some(out);
+        }
+        prepared
+            .into_iter()
+            .zip(outcomes)
+            .map(|((job, dep), outcome)| match dep {
+                Err(e) => JobReport {
+                    id: job.id,
+                    scheme: String::new(),
+                    n_workers: 0,
+                    setup_cache_hit: false,
+                    outcome: Err(e),
+                },
+                Ok((dep, cache_hit)) => JobReport {
+                    id: job.id,
+                    scheme: dep.scheme().name(),
+                    n_workers: dep.n_workers(),
+                    setup_cache_hit: cache_hit,
+                    outcome: outcome.expect("every job resolved"),
+                },
+            })
+            .collect()
     }
 }
 
@@ -435,6 +528,52 @@ mod tests {
         );
         for r in &reports {
             assert!(unwrap_output(r).verified);
+        }
+    }
+
+    /// The fused drain must be observably identical to the default drain:
+    /// same Y, same per-worker ξ/σ counters, same traffic, same order —
+    /// seeds are fixed at `submit`, so two coordinators give the comparison.
+    #[test]
+    fn fused_drain_matches_sequential_drain() {
+        let mut rng = ChaChaRng::seed_from_u64(31);
+        // Two signatures and two shapes: (2,2,2)@m=8 fuses as a pair,
+        // (2,2,1)@m=4 fuses as a pair, the odd m=8 job with z=1 runs alone.
+        let jobs: Vec<(FpMat, FpMat, usize)> = vec![
+            (FpMat::random(&mut rng, 8, 8), FpMat::random(&mut rng, 8, 8), 2),
+            (FpMat::random(&mut rng, 4, 4), FpMat::random(&mut rng, 4, 4), 1),
+            (FpMat::random(&mut rng, 8, 8), FpMat::random(&mut rng, 8, 8), 2),
+            (FpMat::random(&mut rng, 4, 4), FpMat::random(&mut rng, 4, 4), 1),
+            (FpMat::random(&mut rng, 8, 8), FpMat::random(&mut rng, 8, 8), 1),
+        ];
+        let run = |fused: bool| -> Vec<JobReport> {
+            let mut coord = Coordinator::new(
+                CoordinatorConfig::builder().fused(fused).build(),
+            );
+            for (a, b, z) in &jobs {
+                coord.submit(a.clone(), b.clone(), 2, 2, *z).unwrap();
+            }
+            coord.drain()
+        };
+        let sequential = run(false);
+        let fused = run(true);
+        assert_eq!(sequential.len(), fused.len());
+        for (s, f) in sequential.iter().zip(&fused) {
+            assert_eq!(s.id, f.id, "submission order");
+            assert_eq!(s.scheme, f.scheme);
+            let (so, fo) = (unwrap_output(s), unwrap_output(f));
+            assert_eq!(so.y, fo.y, "job {}: Y", s.id);
+            assert!(fo.verified);
+            assert_eq!(so.traffic, fo.traffic, "job {}: traffic", s.id);
+            for (wn, (sc, fc)) in so
+                .worker_counters
+                .iter()
+                .zip(&fo.worker_counters)
+                .enumerate()
+            {
+                assert_eq!(sc.mults(), fc.mults(), "job {} worker {wn}: ξ", s.id);
+                assert_eq!(sc.stored(), fc.stored(), "job {} worker {wn}: σ", s.id);
+            }
         }
     }
 

@@ -14,6 +14,15 @@
 //!
 //! The module exposes both a plain-`u64` functional API (used by the tight
 //! loops in [`crate::matrix`]) and the [`Fp`] newtype used everywhere else.
+//!
+//! The hot-path reduction lives in [`mont`]: for this prime `R = 2³² ≡ 1
+//! (mod p)`, so Montgomery REDC returns exactly `T mod p` in about a
+//! third of the operations of the folding [`reduce`] — with conversion at
+//! the loop edges a literal no-op. [`reduce`] stays as the full-range
+//! fallback (REDC is valid only below `p·2³²`) and as the independent
+//! reference the byte-identity tests pin against.
+
+pub mod mont;
 
 /// The field modulus `p = 2^16 + 1 = 65537` (a Fermat prime).
 pub const P: u64 = 65537;
@@ -40,9 +49,15 @@ pub fn sub(a: u64, b: u64) -> u64 {
 }
 
 /// Multiply two reduced elements.
+///
+/// Routed through Montgomery REDC ([`mont::redc`]): the product of two
+/// reduced elements is `≤ (p−1)² = 2³²`, far inside REDC's `p·2³²`
+/// validity bound, and with `R ≡ 1 (mod p)` the result is exactly
+/// `a·b mod p` — byte-identical to the old `reduce(a*b)`, ~3× cheaper.
 #[inline(always)]
 pub fn mul(a: u64, b: u64) -> u64 {
-    reduce(a * b)
+    debug_assert!(a < P && b < P, "mul expects reduced inputs");
+    mont::redc(a * b)
 }
 
 /// Reduce an arbitrary `u64` modulo `p`, exploiting `2^16 ≡ −1 (mod p)`.
@@ -218,6 +233,7 @@ impl From<u64> for Fp {
 #[inline]
 pub fn axpy(out: &mut [u32], c: u64, x: &[u32]) {
     debug_assert_eq!(out.len(), x.len());
+    let c = c % P; // reduce once, loop-invariant: keeps every product in REDC range
     for (o, &v) in out.iter_mut().zip(x.iter()) {
         *o = add(*o as u64, mul(c, v as u64)) as u32;
     }
@@ -227,6 +243,7 @@ pub fn axpy(out: &mut [u32], c: u64, x: &[u32]) {
 #[inline]
 pub fn scale_into(out: &mut [u32], c: u64, x: &[u32]) {
     debug_assert_eq!(out.len(), x.len());
+    let c = c % P; // reduce once, loop-invariant: keeps every product in REDC range
     for (o, &v) in out.iter_mut().zip(x.iter()) {
         *o = mul(c, v as u64) as u32;
     }
@@ -265,9 +282,11 @@ pub fn weighted_sum_with_scratch(out: &mut [u32], terms: &[(u64, &[u32])], acc: 
             *a += c * x as u64;
         }
     }
-    for (o, &a) in out.iter_mut().zip(acc.iter()) {
-        *o = reduce(a) as u32;
-    }
+    // Montgomery fold: each accumulator slot summed ≤ terms.len() products
+    // of reduced elements, so the REDC fast path applies whenever the term
+    // count fits `mont::MAX_FOLD_TERMS` (it always does on the protocol
+    // paths — t²+z terms); the dispatcher falls back to `reduce` above it.
+    mont::fold(out, acc, terms.len());
 }
 
 #[cfg(test)]

@@ -225,6 +225,28 @@ impl ExecuteEngine for LocalEngine {
             Ok(dep) => dep,
             Err(e) => return inputs.iter().map(|_| Err(e.clone())).collect(),
         };
+        // Multi-job batches take the fused fast path: the batcher groups
+        // by (s, t, z, adv, m), so every input in a batch is same-shape by
+        // construction and the k jobs run as one wide pass per worker
+        // (`mpc::fused`). Identical outputs, k× fewer fixed costs.
+        if inputs.len() >= 2 {
+            let refs: Vec<(&FpMat, &FpMat)> =
+                inputs.iter().map(|input| (&input.a, &input.b)).collect();
+            // A batch-level refusal (bad shapes, insufficient workers)
+            // falls through to the per-job path below so each client gets
+            // its own typed error instead of a collective one.
+            if let Ok(outs) = dep.execute_fused(&refs) {
+                return outs
+                    .into_iter()
+                    .map(|out| {
+                        Ok(EngineOutput {
+                            digest: digest_mat(&out.y),
+                            y: out.y,
+                        })
+                    })
+                    .collect();
+            }
+        }
         // Jobs in a batch run concurrently on the one shared deployment —
         // the fabric multiplexes them by job tag, exactly as in
         // `Coordinator::drain`.

@@ -235,9 +235,10 @@ impl FpMat {
                     *a += a64 * bkj as u64;
                 }
             }
-            for (o, &a) in orow.iter_mut().zip(acc.iter()) {
-                *o = ff::reduce(a) as u32;
-            }
+            // Montgomery fold: the row accumulated k products of reduced
+            // elements, so the REDC fast path is valid up to k = 65536
+            // inner terms; the dispatcher falls back to `reduce` above.
+            ff::mont::fold(orow, acc, k);
         }
     }
 

@@ -62,6 +62,7 @@ use std::sync::Arc;
 use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
 use crate::error::Result;
 use crate::matrix::FpMat;
+use crate::mpc::fused;
 use crate::mpc::protocol::{self, ExecEnv, ProtocolConfig, ProtocolOutput, Setup};
 use crate::mpc::runtime::WorkerRuntime;
 use crate::runtime::pool::{ScratchPool, WorkerPool};
@@ -189,6 +190,77 @@ impl Deployment {
         self.run(a, b, seed)
     }
 
+    /// Run `jobs` (same shape) as **one fused batch** — the small-job fast
+    /// path ([`crate::mpc::fused`]): per worker, the k per-job `H` blocks
+    /// are stacked into wide buffers so every downstream kernel (scaled
+    /// copies, masks, G evaluations, I accumulation, reconstruction) runs
+    /// once over `k·len` scalars instead of k times over `len`. Outputs are
+    /// byte-identical (Y, ξ/σ counters, traffic) to k sequential
+    /// [`Deployment::execute`] calls with the same derived seeds, and come
+    /// back in job order.
+    ///
+    /// Falls back to sequential execution — same results, fabric path —
+    /// when the batch or config is not fusible: fewer than 2 jobs, mixed
+    /// shapes, or fabric knobs the fused path cannot honor (chaos plans,
+    /// link shapers, injected delays). Note the fused path streams no
+    /// envelopes, so `runtime().jobs_started()` does not advance for
+    /// fused jobs (the [`Deployment::jobs_executed`] counter does).
+    pub fn execute_fused(&self, jobs: &[(&FpMat, &FpMat)]) -> Result<Vec<ProtocolOutput>> {
+        // One fetch_add claims the whole seed range — concurrent batches
+        // and singleton executes can never draw overlapping mask streams.
+        let base = self.jobs_executed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        let seeds: Vec<u64> = (0..jobs.len() as u64)
+            .map(|i| derive_job_seed(self.config.seed, base + i))
+            .collect();
+        self.fused_run(jobs, &seeds)
+    }
+
+    /// [`Deployment::execute_fused`] with explicit per-job seeds (the
+    /// coordinator path, where seeds are assigned at intake). Callers own
+    /// mask-reuse avoidance across their seeds.
+    pub fn execute_fused_seeded(
+        &self,
+        jobs: &[(&FpMat, &FpMat)],
+        seeds: &[u64],
+    ) -> Result<Vec<ProtocolOutput>> {
+        self.jobs_executed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        self.fused_run(jobs, seeds)
+    }
+
+    /// Dispatch a seeded batch: fused when legal, else job-by-job through
+    /// the fabric path (which honors chaos/shaping/delays exactly).
+    fn fused_run(&self, jobs: &[(&FpMat, &FpMat)], seeds: &[u64]) -> Result<Vec<ProtocolOutput>> {
+        if seeds.len() != jobs.len() {
+            return Err(crate::error::CmpcError::InvalidParams(format!(
+                "fused batch has {} jobs but {} seeds",
+                jobs.len(),
+                seeds.len()
+            )));
+        }
+        let same_shape = jobs
+            .windows(2)
+            .all(|w| w[0].0.rows == w[1].0.rows && w[0].0.cols == w[1].0.cols);
+        if jobs.len() < 2 || !same_shape || !fused::config_fusible(&self.config) {
+            return jobs
+                .iter()
+                .zip(seeds)
+                .map(|(&(a, b), &seed)| self.run(a, b, seed))
+                .collect();
+        }
+        fused::run_fused_batch(
+            self.scheme.as_ref(),
+            &self.setup,
+            jobs,
+            seeds,
+            &self.config,
+            &ExecEnv {
+                factory: &self.factory,
+                pool: &self.pool,
+                scratch: &self.scratch,
+            },
+        )
+    }
+
     fn run(&self, a: &FpMat, b: &FpMat, seed: u64) -> Result<ProtocolOutput> {
         let cfg = ProtocolConfig {
             seed,
@@ -301,6 +373,74 @@ mod tests {
         let b = FpMat::random(&mut rng, 8, 8);
         assert!(dep.execute(&a, &b).unwrap().verified);
         assert_eq!(dep.jobs_executed(), 2);
+    }
+
+    /// `execute_fused` must be byte-identical to the same jobs streamed
+    /// sequentially through `execute` — both claim seed slots from the same
+    /// atomic counter, so two fresh deployments give the comparison.
+    #[test]
+    fn fused_execute_matches_sequential_execute() {
+        let params = SchemeParams::new(2, 2, 2);
+        let provision = || {
+            Deployment::provision(
+                SchemeSpec::Age { lambda: None },
+                params,
+                ProtocolConfig::default(),
+            )
+            .unwrap()
+        };
+        let mut rng = ChaChaRng::seed_from_u64(77);
+        let jobs: Vec<(FpMat, FpMat)> = (0..3)
+            .map(|_| (FpMat::random(&mut rng, 8, 8), FpMat::random(&mut rng, 8, 8)))
+            .collect();
+
+        let seq_dep = provision();
+        let sequential: Vec<_> = jobs
+            .iter()
+            .map(|(a, b)| seq_dep.execute(a, b).unwrap())
+            .collect();
+
+        let fused_dep = provision();
+        let refs: Vec<(&FpMat, &FpMat)> = jobs.iter().map(|(a, b)| (a, b)).collect();
+        let fused = fused_dep.execute_fused(&refs).unwrap();
+        assert_eq!(fused_dep.jobs_executed(), 3);
+
+        for (j, (f, s)) in fused.iter().zip(&sequential).enumerate() {
+            assert_eq!(f.y, s.y, "job {j}: Y");
+            assert!(f.verified, "job {j}: verified");
+            assert_eq!(f.traffic, s.traffic, "job {j}: traffic");
+            for (wn, (fc, sc)) in
+                f.worker_counters.iter().zip(&s.worker_counters).enumerate()
+            {
+                assert_eq!(fc.mults(), sc.mults(), "job {j} worker {wn}: ξ");
+                assert_eq!(fc.stored(), sc.stored(), "job {j} worker {wn}: σ");
+            }
+        }
+    }
+
+    /// Unfusible batches (here: a config with an injected link delay) fall
+    /// back to the sequential fabric path with the same per-job seeds.
+    #[test]
+    fn unfusible_batch_falls_back_to_sequential() {
+        let params = SchemeParams::new(2, 2, 1);
+        let config = ProtocolConfig::builder()
+            .link_delay(Some(std::time::Duration::from_micros(1)))
+            .build();
+        let dep = Deployment::provision(SchemeSpec::Age { lambda: None }, params, config)
+            .unwrap();
+        let mut rng = ChaChaRng::seed_from_u64(78);
+        let jobs: Vec<(FpMat, FpMat)> = (0..2)
+            .map(|_| (FpMat::random(&mut rng, 4, 4), FpMat::random(&mut rng, 4, 4)))
+            .collect();
+        let refs: Vec<(&FpMat, &FpMat)> = jobs.iter().map(|(a, b)| (a, b)).collect();
+        let outs = dep.execute_fused(&refs).unwrap();
+        assert_eq!(outs.len(), 2);
+        for ((a, b), out) in jobs.iter().zip(&outs) {
+            assert_eq!(out.y, a.transpose().matmul(b));
+            assert!(out.verified);
+        }
+        // the fabric path streamed both jobs through the live runtime
+        assert_eq!(dep.runtime().jobs_started(), 2);
     }
 
     #[test]

@@ -1,0 +1,510 @@
+//! Fused small-job batching — k same-shape jobs through one wide pass.
+//!
+//! The serving workloads this crate targets (gateway batches, coordinator
+//! queues) are dominated by *small* jobs, where per-job fixed costs — power
+//! tables, per-worker task dispatch, per-peer weighted-sum set-up — rival
+//! the arithmetic itself. This module runs a batch of k same-shape jobs
+//! through the protocol math as **one fused pass**: per worker, the k
+//! per-job `H` products are stacked column-wise into a single wide buffer
+//! (`k·len` scalars) and every subsequent kernel — the t² scaled copies,
+//! the z masks, the N G-share evaluations, the I accumulation, and the
+//! Phase-3 Vandermonde combination — operates on wide buffers, amortizing
+//! its fixed cost across the whole batch. The wide fusion is legal because
+//! the Lagrange coefficients `rₙ^{(i,l)}` and evaluation points `α` are
+//! *per-worker*, not per-job: scaling a concatenation by `rₙ^{(i,l)}`
+//! scales every job's segment correctly.
+//!
+//! Everything observable is **identical** to running the k jobs
+//! sequentially through the fabric path:
+//!
+//! * every job keeps its own secret streams (the legacy fork order:
+//!   source A, source B, then workers 0..N), so `Y`, the share
+//!   polynomials, and the masks are byte-identical per job;
+//! * per-worker ξ/σ counters tick the exact per-job amounts of the
+//!   sequential worker (`mpc::worker::compute_phase`), bulk-applied;
+//! * the per-job [`TrafficReport`] carries the scalars the fabric *would*
+//!   have metered (N share pairs, N·(N−1) G-shares, N I-shares).
+//!
+//! What fusion deliberately skips: the fabric (no envelopes move, so
+//! chaos plans, link shapers, and injected delays cannot be honored —
+//! [`config_fusible`] gates on their absence), per-job `JobId` intake
+//! (`Deployment::execute_fused` still counts each job for seed
+//! derivation), and the early-decode/Byzantine machinery (the fused path
+//! is in-process and trusted; shares cannot be garbled in transit).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::codes::CmpcScheme;
+use crate::error::{CmpcError, Result};
+use crate::ff::{self, P};
+use crate::matrix::FpMat;
+use crate::metrics::{PhaseTimings, TrafficReport, WorkerCounters};
+use crate::mpc::protocol::{
+    validate_job_shapes, ExecEnv, ProtocolConfig, ProtocolOutput, Setup,
+};
+use crate::mpc::source;
+use crate::poly::interp::try_vandermonde_inverse_rows;
+use crate::util::rng::ChaChaRng;
+
+/// Whether `config` permits the fused executor. Chaos plans, link shapers,
+/// and injected delays are *fabric* behaviors; the fused path never touches
+/// the fabric, so their presence forces the sequential path.
+pub fn config_fusible(config: &ProtocolConfig) -> bool {
+    config.chaos.is_none()
+        && config.shaper.is_none()
+        && config.worker_delays.is_empty()
+        && config.link_delay.is_none()
+}
+
+/// Run `jobs` (same scheme, same shape) as one fused batch; `seeds[j]` is
+/// job j's secret-stream seed, exactly as `ProtocolConfig::seed` would be
+/// for a sequential run. Outputs come back in job order, each byte-identical
+/// (Y, counters, traffic) to a sequential `run_job` with that seed.
+pub fn run_fused_batch(
+    scheme: &dyn CmpcScheme,
+    setup: &Setup,
+    jobs: &[(&FpMat, &FpMat)],
+    seeds: &[u64],
+    config: &ProtocolConfig,
+    env: &ExecEnv<'_>,
+) -> Result<Vec<ProtocolOutput>> {
+    let k_jobs = jobs.len();
+    if k_jobs == 0 {
+        return Ok(Vec::new());
+    }
+    if seeds.len() != k_jobs {
+        return Err(CmpcError::InvalidParams(format!(
+            "fused batch has {k_jobs} jobs but {} seeds",
+            seeds.len()
+        )));
+    }
+    let p = scheme.params();
+    let m = jobs[0].0.rows;
+    for &(a, b) in jobs {
+        validate_job_shapes(a, b, p)?;
+        if a.rows != m {
+            return Err(CmpcError::ShapeMismatch(format!(
+                "fused batch requires same-shape jobs (got m={} and m={m})",
+                a.rows
+            )));
+        }
+    }
+    let n = setup.n_workers;
+    let t = p.t;
+    let z = p.z;
+    let t2 = t * t;
+    let k_dim = t2 + z;
+    let a_tol = config.adversary_tolerance.max(p.adversary_tolerance);
+    let needed = k_dim + 2 * a_tol;
+    if needed > n {
+        return Err(CmpcError::InsufficientWorkers {
+            needed,
+            provisioned: n,
+        });
+    }
+    let alphas: &[u64] = &setup.alphas;
+
+    // --- per-job counters (one set per job, as the fabric path registers) ---
+    let t_setup = Instant::now();
+    let counters: Vec<Vec<Arc<WorkerCounters>>> = (0..k_jobs)
+        .map(|_| (0..n).map(|_| Arc::new(WorkerCounters::default())).collect())
+        .collect();
+    let setup_time = t_setup.elapsed();
+
+    // --- Phase 1: share polynomials + wide encoding ---
+    let t_p1 = Instant::now();
+    // Legacy fork order per job: source A, source B (workers re-derive
+    // their own forks from the same seed in Phase 2).
+    let mut fa_polys = Vec::with_capacity(k_jobs);
+    let mut fb_polys = Vec::with_capacity(k_jobs);
+    for (j, &(a, b)) in jobs.iter().enumerate() {
+        let mut job_rng = ChaChaRng::seed_from_u64(seeds[j]);
+        let mut rng_src_a = job_rng.fork();
+        let mut rng_src_b = job_rng.fork();
+        fa_polys.push(source::build_f_a(scheme, a, &mut rng_src_a));
+        fb_polys.push(source::build_f_b(scheme, b, &mut rng_src_b));
+    }
+    let fa0 = &fa_polys[0];
+    let fb0 = &fb_polys[0];
+    if cfg!(debug_assertions) {
+        for poly in &fa_polys {
+            debug_assert_eq!(poly.support(), fa0.support(), "shared-table contract");
+        }
+        for poly in &fb_polys {
+            debug_assert_eq!(poly.support(), fb0.support(), "shared-table contract");
+        }
+    }
+    // Per worker α: build each polynomial family's power table ONCE and
+    // evaluate all k jobs through it — the batched form of
+    // `source::encode_shares` (same kernel, k× fewer `ff::pow` chains).
+    let shares: Vec<Vec<(FpMat, FpMat)>> = env.pool.par_map(alphas, |wid, _idx, &alpha| {
+        env.scratch.with(wid, |s| {
+            let mut fa_evals = Vec::with_capacity(k_jobs);
+            fa0.power_table(alpha, &mut s.powers);
+            for fa in &fa_polys {
+                let mut out = FpMat::zeros(fa.rows, fa.cols);
+                fa.eval_with_table(&s.powers, &mut out, &mut s.acc);
+                fa_evals.push(out);
+            }
+            let mut fb_evals = Vec::with_capacity(k_jobs);
+            fb0.power_table(alpha, &mut s.powers);
+            for fb in &fb_polys {
+                let mut out = FpMat::zeros(fb.rows, fb.cols);
+                fb.eval_with_table(&s.powers, &mut out, &mut s.acc);
+                fb_evals.push(out);
+            }
+            fa_evals.into_iter().zip(fb_evals).collect::<Vec<_>>()
+        })
+    });
+    let fa_len = fa0.rows * fa0.cols;
+    let fb_len = fb0.rows * fb0.cols;
+    let phase1 = t_p1.elapsed();
+
+    // --- Phase 2, stage A: per worker, wide H → scaled → masks → G ---
+    let t_p2 = Instant::now();
+    let len = (m / t) * (m / t); // one H / G / I block per job
+    let wide_len = k_jobs * len;
+    let stage_a: Result<Vec<Vec<Vec<u32>>>> = env
+        .pool
+        .par_map(&shares, |_wid, wn, pairs| -> Result<Vec<Vec<u32>>> {
+            let mut backend = env.factory.make();
+            // k per-job block products, stacked into one wide buffer.
+            // (The product itself cannot fuse: F_A(αₙ) differs per job.)
+            let mut wide_h: Vec<u32> = Vec::with_capacity(wide_len);
+            for (fa_n, fb_n) in pairs {
+                let h = backend.matmul_mod(fa_n, fb_n)?;
+                debug_assert_eq!(h.len(), len, "H block shape");
+                wide_h.extend_from_slice(&h.data);
+            }
+            // t² wide scaled copies: rₙ^{(i,l)} is per-worker, so one
+            // scale of the concatenation scales every job's segment.
+            let my_r = &setup.r_coeffs[wn];
+            let scaled: Vec<Vec<u32>> = my_r
+                .iter()
+                .map(|&r| {
+                    let mut sc = vec![0u32; wide_len];
+                    ff::scale_into(&mut sc, r, &wide_h);
+                    sc
+                })
+                .collect();
+            // z wide masks: each job's segment comes from that job's own
+            // secret stream (discard 2 + wn forks, take the next — the
+            // exact stream `compute_phase` draws), masks in w-order.
+            let mut masks: Vec<Vec<u32>> = vec![vec![0u32; wide_len]; z];
+            for (j, &seed) in seeds.iter().enumerate() {
+                let mut job_rng = ChaChaRng::seed_from_u64(seed);
+                for _ in 0..2 + wn {
+                    let _ = job_rng.fork();
+                }
+                let mut rng = job_rng.fork();
+                for mask in masks.iter_mut() {
+                    for v in mask[j * len..(j + 1) * len].iter_mut() {
+                        *v = rng.field_element() as u32;
+                    }
+                }
+            }
+            // N wide G evaluations — one delayed-reduction pass per peer
+            // over the t² + z wide coefficient buffers.
+            let mut acc: Vec<u64> = Vec::new();
+            let mut g_to: Vec<Vec<u32>> = Vec::with_capacity(n);
+            for peer in 0..n {
+                let alpha = alphas[peer];
+                let mut terms: Vec<(u64, &[u32])> = Vec::with_capacity(t2 + z);
+                let mut ap = 1u64;
+                for sc in &scaled {
+                    terms.push((ap, sc.as_slice()));
+                    ap = ff::mul(ap, alpha);
+                }
+                for mask in &masks {
+                    terms.push((ap, mask.as_slice()));
+                    ap = ff::mul(ap, alpha);
+                }
+                let mut g = vec![0u32; wide_len];
+                ff::weighted_sum_with_scratch(&mut g, &terms, &mut acc);
+                g_to.push(g);
+            }
+            Ok(g_to)
+        })
+        .into_iter()
+        .collect();
+    let stage_a = stage_a?;
+
+    // --- Phase 2, stage B: wide I(αₙ) = Σₙ' Gₙ'(αₙ) ---
+    let worker_ids: Vec<usize> = (0..n).collect();
+    let wide_i: Vec<Vec<u32>> = env.pool.par_map(&worker_ids, |wid, _idx, &wn| {
+        env.scratch.with(wid, |s| {
+            let terms: Vec<(u64, &[u32])> = stage_a
+                .iter()
+                .map(|g_to| (1u64, g_to[wn].as_slice()))
+                .collect();
+            let mut i_share = vec![0u32; wide_len];
+            ff::weighted_sum_with_scratch(&mut i_share, &terms, &mut s.acc);
+            i_share
+        })
+    });
+
+    // Bulk-apply the sequential worker's exact per-job ξ/σ ticks
+    // (`compute_phase` + the I accumulation/completion ticks).
+    let h_mults = (fa0.rows * fa0.cols * fb0.cols) as u64;
+    for job_counters in &counters {
+        for c in job_counters {
+            c.add_stored((fa_len + fb_len) as u64); // share pair intake
+            c.add_mults(h_mults); // H = F_A·F_B
+            c.add_stored(len as u64); // H resident
+            c.add_mults((t2 * len) as u64); // t² scaled copies
+            c.add_stored(t2 as u64); // Lagrange coefficients
+            c.add_stored((z * len) as u64); // z masks
+            c.add_mults((n * (t2 - 1 + z) * len) as u64); // N G evaluations
+            c.add_stored((n * len) as u64); // N G evaluations resident
+            c.add_stored(((n - 1) * len) as u64); // N−1 received G folds
+            c.add_stored(len as u64); // final I share
+        }
+    }
+    let phase2 = t_p2.elapsed();
+
+    // --- Phase 3: one dense Vandermonde solve for the whole batch ---
+    let t_p3 = Instant::now();
+    let pts: Vec<u64> = alphas[..k_dim].to_vec();
+    let support: Vec<u64> = (0..k_dim as u64).collect();
+    let rows = try_vandermonde_inverse_rows(&pts, &support).ok_or_else(|| {
+        CmpcError::NotDecodable(
+            "singular dense Vandermonde during reconstruction (repeated αs?)".to_string(),
+        )
+    })?;
+    let block = m / t;
+    let mut flat: Vec<FpMat> = (0..k_jobs * t2)
+        .map(|_| FpMat::zeros(block, block))
+        .collect();
+    env.pool.par_chunks_mut(&mut flat, 1, |wid, idx, blk| {
+        let (j, e) = (idx / t2, idx % t2);
+        env.scratch.with(wid, |s| {
+            s.acc.clear();
+            s.acc.resize(len, 0);
+            for (n_idx, i_share) in wide_i.iter().take(k_dim).enumerate() {
+                let c = rows[e][n_idx] % P;
+                if c == 0 {
+                    continue;
+                }
+                let seg = &i_share[j * len..(j + 1) * len];
+                for (a, &x) in s.acc.iter_mut().zip(seg.iter()) {
+                    *a += c * x as u64;
+                }
+            }
+            ff::mont::fold(&mut blk[0].data, &s.acc, k_dim);
+        });
+    });
+    // Reassemble each job's t×t grid: flat[j·t² + i + t·l] is job j's
+    // block (i, l) — same layout as the master's sequential reassembly.
+    let mut ys = Vec::with_capacity(k_jobs);
+    let mut flat_iter = flat.into_iter();
+    for _ in 0..k_jobs {
+        let mut y_blocks: Vec<Vec<FpMat>> = (0..t).map(|_| Vec::with_capacity(t)).collect();
+        for e in 0..t2 {
+            let blk = flat_iter.next().expect("k·t² blocks");
+            y_blocks[e % t].push(blk);
+        }
+        ys.push(FpMat::from_blocks(&y_blocks));
+    }
+    let reconstruct = t_p3.elapsed();
+
+    // --- verification (same reference product as the sequential path) ---
+    let verified = if config.verify {
+        for (j, &(a, b)) in jobs.iter().enumerate() {
+            let mut at = FpMat::zeros(a.cols, a.rows);
+            a.transpose_into(&mut at);
+            let mut expect = FpMat::zeros(at.rows, b.cols);
+            at.par_matmul_into(b, &mut expect, env.pool, env.scratch);
+            if ys[j] != expect {
+                return Err(CmpcError::NotDecodable(format!(
+                    "reconstruction mismatch: Y != AᵀB under {} (fused job {j})",
+                    scheme.name()
+                )));
+            }
+        }
+        true
+    } else {
+        false
+    };
+
+    // --- per-job outputs: the scalars the fabric would have metered ---
+    let traffic = TrafficReport {
+        source_to_worker: (n * (fa_len + fb_len)) as u64,
+        worker_to_worker: (n * (n - 1) * len) as u64,
+        worker_to_master: (n * len) as u64,
+        messages: (n * (n - 1) + 2 * n) as u64,
+    };
+    let timings = PhaseTimings {
+        setup: setup_time,
+        phase1_share: phase1,
+        phase2_compute: phase2,
+        phase3_reconstruct: reconstruct,
+        ack_wait: Duration::ZERO,
+    };
+    Ok(counters
+        .into_iter()
+        .zip(ys)
+        .map(|(job_counters, y)| ProtocolOutput {
+            y,
+            scheme_name: scheme.name(),
+            n_workers: n,
+            stragglers_tolerated: n - needed,
+            timings,
+            traffic,
+            worker_counters: job_counters,
+            verified,
+            early_decoded: false,
+            blamed_workers: Vec::new(),
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::AgeCmpc;
+    use crate::mpc::protocol::{prepare_setup, run_protocol_with_setup};
+    use crate::runtime::{BackendFactory, ScratchPool, WorkerPool};
+
+    fn env_parts(threads: usize) -> (Arc<BackendFactory>, Arc<WorkerPool>, ScratchPool) {
+        let factory = Arc::new(BackendFactory::Native);
+        let pool = WorkerPool::sized_or_global(threads);
+        let scratch = ScratchPool::for_pool(&pool);
+        (factory, pool, scratch)
+    }
+
+    fn random_jobs(k: usize, m: usize, seed: u64) -> Vec<(FpMat, FpMat)> {
+        let mut rng = ChaChaRng::seed_from_u64(seed);
+        (0..k)
+            .map(|_| (FpMat::random(&mut rng, m, m), FpMat::random(&mut rng, m, m)))
+            .collect()
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let scheme = AgeCmpc::new(2, 2, 1, 0);
+        let setup = prepare_setup(&scheme).unwrap();
+        let config = ProtocolConfig::default();
+        let (factory, pool, scratch) = env_parts(2);
+        let env = ExecEnv {
+            factory: &factory,
+            pool: &pool,
+            scratch: &scratch,
+        };
+        let out = run_fused_batch(&scheme, &setup, &[], &[], &config, &env).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn seed_count_mismatch_is_rejected() {
+        let scheme = AgeCmpc::new(2, 2, 1, 0);
+        let setup = prepare_setup(&scheme).unwrap();
+        let config = ProtocolConfig::default();
+        let (factory, pool, scratch) = env_parts(2);
+        let env = ExecEnv {
+            factory: &factory,
+            pool: &pool,
+            scratch: &scratch,
+        };
+        let jobs = random_jobs(2, 4, 7);
+        let refs: Vec<(&FpMat, &FpMat)> = jobs.iter().map(|(a, b)| (a, b)).collect();
+        let err = run_fused_batch(&scheme, &setup, &refs, &[1], &config, &env).unwrap_err();
+        assert!(matches!(err, CmpcError::InvalidParams(_)));
+    }
+
+    #[test]
+    fn config_fusible_gates_fabric_knobs() {
+        assert!(config_fusible(&ProtocolConfig::default()));
+        let delayed = ProtocolConfig::builder()
+            .link_delay(Some(Duration::from_millis(1)))
+            .build();
+        assert!(!config_fusible(&delayed));
+        let skewed = ProtocolConfig::builder()
+            .worker_delays(vec![Duration::ZERO; 4])
+            .build();
+        assert!(!config_fusible(&skewed));
+    }
+
+    /// The load-bearing identity: a fused batch must be observably the
+    /// same as k sequential runs — Y, verified, per-worker ξ/σ counters,
+    /// and the per-job traffic report, job by job.
+    #[test]
+    fn fused_batch_matches_sequential_runs() {
+        let scheme = AgeCmpc::new(2, 2, 2, 1);
+        let setup = prepare_setup(&scheme).unwrap();
+        let jobs = random_jobs(3, 8, 42);
+        let seeds = [9001u64, 9002, 9003];
+
+        let mut config = ProtocolConfig::default();
+        config.verify = true;
+        config.threads = 2;
+        let sequential: Vec<ProtocolOutput> = jobs
+            .iter()
+            .zip(seeds)
+            .map(|((a, b), seed)| {
+                let mut cfg = config.clone();
+                cfg.seed = seed;
+                run_protocol_with_setup(&scheme, &setup, a, b, &cfg).unwrap()
+            })
+            .collect();
+
+        let (factory, pool, scratch) = env_parts(2);
+        let env = ExecEnv {
+            factory: &factory,
+            pool: &pool,
+            scratch: &scratch,
+        };
+        let refs: Vec<(&FpMat, &FpMat)> = jobs.iter().map(|(a, b)| (a, b)).collect();
+        let fused = run_fused_batch(&scheme, &setup, &refs, &seeds, &config, &env).unwrap();
+
+        assert_eq!(fused.len(), sequential.len());
+        for (j, (f, s)) in fused.iter().zip(&sequential).enumerate() {
+            assert_eq!(f.y, s.y, "job {j}: Y");
+            assert!(f.verified, "job {j}: verified");
+            assert_eq!(f.scheme_name, s.scheme_name, "job {j}: scheme");
+            assert_eq!(f.n_workers, s.n_workers, "job {j}: n_workers");
+            assert_eq!(
+                f.stragglers_tolerated, s.stragglers_tolerated,
+                "job {j}: stragglers"
+            );
+            assert_eq!(f.traffic, s.traffic, "job {j}: traffic");
+            assert_eq!(f.worker_counters.len(), s.worker_counters.len());
+            for (wn, (fc, sc)) in f
+                .worker_counters
+                .iter()
+                .zip(&s.worker_counters)
+                .enumerate()
+            {
+                assert_eq!(fc.mults(), sc.mults(), "job {j} worker {wn}: ξ");
+                assert_eq!(fc.stored(), sc.stored(), "job {j} worker {wn}: σ");
+            }
+            assert!(!f.early_decoded);
+            assert!(f.blamed_workers.is_empty());
+        }
+    }
+
+    /// Fused outputs must not depend on the pool width (same determinism
+    /// contract as the sequential encode/reconstruct kernels).
+    #[test]
+    fn fused_batch_is_pool_size_invariant() {
+        let scheme = AgeCmpc::new(2, 2, 1, 0);
+        let setup = prepare_setup(&scheme).unwrap();
+        let jobs = random_jobs(4, 4, 5);
+        let refs: Vec<(&FpMat, &FpMat)> = jobs.iter().map(|(a, b)| (a, b)).collect();
+        let seeds = [11u64, 12, 13, 14];
+        let config = ProtocolConfig::default();
+
+        let mut ys: Vec<Vec<FpMat>> = Vec::new();
+        for threads in [1usize, 4] {
+            let (factory, pool, scratch) = env_parts(threads);
+            let env = ExecEnv {
+                factory: &factory,
+                pool: &pool,
+                scratch: &scratch,
+            };
+            let out = run_fused_batch(&scheme, &setup, &refs, &seeds, &config, &env).unwrap();
+            ys.push(out.into_iter().map(|o| o.y).collect());
+        }
+        assert_eq!(ys[0], ys[1], "pool width changed fused outputs");
+    }
+}

@@ -467,9 +467,10 @@ pub fn run_master(
                     *a += c * x as u64;
                 }
             }
-            for (o, &a) in blk[0].data.iter_mut().zip(s.acc.iter()) {
-                *o = ff::reduce(a) as u32;
-            }
+            // Montgomery fold: the combination summed at most k_dim
+            // (≤ t²+z+2a ≪ 65536) products of reduced elements, so the
+            // REDC fast path always applies here.
+            ff::mont::fold(&mut blk[0].data, &s.acc, arrived.len());
         });
     });
     // Reassemble the t×t grid: flat[i + t·l] is block (i, l), i.e. grid

@@ -35,6 +35,7 @@
 
 pub mod chaos;
 pub mod deployment;
+pub mod fused;
 pub mod master;
 pub mod network;
 pub mod privacy;

@@ -338,6 +338,19 @@ pub trait Transport: Send + Sync {
     /// destination surfaces as a typed [`CmpcError::Fabric`].
     fn deliver(&self, to: NodeId, env: Envelope) -> Result<()>;
 
+    /// Deliver several envelopes to one peer, preserving order. The
+    /// default is a plain loop — semantically identical to repeated
+    /// [`Transport::deliver`] calls. A wire transport overrides this to
+    /// coalesce the batch into a single write (one syscall for k frames);
+    /// metering must stay **per envelope** so frame/byte counters are
+    /// byte-identical to the sequential path.
+    fn deliver_batch(&self, to: NodeId, envs: Vec<Envelope>) -> Result<()> {
+        for env in envs {
+            self.deliver(to, env)?;
+        }
+        Ok(())
+    }
+
     /// Swap `node`'s local receive queue for a fresh one (the
     /// eviction/respawn path). Errors when `node` is not hosted by this
     /// transport (e.g. a remote peer of a TCP transport).
@@ -689,7 +702,64 @@ impl Fabric {
     /// sender rather than a slow link. A delivery failure after shaping
     /// (dead endpoint) cannot be reported to the sender; it surfaces as
     /// the receiver's per-job deadline instead.
-    pub fn send(&self, job: JobId, from: NodeId, to: NodeId, mut payload: Payload) -> Result<()> {
+    pub fn send(&self, job: JobId, from: NodeId, to: NodeId, payload: Payload) -> Result<()> {
+        match self.apply_policy(job, from, to, payload)? {
+            Some(env) => self.transport.deliver(to, env),
+            None => Ok(()), // chaos-dropped or diverted to the shaper pump
+        }
+    }
+
+    /// [`Fabric::send`] for several payloads to **one** peer, preserving
+    /// order. Every per-envelope policy step — chaos decisions, link
+    /// delay, per-class metering, shaper diversion — runs exactly as it
+    /// would for sequential sends (counters are byte-identical); only the
+    /// final delivery is coalesced through [`Transport::deliver_batch`],
+    /// which a wire transport turns into a single write. When policy
+    /// fails mid-batch (e.g. a chaos kill), the payloads accepted before
+    /// the failure are still delivered — matching what sequential sends
+    /// would already have put on the wire — and the error is returned.
+    pub fn send_batch(
+        &self,
+        job: JobId,
+        from: NodeId,
+        to: NodeId,
+        payloads: Vec<Payload>,
+    ) -> Result<()> {
+        let mut batch: Vec<Envelope> = Vec::with_capacity(payloads.len());
+        let mut policy: Result<()> = Ok(());
+        for payload in payloads {
+            match self.apply_policy(job, from, to, payload) {
+                Ok(Some(env)) => batch.push(env),
+                Ok(None) => {}
+                Err(e) => {
+                    policy = Err(e);
+                    break;
+                }
+            }
+        }
+        let delivered = if batch.len() == 1 {
+            let env = batch.pop().expect("len checked");
+            self.transport.deliver(to, env)
+        } else if !batch.is_empty() {
+            self.transport.deliver_batch(to, batch)
+        } else {
+            Ok(())
+        };
+        policy.and(delivered)
+    }
+
+    /// Everything [`Fabric::send`] does *except* the final delivery:
+    /// topology check, chaos, link delay, metering, shaper diversion.
+    /// `Ok(None)` means the envelope was consumed (chaos-dropped, or
+    /// handed to the shaper pump which delivers it at its modeled arrival
+    /// time); `Ok(Some(env))` means the caller still owes a delivery.
+    fn apply_policy(
+        &self,
+        job: JobId,
+        from: NodeId,
+        to: NodeId,
+        mut payload: Payload,
+    ) -> Result<Option<Envelope>> {
         use std::sync::atomic::Ordering::Relaxed;
         if to >= self.n_nodes {
             return Err(CmpcError::Fabric(format!(
@@ -710,7 +780,7 @@ impl Fabric {
                 match plan.decide(job, from, to, &payload) {
                     None => {}
                     Some(FaultAction::Delay(d)) => std::thread::sleep(d),
-                    Some(FaultAction::Drop) => return Ok(()),
+                    Some(FaultAction::Drop) => return Ok(None),
                     Some(FaultAction::Garble) => garble(&mut payload),
                     Some(FaultAction::Kill) => {
                         self.killed[from].store(true, Relaxed);
@@ -762,13 +832,16 @@ impl Fabric {
                 let bytes = wire::frame_len(&env) as u64;
                 if let Some(at) = shaper.release_at(from, to, class, bytes, Instant::now()) {
                     let seq = self.shaper_seq.fetch_add(1, Relaxed);
-                    return tx.send(Delayed { at, seq, to, env }).map_err(|_| {
-                        CmpcError::Fabric("link shaper pump is gone".to_string())
-                    });
+                    return tx
+                        .send(Delayed { at, seq, to, env })
+                        .map(|_| None)
+                        .map_err(|_| {
+                            CmpcError::Fabric("link shaper pump is gone".to_string())
+                        });
                 }
             }
         }
-        self.transport.deliver(to, env)
+        Ok(Some(env))
     }
 
     /// Cumulative traffic snapshot across all jobs (scalars per edge class).
@@ -1231,6 +1304,37 @@ mod tests {
         assert_eq!(fabric.traffic().source_to_worker, 4);
         drop(endpoints);
         drop(fabric); // joins the pump thread without hanging
+    }
+
+    /// Batched sends must meter exactly like the equivalent sequential
+    /// sends and deliver in order — only the transport call count differs.
+    #[test]
+    fn send_batch_meters_and_orders_like_sequential_sends() {
+        let (fabric, endpoints) = Fabric::new(2, None);
+        fabric.begin_job(5);
+        let m = FpMat::zeros(2, 3); // 6 scalars
+        fabric
+            .send_batch(
+                5,
+                1,
+                fabric.master_id(),
+                vec![
+                    Payload::IShare(pooled(&m)),
+                    Payload::Control(ControlMsg::JobDone { mults: 7, stored: 9 }),
+                ],
+            )
+            .unwrap();
+        let job = fabric.end_job(5);
+        assert_eq!(job.worker_to_master, 6);
+        assert_eq!(job.messages, 1, "control stays unmetered in a batch");
+        let master_ep = &endpoints[fabric.master_id()];
+        let first = master_ep.recv().unwrap();
+        assert!(matches!(first.payload, Payload::IShare(_)), "order kept");
+        let second = master_ep.recv().unwrap();
+        assert!(matches!(
+            second.payload,
+            Payload::Control(ControlMsg::JobDone { mults: 7, stored: 9 })
+        ));
     }
 
     #[test]

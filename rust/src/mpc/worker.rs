@@ -430,16 +430,21 @@ fn advance_job(
         let (_, counters) = st.start.as_ref().expect("computed implies started");
         let i_share = st.i_share.take().expect("i_share present");
         counters.add_stored(i_share.len() as u64);
-        fabric.send(job, ctx.id, fabric.master_id(), Payload::IShare(i_share))?;
         // Totals are final here — the worker never touches this job's
         // counters again — so JobDone can carry them (the driver-side
-        // counters of a *remote* worker are set from exactly this).
+        // counters of a *remote* worker are set from exactly this). The
+        // I-share and JobDone travel as one batch: over TCP that is a
+        // single coalesced write, while metering and receive order stay
+        // identical to two sequential sends.
         let (mults, stored) = (counters.mults(), counters.stored());
-        fabric.send(
+        fabric.send_batch(
             job,
             ctx.id,
             fabric.master_id(),
-            Payload::Control(ControlMsg::JobDone { mults, stored }),
+            vec![
+                Payload::IShare(i_share),
+                Payload::Control(ControlMsg::JobDone { mults, stored }),
+            ],
         )?;
         return Ok(true);
     }

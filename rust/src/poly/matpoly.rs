@@ -98,29 +98,43 @@ impl MatPoly {
     /// After the first call at a given shape, repeat evaluations allocate
     /// nothing (the `alloc_discipline` suite pins this).
     pub fn eval_into(&self, alpha: u64, out: &mut FpMat, scratch: &mut Scratch) {
+        self.power_table(alpha, &mut scratch.powers);
+        // Disjoint field borrows: powers read-only, acc accumulates.
+        let (powers, acc) = (&scratch.powers, &mut scratch.acc);
+        self.eval_with_table(powers, out, acc);
+    }
+
+    /// [`MatPoly::eval_into`] with a **precomputed** power table — the
+    /// fused-batch encoding kernel. When k same-shape jobs are encoded
+    /// for one worker, `αₙ` and the support are shared across all k
+    /// polynomials, so the table (one [`ff::pow`] chain) is built once
+    /// and reused; only the accumulation differs per job. `table[i]`
+    /// must be `αᵉ` for the i-th exponent of the sorted support, exactly
+    /// as produced by [`MatPoly::power_table`] on any same-support poly.
+    pub fn eval_with_table(&self, table: &[u64], out: &mut FpMat, acc: &mut Vec<u64>) {
         assert!(
             self.terms.len() < (1 << 29),
             "too many terms for delayed reduction"
         );
+        assert_eq!(table.len(), self.terms.len(), "power table/support mismatch");
         out.rows = self.rows;
         out.cols = self.cols;
         let n = self.rows * self.cols;
         out.data.resize(n, 0);
-        self.power_table(alpha, &mut scratch.powers);
-        scratch.acc.clear();
-        scratch.acc.resize(n, 0);
-        for (coeff, &c) in self.terms.values().zip(scratch.powers.iter()) {
+        acc.clear();
+        acc.resize(n, 0);
+        for (coeff, &c) in self.terms.values().zip(table.iter()) {
             debug_assert_eq!(coeff.data.len(), n);
             if c == 0 {
                 continue;
             }
-            for (a, &x) in scratch.acc.iter_mut().zip(coeff.data.iter()) {
+            for (a, &x) in acc.iter_mut().zip(coeff.data.iter()) {
                 *a += c * x as u64;
             }
         }
-        for (o, &a) in out.data.iter_mut().zip(scratch.acc.iter()) {
-            *o = ff::reduce(a) as u32;
-        }
+        // Montgomery fold (REDC fast path up to 65536 terms; the sparse
+        // supports here are tiny — t·s + secret terms).
+        ff::mont::fold(&mut out.data, acc, self.terms.len());
     }
 
     /// Polynomial product (used only by tests/small analyses — the protocol
@@ -243,6 +257,36 @@ mod tests {
             poly.power_table(alpha, &mut table);
             let expect: Vec<u64> = poly.support().iter().map(|&e| ff::pow(alpha, e)).collect();
             assert_eq!(table, expect, "alpha={alpha}");
+        }
+    }
+
+    /// A power table built once must be reusable across distinct
+    /// same-support polynomials — the fused-batch sharing contract.
+    #[test]
+    fn eval_with_shared_table_matches_eval_into() {
+        let mut rng = ChaChaRng::seed_from_u64(23);
+        let powers = [0u64, 2, 5, 9, 31];
+        let polys: Vec<MatPoly> = (0..4)
+            .map(|_| {
+                let mut p = MatPoly::new(3, 2);
+                for &e in &powers {
+                    p.insert(e, FpMat::random(&mut rng, 3, 2));
+                }
+                p
+            })
+            .collect();
+        let mut table = Vec::new();
+        let mut acc = Vec::new();
+        let mut scratch = Scratch::default();
+        let mut via_table = FpMat::zeros(0, 0);
+        let mut via_eval = FpMat::zeros(0, 0);
+        for alpha in [0u64, 1, 7, 65536] {
+            polys[0].power_table(alpha, &mut table);
+            for poly in &polys {
+                poly.eval_with_table(&table, &mut via_table, &mut acc);
+                poly.eval_into(alpha, &mut via_eval, &mut scratch);
+                assert_eq!(via_table, via_eval, "alpha={alpha}");
+            }
         }
     }
 

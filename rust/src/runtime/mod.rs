@@ -38,6 +38,15 @@ pub trait MatmulBackend: Send {
 #[derive(Default, Clone, Copy, Debug)]
 pub struct NativeBackend;
 
+/// Scalar multiply–adds (`rows · inner · cols`) above which the native
+/// backend fans the product across the process-global [`WorkerPool`].
+/// Below it — every per-worker `H(αₙ)` block product in a provisioned
+/// deployment, where N workers already run concurrently — the scoped
+/// spawn overhead (~10µs/section) exceeds the win and the sequential
+/// kernel runs on the caller's thread. The parallel path matters in the
+/// single-huge-job regime (one worker thread, one big product).
+const PAR_MATMUL_THRESHOLD: u64 = 1 << 18;
+
 impl MatmulBackend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
@@ -50,7 +59,21 @@ impl MatmulBackend for NativeBackend {
                 a.rows, a.cols, b.rows, b.cols
             )));
         }
-        Ok(a.matmul(b))
+        let work = a.rows as u64 * a.cols as u64 * b.cols as u64;
+        if work >= PAR_MATMUL_THRESHOLD {
+            // Big products go wide over the shared pool; byte-identical
+            // to the sequential kernel (same per-row delayed-reduction
+            // fold, pinned by `matmul_into_and_parallel_match_schoolbook`
+            // and the backend test below).
+            static SCRATCH: std::sync::OnceLock<ScratchPool> = std::sync::OnceLock::new();
+            let pool = WorkerPool::global();
+            let scratch = SCRATCH.get_or_init(|| ScratchPool::for_pool(pool));
+            let mut out = FpMat::zeros(0, 0);
+            a.par_matmul_into(b, &mut out, pool, scratch);
+            Ok(out)
+        } else {
+            Ok(a.matmul(b))
+        }
     }
 }
 
@@ -103,6 +126,18 @@ mod tests {
         let b = FpMat::random(&mut rng, 5, 9);
         let mut be = NativeBackend;
         assert_eq!(be.matmul_mod(&a, &b).unwrap(), a.matmul(&b));
+    }
+
+    /// A product big enough to cross [`PAR_MATMUL_THRESHOLD`] must still
+    /// be byte-identical to the sequential kernel.
+    #[test]
+    fn native_backend_parallel_path_matches_sequential() {
+        let mut rng = ChaChaRng::seed_from_u64(3);
+        let n = 72; // 72³ = 373248 ≥ 2¹⁸: takes the pooled path
+        assert!((n as u64).pow(3) >= PAR_MATMUL_THRESHOLD);
+        let a = FpMat::random(&mut rng, n, n);
+        let b = FpMat::random(&mut rng, n, n);
+        assert_eq!(NativeBackend.matmul_mod(&a, &b).unwrap(), a.matmul(&b));
     }
 
     #[test]

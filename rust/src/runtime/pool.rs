@@ -196,18 +196,32 @@ pub struct Scratch {
     pub powers: Vec<u64>,
 }
 
+/// A scratch slot padded out to its own cache line (128 bytes covers the
+/// adjacent-line prefetcher on x86): neighboring slots' `Mutex` state
+/// words never share a line, so two workers locking adjacent slots under
+/// heavy cross-job drain stop bouncing one line between cores.
+#[repr(align(128))]
+#[derive(Debug, Default)]
+struct PaddedSlot(Mutex<Scratch>);
+
 /// One [`Scratch`] per pool worker slot, indexed by the `worker_id` the
 /// pool primitives pass to their closures.
+///
+/// Slots are cache-line padded ([`PaddedSlot`]) and [`ScratchPool::with`]
+/// *probes* rather than blocks: a worker whose home slot is held by a
+/// concurrent job takes any other free slot instead of queueing. This is
+/// sound because every kernel clears/resizes the buffers before use — a
+/// scratch slot carries capacity, never data, between borrows.
 #[derive(Debug)]
 pub struct ScratchPool {
-    slots: Vec<Mutex<Scratch>>,
+    slots: Vec<PaddedSlot>,
 }
 
 impl ScratchPool {
     /// `slots` independent scratch buffers (clamped to ≥ 1).
     pub fn new(slots: usize) -> ScratchPool {
         ScratchPool {
-            slots: (0..slots.max(1)).map(|_| Mutex::new(Scratch::default())).collect(),
+            slots: (0..slots.max(1)).map(|_| PaddedSlot::default()).collect(),
         }
     }
 
@@ -221,9 +235,23 @@ impl ScratchPool {
     }
 
     /// Borrow worker `wid`'s scratch for the duration of `f`. Indices wrap,
-    /// so any `wid` is safe; pool-provided worker ids never contend.
+    /// so any `wid` is safe; pool-provided worker ids never contend within
+    /// one parallel section. When a *different* job's section holds the
+    /// home slot, the borrow probes the remaining slots for a free one and
+    /// only blocks when every slot is busy — cross-job contention costs a
+    /// failed `try_lock`, not a queue wait.
     pub fn with<R>(&self, wid: usize, f: impl FnOnce(&mut Scratch) -> R) -> R {
-        let mut guard = self.slots[wid % self.slots.len()].lock().unwrap();
+        let n = self.slots.len();
+        let home = wid % n;
+        if let Ok(mut guard) = self.slots[home].0.try_lock() {
+            return f(&mut guard);
+        }
+        for off in 1..n {
+            if let Ok(mut guard) = self.slots[(home + off) % n].0.try_lock() {
+                return f(&mut guard);
+            }
+        }
+        let mut guard = self.slots[home].0.lock().unwrap();
         f(&mut guard)
     }
 }
@@ -307,6 +335,24 @@ mod tests {
         });
         assert!(cap >= 1024);
         assert_eq!(scratch.slots(), 2);
+    }
+
+    /// A held home slot must not block a concurrent borrower: the probe
+    /// hands out any free slot instead (the cross-job drain contract).
+    #[test]
+    fn contended_home_slot_is_dodged_not_queued() {
+        let scratch = ScratchPool::new(2);
+        scratch.with(1, |s| s.acc.resize(77, 0)); // mark slot 1
+        // Hold slot 0 for the whole test…
+        let guard = scratch.slots[0].0.lock().unwrap();
+        // …and borrow "slot 0" from another thread: it must complete by
+        // probing onto slot 1 rather than deadlocking on the held mutex.
+        std::thread::scope(|s| {
+            let h = s.spawn(|| scratch.with(0, |sc| sc.acc.capacity()));
+            let cap = h.join().unwrap();
+            assert!(cap >= 77, "probe took the free slot, not the held one");
+        });
+        drop(guard);
     }
 
     #[test]

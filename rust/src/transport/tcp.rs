@@ -388,6 +388,82 @@ impl Transport for TcpTransport {
         }
     }
 
+    /// Coalesced delivery: every envelope is encoded back-to-back into the
+    /// peer slot's buffer and flushed with **one** `write_all` — one
+    /// syscall (and, with Nagle disabled, typically one TCP segment) for
+    /// the whole batch instead of one per envelope. Metering stays
+    /// per-envelope: each frame is classified and counted exactly as a
+    /// sequential [`TcpTransport::deliver`] would have, so `WireStats`
+    /// (frames *and* per-class bytes) is byte-identical either way.
+    fn deliver_batch(&self, to: NodeId, envs: Vec<Envelope>) -> Result<()> {
+        use std::io::Write;
+        if envs.len() <= 1 {
+            return match envs.into_iter().next() {
+                Some(env) => self.deliver(to, env),
+                None => Ok(()),
+            };
+        }
+        if to >= self.n_nodes {
+            return Err(CmpcError::Fabric(format!(
+                "send to nonexistent node {to} ({}-node topology)",
+                self.n_nodes
+            )));
+        }
+        if to == self.local {
+            let tx = self.local_tx.read().unwrap().clone();
+            for env in envs {
+                tx.send(env).map_err(|_| {
+                    CmpcError::Fabric(format!("node {to}: local endpoint dropped"))
+                })?;
+            }
+            return Ok(());
+        }
+        // Enforce the frame cap up front (write_envelope does this per
+        // frame on the sequential path) so an oversized envelope rejects
+        // the batch before any bytes hit the wire.
+        for env in &envs {
+            let payload_len = wire::frame_len(env) - wire::HEADER_LEN;
+            if payload_len > wire::MAX_FRAME_PAYLOAD {
+                return Err(CmpcError::Fabric(format!(
+                    "wire: refusing to send a {payload_len}-byte payload \
+                     (cap {} bytes; partition the job smaller)",
+                    wire::MAX_FRAME_PAYLOAD
+                )));
+            }
+        }
+        let mut slot = self.peers[to].lock().unwrap();
+        if slot.conn.is_none() {
+            let stream = if slot.ever_connected {
+                self.connect_once(to)?
+            } else {
+                self.connect(to)?
+            };
+            slot.conn = Some(stream);
+            slot.ever_connected = true;
+        }
+        let PeerSlot { conn, buf, .. } = &mut *slot;
+        let stream = conn.as_mut().expect("connected above");
+        buf.clear();
+        let mut frame_bytes = Vec::with_capacity(envs.len());
+        for env in &envs {
+            let start = buf.len();
+            wire::encode_envelope(env, buf);
+            frame_bytes.push((buf.len() - start) as u64);
+        }
+        match stream.write_all(buf) {
+            Ok(()) => {
+                for (env, n) in envs.iter().zip(frame_bytes) {
+                    self.meter(env, to, n);
+                }
+                Ok(())
+            }
+            Err(e) => {
+                *conn = None;
+                Err(CmpcError::Fabric(format!("wire write: {e}")))
+            }
+        }
+    }
+
     fn replace_endpoint(&self, node: NodeId) -> Result<Endpoint> {
         if node != self.local {
             return Err(CmpcError::Fabric(format!(
@@ -491,6 +567,62 @@ mod tests {
         assert_eq!(stats.decode_errors, 0);
         // the receiving side loaned the payload from its pool
         drop(env);
+    }
+
+    /// A coalesced batch (one socket write) must meter exactly like the
+    /// same envelopes sent one `deliver` at a time: same frame count, same
+    /// per-class byte totals, same arrival order.
+    #[test]
+    fn deliver_batch_meters_per_envelope_like_sequential() {
+        let mut rng = ChaChaRng::seed_from_u64(11);
+        let m = FpMat::random(&mut rng, 4, 4);
+        let make = |job| {
+            vec![
+                Envelope {
+                    job,
+                    from: 0,
+                    payload: Payload::IShare(PooledMat::detached(m.clone())),
+                },
+                Envelope {
+                    job,
+                    from: 0,
+                    payload: Payload::Control(ControlMsg::JobDone {
+                        mults: 3,
+                        stored: 4,
+                    }),
+                },
+            ]
+        };
+
+        let (batched, endpoints) = loopback(2);
+        batched[0].deliver_batch(1, make(5)).unwrap();
+        let first = endpoints[1].recv().unwrap();
+        match first.payload {
+            Payload::IShare(got) => assert_eq!(*got, m),
+            other => panic!("expected IShare first, got {other:?}"),
+        }
+        let second = endpoints[1].recv().unwrap();
+        match second.payload {
+            Payload::Control(ControlMsg::JobDone { mults, stored }) => {
+                assert_eq!((mults, stored), (3, 4));
+            }
+            other => panic!("expected JobDone second, got {other:?}"),
+        }
+        let got = batched[0].wire_stats();
+        assert_eq!(got.frames, 2, "metering must stay per-envelope");
+
+        let (sequential, seq_endpoints) = loopback(2);
+        for env in make(5) {
+            sequential[0].deliver(1, env).unwrap();
+        }
+        seq_endpoints[1].recv().unwrap();
+        seq_endpoints[1].recv().unwrap();
+        let want = sequential[0].wire_stats();
+        assert_eq!(got.frames, want.frames);
+        assert_eq!(got.bytes_worker_to_master, want.bytes_worker_to_master);
+        assert_eq!(got.bytes_control, want.bytes_control);
+        assert_eq!(got.bytes_worker_to_worker, want.bytes_worker_to_worker);
+        assert_eq!(got.bytes_source_to_worker, want.bytes_source_to_worker);
     }
 
     #[test]

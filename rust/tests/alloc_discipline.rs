@@ -24,7 +24,7 @@ use cmpc::matrix::FpMat;
 use cmpc::mpc::network::BufferPool;
 use cmpc::mpc::source;
 use cmpc::poly::MatPoly;
-use cmpc::runtime::pool::Scratch;
+use cmpc::runtime::pool::{Scratch, ScratchPool};
 use cmpc::util::rng::ChaChaRng;
 
 struct CountingAlloc;
@@ -115,6 +115,29 @@ fn steady_state_kernels_do_not_allocate() {
     assert_eq!(
         delta, 0,
         "steady-state kernel loop performed {delta} heap allocations"
+    );
+
+    // --- sharded ScratchPool checkout: warm `with()` borrows (home slot
+    // and wrap-around probes alike) must stay allocation-free — the
+    // cache-line-padded slots carry grown capacity between jobs, which is
+    // the no-regression contract of the PR-8 sharding. ---
+    let spool = ScratchPool::new(4);
+    for wid in 0..4 {
+        spool.with(wid, |s| fa.eval_into(9 + wid as u64, &mut eval_out, s));
+    }
+    let before = allocs();
+    for round in 0..10u64 {
+        for wid in 0..8 {
+            // wids beyond the slot count exercise the wrapping index path.
+            spool.with(wid, |s| {
+                fa.eval_into(9 + ((round + wid as u64) % 4), &mut eval_out, s)
+            });
+        }
+    }
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "warm ScratchPool checkout cycle performed {delta} heap allocations"
     );
 
     // --- fabric payload buffers: loan → fill → return, zero allocations ---

@@ -1,0 +1,115 @@
+//! Fused-batch identity across all three schemes (PR 8).
+//!
+//! `Deployment::execute_fused_seeded` stacks k same-shape jobs into one
+//! wide kernel pass per worker. Fusion is a scheduling change, not a
+//! protocol change: for every scheme the batch must return, job for job,
+//! byte-identical `Y` matrices, identical ξ/σ worker counters, and
+//! identical metered traffic to k sequential `execute_seeded` calls with
+//! the same seeds. The in-module unit tests pin this for AGE; this suite
+//! pins it across AGE / PolyDot / Entangled through the public API, with
+//! verification on (the full serving path including the reference
+//! product).
+
+use cmpc::codes::SchemeParams;
+use cmpc::matrix::FpMat;
+use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::util::rng::ChaChaRng;
+use cmpc::{Deployment, SchemeSpec};
+
+const SCHEMES: [SchemeSpec; 3] = [
+    SchemeSpec::Age { lambda: None },
+    SchemeSpec::PolyDot,
+    SchemeSpec::Entangled,
+];
+
+fn batch_inputs(k: usize, m: usize, seed: u64) -> Vec<(FpMat, FpMat)> {
+    let mut rng = ChaChaRng::seed_from_u64(seed);
+    (0..k)
+        .map(|_| (FpMat::random(&mut rng, m, m), FpMat::random(&mut rng, m, m)))
+        .collect()
+}
+
+#[test]
+fn fused_batch_matches_sequential_across_all_schemes() {
+    let params = SchemeParams::new(2, 2, 2);
+    let mats = batch_inputs(3, 8, 0xF0513D);
+    let jobs: Vec<(&FpMat, &FpMat)> = mats.iter().map(|(a, b)| (a, b)).collect();
+    let seeds = [31u64, 32, 33];
+    for spec in SCHEMES {
+        // Two fresh deployments of the same scheme: the fused batch on one,
+        // the k sequential jobs on the other, identical per-job seeds.
+        let provision = || {
+            Deployment::provision(spec, params, ProtocolConfig::builder().build())
+                .unwrap_or_else(|e| panic!("provision {spec:?}: {e}"))
+        };
+        let fused_dep = provision();
+        let seq_dep = provision();
+        let fused = fused_dep
+            .execute_fused_seeded(&jobs, &seeds)
+            .unwrap_or_else(|e| panic!("fused batch under {spec:?}: {e}"));
+        assert_eq!(fused.len(), jobs.len());
+        for (j, (out, &(a, b))) in fused.iter().zip(&jobs).enumerate() {
+            let seq = seq_dep
+                .execute_seeded(a, b, seeds[j])
+                .unwrap_or_else(|e| panic!("sequential job {j} under {spec:?}: {e}"));
+            assert_eq!(out.y, seq.y, "Y divergence, job {j} under {spec:?}");
+            assert!(out.verified, "fused job {j} under {spec:?} not verified");
+            assert!(seq.verified);
+            assert_eq!(out.scheme_name, seq.scheme_name);
+            assert_eq!(out.n_workers, seq.n_workers, "{spec:?}");
+            assert_eq!(
+                out.stragglers_tolerated, seq.stragglers_tolerated,
+                "{spec:?}"
+            );
+            assert_eq!(out.traffic, seq.traffic, "traffic, job {j} under {spec:?}");
+            assert_eq!(out.worker_counters.len(), seq.worker_counters.len());
+            for (wn, (f, s)) in out
+                .worker_counters
+                .iter()
+                .zip(&seq.worker_counters)
+                .enumerate()
+            {
+                assert_eq!(
+                    f.mults(),
+                    s.mults(),
+                    "ξ divergence, job {j} worker {wn} under {spec:?}"
+                );
+                assert_eq!(
+                    f.stored(),
+                    s.stored(),
+                    "σ divergence, job {j} worker {wn} under {spec:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_batch_identity_holds_at_batch_sizes_one_and_larger() {
+    // Batch size 1 routes through the sequential fallback; batch size 4
+    // through the wide path — both must agree with plain execution.
+    let params = SchemeParams::new(2, 2, 1);
+    for k in [1usize, 4] {
+        let mats = batch_inputs(k, 4, 0xBA7C + k as u64);
+        let jobs: Vec<(&FpMat, &FpMat)> = mats.iter().map(|(a, b)| (a, b)).collect();
+        let seeds: Vec<u64> = (0..k as u64).map(|i| 700 + i).collect();
+        let fused_dep = Deployment::provision(
+            SchemeSpec::Age { lambda: None },
+            params,
+            ProtocolConfig::builder().build(),
+        )
+        .unwrap();
+        let seq_dep = Deployment::provision(
+            SchemeSpec::Age { lambda: None },
+            params,
+            ProtocolConfig::builder().build(),
+        )
+        .unwrap();
+        let fused = fused_dep.execute_fused_seeded(&jobs, &seeds).unwrap();
+        for (j, (out, &(a, b))) in fused.iter().zip(&jobs).enumerate() {
+            let seq = seq_dep.execute_seeded(a, b, seeds[j]).unwrap();
+            assert_eq!(out.y, seq.y, "Y divergence at k={k}, job {j}");
+            assert!(out.verified && seq.verified);
+        }
+    }
+}
