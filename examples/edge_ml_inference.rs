@@ -1,78 +1,109 @@
-//! Privacy-preserving quantized inference at the edge — the workload class
-//! the paper's introduction motivates (matrix multiplication as the atomic
-//! op of edge ML).
+//! Privacy-preserving quantized **multi-layer** inference at the edge —
+//! the workload class the paper's introduction motivates, run as one
+//! [`Pipeline`] job (v0.10): `scores = truncate(Xᵀ·W₀) ᵀ·W₁`.
 //!
-//! Scenario: a model vendor holds quantized weights `W` (trade secret), an
-//! edge device holds a batch of user feature vectors `X` (private data).
-//! Classification scores `S = WᵀX` must be computed without revealing either
-//! matrix to the edge workers or the aggregating master.
+//! Scenario: a model vendor holds two quantized weight layers `W₀`, `W₁`
+//! (trade secret); an edge device holds a batch of user feature vectors
+//! `X` (private data). The whole two-layer forward pass runs under
+//! AGE-CMPC **without decoding the hidden activation anywhere**: the
+//! layer-1 product is opened only under a one-time mask (`Z = Y + R`),
+//! truncation rescales the fixed point, and the workers re-share the
+//! result for layer 2 — the master performs exactly one Phase-3 decode,
+//! for the final scores.
 //!
-//! Both matrices are quantized to small non-negative levels, so the GF(p)
-//! product coincides with the exact integer product (no wraparound:
-//! max entry q−1, inner dim m ⇒ scores ≤ m(q−1)² < p) — field arithmetic
-//! *is* the quantized inference. The demo runs the multiplication under
-//! AGE-CMPC, recovers the scores, and checks the predicted classes match
-//! plaintext inference exactly.
+//! Quantized entries are small, so GF(p) arithmetic coincides with exact
+//! integer arithmetic (no wraparound) and `truncate:4` is a right-shift
+//! rescale, exact to the usual probabilistic-truncation ±1 ulp.
+//!
+//! The demo then replays the identical pipeline over **loopback TCP** —
+//! every party its own thread on real sockets — and asserts the decoded
+//! scores are byte-identical to the in-process run.
 //!
 //! Run: `cargo run --release --example edge_ml_inference`
+//!
+//! [`Pipeline`]: cmpc::mpc::pipeline::Pipeline
 
-use cmpc::codes::{CmpcScheme, SchemeParams};
+use cmpc::codes::SchemeParams;
 use cmpc::ff::P;
 use cmpc::matrix::FpMat;
+use cmpc::mpc::pipeline::{pipeline_input, pipeline_weight, Pipeline};
 use cmpc::mpc::protocol::ProtocolConfig;
-use cmpc::util::rng::ChaChaRng;
+use cmpc::runtime::manifest::TopologyManifest;
+use cmpc::transport::node::{digest_mat, job_secret_seed, run_local_cluster};
 use cmpc::{Deployment, SchemeSpec};
 
+const SPEC: &str = "matmul,truncate:4,matmul";
+
 fn main() -> cmpc::Result<()> {
-    let m = 96; // feature dimension == classes == batch (square demo)
-    let q = 16u64; // quantization levels
-    assert!(m as u64 * (q - 1) * (q - 1) < P, "no field wraparound");
+    let m = 32; // feature dim == hidden dim == classes == batch (square demo)
+    let (s, t, z) = (2, 2, 2);
+    let manifest_seed = 1009u64;
+    // The same derivations the distributed cluster uses for its run 0, so
+    // the two paths below are comparable digest-for-digest.
+    let pipeline_seed = job_secret_seed(manifest_seed, 0);
 
-    let mut rng = ChaChaRng::seed_from_u64(31337);
-    // Vendor weights W (m×m: one column per class) and device batch X
-    // (m×m: one column per sample), both quantized to [0, q).
-    let w = FpMat::from_fn(m, m, |_, _| rng.gen_range(q));
-    let x = FpMat::from_fn(m, m, |_, _| rng.gen_range(q));
+    let pipe = Pipeline::parse_spec(SPEC)?;
+    let x = pipeline_input(pipeline_seed, m);
+    let weights: Vec<FpMat> = (0..pipe.rounds())
+        .map(|r| pipeline_weight(pipeline_seed, m, r as u32))
+        .collect();
+    let wrefs: Vec<&FpMat> = weights.iter().collect();
+    // Quantized inputs stay tiny (< 8), so neither layer can wrap GF(p):
+    // layer 1 ≤ m·7² and layer 2 ≤ m·(m·7² >> 4)·7, both far below p.
+    assert!((m as u64) * ((m as u64) * 49 >> 4) * 7 < P, "no field wraparound");
 
-    // Plaintext reference inference.
-    let plain_scores = w.transpose().matmul(&x);
-    let plain_classes = argmax_cols(&plain_scores);
-
-    // Privacy-preserving inference: Y = WᵀX under AGE-CMPC. The vendor
-    // provisions one deployment and reuses it for every inference batch.
-    let (s, t, z) = (4, 2, 3);
-    let params = SchemeParams::try_new(s, t, z)?;
+    // ---- in-process: one deployment, one pipeline job ----
     let deployment = Deployment::provision(
         SchemeSpec::Age { lambda: None },
-        params,
+        SchemeParams::try_new(s, t, z)?,
         ProtocolConfig::default(),
     )?;
     println!(
-        "{} inference: {} workers, tolerating {} colluders",
+        "{}: {} workers, tolerating {z} colluders, pipeline `{SPEC}`",
         deployment.scheme().name(),
         deployment.n_workers(),
-        z
     );
-    let out = deployment.execute(&w, &x)?;
-    let mpc_classes = argmax_cols(&out.y);
+    let out = deployment.execute_pipeline_seeded(&pipe, &x, &wrefs, pipeline_seed)?;
+    let health = deployment.health();
+    println!(
+        "in-process: {} rounds, {} Phase-3 decode(s), digest 0x{:016x}",
+        out.rounds,
+        health.phase3_decodes,
+        digest_mat(&out.y)
+    );
+    assert!(out.verified, "must match the decode-re-encode reference");
+    assert_eq!(
+        health.phase3_decodes, 1,
+        "the master decodes only the final scores"
+    );
 
-    let agree = plain_classes
+    // The hidden activation was never decoded, yet the secure scores track
+    // a cleartext fixed-point forward pass to ±1 ulp of truncation — so
+    // the predicted classes agree.
+    let clear_hidden = x.transpose().matmul(&weights[0]);
+    let clear_hidden = FpMat::from_fn(m, m, |r, c| clear_hidden.at(r, c) >> 4);
+    let clear_scores = clear_hidden.transpose().matmul(&weights[1]);
+    let agree = argmax_cols(&out.y)
         .iter()
-        .zip(&mpc_classes)
+        .zip(&argmax_cols(&clear_scores))
         .filter(|(a, b)| a == b)
         .count();
+    println!("predictions matching cleartext fixed-point inference: {agree}/{m}");
+
+    // ---- the same pipeline over loopback TCP (one thread per party) ----
+    let mut manifest =
+        TopologyManifest::template("age", s, t, z, m, manifest_seed, 1, "127.0.0.1", 0)?;
+    manifest.pipeline_spec = Some(SPEC.to_string());
+    let report = run_local_cluster(&manifest, None)?;
+    let tcp = &report.master.jobs[0];
     println!(
-        "predictions matching plaintext inference: {agree}/{} ({}%)",
-        m,
-        100 * agree / m
+        "loopback TCP: digest 0x{:016x}, {} bytes on the wire",
+        tcp.digest,
+        report.wire.total_bytes()
     );
-    println!("scores bit-exact: {}", out.y == plain_scores);
-    println!(
-        "traffic: {} scalars worker↔worker across {} workers",
-        out.traffic.worker_to_worker, out.n_workers
-    );
-    assert_eq!(out.y, plain_scores, "field product must equal integer product");
-    assert_eq!(agree, m);
+    assert_eq!(tcp.y, out.y, "TCP run must be byte-identical to in-process");
+    assert_eq!(tcp.digest, digest_mat(&out.y));
+    println!("in-process and distributed pipelines agree byte-for-byte");
     Ok(())
 }
 

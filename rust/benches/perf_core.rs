@@ -31,14 +31,20 @@
 //! m=32 single-thread job normalized by an in-process scalar calibration
 //! loop, yielding the machine-portable `e2e_per_calib` ratio the CI
 //! smoke lane compares against the committed baseline (>10% regression
-//! fails the lane). Results are printed in the in-tree bench format
-//! *and* emitted as machine-readable `BENCH_8.json` so later PRs can
-//! diff the trajectory.
+//! fails the lane). PR 9 adds a **pipeline** scenario: chained secure
+//! matrix ops (`Deployment::execute_pipeline_seeded`) measured
+//! stages-vs-e2e — per-round wall time from `PipelineOutput::stage_elapsed`
+//! summed against the end-to-end clock, so the driver overhead between
+//! rounds (boundary ops + re-share bookkeeping) is visible — plus the
+//! naive alternative (decode every stage at the master and re-encode)
+//! for the amortization ratio. Results are printed in the in-tree bench
+//! format *and* emitted as machine-readable `BENCH_9.json` so later PRs
+//! can diff the trajectory.
 //!
 //! Usage (from `rust/`):
 //!
 //! ```sh
-//! cargo bench --bench perf_core                      # full run → ../BENCH_8.json
+//! cargo bench --bench perf_core                      # full run → ../BENCH_9.json
 //! cargo bench --bench perf_core -- --smoke --out /tmp/b.json   # CI schema smoke
 //! ```
 
@@ -53,6 +59,7 @@ use cmpc::gateway::client::{run_load, LoadPlan};
 use cmpc::gateway::{Gateway, GatewayConfig, LocalEngine};
 use cmpc::matrix::FpMat;
 use cmpc::mpc::chaos::PayloadClass;
+use cmpc::mpc::pipeline::{pipeline_input, pipeline_weight, Pipeline};
 use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::runtime::manifest::TopologyManifest;
 use cmpc::transport::node::run_local_cluster;
@@ -543,6 +550,91 @@ fn run_gate(iters: usize) -> GateCase {
     }
 }
 
+struct PipelineCase {
+    spec: String,
+    m: usize,
+    rounds: usize,
+    /// Per-round wall time of the best e2e run, in round order
+    /// (`PipelineOutput::stage_elapsed`).
+    stage_ns: Vec<u64>,
+    /// Sum of `stage_ns` — the fabric-round portion of the e2e clock.
+    stages_sum_ns: u64,
+    /// Best-of-iters end-to-end pipeline wall time (one Phase-3 decode).
+    e2e_ns: u64,
+    /// Best-of-iters wall time of the naive chain: decode **every** stage
+    /// at the master and re-encode it as a fresh job's input.
+    naive_ns: u64,
+    /// `naive_ns / e2e_ns` — what the masked re-share saves.
+    speedup_vs_naive: f64,
+}
+
+/// Stages-vs-e2e for a chained secure computation, plus the naive
+/// decode-re-encode alternative it replaces. Outputs of the two paths are
+/// not compared here (truncation boundaries legitimately differ by the
+/// probabilistic ±1 ulp) — byte-identity against the masked reference is
+/// `tests/pipeline.rs`'s job; this measures the amortization.
+fn run_pipeline_bench(spec_str: &str, m: usize, iters: usize) -> PipelineCase {
+    let pipe = Pipeline::parse_spec(spec_str).expect("pipeline spec");
+    let params = SchemeParams::new(2, 2, 2);
+    let dep = Deployment::provision(
+        SchemeSpec::Age { lambda: None },
+        params,
+        ProtocolConfig::builder().verify(false).build(),
+    )
+    .expect("provision");
+    let seed = 0x919E;
+    let x = pipeline_input(seed, m);
+    let weights: Vec<FpMat> = (0..pipe.rounds())
+        .map(|r| pipeline_weight(seed, m, r as u32))
+        .collect();
+    let wrefs: Vec<&FpMat> = weights.iter().collect();
+    dep.execute_pipeline_seeded(&pipe, &x, &wrefs, seed).expect("pipeline warmup");
+    let mut e2e_ns = u64::MAX;
+    let mut stage_ns: Vec<u64> = Vec::new();
+    for i in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let out = dep
+            .execute_pipeline_seeded(&pipe, &x, &wrefs, seed + 1 + i as u64)
+            .expect("pipeline job");
+        let e2e = ns(t0.elapsed());
+        if e2e < e2e_ns {
+            e2e_ns = e2e;
+            stage_ns = out.stage_elapsed.iter().map(|&d| ns(d)).collect();
+        }
+    }
+    // Naive chain: one full decode per stage, the intermediate re-entering
+    // as the next job's plaintext input — the per-stage master round trips
+    // (and leaks) the pipeline exists to avoid.
+    let mut naive_ns = u64::MAX;
+    for i in 0..iters.max(1) {
+        let t0 = Instant::now();
+        let mut state = x.clone();
+        for (r, w) in weights.iter().enumerate() {
+            let out = dep
+                .execute_seeded(&state, w, seed + 100 + (i * pipe.rounds() + r) as u64)
+                .expect("naive stage");
+            state = out.y;
+        }
+        naive_ns = naive_ns.min(ns(t0.elapsed()));
+    }
+    let stages_sum_ns: u64 = stage_ns.iter().sum();
+    let speedup = naive_ns as f64 / e2e_ns.max(1) as f64;
+    println!(
+        "bench perf_core/pipeline `{spec_str}` m={m}   e2e={e2e_ns}ns stages_sum={stages_sum_ns}ns \
+         naive={naive_ns}ns speedup_vs_naive={speedup:.2}"
+    );
+    PipelineCase {
+        spec: spec_str.to_string(),
+        m,
+        rounds: pipe.rounds(),
+        stage_ns,
+        stages_sum_ns,
+        e2e_ns,
+        naive_ns,
+        speedup_vs_naive: speedup,
+    }
+}
+
 fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut Vec<Case>) {
     let params = SchemeParams::new(s, t, z);
     let mut rng = ChaChaRng::seed_from_u64(0xB2);
@@ -621,7 +713,7 @@ fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut V
 
 fn main() {
     let mut smoke = false;
-    let mut out_path = String::from("../BENCH_8.json");
+    let mut out_path = String::from("../BENCH_9.json");
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -690,13 +782,28 @@ fn main() {
             fused.push(run_fused(spec, label, fused_m, batch, iters));
         }
     }
+    // Pipeline chains: stages-vs-e2e plus the naive per-stage
+    // decode-re-encode alternative.
+    let pipeline_specs: &[(&str, usize)] = if smoke {
+        &[("matmul,truncate:4,matmul", 16)]
+    } else {
+        &[
+            ("matmul,matmul", 32),
+            ("matmul,truncate:8,matmul", 32),
+            ("matmul,truncate:3,matmul,scale:5,transpose,matmul", 32),
+        ]
+    };
+    let pipeline: Vec<PipelineCase> = pipeline_specs
+        .iter()
+        .map(|&(spec, m)| run_pipeline_bench(spec, m, iters))
+        .collect();
     let gate = run_gate(if smoke { 2 } else { 5 });
 
     let host_threads = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1) as u64;
     let json = Json::obj(vec![
-        ("schema", Json::Str("cmpc.bench.v8".to_string())),
+        ("schema", Json::Str("cmpc.bench.v9".to_string())),
         ("benchmark", Json::Str("perf_core".to_string())),
         ("provenance", Json::Str("measured".to_string())),
         (
@@ -857,6 +964,29 @@ fn main() {
                                 Json::Float(c.speedup_fused_vs_seq),
                             ),
                             ("fused_jobs_per_sec", Json::Float(c.fused_jobs_per_sec)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "pipeline",
+            Json::Arr(
+                pipeline
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("spec", Json::Str(c.spec.clone())),
+                            ("m", Json::Int(c.m as u64)),
+                            ("rounds", Json::Int(c.rounds as u64)),
+                            (
+                                "stage_ns",
+                                Json::Arr(c.stage_ns.iter().map(|&v| Json::Int(v)).collect()),
+                            ),
+                            ("stages_sum_ns", Json::Int(c.stages_sum_ns)),
+                            ("e2e_ns", Json::Int(c.e2e_ns)),
+                            ("naive_ns", Json::Int(c.naive_ns)),
+                            ("speedup_vs_naive", Json::Float(c.speedup_vs_naive)),
                         ])
                     })
                     .collect(),

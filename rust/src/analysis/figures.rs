@@ -31,15 +31,23 @@ use crate::util::csv::CsvWriter;
 /// One Fig. 2 row: worker counts at a given number of colluding workers.
 #[derive(Debug, Clone, Copy)]
 pub struct Fig2Row {
+    /// Number of colluding workers (the x-axis).
     pub z: usize,
+    /// AGE-CMPC workers (exact enumeration, optimal λ).
     pub age: u64,
+    /// The λ* the AGE enumeration selected.
     pub age_lambda: u64,
+    /// PolyDot-CMPC workers (exact enumeration).
     pub polydot: u64,
+    /// Entangled-CMPC workers (published formula).
     pub entangled: u64,
+    /// SSMM workers (published formula).
     pub ssmm: u64,
+    /// GCSA-NA workers (published formula).
     pub gcsa_na: u64,
-    /// Paper-formula overlays (Theorems 2/8) for parity checking.
+    /// Paper-formula overlay for AGE (Theorem 2), for parity checking.
     pub age_formula: u64,
+    /// Paper-formula overlay for PolyDot (Theorem 8), for parity checking.
     pub polydot_formula: u64,
 }
 
@@ -64,6 +72,7 @@ pub fn fig2_workers(s: usize, t: usize, z_max: usize) -> Vec<Fig2Row> {
         .collect()
 }
 
+/// Dump Fig. 2 rows to `fig2_workers.csv` under `dir`.
 pub fn write_fig2(dir: &Path, rows: &[Fig2Row]) -> std::io::Result<()> {
     let mut w = CsvWriter::create(
         dir.join("fig2_workers.csv"),
@@ -99,12 +108,19 @@ pub fn write_fig2(dir: &Path, rows: &[Fig2Row]) -> std::io::Result<()> {
 /// One Fig. 3 / Fig. 4 row: a partition pair and the per-scheme counts.
 #[derive(Debug, Clone, Copy)]
 pub struct Fig3Row {
+    /// Row partition factor of the `(s, t)` pair.
     pub s: usize,
+    /// Column partition factor of the `(s, t)` pair.
     pub t: usize,
+    /// AGE-CMPC workers (exact enumeration, optimal λ).
     pub age: u64,
+    /// PolyDot-CMPC workers (exact enumeration).
     pub polydot: u64,
+    /// Entangled-CMPC workers (published formula).
     pub entangled: u64,
+    /// SSMM workers (published formula).
     pub ssmm: u64,
+    /// GCSA-NA workers (published formula).
     pub gcsa_na: u64,
 }
 
@@ -125,6 +141,7 @@ pub fn fig3_workers(st_total: usize, z: usize) -> Vec<Fig3Row> {
         .collect()
 }
 
+/// Dump Fig. 3 rows to `fig3_workers.csv` under `dir`.
 pub fn write_fig3(dir: &Path, rows: &[Fig3Row]) -> std::io::Result<()> {
     let mut w = CsvWriter::create(
         dir.join("fig3_workers.csv"),
@@ -150,7 +167,9 @@ pub fn write_fig3(dir: &Path, rows: &[Fig3Row]) -> std::io::Result<()> {
 /// paper's plots) for every scheme at one partition pair.
 #[derive(Debug, Clone)]
 pub struct Fig4Row {
+    /// Row partition factor of the `(s, t)` pair.
     pub s: usize,
+    /// Column partition factor of the `(s, t)` pair.
     pub t: usize,
     /// (scheme label, N, ξ, σ, ζ)
     pub per_scheme: Vec<(&'static str, u64, u128, u128, u128)>,
@@ -186,6 +205,7 @@ pub fn fig4_overheads(m: usize, st_total: usize, z: usize) -> Vec<Fig4Row> {
         .collect()
 }
 
+/// Dump Fig. 4 rows to `fig4_overheads.csv` under `dir`.
 pub fn write_fig4(dir: &Path, rows: &[Fig4Row]) -> std::io::Result<()> {
     let mut w = CsvWriter::create(
         dir.join("fig4_overheads.csv"),
@@ -215,6 +235,8 @@ pub fn lambda_ablation(s: usize, t: usize, z: usize) -> Vec<(u64, u64)> {
         .collect()
 }
 
+/// Dump λ-ablation series for each `(s, t, z)` case to
+/// `lambda_ablation.csv` under `dir`.
 pub fn write_lambda_ablation(
     dir: &Path,
     cases: &[(usize, usize, usize)],
@@ -257,6 +279,7 @@ pub fn polydot_win_regions(
     out
 }
 
+/// Dump the win-region grid to `polydot_wins.csv` under `dir`.
 pub fn write_polydot_wins(
     dir: &Path,
     rows: &[(usize, usize, usize, bool, bool, bool)],

@@ -20,14 +20,20 @@ use crate::codes::{n_gcsa_na, n_ssmm, AgeCmpc, CmpcScheme, PolyDotCmpc};
 /// Scheme selector used by figures, benches and the coordinator.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum SchemeKind {
+    /// AGE-CMPC (§V) at the optimal gap λ*.
     Age,
+    /// PolyDot-CMPC (§IV).
     PolyDot,
+    /// Entangled-CMPC baseline \[15\].
     Entangled,
+    /// SSMM formula baseline \[16\].
     Ssmm,
+    /// GCSA-NA formula baseline \[17\].
     GcsaNa,
 }
 
 impl SchemeKind {
+    /// Every scheme, in the order the paper's figures plot them.
     pub const ALL: [SchemeKind; 5] = [
         SchemeKind::Age,
         SchemeKind::PolyDot,
@@ -36,6 +42,7 @@ impl SchemeKind {
         SchemeKind::GcsaNa,
     ];
 
+    /// Display name used in figure legends and CSV columns.
     pub fn label(&self) -> &'static str {
         match self {
             SchemeKind::Age => "AGE-CMPC",

@@ -10,15 +10,22 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Benchmark label, e.g. `perf_core/e2e/m64/t1`.
     pub name: String,
+    /// Number of timed iterations behind the statistics.
     pub iters: usize,
+    /// Mean iteration time.
     pub mean: Duration,
+    /// Median iteration time.
     pub median: Duration,
+    /// 95th-percentile iteration time.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 
 impl Measurement {
+    /// Print the stable one-line `bench …` report `cargo bench` emits.
     pub fn report(&self) {
         println!(
             "bench {:<44} iters={:<4} mean={:>12?} median={:>12?} p95={:>12?} min={:>12?}",
@@ -91,10 +98,15 @@ pub fn peak_rss_bytes() -> u64 {
 /// five-variant enum covers it).
 #[derive(Clone, Debug)]
 pub enum Json {
+    /// A string value.
     Str(String),
+    /// An unsigned integer value.
     Int(u64),
+    /// A floating-point value.
     Float(f64),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object: key/value pairs in insertion order.
     Obj(Vec<(String, Json)>),
 }
 

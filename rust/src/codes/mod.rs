@@ -47,8 +47,11 @@ use crate::poly::powers::{self, PowerSet};
 /// `z` colluding workers.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct SchemeParams {
+    /// Row-wise partitions of each input.
     pub s: usize,
+    /// Column-wise partitions of each input.
     pub t: usize,
+    /// Colluding workers tolerated (secret terms per share polynomial).
     pub z: usize,
     /// Byzantine adversary tolerance `a`: how many *garbled* (not merely
     /// dead) worker shares the master can locate and exclude during
@@ -108,6 +111,16 @@ impl SchemeParams {
     pub fn recovery_quota(&self) -> usize {
         self.t * self.t + self.z + 2 * self.adversary_tolerance
     }
+
+    /// Per-stage recovery quota of a pipeline round: every round's workers
+    /// exchange a dense degree-`< t²+z` I-polynomial, so each intermediate
+    /// masked open interpolates `t²+z` stage-tagged shares — checked **per
+    /// round** by `validate_pipeline`, not assumed from round 0. Pipelines
+    /// require `adversary_tolerance = 0` (the masked open is an erasure
+    /// decode), so no `2a` margin appears here.
+    pub fn stage_quota(&self) -> usize {
+        self.t * self.t + self.z
+    }
 }
 
 /// A fully constructible CMPC scheme (share polynomials can be built and the
@@ -116,6 +129,7 @@ pub trait CmpcScheme: Send + Sync {
     /// Human-readable name, e.g. `"AGE-CMPC(λ=2)"`.
     fn name(&self) -> String;
 
+    /// The `(s, t, z, a)` parameters this instance was built with.
     fn params(&self) -> SchemeParams;
 
     /// Power of `x` carrying block `(Aᵀ)_{i,j}` (`i < t`, `j < s`) in `C_A`.

@@ -24,7 +24,10 @@ use crate::error::{CmpcError, Result};
 pub enum SchemeSpec {
     /// AGE-CMPC. `lambda: None` runs the exact `λ*` scan of Phase 0;
     /// `Some(λ)` pins the gap (must satisfy `λ ≤ z`).
-    Age { lambda: Option<usize> },
+    Age {
+        /// Exponent base override; `None` picks the cost-optimal λ.
+        lambda: Option<usize>,
+    },
     /// PolyDot-CMPC (Algorithm 1 secret terms over PolyDot coded terms).
     PolyDot,
     /// Entangled-CMPC baseline (degree-based provisioning of [15]).

@@ -34,6 +34,7 @@ use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
 use crate::error::Result;
 use crate::matrix::FpMat;
 use crate::mpc::deployment::Deployment;
+use crate::mpc::pipeline::{Pipeline, PipelineOutput};
 use crate::mpc::protocol::{self, ProtocolConfig, ProtocolOutput};
 use crate::runtime::pool::WorkerPool;
 use crate::runtime::{BackendChoice, BackendFactory};
@@ -51,7 +52,9 @@ pub enum SchemePolicy {
 /// Coordinator-wide configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// Scheme-selection policy applied to every submitted job.
     pub policy: SchemePolicy,
+    /// Compute backend shared by every deployment this coordinator builds.
     pub backend: BackendChoice,
     /// Verify every product natively (disable for throughput benchmarks).
     pub verify: bool,
@@ -99,21 +102,26 @@ pub struct CoordinatorConfigBuilder {
 }
 
 impl CoordinatorConfigBuilder {
+    /// Scheme-selection policy ([`SchemePolicy::Adaptive`] by default).
     pub fn policy(mut self, policy: SchemePolicy) -> Self {
         self.config.policy = policy;
         self
     }
 
+    /// Compute backend for every deployment (native by default).
     pub fn backend(mut self, backend: BackendChoice) -> Self {
         self.config.backend = backend;
         self
     }
 
+    /// Verify every product natively (on by default; disable for
+    /// throughput benchmarks).
     pub fn verify(mut self, verify: bool) -> Self {
         self.config.verify = verify;
         self
     }
 
+    /// Simulated per-envelope link latency forwarded to the protocol.
     pub fn link_delay(mut self, delay: Option<Duration>) -> Self {
         self.config.link_delay = delay;
         self
@@ -133,6 +141,7 @@ impl CoordinatorConfigBuilder {
         self
     }
 
+    /// Finish the builder.
     pub fn build(self) -> CoordinatorConfig {
         self.config
     }
@@ -146,6 +155,7 @@ pub struct JobHandle {
 }
 
 impl JobHandle {
+    /// The job id, assigned in submission order.
     pub fn id(&self) -> u64 {
         self.id
     }
@@ -153,22 +163,32 @@ impl JobHandle {
 
 /// One queued multiplication job.
 pub struct Job {
+    /// Id assigned at [`Coordinator::submit`] (ascending).
     pub id: u64,
+    /// Left operand; the protocol computes `Y = AᵀB`.
     pub a: FpMat,
+    /// Right operand.
     pub b: FpMat,
+    /// Validated `(s, t, z)` privacy/partition parameters.
     pub params: SchemeParams,
+    /// Per-job seed fixed at submission, so results are byte-identical
+    /// regardless of drain order or pool size.
     pub seed: u64,
 }
 
 /// Outcome of one job: identification plus either the protocol output or
 /// the typed error that stopped it. Per-job failures never abort the batch.
 pub struct JobReport {
+    /// The [`JobHandle::id`] this report answers.
     pub id: u64,
+    /// Name of the scheme that served the job (empty on deployment failure).
     pub scheme: String,
+    /// Workers provisioned by that scheme.
     pub n_workers: usize,
     /// True when the deployment was served from the coordinator cache
     /// (Setup + backend reused; solved once per signature).
     pub setup_cache_hit: bool,
+    /// The decoded product, or the typed error that stopped this job.
     pub outcome: Result<ProtocolOutput>,
 }
 
@@ -200,6 +220,7 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Build a coordinator over `config` with an empty queue and cache.
     pub fn new(config: CoordinatorConfig) -> Coordinator {
         let pool = WorkerPool::sized_or_global(config.threads);
         Coordinator {
@@ -237,6 +258,35 @@ impl Coordinator {
             seed,
         });
         Ok(JobHandle { id })
+    }
+
+    /// Validate and run a [`Pipeline`] — a chained sequence of secure
+    /// matrix stages ([`crate::mpc::pipeline`]) — on the deployment that
+    /// serves `(s, t, z)` under the current policy.
+    ///
+    /// Pipelines are interactive (the master re-shares each stage's masked
+    /// intermediate), so they execute immediately instead of queueing for
+    /// [`Coordinator::drain`]; they still share the deployment cache with
+    /// ordinary jobs, so a pipeline after a drain of same-signature jobs
+    /// reuses the provisioned runtime. The run consumes one id from the
+    /// same submission-order seed schedule as [`Coordinator::submit`],
+    /// keeping outputs byte-identical across processes for a given
+    /// submission history.
+    pub fn run_pipeline(
+        &mut self,
+        pipe: &Pipeline,
+        x: &FpMat,
+        weights: &[&FpMat],
+        s: usize,
+        t: usize,
+        z: usize,
+    ) -> Result<PipelineOutput> {
+        let params = SchemeParams::try_new(s, t, z)?;
+        let (dep, _) = self.deployment_for(params)?;
+        let id = self.next_id;
+        self.next_id += 1;
+        let seed = 0x5EED ^ id.wrapping_mul(0x9E3779B97F4A7C15);
+        dep.execute_pipeline_seeded(pipe, x, weights, seed)
     }
 
     /// Jobs currently queued.
@@ -575,6 +625,27 @@ mod tests {
                 assert_eq!(sc.stored(), fc.stored(), "job {} worker {wn}: σ", s.id);
             }
         }
+    }
+
+    #[test]
+    fn pipelines_share_the_deployment_cache_with_jobs() {
+        use crate::mpc::pipeline::{pipeline_input, pipeline_weight, Pipeline};
+        let mut coord = Coordinator::new(CoordinatorConfig::default());
+        let mut rng = ChaChaRng::seed_from_u64(12);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        coord.submit(a, b, 2, 2, 2).unwrap();
+        let reports = coord.drain();
+        assert!(unwrap_output(&reports[0]).verified);
+        let pipe = Pipeline::parse_spec("matmul,truncate:4,matmul").unwrap();
+        let x = pipeline_input(5, 8);
+        let w0 = pipeline_weight(5, 8, 0);
+        let w1 = pipeline_weight(5, 8, 1);
+        let out = coord.run_pipeline(&pipe, &x, &[&w0, &w1], 2, 2, 2).unwrap();
+        assert!(out.verified);
+        assert_eq!(out.rounds, 2);
+        // same (s, t, z) signature ⇒ the drain's deployment was reused
+        assert_eq!(coord.provisioned_deployments(), 1);
     }
 
     #[test]

@@ -37,7 +37,12 @@ pub enum CmpcError {
     /// Reconstruction is impossible or produced a wrong product.
     NotDecodable(String),
     /// Fewer worker shares than the `t²+z` reconstruction threshold.
-    InsufficientWorkers { needed: usize, provisioned: usize },
+    InsufficientWorkers {
+        /// Shares the decoder needs (the recovery threshold).
+        needed: usize,
+        /// Workers the deployment actually provisioned.
+        provisioned: usize,
+    },
     /// The requested compute backend cannot serve the job.
     BackendUnavailable(String),
     /// A fabric endpoint vanished at an intolerable point of the protocol.

@@ -132,7 +132,9 @@ pub fn neg(a: u64) -> u64 {
 pub struct Fp(pub u32);
 
 impl Fp {
+    /// The additive identity.
     pub const ZERO: Fp = Fp(0);
+    /// The multiplicative identity.
     pub const ONE: Fp = Fp(1);
 
     /// Reduce an arbitrary u64 into the field.
@@ -141,16 +143,19 @@ impl Fp {
         Fp((v % P) as u32)
     }
 
+    /// The reduced representative as a `u64`.
     #[inline]
     pub fn val(self) -> u64 {
         self.0 as u64
     }
 
+    /// `self^e` by square-and-multiply.
     #[inline]
     pub fn pow(self, e: u64) -> Fp {
         Fp(pow(self.val(), e) as u32)
     }
 
+    /// Multiplicative inverse (panics on zero, like the scalar [`inv`]).
     #[inline]
     pub fn inv(self) -> Fp {
         Fp(inv(self.val()) as u32)

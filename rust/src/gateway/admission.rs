@@ -22,6 +22,7 @@ use crate::transport::wire::RejectReason;
 /// One tenant's door policy, as declared by a manifest `tenant` line.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TenantQuota {
+    /// Tenant id this quota applies to.
     pub id: u32,
     /// Token-bucket capacity (also its initial fill).
     pub burst: u32,
@@ -80,6 +81,8 @@ pub struct Admission {
 }
 
 impl Admission {
+    /// Build the door policy from manifest `tenant` lines (empty = open
+    /// admission, see the type docs).
     pub fn new(quotas: &[TenantQuota]) -> Admission {
         let now = Instant::now();
         let open = if quotas.is_empty() {

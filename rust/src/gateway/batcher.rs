@@ -28,16 +28,23 @@ use super::poller::ConnHandle;
 /// into the master's receive loop.)
 #[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct BatchKey {
+    /// Row partition factor.
     pub s: usize,
+    /// Column partition factor.
     pub t: usize,
+    /// Collusion tolerance.
     pub z: usize,
+    /// Adversary (Byzantine) tolerance.
     pub adv: usize,
+    /// Square matrix dimension of the job.
     pub m: usize,
 }
 
 /// One job's inputs, as handed to the execution engine.
 pub struct BatchInput {
+    /// The client's `A` matrix.
     pub a: FpMat,
+    /// The client's `B` matrix.
     pub b: FpMat,
 }
 

@@ -27,22 +27,29 @@ pub enum ClientReply {
     /// The job ran; `digest` is the FNV digest of `y` (what the CI lane
     /// diffs against the reference).
     Accepted {
+        /// The submission's correlation id, echoed back.
         corr: u64,
+        /// FNV digest of `y`.
         digest: u64,
         /// Admission→decode latency as the gateway measured it.
         elapsed_us: u64,
+        /// The decoded product.
         y: FpMat,
     },
     /// The typed refusal, verbatim from the gateway's door (or engine,
     /// for [`RejectReason::Internal`]).
     Rejected {
+        /// The submission's correlation id, echoed back.
         corr: u64,
+        /// The typed cause.
         reason: RejectReason,
+        /// Free-form human-readable context.
         detail: String,
     },
 }
 
 impl ClientReply {
+    /// The correlation id this reply answers, whatever the outcome.
     pub fn corr(&self) -> u64 {
         match self {
             ClientReply::Accepted { corr, .. } | ClientReply::Rejected { corr, .. } => *corr,
@@ -58,6 +65,8 @@ pub struct GatewayClient {
 }
 
 impl GatewayClient {
+    /// Open one TCP connection to the gateway at `addr`, identifying as
+    /// `tenant` on every frame.
     pub fn connect(addr: &str, tenant: u32) -> Result<GatewayClient> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| CmpcError::Io(format!("connecting to gateway {addr}: {e}")))?;
@@ -69,6 +78,7 @@ impl GatewayClient {
         })
     }
 
+    /// The tenant id this client stamps on its submissions.
     pub fn tenant(&self) -> u32 {
         self.tenant
     }
@@ -183,14 +193,20 @@ impl GatewayClient {
 /// global job sequence against one gateway.
 #[derive(Clone, Debug)]
 pub struct LoadPlan {
+    /// Gateway address (`host:port`).
     pub addr: String,
     /// Tenant ids; tenant at index `i` drives global jobs
     /// `[i·jobs_per_tenant, (i+1)·jobs_per_tenant)`.
     pub tenants: Vec<u32>,
+    /// Jobs each tenant submits.
     pub jobs_per_tenant: usize,
+    /// Square matrix dimension of every job.
     pub m: usize,
+    /// Row partition factor every submission carries.
     pub s: usize,
+    /// Column partition factor every submission carries.
     pub t: usize,
+    /// Collusion tolerance every submission carries.
     pub z: usize,
     /// Adversary tolerance every submission carries (must match the
     /// serving manifest's `adversary_tolerance` under a shape lock).
@@ -206,9 +222,11 @@ pub struct LoadPlan {
 /// One job's outcome as the client observed it.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
+    /// The submitting tenant.
     pub tenant: u32,
     /// Global job index (also the correlation id on the wire).
     pub job: u64,
+    /// The gateway's typed answer.
     pub reply: ClientReply,
     /// Submit→reply latency at the client.
     pub latency: Duration,
@@ -219,10 +237,12 @@ pub struct JobOutcome {
 pub struct LoadReport {
     /// Every outcome, sorted by global job index.
     pub outcomes: Vec<JobOutcome>,
+    /// Wall-clock time of the whole drive (first submit → last reply).
     pub elapsed: Duration,
 }
 
 impl LoadReport {
+    /// Outcomes the gateway accepted (decoded and returned a product).
     pub fn accepted(&self) -> usize {
         self.outcomes
             .iter()
@@ -230,6 +250,7 @@ impl LoadReport {
             .count()
     }
 
+    /// Outcomes the gateway refused (any [`RejectReason`]).
     pub fn rejected(&self) -> usize {
         self.outcomes.len() - self.accepted()
     }

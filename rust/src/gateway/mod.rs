@@ -132,6 +132,7 @@ impl Default for GatewayConfig {
 
 /// One successfully executed job, as the engine hands it back.
 pub struct EngineOutput {
+    /// The reconstructed product `Y = AᵀB`.
     pub y: FpMat,
     /// FNV digest of `y` ([`digest_mat`]) — echoed to the client and
     /// diffed against `cmpc node --role reference` by the CI lane.
@@ -142,6 +143,7 @@ pub struct EngineOutput {
 /// one result per input, in order; a per-job failure becomes a typed
 /// [`RejectReason::Internal`] for that client only.
 pub trait ExecuteEngine: Send + Sync {
+    /// Run one admitted batch; same-signature inputs, one result per input.
     fn execute(&self, key: BatchKey, inputs: &[BatchInput]) -> Vec<Result<EngineOutput>>;
 
     /// Called once after the dispatcher drains, before the gateway's
@@ -163,6 +165,7 @@ pub struct LocalEngine {
 }
 
 impl LocalEngine {
+    /// Build an engine with an empty deployment cache.
     pub fn new(config: CoordinatorConfig) -> LocalEngine {
         let pool = WorkerPool::sized_or_global(config.threads);
         LocalEngine {
@@ -177,6 +180,33 @@ impl LocalEngine {
     /// — how `tests/gateway.rs` proves compatible requests shared one.
     pub fn provisioned(&self) -> usize {
         self.deployments.lock().unwrap().len()
+    }
+
+    /// Run a [`crate::mpc::pipeline::Pipeline`] on this engine's cached
+    /// deployment for `(s, t, z)` (provisioning it on first use, exactly
+    /// like a batch). Pipelines are interactive multi-round protocols, so
+    /// they bypass the batcher and run to completion here; a client-plane
+    /// frame for remote pipeline submission is a ROADMAP item. `adv` is
+    /// pinned to 0 — pipelines decode intermediate stages at the exact
+    /// `t²+z` quota, which leaves no Byzantine margin.
+    pub fn run_pipeline(
+        &self,
+        pipe: &crate::mpc::pipeline::Pipeline,
+        x: &FpMat,
+        weights: &[&FpMat],
+        s: usize,
+        t: usize,
+        z: usize,
+        seed: u64,
+    ) -> Result<crate::mpc::pipeline::PipelineOutput> {
+        let dep = self.deployment_for(BatchKey {
+            s,
+            t,
+            z,
+            adv: 0,
+            m: x.rows,
+        })?;
+        dep.execute_pipeline_seeded(pipe, x, weights, seed)
     }
 
     fn factory(&self) -> Result<Arc<BackendFactory>> {

@@ -89,6 +89,7 @@ impl ConnHandle {
         })
     }
 
+    /// Stable connection id (assigned at accept; outlives the socket).
     pub fn id(&self) -> u64 {
         self.id
     }

@@ -166,10 +166,37 @@
 //! with per-worker scratch, so steady-state jobs stay allocation-free in
 //! the compute loops. Results are byte-for-byte identical at any pool size.
 //!
+//! ## Pipelines & private inference (v0.10)
+//!
+//! A [`mpc::pipeline::Pipeline`] chains secure matrix ops — matmul,
+//! transpose, element-wise add/scale, fixed-point truncation — into **one
+//! job** on an existing deployment. Between matmul rounds the workers
+//! open each intermediate only under a one-time mask (`Z = Y + R`) and
+//! re-share it over the same job-multiplexed fabric (stage-tagged
+//! envelopes), so the master performs **exactly one Phase-3 decode**: the
+//! final output ([`metrics::RuntimeHealthReport::phase3_decodes`] pins
+//! it). [`Deployment::execute_pipeline`] runs one in-process;
+//! [`coordinator::Coordinator::run_pipeline`] and
+//! [`gateway::LocalEngine::run_pipeline`] reuse their deployment caches;
+//! a `pipeline <spec>` manifest line runs the same chain across real
+//! processes (`cmpc node`), byte-identical to the in-process run and to
+//! the naive decode-re-encode reference (`tests/pipeline.rs`,
+//! `examples/edge_ml_inference.rs` — a two-layer private inference
+//! `truncate(Xᵀ·W₀)ᵀ·W₁`). Everything here is additive: single-matmul
+//! jobs, wire frames, and every pre-0.10 API are unchanged.
+//!
+//! ## Where everything lives
+//!
+//! `docs/ARCHITECTURE.md` is the layer map — `ff → codes → mpc →
+//! transport → gateway`, the life of a job and of a pipeline, and the
+//! invariant each test file pins. Start there when navigating the crate.
+//!
 //! The pre-0.2 `run_protocol(...)` wrapper and `Coordinator::run_all()`
 //! completed their deprecation window and are gone; use
 //! [`Deployment::provision`] + [`Deployment::execute`] and
 //! [`coordinator::Coordinator::drain`].
+
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod benchkit;
@@ -190,3 +217,4 @@ pub use codes::SchemeSpec;
 pub use error::{CmpcError, Result};
 pub use ff::P;
 pub use mpc::deployment::Deployment;
+pub use mpc::pipeline::{Pipeline, PipelineOp, PipelineOutput};

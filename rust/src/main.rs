@@ -9,7 +9,9 @@
 //!   coordinator (deployment caching, adaptive scheme selection, per-job
 //!   failure isolation).
 //! * `topology --scheme K --s S --t T --z Z --m M --base-port P --out F` —
-//!   write a distributed-deployment manifest (prints the worker count).
+//!   write a distributed-deployment manifest (prints the worker count);
+//!   `--pipeline "matmul,truncate:4,matmul"` makes each job a chained
+//!   pipeline instead of a single matmul (v0.10).
 //! * `node    --role worker|master|source-a|source-b --manifest F` — run
 //!   one CMPC party as this OS process, over TCP per the manifest
 //!   (`--role reference` prints the in-process digests for comparison).
@@ -62,7 +64,7 @@ fn main() {
                  serve    --jobs J --m M --s S --t T --z Z [--backend ...]\n\
                  topology --scheme age|polydot|entangled --s S --t T --z Z --m M [--seed N]\n\
                  \x20        [--jobs J] [--host H] --base-port P [--early-decode]\n\
-                 \x20        [--a A] [--gateway-token TOK] --out FILE\n\
+                 \x20        [--a A] [--pipeline SPEC] [--gateway-token TOK] --out FILE\n\
                  \x20        (prints the worker count N; manifest lists every node's host:port)\n\
                  node     --role worker|master|source-a|source-b|reference --manifest FILE\n\
                  \x20        [--index I] [--garble-ishare]   (worker role only)\n\
@@ -249,6 +251,10 @@ fn cmd_topology(args: &Args) -> Result<()> {
     let mut manifest = TopologyManifest::template(scheme, s, t, z, m, seed, jobs, host, base_port)?;
     manifest.early_decode = args.flag("early-decode");
     manifest.adversary_tolerance = args.get_parse("a", 0usize);
+    if let Some(spec) = args.get("pipeline") {
+        manifest.pipeline_spec = Some(spec.to_string());
+        manifest.validate()?; // reject bad specs before writing the file
+    }
     if let Some(tok) = args.get("gateway-token") {
         manifest.gateway_token = Some(
             tok.parse()

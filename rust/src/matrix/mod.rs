@@ -13,8 +13,11 @@ use crate::util::rng::ChaChaRng;
 /// Row-major dense matrix over `GF(p)`.
 #[derive(Clone, PartialEq, Eq)]
 pub struct FpMat {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major storage; every element is reduced `< p`.
     pub data: Vec<u32>,
 }
 
@@ -78,6 +81,7 @@ impl FpMat {
         FpMat { rows, cols, data }
     }
 
+    /// The element at `(r, c)`, already reduced `< p`.
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> u64 {
         self.data[r * self.cols + c] as u64
@@ -96,6 +100,7 @@ impl FpMat {
         self.data.len()
     }
 
+    /// Whether the matrix has zero entries (either dimension is 0).
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

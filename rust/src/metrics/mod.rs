@@ -5,6 +5,28 @@
 //! stored, scalars exchanged), so integration tests can assert
 //! `measured == closed form` — validating both the implementation and the
 //! paper's accounting.
+//!
+//! # The runtime counter contract
+//!
+//! A deployment's lifetime counters advance the same way no matter which
+//! execution path a workload takes, so operators can reconcile them:
+//!
+//! * **`jobs_started`** (`WorkerRuntime::jobs_started`) — one per fabric
+//!   job id claimed: `execute` claims **1**, `execute_fused` claims **k**
+//!   for a k-job batch (the genuinely fused path claims the whole block up
+//!   front even though it streams no per-job envelopes — fixed in v0.10;
+//!   before that, fused jobs did not advance the counter), and a pipeline
+//!   claims **one per round** (each stage is a real fabric job so the
+//!   reaper can respawn chaos-killed workers between rounds).
+//! * **[`RuntimeHealthReport::phase3_decodes`]** — one per Phase-3
+//!   interpolation of an output `Y`: **1** per executed job, **1** per
+//!   fused batch (the fused decode amortizes the batch), and **1** per
+//!   pipeline — intermediate pipeline stages are *masked opens*, not
+//!   Phase-3 decodes, which is exactly the property the pipeline tests
+//!   pin (`phase3_decodes == 1` for a 3-stage pipeline).
+//! * **[`RuntimeHealthReport::pipeline_stages`]** — one per pipeline round
+//!   driven (masked or final), so `pipeline_stages == Σ rounds` across all
+//!   pipelines a deployment served.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -20,10 +42,12 @@ pub struct WorkerCounters {
 }
 
 impl WorkerCounters {
+    /// Add `n` scalar multiplications to the ξ total.
     pub fn add_mults(&self, n: u64) {
         self.scalar_mults.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Add `n` stored scalars to the σ total.
     pub fn add_stored(&self, n: u64) {
         self.stored_scalars.fetch_add(n, Ordering::Relaxed);
     }
@@ -38,10 +62,12 @@ impl WorkerCounters {
         self.stored_scalars.store(stored, Ordering::Relaxed);
     }
 
+    /// Current ξ total (scalar multiplications performed).
     pub fn mults(&self) -> u64 {
         self.scalar_mults.load(Ordering::Relaxed)
     }
 
+    /// Current σ total (scalars stored).
     pub fn stored(&self) -> u64 {
         self.stored_scalars.load(Ordering::Relaxed)
     }
@@ -63,17 +89,23 @@ pub struct TrafficReport {
 /// Shared atomic accumulator behind [`TrafficReport`].
 #[derive(Default, Debug)]
 pub struct TrafficCounters {
+    /// Phase 1: source → worker scalars.
     pub source_to_worker: AtomicU64,
+    /// Phase 2: worker ↔ worker scalars.
     pub worker_to_worker: AtomicU64,
+    /// Phase 3: worker → master scalars.
     pub worker_to_master: AtomicU64,
+    /// Message count across all links.
     pub messages: AtomicU64,
 }
 
 impl TrafficCounters {
+    /// A fresh zeroed accumulator behind an `Arc`.
     pub fn shared() -> Arc<TrafficCounters> {
         Arc::new(TrafficCounters::default())
     }
 
+    /// Snapshot the totals into a [`TrafficReport`].
     pub fn snapshot(&self) -> TrafficReport {
         TrafficReport {
             source_to_worker: self.source_to_worker.load(Ordering::Relaxed),
@@ -128,15 +160,22 @@ impl WireStats {
 /// Shared atomic accumulator behind [`WireStats`].
 #[derive(Default, Debug)]
 pub struct WireCounters {
+    /// Phase 1: source → worker frame bytes.
     pub bytes_source_to_worker: AtomicU64,
+    /// Phase 2: worker ↔ worker frame bytes.
     pub bytes_worker_to_worker: AtomicU64,
+    /// Phase 3: worker → master frame bytes.
     pub bytes_worker_to_master: AtomicU64,
+    /// Control-plane frame bytes.
     pub bytes_control: AtomicU64,
+    /// Frames written.
     pub frames: AtomicU64,
+    /// Inbound frames that failed to decode.
     pub decode_errors: AtomicU64,
 }
 
 impl WireCounters {
+    /// Snapshot the totals into a [`WireStats`].
     pub fn snapshot(&self) -> WireStats {
         WireStats {
             bytes_source_to_worker: self.bytes_source_to_worker.load(Ordering::Relaxed),
@@ -175,9 +214,17 @@ pub struct RuntimeCounters {
     /// Garbled I-shares located (and excluded) by the Byzantine decoder —
     /// one tick per blamed worker, across all jobs.
     pub byzantine_detected: AtomicU64,
+    /// Phase-3 interpolations of an output `Y` — one per executed job, one
+    /// per fused batch, one per *pipeline* (see the counter contract in the
+    /// module docs).
+    pub phase3_decodes: AtomicU64,
+    /// Pipeline rounds driven (masked opens and final decodes alike).
+    pub pipeline_stages: AtomicU64,
 }
 
 impl RuntimeCounters {
+    /// Snapshot every counter into a [`RuntimeHealthReport`] (the blame
+    /// log lives on the runtime, so `blamed_workers` stays empty here).
     pub fn snapshot(&self) -> RuntimeHealthReport {
         RuntimeHealthReport {
             evictions: self.evictions.load(Ordering::Relaxed),
@@ -186,6 +233,8 @@ impl RuntimeCounters {
             deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
             jobs_aborted: self.jobs_aborted.load(Ordering::Relaxed),
             byzantine_detected: self.byzantine_detected.load(Ordering::Relaxed),
+            phase3_decodes: self.phase3_decodes.load(Ordering::Relaxed),
+            pipeline_stages: self.pipeline_stages.load(Ordering::Relaxed),
             blamed_workers: Vec::new(),
         }
     }
@@ -198,14 +247,24 @@ impl RuntimeCounters {
 /// [`blamed_workers`]: RuntimeHealthReport::blamed_workers
 #[derive(Default, Debug, Clone, PartialEq, Eq)]
 pub struct RuntimeHealthReport {
+    /// Worker threads found dead and removed.
     pub evictions: u64,
+    /// Replacement worker threads provisioned.
     pub respawns: u64,
+    /// Jobs decoded at the quota with the straggler tail cancelled.
     pub early_decodes: u64,
+    /// Per-job deadline expiries reported by workers.
     pub deadline_misses: u64,
+    /// `JobAbort` broadcasts issued by job drivers on the failure path.
     pub jobs_aborted: u64,
     /// Total garbled I-shares located and excluded (one per blamed worker
     /// per affected job).
     pub byzantine_detected: u64,
+    /// Phase-3 decodes: one per executed job, one per fused batch, one per
+    /// pipeline (the counter contract in the module docs).
+    pub phase3_decodes: u64,
+    /// Pipeline rounds driven (masked opens and final decodes alike).
+    pub pipeline_stages: u64,
     /// Worker ids ever blamed by the Byzantine decoder, in blame order
     /// (duplicates possible if a respawned slot misbehaves again).
     pub blamed_workers: Vec<usize>,
@@ -246,6 +305,7 @@ pub struct PhaseTimings {
 }
 
 impl PhaseTimings {
+    /// End-to-end job latency: the sum of the non-overlapping windows.
     pub fn total(&self) -> std::time::Duration {
         self.setup + self.phase1_share + self.phase2_compute + self.phase3_reconstruct
             + self.ack_wait
@@ -296,14 +356,17 @@ pub struct GatewayCounters {
 }
 
 impl GatewayCounters {
+    /// A fresh zeroed accumulator behind an `Arc`.
     pub fn shared() -> Arc<GatewayCounters> {
         Arc::new(GatewayCounters::default())
     }
 
+    /// Record an accepted client connection.
     pub fn note_connection(&self) {
         self.connections.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a submission admitted past the door.
     pub fn note_accepted(&self) {
         self.accepted.fetch_add(1, Ordering::Relaxed);
     }
@@ -316,6 +379,7 @@ impl GatewayCounters {
         self.rejected[idx].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a post-admission failure (`Internal` reject to the client).
     pub fn note_failed(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
@@ -350,6 +414,7 @@ impl GatewayCounters {
         self.queue_depth.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Snapshot every counter and histogram into a [`GatewayStats`].
     pub fn snapshot(&self) -> GatewayStats {
         use Ordering::Relaxed;
         let mut rejected = [0u64; REJECT_REASONS];
@@ -385,16 +450,27 @@ impl GatewayCounters {
 /// prints it at shutdown; `tests/gateway.rs` asserts on it).
 #[derive(Default, Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GatewayStats {
+    /// Client connections accepted by the listener.
     pub connections: u64,
+    /// Submissions admitted past the door.
     pub accepted: u64,
+    /// Admitted jobs that returned a `Result` to their client.
     pub completed: u64,
+    /// Admitted jobs that failed post-admission.
     pub failed: u64,
+    /// Typed rejections at the door, indexed by the reason's wire code.
     pub rejected: [u64; REJECT_REASONS],
+    /// Batches dispatched onto a shared deployment.
     pub batches: u64,
+    /// Jobs carried inside those batches.
     pub batched_jobs: u64,
+    /// Gauge: admitted jobs waiting in the batcher at snapshot time.
     pub queue_depth: u64,
+    /// High-water mark of `queue_depth`.
     pub peak_queue_depth: u64,
+    /// Log₂ histogram of serving latency (admission → result encoded).
     pub latency_us: [u64; LATENCY_BUCKETS],
+    /// Histogram of dispatched batch sizes.
     pub batch_size: [u64; BATCH_BUCKETS],
 }
 
@@ -423,10 +499,12 @@ impl GatewayStats {
         u64::MAX
     }
 
+    /// Median serving latency (log₂-bucket upper bound, µs).
     pub fn p50_latency_us(&self) -> u64 {
         self.latency_percentile_us(0.50)
     }
 
+    /// 99th-percentile serving latency (log₂-bucket upper bound, µs).
     pub fn p99_latency_us(&self) -> u64 {
         self.latency_percentile_us(0.99)
     }

@@ -78,12 +78,17 @@ impl PayloadClass {
     /// Classify a payload. The split Phase-1 forms (`ShareA`/`ShareB`,
     /// sent by physically separate source processes) classify as
     /// [`PayloadClass::Shares`], so one rule covers both delivery shapes.
+    /// Pipeline payloads classify by their link role: a stage mask is a
+    /// source→worker share, a masked I-share is a worker→master I-share —
+    /// so existing chaos rules hit pipeline rounds without rewriting.
     pub fn of(payload: &Payload) -> PayloadClass {
         match payload {
             Payload::Shares { .. } => PayloadClass::Shares,
             Payload::ShareA(_) | Payload::ShareB(_) => PayloadClass::Shares,
+            Payload::StageMask { .. } => PayloadClass::Shares,
             Payload::GShare(_) => PayloadClass::GShare,
             Payload::IShare(_) => PayloadClass::IShare,
+            Payload::StageMasked { .. } => PayloadClass::IShare,
             Payload::Control(_) => PayloadClass::Control,
         }
     }

@@ -63,6 +63,7 @@ use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
 use crate::error::Result;
 use crate::matrix::FpMat;
 use crate::mpc::fused;
+use crate::mpc::pipeline::{self, Pipeline, PipelineOutput};
 use crate::mpc::protocol::{self, ExecEnv, ProtocolConfig, ProtocolOutput, Setup};
 use crate::mpc::runtime::WorkerRuntime;
 use crate::runtime::pool::{ScratchPool, WorkerPool};
@@ -202,9 +203,10 @@ impl Deployment {
     /// Falls back to sequential execution — same results, fabric path —
     /// when the batch or config is not fusible: fewer than 2 jobs, mixed
     /// shapes, or fabric knobs the fused path cannot honor (chaos plans,
-    /// link shapers, injected delays). Note the fused path streams no
-    /// envelopes, so `runtime().jobs_started()` does not advance for
-    /// fused jobs (the [`Deployment::jobs_executed`] counter does).
+    /// link shapers, injected delays). Although the genuinely fused path
+    /// streams no per-job envelopes, it claims the batch's job ids up
+    /// front, so `runtime().jobs_started()` advances by the batch size on
+    /// either path (the counter contract in [`crate::metrics`]).
     pub fn execute_fused(&self, jobs: &[(&FpMat, &FpMat)]) -> Result<Vec<ProtocolOutput>> {
         // One fetch_add claims the whole seed range — concurrent batches
         // and singleton executes can never draw overlapping mask streams.
@@ -247,7 +249,13 @@ impl Deployment {
                 .map(|(&(a, b), &seed)| self.run(a, b, seed))
                 .collect();
         }
-        fused::run_fused_batch(
+        // The genuinely fused path bypasses the fabric, so claim its job
+        // ids explicitly: `jobs_started` advances by the batch size on
+        // both paths, and the batch's single amortized reconstruction is
+        // recorded as one Phase-3 decode (the counter contract in
+        // `metrics`).
+        self.runtime.claim_job_ids(jobs.len() as u64);
+        let outs = fused::run_fused_batch(
             self.scheme.as_ref(),
             &self.setup,
             jobs,
@@ -258,6 +266,65 @@ impl Deployment {
                 pool: &self.pool,
                 scratch: &self.scratch,
             },
+        )?;
+        self.runtime.note_decode();
+        Ok(outs)
+    }
+
+    /// Run a [`Pipeline`] — a validated chain of secure matrix ops — end
+    /// to end on the provisioned runtime: one fabric job per matmul round,
+    /// masked re-shares between rounds, and a single Phase-3 decode of the
+    /// final output (see [`crate::mpc::pipeline`]). The pipeline claims
+    /// one seed slot like a job; per-round secrets derive from
+    /// [`crate::mpc::pipeline::stage_seed`] of it.
+    pub fn execute_pipeline(
+        &self,
+        pipe: &Pipeline,
+        x: &FpMat,
+        weights: &[&FpMat],
+    ) -> Result<PipelineOutput> {
+        let k = self.jobs_executed.fetch_add(1, Ordering::Relaxed);
+        self.run_pipeline(pipe, x, weights, derive_job_seed(self.config.seed, k))
+    }
+
+    /// [`Deployment::execute_pipeline`] with an explicit pipeline seed —
+    /// the reproducibility hook the CI digest lanes and the multi-process
+    /// reference role drive. Callers own mask-reuse avoidance.
+    pub fn execute_pipeline_seeded(
+        &self,
+        pipe: &Pipeline,
+        x: &FpMat,
+        weights: &[&FpMat],
+        seed: u64,
+    ) -> Result<PipelineOutput> {
+        self.jobs_executed.fetch_add(1, Ordering::Relaxed);
+        self.run_pipeline(pipe, x, weights, seed)
+    }
+
+    fn run_pipeline(
+        &self,
+        pipe: &Pipeline,
+        x: &FpMat,
+        weights: &[&FpMat],
+        seed: u64,
+    ) -> Result<PipelineOutput> {
+        let cfg = ProtocolConfig {
+            seed,
+            ..self.config.clone()
+        };
+        pipeline::run_pipeline(
+            self.scheme.as_ref(),
+            &self.setup,
+            pipe,
+            x,
+            weights,
+            &cfg,
+            &ExecEnv {
+                factory: &self.factory,
+                pool: &self.pool,
+                scratch: &self.scratch,
+            },
+            &self.runtime,
         )
     }
 
@@ -404,6 +471,13 @@ mod tests {
         let refs: Vec<(&FpMat, &FpMat)> = jobs.iter().map(|(a, b)| (a, b)).collect();
         let fused = fused_dep.execute_fused(&refs).unwrap();
         assert_eq!(fused_dep.jobs_executed(), 3);
+        // The fused path claims the batch's job ids even though it streams
+        // no envelopes — jobs_started advances like the sequential path,
+        // and the batch's amortized reconstruction is one Phase-3 decode
+        // (vs three for the sequential jobs).
+        assert_eq!(fused_dep.runtime().jobs_started(), 3);
+        assert_eq!(fused_dep.health().phase3_decodes, 1);
+        assert_eq!(seq_dep.health().phase3_decodes, 3);
 
         for (j, (f, s)) in fused.iter().zip(&sequential).enumerate() {
             assert_eq!(f.y, s.y, "job {j}: Y");

@@ -38,6 +38,7 @@ pub mod deployment;
 pub mod fused;
 pub mod master;
 pub mod network;
+pub mod pipeline;
 pub mod privacy;
 pub mod protocol;
 pub mod runtime;

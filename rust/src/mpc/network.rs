@@ -50,6 +50,8 @@ use crate::mpc::chaos::{ChaosPlan, FaultAction, PayloadClass};
 use crate::transport::shaper::LinkShaper;
 use crate::transport::wire;
 
+/// Flat node index on a fabric: `0..N` are workers, then master,
+/// source A, source B (see [`Fabric::role`]).
 pub type NodeId = usize;
 
 /// Identifies one job multiplexed over a shared fabric. Assigned by the
@@ -62,9 +64,13 @@ pub const CONTROL_JOB: JobId = u64::MAX;
 /// Role classification derived from a node id.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum Role {
+    /// Phase-2 worker with the given worker index.
     Worker(usize),
+    /// The Phase-3 master.
     Master,
+    /// The source holding matrix `A`.
     SourceA,
+    /// The source holding matrix `B`.
     SourceB,
 }
 
@@ -144,6 +150,7 @@ const TRIM_KEEP: usize = 2;
 const TRIM_MIN_RETAINED: usize = 16 * 1024;
 
 impl BufferPool {
+    /// Fresh, empty pool behind an `Arc` (loans hold a `Weak` to it).
     pub fn new() -> Arc<BufferPool> {
         Arc::new(BufferPool::default())
     }
@@ -233,13 +240,20 @@ pub enum ControlMsg {
     /// worker installs a fresh local instance whose totals travel back in
     /// [`ControlMsg::JobDone`] / [`ControlMsg::AbortAck`].
     JobStart {
+        /// Per-job secret seed (worker id is mixed in locally).
         seed: u64,
+        /// Shared overhead counters the worker reports into.
         counters: Arc<WorkerCounters>,
     },
     /// A worker finished every Phase-2/3 obligation of the job; carries its
     /// final overhead totals so the driver-side counters are exact even
     /// when the worker lives in another process.
-    JobDone { mults: u64, stored: u64 },
+    JobDone {
+        /// Final scalar-multiplication count for the job.
+        mults: u64,
+        /// Final stored-scalar count for the job.
+        stored: u64,
+    },
     /// A worker had to abandon the job (backend failure, dead peer, …).
     JobError(String),
     /// The job's driver gave up (worker failure or receive timeout) or the
@@ -251,7 +265,12 @@ pub enum ControlMsg {
     /// state is dropped and tombstoned, so the overhead totals carried here
     /// are **final** — the early-decode driver drains these to report exact
     /// ξ/σ counters instead of lower bounds.
-    AbortAck { mults: u64, stored: u64 },
+    AbortAck {
+        /// Final scalar-multiplication count at abort time.
+        mults: u64,
+        /// Final stored-scalar count at abort time.
+        stored: u64,
+    },
     /// Terminate the worker's serve loop (runtime teardown).
     Shutdown,
     /// Push one job's *input matrix* to a source node, with the per-job
@@ -261,7 +280,52 @@ pub enum ControlMsg {
     /// deriving manifest-seeded inputs locally. Control-plane by design:
     /// master→source is not a data-topology edge, and these bytes are the
     /// job input, not protocol overhead, so they stay unmetered.
-    JobInput { seed: u64, mat: FpMat },
+    JobInput {
+        /// The job's per-job secret seed.
+        seed: u64,
+        /// The input matrix (`A` for source A, `B` for source B).
+        mat: FpMat,
+    },
+    /// Pipeline form of [`ControlMsg::JobStart`]: start serving round
+    /// `stage` of a pipeline under the round seed. When `masked` is set
+    /// the worker must **withhold** its plain I-share, wait for the
+    /// round's [`Payload::StageMask`], and answer with a
+    /// [`Payload::StageMasked`] instead — the flag travels in the start
+    /// message precisely so no worker can race ahead of its mask and leak
+    /// an unmasked intermediate to the master. Like `JobStart`, the
+    /// counters `Arc` never crosses a remote transport.
+    StageStart {
+        /// Pipeline round index (0-based).
+        stage: u32,
+        /// The round's secret seed.
+        seed: u64,
+        /// Whether this round's I-share must travel masked.
+        masked: bool,
+        /// Shared overhead counters the worker reports into.
+        counters: Arc<WorkerCounters>,
+    },
+    /// The master's re-share of an intermediate masked open: worker
+    /// `to`'s evaluation of `build_f_a(Z', rng)` for pipeline round
+    /// `stage`. Control-plane like [`ControlMsg::JobInput`] (its
+    /// precedent): master→worker is not a data-topology edge, and the
+    /// masked re-share is round input, not protocol overhead.
+    StageShareZ {
+        /// Pipeline round index this share feeds.
+        stage: u32,
+        /// The worker's evaluation of the masked-open re-share polynomial.
+        mat: FpMat,
+    },
+    /// Source A's residual share for pipeline round `stage`: the
+    /// evaluation of the secret-term-free polynomial of the replayed mask
+    /// `R'`. The worker's round input is `StageShareZ − StageShareR`,
+    /// which by GF(p) linearity equals a fresh A-share of the true
+    /// (never-materialized) next state.
+    StageShareR {
+        /// Pipeline round index this share feeds.
+        stage: u32,
+        /// The worker's evaluation of the replayed-mask residual polynomial.
+        mat: FpMat,
+    },
 }
 
 /// A protocol message payload.
@@ -270,7 +334,12 @@ pub enum Payload {
     /// Phase 1: a worker's evaluations of the two share polynomials in one
     /// combined envelope (the in-process driver plays both sources on one
     /// thread, so one message per worker keeps the fabric simple).
-    Shares { fa: PooledMat, fb: PooledMat },
+    Shares {
+        /// `F_A(α_to)` — the worker's A-share.
+        fa: PooledMat,
+        /// `F_B(α_to)` — the worker's B-share.
+        fb: PooledMat,
+    },
     /// Phase 1, split form: `F_A(α_to)` alone — what a *physically
     /// separate* source-A process sends (it does not hold `B`). Workers
     /// accept the combined and split forms interchangeably.
@@ -281,6 +350,24 @@ pub enum Payload {
     GShare(PooledMat),
     /// Phase 3: `I(α_from)`.
     IShare(PooledMat),
+    /// Pipeline round `stage`: source B's evaluation `D(α_to)` of the
+    /// round's mask polynomial (source→worker, metered like a share).
+    StageMask {
+        /// Pipeline round index the mask belongs to.
+        stage: u32,
+        /// `D(α_to)` — the mask polynomial evaluated at the receiver.
+        mat: PooledMat,
+    },
+    /// Pipeline round `stage`: a worker's **masked** I-share
+    /// `I(α_from) + D(α_from)` (worker→master, metered like an I-share) —
+    /// what intermediate rounds send in place of [`Payload::IShare`], so
+    /// the master only ever interpolates `Z = Y + R`.
+    StageMasked {
+        /// Pipeline round index the share belongs to.
+        stage: u32,
+        /// `I(α_from) + D(α_from)` — the masked I-share.
+        mat: PooledMat,
+    },
     /// Runtime control plane (job lifecycle, shutdown).
     Control(ControlMsg),
 }
@@ -292,6 +379,9 @@ impl Payload {
             Payload::Shares { fa, fb } => (fa.len() + fb.len()) as u64,
             Payload::ShareA(m) | Payload::ShareB(m) => m.len() as u64,
             Payload::GShare(m) | Payload::IShare(m) => m.len() as u64,
+            Payload::StageMask { mat, .. } | Payload::StageMasked { mat, .. } => {
+                mat.len() as u64
+            }
             Payload::Control(_) => 0,
         }
     }
@@ -305,6 +395,7 @@ fn garble(payload: &mut Payload) {
         Payload::Shares { fa, .. } => fa,
         Payload::ShareA(m) | Payload::ShareB(m) => m,
         Payload::GShare(m) | Payload::IShare(m) => m,
+        Payload::StageMask { mat, .. } | Payload::StageMasked { mat, .. } => mat,
         Payload::Control(_) => return,
     };
     if !mat.is_empty() {
@@ -316,8 +407,11 @@ fn garble(payload: &mut Payload) {
 /// A routed message, tagged with the job it belongs to.
 #[derive(Debug)]
 pub struct Envelope {
+    /// The job this message belongs to ([`CONTROL_JOB`] for job-free control).
     pub job: JobId,
+    /// Sending node.
     pub from: NodeId,
+    /// The message body.
     pub payload: Payload,
 }
 
@@ -535,6 +629,7 @@ pub struct Fabric {
 
 /// Receive side handed to a node thread.
 pub struct Endpoint {
+    /// The node this endpoint receives for.
     pub id: NodeId,
     rx: Receiver<Envelope>,
 }
@@ -635,22 +730,27 @@ impl Fabric {
         self.chaos_killed(node) || !self.transport.peer_alive(node)
     }
 
+    /// Number of worker nodes (ids `0..n_workers`).
     pub fn n_workers(&self) -> usize {
         self.n_workers
     }
 
+    /// Node id of the master (`N`).
     pub fn master_id(&self) -> NodeId {
         self.n_workers
     }
 
+    /// Node id of source A (`N + 1`).
     pub fn source_a_id(&self) -> NodeId {
         self.n_workers + 1
     }
 
+    /// Node id of source B (`N + 2`).
     pub fn source_b_id(&self) -> NodeId {
         self.n_workers + 2
     }
 
+    /// Classify a node id into its [`Role`].
     pub fn role(&self, id: NodeId) -> Role {
         if id < self.n_workers {
             Role::Worker(id)
@@ -927,6 +1027,7 @@ struct RouterInner {
 }
 
 impl JobRouter {
+    /// Wrap the master's endpoint for job-filtered receiving.
     pub fn new(endpoint: Endpoint) -> JobRouter {
         JobRouter {
             inner: Mutex::new(RouterInner {

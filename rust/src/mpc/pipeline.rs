@@ -1,0 +1,1012 @@
+//! Pipeline jobs: chained secure matrix ops on one deployment — private
+//! ML inference without per-stage decode-and-re-encode at the master.
+//!
+//! A [`Pipeline`] is a small validated chain of matrix ops — secure matmul,
+//! transpose, element-wise scale / bias add, fixed-point truncation — run
+//! against a single provisioned [`Deployment`]. Semantically, with state
+//! `S_0 = X` and per-round weights `W_0..W_{R−1}`:
+//!
+//! ```text
+//! S_{r+1} = boundary_ops_r( S_rᵀ · W_r )        (rounds r = 0..R−1)
+//! ```
+//!
+//! and the pipeline output is the last round's product after its trailing
+//! ops. Every round is one CMPC job (Algorithm 3) on the job-multiplexed
+//! fabric, with its own [`JobId`], stage-tagged control traffic
+//! ([`ControlMsg::StageStart`]) and stage-tagged payloads.
+//!
+//! # Why the master never sees an intermediate product
+//!
+//! The naive chain would decode `Y_r` at the master after every round and
+//! re-encode it as the next round's input — leaking every intermediate
+//! activation to the master. Instead, intermediate rounds perform a
+//! **masked open**: source B draws a secret per-round mask `R_r` (from the
+//! round seed) and ships each worker the evaluation of
+//!
+//! ```text
+//! D_r(x) = Σ_{i,l} R_r[i][l] · x^{i+t·l}
+//! ```
+//!
+//! as a [`Payload::StageMask`]. A worker adds `D_r(αₙ)` to its finished
+//! I-share and answers with a [`Payload::StageMasked`] instead of a plain
+//! I-share, so what the master interpolates at the `t²+z` stage quota is
+//! `Z_r = Y_r + R_r` — uniformly masked on every full-field coordinate.
+//! The master applies the round's boundary ops to `Z_r` and re-shares it;
+//! source A independently replays the same ops on `R_r` and ships the
+//! *residual* share ([`ControlMsg::StageShareR`], no secret terms), and
+//! each worker subtracts the two evaluations. By linearity of the share
+//! encoding over GF(p), `F_A(Z') − F_res(R') = F_A(Z' − R') = F_A(S_{r+1})`
+//! — byte-identical to sharing the true next input, which is exactly what
+//! the in-process driver (who plays all roles) does directly. Only the
+//! **final** round runs the ordinary Phase-3 reconstruction
+//! ([`crate::mpc::master::run_master`]): one decode per pipeline, counted
+//! by [`RuntimeHealthReport::phase3_decodes`].
+//!
+//! # Fixed-point truncation
+//!
+//! [`PipelineOp::Truncate`]`(f)` models a fixed-point activation rescale
+//! (`v >> f`). On a *masked* boundary it is probabilistic in the usual
+//! MPC sense: the opened value is `(y + r) >> f` minus the replayed
+//! `r >> f`, which equals `(y >> f) + ε` with `ε ∈ {0,1}` — and requires
+//! `y + r < p` to avoid wraparound, which is why truncating boundaries
+//! draw `R_r` entries below `2¹⁵` and why callers should keep truncated
+//! activations small (see [`pipeline_input`]). The protocol/reference
+//! byte-identity contract is unconditional regardless: the reference
+//! replays the identical masked arithmetic with the identical `R_r`.
+//!
+//! # Determinism and fault tolerance
+//!
+//! All per-round randomness derives from [`stage_seed`] of the pipeline
+//! seed, so in-process, multi-process TCP, and the
+//! [`reference_eval`] replay agree byte-for-byte. Intermediate rounds
+//! always decode at the stage quota and cancel their tail with a
+//! `JobAbort` — a worker chaos-killed mid-stage costs nothing as long as
+//! `t²+z` peers survive the round, and the runtime reaper respawns it
+//! before the next round's [`WorkerRuntime::begin_job`].
+//!
+//! [`Deployment`]: crate::mpc::deployment::Deployment
+//! [`ControlMsg::StageStart`]: crate::mpc::network::ControlMsg::StageStart
+//! [`ControlMsg::StageShareR`]: crate::mpc::network::ControlMsg::StageShareR
+//! [`Payload::StageMask`]: crate::mpc::network::Payload::StageMask
+//! [`Payload::StageMasked`]: crate::mpc::network::Payload::StageMasked
+//! [`RuntimeHealthReport::phase3_decodes`]:
+//!     crate::metrics::RuntimeHealthReport::phase3_decodes
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::codes::{CmpcScheme, SchemeParams};
+use crate::error::{CmpcError, Result};
+use crate::ff;
+use crate::matrix::FpMat;
+use crate::metrics::{TrafficReport, WorkerCounters};
+use crate::mpc::deployment::derive_job_seed;
+use crate::mpc::master;
+use crate::mpc::network::{ControlMsg, Fabric, JobId, JobRouter, Payload, PooledMat};
+use crate::mpc::protocol::{validate_job_shapes, ExecEnv, ProtocolConfig, Setup};
+use crate::mpc::runtime::WorkerRuntime;
+use crate::mpc::source;
+use crate::poly::interp::try_vandermonde_inverse_rows;
+use crate::poly::MatPoly;
+use crate::util::rng::ChaChaRng;
+
+/// Upper bound on secure-matmul rounds per pipeline (keeps stage indices
+/// comfortably inside the wire's `u32` tag and bounds mask bookkeeping).
+pub const MAX_PIPELINE_ROUNDS: usize = 32;
+
+/// Domain separator folded into the pipeline seed before per-round
+/// derivation, so pipeline stage seeds can never collide with the
+/// singleton-job seed schedule of the same deployment.
+const PIPE_DOMAIN: u64 = 0x5049_5045_4C4E_4553;
+
+/// Domain separator for the per-round mask stream: the mask RNG must be
+/// independent of the round's source/worker streams even though all three
+/// derive from the same broadcast round seed.
+const MASK_DOMAIN: u64 = 0xA5A5_5A5A_D00D_F00D;
+
+/// One operation in a [`Pipeline`] chain.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PipelineOp {
+    /// A secure coded matrix multiplication: `S ← Sᵀ · W` where `W` is the
+    /// next unconsumed weight matrix supplied to the run. Every pipeline
+    /// starts with one, and each costs one full CMPC round.
+    Matmul,
+    /// Transpose the running state (free: applied to the masked open and
+    /// its mask replay, never decoded in the clear mid-chain).
+    Transpose,
+    /// Multiply every element by a non-zero constant (mod p).
+    Scale(u64),
+    /// Add a public bias matrix element-wise. The bias is public protocol
+    /// state (model biases, not activations), so it is applied to the
+    /// masked value only — the mask replay is unchanged.
+    AddBias(FpMat),
+    /// Fixed-point truncation: shift every element right by `f` bits
+    /// (`1..=15`). Only legal directly after a [`PipelineOp::Matmul`]; on
+    /// masked boundaries the result carries the standard `ε ∈ {0,1}`
+    /// probabilistic-truncation slack (see the module docs).
+    Truncate(u32),
+}
+
+/// A validated linear chain of matrix ops, ready to run on a deployment.
+///
+/// Build one with [`Pipeline::new`] (typed [`CmpcError::InvalidParams`] on
+/// an illegal chain) or parse the manifest spec form with
+/// [`Pipeline::parse_spec`]. `R` = number of [`PipelineOp::Matmul`] ops =
+/// number of secure rounds = number of weight matrices the run consumes.
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    ops: Vec<PipelineOp>,
+    /// `boundaries[r]` = index range of the ops between matmul `r` and the
+    /// next matmul (for the last round: the trailing ops).
+    boundaries: Vec<(usize, usize)>,
+}
+
+impl Pipeline {
+    /// Validate `ops` into a runnable pipeline.
+    ///
+    /// Rules (each violation is a typed [`CmpcError::InvalidParams`]):
+    /// the chain is non-empty and starts with a [`PipelineOp::Matmul`];
+    /// at most [`MAX_PIPELINE_ROUNDS`] matmuls; [`PipelineOp::Truncate`]
+    /// bits are in `1..=15` and a truncation directly follows a matmul
+    /// (the only position where the bounded-mask open is sound); and
+    /// [`PipelineOp::Scale`] constants are non-zero mod p.
+    pub fn new(ops: Vec<PipelineOp>) -> Result<Pipeline> {
+        if ops.first() != Some(&PipelineOp::Matmul) {
+            return Err(CmpcError::InvalidParams(
+                "a pipeline must start with a matmul op".to_string(),
+            ));
+        }
+        let rounds = ops.iter().filter(|o| matches!(o, PipelineOp::Matmul)).count();
+        if rounds > MAX_PIPELINE_ROUNDS {
+            return Err(CmpcError::InvalidParams(format!(
+                "pipeline has {rounds} matmul rounds; the limit is {MAX_PIPELINE_ROUNDS}"
+            )));
+        }
+        for (k, op) in ops.iter().enumerate() {
+            match op {
+                PipelineOp::Truncate(f) => {
+                    if !(1..=15).contains(f) {
+                        return Err(CmpcError::InvalidParams(format!(
+                            "truncation by {f} bits is outside 1..=15"
+                        )));
+                    }
+                    if k == 0 || ops[k - 1] != PipelineOp::Matmul {
+                        return Err(CmpcError::InvalidParams(
+                            "truncation must directly follow a matmul (the only \
+                             boundary position where the bounded-mask open is sound)"
+                                .to_string(),
+                        ));
+                    }
+                }
+                PipelineOp::Scale(c) => {
+                    if c % ff::P == 0 {
+                        return Err(CmpcError::InvalidParams(
+                            "scale constant is 0 mod p".to_string(),
+                        ));
+                    }
+                }
+                PipelineOp::Matmul | PipelineOp::Transpose | PipelineOp::AddBias(_) => {}
+            }
+        }
+        // Precompute each round's boundary slice: the ops strictly between
+        // matmul r and matmul r+1 (trailing ops for the last round).
+        let mut boundaries = Vec::with_capacity(rounds);
+        let mut start = None;
+        for (k, op) in ops.iter().enumerate() {
+            if matches!(op, PipelineOp::Matmul) {
+                if let Some(s) = start {
+                    boundaries.push((s, k));
+                }
+                start = Some(k + 1);
+            }
+        }
+        if let Some(s) = start {
+            boundaries.push((s, ops.len()));
+        }
+        Ok(Pipeline { ops, boundaries })
+    }
+
+    /// Number of secure matmul rounds (= weight matrices a run consumes).
+    pub fn rounds(&self) -> usize {
+        self.boundaries.len()
+    }
+
+    /// The validated op chain.
+    pub fn ops(&self) -> &[PipelineOp] {
+        &self.ops
+    }
+
+    /// The ops applied after round `r`'s matmul: a masked boundary for
+    /// intermediate rounds, the in-the-clear trailing ops for the last.
+    pub fn boundary(&self, r: usize) -> &[PipelineOp] {
+        let (s, e) = self.boundaries[r];
+        &self.ops[s..e]
+    }
+
+    /// Whether round `r`'s mask must be drawn bounded (`< 2¹⁵`): true iff
+    /// its boundary starts with a truncation. The distributed source-B
+    /// role derives the same answer from its manifest copy of the spec.
+    pub(crate) fn bounded_mask(&self, r: usize) -> bool {
+        matches!(self.boundary(r).first(), Some(PipelineOp::Truncate(_)))
+    }
+
+    /// Parse the manifest/CLI spec form: comma-separated ops from
+    /// `matmul`, `transpose`, `scale:<c>`, `truncate:<f>` — e.g. the
+    /// private-inference chain `matmul,truncate:8,matmul`.
+    /// [`PipelineOp::AddBias`] carries matrix data and has no spec form.
+    pub fn parse_spec(spec: &str) -> Result<Pipeline> {
+        let mut ops = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            let op = match tok.split_once(':') {
+                None => match tok {
+                    "matmul" => PipelineOp::Matmul,
+                    "transpose" => PipelineOp::Transpose,
+                    _ => {
+                        return Err(CmpcError::InvalidParams(format!(
+                            "unknown pipeline op {tok:?} (expected matmul, transpose, \
+                             scale:<c> or truncate:<f>)"
+                        )))
+                    }
+                },
+                Some(("scale", c)) => PipelineOp::Scale(c.parse::<u64>().map_err(|_| {
+                    CmpcError::InvalidParams(format!("bad scale constant {c:?}"))
+                })?),
+                Some(("truncate", f)) => PipelineOp::Truncate(f.parse::<u32>().map_err(
+                    |_| CmpcError::InvalidParams(format!("bad truncate bits {f:?}")),
+                )?),
+                Some((other, _)) => {
+                    return Err(CmpcError::InvalidParams(format!(
+                        "unknown pipeline op {other:?}"
+                    )))
+                }
+            };
+            ops.push(op);
+        }
+        Pipeline::new(ops)
+    }
+
+    /// Render back to the spec form, or `None` if the chain contains an
+    /// op with no spec representation ([`PipelineOp::AddBias`]).
+    pub fn spec_string(&self) -> Option<String> {
+        let mut toks = Vec::with_capacity(self.ops.len());
+        for op in &self.ops {
+            toks.push(match op {
+                PipelineOp::Matmul => "matmul".to_string(),
+                PipelineOp::Transpose => "transpose".to_string(),
+                PipelineOp::Scale(c) => format!("scale:{c}"),
+                PipelineOp::Truncate(f) => format!("truncate:{f}"),
+                PipelineOp::AddBias(_) => return None,
+            });
+        }
+        Some(toks.join(","))
+    }
+}
+
+/// Everything a pipeline run reports back.
+pub struct PipelineOutput {
+    /// The final product, after the last round's trailing ops — the only
+    /// value the master ever decoded unmasked.
+    pub y: FpMat,
+    /// Secure matmul rounds executed.
+    pub rounds: usize,
+    /// Scheme that served every round.
+    pub scheme_name: String,
+    /// Provisioned worker count.
+    pub n_workers: usize,
+    /// Whether the output was checked against [`reference_eval`]
+    /// (requested via [`ProtocolConfig::verify`]; a mismatch is a typed
+    /// error, so a returned `false` only ever means "not checked").
+    pub verified: bool,
+    /// Whether the final round's Phase-3 decode took the early-decode
+    /// fast path (intermediate rounds always decode at the stage quota).
+    pub early_decoded: bool,
+    /// Per-round fabric traffic, in round order.
+    pub stage_traffic: Vec<TrafficReport>,
+    /// Field-wise total of `stage_traffic`.
+    pub traffic: TrafficReport,
+    /// Per-round wall time, in round order (the bench's stages-vs-e2e
+    /// section sums these against an end-to-end clock).
+    pub stage_elapsed: Vec<Duration>,
+}
+
+/// Per-round seed schedule: every secret stream of round `r` (sources,
+/// worker masks, stage mask) derives from `stage_seed(pipeline_seed, r)`.
+/// The domain separator keeps the schedule disjoint from the singleton-job
+/// seeds a shared deployment hands out.
+pub fn stage_seed(pipeline_seed: u64, r: u32) -> u64 {
+    derive_job_seed(pipeline_seed ^ PIPE_DOMAIN, r as u64)
+}
+
+/// Deterministic demo input for the private-inference example and the CI
+/// digest lanes: entries in `[0, 8)` so a `truncate:8` chain stays inside
+/// the bounded-mask exactness window (see the module docs).
+pub fn pipeline_input(seed: u64, m: usize) -> FpMat {
+    let mut rng = ChaChaRng::seed_from_u64(seed ^ 0x5049_5045_0000_0001);
+    FpMat::from_fn(m, m, |_, _| rng.gen_range(8))
+}
+
+/// Deterministic demo weight matrix for round `r` (companion of
+/// [`pipeline_input`]).
+pub fn pipeline_weight(seed: u64, m: usize, r: u32) -> FpMat {
+    let mut rng =
+        ChaChaRng::seed_from_u64(derive_job_seed(seed ^ 0x5049_5045_0000_0002, r as u64));
+    FpMat::from_fn(m, m, |_, _| rng.gen_range(8))
+}
+
+/// Round `r`'s mask blocks `R_r[i][l]` (t×t blocks of (m/t)×(m/t)):
+/// entries below `2¹⁵` when `bounded` (truncating boundary), else
+/// full-field uniform. Shared verbatim by the in-process driver, the TCP
+/// source/master roles, and [`reference_eval`] — byte-identity across all
+/// three hangs on this derivation.
+pub(crate) fn stage_mask_blocks(
+    t: usize,
+    block: usize,
+    bounded: bool,
+    round_seed: u64,
+) -> Vec<Vec<FpMat>> {
+    let mut rng = ChaChaRng::seed_from_u64(round_seed ^ MASK_DOMAIN);
+    (0..t)
+        .map(|_i| {
+            (0..t)
+                .map(|_l| {
+                    FpMat::from_fn(block, block, |_, _| {
+                        if bounded {
+                            rng.gen_range(1 << 15)
+                        } else {
+                            rng.field_element()
+                        }
+                    })
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The mask polynomial `D_r(x) = Σ_{i,l} R_r[i][l]·x^{i+t·l}`: blocks sit
+/// at the *dense-basis* important coefficients `i+t·l` of the exchanged
+/// I-polynomial (its top `z` coefficients are already randomized by the
+/// workers' own G-masks, so `Z = Y + R` leaks nothing to the master).
+pub(crate) fn stage_mask_poly(blocks: &[Vec<FpMat>], t: usize) -> MatPoly {
+    let (br, bc) = (blocks[0][0].rows, blocks[0][0].cols);
+    let mut poly = MatPoly::new(br, bc);
+    for (i, row) in blocks.iter().enumerate() {
+        for (l, blk) in row.iter().enumerate() {
+            poly.insert((i + t * l) as u64, blk.clone());
+        }
+    }
+    poly
+}
+
+/// The secret-term-free A-side share polynomial of `mat`: the coded blocks
+/// of [`source::build_f_a`] *without* the trailing random masks. Evaluated
+/// per worker as [`ControlMsg::StageShareR`], it lets a worker cancel the
+/// mask out of the master's re-shared `Z'` — by GF(p) linearity,
+/// `build_f_a(Z', rng) − residual(R') = build_f_a(Z' − R', rng)` with the
+/// identical secret draws.
+///
+/// [`ControlMsg::StageShareR`]: crate::mpc::network::ControlMsg::StageShareR
+pub(crate) fn residual_poly_a(scheme: &dyn CmpcScheme, mat: &FpMat) -> MatPoly {
+    let p = scheme.params();
+    let at = mat.transpose();
+    let blocks = at.blocks(p.t, p.s);
+    let (br, bc) = (blocks[0][0].rows, blocks[0][0].cols);
+    let mut poly = MatPoly::new(br, bc);
+    for (i, row) in blocks.into_iter().enumerate() {
+        for (j, blk) in row.into_iter().enumerate() {
+            poly.insert(scheme.coded_power_a(i, j), blk);
+        }
+    }
+    poly
+}
+
+/// Apply a boundary-op slice to a matrix. `with_bias` distinguishes the
+/// two lockstep replays: the masked value `Z` takes bias adds, the mask
+/// replay `R` skips them (a public bias shifts `Z − R` exactly once).
+pub(crate) fn apply_ops(mut m: FpMat, ops: &[PipelineOp], with_bias: bool) -> FpMat {
+    for op in ops {
+        match op {
+            PipelineOp::Matmul => {} // never inside a boundary slice
+            PipelineOp::Transpose => m = m.transpose(),
+            PipelineOp::Scale(c) => m = m.scale(*c),
+            PipelineOp::AddBias(b) => {
+                if with_bias {
+                    m.add_assign(b);
+                }
+            }
+            PipelineOp::Truncate(f) => {
+                let f = *f;
+                let shifted = FpMat::from_fn(m.rows, m.cols, |r, c| m.at(r, c) >> f);
+                m = shifted;
+            }
+        }
+    }
+    m
+}
+
+/// Validate a pipeline run against a scheme and config: square equal-shape
+/// inputs that the partition divides, one weight per round, no Byzantine
+/// tolerance (the masked open is an erasure decode; location needs the
+/// singleton path), and — per stage, since every round re-shares and
+/// re-interpolates — the dense-basis degree/quota accounting.
+pub fn validate_pipeline(
+    pipe: &Pipeline,
+    params: SchemeParams,
+    n_workers: usize,
+    x: &FpMat,
+    weights: &[&FpMat],
+    config: &ProtocolConfig,
+) -> Result<()> {
+    if weights.len() != pipe.rounds() {
+        return Err(CmpcError::InvalidParams(format!(
+            "pipeline has {} matmul rounds but {} weight matrices were supplied",
+            pipe.rounds(),
+            weights.len()
+        )));
+    }
+    if params.adversary_tolerance != 0 || config.adversary_tolerance != 0 {
+        return Err(CmpcError::InvalidParams(
+            "pipelines require adversary_tolerance = 0: the intermediate masked \
+             open is an erasure decode with no Byzantine location pass"
+                .to_string(),
+        ));
+    }
+    for (r, w) in weights.iter().enumerate() {
+        validate_job_shapes(x, w, params)
+            .map_err(|e| CmpcError::ShapeMismatch(format!("pipeline round {r}: {e}")))?;
+        if w.rows != x.rows {
+            return Err(CmpcError::ShapeMismatch(format!(
+                "pipeline round {r}: weight is {}x{} but the chain state is {}x{}",
+                w.rows, w.cols, x.rows, x.cols
+            )));
+        }
+        // Per-stage accounting: round r interpolates the dense basis
+        // 0..t²+z, so its quota and every important coefficient must fit
+        // the provisioned worker set — checked here per round, not assumed
+        // from round 0.
+        let quota = params.stage_quota();
+        if quota > n_workers {
+            return Err(CmpcError::InsufficientWorkers {
+                needed: quota,
+                provisioned: n_workers,
+            });
+        }
+        for i in 0..params.t {
+            for l in 0..params.t {
+                debug_assert!(i + params.t * l < quota);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Shape-only pipeline validation from `(m, s, t)` — everything a
+/// topology manifest can decide before any matrices exist. The full
+/// [`validate_pipeline`] re-checks shapes and quotas at run time.
+pub fn validate_pipeline_shape(pipe: &Pipeline, m: usize, s: usize, t: usize) -> Result<()> {
+    if m == 0 || s == 0 || t == 0 || m % s != 0 || m % t != 0 {
+        return Err(CmpcError::ShapeMismatch(format!(
+            "pipeline ({} rounds) runs {m}x{m} stages, but the partition (s={s}, t={t}) \
+             must divide m",
+            pipe.rounds()
+        )));
+    }
+    Ok(())
+}
+
+/// Master-side collection of one intermediate round: gather `quota`
+/// stage-tagged masked I-shares, interpolate the dense basis over
+/// whichever subset arrived first (RS uniqueness makes the coefficients
+/// independent of the arrival order), and cancel the straggler tail with
+/// a `JobAbort` broadcast. Returns the masked open `Z = Y + R`.
+///
+/// Shared by the in-process driver and the TCP master role.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn collect_stage(
+    router: &JobRouter,
+    fabric: &Fabric,
+    job: JobId,
+    stage: u32,
+    alphas: &[u64],
+    n_workers: usize,
+    t: usize,
+    quota: usize,
+    timeout: Duration,
+    counters: &[Arc<WorkerCounters>],
+) -> Result<FpMat> {
+    let deadline = Instant::now() + timeout;
+    let mut arrived: Vec<(usize, FpMat)> = Vec::with_capacity(quota);
+    let mut seen = vec![false; n_workers];
+    while arrived.len() < quota {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        let env = router.recv_for(job, remaining)?;
+        match env.payload {
+            Payload::StageMasked { stage: s, mat } if s == stage => {
+                if env.from < n_workers && !seen[env.from] {
+                    seen[env.from] = true;
+                    arrived.push((env.from, (*mat).clone()));
+                }
+            }
+            Payload::Control(ControlMsg::JobDone { mults, stored })
+            | Payload::Control(ControlMsg::AbortAck { mults, stored }) => {
+                if env.from < n_workers {
+                    counters[env.from].record_final(mults, stored);
+                }
+            }
+            // A worker that errored mid-round is a straggler for this
+            // round: the quota tolerates it, the reaper replaces it.
+            Payload::Control(ControlMsg::JobError(_)) => {}
+            Payload::IShare(_) => {
+                return Err(CmpcError::Fabric(format!(
+                    "pipeline stage {stage}: worker {} answered with an unmasked \
+                     I-share",
+                    env.from
+                )));
+            }
+            other => {
+                return Err(CmpcError::Fabric(format!(
+                    "pipeline stage {stage}: unexpected payload {other:?} from node {}",
+                    env.from
+                )));
+            }
+        }
+    }
+    // Interpolate coefficients 0..t² of the masked I-polynomial from the
+    // first `quota` arrivals. Any quota-subset of evaluations of a
+    // degree-< quota polynomial determines it uniquely, so the result is
+    // byte-identical however the race resolved.
+    let pts: Vec<u64> = arrived.iter().map(|&(wid, _)| alphas[wid]).collect();
+    let support: Vec<u64> = (0..quota as u64).collect();
+    let rows = try_vandermonde_inverse_rows(&pts, &support).ok_or_else(|| {
+        CmpcError::NotDecodable(format!(
+            "pipeline stage {stage}: arrival set is not interpolable"
+        ))
+    })?;
+    let (br, bc) = (arrived[0].1.rows, arrived[0].1.cols);
+    let mut z_blocks: Vec<Vec<FpMat>> = vec![Vec::with_capacity(t); t];
+    for (j, row) in rows.iter().enumerate().take(t * t) {
+        let mut blk = FpMat::zeros(br, bc);
+        let terms: Vec<(u64, &[u32])> = row
+            .iter()
+            .zip(arrived.iter())
+            .map(|(&c, (_, share))| (c, share.data.as_slice()))
+            .collect();
+        ff::weighted_sum_into(&mut blk.data, &terms);
+        z_blocks[j % t].push(blk);
+    }
+    // Cancel the tail: stragglers drop the round immediately instead of
+    // holding state until their per-job deadline. No ack drain — the
+    // router queue closes with the round, so late acks are simply dropped
+    // (per-stage ξ/σ finality is not promised for aborted stragglers).
+    for wid in 0..n_workers {
+        let _ = fabric.send(job, fabric.master_id(), wid, Payload::Control(ControlMsg::JobAbort));
+    }
+    Ok(FpMat::from_blocks(&z_blocks))
+}
+
+/// The cleartext replay of a pipeline: per round, the true product plus
+/// the *identical* masked boundary arithmetic (`Z = Y + R_r`, boundary ops
+/// on both, next state `Z' − R'`), trailing ops exact. This **is** the
+/// naive master-side decode-and-re-encode chain, so a protocol run with
+/// the same pipeline seed must match it byte-for-byte — which the
+/// in-process driver asserts when [`ProtocolConfig::verify`] is set.
+pub fn reference_eval(
+    pipe: &Pipeline,
+    params: SchemeParams,
+    x: &FpMat,
+    weights: &[&FpMat],
+    pipeline_seed: u64,
+) -> Result<FpMat> {
+    if weights.len() != pipe.rounds() {
+        return Err(CmpcError::InvalidParams(format!(
+            "pipeline has {} matmul rounds but {} weight matrices were supplied",
+            pipe.rounds(),
+            weights.len()
+        )));
+    }
+    let rounds = pipe.rounds();
+    let mut state = x.clone();
+    let mut out = FpMat::zeros(0, 0);
+    for r in 0..rounds {
+        let y = state.transpose().matmul(weights[r]);
+        let ops = pipe.boundary(r);
+        if r + 1 < rounds {
+            let seed_r = stage_seed(pipeline_seed, r as u32);
+            let blocks =
+                stage_mask_blocks(params.t, y.rows / params.t, pipe.bounded_mask(r), seed_r);
+            let r_mat = FpMat::from_blocks(&blocks);
+            let mut z = y;
+            z.add_assign(&r_mat);
+            let z2 = apply_ops(z, ops, true);
+            let r2 = apply_ops(r_mat, ops, false);
+            let mut next = z2;
+            next.axpy_inplace(ff::P - 1, &r2);
+            state = next;
+        } else {
+            out = apply_ops(y, ops, true);
+        }
+    }
+    Ok(out)
+}
+
+/// What one driven round hands back to the loop.
+struct StageOutcome {
+    /// Masked open `Z` (intermediate) or raw final product `Y` (last).
+    mat: FpMat,
+    early_decoded: bool,
+}
+
+/// Drive one round against the live runtime: announce with a stage-tagged
+/// start, play both sources, then collect — masked open for intermediate
+/// rounds, the full Phase-3 master for the final one.
+#[allow(clippy::too_many_arguments)]
+fn drive_stage(
+    scheme: &dyn CmpcScheme,
+    setup: &Setup,
+    job: JobId,
+    stage: u32,
+    seed_r: u64,
+    x: &FpMat,
+    w: &FpMat,
+    mask_blocks: Option<&Vec<Vec<FpMat>>>,
+    config: &ProtocolConfig,
+    env: &ExecEnv<'_>,
+    runtime: &WorkerRuntime,
+) -> Result<(StageOutcome, Vec<Arc<WorkerCounters>>)> {
+    let p = scheme.params();
+    let n = setup.n_workers;
+    let fabric = runtime.fabric();
+    let masked = mask_blocks.is_some();
+
+    let counters: Vec<Arc<WorkerCounters>> =
+        (0..n).map(|_| Arc::new(WorkerCounters::default())).collect();
+    for (wid, c) in counters.iter().enumerate() {
+        fabric.send(
+            job,
+            fabric.master_id(),
+            wid,
+            Payload::Control(ControlMsg::StageStart {
+                stage,
+                seed: seed_r,
+                masked,
+                counters: c.clone(),
+            }),
+        )?;
+    }
+
+    // Stage mask first (cheap: t² terms per evaluation) so no worker that
+    // finishes Phase 2 quickly ever stalls waiting for it.
+    if let Some(blocks) = mask_blocks {
+        let d_poly = stage_mask_poly(blocks, p.t);
+        for (wid, &alpha) in setup.alphas.iter().enumerate() {
+            fabric.send(
+                job,
+                fabric.source_b_id(),
+                wid,
+                Payload::StageMask {
+                    stage,
+                    mat: PooledMat::detached(d_poly.eval(alpha)),
+                },
+            )?;
+        }
+    }
+
+    // Phase 1 for this round — same fork order as a singleton job
+    // (source A, then source B) under the round seed, so the persistent
+    // workers' own re-derived streams line up.
+    let mut job_rng = ChaChaRng::seed_from_u64(seed_r);
+    let mut rng_src_a = job_rng.fork();
+    let mut rng_src_b = job_rng.fork();
+    let fa_poly = source::build_f_a(scheme, x, &mut rng_src_a);
+    let fb_poly = source::build_f_b(scheme, w, &mut rng_src_b);
+    let shares = source::encode_shares_pooled(
+        &fa_poly,
+        &fb_poly,
+        &setup.alphas,
+        env.pool,
+        env.scratch,
+        runtime.buffers(),
+    );
+    for (wid, (fa_n, fb_n)) in shares.into_iter().enumerate() {
+        fabric.send(
+            job,
+            fabric.source_a_id(),
+            wid,
+            Payload::Shares { fa: fa_n, fb: fb_n },
+        )?;
+    }
+
+    if masked {
+        let z = collect_stage(
+            runtime.router(),
+            fabric,
+            job,
+            stage,
+            &setup.alphas,
+            n,
+            p.t,
+            p.stage_quota(),
+            config.recv_timeout,
+            &counters,
+        )?;
+        Ok((
+            StageOutcome {
+                mat: z,
+                early_decoded: false,
+            },
+            counters,
+        ))
+    } else {
+        let (m_out, _mt) = master::run_master(
+            runtime.router(),
+            fabric,
+            job,
+            &setup.alphas,
+            n,
+            p.t,
+            p.z,
+            0,
+            config.recv_timeout,
+            config.early_decode,
+            &counters,
+            env.pool,
+            env.scratch,
+        )?;
+        runtime.note_decode();
+        Ok((
+            StageOutcome {
+                mat: m_out.y,
+                early_decoded: m_out.early_decoded,
+            },
+            counters,
+        ))
+    }
+}
+
+/// Run a pipeline against a live runtime — the in-process path behind
+/// [`Deployment::execute_pipeline`]. The caller's thread plays the source
+/// and master roles for every round; each round is one job on the
+/// multiplexed fabric ([`WorkerRuntime::begin_job`] per round, so
+/// `jobs_started` advances by [`Pipeline::rounds`]), and only the final
+/// round performs a Phase-3 decode.
+///
+/// `config.seed` is the **pipeline seed**: round `r` derives everything
+/// from [`stage_seed`]`(config.seed, r)`.
+///
+/// [`Deployment::execute_pipeline`]:
+///     crate::mpc::deployment::Deployment::execute_pipeline
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline(
+    scheme: &dyn CmpcScheme,
+    setup: &Setup,
+    pipe: &Pipeline,
+    x: &FpMat,
+    weights: &[&FpMat],
+    config: &ProtocolConfig,
+    env: &ExecEnv<'_>,
+    runtime: &WorkerRuntime,
+) -> Result<PipelineOutput> {
+    let p = scheme.params();
+    validate_pipeline(pipe, p, setup.n_workers, x, weights, config)?;
+    if runtime.n_workers() != setup.n_workers {
+        return Err(CmpcError::InvalidParams(format!(
+            "runtime provisions {} workers but the setup expects {}",
+            runtime.n_workers(),
+            setup.n_workers
+        )));
+    }
+    let rounds = pipe.rounds();
+    let mut state = x.clone();
+    let mut y = FpMat::zeros(0, 0);
+    let mut early_decoded = false;
+    let mut stage_traffic = Vec::with_capacity(rounds);
+    let mut stage_elapsed = Vec::with_capacity(rounds);
+    for r in 0..rounds {
+        let t_round = Instant::now();
+        let seed_r = stage_seed(config.seed, r as u32);
+        let masked = r + 1 < rounds;
+        let mask_blocks = if masked {
+            Some(stage_mask_blocks(
+                p.t,
+                state.rows / p.t,
+                pipe.bounded_mask(r),
+                seed_r,
+            ))
+        } else {
+            None
+        };
+        // begin_job reaps first: a worker chaos-killed in round r−1 is
+        // respawned before this round's shares go out.
+        let job = runtime.begin_job();
+        runtime.note_pipeline_stage();
+        let result = drive_stage(
+            scheme,
+            setup,
+            job,
+            r as u32,
+            seed_r,
+            &state,
+            weights[r],
+            mask_blocks.as_ref(),
+            config,
+            env,
+            runtime,
+        );
+        if result.is_err() {
+            let fabric = runtime.fabric();
+            for wid in 0..setup.n_workers {
+                let _ = fabric.send(
+                    job,
+                    fabric.master_id(),
+                    wid,
+                    Payload::Control(ControlMsg::JobAbort),
+                );
+            }
+            runtime.note_job_aborted();
+        }
+        stage_traffic.push(runtime.finish_job(job));
+        let (outcome, _counters) = result?;
+        stage_elapsed.push(t_round.elapsed());
+        if masked {
+            let blocks = mask_blocks.expect("masked round derived blocks");
+            let ops = pipe.boundary(r);
+            let z2 = apply_ops(outcome.mat, ops, true);
+            let r2 = apply_ops(FpMat::from_blocks(&blocks), ops, false);
+            let mut next = z2;
+            next.axpy_inplace(ff::P - 1, &r2);
+            state = next;
+        } else {
+            early_decoded = outcome.early_decoded;
+            y = apply_ops(outcome.mat, pipe.boundary(r), true);
+        }
+    }
+
+    let verified = if config.verify {
+        let expect = reference_eval(pipe, p, x, weights, config.seed)?;
+        if y != expect {
+            return Err(CmpcError::NotDecodable(format!(
+                "pipeline reconstruction mismatch vs the decode-re-encode \
+                 reference under {}",
+                scheme.name()
+            )));
+        }
+        true
+    } else {
+        false
+    };
+
+    let mut traffic = TrafficReport::default();
+    for t in &stage_traffic {
+        traffic.source_to_worker += t.source_to_worker;
+        traffic.worker_to_worker += t.worker_to_worker;
+        traffic.worker_to_master += t.worker_to_master;
+        traffic.messages += t.messages;
+    }
+    Ok(PipelineOutput {
+        y,
+        rounds,
+        scheme_name: scheme.name(),
+        n_workers: setup.n_workers,
+        verified,
+        early_decoded,
+        stage_traffic,
+        traffic,
+        stage_elapsed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(spec: &str) -> Result<Pipeline> {
+        Pipeline::parse_spec(spec)
+    }
+
+    #[test]
+    fn validates_op_chains() {
+        assert!(chain("matmul").is_ok());
+        assert!(chain("matmul,truncate:8,matmul").is_ok());
+        assert!(chain("matmul,transpose,scale:3,matmul,truncate:1").is_ok());
+        // must start with a matmul
+        assert!(matches!(chain("transpose,matmul"), Err(CmpcError::InvalidParams(_))));
+        assert!(matches!(chain(""), Err(CmpcError::InvalidParams(_))));
+        // truncation only directly after a matmul, bits in 1..=15
+        assert!(matches!(
+            chain("matmul,transpose,truncate:8,matmul"),
+            Err(CmpcError::InvalidParams(_))
+        ));
+        assert!(matches!(chain("matmul,truncate:0"), Err(CmpcError::InvalidParams(_))));
+        assert!(matches!(chain("matmul,truncate:16"), Err(CmpcError::InvalidParams(_))));
+        // scale must be non-zero mod p
+        assert!(matches!(chain("matmul,scale:0"), Err(CmpcError::InvalidParams(_))));
+        assert!(matches!(chain("matmul,scale:65537"), Err(CmpcError::InvalidParams(_))));
+        // unknown ops are typed rejects
+        assert!(matches!(chain("matmul,relu"), Err(CmpcError::InvalidParams(_))));
+        assert!(matches!(chain("matmul,scale:x"), Err(CmpcError::InvalidParams(_))));
+    }
+
+    #[test]
+    fn round_and_boundary_accounting() {
+        let p = chain("matmul,truncate:8,matmul,transpose,scale:2").unwrap();
+        assert_eq!(p.rounds(), 2);
+        assert_eq!(p.boundary(0), &[PipelineOp::Truncate(8)]);
+        assert_eq!(
+            p.boundary(1),
+            &[PipelineOp::Transpose, PipelineOp::Scale(2)]
+        );
+        assert!(p.bounded_mask(0));
+        let q = chain("matmul,matmul").unwrap();
+        assert!(!q.bounded_mask(0));
+    }
+
+    #[test]
+    fn rounds_cap_is_enforced() {
+        let many = vec!["matmul"; MAX_PIPELINE_ROUNDS + 1].join(",");
+        assert!(matches!(chain(&many), Err(CmpcError::InvalidParams(_))));
+        let max = vec!["matmul"; MAX_PIPELINE_ROUNDS].join(",");
+        assert!(chain(&max).is_ok());
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        for spec in [
+            "matmul",
+            "matmul,truncate:8,matmul",
+            "matmul,transpose,scale:7,matmul,truncate:2",
+        ] {
+            assert_eq!(chain(spec).unwrap().spec_string().as_deref(), Some(spec));
+        }
+        let with_bias = Pipeline::new(vec![
+            PipelineOp::Matmul,
+            PipelineOp::AddBias(FpMat::zeros(4, 4)),
+        ])
+        .unwrap();
+        assert_eq!(with_bias.spec_string(), None);
+    }
+
+    #[test]
+    fn stage_seeds_are_distinct_and_domain_separated() {
+        let base = 0xC0DE;
+        let s0 = stage_seed(base, 0);
+        let s1 = stage_seed(base, 1);
+        assert_ne!(s0, s1);
+        // disjoint from the singleton-job schedule of the same base seed
+        assert_ne!(s0, derive_job_seed(base, 0));
+        assert_ne!(s1, derive_job_seed(base, 1));
+    }
+
+    #[test]
+    fn masked_truncation_replay_is_within_epsilon() {
+        // The reference's masked truncate equals exact truncate up to the
+        // documented ε ∈ {0,1} when values stay inside the bounded window.
+        let params = SchemeParams::new(2, 2, 2);
+        let pipe = chain("matmul,truncate:8,matmul").unwrap();
+        let x = pipeline_input(42, 8);
+        let weights: Vec<FpMat> = (0..2).map(|r| pipeline_weight(42, 8, r)).collect();
+        let wrefs: Vec<&FpMat> = weights.iter().collect();
+        let got = reference_eval(&pipe, params, &x, &wrefs, 0xC0DE).unwrap();
+        // exact replay: truncate without the mask
+        let y0 = x.transpose().matmul(&weights[0]);
+        let exact0 = FpMat::from_fn(8, 8, |r, c| y0.at(r, c) >> 8);
+        let exact = exact0.transpose().matmul(&weights[1]);
+        for r in 0..8 {
+            for c in 0..8 {
+                // each truncated activation slips by ≤1, amplified by one
+                // matmul row: |got − exact| ≤ Σ_k w[k][c] < 8·8
+                let d = (got.at(r, c) + ff::P - exact.at(r, c)) % ff::P;
+                assert!(d < 64, "({r},{c}): got {} exact {}", got.at(r, c), exact.at(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn reference_rejects_weight_count_mismatch() {
+        let params = SchemeParams::new(2, 2, 2);
+        let pipe = chain("matmul,matmul").unwrap();
+        let x = pipeline_input(1, 8);
+        let w = pipeline_weight(1, 8, 0);
+        let err = reference_eval(&pipe, params, &x, &[&w], 7).unwrap_err();
+        assert!(matches!(err, CmpcError::InvalidParams(_)));
+    }
+}

@@ -42,6 +42,7 @@ use crate::util::rng::ChaChaRng;
 /// Knobs for one protocol run.
 #[derive(Clone, Debug)]
 pub struct ProtocolConfig {
+    /// Matmul backend the workers compute `H = F_A·F_B` on.
     pub backend: BackendChoice,
     /// Seed for all secret randomness (sources and worker masks derive
     /// independent ChaCha streams from it).
@@ -134,26 +135,31 @@ pub struct ProtocolConfigBuilder {
 }
 
 impl ProtocolConfigBuilder {
+    /// Matmul backend for worker compute.
     pub fn backend(mut self, backend: BackendChoice) -> Self {
         self.config.backend = backend;
         self
     }
 
+    /// Seed for all secret randomness.
     pub fn seed(mut self, seed: u64) -> Self {
         self.config.seed = seed;
         self
     }
 
+    /// Check `Y == AᵀB` natively before returning.
     pub fn verify(mut self, verify: bool) -> Self {
         self.config.verify = verify;
         self
     }
 
+    /// Per-worker injected compute delays (straggler model).
     pub fn worker_delays(mut self, delays: Vec<Duration>) -> Self {
         self.config.worker_delays = delays;
         self
     }
 
+    /// Per-hop link latency (sender sleeps).
     pub fn link_delay(mut self, delay: Option<Duration>) -> Self {
         self.config.link_delay = delay;
         self
@@ -202,6 +208,7 @@ impl ProtocolConfigBuilder {
         self
     }
 
+    /// Finish the builder.
     pub fn build(self) -> ProtocolConfig {
         self.config
     }
@@ -209,10 +216,15 @@ impl ProtocolConfigBuilder {
 
 /// Everything a run reports back.
 pub struct ProtocolOutput {
+    /// The reconstructed product `Y = AᵀB`.
     pub y: FpMat,
+    /// Name of the scheme that ran.
     pub scheme_name: String,
+    /// Workers the deployment provisions.
     pub n_workers: usize,
+    /// `N − quota`: how many stragglers this run could have survived.
     pub stragglers_tolerated: usize,
+    /// Wall-clock phase breakdown.
     pub timings: PhaseTimings,
     /// This job's traffic only (concurrent jobs on a shared runtime meter
     /// independently; the fabric also keeps cumulative totals).
@@ -225,6 +237,8 @@ pub struct ProtocolOutput {
     /// exception is a worker that dies *during* the ack window — its
     /// counters stop with it.
     pub worker_counters: Vec<Arc<WorkerCounters>>,
+    /// Whether the native `Y == AᵀB` check ran and passed (`false` when
+    /// verification was disabled).
     pub verified: bool,
     /// Whether the master took the early-decode fast path (decoded at the
     /// recovery quota and cancelled a straggler tail).
@@ -242,10 +256,12 @@ pub struct ProtocolOutput {
 ///
 /// [`Deployment`]: crate::mpc::deployment::Deployment
 pub struct Setup {
+    /// Public evaluation points α₁..α_N (index = worker id).
     pub alphas: Arc<Vec<u64>>,
     /// `r_coeffs[n][i + t·l]` = worker n's combination coefficient for the
     /// important power (i,l) — eq. (18).
     pub r_coeffs: Arc<Vec<Vec<u64>>>,
+    /// Workers the scheme provisions (`N`).
     pub n_workers: usize,
 }
 
@@ -322,7 +338,9 @@ pub struct ExecEnv<'a> {
     /// Shared (`Arc`) so the runtime can keep a handle for provisioning
     /// replacement workers on the eviction/respawn path.
     pub factory: &'a Arc<BackendFactory>,
+    /// Worker pool driving the parallel sections.
     pub pool: &'a WorkerPool,
+    /// Per-pool-worker scratch buffers.
     pub scratch: &'a ScratchPool,
 }
 
@@ -425,6 +443,8 @@ pub fn run_job(
     // trim opportunity.
     let traffic = runtime.finish_job(job);
     let (m_out, mt, counters, setup_time, phase1) = result?;
+    // One Phase-3 decode happened (the counter contract in `metrics`).
+    runtime.note_decode();
     if m_out.early_decoded {
         runtime.note_early_decode();
     }

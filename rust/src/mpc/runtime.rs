@@ -54,7 +54,10 @@ use crate::runtime::BackendFactory;
 /// kill or fabric teardown).
 #[derive(Clone, Debug)]
 pub struct Eviction {
+    /// Worker slot (stable index) whose thread died and was replaced.
     pub worker: usize,
+    /// Why it died: the panic message, the worker's own typed error, a
+    /// Byzantine blame, or a clean exit (chaos kill / fabric teardown).
     pub reason: String,
 }
 
@@ -343,6 +346,27 @@ impl WorkerRuntime {
         self.health.jobs_aborted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a completed Phase-3 decode (called by the job driver: once
+    /// per executed job, once per fused batch, once per pipeline — the
+    /// counter contract pinned in [`crate::metrics`]).
+    pub(crate) fn note_decode(&self) {
+        self.health.phase3_decodes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one executed pipeline stage (called by the pipeline driver
+    /// once per round, masked or final).
+    pub(crate) fn note_pipeline_stage(&self) {
+        self.health.pipeline_stages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Claim a contiguous block of `k` job ids without opening router
+    /// queues for them — the fused path's accounting hook, so
+    /// [`WorkerRuntime::jobs_started`] advances by the batch size even
+    /// though the batch streams no per-job envelopes.
+    pub(crate) fn claim_job_ids(&self, k: u64) {
+        self.next_job.fetch_add(k, Ordering::Relaxed);
+    }
+
     /// Record workers the Byzantine decoder blamed for garbled I-shares
     /// and evict them: each gets a targeted [`ControlMsg::Shutdown`] (the
     /// worker exits cleanly, exactly like a chaos kill), is marked
@@ -378,18 +402,22 @@ impl WorkerRuntime {
         }
     }
 
+    /// The shared job-multiplexed fabric every node sends on.
     pub fn fabric(&self) -> &Arc<Fabric> {
         &self.fabric
     }
 
+    /// The master-side receive router (per-job queues over one endpoint).
     pub fn router(&self) -> &JobRouter {
         &self.router
     }
 
+    /// The shared payload buffer pool.
     pub fn buffers(&self) -> &Arc<BufferPool> {
         &self.bufs
     }
 
+    /// Number of provisioned worker slots `N`.
     pub fn n_workers(&self) -> usize {
         self.n_workers
     }

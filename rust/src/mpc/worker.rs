@@ -18,6 +18,18 @@
 //! 5. sends `I(αₙ)` then [`ControlMsg::JobDone`] to the master and forgets
 //!    the job.
 //!
+//! **Pipeline stages.** A [`ControlMsg::StageStart`] runs the same state
+//! machine with two extensions: the job carries a stage tag, and — when the
+//! stage's output feeds another stage — a *masked-open* flag. A masked
+//! stage withholds its plain I-share; it waits for source B's blinding-mask
+//! share ([`Payload::StageMask`]), adds it, and sends the blinded sum as
+//! [`Payload::StageMasked`], so the master only ever interpolates the
+//! uniformly masked `Z = Y + R`. The next stage's A-side share may arrive
+//! either as an ordinary combined share or split across
+//! [`ControlMsg::StageShareZ`] (from the master) and
+//! [`ControlMsg::StageShareR`] (from source A), which the worker subtracts
+//! into `F_A(αₙ)` of `X = Z' − R'` before computing as usual.
+//!
 //! Scaled-`H` copies and mask matrices live in per-thread buffers reused
 //! across jobs, so a warm worker performs no fabric-payload allocations.
 //! G-shares from faster peers arriving before this worker's own compute are
@@ -57,9 +69,13 @@ use crate::util::rng::ChaChaRng;
 /// deployment state; per-job seed and counters arrive via
 /// [`ControlMsg::JobStart`]).
 pub struct WorkerCtx {
+    /// This worker's index `n` (also its fabric node id).
     pub id: usize,
+    /// Fleet size `N`.
     pub n_workers: usize,
+    /// Column partition factor of the scheme.
     pub t: usize,
+    /// Collusion tolerance of the scheme.
     pub z: usize,
     /// Public evaluation points α₁..α_N (index = worker id).
     pub alphas: Arc<Vec<u64>>,
@@ -94,6 +110,23 @@ struct JobState {
     share_a: Option<PooledMat>,
     /// Phase-1 `F_B(αₙ)` share (combined envelope or [`Payload::ShareB`]).
     share_b: Option<PooledMat>,
+    /// Pipeline stage index ([`ControlMsg::StageStart`]); 0 for ordinary
+    /// single-matmul jobs, echoed back in [`Payload::StageMasked`].
+    stage: u32,
+    /// Whether this stage ends with a masked open: the finished I-share is
+    /// withheld, blinded with source B's mask share, and sent as
+    /// [`Payload::StageMasked`] instead of a plain [`Payload::IShare`].
+    masked: bool,
+    /// Source B's blinding-mask share `D(αₙ)` (masked stages only).
+    mask: Option<PooledMat>,
+    /// The master's half of a split pipeline re-share: its evaluation of
+    /// the coded polynomial of the blinded opening `Z' = Y' + R'`
+    /// ([`ControlMsg::StageShareZ`]).
+    stage_z: Option<FpMat>,
+    /// Source A's half of the split re-share: its evaluation of the coded
+    /// polynomial of the transformed mask `R'`
+    /// ([`ControlMsg::StageShareR`]).
+    stage_r: Option<FpMat>,
     /// G-shares from peers that computed before us.
     early_g: Vec<PooledMat>,
     /// Own `I(αₙ)` accumulator; present once the compute phase ran.
@@ -111,6 +144,11 @@ impl JobState {
             start: None,
             share_a: None,
             share_b: None,
+            stage: 0,
+            masked: false,
+            mask: None,
+            stage_z: None,
+            stage_r: None,
             early_g: Vec::new(),
             i_share: None,
             received: 0,
@@ -322,6 +360,32 @@ pub fn serve_worker(
                     st.early_g.push(g);
                 }
             }
+            Payload::Control(ControlMsg::StageStart { stage, seed, masked, counters }) => {
+                // A pipeline stage begins exactly like a JobStart, plus the
+                // stage tag and the masked-open flag. The flag arrives
+                // *before* any share can complete the job, so a masked
+                // stage can never leak a plain I-share by racing its mask.
+                let st = jobs.entry(job).or_insert_with(JobState::new);
+                st.start = Some((seed, counters));
+                st.stage = stage;
+                st.masked = masked;
+                st.last_progress = Instant::now();
+            }
+            Payload::Control(ControlMsg::StageShareZ { mat, .. }) => {
+                let st = jobs.entry(job).or_insert_with(JobState::new);
+                st.stage_z = Some(mat);
+                st.last_progress = Instant::now();
+            }
+            Payload::Control(ControlMsg::StageShareR { mat, .. }) => {
+                let st = jobs.entry(job).or_insert_with(JobState::new);
+                st.stage_r = Some(mat);
+                st.last_progress = Instant::now();
+            }
+            Payload::StageMask { mat, .. } => {
+                let st = jobs.entry(job).or_insert_with(JobState::new);
+                st.mask = Some(mat);
+                st.last_progress = Instant::now();
+            }
             // IShare / JobDone / JobError / AbortAck never legally target
             // a worker; report the routing bug for that job and drop its
             // state.
@@ -420,6 +484,16 @@ fn advance_job(
     backend: &mut dyn MatmulBackend,
     scratch: &mut ComputeScratch,
 ) -> Result<bool> {
+    if st.share_a.is_none() && st.stage_z.is_some() && st.stage_r.is_some() {
+        // Split pipeline re-share: the next stage's input is X = Z' − R',
+        // so F_A(αₙ) of X is the difference of the two halves' coded
+        // evaluations — GF(p) linearity makes this byte-identical to a
+        // single source encoding X directly with the same secret draws.
+        let mut z = st.stage_z.take().expect("checked above");
+        let r = st.stage_r.take().expect("checked above");
+        z.axpy_inplace(ff::P - 1, &r);
+        st.share_a = Some(PooledMat::detached(z));
+    }
     if st.i_share.is_none() {
         if st.start.is_none() || st.share_a.is_none() || st.share_b.is_none() {
             return Ok(false); // still waiting for JobStart or either share
@@ -427,8 +501,20 @@ fn advance_job(
         compute_phase(ctx, job, st, fabric, bufs, backend, scratch)?;
     }
     if st.received == ctx.n_workers - 1 {
+        if st.masked && st.mask.is_none() {
+            return Ok(false); // I-share finished; blinding mask still in flight
+        }
         let (_, counters) = st.start.as_ref().expect("computed implies started");
-        let i_share = st.i_share.take().expect("i_share present");
+        let counters = counters.clone();
+        let mut i_share = st.i_share.take().expect("i_share present");
+        if st.masked {
+            // Masked open: blind the I-share with source B's mask share so
+            // the master's per-stage interpolation recovers Z = Y + R, a
+            // uniformly masked image of the true intermediate Y.
+            let mask = st.mask.take().expect("checked above");
+            counters.add_stored(mask.len() as u64);
+            i_share.add_assign(&mask);
+        }
         counters.add_stored(i_share.len() as u64);
         // Totals are final here — the worker never touches this job's
         // counters again — so JobDone can carry them (the driver-side
@@ -437,12 +523,17 @@ fn advance_job(
         // single coalesced write, while metering and receive order stay
         // identical to two sequential sends.
         let (mults, stored) = (counters.mults(), counters.stored());
+        let final_share = if st.masked {
+            Payload::StageMasked { stage: st.stage, mat: i_share }
+        } else {
+            Payload::IShare(i_share)
+        };
         fabric.send_batch(
             job,
             ctx.id,
             fabric.master_id(),
             vec![
-                Payload::IShare(i_share),
+                final_share,
                 Payload::Control(ControlMsg::JobDone { mults, stored }),
             ],
         )?;

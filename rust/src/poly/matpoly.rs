@@ -15,12 +15,15 @@ use crate::runtime::pool::Scratch;
 /// Sparse matrix-coefficient polynomial over `GF(p)`.
 #[derive(Clone, Debug)]
 pub struct MatPoly {
+    /// Row count of every coefficient block.
     pub rows: usize,
+    /// Column count of every coefficient block.
     pub cols: usize,
     terms: BTreeMap<u64, FpMat>,
 }
 
 impl MatPoly {
+    /// Empty polynomial whose coefficients will be `rows × cols` blocks.
     pub fn new(rows: usize, cols: usize) -> MatPoly {
         MatPoly {
             rows,
@@ -42,6 +45,7 @@ impl MatPoly {
         assert!(prev.is_none(), "duplicate coefficient at power {power}");
     }
 
+    /// The coefficient block at `power`, if that exponent is in the support.
     pub fn coeff(&self, power: u64) -> Option<&FpMat> {
         self.terms.get(&power)
     }
@@ -51,10 +55,12 @@ impl MatPoly {
         self.terms.keys().copied().collect()
     }
 
+    /// Support size `|P(F)|` — the number of nonzero coefficient blocks.
     pub fn num_terms(&self) -> usize {
         self.terms.len()
     }
 
+    /// Largest exponent in the support (0 for the empty polynomial).
     pub fn degree(&self) -> u64 {
         self.terms.keys().next_back().copied().unwrap_or(0)
     }

@@ -48,6 +48,7 @@ pub struct BitSet {
 }
 
 impl BitSet {
+    /// Empty set with capacity for members `0..len`.
     pub fn new(len: u64) -> BitSet {
         BitSet {
             words: vec![0; (len as usize + 63) / 64],
@@ -55,17 +56,20 @@ impl BitSet {
         }
     }
 
+    /// Add `i` to the set (`i` must be `< len`).
     #[inline]
     pub fn insert(&mut self, i: u64) {
         debug_assert!(i < self.len);
         self.words[(i / 64) as usize] |= 1u64 << (i % 64);
     }
 
+    /// Membership test (out-of-range `i` is simply absent).
     #[inline]
     pub fn contains(&self, i: u64) -> bool {
         i < self.len && self.words[(i / 64) as usize] & (1u64 << (i % 64)) != 0
     }
 
+    /// Number of members currently in the set.
     pub fn count(&self) -> u64 {
         self.words.iter().map(|w| w.count_ones() as u64).sum()
     }

@@ -38,6 +38,14 @@
 //! [`TenantQuota`] for its admission table (no `tenant` lines = open
 //! admission).
 //!
+//! The optional `pipeline` line (v0.10) carries a
+//! [`Pipeline`](crate::mpc::pipeline::Pipeline) spec string, e.g.
+//! `pipeline matmul,truncate:8,matmul`. When present, each of the
+//! manifest's `jobs` is one full pipeline run over seed-derived demo data
+//! instead of a single `Y = AᵀB` product; `adversary_tolerance` must stay
+//! 0 (intermediate stages decode at the exact `t²+z` quota, leaving no
+//! Byzantine margin).
+//!
 //! A plain line format is used instead of JSON because the offline build has
 //! no serde; the formats are versioned by their header comments.
 
@@ -100,6 +108,7 @@ impl Manifest {
         Ok(manifest)
     }
 
+    /// Look up the lowered artifact for a `(M, K, N)` matmul shape.
     pub fn matmul_artifact(&self, shape: MatmulShape) -> Option<&PathBuf> {
         self.matmul.get(&shape)
     }
@@ -115,11 +124,17 @@ fn bad_line(lineno: usize, e: &std::num::ParseIntError) -> CmpcError {
 /// [`LinkShaper`] built by [`TopologyManifest::shaper`]. `None` = `*`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShapeLine {
+    /// Sender node the rule matches (`None` = any).
     pub from: Option<NodeId>,
+    /// Receiver node the rule matches (`None` = any).
     pub to: Option<NodeId>,
+    /// One-way propagation delay added per envelope.
     pub latency_us: u64,
+    /// Serialization rate in bits/s (`0` = unlimited).
     pub rate_bps: u64,
+    /// Token-bucket burst allowance in bytes.
     pub burst_bytes: u64,
+    /// Payload class the rule matches (`None` = any).
     pub class: Option<PayloadClass>,
 }
 
@@ -134,8 +149,11 @@ pub struct ShapeLine {
 pub struct TopologyManifest {
     /// Scheme family: `age`, `polydot`, or `entangled`.
     pub scheme: String,
+    /// Per-source partition count.
     pub s: usize,
+    /// Colluding-worker privacy threshold.
     pub t: usize,
+    /// Random masking terms per share polynomial.
     pub z: usize,
     /// Job matrix size (m×m).
     pub m: usize,
@@ -158,10 +176,17 @@ pub struct TopologyManifest {
     /// Per-receive bound while a job is in flight (same meaning as
     /// `ProtocolConfig::recv_timeout`).
     pub recv_timeout: Duration,
+    /// When set, the spec string of the [`crate::mpc::pipeline::Pipeline`]
+    /// each of this cluster's `jobs` runs (over seed-derived demo data)
+    /// instead of a single product — see [`TopologyManifest::pipeline`].
+    pub pipeline_spec: Option<String>,
     /// Worker addresses, indexed by worker id.
     pub workers: Vec<String>,
+    /// Master (decoder) address.
     pub master: String,
+    /// Source-A address.
     pub source_a: String,
+    /// Source-B address.
     pub source_b: String,
     /// Link-shaping rules (empty = unshaped).
     pub shapes: Vec<ShapeLine>,
@@ -229,6 +254,7 @@ impl TopologyManifest {
             verify: true,
             connect_timeout: Duration::from_secs(10),
             recv_timeout: Duration::from_secs(30),
+            pipeline_spec: None,
             workers: Vec::new(),
             master: String::new(),
             source_a: String::new(),
@@ -270,6 +296,7 @@ impl TopologyManifest {
         let mut verify = true;
         let mut connect_timeout = Duration::from_secs(10);
         let mut recv_timeout = Duration::from_secs(30);
+        let mut pipeline_spec: Option<String> = None;
         let mut workers: HashMap<usize, String> = HashMap::new();
         let (mut master, mut source_a, mut source_b) = (None, None, None);
         let mut shapes = Vec::new();
@@ -330,6 +357,10 @@ impl TopologyManifest {
                 ["recv_timeout_ms", v] => {
                     recv_timeout =
                         Duration::from_millis(parse_field(lineno, "recv_timeout_ms", v)?)
+                }
+                ["pipeline", v] => {
+                    no_dup(lineno, "pipeline", &pipeline_spec)?;
+                    pipeline_spec = Some(v.to_string());
                 }
                 ["worker", idx, addr] => {
                     let idx: usize = parse_field(lineno, "worker index", idx)?;
@@ -433,6 +464,7 @@ impl TopologyManifest {
             verify,
             connect_timeout,
             recv_timeout,
+            pipeline_spec,
             workers: worker_addrs,
             master: master.ok_or_else(|| missing("master address"))?,
             source_a: source_a.ok_or_else(|| missing("source-a address"))?,
@@ -476,6 +508,9 @@ impl TopologyManifest {
             "recv_timeout_ms {}\n",
             self.recv_timeout.as_millis()
         ));
+        if let Some(spec) = &self.pipeline_spec {
+            out.push_str(&format!("pipeline {spec}\n"));
+        }
         for (i, addr) in self.workers.iter().enumerate() {
             out.push_str(&format!("worker {i} {addr}\n"));
         }
@@ -551,6 +586,20 @@ impl TopologyManifest {
                 scheme.n_workers()
             )));
         }
+        if let Some(spec) = &self.pipeline_spec {
+            let pipe = crate::mpc::pipeline::Pipeline::parse_spec(spec)?;
+            if self.adversary_tolerance != 0 {
+                return Err(CmpcError::InvalidParams(
+                    "topology manifest: pipeline requires adversary_tolerance 0 \
+                     (intermediate stages decode at the exact t²+z quota)"
+                        .to_string(),
+                ));
+            }
+            // Shapes and per-stage quotas are re-checked by the pipeline
+            // driver; catch weight-count/shape mismatches that are already
+            // decidable from (m, s, t) here, at parse/validate time.
+            crate::mpc::pipeline::validate_pipeline_shape(&pipe, self.m, self.s, self.t)?;
+        }
         if !self.tenants.is_empty() && self.gateway.is_none() {
             return Err(CmpcError::InvalidParams(
                 "topology manifest: tenant quotas declared without a gateway line".to_string(),
@@ -585,22 +634,37 @@ impl TopologyManifest {
         )
     }
 
+    /// Resolve the optional `pipeline` line into a parsed
+    /// [`Pipeline`](crate::mpc::pipeline::Pipeline); `None` when this
+    /// topology runs ordinary single-product jobs.
+    pub fn pipeline(&self) -> Result<Option<crate::mpc::pipeline::Pipeline>> {
+        match &self.pipeline_spec {
+            Some(spec) => Ok(Some(crate::mpc::pipeline::Pipeline::parse_spec(spec)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Declared worker count.
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }
 
+    /// Total party count: workers + master + two sources.
     pub fn n_nodes(&self) -> usize {
         self.workers.len() + 3
     }
 
+    /// Node id of the master (`N` in the fabric layout).
     pub fn master_id(&self) -> NodeId {
         self.workers.len()
     }
 
+    /// Node id of source A (`N+1`).
     pub fn source_a_id(&self) -> NodeId {
         self.workers.len() + 1
     }
 
+    /// Node id of source B (`N+2`).
     pub fn source_b_id(&self) -> NodeId {
         self.workers.len() + 2
     }
@@ -828,6 +892,36 @@ mod tests {
         .unwrap()
         .gateway
         .is_none());
+    }
+
+    #[test]
+    fn topology_pipeline_line_round_trips_and_validates() {
+        let mut m =
+            TopologyManifest::template("age", 2, 2, 2, 8, 7, 1, "127.0.0.1", 9900).unwrap();
+        m.pipeline_spec = Some("matmul,truncate:8,matmul".to_string());
+        m.validate().unwrap();
+        let rendered = m.render();
+        assert!(rendered.contains("pipeline matmul,truncate:8,matmul"));
+        let back = TopologyManifest::parse(&rendered).unwrap();
+        assert_eq!(back.pipeline_spec, m.pipeline_spec);
+        let pipe = back.pipeline().unwrap().expect("pipeline resolves");
+        assert_eq!(pipe.rounds(), 2);
+        // a garbage spec is a typed parse error, not silence
+        m.pipeline_spec = Some("matmul,warp:9".to_string());
+        assert!(m.validate().is_err());
+        // pipelines leave no Byzantine margin
+        m.pipeline_spec = Some("matmul,matmul".to_string());
+        m.adversary_tolerance = 1;
+        let err = m.validate().unwrap_err();
+        assert!(err.to_string().contains("adversary_tolerance"), "{err}");
+        // the partition must divide the stage size
+        m.adversary_tolerance = 0;
+        m.m = 9;
+        assert!(m.validate().is_err());
+        // duplicate pipeline lines are rejected
+        let err =
+            TopologyManifest::parse(&format!("{rendered}pipeline matmul\n")).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::matrix::FpMat;
 
 /// A modular-matmul compute engine used by Phase 2 workers.
 pub trait MatmulBackend: Send {
+    /// Short backend identifier (e.g. `"native"`), for logs and reports.
     fn name(&self) -> &'static str;
 
     /// `(a · b) mod p`.
@@ -86,17 +87,22 @@ pub enum BackendChoice {
     /// Shared artifact executor service loaded from an artifact directory
     /// (falls back to native per shape when no artifact matches).
     Pjrt {
+        /// Directory of AOT artifacts (`make artifacts`).
         artifacts_dir: std::path::PathBuf,
     },
 }
 
 /// Factory producing one backend handle per worker thread.
 pub enum BackendFactory {
+    /// Hand out [`NativeBackend`] instances.
     Native,
+    /// Hand out lanes of a shared artifact executor service.
     Pjrt(pjrt::PjrtService),
 }
 
 impl BackendFactory {
+    /// Resolve a [`BackendChoice`] (starting the executor service for
+    /// [`BackendChoice::Pjrt`]).
     pub fn new(choice: &BackendChoice) -> Result<BackendFactory> {
         Ok(match choice {
             BackendChoice::Native => BackendFactory::Native,
@@ -106,6 +112,7 @@ impl BackendFactory {
         })
     }
 
+    /// Mint one backend handle (called per worker thread, and per respawn).
     pub fn make(&self) -> Box<dyn MatmulBackend> {
         match self {
             BackendFactory::Native => Box::new(NativeBackend),

@@ -126,10 +126,12 @@ impl PjrtService {
         }
     }
 
+    /// Service-wide execution/cache counters.
     pub fn stats(&self) -> &PjrtStats {
         &self.stats
     }
 
+    /// Number of executor lanes the service started with.
     pub fn n_lanes(&self) -> usize {
         self.lanes.len()
     }

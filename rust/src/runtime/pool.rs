@@ -230,6 +230,7 @@ impl ScratchPool {
         ScratchPool::new(pool.threads())
     }
 
+    /// Number of independent scratch slots.
     pub fn slots(&self) -> usize {
         self.slots.len()
     }

@@ -28,6 +28,23 @@
 //! [`run_local_cluster`] runs the same topology inside one process —
 //! every node a thread, every link a real 127.0.0.1 socket — which is how
 //! the tests and the bench measure on-wire bytes against the analytical ζ.
+//!
+//! **Pipelines (v0.10).** When the manifest carries a `pipeline` line,
+//! each of its `jobs` is one full [`crate::mpc::pipeline::Pipeline`] run.
+//! The master announces every round with [`ControlMsg::StageStart`]; the
+//! sources react per round — round 0 exactly like a normal job (split
+//! `ShareA`/`ShareB`), later rounds as the **split re-share**: the master
+//! sends each worker its evaluation of `build_f_a(Z′)`
+//! ([`ControlMsg::StageShareZ`]), source A the matching mask-residual
+//! evaluation ([`ControlMsg::StageShareR`]), and the worker's difference
+//! is, by GF(p) linearity, a fresh A-share of the true next state — which
+//! no single party ever materializes. Source B sends the round's weight
+//! shares plus, for intermediate rounds, the stage mask
+//! ([`Payload::StageMask`]). All three drivers (this module, the
+//! in-process runtime, [`crate::mpc::pipeline::reference_eval`]) derive
+//! identical randomness from the stage seeds, so the decoded output is
+//! byte-identical across them — pinned by `tests/pipeline.rs` and the CI
+//! pipeline lane.
 
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -44,6 +61,7 @@ use crate::mpc::network::{
     ControlMsg, Endpoint, Fabric, FabricTuning, JobId, JobRouter, NodeId, Payload, PooledMat,
     Transport, CONTROL_JOB,
 };
+use crate::mpc::pipeline::{self, Pipeline};
 use crate::mpc::protocol::{prepare_setup, ProtocolConfig};
 use crate::mpc::source;
 use crate::mpc::worker::{serve_worker, WorkerCtx};
@@ -56,9 +74,13 @@ use crate::util::rng::ChaChaRng;
 /// Which party this process plays.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NodeRole {
+    /// Phase-2 worker with the given index.
     Worker(usize),
+    /// The decoding master that drives the run.
     Master,
+    /// Source holding `A`.
     SourceA,
+    /// Source holding `B`.
     SourceB,
 }
 
@@ -216,7 +238,9 @@ pub fn serve_source_node(
     chaos: Option<Arc<ChaosPlan>>,
 ) -> Result<()> {
     let scheme = manifest.resolve_scheme()?;
+    let p = scheme.params();
     let setup = prepare_setup(scheme.as_ref())?;
+    let pipe = manifest.pipeline()?;
     let fabric = over_tcp(manifest, &transport, chaos);
     let my_id = if is_source_a {
         manifest.source_a_id()
@@ -267,6 +291,110 @@ pub fn serve_source_node(
             Payload::Control(ControlMsg::JobInput { seed, mat }) => {
                 emit(env.job, seed, &mat);
             }
+            // Pipeline round cue (v0.10): the manifest's `pipeline` line
+            // tells this source what each round needs from it.
+            Payload::Control(ControlMsg::StageStart {
+                stage,
+                seed,
+                masked,
+                ..
+            }) => {
+                // A stage cue without a pipeline line is stray traffic
+                // from a mismatched master; sources hold no state to harm.
+                let Some(pipe) = pipe.as_ref() else { continue };
+                let r = stage as usize;
+                // Fabric job ids pack as run*rounds + r, so the run index
+                // (hence the run's data) is derivable in every process.
+                let run = env.job / pipe.rounds() as u64;
+                let pipeline_seed = job_secret_seed(manifest.seed, run);
+                if is_source_a {
+                    if r == 0 {
+                        // First round: ordinary Phase 1 over the run input
+                        // (same fork order as every other driver).
+                        let x = pipeline::pipeline_input(pipeline_seed, manifest.m);
+                        let mut job_rng = ChaChaRng::seed_from_u64(seed);
+                        let mut rng_a = job_rng.fork();
+                        let poly = source::build_f_a(scheme.as_ref(), &x, &mut rng_a);
+                        for (wid, share) in
+                            source::shares(&poly, &setup.alphas).into_iter().enumerate()
+                        {
+                            let _ = fabric.send(
+                                env.job,
+                                my_id,
+                                wid,
+                                Payload::ShareA(PooledMat::detached(share)),
+                            );
+                        }
+                    } else {
+                        // Later rounds: replay the previous round's mask
+                        // (seed-derived, never received) through its
+                        // boundary ops and share the secret-term-free
+                        // residual — the worker subtracts it from the
+                        // master's Z′ share to get a fresh share of the
+                        // true next state.
+                        let seed_prev = pipeline::stage_seed(pipeline_seed, stage - 1);
+                        let blocks = pipeline::stage_mask_blocks(
+                            p.t,
+                            manifest.m / p.t,
+                            pipe.bounded_mask(r - 1),
+                            seed_prev,
+                        );
+                        let r_mat = FpMat::from_blocks(&blocks);
+                        let r_prime = pipeline::apply_ops(r_mat, pipe.boundary(r - 1), false);
+                        let poly = pipeline::residual_poly_a(scheme.as_ref(), &r_prime);
+                        for (wid, &alpha) in setup.alphas.iter().enumerate() {
+                            let _ = fabric.send(
+                                env.job,
+                                my_id,
+                                wid,
+                                Payload::Control(ControlMsg::StageShareR {
+                                    stage,
+                                    mat: poly.eval(alpha),
+                                }),
+                            );
+                        }
+                    }
+                } else {
+                    // Source B: the stage mask first (cheap), so a fast
+                    // worker never stalls on it, then the round's weight
+                    // shares under the second rng fork.
+                    if masked {
+                        let blocks = pipeline::stage_mask_blocks(
+                            p.t,
+                            manifest.m / p.t,
+                            pipe.bounded_mask(r),
+                            seed,
+                        );
+                        let d_poly = pipeline::stage_mask_poly(&blocks, p.t);
+                        for (wid, &alpha) in setup.alphas.iter().enumerate() {
+                            let _ = fabric.send(
+                                env.job,
+                                my_id,
+                                wid,
+                                Payload::StageMask {
+                                    stage,
+                                    mat: PooledMat::detached(d_poly.eval(alpha)),
+                                },
+                            );
+                        }
+                    }
+                    let w = pipeline::pipeline_weight(pipeline_seed, manifest.m, stage);
+                    let mut job_rng = ChaChaRng::seed_from_u64(seed);
+                    let _ = job_rng.fork();
+                    let mut rng_b = job_rng.fork();
+                    let poly = source::build_f_b(scheme.as_ref(), &w, &mut rng_b);
+                    for (wid, share) in
+                        source::shares(&poly, &setup.alphas).into_iter().enumerate()
+                    {
+                        let _ = fabric.send(
+                            env.job,
+                            my_id,
+                            wid,
+                            Payload::ShareB(PooledMat::detached(share)),
+                        );
+                    }
+                }
+            }
             // Stray traffic (e.g. a JobAbort for a failed job): sources
             // hold no per-job state, nothing to drop.
             _ => {}
@@ -276,10 +404,16 @@ pub fn serve_source_node(
 
 /// One finished job as observed by the distributed master.
 pub struct NodeJobReport {
+    /// Job id within the run.
     pub job: JobId,
+    /// The reconstructed output.
     pub y: FpMat,
+    /// FNV digest of `y` ([`digest_mat`]).
     pub digest: u64,
+    /// Whether the local check against the expected output passed
+    /// (always false when the manifest disables verification).
     pub verified: bool,
+    /// Whether the master decoded at the quota and aborted stragglers.
     pub early_decoded: bool,
     /// Worker ids whose I-shares arrived garbled and were located and
     /// excluded by the Byzantine decoder (sorted; empty unless the
@@ -294,11 +428,13 @@ pub struct NodeJobReport {
     /// reported in its `JobDone`/`AbortAck` — exact across process
     /// boundaries.
     pub worker_counters: Vec<Arc<WorkerCounters>>,
+    /// Wall-clock time from `JobStart` to the verified decode.
     pub elapsed: Duration,
 }
 
 /// Everything the master learned in one distributed run.
 pub struct MasterRunReport {
+    /// Per-job reports, in drive order.
     pub jobs: Vec<NodeJobReport>,
     /// Bytes this master process itself put on the wire (the cluster
     /// harness additionally sums every node's transport).
@@ -324,6 +460,9 @@ pub fn run_master_node(
     endpoint: Endpoint,
     chaos: Option<Arc<ChaosPlan>>,
 ) -> Result<MasterRunReport> {
+    if let Some(pipe) = manifest.pipeline()? {
+        return run_pipeline_master_node(manifest, &pipe, transport, endpoint, chaos);
+    }
     let scheme = manifest.resolve_scheme()?;
     let p = scheme.params();
     let setup = prepare_setup(scheme.as_ref())?;
@@ -461,6 +600,218 @@ pub fn run_master_node(
     })
 }
 
+/// Drive `manifest.jobs` pipeline runs as the master node (the manifest
+/// carries a `pipeline` line), then shut the cluster down. Each run is
+/// [`Pipeline::rounds`] fabric jobs (packed ids `run*rounds + r`); every
+/// intermediate round ends in a masked-open collect at the stage quota,
+/// only the final round in a Phase-3 decode — so the cluster decodes
+/// exactly one `Y` per run, like the in-process driver.
+fn run_pipeline_master_node(
+    manifest: &TopologyManifest,
+    pipe: &Pipeline,
+    transport: Arc<TcpTransport>,
+    endpoint: Endpoint,
+    chaos: Option<Arc<ChaosPlan>>,
+) -> Result<MasterRunReport> {
+    let scheme = manifest.resolve_scheme()?;
+    let p = scheme.params();
+    let setup = prepare_setup(scheme.as_ref())?;
+    let n = setup.n_workers;
+    let fabric = over_tcp(manifest, &transport, chaos);
+    let router = JobRouter::new(endpoint);
+    let pool = WorkerPool::sized_or_global(0);
+    let scratch = ScratchPool::for_pool(&pool);
+    let master_id = manifest.master_id();
+    let rounds = pipe.rounds();
+
+    let drive = || -> Result<Vec<NodeJobReport>> {
+        let mut reports = Vec::new();
+        for k in 0..manifest.jobs {
+            let t0 = Instant::now();
+            let pipeline_seed = job_secret_seed(manifest.seed, k as JobId);
+            let x0 = pipeline::pipeline_input(pipeline_seed, manifest.m);
+            let weights: Vec<FpMat> = (0..rounds)
+                .map(|r| pipeline::pipeline_weight(pipeline_seed, manifest.m, r as u32))
+                .collect();
+            // The boundary-advanced masked open Z′ awaiting re-share (the
+            // master's half; source A's residual carries the other half).
+            let mut state_z: Option<FpMat> = None;
+            let mut y = FpMat::zeros(0, 0);
+            let mut early_decoded = false;
+            let mut final_counters: Vec<Arc<WorkerCounters>> = Vec::new();
+            let mut traffic = TrafficReport::default();
+            for r in 0..rounds {
+                let job = (k * rounds + r) as JobId;
+                let seed_r = pipeline::stage_seed(pipeline_seed, r as u32);
+                let masked = r + 1 < rounds;
+                router.open(job);
+                fabric.begin_job(job);
+                let outcome = (|| -> Result<(FpMat, Vec<Arc<WorkerCounters>>, bool)> {
+                    let counters: Vec<Arc<WorkerCounters>> =
+                        (0..n).map(|_| Arc::new(WorkerCounters::default())).collect();
+                    for (wid, c) in counters.iter().enumerate() {
+                        fabric.send(
+                            job,
+                            master_id,
+                            wid,
+                            Payload::Control(ControlMsg::StageStart {
+                                stage: r as u32,
+                                seed: seed_r,
+                                masked,
+                                counters: c.clone(),
+                            }),
+                        )?;
+                    }
+                    // The sources' cue for this round.
+                    for src in [manifest.source_a_id(), manifest.source_b_id()] {
+                        fabric.send(
+                            job,
+                            master_id,
+                            src,
+                            Payload::Control(ControlMsg::StageStart {
+                                stage: r as u32,
+                                seed: seed_r,
+                                masked,
+                                counters: Arc::new(WorkerCounters::default()),
+                            }),
+                        )?;
+                    }
+                    if let Some(z_prime) = state_z.as_ref() {
+                        // Split re-share, master's half: the same rng fork
+                        // the in-process source-A role would take, so the
+                        // secret terms (and hence every worker's combined
+                        // share) are byte-identical to the fused
+                        // build_f_a(Z′ − R′) the in-process driver sends.
+                        let mut job_rng = ChaChaRng::seed_from_u64(seed_r);
+                        let mut rng_a = job_rng.fork();
+                        let fa_z = source::build_f_a(scheme.as_ref(), z_prime, &mut rng_a);
+                        for (wid, &alpha) in setup.alphas.iter().enumerate() {
+                            fabric.send(
+                                job,
+                                master_id,
+                                wid,
+                                Payload::Control(ControlMsg::StageShareZ {
+                                    stage: r as u32,
+                                    mat: fa_z.eval(alpha),
+                                }),
+                            )?;
+                        }
+                    }
+                    if masked {
+                        let z = pipeline::collect_stage(
+                            &router,
+                            &fabric,
+                            job,
+                            r as u32,
+                            &setup.alphas,
+                            n,
+                            p.t,
+                            p.stage_quota(),
+                            manifest.recv_timeout,
+                            &counters,
+                        )?;
+                        Ok((z, counters, false))
+                    } else {
+                        let (m_out, _mt) = run_master(
+                            &router,
+                            &fabric,
+                            job,
+                            &setup.alphas,
+                            n,
+                            p.t,
+                            p.z,
+                            0,
+                            manifest.recv_timeout,
+                            manifest.early_decode,
+                            &counters,
+                            &pool,
+                            &scratch,
+                        )?;
+                        Ok((m_out.y, counters, m_out.early_decoded))
+                    }
+                })();
+                let stage_traffic = fabric.end_job(job);
+                router.close(job);
+                match outcome {
+                    Ok((mat, counters, early)) => {
+                        traffic.source_to_worker += stage_traffic.source_to_worker;
+                        traffic.worker_to_worker += stage_traffic.worker_to_worker;
+                        traffic.worker_to_master += stage_traffic.worker_to_master;
+                        traffic.messages += stage_traffic.messages;
+                        if masked {
+                            state_z = Some(pipeline::apply_ops(mat, pipe.boundary(r), true));
+                        } else {
+                            early_decoded = early;
+                            y = pipeline::apply_ops(mat, pipe.boundary(r), true);
+                            final_counters = counters;
+                        }
+                    }
+                    Err(e) => {
+                        for wid in 0..n {
+                            let _ = fabric.send(
+                                job,
+                                master_id,
+                                wid,
+                                Payload::Control(ControlMsg::JobAbort),
+                            );
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+            let verified = if manifest.verify {
+                let wrefs: Vec<&FpMat> = weights.iter().collect();
+                let expect = pipeline::reference_eval(pipe, p, &x0, &wrefs, pipeline_seed)?;
+                if y != expect {
+                    return Err(CmpcError::NotDecodable(format!(
+                        "pipeline run {k}: distributed reconstruction mismatch vs the \
+                         decode-re-encode reference"
+                    )));
+                }
+                true
+            } else {
+                false
+            };
+            reports.push(NodeJobReport {
+                job: k as JobId,
+                digest: digest_mat(&y),
+                y,
+                verified,
+                early_decoded,
+                blamed_workers: Vec::new(),
+                traffic,
+                worker_counters: final_counters,
+                elapsed: t0.elapsed(),
+            });
+        }
+        Ok(reports)
+    };
+    let result = drive();
+    let mut peers: Vec<NodeId> = (0..n).collect();
+    peers.push(manifest.source_a_id());
+    peers.push(manifest.source_b_id());
+    for peer in peers {
+        for _attempt in 0..2 {
+            if fabric
+                .send(
+                    CONTROL_JOB,
+                    master_id,
+                    peer,
+                    Payload::Control(ControlMsg::Shutdown),
+                )
+                .is_ok()
+            {
+                break;
+            }
+        }
+    }
+    let jobs = result?;
+    Ok(MasterRunReport {
+        jobs,
+        wire: transport.wire_stats(),
+    })
+}
+
 /// Bind this role's listener per the manifest and run it. Returns the
 /// master's report when the role is [`NodeRole::Master`], `None` for the
 /// long-running roles.
@@ -506,6 +857,22 @@ pub fn run_reference(manifest: &TopologyManifest) -> Result<Vec<(JobId, u64)>> {
         ProtocolConfig::builder().verify(manifest.verify).build(),
     )?;
     let mut digests = Vec::with_capacity(manifest.jobs);
+    if let Some(pipe) = manifest.pipeline()? {
+        // Pipeline topology: each "job" is a full in-process pipeline run
+        // under the same per-run seed/data derivations as the cluster.
+        for k in 0..manifest.jobs {
+            let job = k as JobId;
+            let pipeline_seed = job_secret_seed(manifest.seed, job);
+            let x = pipeline::pipeline_input(pipeline_seed, manifest.m);
+            let weights: Vec<FpMat> = (0..pipe.rounds())
+                .map(|r| pipeline::pipeline_weight(pipeline_seed, manifest.m, r as u32))
+                .collect();
+            let wrefs: Vec<&FpMat> = weights.iter().collect();
+            let out = dep.execute_pipeline_seeded(&pipe, &x, &wrefs, pipeline_seed)?;
+            digests.push((job, digest_mat(&out.y)));
+        }
+        return Ok(digests);
+    }
     for k in 0..manifest.jobs {
         let job = k as JobId;
         let (a, b) = job_matrices(manifest.seed, job, manifest.m);
@@ -518,6 +885,7 @@ pub fn run_reference(manifest: &TopologyManifest) -> Result<Vec<(JobId, u64)>> {
 /// A whole-cluster loopback run: every node a thread in this process,
 /// every link a real 127.0.0.1 socket.
 pub struct ClusterReport {
+    /// What the master-node thread reported.
     pub master: MasterRunReport,
     /// Wire stats summed over **every** node's transport — this is where
     /// the measured worker↔worker bytes compare against ζ.

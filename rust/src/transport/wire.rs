@@ -64,8 +64,10 @@ pub const WIRE_MAGIC: u32 = 0x434D_5043;
 
 /// Current frame format version. Decoders reject every other version with
 /// a typed error (no silent cross-version reads). v2 added the adversary
-/// tolerance to `Submit` and the admin token to the client `Shutdown`.
-pub const WIRE_VERSION: u16 = 2;
+/// tolerance to `Submit` and the admin token to the client `Shutdown`;
+/// v3 added the pipeline stage messages (`StageMask`/`StageMasked`
+/// payloads and the `StageStart`/`StageShareZ`/`StageShareR` controls).
+pub const WIRE_VERSION: u16 = 3;
 
 /// Fixed frame header length in bytes.
 pub const HEADER_LEN: usize = 23;
@@ -92,6 +94,10 @@ const TAG_RESULT: u8 = 7;
 const TAG_REJECT: u8 = 8;
 const TAG_GW_SHUTDOWN: u8 = 9;
 
+// Pipeline stage payloads (wire v3).
+const TAG_STAGE_MASK: u8 = 10;
+const TAG_STAGE_MASKED: u8 = 11;
+
 const CTL_JOB_START: u8 = 0;
 const CTL_JOB_DONE: u8 = 1;
 const CTL_JOB_ERROR: u8 = 2;
@@ -99,6 +105,10 @@ const CTL_JOB_ABORT: u8 = 3;
 const CTL_ABORT_ACK: u8 = 4;
 const CTL_SHUTDOWN: u8 = 5;
 const CTL_JOB_INPUT: u8 = 6;
+// Pipeline stage controls (wire v3).
+const CTL_STAGE_START: u8 = 7;
+const CTL_STAGE_SHARE_Z: u8 = 8;
+const CTL_STAGE_SHARE_R: u8 = 9;
 
 fn corrupt(msg: impl std::fmt::Display) -> CmpcError {
     CmpcError::Fabric(format!("wire: {msg}"))
@@ -138,6 +148,8 @@ fn payload_tag(payload: &Payload) -> u8 {
         Payload::ShareB(_) => TAG_SHARE_B,
         Payload::GShare(_) => TAG_GSHARE,
         Payload::IShare(_) => TAG_ISHARE,
+        Payload::StageMask { .. } => TAG_STAGE_MASK,
+        Payload::StageMasked { .. } => TAG_STAGE_MASKED,
         Payload::Control(_) => TAG_CONTROL,
     }
 }
@@ -147,6 +159,9 @@ fn payload_wire_len(payload: &Payload) -> usize {
         Payload::Shares { fa, fb } => mat_wire_len(fa) + mat_wire_len(fb),
         Payload::ShareA(m) | Payload::ShareB(m) => mat_wire_len(m),
         Payload::GShare(m) | Payload::IShare(m) => mat_wire_len(m),
+        Payload::StageMask { mat, .. } | Payload::StageMasked { mat, .. } => {
+            4 + mat_wire_len(mat)
+        }
         Payload::Control(c) => {
             1 + match c {
                 ControlMsg::JobStart { .. } => 8,
@@ -156,6 +171,10 @@ fn payload_wire_len(payload: &Payload) -> usize {
                 ControlMsg::AbortAck { .. } => 16,
                 ControlMsg::Shutdown => 0,
                 ControlMsg::JobInput { mat, .. } => 8 + mat_wire_len(mat),
+                ControlMsg::StageStart { .. } => 13,
+                ControlMsg::StageShareZ { mat, .. } | ControlMsg::StageShareR { mat, .. } => {
+                    4 + mat_wire_len(mat)
+                }
             }
         }
     }
@@ -185,6 +204,10 @@ pub fn encode_envelope(env: &Envelope, out: &mut Vec<u8>) {
         }
         Payload::ShareA(m) | Payload::ShareB(m) => put_mat(out, m),
         Payload::GShare(m) | Payload::IShare(m) => put_mat(out, m),
+        Payload::StageMask { stage, mat } | Payload::StageMasked { stage, mat } => {
+            put_u32(out, *stage);
+            put_mat(out, mat);
+        }
         Payload::Control(c) => match c {
             ControlMsg::JobStart { seed, .. } => {
                 out.push(CTL_JOB_START);
@@ -210,6 +233,30 @@ pub fn encode_envelope(env: &Envelope, out: &mut Vec<u8>) {
             ControlMsg::JobInput { seed, mat } => {
                 out.push(CTL_JOB_INPUT);
                 put_u64(out, *seed);
+                put_mat(out, mat);
+            }
+            // Like JobStart, the counters Arc is process-local shared
+            // memory: only the stage/seed/masked flag travel, and the
+            // remote worker installs a fresh counter instance.
+            ControlMsg::StageStart {
+                stage,
+                seed,
+                masked,
+                ..
+            } => {
+                out.push(CTL_STAGE_START);
+                put_u32(out, *stage);
+                put_u64(out, *seed);
+                out.push(u8::from(*masked));
+            }
+            ControlMsg::StageShareZ { stage, mat } => {
+                out.push(CTL_STAGE_SHARE_Z);
+                put_u32(out, *stage);
+                put_mat(out, mat);
+            }
+            ControlMsg::StageShareR { stage, mat } => {
+                out.push(CTL_STAGE_SHARE_R);
+                put_u32(out, *stage);
                 put_mat(out, mat);
             }
         },
@@ -394,6 +441,14 @@ fn decode_payload(tag: u8, body: &[u8], bufs: Option<&Arc<BufferPool>>) -> Resul
         TAG_SHARE_B => Payload::ShareB(decode_mat(&mut r, bufs)?),
         TAG_GSHARE => Payload::GShare(decode_mat(&mut r, bufs)?),
         TAG_ISHARE => Payload::IShare(decode_mat(&mut r, bufs)?),
+        TAG_STAGE_MASK => Payload::StageMask {
+            stage: r.u32()?,
+            mat: decode_mat(&mut r, bufs)?,
+        },
+        TAG_STAGE_MASKED => Payload::StageMasked {
+            stage: r.u32()?,
+            mat: decode_mat(&mut r, bufs)?,
+        },
         TAG_CONTROL => {
             let ctl = match r.u8()? {
                 CTL_JOB_START => ControlMsg::JobStart {
@@ -420,6 +475,21 @@ fn decode_payload(tag: u8, body: &[u8], bufs: Option<&Arc<BufferPool>>) -> Resul
                 CTL_SHUTDOWN => ControlMsg::Shutdown,
                 CTL_JOB_INPUT => ControlMsg::JobInput {
                     seed: r.u64()?,
+                    mat: decode_fpmat(&mut r)?,
+                },
+                CTL_STAGE_START => ControlMsg::StageStart {
+                    stage: r.u32()?,
+                    seed: r.u64()?,
+                    masked: r.u8()? != 0,
+                    // Fresh local instance, as for JobStart.
+                    counters: Arc::new(WorkerCounters::default()),
+                },
+                CTL_STAGE_SHARE_Z => ControlMsg::StageShareZ {
+                    stage: r.u32()?,
+                    mat: decode_fpmat(&mut r)?,
+                },
+                CTL_STAGE_SHARE_R => ControlMsg::StageShareR {
+                    stage: r.u32()?,
                     mat: decode_fpmat(&mut r)?,
                 },
                 other => return Err(corrupt(format!("unknown control sub-tag {other}"))),
@@ -467,6 +537,7 @@ pub struct FrameReader {
 }
 
 impl FrameReader {
+    /// A fresh reader with an empty body buffer.
     pub fn new() -> FrameReader {
         FrameReader::default()
     }
@@ -605,24 +676,35 @@ pub enum ClientMsg {
     /// plus the adversary tolerance `adv` the decode must honor (raises
     /// the recovery quota to `t² + z + 2·adv`).
     Submit {
+        /// Row partition factor.
         s: usize,
+        /// Column partition factor.
         t: usize,
+        /// Collusion tolerance.
         z: usize,
+        /// Adversary (Byzantine) tolerance the decode must honor.
         adv: usize,
+        /// The client's `A` matrix.
         a: FpMat,
+        /// The client's `B` matrix.
         b: FpMat,
     },
     /// Success: the decoded product, its FNV digest, and the serving
     /// latency the gateway observed (admission → decode).
     Result {
+        /// FNV digest of `y` (what CI diffs against the reference).
         digest: u64,
+        /// Admission→decode latency in microseconds.
         elapsed_us: u64,
+        /// The decoded product.
         y: FpMat,
     },
     /// Typed refusal. Every reason except [`RejectReason::Internal`] is
     /// decided at the door, before the job touches a deployment.
     Reject {
+        /// The typed cause.
         reason: RejectReason,
+        /// Free-form human-readable context.
         detail: String,
     },
     /// Administrative: drain in-flight jobs and stop the gateway (the CI
@@ -631,7 +713,10 @@ pub enum ClientMsg {
     /// [`RejectReason::Unauthorized`] and the gateway keeps serving. A
     /// gateway with no configured token accepts any value (the
     /// pre-auth behavior, for single-operator rigs).
-    Shutdown { token: u64 },
+    Shutdown {
+        /// Must match the gateway's `gateway_token` manifest line.
+        token: u64,
+    },
 }
 
 /// One client-plane frame. Shares the fabric's 23-byte header: the `job`
@@ -639,8 +724,11 @@ pub enum ClientMsg {
 /// response) and the `from` slot the tenant id.
 #[derive(Debug, Clone)]
 pub struct ClientFrame {
+    /// Correlation id, echoed verbatim on the response.
     pub corr: u64,
+    /// Tenant id of the submitting client.
     pub tenant: u32,
+    /// The client-plane payload.
     pub msg: ClientMsg,
 }
 
@@ -728,9 +816,13 @@ pub fn write_client_frame<W: std::io::Write>(
 /// from the first [`HEADER_LEN`] buffered bytes, before any body arrives.
 #[derive(Debug, Clone, Copy)]
 pub struct ClientHeader {
+    /// Correlation id (the fabric header's `job` slot).
     pub corr: u64,
+    /// Tenant id (the fabric header's `from` slot).
     pub tenant: u32,
+    /// Message tag (one of the client-plane tags 6–9).
     pub tag: u8,
+    /// Declared body length, already validated against the frame cap.
     pub payload_len: usize,
 }
 
@@ -918,6 +1010,28 @@ mod tests {
                 seed: 0xBEEF,
                 mat: fpmat(3, 3, 11),
             }),
+            Payload::StageMask {
+                stage: 2,
+                mat: mat(2, 2, 12),
+            },
+            Payload::StageMasked {
+                stage: 3,
+                mat: mat(0, 0, 13), // empty matrices are legal here too
+            },
+            Payload::Control(ControlMsg::StageStart {
+                stage: 4,
+                seed: 0xF00D,
+                masked: true,
+                counters: Arc::new(WorkerCounters::default()),
+            }),
+            Payload::Control(ControlMsg::StageShareZ {
+                stage: 5,
+                mat: fpmat(2, 3, 14),
+            }),
+            Payload::Control(ControlMsg::StageShareR {
+                stage: 6,
+                mat: fpmat(3, 2, 15),
+            }),
         ]
     }
 
@@ -931,6 +1045,17 @@ mod tests {
             | (Payload::ShareB(x), Payload::ShareB(y))
             | (Payload::GShare(x), Payload::GShare(y))
             | (Payload::IShare(x), Payload::IShare(y)) => assert_eq!(**x, **y),
+            (
+                Payload::StageMask { stage, mat },
+                Payload::StageMask { stage: s2, mat: m2 },
+            )
+            | (
+                Payload::StageMasked { stage, mat },
+                Payload::StageMasked { stage: s2, mat: m2 },
+            ) => {
+                assert_eq!(stage, s2);
+                assert_eq!(**mat, **m2);
+            }
             (Payload::Control(x), Payload::Control(y)) => match (x, y) {
                 (
                     ControlMsg::JobStart { seed, .. },
@@ -961,6 +1086,35 @@ mod tests {
                     ControlMsg::JobInput { seed: s2, mat: m2 },
                 ) => {
                     assert_eq!(seed, s2);
+                    assert_eq!(mat, m2);
+                }
+                (
+                    ControlMsg::StageStart {
+                        stage,
+                        seed,
+                        masked,
+                        ..
+                    },
+                    ControlMsg::StageStart {
+                        stage: st2,
+                        seed: s2,
+                        masked: mk2,
+                        ..
+                    },
+                ) => {
+                    assert_eq!(stage, st2);
+                    assert_eq!(seed, s2);
+                    assert_eq!(masked, mk2);
+                }
+                (
+                    ControlMsg::StageShareZ { stage, mat },
+                    ControlMsg::StageShareZ { stage: s2, mat: m2 },
+                )
+                | (
+                    ControlMsg::StageShareR { stage, mat },
+                    ControlMsg::StageShareR { stage: s2, mat: m2 },
+                ) => {
+                    assert_eq!(stage, s2);
                     assert_eq!(mat, m2);
                 }
                 (x, y) => panic!("control variant mismatch: {x:?} vs {y:?}"),

@@ -9,9 +9,13 @@ use std::collections::BTreeMap;
 /// switches and positional arguments.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// First non-dashed token, e.g. `node` in `cmpc node --role master`.
     pub subcommand: Option<String>,
+    /// `--key value` (and `--key=value`) pairs.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches, in order of appearance.
     pub flags: Vec<String>,
+    /// Non-dashed tokens after the subcommand.
     pub positional: Vec<String>,
 }
 
@@ -46,10 +50,12 @@ impl Args {
         args
     }
 
+    /// Whether the bare switch `--name` was present.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of option `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }

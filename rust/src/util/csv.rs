@@ -37,6 +37,7 @@ impl CsvWriter {
         writeln!(self.out, "{}", fields.join(","))
     }
 
+    /// Flush buffered rows to the underlying file.
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.out.flush()
     }

@@ -111,6 +111,7 @@ impl ChaChaRng {
         self.idx = 0;
     }
 
+    /// Next 32 bits of the keystream.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         if self.idx >= 16 {
@@ -121,6 +122,7 @@ impl ChaChaRng {
         v
     }
 
+    /// Next 64 bits of the keystream (two `next_u32` draws, low half first).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         (self.next_u32() as u64) | ((self.next_u32() as u64) << 32)

@@ -1,0 +1,181 @@
+//! Pipeline acceptance pins (v0.10): a chained secure computation must be
+//! byte-identical to the naive decode-re-encode reference for every
+//! scheme, perform exactly **one** Phase-3 decode regardless of chain
+//! length (the counter contract in `metrics`), replay deterministically,
+//! survive chaos-killed workers mid-stage, and decode the same bytes over
+//! a real TCP cluster as in-process.
+
+use std::time::{Duration, Instant};
+
+use cmpc::codes::SchemeParams;
+use cmpc::matrix::FpMat;
+use cmpc::mpc::chaos::ChaosPlan;
+use cmpc::mpc::pipeline::{pipeline_input, pipeline_weight, reference_eval, Pipeline};
+use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::runtime::manifest::TopologyManifest;
+use cmpc::transport::node::{job_secret_seed, run_local_cluster};
+use cmpc::{Deployment, SchemeSpec};
+
+const M: usize = 8;
+const SEED: u64 = 0x1209;
+
+/// `(s,t,z) = (2,2,2)`: every scheme constructible, stage quota t²+z = 6.
+fn params() -> SchemeParams {
+    SchemeParams::new(2, 2, 2)
+}
+
+fn provision(spec: SchemeSpec, config: ProtocolConfig) -> Deployment {
+    Deployment::provision(spec, params(), config).unwrap()
+}
+
+/// The deterministic demo data the CI digest lanes and the example use.
+fn demo_data(pipe: &Pipeline, seed: u64) -> (FpMat, Vec<FpMat>) {
+    let x = pipeline_input(seed, M);
+    let weights = (0..pipe.rounds())
+        .map(|r| pipeline_weight(seed, M, r as u32))
+        .collect();
+    (x, weights)
+}
+
+/// Drive the reaper until `want` respawns happened (worker threads exit
+/// asynchronously after a chaos kill, so poll briefly).
+fn wait_for_respawns(dep: &Deployment, want: u64) {
+    let t0 = Instant::now();
+    loop {
+        dep.runtime().reap();
+        if dep.health().respawns >= want {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "respawns stuck at {} (want {want})",
+            dep.health().respawns
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// 2-stage and 3-stage chains across all three constructible schemes:
+/// verified against (and explicitly equal to) the decode-re-encode
+/// reference, exactly one Phase-3 decode, one fabric job + one stage
+/// counter tick per round, and deterministic under seed replay.
+#[test]
+fn pipelines_match_reference_across_schemes() {
+    let specs = [
+        "matmul,truncate:4,matmul",
+        "matmul,truncate:3,matmul,scale:5,transpose,matmul",
+    ];
+    for scheme in [
+        SchemeSpec::Age { lambda: None },
+        SchemeSpec::PolyDot,
+        SchemeSpec::Entangled,
+    ] {
+        for spec in specs {
+            let pipe = Pipeline::parse_spec(spec).unwrap();
+            let dep = provision(scheme, ProtocolConfig::builder().threads(1).build());
+            let name = format!("{} `{spec}`", dep.scheme().name());
+            let (x, weights) = demo_data(&pipe, SEED);
+            let wrefs: Vec<&FpMat> = weights.iter().collect();
+
+            let out = dep.execute_pipeline_seeded(&pipe, &x, &wrefs, SEED).unwrap();
+            assert!(out.verified, "{name}");
+            assert_eq!(out.rounds, pipe.rounds(), "{name}");
+            assert_eq!(out.stage_traffic.len(), pipe.rounds(), "{name}");
+            assert_eq!(out.stage_elapsed.len(), pipe.rounds(), "{name}");
+            let expect = reference_eval(&pipe, params(), &x, &wrefs, SEED).unwrap();
+            assert_eq!(out.y, expect, "{name}: diverged from reference");
+
+            // The whole point: one decode for the whole chain, while the
+            // fabric did one job's worth of work per round.
+            let health = dep.health();
+            assert_eq!(health.phase3_decodes, 1, "{name}");
+            assert_eq!(health.pipeline_stages, pipe.rounds() as u64, "{name}");
+            assert_eq!(
+                dep.runtime().jobs_started(),
+                pipe.rounds() as u64,
+                "{name}"
+            );
+
+            // Same seed on the warm deployment → same bytes.
+            let again = dep.execute_pipeline_seeded(&pipe, &x, &wrefs, SEED).unwrap();
+            assert_eq!(again.y, out.y, "{name}: replay diverged");
+            assert_eq!(dep.health().phase3_decodes, 2, "{name}");
+        }
+    }
+}
+
+/// Chaos kill mid-stage: z workers die mid-send of their final round-0
+/// G-share. The masked open decodes at the stage quota anyway, the reaper
+/// respawns the victims between rounds, and the pipeline output stays
+/// byte-identical to the fault-free run — as does the next pipeline on
+/// the healed deployment.
+#[test]
+fn pipeline_survives_chaos_kill_mid_stage() {
+    let pipe = Pipeline::parse_spec("matmul,truncate:4,matmul").unwrap();
+    let (x, weights) = demo_data(&pipe, SEED);
+    let wrefs: Vec<&FpMat> = weights.iter().collect();
+
+    let reference = provision(
+        SchemeSpec::Age { lambda: None },
+        ProtocolConfig::builder().threads(1).build(),
+    );
+    let n = reference.n_workers();
+    let y_ref = reference
+        .execute_pipeline_seeded(&pipe, &x, &wrefs, SEED)
+        .unwrap()
+        .y;
+    drop(reference);
+
+    let plan = ChaosPlan::kill_k_workers_after_exchange(0xDEAD_BEA7, n, 2);
+    let dep = provision(
+        SchemeSpec::Age { lambda: None },
+        ProtocolConfig::builder()
+            .threads(1)
+            .early_decode(true) // final round must not full-drain dead peers
+            .recv_timeout(Duration::from_secs(10))
+            .chaos(plan.into_shared())
+            .build(),
+    );
+    let out = dep
+        .execute_pipeline_seeded(&pipe, &x, &wrefs, SEED)
+        .expect("pipeline with 2 killed workers should decode at the stage quota");
+    assert!(out.verified);
+    assert_eq!(out.y, y_ref, "chaos run diverged from fault-free run");
+
+    wait_for_respawns(&dep, 2);
+    assert_eq!(dep.health().evictions, 2);
+    assert_eq!(dep.worker_threads(), n);
+
+    // Kill rules are exhausted; the healed complement replays identically.
+    let next = dep.execute_pipeline_seeded(&pipe, &x, &wrefs, SEED).unwrap();
+    assert!(next.verified);
+    assert_eq!(next.y, y_ref, "post-respawn pipeline diverged");
+}
+
+/// A `pipeline <spec>` manifest line over a real loopback-TCP cluster —
+/// every party its own thread, every envelope through the framed wire
+/// codec, the split `Z′/R′` re-share between master and source A — must
+/// decode byte-identical to the in-process driver for every run.
+#[test]
+fn pipeline_tcp_cluster_matches_in_process() {
+    let spec = "matmul,truncate:4,matmul";
+    let mut manifest =
+        TopologyManifest::template("age", 2, 2, 2, M, 0xACE5, 2, "127.0.0.1", 0).unwrap();
+    manifest.pipeline_spec = Some(spec.to_string());
+    let report = run_local_cluster(&manifest, None).unwrap();
+    assert_eq!(report.master.jobs.len(), 2);
+
+    let pipe = Pipeline::parse_spec(spec).unwrap();
+    let dep = provision(
+        SchemeSpec::Age { lambda: None },
+        ProtocolConfig::builder().threads(1).build(),
+    );
+    for (k, job) in report.master.jobs.iter().enumerate() {
+        let seed = job_secret_seed(manifest.seed, k as u64);
+        let (x, weights) = demo_data(&pipe, seed);
+        let wrefs: Vec<&FpMat> = weights.iter().collect();
+        let out = dep.execute_pipeline_seeded(&pipe, &x, &wrefs, seed).unwrap();
+        assert!(job.verified, "TCP run {k}");
+        assert_eq!(job.y, out.y, "TCP run {k} diverged from in-process");
+    }
+}
