@@ -37,14 +37,22 @@
 //! summed against the end-to-end clock, so the driver overhead between
 //! rounds (boundary ops + re-share bookkeeping) is visible — plus the
 //! naive alternative (decode every stage at the master and re-encode)
-//! for the amortization ratio. Results are printed in the in-tree bench
-//! format *and* emitted as machine-readable `BENCH_9.json` so later PRs
-//! can diff the trajectory.
+//! for the amortization ratio. PR 10 adds an **autoscale** scenario:
+//! adaptive-vs-static over two deterministic mis-provisioning profiles —
+//! a *bandwidth* profile (deployment pinned at λ = 0 pays ~11% extra
+//! Phase-2 traffic; the controller reads live telemetry and swaps to
+//! λ* = 2) and a *straggler* profile (seeded mid-exchange worker kills
+//! erode the λ = 2 margin; the controller drafts standby capacity back
+//! to λ = 0). Every static `(scheme, λ)` point on the curve runs the same
+//! job stream, and the adaptive run must converge onto the best static
+//! config with zero dropped jobs — asserted, not just reported. Results
+//! are printed in the in-tree bench format *and* emitted as
+//! machine-readable `BENCH_10.json` so later PRs can diff the trajectory.
 //!
 //! Usage (from `rust/`):
 //!
 //! ```sh
-//! cargo bench --bench perf_core                      # full run → ../BENCH_9.json
+//! cargo bench --bench perf_core                      # full run → ../BENCH_10.json
 //! cargo bench --bench perf_core -- --smoke --out /tmp/b.json   # CI schema smoke
 //! ```
 
@@ -52,13 +60,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cmpc::analysis;
+use cmpc::autoscale::{AutoscaleConfig, Autoscaler, Decision};
 use cmpc::benchkit::{peak_rss_bytes, per_second, Json};
 use cmpc::codes::SchemeParams;
 use cmpc::coordinator::{Coordinator, CoordinatorConfig, SchemePolicy};
 use cmpc::gateway::client::{run_load, LoadPlan};
 use cmpc::gateway::{Gateway, GatewayConfig, LocalEngine};
 use cmpc::matrix::FpMat;
-use cmpc::mpc::chaos::PayloadClass;
+use cmpc::mpc::chaos::{ChaosPlan, PayloadClass};
 use cmpc::mpc::pipeline::{pipeline_input, pipeline_weight, Pipeline};
 use cmpc::mpc::protocol::ProtocolConfig;
 use cmpc::runtime::manifest::TopologyManifest;
@@ -508,7 +517,7 @@ struct GateCase {
     e2e_ns: u64,
     calib_ns: u64,
     /// `e2e_ns / calib_ns` — what the CI smoke lane diffs against the
-    /// committed `BENCH_8.json` gate (fails at >10% regression).
+    /// committed `BENCH_10.json` gate (fails at >10% regression).
     e2e_per_calib: f64,
 }
 
@@ -635,6 +644,221 @@ fn run_pipeline_bench(spec_str: &str, m: usize, iters: usize) -> PipelineCase {
     }
 }
 
+struct AutoscaleStaticCase {
+    spec: String,
+    lambda: u64,
+    n_workers: usize,
+    jobs: u64,
+    dropped_jobs: u64,
+    /// Measured Phase-2 worker↔worker scalars per job (`DeploymentTelemetry`).
+    w2w_scalars_per_job: u64,
+    mean_e2e_ns: u64,
+    /// Workers above the `t²+z` recovery quota once the profile's kills
+    /// land — the standby headroom a straggler-degraded fleet lives on.
+    recovery_margin: i64,
+}
+
+struct AutoscaleCase {
+    profile: String,
+    start_spec: String,
+    /// Scheme the controller had converged onto when the stream ended.
+    converged_spec: String,
+    /// The static sweep's winner under the profile's objective.
+    best_static_spec: String,
+    reconfigurations: u64,
+    jobs: u64,
+    dropped_jobs: u64,
+    /// `converged_spec == best_static_spec` — the adaptive ≥ every-static
+    /// claim, asserted before this struct is built.
+    converged_matches_best: bool,
+    adaptive_w2w_scalars_per_job: u64,
+    adaptive_mean_e2e_ns: u64,
+    statics: Vec<AutoscaleStaticCase>,
+}
+
+const AUTOSCALE_M: usize = 8;
+/// `t² + z` at a = 0 for the Example-1 shape — the recovery quota the
+/// standby margin is measured against.
+const AUTOSCALE_QUOTA: i64 = 6;
+
+/// Provision one (2,2,2) AGE deployment at `lambda`; `kills > 0` arms the
+/// straggler profile (seeded mid-exchange worker kills + early decode).
+fn autoscale_provision(lambda: usize, kills: usize) -> Arc<Deployment> {
+    let mut config = ProtocolConfig::builder().verify(false).threads(1);
+    if kills > 0 {
+        let model = analysis::CostModel::new(2, 2, 2);
+        let n = model
+            .worker_counts()
+            .iter()
+            .find(|&&(l, _)| l == lambda as u64)
+            .map(|&(_, n)| n as usize)
+            .expect("λ on the curve");
+        config = config
+            .early_decode(true)
+            .recv_timeout(Duration::from_secs(10))
+            .chaos(ChaosPlan::kill_k_workers_after_exchange(0xC0FFEE, n, kills).into_shared());
+    }
+    Arc::new(
+        Deployment::provision(
+            SchemeSpec::Age { lambda: Some(lambda) },
+            SchemeParams::new(2, 2, 2),
+            config.build(),
+        )
+        .expect("autoscale provision"),
+    )
+}
+
+/// Drive `k` seeded jobs, pinning every output against the plaintext
+/// product; returns how many dropped (failed or diverged).
+fn autoscale_jobs(dep: &Deployment, a: &FpMat, b: &FpMat, y: &FpMat, base: u64, k: u64) -> u64 {
+    let mut dropped = 0;
+    for i in 0..k {
+        match dep.execute_seeded(a, b, base + i) {
+            Ok(out) if out.y == *y => {}
+            _ => dropped += 1,
+        }
+    }
+    dropped
+}
+
+fn autoscale_wait_respawns(dep: &Deployment, want: u64) {
+    let t0 = Instant::now();
+    while dep.health().respawns < want {
+        dep.runtime().reap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "autoscale: respawns stuck at {}",
+            dep.health().respawns
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// One static `(scheme, λ)` point through the profile's 8-job stream.
+fn run_autoscale_static(
+    lambda: usize,
+    kills: usize,
+    a: &FpMat,
+    b: &FpMat,
+    y: &FpMat,
+) -> AutoscaleStaticCase {
+    let dep = autoscale_provision(lambda, kills);
+    let mut dropped = autoscale_jobs(&dep, a, b, y, 0x9000, 1);
+    if kills > 0 {
+        autoscale_wait_respawns(&dep, kills as u64);
+    }
+    dropped += autoscale_jobs(&dep, a, b, y, 0x9100, 7);
+    let tel = dep.telemetry();
+    let jobs = tel.jobs_completed;
+    AutoscaleStaticCase {
+        spec: dep.scheme().name(),
+        lambda: lambda as u64,
+        n_workers: dep.n_workers(),
+        jobs,
+        dropped_jobs: dropped,
+        w2w_scalars_per_job: tel.w2w_scalars / jobs.max(1),
+        mean_e2e_ns: tel.latency_ns_total / jobs.max(1),
+        recovery_margin: dep.n_workers() as i64 - AUTOSCALE_QUOTA - kills as i64,
+    }
+}
+
+/// Adaptive vs static under one mis-provisioning profile: sweep every
+/// static λ through the deterministic job stream, then run the same
+/// stream on a controller-steered deployment that starts at
+/// `start_lambda`. The controller must converge onto the static sweep's
+/// winner with zero dropped jobs — asserted here so a policy regression
+/// fails the bench, not just a JSON diff.
+fn run_autoscale(
+    profile: &str,
+    start_lambda: usize,
+    kills: usize,
+    static_lambdas: &[usize],
+) -> AutoscaleCase {
+    let mut rng = ChaChaRng::seed_from_u64(0xA5CA1E);
+    let a = FpMat::random(&mut rng, AUTOSCALE_M, AUTOSCALE_M);
+    let b = FpMat::random(&mut rng, AUTOSCALE_M, AUTOSCALE_M);
+    let y = a.transpose().matmul(&b);
+
+    let statics: Vec<AutoscaleStaticCase> = static_lambdas
+        .iter()
+        .map(|&l| run_autoscale_static(l, kills, &a, &b, &y))
+        .collect();
+    // The profile's objective: healthy links minimize the measured ζ
+    // traffic (fewest Phase-2 scalars, then fewest workers); a
+    // straggler-degraded fleet maximizes surviving standby margin among
+    // the configs that dropped nothing.
+    let best = if kills == 0 {
+        statics
+            .iter()
+            .min_by_key(|c| (c.w2w_scalars_per_job, c.n_workers))
+            .expect("non-empty static sweep")
+    } else {
+        statics
+            .iter()
+            .filter(|c| c.dropped_jobs == 0)
+            .max_by_key(|c| c.recovery_margin)
+            .expect("a static config that survives the kills")
+    };
+    let best_static_spec = best.spec.clone();
+
+    // Adaptive: same stream, controller attached, deliberately
+    // mis-provisioned start. 4 jobs fill the policy's minimum window;
+    // one manual tick must land the swap; 4 more jobs run on green.
+    let dep = autoscale_provision(start_lambda, kills);
+    let start_spec = dep.scheme().name();
+    let scaler = Autoscaler::new(dep.clone(), AutoscaleConfig::default());
+    let mut dropped = autoscale_jobs(&dep, &a, &b, &y, 0xA000, 1);
+    if kills > 0 {
+        autoscale_wait_respawns(&dep, kills as u64);
+    }
+    dropped += autoscale_jobs(&dep, &a, &b, &y, 0xA100, 3);
+    match scaler.tick() {
+        Decision::Reconfigure(rec) => {
+            println!(
+                "bench perf_core/autoscale profile={profile}  swap cause={:?} \
+                 predicted_gain={:.1}%",
+                rec.cause, rec.predicted_gain_pct
+            );
+        }
+        other => panic!("{profile}: controller held instead of reconfiguring: {other:?}"),
+    }
+    dropped += autoscale_jobs(&dep, &a, &b, &y, 0xA200, 4);
+
+    let health = scaler.health();
+    let tel = dep.telemetry();
+    let jobs = tel.jobs_completed;
+    let converged_spec = dep.scheme().name();
+    assert_eq!(dropped, 0, "{profile}: the blue/green swap dropped jobs");
+    assert_eq!(
+        converged_spec, best_static_spec,
+        "{profile}: adaptive converged off the static sweep's winner"
+    );
+    let case = AutoscaleCase {
+        profile: profile.to_string(),
+        start_spec,
+        converged_spec,
+        best_static_spec,
+        reconfigurations: health.reconfigurations,
+        jobs,
+        dropped_jobs: dropped,
+        converged_matches_best: true,
+        adaptive_w2w_scalars_per_job: tel.w2w_scalars / jobs.max(1),
+        adaptive_mean_e2e_ns: tel.latency_ns_total / jobs.max(1),
+        statics,
+    };
+    println!(
+        "bench perf_core/autoscale profile={profile}  start={} converged={} \
+         best_static={} reconfigs={} jobs={} dropped={}",
+        case.start_spec,
+        case.converged_spec,
+        case.best_static_spec,
+        case.reconfigurations,
+        case.jobs,
+        case.dropped_jobs,
+    );
+    case
+}
+
 fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut Vec<Case>) {
     let params = SchemeParams::new(s, t, z);
     let mut rng = ChaChaRng::seed_from_u64(0xB2);
@@ -713,7 +937,7 @@ fn run_shape(s: usize, t: usize, z: usize, m: usize, iters: usize, cases: &mut V
 
 fn main() {
     let mut smoke = false;
-    let mut out_path = String::from("../BENCH_9.json");
+    let mut out_path = String::from("../BENCH_10.json");
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
@@ -797,13 +1021,20 @@ fn main() {
         .iter()
         .map(|&(spec, m)| run_pipeline_bench(spec, m, iters))
         .collect();
+    // Autoscale: adaptive-vs-static over the two mis-provisioning
+    // profiles. Deterministic convergence, not timing — the same sweep
+    // runs in smoke and full mode.
+    let autoscale: Vec<AutoscaleCase> = vec![
+        run_autoscale("bandwidth", 0, 0, &[0, 1, 2]),
+        run_autoscale("straggler", 2, 2, &[0, 2]),
+    ];
     let gate = run_gate(if smoke { 2 } else { 5 });
 
     let host_threads = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1) as u64;
     let json = Json::obj(vec![
-        ("schema", Json::Str("cmpc.bench.v9".to_string())),
+        ("schema", Json::Str("cmpc.bench.v10".to_string())),
         ("benchmark", Json::Str("perf_core".to_string())),
         ("provenance", Json::Str("measured".to_string())),
         (
@@ -987,6 +1218,60 @@ fn main() {
                             ("e2e_ns", Json::Int(c.e2e_ns)),
                             ("naive_ns", Json::Int(c.naive_ns)),
                             ("speedup_vs_naive", Json::Float(c.speedup_vs_naive)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "autoscale",
+            Json::Arr(
+                autoscale
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("profile", Json::Str(c.profile.clone())),
+                            ("start_spec", Json::Str(c.start_spec.clone())),
+                            ("converged_spec", Json::Str(c.converged_spec.clone())),
+                            ("best_static_spec", Json::Str(c.best_static_spec.clone())),
+                            ("reconfigurations", Json::Int(c.reconfigurations)),
+                            ("jobs", Json::Int(c.jobs)),
+                            ("dropped_jobs", Json::Int(c.dropped_jobs)),
+                            (
+                                "converged_matches_best",
+                                Json::Bool(c.converged_matches_best),
+                            ),
+                            (
+                                "adaptive_w2w_scalars_per_job",
+                                Json::Int(c.adaptive_w2w_scalars_per_job),
+                            ),
+                            ("adaptive_mean_e2e_ns", Json::Int(c.adaptive_mean_e2e_ns)),
+                            (
+                                "statics",
+                                Json::Arr(
+                                    c.statics
+                                        .iter()
+                                        .map(|s| {
+                                            Json::obj(vec![
+                                                ("spec", Json::Str(s.spec.clone())),
+                                                ("lambda", Json::Int(s.lambda)),
+                                                ("n_workers", Json::Int(s.n_workers as u64)),
+                                                ("jobs", Json::Int(s.jobs)),
+                                                ("dropped_jobs", Json::Int(s.dropped_jobs)),
+                                                (
+                                                    "w2w_scalars_per_job",
+                                                    Json::Int(s.w2w_scalars_per_job),
+                                                ),
+                                                ("mean_e2e_ns", Json::Int(s.mean_e2e_ns)),
+                                                (
+                                                    "recovery_margin",
+                                                    Json::Int(s.recovery_margin.max(0) as u64),
+                                                ),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
                         ])
                     })
                     .collect(),

@@ -1,0 +1,209 @@
+//! The reusable λ-tradeoff cost model — one source of truth for the
+//! figures *and* the autoscaler policy.
+//!
+//! The paper's Phase-0 optimization picks the gap `λ*` minimizing the
+//! worker count `N = |P(H)|` (eq. 30), and Corollaries 10–12 make every
+//! per-worker overhead (ξ, σ, ζ) *monotone increasing in `N`* — so the
+//! same λ* minimizes all three. What a λ ≠ λ* buys instead is margin: a
+//! larger `N` leaves more headroom for stragglers (early decode needs
+//! only the `t²+z+2a` quota) and for Byzantine exclusion (the quota
+//! itself grows by `2a`). [`CostModel`] exposes both sides of that
+//! tradeoff as data, so a *policy* — live telemetry in hand — can walk
+//! the curve instead of re-deriving it.
+//!
+//! Everything here is exact enumeration ([`crate::analysis::gamma_age_enum`]
+//! under the hood), not the conservative closed forms, because the policy
+//! provisions real runtimes and must agree with what
+//! [`crate::codes::AgeCmpc`] actually builds.
+
+use super::{communication_overhead, computation_overhead, gamma_age_enum, storage_overhead};
+
+/// One point on the λ curve: the AGE instance at gap `lambda` and its
+/// analytical per-worker overheads for a given matrix size `m`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct LambdaPoint {
+    /// The gap parameter `λ ∈ [0, z]`.
+    pub lambda: u64,
+    /// Workers provisioned: `Γ(λ) = |P(H)|` by exact enumeration.
+    pub n_workers: u64,
+    /// Computation overhead ξ per worker (eq. 32).
+    pub xi: u128,
+    /// Storage overhead σ per worker (eq. 33).
+    pub sigma: u128,
+    /// Communication overhead ζ among workers (eq. 34).
+    pub zeta: u128,
+}
+
+/// The full λ ∈ [0, z] tradeoff curve for one `(s, t, z)` triple,
+/// computed once and queried cheaply (the enumeration behind each point
+/// builds a scheme instance; callers should construct a `CostModel` per
+/// deployment, not per decision).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    s: usize,
+    t: usize,
+    z: usize,
+    /// `(λ, N(λ))`, ascending in λ — the curve every query walks.
+    curve: Vec<(u64, u64)>,
+}
+
+impl CostModel {
+    /// Enumerate the λ curve for `(s, t, z)`. `t = 1` still yields a
+    /// well-formed (flat) curve: every λ reduces to polynomial-code
+    /// sharing with `N = 2s + 2z − 1`.
+    pub fn new(s: usize, t: usize, z: usize) -> CostModel {
+        let curve = (0..=z as u64)
+            .map(|l| (l, gamma_age_enum(s, t, z, l)))
+            .collect();
+        CostModel { s, t, z, curve }
+    }
+
+    /// The `(λ, N(λ))` curve, ascending in λ — exactly the table the
+    /// Fig. 2 λ-ablation plots.
+    pub fn worker_counts(&self) -> &[(u64, u64)] {
+        &self.curve
+    }
+
+    /// `(λ*, N(λ*))`: the gap minimizing the worker count, ties toward
+    /// smaller λ (lower degree) — Phase 0 of Algorithm 3.
+    pub fn optimal_lambda(&self) -> (u64, u64) {
+        let mut best = self.curve[0];
+        for &(l, n) in &self.curve[1..] {
+            if n < best.1 {
+                best = (l, n);
+            }
+        }
+        best
+    }
+
+    /// The largest worker count on the curve — what a standby draft can
+    /// reach without changing `(s, t, z)`.
+    pub fn max_workers(&self) -> u64 {
+        self.curve.iter().map(|&(_, n)| n).max().unwrap()
+    }
+
+    /// The λ with the *smallest* `N(λ) ≥ min_workers`, or `None` when no
+    /// gap reaches that count. Ties toward smaller λ. This is the standby
+    /// draft query: "give me the cheapest config with at least this much
+    /// straggler margin".
+    pub fn smallest_with_margin(&self, min_workers: u64) -> Option<(u64, u64)> {
+        self.curve
+            .iter()
+            .copied()
+            .filter(|&(_, n)| n >= min_workers)
+            .min_by_key(|&(l, n)| (n, l))
+    }
+
+    /// The master's recovery quota at adversary tolerance `a`:
+    /// `t² + z + 2a` shares (Reed–Solomon unique decoding).
+    pub fn quota(&self, adversary_tolerance: usize) -> u64 {
+        (self.t * self.t + self.z + 2 * adversary_tolerance) as u64
+    }
+
+    /// Full analytical points for a concrete matrix size `m` (requires
+    /// `s|m` and `t|m`, like the overhead formulas themselves).
+    pub fn points(&self, m: usize) -> Vec<LambdaPoint> {
+        self.curve
+            .iter()
+            .map(|&(lambda, n)| LambdaPoint {
+                lambda,
+                n_workers: n,
+                xi: computation_overhead(m, self.s, self.t, self.z, n),
+                sigma: storage_overhead(m, self.s, self.t, self.z, n),
+                zeta: communication_overhead(m, self.t, n),
+            })
+            .collect()
+    }
+
+    /// Relative ζ saving (percent) of moving from `n_cur` workers to
+    /// `n_best`. ζ = N(N−1)·m²/t², so the *ratio* is m-independent —
+    /// which is what lets a policy compare configurations without
+    /// knowing the workload's matrix size:
+    /// `gain = (1 − n_best(n_best−1)/(n_cur(n_cur−1))) × 100`.
+    /// Zero when the move does not shrink the worker count.
+    pub fn gain_pct(n_cur: u64, n_best: u64) -> f64 {
+        if n_best >= n_cur || n_cur < 2 {
+            return 0.0;
+        }
+        let cur = (n_cur * (n_cur - 1)) as f64;
+        let best = (n_best * (n_best - 1)) as f64;
+        (1.0 - best / cur) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::n_age_enum;
+
+    #[test]
+    fn example1_curve_and_optimum() {
+        // Paper Example 1 (s=t=z=2): Γ = [18, 18, 17], λ* = 2.
+        let model = CostModel::new(2, 2, 2);
+        assert_eq!(model.worker_counts(), &[(0, 18), (1, 18), (2, 17)]);
+        assert_eq!(model.optimal_lambda(), (2, 17));
+        assert_eq!(model.max_workers(), 18);
+        assert_eq!(model.quota(0), 6);
+        assert_eq!(model.quota(1), 8);
+    }
+
+    #[test]
+    fn optimal_lambda_matches_analytical_table() {
+        // The satellite pin: CostModel::optimal_lambda against the
+        // analytical enumeration (n_age_enum) over a parameter sweep.
+        for s in 1..=5 {
+            for t in 1..=5 {
+                for z in 1..=8 {
+                    let model = CostModel::new(s, t, z);
+                    let (n, l) = n_age_enum(s, t, z);
+                    assert_eq!(
+                        model.optimal_lambda(),
+                        (l, n),
+                        "optimal_lambda mismatch at s={s} t={t} z={z}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn margin_query_walks_the_curve() {
+        let model = CostModel::new(2, 2, 2);
+        // Cheapest config with ≥ 18 workers is λ=0 (ties toward smaller λ).
+        assert_eq!(model.smallest_with_margin(18), Some((0, 18)));
+        // Anything ≥ 17 is satisfied by the optimum itself.
+        assert_eq!(model.smallest_with_margin(17), Some((2, 17)));
+        // No gap reaches 19 workers at (2,2,2).
+        assert_eq!(model.smallest_with_margin(19), None);
+    }
+
+    #[test]
+    fn points_agree_with_overhead_formulas() {
+        let model = CostModel::new(2, 2, 2);
+        let pts = model.points(32);
+        assert_eq!(pts.len(), 3);
+        let p = &pts[2];
+        assert_eq!(p.lambda, 2);
+        assert_eq!(p.n_workers, 17);
+        assert_eq!(p.xi, computation_overhead(32, 2, 2, 2, 17));
+        assert_eq!(p.sigma, storage_overhead(32, 2, 2, 2, 17));
+        assert_eq!(p.zeta, communication_overhead(32, 2, 17));
+        // ξ, σ, ζ all monotone in N along the curve.
+        assert!(pts[0].zeta > pts[2].zeta);
+        assert!(pts[0].xi > pts[2].xi);
+        assert!(pts[0].sigma > pts[2].sigma);
+    }
+
+    #[test]
+    fn gain_pct_is_m_independent_and_pinned() {
+        // 18 → 17 workers: 1 − (17·16)/(18·17) = 34/306 ≈ 11.11 %.
+        let g = CostModel::gain_pct(18, 17);
+        assert!((g - 100.0 * 34.0 / 306.0).abs() < 1e-9, "got {g}");
+        // Entangled(19) → AGE(17): 1 − 272/342 ≈ 20.47 %.
+        let g = CostModel::gain_pct(19, 17);
+        assert!((g - 100.0 * 70.0 / 342.0).abs() < 1e-9, "got {g}");
+        // No shrink → no gain.
+        assert_eq!(CostModel::gain_pct(17, 17), 0.0);
+        assert_eq!(CostModel::gain_pct(17, 18), 0.0);
+    }
+}

@@ -21,8 +21,8 @@
 use std::path::Path;
 
 use crate::analysis::{
-    communication_overhead, computation_overhead, gamma_age_enum, n_age_enum, n_age_formula,
-    n_entangled, n_polydot_enum, n_polydot_formula, partition_pairs, storage_overhead,
+    communication_overhead, computation_overhead, n_age_enum, n_age_formula, n_entangled,
+    n_polydot_enum, n_polydot_formula, partition_pairs, storage_overhead, CostModel,
 };
 use crate::codes::{n_gcsa_na, n_ssmm};
 use crate::csv_row;
@@ -230,9 +230,9 @@ pub fn write_fig4(dir: &Path, rows: &[Fig4Row]) -> std::io::Result<()> {
 /// λ ablation: `Γ(λ)` across the full gap range for one `(s,t,z)` — the
 /// evidence behind §V's "wider gaps can shrink |P(H)|" insight.
 pub fn lambda_ablation(s: usize, t: usize, z: usize) -> Vec<(u64, u64)> {
-    (0..=z as u64)
-        .map(|l| (l, gamma_age_enum(s, t, z, l)))
-        .collect()
+    // Delegates to the shared CostModel so the figure and the autoscaler
+    // policy can never disagree about the curve.
+    CostModel::new(s, t, z).worker_counts().to_vec()
 }
 
 /// Dump λ-ablation series for each `(s, t, z)` case to

@@ -10,9 +10,11 @@
 //! degree-based count), the library keeps *both* numbers: `*_formula` for
 //! figure parity with the paper, enumeration for the protocol itself.
 
+pub mod cost;
 pub mod figures;
 pub mod overheads;
 
+pub use cost::{CostModel, LambdaPoint};
 pub use overheads::{communication_overhead, computation_overhead, storage_overhead};
 
 use crate::codes::{n_gcsa_na, n_ssmm, AgeCmpc, CmpcScheme, PolyDotCmpc};

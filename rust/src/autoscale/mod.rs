@@ -1,0 +1,501 @@
+//! Adaptive provisioning: the closed-loop autoscaler that retunes
+//! `(scheme, λ, N, a)` from live telemetry.
+//!
+//! The whole point of AGE codes is *adapting* the gap λ to the worker
+//! budget and cost tradeoff — but a λ chosen at provision time is a bet
+//! about conditions the deployment only discovers while serving. This
+//! module closes the loop with three separable pieces:
+//!
+//! * the **policy engine** ([`policy::decide`]) — a pure function from a
+//!   [`TelemetrySnapshot`] + the analytical [`CostModel`] to a
+//!   [`Decision`]; unit-tested as a decision table, no runtime needed;
+//! * the **reconfiguration executor** — [`Deployment::reconfigure`], the
+//!   blue/green swap that provisions the recommended generation beside
+//!   the live one and cuts submissions over with zero dropped jobs;
+//! * the **controller loop** ([`Autoscaler`]) — samples a deployment's
+//!   health on an interval (or on explicit [`Autoscaler::tick`] calls for
+//!   deterministic tests), feeds the policy, applies its recommendations,
+//!   and records every decision in a typed audit log surfaced through
+//!   [`Autoscaler::health`].
+//!
+//! # Window semantics
+//!
+//! The controller's telemetry window spans **since the last
+//! reconfiguration** (or since attach): deployment-lifetime totals are
+//! delta'd against a baseline that resets only when a swap lands. That
+//! makes decisions reproducible for a given job stream — the same jobs
+//! observed over one tick or ten produce the same cumulative window —
+//! and it matches the generation-scoped health counters, which reset at
+//! each swap anyway. After a swap the controller holds for
+//! `cooldown_ticks` ticks ([`HoldReason::Cooldown`]) so the green
+//! generation accumulates a fresh window before being judged.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use cmpc::autoscale::{AutoscaleConfig, Autoscaler};
+//! use cmpc::codes::SchemeParams;
+//! use cmpc::mpc::protocol::ProtocolConfig;
+//! use cmpc::{Deployment, SchemeSpec};
+//!
+//! # fn main() -> cmpc::Result<()> {
+//! let dep = Arc::new(Deployment::provision(
+//!     SchemeSpec::Age { lambda: Some(0) }, // deliberately suboptimal
+//!     SchemeParams::try_new(2, 2, 2)?,
+//!     ProtocolConfig::default(),
+//! )?);
+//! let scaler = Autoscaler::new(dep.clone(), AutoscaleConfig::default());
+//! // … run jobs …
+//! scaler.tick(); // manual control loop step; spawn() runs it on a thread
+//! println!("{:?}", scaler.health().decisions.last());
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod policy;
+
+pub use policy::{
+    decide, Cause, Decision, HoldReason, PolicyConfig, Recommendation, TelemetrySnapshot,
+};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::analysis::CostModel;
+use crate::metrics::RuntimeHealthReport;
+use crate::mpc::deployment::{Deployment, DeploymentTelemetry};
+
+/// Retained [`DecisionRecord`]s (the counters stay exact; only per-event
+/// detail rotates).
+const AUDIT_LOG_CAP: usize = 256;
+
+/// Controller configuration: the sampling cadence plus the policy's
+/// thresholds.
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// Sampling interval of the spawned controller thread (ignored by
+    /// manual [`Autoscaler::tick`] driving).
+    pub interval: Duration,
+    /// Ticks to hold ([`HoldReason::Cooldown`]) after a swap lands, so the
+    /// green generation accumulates a fresh window before being judged.
+    pub cooldown_ticks: u64,
+    /// The policy engine's thresholds.
+    pub policy: PolicyConfig,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> AutoscaleConfig {
+        AutoscaleConfig {
+            interval: Duration::from_millis(250),
+            cooldown_ticks: 2,
+            policy: PolicyConfig::default(),
+        }
+    }
+}
+
+/// What the controller did with one decision.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Outcome {
+    /// The recommendation was applied: a blue/green swap produced this
+    /// generation.
+    Applied {
+        /// Generation number the swap produced.
+        generation: u64,
+        /// Scheme name of the retired blue generation.
+        from: String,
+        /// Scheme name of the new green generation.
+        to: String,
+    },
+    /// The swap was attempted and failed; the blue generation kept
+    /// serving (the error is preserved verbatim).
+    Failed(String),
+    /// A hold — nothing to apply.
+    NotApplied,
+}
+
+/// One audited controller step: the tick number, the window it judged,
+/// the policy's decision, and what happened to it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecisionRecord {
+    /// 1-based tick number.
+    pub tick: u64,
+    /// Completed jobs in the judged window.
+    pub window_jobs: u64,
+    /// The policy's verdict.
+    pub decision: Decision,
+    /// What the controller did with it.
+    pub outcome: Outcome,
+}
+
+/// Point-in-time controller health: counters plus the audit trail and the
+/// deployment's own runtime report — the `health()` surface the issue's
+/// audit-log contract names.
+#[derive(Clone, Debug)]
+pub struct AutoscaleHealth {
+    /// Controller steps taken (manual or timed).
+    pub ticks: u64,
+    /// Blue/green swaps applied.
+    pub reconfigurations: u64,
+    /// Hold decisions (including cooldown holds).
+    pub holds: u64,
+    /// Swap attempts that failed (blue kept serving).
+    pub failed: u64,
+    /// Retired blue generations still draining in-flight jobs.
+    pub retired_draining: u64,
+    /// The audit trail, oldest first (last 256 decisions; the counters
+    /// above stay exact).
+    pub decisions: Vec<DecisionRecord>,
+    /// The active generation's runtime health report.
+    pub runtime: RuntimeHealthReport,
+}
+
+/// The telemetry baseline a window is delta'd against; reset whenever a
+/// swap lands (generation health counters reset there anyway).
+#[derive(Default)]
+struct Baseline {
+    telemetry: DeploymentTelemetry,
+    deadline_misses: u64,
+    evictions: u64,
+    early_decodes: u64,
+    byzantine_detected: u64,
+}
+
+struct ControllerState {
+    baseline: Baseline,
+    cooldown_remaining: u64,
+}
+
+struct Inner {
+    dep: Arc<Deployment>,
+    config: AutoscaleConfig,
+    /// The λ curve of the deployment's (s, t, z), enumerated once.
+    model: CostModel,
+    state: Mutex<ControllerState>,
+    ticks: AtomicU64,
+    reconfigurations: AtomicU64,
+    holds: AtomicU64,
+    failed: AtomicU64,
+    decisions: Mutex<Vec<DecisionRecord>>,
+}
+
+impl Inner {
+    fn record(&self, record: DecisionRecord) {
+        let mut log = self.decisions.lock().unwrap();
+        if log.len() == AUDIT_LOG_CAP {
+            log.remove(0);
+        }
+        log.push(record);
+    }
+
+    fn tick(&self) -> Decision {
+        let tick = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut state = self.state.lock().unwrap();
+
+        if state.cooldown_remaining > 0 {
+            state.cooldown_remaining -= 1;
+            drop(state);
+            let decision = Decision::Hold {
+                reason: HoldReason::Cooldown,
+            };
+            self.holds.fetch_add(1, Ordering::Relaxed);
+            self.record(DecisionRecord {
+                tick,
+                window_jobs: 0,
+                decision: decision.clone(),
+                outcome: Outcome::NotApplied,
+            });
+            self.dep.drain_retired();
+            return decision;
+        }
+
+        // Assemble the window: deployment-lifetime telemetry delta'd
+        // against the post-swap baseline, generation-scoped health
+        // counters likewise (saturating: an external swap between ticks
+        // can only shrink the window, never panic it).
+        let tel = self.dep.telemetry();
+        let health = self.dep.health();
+        let params = self.dep.params();
+        let b = &state.baseline;
+        let jobs = tel.jobs_completed.saturating_sub(b.telemetry.jobs_completed);
+        let latency_ns = tel
+            .latency_ns_total
+            .saturating_sub(b.telemetry.latency_ns_total);
+        let snapshot = TelemetrySnapshot {
+            s: params.s,
+            t: params.t,
+            z: params.z,
+            adversary_tolerance: params.adversary_tolerance,
+            lambda: self.dep.gap_lambda(),
+            n_workers: self.dep.n_workers() as u64,
+            jobs,
+            deadline_misses: health.deadline_misses.saturating_sub(b.deadline_misses),
+            evictions: health.evictions.saturating_sub(b.evictions),
+            early_decodes: health.early_decodes.saturating_sub(b.early_decodes),
+            byzantine_detected: health
+                .byzantine_detected
+                .saturating_sub(b.byzantine_detected),
+            strikes: health.worker_strikes.clone(),
+            w2w_scalars: tel.w2w_scalars.saturating_sub(b.telemetry.w2w_scalars),
+            mean_job_latency_ns: if jobs > 0 { latency_ns / jobs } else { 0 },
+        };
+
+        let decision = policy::decide(&snapshot, &self.config.policy, &self.model);
+        let outcome = match &decision {
+            Decision::Hold { .. } => {
+                self.holds.fetch_add(1, Ordering::Relaxed);
+                Outcome::NotApplied
+            }
+            Decision::Reconfigure(rec) => {
+                match self.dep.reconfigure(rec.spec, rec.adversary_tolerance) {
+                    Ok(swap) => {
+                        self.reconfigurations.fetch_add(1, Ordering::Relaxed);
+                        // Fresh generation → fresh window + cooldown.
+                        state.baseline = Baseline {
+                            telemetry: self.dep.telemetry(),
+                            ..Baseline::default()
+                        };
+                        state.cooldown_remaining = self.config.cooldown_ticks;
+                        Outcome::Applied {
+                            generation: swap.generation,
+                            from: swap.from,
+                            to: swap.to,
+                        }
+                    }
+                    Err(e) => {
+                        self.failed.fetch_add(1, Ordering::Relaxed);
+                        Outcome::Failed(e.to_string())
+                    }
+                }
+            }
+        };
+        drop(state);
+
+        self.record(DecisionRecord {
+            tick,
+            window_jobs: jobs,
+            decision: decision.clone(),
+            outcome,
+        });
+        self.dep.drain_retired();
+        decision
+    }
+}
+
+/// The controller: owns the policy thresholds and the audit log, drives
+/// [`policy::decide`] over a live [`Deployment`], and applies its
+/// recommendations via blue/green swap. Construct with
+/// [`Autoscaler::new`] for manual (deterministic) ticking or
+/// [`Autoscaler::spawn`] for a sampling thread; dropping the autoscaler
+/// stops the thread. The deployment keeps serving either way — the
+/// autoscaler is an *observer with a lever*, never on the job path.
+pub struct Autoscaler {
+    inner: Arc<Inner>,
+    stop: Arc<AtomicBool>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Autoscaler {
+    /// Attach a controller to `dep` without a sampling thread: the caller
+    /// drives it with explicit [`Autoscaler::tick`] calls. This is the
+    /// deterministic mode the decision-table integration tests and the CI
+    /// lane use.
+    pub fn new(dep: Arc<Deployment>, config: AutoscaleConfig) -> Autoscaler {
+        let params = dep.params();
+        let model = CostModel::new(params.s, params.t, params.z);
+        let baseline = Baseline {
+            telemetry: dep.telemetry(),
+            ..Baseline::default()
+        };
+        Autoscaler {
+            inner: Arc::new(Inner {
+                dep,
+                config,
+                model,
+                state: Mutex::new(ControllerState {
+                    baseline,
+                    cooldown_remaining: 0,
+                }),
+                ticks: AtomicU64::new(0),
+                reconfigurations: AtomicU64::new(0),
+                holds: AtomicU64::new(0),
+                failed: AtomicU64::new(0),
+                decisions: Mutex::new(Vec::new()),
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+            thread: Mutex::new(None),
+        }
+    }
+
+    /// [`Autoscaler::new`] plus a sampling thread that ticks every
+    /// `config.interval` until the autoscaler is dropped.
+    pub fn spawn(dep: Arc<Deployment>, config: AutoscaleConfig) -> Autoscaler {
+        let interval = config.interval;
+        let scaler = Autoscaler::new(dep, config);
+        let inner = scaler.inner.clone();
+        let stop = scaler.stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("cmpc-autoscaler".to_string())
+            .spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::park_timeout(interval);
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    inner.tick();
+                }
+            })
+            .expect("spawning the autoscaler thread");
+        *scaler.thread.lock().unwrap() = Some(handle);
+        scaler
+    }
+
+    /// One controller step: assemble the window, run the policy, apply a
+    /// recommendation (if any), audit the outcome, sweep retired
+    /// generations. Returns the decision so tests can assert on it.
+    pub fn tick(&self) -> Decision {
+        self.inner.tick()
+    }
+
+    /// The deployment this controller steers.
+    pub fn deployment(&self) -> &Arc<Deployment> {
+        &self.inner.dep
+    }
+
+    /// The controller's configuration.
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.inner.config
+    }
+
+    /// Counters + audit trail + the active generation's runtime report.
+    pub fn health(&self) -> AutoscaleHealth {
+        AutoscaleHealth {
+            ticks: self.inner.ticks.load(Ordering::Relaxed),
+            reconfigurations: self.inner.reconfigurations.load(Ordering::Relaxed),
+            holds: self.inner.holds.load(Ordering::Relaxed),
+            failed: self.inner.failed.load(Ordering::Relaxed),
+            retired_draining: self.inner.dep.retired_generations() as u64,
+            decisions: self.inner.decisions.lock().unwrap().clone(),
+            runtime: self.inner.dep.health(),
+        }
+    }
+}
+
+impl Drop for Autoscaler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.thread.lock().unwrap().take() {
+            handle.thread().unpark();
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{SchemeParams, SchemeSpec};
+    use crate::matrix::FpMat;
+    use crate::mpc::protocol::ProtocolConfig;
+    use crate::util::rng::ChaChaRng;
+
+    fn provision(lambda: Option<usize>) -> Arc<Deployment> {
+        Arc::new(
+            Deployment::provision(
+                SchemeSpec::Age { lambda },
+                SchemeParams::new(2, 2, 2),
+                ProtocolConfig::default(),
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn controller_converges_to_lambda_star_and_cools_down() {
+        let dep = provision(Some(0)); // N = 18, suboptimal
+        let scaler = Autoscaler::new(dep.clone(), AutoscaleConfig::default());
+
+        // Tick 1: empty window → insufficient data.
+        assert_eq!(
+            scaler.tick(),
+            Decision::Hold {
+                reason: HoldReason::InsufficientData
+            }
+        );
+
+        let mut rng = ChaChaRng::seed_from_u64(31);
+        for _ in 0..4 {
+            let a = FpMat::random(&mut rng, 8, 8);
+            let b = FpMat::random(&mut rng, 8, 8);
+            assert!(dep.execute(&a, &b).unwrap().verified);
+        }
+
+        // Tick 2: the window shows 4 jobs of real Phase-2 traffic at a
+        // suboptimal λ → reconfigure to λ* = 2.
+        match scaler.tick() {
+            Decision::Reconfigure(rec) => {
+                assert_eq!(rec.spec, SchemeSpec::Age { lambda: Some(2) });
+                assert_eq!(rec.cause, Cause::CommunicationCost);
+            }
+            other => panic!("expected reconfigure, got {other:?}"),
+        }
+        assert_eq!(dep.n_workers(), 17);
+        assert_eq!(dep.generation(), 1);
+
+        // Ticks 3–4: cooldown holds.
+        for _ in 0..2 {
+            assert_eq!(
+                scaler.tick(),
+                Decision::Hold {
+                    reason: HoldReason::Cooldown
+                }
+            );
+        }
+
+        // Post-cooldown the fresh window is empty again; run jobs on the
+        // green generation and confirm the controller now holds at λ*.
+        for _ in 0..4 {
+            let a = FpMat::random(&mut rng, 8, 8);
+            let b = FpMat::random(&mut rng, 8, 8);
+            assert!(dep.execute(&a, &b).unwrap().verified);
+        }
+        assert_eq!(
+            scaler.tick(),
+            Decision::Hold {
+                reason: HoldReason::AlreadyOptimal
+            }
+        );
+
+        let health = scaler.health();
+        assert_eq!(health.ticks, 5);
+        assert_eq!(health.reconfigurations, 1);
+        assert_eq!(health.holds, 4);
+        assert_eq!(health.failed, 0);
+        assert_eq!(health.retired_draining, 0, "blue was drained");
+        assert_eq!(health.decisions.len(), 5);
+        match &health.decisions[1].outcome {
+            Outcome::Applied { generation, from, to } => {
+                assert_eq!(*generation, 1);
+                assert_eq!(from, "AGE-CMPC(λ=0)");
+                assert_eq!(to, "AGE-CMPC(λ=2)");
+            }
+            other => panic!("expected applied outcome, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spawned_controller_stops_on_drop() {
+        let dep = provision(None);
+        let scaler = Autoscaler::spawn(
+            dep,
+            AutoscaleConfig {
+                interval: Duration::from_millis(5),
+                ..AutoscaleConfig::default()
+            },
+        );
+        // Give the thread a chance to take at least one timed tick.
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(scaler.health().ticks >= 1);
+        drop(scaler); // must join promptly, not hang
+    }
+}

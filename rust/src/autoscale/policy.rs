@@ -1,0 +1,469 @@
+//! The autoscaler's **policy engine**: a pure, deterministic function
+//! from a telemetry window to a provisioning recommendation.
+//!
+//! [`decide`] consumes a [`TelemetrySnapshot`] (what the deployment
+//! *measured*: completed jobs, Phase-2 traffic, deadline misses,
+//! evictions, Byzantine strike ledger) plus the analytical
+//! [`CostModel`] (what the paper *predicts*: the λ ↦ N curve and the
+//! ξ/σ/ζ overheads of Corollaries 10–12) and returns a [`Decision`]. No
+//! clocks, no locks, no I/O — the decision-table tests drive it with
+//! literal snapshots and assert exact outputs.
+//!
+//! Rule order (first match wins):
+//!
+//! 1. **Insufficient data** — fewer than `min_window_jobs` completed jobs
+//!    in the window: hold, whatever the other signals say.
+//! 2. **Strike-driven eviction** — some worker slot accumulated
+//!    `strike_threshold` Byzantine strikes: stop retrying it. Raise the
+//!    adversary tolerance `a` by one (quota `t²+z+2a`) and pick the
+//!    cheapest λ whose `N(λ)` covers the new quota; the blue/green swap
+//!    this recommends replaces *every* worker, striker included.
+//! 3. **Standby draft** — the window's deadline-miss + eviction rate
+//!    exceeds `miss_budget_pct`: margins are eroding, so draft more
+//!    workers — the cheapest λ with `N ≥ N_current + standby_draft`
+//!    (or the largest reachable `N` when no λ gets that far). A deployment
+//!    already at the top of the curve holds rather than shrinking while
+//!    it is struggling.
+//! 4. **Communication cost** — the window shows real Phase-2 exchange
+//!    (`w2w_scalars > 0`) and the measured configuration sits above the
+//!    curve's optimum: moving to `λ*` shrinks ζ by
+//!    `1 − N*(N*−1)/(N(N−1))` — an *m-independent* ratio, so the policy
+//!    needs no knowledge of the workload's matrix sizes. Reconfigure only
+//!    when that predicted gain clears `hysteresis_pct`, so a borderline
+//!    link cannot thrash reprovisioning. This rule also walks non-AGE
+//!    schemes (Entangled, PolyDot) onto the AGE curve.
+//! 5. Otherwise: hold, already optimal.
+
+use crate::analysis::CostModel;
+use crate::codes::SchemeSpec;
+
+/// One observation window of a live deployment, as the controller hands it
+/// to [`decide`]. Counter fields are **window deltas** (since the last
+/// reconfiguration); `strikes` is the cumulative per-slot ledger of the
+/// serving generation.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetrySnapshot {
+    /// Row-wise partitions (fixed for the deployment's lifetime).
+    pub s: usize,
+    /// Column-wise partitions (fixed for the deployment's lifetime).
+    pub t: usize,
+    /// Colluding workers tolerated (fixed for the deployment's lifetime).
+    pub z: usize,
+    /// Byzantine adversary tolerance `a` the deployment currently runs at.
+    pub adversary_tolerance: usize,
+    /// The active scheme's AGE gap λ (`None`: a non-AGE family serves).
+    pub lambda: Option<u64>,
+    /// Workers the active generation provisions.
+    pub n_workers: u64,
+    /// Jobs completed in the window.
+    pub jobs: u64,
+    /// Per-job deadline expiries reported by workers in the window.
+    pub deadline_misses: u64,
+    /// Worker threads evicted (died and respawned) in the window.
+    pub evictions: u64,
+    /// Jobs that took the early-decode fast path in the window.
+    pub early_decodes: u64,
+    /// Garbled I-shares located by the Byzantine decoder in the window.
+    pub byzantine_detected: u64,
+    /// The strike ledger: `(worker_id, cumulative_strikes)`, slots with at
+    /// least one strike only (see `RuntimeHealthReport::worker_strikes`).
+    pub strikes: Vec<(usize, u64)>,
+    /// Phase-2 worker↔worker scalars exchanged in the window — the
+    /// *measured* ζ of eq. 34.
+    pub w2w_scalars: u64,
+    /// Mean end-to-end job latency over the window, nanoseconds.
+    pub mean_job_latency_ns: u64,
+}
+
+/// Tunable thresholds of the policy. [`PolicyConfig::default`] matches the
+/// decision-table suite and the `autoscale` CI lane.
+#[derive(Clone, Debug)]
+pub struct PolicyConfig {
+    /// Minimum completed jobs before the window is trusted at all.
+    pub min_window_jobs: u64,
+    /// Minimum predicted ζ gain (percent) before a communication-cost
+    /// reconfiguration fires — the anti-flapping band. The Example-1 curve
+    /// calibrates it: the λ0→λ2 move (18→17 workers) predicts ≈11.1 %,
+    /// so the 10 % default lets it through and 15 % suppresses it.
+    pub hysteresis_pct: f64,
+    /// Cumulative strikes at one worker slot before the policy prefers
+    /// eviction-by-reprovisioning over another retry.
+    pub strike_threshold: u64,
+    /// Ceiling on the adversary tolerance `a` the policy may recommend
+    /// (each step costs `2` extra quota shares).
+    pub max_adversary_tolerance: usize,
+    /// Deadline-miss + eviction rate (percent of window jobs) above which
+    /// the standby draft fires.
+    pub miss_budget_pct: f64,
+    /// Workers a standby draft tries to add on top of the current `N`.
+    pub standby_draft: u64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> PolicyConfig {
+        PolicyConfig {
+            min_window_jobs: 4,
+            hysteresis_pct: 10.0,
+            strike_threshold: 3,
+            max_adversary_tolerance: 2,
+            miss_budget_pct: 25.0,
+            standby_draft: 1,
+        }
+    }
+}
+
+/// Why a [`Decision::Hold`] held.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum HoldReason {
+    /// Fewer than `min_window_jobs` completed jobs in the window.
+    InsufficientData,
+    /// A cheaper configuration exists but its predicted gain is inside the
+    /// hysteresis band.
+    WithinHysteresis,
+    /// No rule found a better configuration than the current one.
+    AlreadyOptimal,
+    /// A reconfiguration landed recently; the controller is letting the
+    /// new generation accumulate a fresh window. (Issued by the
+    /// controller, never by [`decide`] itself.)
+    Cooldown,
+}
+
+/// Which rule produced a [`Recommendation`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Cause {
+    /// Rule 2: a repeat Byzantine offender crossed the strike threshold.
+    StrikeEviction,
+    /// Rule 3: straggler margins eroded past the miss budget.
+    StandbyDraft,
+    /// Rule 4: the measured configuration sits above the λ curve's
+    /// optimum by more than the hysteresis band.
+    CommunicationCost,
+}
+
+/// A concrete `(scheme, λ, N, a)` the policy wants the executor to swap
+/// to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Recommendation {
+    /// The scheme family + knobs to resolve (always pins λ explicitly so
+    /// the swap is reproducible).
+    pub spec: SchemeSpec,
+    /// Byzantine adversary tolerance to provision at.
+    pub adversary_tolerance: usize,
+    /// Workers the recommended configuration provisions (informational —
+    /// derived from the cost model, pinned so audit logs are self-contained).
+    pub n_workers: u64,
+    /// The rule that fired.
+    pub cause: Cause,
+    /// Predicted ζ saving of the move, percent (0 for margin-motivated
+    /// moves, which *spend* communication to buy robustness).
+    pub predicted_gain_pct: f64,
+}
+
+/// The policy's verdict for one window.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    /// Keep the current configuration.
+    Hold {
+        /// Why the policy held.
+        reason: HoldReason,
+    },
+    /// Swap to the recommended configuration.
+    Reconfigure(Recommendation),
+}
+
+/// The pure decision function — see the module docs for the rule order.
+/// `model` must be the [`CostModel`] of the snapshot's `(s, t, z)`.
+pub fn decide(snap: &TelemetrySnapshot, cfg: &PolicyConfig, model: &CostModel) -> Decision {
+    if snap.jobs < cfg.min_window_jobs {
+        return Decision::Hold {
+            reason: HoldReason::InsufficientData,
+        };
+    }
+
+    // Rule 2 — strike-driven eviction: stop retrying a repeat offender;
+    // buy error-correction margin instead. The swap replaces every worker
+    // thread, so the striker is evicted as a side effect of provisioning.
+    let repeat_offender = snap
+        .strikes
+        .iter()
+        .any(|&(_, strikes)| strikes >= cfg.strike_threshold);
+    if repeat_offender && snap.adversary_tolerance < cfg.max_adversary_tolerance {
+        let a = snap.adversary_tolerance + 1;
+        // The raised quota t²+z+2a must fit under some N(λ); widen λ as
+        // needed. If no gap reaches it, fall through — more margin is
+        // simply not purchasable at this (s, t, z).
+        if let Some((lambda, n)) = model.smallest_with_margin(model.quota(a)) {
+            return Decision::Reconfigure(Recommendation {
+                spec: SchemeSpec::Age {
+                    lambda: Some(lambda as usize),
+                },
+                adversary_tolerance: a,
+                n_workers: n,
+                cause: Cause::StrikeEviction,
+                predicted_gain_pct: 0.0,
+            });
+        }
+    }
+
+    // Rule 3 — standby draft: eroding straggler margins buy workers.
+    let misses = snap.deadline_misses + snap.evictions;
+    let miss_pct = misses as f64 * 100.0 / snap.jobs as f64;
+    if miss_pct > cfg.miss_budget_pct {
+        let target = snap.n_workers + cfg.standby_draft;
+        let draft = model
+            .smallest_with_margin(target)
+            .or_else(|| model.smallest_with_margin(model.max_workers()));
+        match draft {
+            Some((lambda, n)) if n > snap.n_workers => {
+                return Decision::Reconfigure(Recommendation {
+                    spec: SchemeSpec::Age {
+                        lambda: Some(lambda as usize),
+                    },
+                    adversary_tolerance: snap.adversary_tolerance,
+                    n_workers: n,
+                    cause: Cause::StandbyDraft,
+                    predicted_gain_pct: 0.0,
+                });
+            }
+            // Already at the top of the curve: hold — never *shrink* a
+            // deployment that is missing deadlines.
+            _ => {
+                return Decision::Hold {
+                    reason: HoldReason::AlreadyOptimal,
+                }
+            }
+        }
+    }
+
+    // Rule 4 — communication cost: only with measured Phase-2 evidence.
+    if snap.w2w_scalars > 0 {
+        let (lambda_star, n_star) = model.optimal_lambda();
+        if n_star < snap.n_workers {
+            let gain = CostModel::gain_pct(snap.n_workers, n_star);
+            if gain >= cfg.hysteresis_pct {
+                return Decision::Reconfigure(Recommendation {
+                    spec: SchemeSpec::Age {
+                        lambda: Some(lambda_star as usize),
+                    },
+                    adversary_tolerance: snap.adversary_tolerance,
+                    n_workers: n_star,
+                    cause: Cause::CommunicationCost,
+                    predicted_gain_pct: gain,
+                });
+            }
+            return Decision::Hold {
+                reason: HoldReason::WithinHysteresis,
+            };
+        }
+    }
+
+    Decision::Hold {
+        reason: HoldReason::AlreadyOptimal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A healthy Example-1 window at the given λ position on the curve.
+    fn snap(lambda: u64, n_workers: u64) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            s: 2,
+            t: 2,
+            z: 2,
+            adversary_tolerance: 0,
+            lambda: Some(lambda),
+            n_workers,
+            jobs: 8,
+            deadline_misses: 0,
+            evictions: 0,
+            early_decodes: 0,
+            byzantine_detected: 0,
+            strikes: Vec::new(),
+            w2w_scalars: 100_000,
+            mean_job_latency_ns: 1_000_000,
+        }
+    }
+
+    fn model() -> CostModel {
+        CostModel::new(2, 2, 2)
+    }
+
+    #[test]
+    fn short_window_is_insufficient_data() {
+        let mut s = snap(0, 18);
+        s.jobs = 3; // below the default min_window_jobs = 4
+        s.deadline_misses = 3; // even with screaming signals…
+        s.strikes = vec![(5, 99)];
+        assert_eq!(
+            decide(&s, &PolicyConfig::default(), &model()),
+            Decision::Hold {
+                reason: HoldReason::InsufficientData
+            }
+        );
+    }
+
+    #[test]
+    fn lambda_switch_point_clears_default_hysteresis() {
+        // λ=0 (N=18) → λ*=2 (N=17): predicted ζ gain 34/306 ≈ 11.1 %,
+        // above the 10 % default band.
+        let d = decide(&snap(0, 18), &PolicyConfig::default(), &model());
+        match d {
+            Decision::Reconfigure(rec) => {
+                assert_eq!(rec.spec, SchemeSpec::Age { lambda: Some(2) });
+                assert_eq!(rec.n_workers, 17);
+                assert_eq!(rec.cause, Cause::CommunicationCost);
+                assert!((rec.predicted_gain_pct - 100.0 * 34.0 / 306.0).abs() < 1e-9);
+            }
+            other => panic!("expected λ switch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hysteresis_band_suppresses_the_same_switch() {
+        // The identical snapshot holds when the band is widened to 15 %.
+        let cfg = PolicyConfig {
+            hysteresis_pct: 15.0,
+            ..PolicyConfig::default()
+        };
+        assert_eq!(
+            decide(&snap(0, 18), &cfg, &model()),
+            Decision::Hold {
+                reason: HoldReason::WithinHysteresis
+            }
+        );
+    }
+
+    #[test]
+    fn no_phase2_evidence_means_no_communication_move() {
+        // Same suboptimal position, but the window saw no worker↔worker
+        // exchange — nothing to save, so the policy holds.
+        let mut s = snap(0, 18);
+        s.w2w_scalars = 0;
+        assert_eq!(
+            decide(&s, &PolicyConfig::default(), &model()),
+            Decision::Hold {
+                reason: HoldReason::AlreadyOptimal
+            }
+        );
+    }
+
+    #[test]
+    fn optimum_position_holds() {
+        assert_eq!(
+            decide(&snap(2, 17), &PolicyConfig::default(), &model()),
+            Decision::Hold {
+                reason: HoldReason::AlreadyOptimal
+            }
+        );
+    }
+
+    #[test]
+    fn entangled_walks_onto_the_age_curve() {
+        // Entangled (N=19, no λ) → AGE λ*=2 (N=17): gain ≈ 20.5 %.
+        let mut s = snap(0, 19);
+        s.lambda = None;
+        let d = decide(&s, &PolicyConfig::default(), &model());
+        match d {
+            Decision::Reconfigure(rec) => {
+                assert_eq!(rec.spec, SchemeSpec::Age { lambda: Some(2) });
+                assert_eq!(rec.cause, Cause::CommunicationCost);
+                assert!((rec.predicted_gain_pct - 100.0 * 70.0 / 342.0).abs() < 1e-9);
+            }
+            other => panic!("expected scheme switch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eroded_margins_draft_a_standby_worker() {
+        // 3 misses over 8 jobs = 37.5 % > the 25 % budget: draft from 17
+        // up the curve — the cheapest N ≥ 18 is λ=0 (ties toward small λ).
+        let mut s = snap(2, 17);
+        s.deadline_misses = 2;
+        s.evictions = 1;
+        let d = decide(&s, &PolicyConfig::default(), &model());
+        match d {
+            Decision::Reconfigure(rec) => {
+                assert_eq!(rec.spec, SchemeSpec::Age { lambda: Some(0) });
+                assert_eq!(rec.n_workers, 18);
+                assert_eq!(rec.cause, Cause::StandbyDraft);
+            }
+            other => panic!("expected standby draft, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn draft_at_the_top_of_the_curve_holds() {
+        // Already at the max N=18: the policy must not shrink a struggling
+        // deployment, so it holds rather than dropping back to 17.
+        let mut s = snap(0, 18);
+        s.deadline_misses = 4;
+        assert_eq!(
+            decide(&s, &PolicyConfig::default(), &model()),
+            Decision::Hold {
+                reason: HoldReason::AlreadyOptimal
+            }
+        );
+    }
+
+    #[test]
+    fn strike_threshold_prefers_eviction_over_retry() {
+        // A slot with 3 cumulative strikes: raise a to 1 (quota 8) on the
+        // cheapest λ that covers it — λ=2, N=17 — even though the window
+        // is otherwise healthy.
+        let mut s = snap(2, 17);
+        s.strikes = vec![(4, 3)];
+        s.byzantine_detected = 1;
+        let d = decide(&s, &PolicyConfig::default(), &model());
+        match d {
+            Decision::Reconfigure(rec) => {
+                assert_eq!(rec.spec, SchemeSpec::Age { lambda: Some(2) });
+                assert_eq!(rec.adversary_tolerance, 1);
+                assert_eq!(rec.cause, Cause::StrikeEviction);
+            }
+            other => panic!("expected strike eviction, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn strikes_below_threshold_do_not_fire() {
+        let mut s = snap(2, 17);
+        s.strikes = vec![(4, 2), (9, 1)];
+        assert_eq!(
+            decide(&s, &PolicyConfig::default(), &model()),
+            Decision::Hold {
+                reason: HoldReason::AlreadyOptimal
+            }
+        );
+    }
+
+    #[test]
+    fn adversary_tolerance_ceiling_is_respected() {
+        // Already at max_adversary_tolerance: strikes cannot raise a
+        // further, so the rule falls through to the healthy-window hold.
+        let mut s = snap(2, 17);
+        s.adversary_tolerance = 2;
+        s.strikes = vec![(4, 10)];
+        s.w2w_scalars = 0;
+        assert_eq!(
+            decide(&s, &PolicyConfig::default(), &model()),
+            Decision::Hold {
+                reason: HoldReason::AlreadyOptimal
+            }
+        );
+    }
+
+    #[test]
+    fn decision_table_is_deterministic() {
+        // Same snapshot in, same decision out — the purity contract the
+        // controller and the seeded CI lane rely on.
+        let s = snap(0, 18);
+        let cfg = PolicyConfig::default();
+        let m = model();
+        let first = decide(&s, &cfg, &m);
+        for _ in 0..10 {
+            assert_eq!(decide(&s, &cfg, &m), first);
+        }
+    }
+}

@@ -95,11 +95,13 @@ pub fn peak_rss_bytes() -> u64 {
 
 /// Minimal JSON value for the machine-readable `BENCH_*.json` reports
 /// (the offline build vendors no serde; the schema is flat enough that a
-/// five-variant enum covers it).
+/// six-variant enum covers it).
 #[derive(Clone, Debug)]
 pub enum Json {
     /// A string value.
     Str(String),
+    /// A boolean value.
+    Bool(bool),
     /// An unsigned integer value.
     Int(u64),
     /// A floating-point value.
@@ -142,6 +144,7 @@ impl Json {
                 }
                 out.push('"');
             }
+            Json::Bool(v) => out.push_str(if *v { "true" } else { "false" }),
             Json::Int(v) => out.push_str(&v.to_string()),
             Json::Float(v) => {
                 if v.is_finite() {

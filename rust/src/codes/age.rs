@@ -199,6 +199,10 @@ impl CmpcScheme for AgeCmpc {
         debug_assert!(i < self.params.t && l < self.params.t);
         (self.params.s - 1) as u64 + (self.params.s * i) as u64 + self.theta() * l as u64
     }
+
+    fn gap_lambda(&self) -> Option<u64> {
+        Some(self.lambda)
+    }
 }
 
 #[cfg(test)]

@@ -164,6 +164,14 @@ pub trait CmpcScheme: Send + Sync {
         self.support_h()
     }
 
+    /// The AGE gap parameter `λ` this instance was built at, if the scheme
+    /// family has one. `None` for families without a gap knob (PolyDot,
+    /// Entangled) — the autoscaler uses this to read a live deployment's
+    /// position on the λ curve without downcasting.
+    fn gap_lambda(&self) -> Option<u64> {
+        None
+    }
+
     // ---- derived helpers (do not override) ----
 
     /// Sorted support of `C_A`.

@@ -51,6 +51,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::autoscale::{AutoscaleConfig, AutoscaleHealth, Autoscaler};
 use crate::codes::SchemeParams;
 use crate::coordinator::{CoordinatorConfig, SchemePolicy};
 use crate::error::{CmpcError, Result};
@@ -162,17 +163,42 @@ pub struct LocalEngine {
     deployments: Mutex<BTreeMap<(usize, usize, usize, usize), Arc<Deployment>>>,
     factory: Mutex<Option<Arc<BackendFactory>>>,
     pool: Arc<WorkerPool>,
+    /// When set, every deployment this engine provisions gets its own
+    /// [`Autoscaler`] sampling thread (`autoscale` manifest line /
+    /// `--autoscale` CLI flag).
+    autoscale: Option<AutoscaleConfig>,
+    scalers: Mutex<Vec<Autoscaler>>,
+    /// Final audit snapshots, captured at [`ExecuteEngine::shutdown`]
+    /// just before the controllers are dropped — so post-drain reporting
+    /// (the `cmpc gateway` summary lines) still sees the full trail.
+    final_reports: Mutex<Vec<AutoscaleHealth>>,
 }
 
 impl LocalEngine {
     /// Build an engine with an empty deployment cache.
     pub fn new(config: CoordinatorConfig) -> LocalEngine {
+        LocalEngine::with_autoscale(config, None)
+    }
+
+    /// [`LocalEngine::new`], plus adaptive provisioning: each deployment
+    /// the engine caches is attached to its own [`Autoscaler`] controller
+    /// thread, which retunes `(scheme, λ, N, a)` from live telemetry via
+    /// blue/green swap. Controllers stop at
+    /// [`ExecuteEngine::shutdown`] (the gateway dispatcher calls it after
+    /// draining) or when the engine drops.
+    pub fn with_autoscale(
+        config: CoordinatorConfig,
+        autoscale: Option<AutoscaleConfig>,
+    ) -> LocalEngine {
         let pool = WorkerPool::sized_or_global(config.threads);
         LocalEngine {
             config,
             deployments: Mutex::new(BTreeMap::new()),
             factory: Mutex::new(None),
             pool,
+            autoscale,
+            scalers: Mutex::new(Vec::new()),
+            final_reports: Mutex::new(Vec::new()),
         }
     }
 
@@ -180,6 +206,19 @@ impl LocalEngine {
     /// — how `tests/gateway.rs` proves compatible requests shared one.
     pub fn provisioned(&self) -> usize {
         self.deployments.lock().unwrap().len()
+    }
+
+    /// Controller health for every attached autoscaler (one per cached
+    /// deployment when autoscaling is on; empty otherwise) — counters,
+    /// audit trail, and the active generation's runtime report. After
+    /// [`ExecuteEngine::shutdown`] this returns the final snapshots taken
+    /// as the controllers stopped.
+    pub fn autoscale_reports(&self) -> Vec<AutoscaleHealth> {
+        let live = self.scalers.lock().unwrap();
+        if live.is_empty() {
+            return self.final_reports.lock().unwrap().clone();
+        }
+        live.iter().map(|s| s.health()).collect()
     }
 
     /// Run a [`crate::mpc::pipeline::Pipeline`] on this engine's cached
@@ -243,9 +282,22 @@ impl LocalEngine {
             self.pool.clone(),
         )?);
         // Double-provision race: first insert wins, the loser's deployment
-        // drops (admissible — provisioning is idempotent and rare).
+        // drops (admissible — provisioning is idempotent and rare). Only
+        // the winner gets a controller, so scalers map 1:1 to cached
+        // deployments.
         let mut cache = self.deployments.lock().unwrap();
-        Ok(cache.entry(sig).or_insert(dep).clone())
+        if let Some(existing) = cache.get(&sig) {
+            return Ok(existing.clone());
+        }
+        cache.insert(sig, dep.clone());
+        drop(cache);
+        if let Some(cfg) = &self.autoscale {
+            self.scalers
+                .lock()
+                .unwrap()
+                .push(Autoscaler::spawn(dep.clone(), cfg.clone()));
+        }
+        Ok(dep)
     }
 }
 
@@ -286,6 +338,16 @@ impl ExecuteEngine for LocalEngine {
                 y: out.y,
             })
         })
+    }
+
+    fn shutdown(&self) {
+        // Dropping a controller stops and joins its sampling thread; the
+        // deployments themselves stay cached (in-flight responses may
+        // still hold them). Final snapshots are kept for post-drain
+        // reporting.
+        let mut scalers = self.scalers.lock().unwrap();
+        *self.final_reports.lock().unwrap() = scalers.iter().map(|s| s.health()).collect();
+        scalers.clear();
     }
 }
 

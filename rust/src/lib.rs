@@ -185,6 +185,27 @@
 //! `truncate(Xᵀ·W₀)ᵀ·W₁`). Everything here is additive: single-matmul
 //! jobs, wire frames, and every pre-0.10 API are unchanged.
 //!
+//! ## Adaptive provisioning (v0.11)
+//!
+//! The gap λ is AGE's whole advantage — but a λ chosen at provision time
+//! is a bet about conditions the deployment only discovers while
+//! serving. [`autoscale`] closes the loop: a pure **policy engine**
+//! ([`autoscale::decide`]) consumes a telemetry window (Phase-2 traffic,
+//! deadline misses, evictions, the Byzantine **strike ledger** of
+//! [`metrics::RuntimeHealthReport::worker_strikes`]) plus the analytical
+//! λ ↦ N curve ([`analysis::CostModel`], the same curve the paper
+//! figures plot) and recommends `(scheme, λ, N, a)`;
+//! [`Deployment::reconfigure`] applies it as a **zero-downtime
+//! blue/green swap** (in-flight jobs finish on the generation they
+//! started on — no job is dropped or moved, outputs stay byte-identical;
+//! `tests/autoscale.rs` pins both); and the [`autoscale::Autoscaler`]
+//! controller samples [`Deployment::health`] on an interval — with
+//! hysteresis and post-swap cooldown so a borderline link cannot thrash
+//! — recording every decision in a typed audit log surfaced through
+//! [`autoscale::Autoscaler::health`]. An `autoscale` manifest line (or
+//! `cmpc topology --autoscale`) attaches a controller to every
+//! deployment the gateway's [`gateway::LocalEngine`] provisions.
+//!
 //! ## Where everything lives
 //!
 //! `docs/ARCHITECTURE.md` is the layer map — `ff → codes → mpc →
@@ -199,6 +220,7 @@
 #![warn(missing_docs)]
 
 pub mod analysis;
+pub mod autoscale;
 pub mod benchkit;
 pub mod codes;
 pub mod coordinator;
@@ -213,6 +235,8 @@ pub mod runtime;
 pub mod transport;
 pub mod util;
 
+pub use analysis::CostModel;
+pub use autoscale::{AutoscaleConfig, Autoscaler};
 pub use codes::SchemeSpec;
 pub use error::{CmpcError, Result};
 pub use ff::P;

@@ -35,7 +35,7 @@ use cmpc::matrix::FpMat;
 use cmpc::mpc::chaos::{ChaosPlan, FaultAction, FaultRule, PayloadClass};
 use cmpc::mpc::deployment::Deployment;
 use cmpc::mpc::protocol::ProtocolConfig;
-use cmpc::runtime::manifest::TopologyManifest;
+use cmpc::runtime::manifest::{AutoscaleSpec, TopologyManifest};
 use cmpc::runtime::BackendChoice;
 use cmpc::transport::node::{self, NodeRole};
 use cmpc::util::cli::Args;
@@ -64,7 +64,8 @@ fn main() {
                  serve    --jobs J --m M --s S --t T --z Z [--backend ...]\n\
                  topology --scheme age|polydot|entangled --s S --t T --z Z --m M [--seed N]\n\
                  \x20        [--jobs J] [--host H] --base-port P [--early-decode]\n\
-                 \x20        [--a A] [--pipeline SPEC] [--gateway-token TOK] --out FILE\n\
+                 \x20        [--a A] [--pipeline SPEC] [--gateway-token TOK]\n\
+                 \x20        [--gateway H:P] [--autoscale [--autoscale-interval-ms MS]] --out FILE\n\
                  \x20        (prints the worker count N; manifest lists every node's host:port)\n\
                  node     --role worker|master|source-a|source-b|reference --manifest FILE\n\
                  \x20        [--index I] [--garble-ishare]   (worker role only)\n\
@@ -261,6 +262,19 @@ fn cmd_topology(args: &Args) -> Result<()> {
                 .map_err(|_| CmpcError::InvalidParams("bad --gateway-token".to_string()))?,
         );
     }
+    if let Some(addr) = args.get("gateway") {
+        manifest.gateway = Some(addr.to_string());
+    }
+    if args.flag("autoscale") {
+        let defaults = cmpc::autoscale::AutoscaleConfig::default();
+        manifest.autoscale = Some(AutoscaleSpec {
+            interval_ms: args.get_parse("autoscale-interval-ms", 250u64),
+            hysteresis_pct: defaults.policy.hysteresis_pct,
+            strike_threshold: defaults.policy.strike_threshold,
+            cooldown_ticks: defaults.cooldown_ticks,
+        });
+        manifest.validate()?; // autoscale needs a gateway line — fail before writing
+    }
     if let Some(ms) = args.get("recv-timeout-ms") {
         manifest.recv_timeout = std::time::Duration::from_millis(
             ms.parse()
@@ -391,13 +405,19 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         );
     }
     let engine_kind = args.get("engine").unwrap_or("cluster");
+    let mut local: Option<Arc<LocalEngine>> = None;
     let engine: Arc<dyn ExecuteEngine> = match engine_kind {
-        "local" => Arc::new(LocalEngine::new(
-            CoordinatorConfig::builder()
-                .backend(parse_backend(args))
-                .verify(manifest.verify)
-                .build(),
-        )),
+        "local" => {
+            let eng = Arc::new(LocalEngine::with_autoscale(
+                CoordinatorConfig::builder()
+                    .backend(parse_backend(args))
+                    .verify(manifest.verify)
+                    .build(),
+                manifest.autoscale.map(|spec| spec.to_config()),
+            ));
+            local = Some(eng.clone());
+            eng
+        }
         "cluster" => {
             let engine = RemoteEngine::connect(manifest.clone())?;
             config.shape_lock = Some(engine.shape());
@@ -438,6 +458,16 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         stats.p50_latency_us(),
         stats.p99_latency_us()
     );
+    if let Some(eng) = local {
+        // Controllers already stopped (the dispatcher's engine shutdown);
+        // these are their final audit snapshots.
+        for (i, h) in eng.autoscale_reports().iter().enumerate() {
+            println!(
+                "autoscale[{i}]: ticks={} reconfigurations={} holds={} failed={}",
+                h.ticks, h.reconfigurations, h.holds, h.failed
+            );
+        }
+    }
     Ok(())
 }
 

@@ -236,6 +236,7 @@ impl RuntimeCounters {
             phase3_decodes: self.phase3_decodes.load(Ordering::Relaxed),
             pipeline_stages: self.pipeline_stages.load(Ordering::Relaxed),
             blamed_workers: Vec::new(),
+            worker_strikes: Vec::new(),
         }
     }
 }
@@ -268,6 +269,15 @@ pub struct RuntimeHealthReport {
     /// Worker ids ever blamed by the Byzantine decoder, in blame order
     /// (duplicates possible if a respawned slot misbehaves again).
     pub blamed_workers: Vec<usize>,
+    /// The strike ledger: `(worker_id, cumulative_strikes)` for every
+    /// worker slot blamed at least once over the runtime's lifetime,
+    /// ascending by id. Strikes **survive respawn** — the ledger is keyed
+    /// by slot, so a flaky link that re-garbles the same index after every
+    /// respawn accumulates strikes instead of resetting, which is how the
+    /// autoscaler distinguishes persistent malice (or a bad NIC) from a
+    /// one-off fault. Empty when no worker was ever blamed, so a healthy
+    /// report still equals `RuntimeHealthReport::default()`.
+    pub worker_strikes: Vec<(usize, u64)>,
 }
 
 /// Wall-clock phase breakdown of one protocol run.
@@ -551,6 +561,7 @@ mod tests {
         let snap = c.snapshot();
         assert_eq!(snap.byzantine_detected, 3);
         assert!(snap.blamed_workers.is_empty(), "bare snapshot has no blame log");
+        assert!(snap.worker_strikes.is_empty(), "bare snapshot has no strike ledger");
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Session-based serving: provision a worker deployment once, stream many
-//! jobs through it.
+//! jobs through it — and **reconfigure it live** without dropping a job.
 //!
 //! The paper's Algorithm 3 splits naturally into a *provisioning* phase
 //! (Phase 0 scheme selection, α assignment, the O(N³) generalized-Vandermonde
@@ -50,18 +50,44 @@
 //! the deployment shuts the runtime down cleanly and propagates any
 //! unreaped worker panic.
 //!
+//! # Blue/green reconfiguration
+//!
+//! A deployment's `(scheme, λ, adversary_tolerance)` is no longer frozen at
+//! provision time. [`Deployment::reconfigure`] provisions a **green**
+//! generation — new scheme resolution, new [`Setup`] solve, new
+//! [`WorkerRuntime`] — *beside* the live **blue** one, then atomically cuts
+//! new submissions over to green. In-flight jobs keep the blue generation
+//! alive through the `Arc` they cloned at submission and finish on the
+//! runtime they started on, so the swap drops **zero jobs**; blue is torn
+//! down by [`Deployment::drain_retired`] once its last job returns. The
+//! per-job seed schedule lives on the *deployment* (one atomic counter, see
+//! [`derive_job_seed`]), not on a generation — so a job stream spanning a
+//! swap draws exactly the seeds it would have drawn without one, and
+//! outputs stay byte-identical. Every swap appends a [`SwapRecord`] to the
+//! audit trail ([`Deployment::swap_history`]).
+//!
+//! The `(s, t, z)` triple — the data layout clients encoded against — is
+//! fixed for the deployment's lifetime; reconfiguration retunes the gap λ,
+//! the scheme family, and the Byzantine tolerance `a` around it. That is
+//! exactly the paper's λ-tradeoff surface (eq. 30 + Corollaries 10–12),
+//! and walking it from live telemetry is the job of
+//! [`crate::autoscale::Autoscaler`].
+//!
 //! [`WorkerRuntime::reap`]: crate::mpc::runtime::WorkerRuntime::reap
 //!
 //! [`CmpcError::ShapeMismatch`]: crate::error::CmpcError::ShapeMismatch
 //! [`CmpcError::Fabric`]: crate::error::CmpcError::Fabric
 //! [`WorkerRuntime`]: crate::mpc::runtime::WorkerRuntime
 
+use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
 
 use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
 use crate::error::Result;
 use crate::matrix::FpMat;
+use crate::metrics::TrafficReport;
 use crate::mpc::fused;
 use crate::mpc::pipeline::{self, Pipeline, PipelineOutput};
 use crate::mpc::protocol::{self, ExecEnv, ProtocolConfig, ProtocolOutput, Setup};
@@ -78,16 +104,88 @@ pub fn derive_job_seed(base: u64, k: u64) -> u64 {
     base.wrapping_add(k.wrapping_mul(0x9E3779B97F4A7C15))
 }
 
-/// A provisioned worker deployment: resolved scheme + cached [`Setup`] +
-/// shared backend + worker pool + per-pool-worker scratch **+ the live
-/// worker runtime**, reusable across any number of (possibly concurrent)
-/// jobs with the same `(scheme, s, t, z)` signature.
-pub struct Deployment {
-    /// Declared first so Drop joins the worker threads before the backend
-    /// factory (whose handles the workers hold) is torn down.
+/// Retained [`SwapRecord`]s (the counters stay exact; only per-event
+/// detail rotates).
+const SWAP_LOG_CAP: usize = 256;
+
+/// One provisioned serving generation: the scheme resolution, the cached
+/// setup, the live worker runtime, and the config they were built under.
+/// Jobs clone the generation `Arc` at submission and run entirely against
+/// it, so a blue/green swap never moves a job between runtimes.
+struct Generation {
+    /// Declared first so Drop joins the worker threads before the rest of
+    /// the generation (whose state the workers borrow) is torn down.
     runtime: WorkerRuntime,
     scheme: Arc<dyn CmpcScheme>,
     setup: Arc<Setup>,
+    config: ProtocolConfig,
+}
+
+/// One blue → green reconfiguration, as recorded in the deployment's
+/// audit trail ([`Deployment::swap_history`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SwapRecord {
+    /// 1-based generation number the swap produced (generation 0 is the
+    /// original provisioning).
+    pub generation: u64,
+    /// Scheme name of the retired blue generation.
+    pub from: String,
+    /// Scheme name of the new green generation.
+    pub to: String,
+    /// Worker count of the retired blue generation.
+    pub from_workers: usize,
+    /// Worker count of the new green generation.
+    pub to_workers: usize,
+    /// Byzantine adversary tolerance of the new green generation.
+    pub adversary_tolerance: usize,
+}
+
+/// Borrow-like handle on the active generation's [`WorkerRuntime`]
+/// (derefs to it). Holding the handle keeps that generation alive even
+/// across a concurrent [`Deployment::reconfigure`], exactly like an
+/// in-flight job does — so reads through a stale handle are consistent,
+/// never dangling.
+pub struct RuntimeHandle(Arc<Generation>);
+
+impl Deref for RuntimeHandle {
+    type Target = WorkerRuntime;
+
+    fn deref(&self) -> &WorkerRuntime {
+        &self.0.runtime
+    }
+}
+
+/// Live traffic/latency totals a deployment accumulates across every job
+/// it serves — the *measured* side of the autoscaler's cost tradeoff
+/// (deployment-lifetime, so they survive blue/green swaps, unlike the
+/// per-generation [`Deployment::health`] counters).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct DeploymentTelemetry {
+    /// Jobs that returned successfully (fused batches count each job).
+    pub jobs_completed: u64,
+    /// Phase-2 worker↔worker scalars exchanged — the measured ζ of eq. 34,
+    /// summed over all completed jobs.
+    pub w2w_scalars: u64,
+    /// Wall-clock nanoseconds spent inside successful `execute*` calls,
+    /// summed (divide by `jobs_completed` for the mean job latency).
+    pub latency_ns_total: u64,
+}
+
+/// A provisioned worker deployment: resolved scheme + cached [`Setup`] +
+/// shared backend + worker pool + per-pool-worker scratch **+ the live
+/// worker runtime**, reusable across any number of (possibly concurrent)
+/// jobs with the same `(scheme, s, t, z)` signature — and live-swappable
+/// to a different `(scheme, λ, a)` via [`Deployment::reconfigure`].
+pub struct Deployment {
+    /// Declared before `factory` so generations (and their worker threads)
+    /// drop before the backend factory whose handles the workers hold.
+    active: RwLock<Arc<Generation>>,
+    /// Blue generations retired by a swap but possibly still serving
+    /// in-flight jobs; swept by [`Deployment::drain_retired`].
+    retired: Mutex<Vec<Arc<Generation>>>,
+    /// Serializes reconfigurations (concurrent swaps would race the
+    /// blue→retired hand-off); job submission never takes this lock.
+    swap_lock: Mutex<()>,
     factory: Arc<BackendFactory>,
     /// Pool driving the parallel sections of every job (Phase-1 encoding,
     /// Phase-3 reconstruction, verify) — shared process-wide when
@@ -97,10 +195,19 @@ pub struct Deployment {
     /// every subsequent one (the zero-steady-state-allocation contract of
     /// the compute kernels).
     scratch: Arc<ScratchPool>,
-    config: ProtocolConfig,
     /// Jobs attempted through this deployment (successful or not); also
     /// perturbs the per-job secret seed so repeated jobs draw fresh masks.
+    /// Deployment-level, **not** per generation: the seed schedule must
+    /// not restart at a blue/green swap.
     jobs_executed: AtomicU64,
+    /// Completed reconfigurations (the current generation number).
+    swaps: AtomicU64,
+    /// Audit trail of the last `SWAP_LOG_CAP` swaps, oldest first.
+    swap_log: Mutex<Vec<SwapRecord>>,
+    /// Measured telemetry totals (see [`DeploymentTelemetry`]).
+    jobs_completed: AtomicU64,
+    w2w_scalars: AtomicU64,
+    latency_ns: AtomicU64,
 }
 
 impl Deployment {
@@ -157,19 +264,133 @@ impl Deployment {
         factory: Arc<BackendFactory>,
         pool: Arc<WorkerPool>,
     ) -> Result<Deployment> {
-        let setup = Arc::new(protocol::prepare_setup(scheme.as_ref())?);
+        let generation = Deployment::provision_generation(scheme, config, &factory)?;
         let scratch = Arc::new(ScratchPool::for_pool(&pool));
-        let runtime = WorkerRuntime::provision(&setup, scheme.params(), &config, &factory)?;
         Ok(Deployment {
-            runtime,
-            scheme,
-            setup,
+            active: RwLock::new(Arc::new(generation)),
+            retired: Mutex::new(Vec::new()),
+            swap_lock: Mutex::new(()),
             factory,
             pool,
             scratch,
-            config,
             jobs_executed: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            swap_log: Mutex::new(Vec::new()),
+            jobs_completed: AtomicU64::new(0),
+            w2w_scalars: AtomicU64::new(0),
+            latency_ns: AtomicU64::new(0),
         })
+    }
+
+    /// Solve the setup and spawn a runtime for one generation.
+    fn provision_generation(
+        scheme: Arc<dyn CmpcScheme>,
+        config: ProtocolConfig,
+        factory: &Arc<BackendFactory>,
+    ) -> Result<Generation> {
+        let setup = Arc::new(protocol::prepare_setup(scheme.as_ref())?);
+        let runtime = WorkerRuntime::provision(&setup, scheme.params(), &config, factory)?;
+        Ok(Generation {
+            runtime,
+            scheme,
+            setup,
+            config,
+        })
+    }
+
+    /// The active generation, cloned — the handle every job (and every
+    /// read-side accessor) runs against. Cheap: one `RwLock` read + one
+    /// `Arc` bump.
+    fn active(&self) -> Arc<Generation> {
+        self.active.read().unwrap().clone()
+    }
+
+    /// **Blue/green swap**: provision a green generation for `spec` at
+    /// Byzantine tolerance `adversary_tolerance` — same `(s, t, z)` triple,
+    /// new scheme resolution, new setup solve, new worker runtime — then
+    /// atomically cut new submissions over to it. In-flight jobs finish on
+    /// the blue generation they started on (their cloned `Arc` keeps it
+    /// alive), so **no job is dropped or moved**; blue's threads are joined
+    /// by [`Deployment::drain_retired`] once its last job returns. The
+    /// per-job seed schedule is deployment-level, so outputs for any job
+    /// index are byte-identical whether or not a swap happened before it —
+    /// *provided the scheme is unchanged*; with a changed scheme the
+    /// outputs are still correct (`Y = AᵀB` verifies), just served by a
+    /// different construction.
+    ///
+    /// Provisioning failure (bad spec, quota exceeding every `N`) leaves
+    /// the blue generation serving untouched — the swap is all-or-nothing.
+    ///
+    /// Returns the [`SwapRecord`] appended to [`Deployment::swap_history`].
+    pub fn reconfigure(
+        &self,
+        spec: SchemeSpec,
+        adversary_tolerance: usize,
+    ) -> Result<SwapRecord> {
+        let _guard = self.swap_lock.lock().unwrap();
+        let blue = self.active();
+        let mut params = blue.scheme.params();
+        params.adversary_tolerance = adversary_tolerance;
+        let scheme = spec.resolve(params)?;
+        let config = ProtocolConfig {
+            adversary_tolerance,
+            ..blue.config.clone()
+        };
+        let green = Arc::new(Deployment::provision_generation(
+            scheme,
+            config,
+            &self.factory,
+        )?);
+        let record = SwapRecord {
+            generation: self.swaps.fetch_add(1, Ordering::Relaxed) + 1,
+            from: blue.scheme.name(),
+            to: green.scheme.name(),
+            from_workers: blue.setup.n_workers,
+            to_workers: green.setup.n_workers,
+            adversary_tolerance,
+        };
+        *self.active.write().unwrap() = green;
+        self.retired.lock().unwrap().push(blue);
+        let mut log = self.swap_log.lock().unwrap();
+        if log.len() == SWAP_LOG_CAP {
+            log.remove(0);
+        }
+        log.push(record.clone());
+        drop(log);
+        // Opportunistic sweep: a blue with no in-flight jobs is torn down
+        // right here instead of lingering until the next drain call.
+        self.drain_retired();
+        Ok(record)
+    }
+
+    /// Sweep retired blue generations: every one whose last in-flight job
+    /// has returned is dropped (joining its worker threads); the rest keep
+    /// draining. Returns how many are still draining. Called automatically
+    /// at each [`Deployment::reconfigure`] and by the autoscaler tick;
+    /// idle deployments converge to zero retired generations.
+    pub fn drain_retired(&self) -> usize {
+        let mut retired = self.retired.lock().unwrap();
+        // The vector holds one strong ref per generation; any extra ref is
+        // an in-flight job (or a RuntimeHandle) still using it.
+        retired.retain(|g| Arc::strong_count(g) > 1);
+        retired.len()
+    }
+
+    /// Retired blue generations still draining in-flight jobs.
+    pub fn retired_generations(&self) -> usize {
+        self.retired.lock().unwrap().len()
+    }
+
+    /// Current generation number: 0 until the first
+    /// [`Deployment::reconfigure`], then the count of completed swaps.
+    pub fn generation(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// The blue/green audit trail, oldest first (last `256` swaps;
+    /// [`Deployment::generation`] keeps the exact lifetime count).
+    pub fn swap_history(&self) -> Vec<SwapRecord> {
+        self.swap_log.lock().unwrap().clone()
     }
 
     /// Run one `Y = AᵀB` job through the provisioned runtime. Per-job secret
@@ -180,7 +401,8 @@ impl Deployment {
         // One fetch_add both claims a unique seed slot and counts the job —
         // a separate load would let two racing executes draw the same masks.
         let k = self.jobs_executed.fetch_add(1, Ordering::Relaxed);
-        self.run(a, b, derive_job_seed(self.config.seed, k))
+        let gen = self.active();
+        self.run(&gen, a, b, derive_job_seed(gen.config.seed, k))
     }
 
     /// [`Deployment::execute`] with an explicit secret seed (reproducible
@@ -188,7 +410,7 @@ impl Deployment {
     /// Callers own mask-reuse avoidance across their seeds.
     pub fn execute_seeded(&self, a: &FpMat, b: &FpMat, seed: u64) -> Result<ProtocolOutput> {
         self.jobs_executed.fetch_add(1, Ordering::Relaxed);
-        self.run(a, b, seed)
+        self.run(&self.active(), a, b, seed)
     }
 
     /// Run `jobs` (same shape) as **one fused batch** — the small-job fast
@@ -211,10 +433,11 @@ impl Deployment {
         // One fetch_add claims the whole seed range — concurrent batches
         // and singleton executes can never draw overlapping mask streams.
         let base = self.jobs_executed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        let gen = self.active();
         let seeds: Vec<u64> = (0..jobs.len() as u64)
-            .map(|i| derive_job_seed(self.config.seed, base + i))
+            .map(|i| derive_job_seed(gen.config.seed, base + i))
             .collect();
-        self.fused_run(jobs, &seeds)
+        self.fused_run(&gen, jobs, &seeds)
     }
 
     /// [`Deployment::execute_fused`] with explicit per-job seeds (the
@@ -226,12 +449,17 @@ impl Deployment {
         seeds: &[u64],
     ) -> Result<Vec<ProtocolOutput>> {
         self.jobs_executed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-        self.fused_run(jobs, seeds)
+        self.fused_run(&self.active(), jobs, seeds)
     }
 
     /// Dispatch a seeded batch: fused when legal, else job-by-job through
     /// the fabric path (which honors chaos/shaping/delays exactly).
-    fn fused_run(&self, jobs: &[(&FpMat, &FpMat)], seeds: &[u64]) -> Result<Vec<ProtocolOutput>> {
+    fn fused_run(
+        &self,
+        gen: &Arc<Generation>,
+        jobs: &[(&FpMat, &FpMat)],
+        seeds: &[u64],
+    ) -> Result<Vec<ProtocolOutput>> {
         if seeds.len() != jobs.len() {
             return Err(crate::error::CmpcError::InvalidParams(format!(
                 "fused batch has {} jobs but {} seeds",
@@ -242,11 +470,11 @@ impl Deployment {
         let same_shape = jobs
             .windows(2)
             .all(|w| w[0].0.rows == w[1].0.rows && w[0].0.cols == w[1].0.cols);
-        if jobs.len() < 2 || !same_shape || !fused::config_fusible(&self.config) {
+        if jobs.len() < 2 || !same_shape || !fused::config_fusible(&gen.config) {
             return jobs
                 .iter()
                 .zip(seeds)
-                .map(|(&(a, b), &seed)| self.run(a, b, seed))
+                .map(|(&(a, b), &seed)| self.run(gen, a, b, seed))
                 .collect();
         }
         // The genuinely fused path bypasses the fabric, so claim its job
@@ -254,20 +482,25 @@ impl Deployment {
         // both paths, and the batch's single amortized reconstruction is
         // recorded as one Phase-3 decode (the counter contract in
         // `metrics`).
-        self.runtime.claim_job_ids(jobs.len() as u64);
+        gen.runtime.claim_job_ids(jobs.len() as u64);
+        let started = Instant::now();
         let outs = fused::run_fused_batch(
-            self.scheme.as_ref(),
-            &self.setup,
+            gen.scheme.as_ref(),
+            &gen.setup,
             jobs,
             seeds,
-            &self.config,
+            &gen.config,
             &ExecEnv {
                 factory: &self.factory,
                 pool: &self.pool,
                 scratch: &self.scratch,
             },
         )?;
-        self.runtime.note_decode();
+        gen.runtime.note_decode();
+        let elapsed = started.elapsed().as_nanos() as u64;
+        for out in &outs {
+            self.note_completed(elapsed / outs.len().max(1) as u64, &out.traffic);
+        }
         Ok(outs)
     }
 
@@ -284,7 +517,8 @@ impl Deployment {
         weights: &[&FpMat],
     ) -> Result<PipelineOutput> {
         let k = self.jobs_executed.fetch_add(1, Ordering::Relaxed);
-        self.run_pipeline(pipe, x, weights, derive_job_seed(self.config.seed, k))
+        let gen = self.active();
+        self.run_pipeline(&gen, pipe, x, weights, derive_job_seed(gen.config.seed, k))
     }
 
     /// [`Deployment::execute_pipeline`] with an explicit pipeline seed —
@@ -298,11 +532,12 @@ impl Deployment {
         seed: u64,
     ) -> Result<PipelineOutput> {
         self.jobs_executed.fetch_add(1, Ordering::Relaxed);
-        self.run_pipeline(pipe, x, weights, seed)
+        self.run_pipeline(&self.active(), pipe, x, weights, seed)
     }
 
     fn run_pipeline(
         &self,
+        gen: &Arc<Generation>,
         pipe: &Pipeline,
         x: &FpMat,
         weights: &[&FpMat],
@@ -310,11 +545,12 @@ impl Deployment {
     ) -> Result<PipelineOutput> {
         let cfg = ProtocolConfig {
             seed,
-            ..self.config.clone()
+            ..gen.config.clone()
         };
-        pipeline::run_pipeline(
-            self.scheme.as_ref(),
-            &self.setup,
+        let started = Instant::now();
+        let out = pipeline::run_pipeline(
+            gen.scheme.as_ref(),
+            &gen.setup,
             pipe,
             x,
             weights,
@@ -324,18 +560,27 @@ impl Deployment {
                 pool: &self.pool,
                 scratch: &self.scratch,
             },
-            &self.runtime,
-        )
+            &gen.runtime,
+        )?;
+        self.note_completed(started.elapsed().as_nanos() as u64, &out.traffic);
+        Ok(out)
     }
 
-    fn run(&self, a: &FpMat, b: &FpMat, seed: u64) -> Result<ProtocolOutput> {
+    fn run(
+        &self,
+        gen: &Arc<Generation>,
+        a: &FpMat,
+        b: &FpMat,
+        seed: u64,
+    ) -> Result<ProtocolOutput> {
         let cfg = ProtocolConfig {
             seed,
-            ..self.config.clone()
+            ..gen.config.clone()
         };
-        protocol::run_job(
-            self.scheme.as_ref(),
-            &self.setup,
+        let started = Instant::now();
+        let out = protocol::run_job(
+            gen.scheme.as_ref(),
+            &gen.setup,
             a,
             b,
             &cfg,
@@ -344,13 +589,42 @@ impl Deployment {
                 pool: &self.pool,
                 scratch: &self.scratch,
             },
-            &self.runtime,
-        )
+            &gen.runtime,
+        )?;
+        self.note_completed(started.elapsed().as_nanos() as u64, &out.traffic);
+        Ok(out)
     }
 
-    /// The resolved scheme this deployment runs.
-    pub fn scheme(&self) -> &dyn CmpcScheme {
-        self.scheme.as_ref()
+    /// Fold one successful job into the deployment-lifetime telemetry.
+    fn note_completed(&self, elapsed_ns: u64, traffic: &TrafficReport) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.w2w_scalars
+            .fetch_add(traffic.worker_to_worker, Ordering::Relaxed);
+        self.latency_ns.fetch_add(elapsed_ns, Ordering::Relaxed);
+    }
+
+    /// Deployment-lifetime measured telemetry: completed jobs, Phase-2
+    /// worker↔worker scalars (the measured ζ), and total in-call latency.
+    /// Unlike [`Deployment::health`] these totals survive blue/green swaps
+    /// — they belong to the deployment, not a generation.
+    pub fn telemetry(&self) -> DeploymentTelemetry {
+        DeploymentTelemetry {
+            jobs_completed: self.jobs_completed.load(Ordering::Relaxed),
+            w2w_scalars: self.w2w_scalars.load(Ordering::Relaxed),
+            latency_ns_total: self.latency_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The resolved scheme the **active generation** runs (shared handle —
+    /// a concurrent swap retires the generation, not the returned `Arc`).
+    pub fn scheme(&self) -> Arc<dyn CmpcScheme> {
+        self.active().scheme.clone()
+    }
+
+    /// The active scheme's AGE gap λ, if it has one (`None` for PolyDot /
+    /// Entangled) — the autoscaler's position on the λ curve.
+    pub fn gap_lambda(&self) -> Option<u64> {
+        self.active().scheme.gap_lambda()
     }
 
     /// The worker pool driving this deployment's parallel sections.
@@ -358,38 +632,45 @@ impl Deployment {
         &self.pool
     }
 
-    /// The live worker runtime (persistent threads + multiplexed fabric,
-    /// including the eviction/respawn reaper and the chaos hooks).
-    pub fn runtime(&self) -> &WorkerRuntime {
-        &self.runtime
+    /// Handle on the **active generation's** worker runtime (persistent
+    /// threads + multiplexed fabric, including the eviction/respawn reaper
+    /// and the chaos hooks). Derefs to [`WorkerRuntime`]; holding it keeps
+    /// that generation alive across a concurrent swap.
+    pub fn runtime(&self) -> RuntimeHandle {
+        RuntimeHandle(self.active())
     }
 
-    /// Snapshot of the runtime's fault-tolerance counters — evictions,
-    /// respawns, early decodes, per-job deadline misses, driver aborts,
-    /// Byzantine detections — plus `blamed_workers`: every worker id the
-    /// Byzantine decoder located serving a garbled I-share.
+    /// Snapshot of the **active generation's** fault-tolerance counters —
+    /// evictions, respawns, early decodes, per-job deadline misses, driver
+    /// aborts, Byzantine detections — plus `blamed_workers` and the
+    /// per-slot strike ledger. A blue/green swap starts a fresh generation
+    /// (and thus fresh counters); the autoscaler re-baselines its decision
+    /// window at every swap for exactly this reason.
     pub fn health(&self) -> crate::metrics::RuntimeHealthReport {
-        self.runtime.health()
+        self.active().runtime.health()
     }
 
-    /// The scheme parameters of this deployment.
+    /// The scheme parameters of the active generation (the `(s, t, z)`
+    /// triple is fixed for the deployment's lifetime; only
+    /// `adversary_tolerance` can change across swaps).
     pub fn params(&self) -> SchemeParams {
-        self.scheme.params()
+        self.active().scheme.params()
     }
 
-    /// Provisioned worker count.
+    /// Provisioned worker count of the active generation.
     pub fn n_workers(&self) -> usize {
-        self.setup.n_workers
+        self.active().setup.n_workers
     }
 
-    /// Persistent worker threads serving this deployment (constant for its
-    /// lifetime — jobs spawn nothing).
+    /// Persistent worker threads serving the active generation (constant
+    /// between swaps — jobs spawn nothing).
     pub fn worker_threads(&self) -> usize {
-        self.runtime.worker_threads()
+        self.active().runtime.worker_threads()
     }
 
-    /// Jobs attempted through the cached setup (the Setup itself was solved
-    /// exactly once, at provisioning).
+    /// Jobs attempted through this deployment (seed slots claimed), across
+    /// every generation — the Setup of each generation was solved exactly
+    /// once, at its provisioning.
     pub fn jobs_executed(&self) -> u64 {
         self.jobs_executed.load(Ordering::Relaxed)
     }
@@ -424,6 +705,11 @@ mod tests {
         // the persistent runtime served every job; thread count is flat
         assert_eq!(dep.worker_threads(), 17);
         assert_eq!(dep.runtime().jobs_started(), 3);
+        // measured telemetry accumulated per job
+        let tel = dep.telemetry();
+        assert_eq!(tel.jobs_completed, 3);
+        assert!(tel.w2w_scalars > 0, "Phase-2 exchange was metered");
+        assert!(tel.latency_ns_total > 0);
     }
 
     #[test]
@@ -440,6 +726,8 @@ mod tests {
         let b = FpMat::random(&mut rng, 8, 8);
         assert!(dep.execute(&a, &b).unwrap().verified);
         assert_eq!(dep.jobs_executed(), 2);
+        // only the successful job entered the telemetry
+        assert_eq!(dep.telemetry().jobs_completed, 1);
     }
 
     /// `execute_fused` must be byte-identical to the same jobs streamed
@@ -478,6 +766,11 @@ mod tests {
         assert_eq!(fused_dep.runtime().jobs_started(), 3);
         assert_eq!(fused_dep.health().phase3_decodes, 1);
         assert_eq!(seq_dep.health().phase3_decodes, 3);
+        // Both paths metered the same per-job w2w traffic.
+        assert_eq!(
+            fused_dep.telemetry().w2w_scalars,
+            seq_dep.telemetry().w2w_scalars
+        );
 
         for (j, (f, s)) in fused.iter().zip(&sequential).enumerate() {
             assert_eq!(f.y, s.y, "job {j}: Y");
@@ -527,5 +820,84 @@ mod tests {
         )
         .unwrap_err();
         assert!(matches!(err, CmpcError::InvalidParams(_)));
+    }
+
+    #[test]
+    fn reconfigure_swaps_scheme_and_records_audit_trail() {
+        let params = SchemeParams::new(2, 2, 2);
+        // Start deliberately suboptimal: AGE λ=0 provisions 18 workers.
+        let dep = Deployment::provision(
+            SchemeSpec::Age { lambda: Some(0) },
+            params,
+            ProtocolConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(dep.n_workers(), 18);
+        assert_eq!(dep.gap_lambda(), Some(0));
+        assert_eq!(dep.generation(), 0);
+
+        let mut rng = ChaChaRng::seed_from_u64(21);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        assert!(dep.execute(&a, &b).unwrap().verified);
+
+        // Swap to the λ* generation (17 workers).
+        let rec = dep.reconfigure(SchemeSpec::Age { lambda: Some(2) }, 0).unwrap();
+        assert_eq!(rec.generation, 1);
+        assert_eq!(rec.from_workers, 18);
+        assert_eq!(rec.to_workers, 17);
+        assert_eq!(dep.n_workers(), 17);
+        assert_eq!(dep.gap_lambda(), Some(2));
+        assert_eq!(dep.swap_history(), vec![rec]);
+
+        // The green generation serves immediately; the seed schedule did
+        // not restart (jobs_executed kept counting).
+        assert!(dep.execute(&a, &b).unwrap().verified);
+        assert_eq!(dep.jobs_executed(), 2);
+        // No jobs in flight → the swap's opportunistic sweep already
+        // retired blue.
+        assert_eq!(dep.drain_retired(), 0);
+        assert_eq!(dep.retired_generations(), 0);
+    }
+
+    #[test]
+    fn reconfigure_failure_leaves_blue_serving() {
+        let params = SchemeParams::new(2, 2, 2);
+        let dep = Deployment::provision(
+            SchemeSpec::Age { lambda: None },
+            params,
+            ProtocolConfig::default(),
+        )
+        .unwrap();
+        let err = dep.reconfigure(SchemeSpec::Age { lambda: Some(9) }, 0).unwrap_err();
+        assert!(matches!(err, CmpcError::InvalidParams(_)));
+        assert_eq!(dep.generation(), 0, "failed swap recorded no generation");
+        assert!(dep.swap_history().is_empty());
+        let mut rng = ChaChaRng::seed_from_u64(22);
+        let a = FpMat::random(&mut rng, 8, 8);
+        let b = FpMat::random(&mut rng, 8, 8);
+        assert!(dep.execute(&a, &b).unwrap().verified, "blue still serves");
+    }
+
+    #[test]
+    fn runtime_handle_pins_its_generation_across_a_swap() {
+        let params = SchemeParams::new(2, 2, 2);
+        let dep = Deployment::provision(
+            SchemeSpec::Age { lambda: Some(0) },
+            params,
+            ProtocolConfig::default(),
+        )
+        .unwrap();
+        let blue_handle = dep.runtime();
+        assert_eq!(blue_handle.n_workers(), 18);
+        dep.reconfigure(SchemeSpec::Age { lambda: Some(2) }, 0).unwrap();
+        // The handle still reads the blue generation it captured…
+        assert_eq!(blue_handle.n_workers(), 18);
+        // …and keeps it alive: the sweep cannot drop blue yet.
+        assert_eq!(dep.drain_retired(), 1);
+        drop(blue_handle);
+        assert_eq!(dep.drain_retired(), 0);
+        // A fresh handle sees green.
+        assert_eq!(dep.runtime().n_workers(), 17);
     }
 }

@@ -89,6 +89,13 @@ pub struct WorkerRuntime {
     /// drained) by [`WorkerRuntime::reap`] so their eviction records say
     /// *blamed* rather than "clean exit".
     pending_blame: Mutex<Vec<usize>>,
+    /// The strike ledger: cumulative blame count per worker *slot*
+    /// (length `N`, indexed by worker id). Deliberately **not** reset by
+    /// the reaper — a respawned replacement inherits its slot's strikes,
+    /// so a persistently garbled index (malicious peer, flaky NIC) keeps
+    /// accumulating evidence across respawns. Surfaced sparsely through
+    /// [`WorkerRuntime::health`] and consumed by the autoscaler policy.
+    strikes: Mutex<Vec<u64>>,
     respawn: RespawnCtx,
 }
 
@@ -218,6 +225,7 @@ impl WorkerRuntime {
             eviction_log: Mutex::new(VecDeque::new()),
             blame_log: Mutex::new(Vec::new()),
             pending_blame: Mutex::new(Vec::new()),
+            strikes: Mutex::new(vec![0; n]),
             respawn,
         })
     }
@@ -326,7 +334,24 @@ impl WorkerRuntime {
     pub fn health(&self) -> RuntimeHealthReport {
         let mut snap = self.health.snapshot();
         snap.blamed_workers = self.blame_log.lock().unwrap().clone();
+        snap.worker_strikes = self.worker_strikes();
         snap
+    }
+
+    /// The strike ledger, sparsely: `(worker_id, cumulative_strikes)` for
+    /// every slot blamed at least once, ascending by id. Strikes survive
+    /// respawn (the ledger is keyed by slot, not by thread), so repeated
+    /// blame of the same index reads as a repeat offender rather than a
+    /// string of first offenses.
+    pub fn worker_strikes(&self) -> Vec<(usize, u64)> {
+        self.strikes
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s > 0)
+            .map(|(wid, &s)| (wid, s))
+            .collect()
     }
 
     /// Recent evictions (worker slot + reason), oldest first — the last
@@ -382,6 +407,14 @@ impl WorkerRuntime {
             .byzantine_detected
             .fetch_add(blamed.len() as u64, Ordering::Relaxed);
         self.blame_log.lock().unwrap().extend_from_slice(blamed);
+        {
+            let mut strikes = self.strikes.lock().unwrap();
+            for &wid in blamed {
+                if let Some(slot) = strikes.get_mut(wid) {
+                    *slot += 1;
+                }
+            }
+        }
         {
             let mut pending = self.pending_blame.lock().unwrap();
             for &wid in blamed {

@@ -38,6 +38,14 @@
 //! [`TenantQuota`] for its admission table (no `tenant` lines = open
 //! admission).
 //!
+//! The optional `autoscale` line (v0.11) attaches an adaptive
+//! provisioning controller to the gateway's local engine:
+//! `autoscale <interval_ms> <hysteresis_pct> <strike_threshold>
+//! <cooldown_ticks>` — see [`AutoscaleSpec`] and
+//! [`crate::autoscale::Autoscaler`]. It requires a `gateway` line (a
+//! remote cluster's worker *processes* cannot be blue/green-swapped from
+//! a manifest).
+//!
 //! The optional `pipeline` line (v0.10) carries a
 //! [`Pipeline`](crate::mpc::pipeline::Pipeline) spec string, e.g.
 //! `pipeline matmul,truncate:8,matmul`. When present, each of the
@@ -54,6 +62,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::autoscale::{AutoscaleConfig, PolicyConfig};
 use crate::codes::{CmpcScheme, SchemeParams, SchemeSpec};
 use crate::error::{CmpcError, Result};
 use crate::gateway::admission::TenantQuota;
@@ -138,6 +147,40 @@ pub struct ShapeLine {
     pub class: Option<PayloadClass>,
 }
 
+/// One parsed `autoscale` line: the adaptive-provisioning knobs a
+/// manifest pins for the gateway's local engine. Fields mirror the
+/// [`AutoscaleConfig`]/[`PolicyConfig`] they configure; everything not on
+/// the line (window size, miss budget, adversary ceiling) keeps its
+/// library default.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleSpec {
+    /// Controller sampling interval, milliseconds (≥ 1).
+    pub interval_ms: u64,
+    /// Minimum predicted ζ gain (percent) before a communication-cost
+    /// reconfiguration fires.
+    pub hysteresis_pct: f64,
+    /// Cumulative Byzantine strikes at one worker slot before the policy
+    /// escalates the adversary tolerance instead of retrying.
+    pub strike_threshold: u64,
+    /// Ticks the controller holds after a swap lands.
+    pub cooldown_ticks: u64,
+}
+
+impl AutoscaleSpec {
+    /// The controller configuration this line describes.
+    pub fn to_config(self) -> AutoscaleConfig {
+        AutoscaleConfig {
+            interval: Duration::from_millis(self.interval_ms),
+            cooldown_ticks: self.cooldown_ticks,
+            policy: PolicyConfig {
+                hysteresis_pct: self.hysteresis_pct,
+                strike_threshold: self.strike_threshold,
+                ..PolicyConfig::default()
+            },
+        }
+    }
+}
+
 /// A distributed CMPC deployment description: scheme + job parameters +
 /// one address per node + optional link shaping. Every party process
 /// reads the same manifest, so the whole cluster derives identical setup
@@ -206,6 +249,9 @@ pub struct TopologyManifest {
     pub gateway_token: Option<u64>,
     /// Gateway admission table (empty = open admission).
     pub tenants: Vec<TenantQuota>,
+    /// Adaptive provisioning controller for the gateway's local engine
+    /// (`None` = static provisioning, the pre-v0.11 behavior).
+    pub autoscale: Option<AutoscaleSpec>,
 }
 
 fn topo_err(lineno: usize, msg: impl std::fmt::Display) -> CmpcError {
@@ -263,6 +309,7 @@ impl TopologyManifest {
             gateway: None,
             gateway_token: None,
             tenants: Vec::new(),
+            autoscale: None,
         };
         let n = manifest.resolve_scheme()?.n_workers();
         if base_port != 0 && (base_port as usize) + n + 2 > u16::MAX as usize {
@@ -303,6 +350,7 @@ impl TopologyManifest {
         let mut gateway = None;
         let mut gateway_token = None;
         let mut tenants: Vec<TenantQuota> = Vec::new();
+        let mut autoscale: Option<AutoscaleSpec> = None;
         // Duplicate identity/parameter lines are errors, same as unknown
         // keys: a stale line left in a hand-edited manifest must not
         // silently win (or lose) over the intended one.
@@ -387,6 +435,27 @@ impl TopologyManifest {
                 ["gateway_token", v] => {
                     no_dup(lineno, "gateway_token", &gateway_token)?;
                     gateway_token = Some(parse_field::<u64>(lineno, "gateway_token", v)?);
+                }
+                ["autoscale", interval_ms, hysteresis_pct, strike_threshold, cooldown_ticks] => {
+                    no_dup(lineno, "autoscale", &autoscale)?;
+                    autoscale = Some(AutoscaleSpec {
+                        interval_ms: parse_field(lineno, "autoscale interval_ms", interval_ms)?,
+                        hysteresis_pct: parse_field(
+                            lineno,
+                            "autoscale hysteresis_pct",
+                            hysteresis_pct,
+                        )?,
+                        strike_threshold: parse_field(
+                            lineno,
+                            "autoscale strike_threshold",
+                            strike_threshold,
+                        )?,
+                        cooldown_ticks: parse_field(
+                            lineno,
+                            "autoscale cooldown_ticks",
+                            cooldown_ticks,
+                        )?,
+                    });
                 }
                 ["tenant", id, burst, rate, max_pending] => {
                     let id: u32 = parse_field(lineno, "tenant id", id)?;
@@ -473,6 +542,7 @@ impl TopologyManifest {
             gateway,
             gateway_token,
             tenants,
+            autoscale,
         };
         manifest.validate()?;
         Ok(manifest)
@@ -552,6 +622,14 @@ impl TopologyManifest {
                 q.id, q.burst, q.rate_per_sec, q.max_pending
             ));
         }
+        if let Some(auto) = self.autoscale {
+            // hysteresis_pct is f64: same Display/FromStr identity as
+            // tenant rate_per_sec above.
+            out.push_str(&format!(
+                "autoscale {} {} {} {}\n",
+                auto.interval_ms, auto.hysteresis_pct, auto.strike_threshold, auto.cooldown_ticks
+            ));
+        }
         out
     }
 
@@ -609,6 +687,20 @@ impl TopologyManifest {
             return Err(CmpcError::InvalidParams(
                 "topology manifest: gateway_token declared without a gateway line".to_string(),
             ));
+        }
+        if let Some(auto) = self.autoscale {
+            if self.gateway.is_none() {
+                return Err(CmpcError::InvalidParams(
+                    "topology manifest: autoscale declared without a gateway line (only the \
+                     gateway's local engine can blue/green-swap deployments)"
+                        .to_string(),
+                ));
+            }
+            if auto.interval_ms == 0 {
+                return Err(CmpcError::InvalidParams(
+                    "topology manifest: autoscale interval_ms must be ≥ 1".to_string(),
+                ));
+            }
         }
         Ok(())
     }
@@ -892,6 +984,51 @@ mod tests {
         .unwrap()
         .gateway
         .is_none());
+    }
+
+    #[test]
+    fn topology_autoscale_line_round_trips_and_validates() {
+        let mut m =
+            TopologyManifest::template("age", 2, 2, 2, 8, 7, 2, "127.0.0.1", 9620).unwrap();
+        m.gateway = Some("127.0.0.1:9670".to_string());
+        m.autoscale = Some(AutoscaleSpec {
+            interval_ms: 250,
+            hysteresis_pct: 12.5,
+            strike_threshold: 3,
+            cooldown_ticks: 2,
+        });
+        m.validate().unwrap();
+        let rendered = m.render();
+        assert!(rendered.contains("autoscale 250 12.5 3 2"));
+        let back = TopologyManifest::parse(&rendered).unwrap();
+        assert_eq!(back.autoscale, m.autoscale);
+        let config = back.autoscale.unwrap().to_config();
+        assert_eq!(config.interval, Duration::from_millis(250));
+        assert_eq!(config.cooldown_ticks, 2);
+        assert!((config.policy.hysteresis_pct - 12.5).abs() < 1e-12);
+        assert_eq!(config.policy.strike_threshold, 3);
+        // unspecified policy knobs keep their library defaults
+        assert_eq!(config.policy.min_window_jobs, 4);
+
+        // an autoscaler with nothing to steer is a typo
+        let mut orphan =
+            TopologyManifest::template("age", 2, 2, 2, 8, 7, 2, "127.0.0.1", 9620).unwrap();
+        orphan.autoscale = m.autoscale;
+        let err = orphan.validate().unwrap_err();
+        assert!(err.to_string().contains("autoscale"), "{err}");
+        // a zero interval would spin the controller
+        m.autoscale = Some(AutoscaleSpec {
+            interval_ms: 0,
+            hysteresis_pct: 10.0,
+            strike_threshold: 3,
+            cooldown_ticks: 2,
+        });
+        let err = m.validate().unwrap_err();
+        assert!(err.to_string().contains("interval_ms"), "{err}");
+        // duplicate autoscale lines are rejected like any identity line
+        let err =
+            TopologyManifest::parse(&format!("{rendered}autoscale 9 9 9 9\n")).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
     }
 
     #[test]

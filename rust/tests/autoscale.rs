@@ -1,0 +1,368 @@
+//! Adaptive provisioning end to end: the blue/green swap under live
+//! concurrent load (zero dropped jobs, byte-identical outputs), the
+//! controller retuning a deliberately mis-provisioned deployment from
+//! its own telemetry, and the Byzantine strike ledger surviving respawn
+//! and escalating the adversary tolerance.
+//!
+//! Everything here is seeded — same binary, same decisions, same
+//! outputs — which is what lets the CI `autoscale` lane assert on exact
+//! audit trails.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cmpc::autoscale::{AutoscaleConfig, Autoscaler, Cause, Decision, HoldReason, PolicyConfig};
+use cmpc::codes::SchemeParams;
+use cmpc::matrix::FpMat;
+use cmpc::mpc::chaos::{ChaosPlan, PayloadClass};
+use cmpc::mpc::protocol::ProtocolConfig;
+use cmpc::transport::shaper::{LinkShaper, LinkSpec, ShapeRule};
+use cmpc::util::rng::ChaChaRng;
+use cmpc::{Deployment, SchemeSpec};
+
+fn test_inputs(m: usize) -> (FpMat, FpMat, FpMat) {
+    let mut rng = ChaChaRng::seed_from_u64(0xADA7);
+    let a = FpMat::random(&mut rng, m, m);
+    let b = FpMat::random(&mut rng, m, m);
+    let y = a.transpose().matmul(&b);
+    (a, b, y)
+}
+
+/// Reap until the runtime reports `want` respawns (blame → eviction →
+/// respawn is asynchronous).
+fn wait_for_respawns(dep: &Deployment, want: u64) {
+    let t0 = Instant::now();
+    loop {
+        dep.runtime().reap();
+        if dep.health().respawns >= want {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "respawns stuck at {} (want {want})",
+            dep.health().respawns
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Sweep retired generations until the deployment reports zero draining
+/// (in-flight jobs finish asynchronously after a swap).
+fn wait_for_drain(dep: &Deployment) {
+    let t0 = Instant::now();
+    while dep.drain_retired() > 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "retired generation never drained"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The zero-downtime pin: a submitter thread hammers the deployment with
+/// seeded jobs while the main thread swaps λ0 → λ2 mid-stream. Every job
+/// must succeed, verify, and decode the byte-identical product — no
+/// retries, no drops, no window where submissions land nowhere.
+#[test]
+fn blue_green_swap_drops_no_in_flight_jobs() {
+    let (a, b, y_expect) = test_inputs(8);
+    let dep = Arc::new(
+        Deployment::provision(
+            SchemeSpec::Age { lambda: Some(0) },
+            SchemeParams::new(2, 2, 2),
+            ProtocolConfig::builder().threads(1).build(),
+        )
+        .unwrap(),
+    );
+    assert_eq!(dep.n_workers(), 18);
+
+    const JOBS: u64 = 12;
+    let submitter = {
+        let dep = dep.clone();
+        let (a, b, y_expect) = (a.clone(), b.clone(), y_expect.clone());
+        std::thread::spawn(move || {
+            for k in 0..JOBS {
+                let out = dep
+                    .execute_seeded(&a, &b, 0x5EED + k)
+                    .unwrap_or_else(|e| panic!("job {k} dropped across the swap: {e}"));
+                assert!(out.verified, "job {k} failed verification");
+                assert_eq!(out.y, y_expect, "job {k} decoded a different product");
+            }
+        })
+    };
+
+    // Swap while the stream is in flight. A tiny stagger makes it land
+    // mid-stream in practice; correctness does not depend on where.
+    std::thread::sleep(Duration::from_millis(5));
+    let record = dep
+        .reconfigure(SchemeSpec::Age { lambda: Some(2) }, 0)
+        .unwrap();
+    assert_eq!(record.generation, 1);
+    assert_eq!(record.from, "AGE-CMPC(λ=0)");
+    assert_eq!(record.to, "AGE-CMPC(λ=2)");
+    assert_eq!(record.from_workers, 18);
+    assert_eq!(record.to_workers, 17);
+
+    submitter.join().expect("submitter thread panicked");
+
+    // Deployment-level accounting is swap-transparent: every job counted,
+    // none lost, and the retired blue is eventually torn down.
+    assert_eq!(dep.telemetry().jobs_completed, JOBS);
+    assert_eq!(dep.n_workers(), 17);
+    assert_eq!(dep.generation(), 1);
+    assert_eq!(dep.swap_history().len(), 1);
+    wait_for_drain(&dep);
+
+    // The green generation serves clean post-swap jobs.
+    let out = dep.execute_seeded(&a, &b, 0xF00D).unwrap();
+    assert!(out.verified);
+    assert_eq!(out.y, y_expect);
+}
+
+/// Byte-identity across the swap: the same seeded jobs on a static λ0
+/// deployment, a static λ2 deployment, and a deployment that swaps λ0→λ2
+/// halfway through all decode the identical bytes. Serving generation is
+/// an implementation detail of the answer.
+#[test]
+fn swapped_outputs_match_static_deployments_bit_for_bit() {
+    let (a, b, y_expect) = test_inputs(8);
+    let provision = |lambda: usize| {
+        Deployment::provision(
+            SchemeSpec::Age {
+                lambda: Some(lambda),
+            },
+            SchemeParams::new(2, 2, 2),
+            ProtocolConfig::builder().threads(1).build(),
+        )
+        .unwrap()
+    };
+    let seeds: Vec<u64> = (0..6).map(|k| 0xBEEF + k).collect();
+
+    let run = |dep: &Deployment, seed: u64| {
+        let out = dep.execute_seeded(&a, &b, seed).unwrap();
+        assert!(out.verified);
+        out.y
+    };
+
+    let static0 = provision(0);
+    let static2 = provision(2);
+    let swapping = provision(0);
+    for (i, &seed) in seeds.iter().enumerate() {
+        if i == 3 {
+            swapping
+                .reconfigure(SchemeSpec::Age { lambda: Some(2) }, 0)
+                .unwrap();
+        }
+        let y0 = run(&static0, seed);
+        let y2 = run(&static2, seed);
+        let ys = run(&swapping, seed);
+        assert_eq!(y0, y_expect, "static λ0, seed {seed:#x}");
+        assert_eq!(y2, y_expect, "static λ2, seed {seed:#x}");
+        assert_eq!(ys, y0, "swapped deployment diverged from static λ0");
+        assert_eq!(ys, y2, "swapped deployment diverged from static λ2");
+    }
+    assert_eq!(swapping.telemetry().jobs_completed, seeds.len() as u64);
+    assert_eq!(swapping.generation(), 1);
+}
+
+/// The controller walks a mis-provisioned deployment onto the λ curve's
+/// optimum from nothing but its own telemetry: Entangled (N = 19) →
+/// AGE λ* = 2 (N = 17), predicted ζ saving ≈ 20.5 %, recorded in the
+/// audit log with the applied generation number.
+#[test]
+fn controller_retunes_entangled_onto_the_age_curve() {
+    let (a, b, y_expect) = test_inputs(8);
+    let dep = Arc::new(
+        Deployment::provision(
+            SchemeSpec::Entangled,
+            SchemeParams::new(2, 2, 2),
+            ProtocolConfig::builder().threads(1).build(),
+        )
+        .unwrap(),
+    );
+    assert_eq!(dep.n_workers(), 19);
+    let scaler = Autoscaler::new(dep.clone(), AutoscaleConfig::default());
+
+    // An empty window never reconfigures, whatever the position.
+    assert_eq!(
+        scaler.tick(),
+        Decision::Hold {
+            reason: HoldReason::InsufficientData
+        }
+    );
+
+    for k in 0..4 {
+        let out = dep.execute_seeded(&a, &b, 0xE2E + k).unwrap();
+        assert!(out.verified);
+        assert_eq!(out.y, y_expect);
+    }
+
+    match scaler.tick() {
+        Decision::Reconfigure(rec) => {
+            assert_eq!(rec.spec, SchemeSpec::Age { lambda: Some(2) });
+            assert_eq!(rec.cause, Cause::CommunicationCost);
+            assert_eq!(rec.n_workers, 17);
+            assert!((rec.predicted_gain_pct - 100.0 * 70.0 / 342.0).abs() < 1e-9);
+        }
+        other => panic!("expected the Entangled→AGE walk, got {other:?}"),
+    }
+    assert_eq!(dep.scheme().name(), "AGE-CMPC(λ=2)");
+    assert_eq!(dep.n_workers(), 17);
+
+    // Cooldown holds while the green generation warms, then the optimum
+    // position holds on merit; the audit trail records the whole story.
+    assert_eq!(
+        scaler.tick(),
+        Decision::Hold {
+            reason: HoldReason::Cooldown
+        }
+    );
+    assert_eq!(
+        scaler.tick(),
+        Decision::Hold {
+            reason: HoldReason::Cooldown
+        }
+    );
+    for k in 0..4 {
+        let out = dep.execute_seeded(&a, &b, 0xCAFE + k).unwrap();
+        assert!(out.verified);
+        assert_eq!(out.y, y_expect);
+    }
+    assert_eq!(
+        scaler.tick(),
+        Decision::Hold {
+            reason: HoldReason::AlreadyOptimal
+        }
+    );
+
+    let health = scaler.health();
+    assert_eq!(health.ticks, 5);
+    assert_eq!(health.reconfigurations, 1);
+    assert_eq!(health.failed, 0);
+    assert_eq!(health.decisions.len(), 5);
+    assert_eq!(health.decisions[1].window_jobs, 4);
+    match &health.decisions[1].outcome {
+        cmpc::autoscale::Outcome::Applied { generation, from, to } => {
+            assert_eq!(*generation, 1);
+            assert_eq!(from, "Entangled-CMPC");
+            assert_eq!(to, "AGE-CMPC(λ=2)");
+        }
+        other => panic!("audit log lost the applied swap: {other:?}"),
+    }
+    wait_for_drain(&dep);
+}
+
+/// The strike ledger: a located Byzantine worker's strike survives its
+/// eviction + respawn, surfaces through `health()`, and — once past the
+/// policy's threshold — makes the controller escalate the adversary
+/// tolerance via blue/green swap instead of retrying the offender. The
+/// fresh generation starts with a clean ledger.
+#[test]
+fn strikes_survive_respawn_and_escalate_adversary_tolerance() {
+    let (a, b, y_expect) = test_inputs(8);
+    let params = SchemeParams::new(2, 2, 2).with_adversary_tolerance(1);
+    let n = 17; // λ = 2 at (2, 2, 2)
+    let seed = 0xB1A4_AD;
+    let plan = ChaosPlan::garble_k_workers(seed, n, 1);
+    let mut victims = ChaosPlan::chosen_victims(seed, n, 1);
+    victims.sort_unstable();
+
+    // Shape honest I-shares slow so the garbled one lands inside the
+    // raised quota deterministically (the Byzantine decoder must *see* it
+    // to locate it).
+    let mut shaper = LinkShaper::new();
+    for w in (0..n).filter(|w| !victims.contains(w)) {
+        shaper = shaper.rule(
+            ShapeRule::new(LinkSpec::latency(Duration::from_millis(150)))
+                .from_node(w)
+                .class(PayloadClass::IShare),
+        );
+    }
+    let dep = Arc::new(
+        Deployment::provision(
+            SchemeSpec::Age { lambda: Some(2) },
+            params,
+            ProtocolConfig::builder()
+                .threads(1)
+                .chaos(plan.into_shared())
+                .shaper(shaper.into_shared())
+                .build(),
+        )
+        .unwrap(),
+    );
+
+    // Job 1 carries the garble: located, excluded, byte-identical output.
+    let out = dep.execute_seeded(&a, &b, 0x5EED).unwrap();
+    assert!(out.verified);
+    assert_eq!(out.y, y_expect);
+    assert_eq!(out.blamed_workers, victims);
+
+    // The blamed worker is evicted and respawned — and its strike is
+    // still on the ledger afterwards. Eviction wipes the thread, not the
+    // record.
+    wait_for_respawns(&dep, 1);
+    let strikes: Vec<(usize, u64)> = victims.iter().map(|&w| (w, 1)).collect();
+    assert_eq!(dep.health().worker_strikes, strikes);
+
+    // Three clean jobs fill the policy window; the strike count is
+    // untouched by healthy traffic.
+    for k in 0..3 {
+        let out = dep.execute_seeded(&a, &b, 0xC1EA + k).unwrap();
+        assert!(out.verified);
+        assert_eq!(out.y, y_expect);
+    }
+    assert_eq!(dep.health().worker_strikes, strikes);
+
+    // A strike-sensitive controller escalates: a 1 → 2, cheapest covering
+    // λ stays 2 (quota 10 ≤ 17), and the swap replaces every worker.
+    let scaler = Autoscaler::new(
+        dep.clone(),
+        AutoscaleConfig {
+            policy: PolicyConfig {
+                strike_threshold: 1,
+                ..PolicyConfig::default()
+            },
+            ..AutoscaleConfig::default()
+        },
+    );
+    match scaler.tick() {
+        Decision::Reconfigure(rec) => {
+            assert_eq!(rec.cause, Cause::StrikeEviction);
+            assert_eq!(rec.adversary_tolerance, 2);
+            assert_eq!(rec.spec, SchemeSpec::Age { lambda: Some(2) });
+        }
+        other => panic!("expected strike-driven escalation, got {other:?}"),
+    }
+    assert_eq!(dep.params().adversary_tolerance, 2);
+    assert_eq!(dep.generation(), 1);
+    assert_eq!(dep.swap_history()[0].adversary_tolerance, 2);
+    // The green generation starts with a clean ledger and serves
+    // byte-identical jobs at the raised tolerance.
+    assert!(dep.health().worker_strikes.is_empty());
+    let out = dep.execute_seeded(&a, &b, 0xAF7E2).unwrap();
+    assert!(out.verified);
+    assert_eq!(out.y, y_expect);
+    wait_for_drain(&dep);
+}
+
+/// A swap the executor cannot build (λ off the curve) is rejected
+/// atomically: the blue generation keeps serving and the controller
+/// records the failure without touching the deployment.
+#[test]
+fn failed_swap_is_audited_and_blue_keeps_serving() {
+    let (a, b, y_expect) = test_inputs(8);
+    let dep = Arc::new(
+        Deployment::provision(
+            SchemeSpec::Age { lambda: Some(2) },
+            SchemeParams::new(2, 2, 2),
+            ProtocolConfig::builder().threads(1).build(),
+        )
+        .unwrap(),
+    );
+    assert!(dep.reconfigure(SchemeSpec::Age { lambda: Some(9) }, 0).is_err());
+    assert_eq!(dep.generation(), 0, "failed swap must not advance the generation");
+    assert!(dep.swap_history().is_empty());
+    let out = dep.execute_seeded(&a, &b, 0x0B5E).unwrap();
+    assert!(out.verified);
+    assert_eq!(out.y, y_expect);
+}
